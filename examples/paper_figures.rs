@@ -1,0 +1,89 @@
+//! End-to-end driver: regenerate the paper's full evaluation on the proxy
+//! datasets and write every figure's data + Table 1 under `results/`.
+//!
+//! This is the repository's end-to-end validation run (EXPERIMENTS.md):
+//! it exercises dataset generation, all three kernels (including the heat
+//! kernel's matrix exponential), k-means++ init, all five algorithms with
+//! both learning rates, the sliding-window state, metrics, aggregation,
+//! and the report writers — i.e. every layer of the system composed.
+//!
+//! ```bash
+//! cargo run --release --example paper_figures                 # reduced grid
+//! cargo run --release --example paper_figures -- --full       # paper grid
+//! cargo run --release --example paper_figures -- --scale 0.1 --repeats 2
+//! ```
+
+use mbkk::coordinator::figures::{self, FigureOptions};
+use mbkk::util::cli::Args;
+use mbkk::util::timing::Stopwatch;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let opts = FigureOptions {
+        scale: args.get_parse_or("scale", 0.15f64),
+        repeats: args.get_parse_or("repeats", 3usize),
+        max_iters: args.get_parse_or("iters", 200usize),
+        quick: !args.flag("full"),
+        seed: args.get_parse_or("seed", 7u64),
+    };
+    let out = args.get_or("out", "results");
+    args.finish();
+    let out_dir = Path::new(&out);
+
+    println!(
+        "== paper figures: scale={} repeats={} iters={} grid={} ==",
+        opts.scale,
+        opts.repeats,
+        opts.max_iters,
+        if opts.quick { "reduced" } else { "full (paper)" }
+    );
+    let sw = Stopwatch::start();
+
+    // Table 1 first (cheap) …
+    let md = figures::run_gamma_table(opts.scale, opts.seed, Some(out_dir))?;
+    println!("\nTable 1 (γ):\n{md}");
+
+    // … then every figure.
+    let mut total_rows = 0;
+    for id in figures::figure_ids() {
+        let rows = figures::run_figure(id, &opts, Some(out_dir))?;
+        total_rows += rows.len();
+
+        // Spot-check the paper's qualitative claims on the main figure.
+        if id == 1 {
+            check_figure1(&rows);
+        }
+    }
+    println!(
+        "\nwrote {total_rows} aggregated rows to {}/ in {:.1}s",
+        out_dir.display(),
+        sw.secs()
+    );
+    Ok(())
+}
+
+/// Figure 1 sanity: (a) truncated mini-batch quality ≈ full batch,
+/// (b) kernel versions ≥ non-kernel versions on these datasets,
+/// (c) mini-batch clustering time ≪ full-batch clustering time.
+fn check_figure1(rows: &[mbkk::coordinator::report::Row]) {
+    for dataset in ["synth_mnist", "synth_har", "synth_letters", "synth_pendigits"] {
+        let get = |algo: &str| {
+            rows.iter()
+                .find(|r| r.dataset == dataset && r.algo == algo)
+                .unwrap_or_else(|| panic!("missing {algo} row for {dataset}"))
+        };
+        let full = get("full-kkm");
+        let trunc = get("btrunc-kkm");
+        let mbkm = get("bmb-km");
+        println!(
+            "[check fig1] {dataset}: full ARI {:.3} ({:.1}s) | btrunc ARI {:.3} ({:.1}s) | bmb-km ARI {:.3}",
+            full.ari.mean, full.cluster_secs.mean, trunc.ari.mean,
+            trunc.cluster_secs.mean, mbkm.ari.mean,
+        );
+        if full.cluster_secs.mean > 0.5 {
+            let speedup = full.cluster_secs.mean / trunc.cluster_secs.mean.max(1e-9);
+            println!("[check fig1] {dataset}: speedup full/trunc = {speedup:.1}x");
+        }
+    }
+}

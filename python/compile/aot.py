@@ -1,0 +1,122 @@
+"""AOT compile path: lower the L2 assignment graphs to HLO text artifacts.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run via ``make artifacts``:
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Each configuration (kind, b, k, M, d) becomes ``artifacts/<name>.hlo.txt``
+plus an entry in ``artifacts/manifest.json`` that the Rust runtime uses to
+pick an executable for a run configuration (exact b/k/d match, M ≥ the
+window capacity — padded slots carry zero weight so a larger M is sound).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (b, k, m, d) grid for the Gaussian assign-step graphs. Chosen to cover the
+# quickstart example, the backend cross-check tests, and the paper-figure
+# proxy runs (synth_pendigits d=16, synth_har d=64, synth_mnist d=128,
+# synth_letters d=16 at k=26). M must be ≥ τ + b + 1 for the τ grid
+# {50,100,200,300}; we round up generously so one artifact serves many τ.
+GAUSSIAN_CONFIGS = [
+    # (b, k, m, d)
+    (64, 4, 192, 8),      # integration tests
+    (256, 5, 640, 8),     # quickstart (blobs)
+    (256, 10, 640, 16),   # synth_pendigits, small b
+    (1024, 10, 1408, 16), # synth_pendigits, paper b=1024
+    (512, 26, 896, 16),   # synth_letters
+    (256, 6, 640, 64),    # synth_har
+    (1024, 6, 1408, 64),  # synth_har, b=1024
+    (256, 10, 640, 128),  # synth_mnist
+    (1024, 10, 1408, 128),# synth_mnist, b=1024
+]
+
+# (b, k, m) grid for the precomputed-kernel graphs (graph kernels).
+PRECOMPUTED_CONFIGS = [
+    (64, 4, 192),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_gaussian(b: int, k: int, m: int, d: int) -> str:
+    spec = lambda *shape: jax.ShapeDtypeStruct(shape, jnp.float32)  # noqa: E731
+    lowered = jax.jit(model.assign_step).lower(
+        spec(b, d), spec(k, m, d), spec(k, m), jax.ShapeDtypeStruct((), jnp.float32)
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_precomputed(b: int, k: int, m: int) -> str:
+    spec = lambda *shape: jax.ShapeDtypeStruct(shape, jnp.float32)  # noqa: E731
+    lowered = jax.jit(model.assign_step_precomputed).lower(
+        spec(b), spec(b, k, m), spec(k, m, m), spec(k, m)
+    )
+    return to_hlo_text(lowered)
+
+
+def build(out_dir: str, quick: bool = False) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    artifacts = []
+    gaussian = GAUSSIAN_CONFIGS[:2] if quick else GAUSSIAN_CONFIGS
+    for b, k, m, d in gaussian:
+        name = f"assign_gaussian_b{b}_k{k}_m{m}_d{d}"
+        path = os.path.join(out_dir, name + ".hlo.txt")
+        text = lower_gaussian(b, k, m, d)
+        with open(path, "w") as f:
+            f.write(text)
+        artifacts.append(
+            {"name": name, "file": name + ".hlo.txt", "kind": "assign_gaussian",
+             "b": b, "k": k, "m": m, "d": d}
+        )
+        print(f"[aot] {name}: {len(text)} chars")
+    for b, k, m in PRECOMPUTED_CONFIGS:
+        name = f"assign_precomputed_b{b}_k{k}_m{m}"
+        path = os.path.join(out_dir, name + ".hlo.txt")
+        text = lower_precomputed(b, k, m)
+        with open(path, "w") as f:
+            f.write(text)
+        artifacts.append(
+            {"name": name, "file": name + ".hlo.txt", "kind": "assign_precomputed",
+             "b": b, "k": k, "m": m}
+        )
+        print(f"[aot] {name}: {len(text)} chars")
+    manifest = {"version": 1, "artifacts": artifacts}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote manifest with {len(artifacts)} artifacts to {out_dir}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="only the first two configs (CI smoke)")
+    args = ap.parse_args()
+    build(args.out_dir, quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

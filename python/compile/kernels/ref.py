@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the Pallas kernel and the L2 assignment step.
+
+These are the correctness references: no Pallas, no tiling, just the
+textbook formulas. Every Pallas/model output is compared against them in
+``python/tests``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gaussian_gram_ref(x, y, inv_kappa):
+    """Reference ``K[i,j] = exp(−‖x_i−y_j‖²·inv_kappa)``, O(b·m·d) direct."""
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    diff = x[:, None, :] - y[None, :, :]          # (b, m, d)
+    d2 = jnp.sum(diff * diff, axis=-1)            # (b, m)
+    return jnp.exp(-d2 * jnp.float32(inv_kappa))
+
+
+def assign_step_ref(batch, support, weights, inv_kappa):
+    """Reference distances for Algorithm 2's assignment step.
+
+    Args:
+      batch: (b, d) batch features.
+      support: (k, M, d) per-center support points (zero-padded).
+      weights: (k, M) per-support-point coefficients (0 on padding).
+      inv_kappa: scalar 1/κ.
+
+    Returns:
+      dist: (b, k) — ``Δ(x, Ĉ^j) = 1 − 2·Σ_m w_jm K(x, s_jm) + ⟨Ĉ^j, Ĉ^j⟩``
+        (Gaussian kernel ⇒ K(x,x) = 1), clamped at 0.
+    """
+    k = support.shape[0]
+    dists = []
+    for j in range(k):
+        kxs = gaussian_gram_ref(batch, support[j], inv_kappa)     # (b, M)
+        cross = kxs @ weights[j]                                  # (b,)
+        kss = gaussian_gram_ref(support[j], support[j], inv_kappa)
+        cc = weights[j] @ kss @ weights[j]
+        dists.append(1.0 - 2.0 * cross + cc)
+    return jnp.maximum(jnp.stack(dists, axis=1), 0.0)
+
+
+def assign_step_precomputed_ref(kxx, kxs, kss, weights):
+    """Reference for the precomputed-kernel variant.
+
+    Args:
+      kxx: (b,) self kernel values of batch points.
+      kxs: (b, k, M) kernel values batch × per-center support.
+      kss: (k, M, M) kernel values support × support per center.
+      weights: (k, M) coefficients.
+
+    Returns:
+      dist: (b, k).
+    """
+    cross = jnp.einsum("bkm,km->bk", kxs, weights)
+    cc = jnp.einsum("km,kmn,kn->k", weights, kss, weights)
+    return jnp.maximum(kxx[:, None] - 2.0 * cross + cc[None, :], 0.0)

@@ -1,0 +1,74 @@
+"""Layer 2 — the per-iteration assignment step of Algorithm 2 as a JAX graph.
+
+The graph computes, for a batch ``B`` and k truncated centers
+``Ĉ^j = Σ_m w_jm φ(s_jm)`` (each padded to M support slots, weight 0 on
+padding):
+
+    dist[x, j] = K(x,x) − 2·Σ_m w_jm K(x, s_jm) + Σ_{m,n} w_jm w_jn K(s_jm, s_jn)
+
+All kernel blocks go through the Layer-1 Pallas kernel
+(:func:`compile.kernels.gram.gaussian_gram`) so the whole step lowers into
+one fused HLO module. ``aot.py`` lowers these functions per (b, k, M, d)
+configuration; the Rust runtime (``rust/src/runtime``) executes them on the
+hot path. Python never runs at serving time.
+
+Two variants:
+
+* :func:`assign_step` — feature kernels (Gaussian): inputs are raw
+  features; the graph evaluates the kernel itself. This is the fast path.
+* :func:`assign_step_precomputed` — graph kernels (knn/heat): inputs are
+  pre-gathered kernel values; the graph does the weighted reductions.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels.gram import gaussian_gram
+
+
+def assign_step(batch, support, weights, inv_kappa):
+    """Distances of batch points to truncated centers (Gaussian kernel).
+
+    Args:
+      batch: (b, d) f32.
+      support: (k, M, d) f32 — per-center support points, zero-padded.
+      weights: (k, M) f32 — coefficients, 0 on padded slots.
+      inv_kappa: () f32 — 1/κ.
+
+    Returns:
+      dist: (b, k) f32, clamped at 0.
+    """
+    k, m, d = support.shape
+    b = batch.shape[0]
+    # Cross terms via ONE flattened gram block (better tiling than k small
+    # ones): (b, k·M) → (b, k, M) → weighted reduce.
+    flat_support = support.reshape(k * m, d)
+    kxs = gaussian_gram(batch, flat_support, inv_kappa).reshape(b, k, m)
+    cross = jnp.einsum("bkm,km->bk", kxs, weights)
+    # Center self-products: per-center (M × M) gram. Static python loop —
+    # unrolled into the same HLO module at trace time.
+    ccs = []
+    for j in range(k):
+        kss = gaussian_gram(support[j], support[j], inv_kappa)
+        ccs.append(weights[j] @ kss @ weights[j])
+    cc = jnp.stack(ccs)
+    # Gaussian kernel ⇒ K(x, x) = 1.
+    return jnp.maximum(1.0 - 2.0 * cross + cc[None, :], 0.0)
+
+
+def assign_step_precomputed(kxx, kxs, kss, weights):
+    """Distances when kernel values are pre-gathered (graph kernels).
+
+    Args:
+      kxx: (b,) f32 — K(x,x) per batch point.
+      kxs: (b, k, M) f32 — batch × support kernel values.
+      kss: (k, M, M) f32 — support × support kernel values per center.
+      weights: (k, M) f32.
+
+    Returns:
+      dist: (b, k) f32, clamped at 0.
+    """
+    cross = jnp.einsum("bkm,km->bk", kxs, weights)
+    cc = jnp.einsum("km,kmn,kn->k", weights, kss, weights)
+    return jnp.maximum(kxx[:, None] - 2.0 * cross + cc[None, :], 0.0)

@@ -1,0 +1,119 @@
+"""L2 correctness: assignment-step graphs vs naive references, padding
+semantics, and agreement between the feature and precomputed variants."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels.ref import (
+    assign_step_precomputed_ref,
+    assign_step_ref,
+    gaussian_gram_ref,
+)
+
+hypothesis.settings.register_profile(
+    "mbkk", deadline=None, max_examples=15,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow],
+)
+hypothesis.settings.load_profile("mbkk")
+
+
+def _case(rng, b, k, m, d, pad_frac=0.3):
+    batch = rng.standard_normal((b, d)).astype(np.float32)
+    support = rng.standard_normal((k, m, d)).astype(np.float32)
+    weights = rng.random((k, m)).astype(np.float32)
+    # Zero-pad a suffix of each center's support (simulating a window
+    # shorter than capacity) and renormalize the rest to sum ≤ 1.
+    pad = int(m * pad_frac)
+    if pad:
+        support[:, m - pad:, :] = 0.0
+        weights[:, m - pad:] = 0.0
+    weights /= np.maximum(weights.sum(axis=1, keepdims=True), 1e-9)
+    return batch, support, weights
+
+
+@hypothesis.given(
+    b=st.integers(1, 48),
+    k=st.integers(1, 6),
+    m=st.integers(1, 64),
+    d=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_assign_step_matches_reference(b, k, m, d, seed):
+    rng = np.random.default_rng(seed)
+    batch, support, weights = _case(rng, b, k, m, d)
+    got = model.assign_step(batch, support, weights, jnp.float32(0.7))
+    want = assign_step_ref(batch, support, weights, 0.7)
+    assert got.shape == (b, k)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)
+
+
+def test_padding_slots_do_not_contribute():
+    # Same window expressed at two capacities must give identical distances.
+    rng = np.random.default_rng(7)
+    b, k, m, d = 16, 3, 20, 8
+    batch, support, weights = _case(rng, b, k, m, d, pad_frac=0.0)
+    big_support = np.zeros((k, m + 13, d), np.float32)
+    big_support[:, :m] = support
+    big_weights = np.zeros((k, m + 13), np.float32)
+    big_weights[:, :m] = weights
+    small = model.assign_step(batch, support, weights, jnp.float32(0.5))
+    big = model.assign_step(batch, big_support, big_weights, jnp.float32(0.5))
+    np.testing.assert_allclose(np.asarray(small), np.asarray(big), atol=2e-5)
+
+
+def test_distance_to_pure_point_center():
+    # A center that is exactly one support point with weight 1 must give the
+    # plain kernel distance 2·(1 − K(x, s)).
+    rng = np.random.default_rng(8)
+    b, d = 10, 5
+    batch = rng.standard_normal((b, d)).astype(np.float32)
+    s = rng.standard_normal((1, 1, d)).astype(np.float32)
+    w = np.ones((1, 1), np.float32)
+    dist = np.asarray(model.assign_step(batch, s, w, jnp.float32(1.0)))[:, 0]
+    kxs = np.asarray(gaussian_gram_ref(batch, s[0], 1.0))[:, 0]
+    np.testing.assert_allclose(dist, 2.0 * (1.0 - kxs), atol=2e-6)
+
+
+def test_feature_and_precomputed_variants_agree():
+    rng = np.random.default_rng(9)
+    b, k, m, d = 12, 4, 24, 6
+    batch, support, weights = _case(rng, b, k, m, d)
+    inv_kappa = 0.8
+    feat = model.assign_step(batch, support, weights, jnp.float32(inv_kappa))
+    kxx = np.ones(b, np.float32)
+    kxs = np.stack(
+        [np.asarray(gaussian_gram_ref(batch, support[j], inv_kappa)) for j in range(k)],
+        axis=1,
+    )
+    kss = np.stack(
+        [np.asarray(gaussian_gram_ref(support[j], support[j], inv_kappa)) for j in range(k)]
+    )
+    pre = model.assign_step_precomputed(kxx, kxs, kss, weights)
+    np.testing.assert_allclose(np.asarray(feat), np.asarray(pre), atol=3e-5)
+
+
+@hypothesis.given(
+    b=st.integers(1, 32),
+    k=st.integers(1, 5),
+    m=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_precomputed_matches_reference(b, k, m, seed):
+    rng = np.random.default_rng(seed)
+    kxx = rng.random(b).astype(np.float32)
+    kxs = rng.random((b, k, m)).astype(np.float32)
+    kss = rng.random((k, m, m)).astype(np.float32)
+    weights = rng.random((k, m)).astype(np.float32)
+    got = model.assign_step_precomputed(kxx, kxs, kss, weights)
+    want = assign_step_precomputed_ref(kxx, kxs, kss, weights)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)
+
+
+def test_distances_nonnegative():
+    rng = np.random.default_rng(10)
+    batch, support, weights = _case(rng, 30, 4, 50, 10)
+    dist = np.asarray(model.assign_step(batch, support, weights, jnp.float32(2.0)))
+    assert (dist >= 0).all()

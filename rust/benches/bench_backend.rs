@@ -1,0 +1,69 @@
+//! Backend ablation: the assignment hot path served by the pure-Rust
+//! native backend vs the AOT-compiled JAX/Pallas graph through PJRT.
+//!
+//! Requires `make artifacts`. Benchmarks the `distances()` call on the
+//! artifact configurations, which is exactly the Õ(kb²) step Theorem 1(1)
+//! prices.
+//!
+//! ```bash
+//! cargo bench --bench bench_backend
+//! ```
+
+use mbkk::bench::BenchRunner;
+use mbkk::data::synthetic::{blobs, SyntheticSpec};
+use mbkk::kernels::{Gram, KernelFunction};
+use mbkk::kkmeans::{AssignBackend, CenterWindow, NativeBackend};
+use mbkk::runtime::XlaBackend;
+use mbkk::util::rng::Rng;
+use std::path::Path;
+
+fn windows(rng: &mut Rng, n: usize, k: usize, tau: usize, fill: usize) -> Vec<CenterWindow> {
+    let mut centers: Vec<CenterWindow> = (0..k).map(|j| CenterWindow::new(j, tau)).collect();
+    for c in centers.iter_mut() {
+        for _ in 0..(fill / 16).max(1) {
+            let pts: Vec<usize> = (0..16).map(|_| rng.below(n)).collect();
+            c.apply_update(0.4, &pts, None);
+        }
+    }
+    centers
+}
+
+fn main() {
+    let mut runner = BenchRunner::new("assignment backend (native vs xla)");
+    let dir = Path::new(mbkk::runtime::DEFAULT_ARTIFACT_DIR);
+    let have_artifacts = mbkk::runtime::artifacts_available(
+        dir.to_str().unwrap_or("artifacts"),
+    );
+    if !have_artifacts {
+        println!("  artifacts missing — run `make artifacts` for the XLA rows");
+    }
+
+    // Match the artifact grid: (b, k, d) with window fill ≈ τ.
+    for &(b, k, d, tau) in &[(64usize, 4usize, 8usize, 100usize), (256, 10, 16, 300), (256, 10, 128, 300), (1024, 10, 16, 300)] {
+        let mut rng = Rng::seeded(11);
+        let ds = blobs(&SyntheticSpec::new(4000, d, k), &mut rng);
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 2.0 * d as f64 });
+        let mut centers = windows(&mut rng, ds.n, k, tau, tau);
+        let batch: Vec<usize> = (0..b).map(|_| rng.below(ds.n)).collect();
+
+        let mut native = NativeBackend;
+        runner.bench(&format!("native b={b} k={k} d={d} tau={tau}"), || {
+            native.distances(&gram, &batch, &mut centers)
+        });
+
+        if have_artifacts {
+            if let Ok(mut xla) = XlaBackend::load(dir) {
+                // Warm the executable cache outside the timed region.
+                let _ = xla.distances(&gram, &batch, &mut centers);
+                if xla.xla_calls > 0 {
+                    runner.bench(&format!("xla    b={b} k={k} d={d} tau={tau}"), || {
+                        xla.distances(&gram, &batch, &mut centers)
+                    });
+                } else {
+                    println!("  (no artifact for b={b} k={k} d={d}; skipping xla row)");
+                }
+            }
+        }
+    }
+    runner.write_csv();
+}

@@ -1,0 +1,51 @@
+//! Substrate benchmarks: the gram/kernel machinery under the hot path.
+//!
+//! * `Gram::block` (the native analogue of the L1 Pallas kernel) — on-the-fly
+//!   Gaussian evaluation vs materialized lookup.
+//! * Full gram materialization (the paper's "kernel time" black bars).
+//! * Dense GEMM + `expm` (the heat-kernel substrate).
+//!
+//! ```bash
+//! cargo bench --bench bench_gram
+//! ```
+
+use mbkk::bench::BenchRunner;
+use mbkk::data::synthetic::{blobs, SyntheticSpec};
+use mbkk::kernels::{Gram, KernelFunction};
+use mbkk::linalg::{expm, Matrix};
+use mbkk::util::rng::Rng;
+
+fn main() {
+    let mut runner = BenchRunner::new("gram + linalg substrates");
+    let mut rng = Rng::seeded(9);
+
+    for &d in &[16usize, 128] {
+        let ds = blobs(&SyntheticSpec::new(8000, d, 5), &mut rng);
+        let fly = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: d as f64 });
+        let rows: Vec<usize> = (0..256).map(|_| rng.below(ds.n)).collect();
+        let cols: Vec<usize> = (0..512).map(|_| rng.below(ds.n)).collect();
+        runner.bench(&format!("block 256x512 on-the-fly d={d}"), || {
+            fly.block(&rows, &cols)
+        });
+    }
+
+    let ds = blobs(&SyntheticSpec::new(3000, 16, 5), &mut rng);
+    let fly = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 16.0 });
+    runner.bench("materialize gram n=3000 d=16", || fly.materialize());
+    let mat = fly.materialize();
+    let rows: Vec<usize> = (0..256).map(|_| rng.below(ds.n)).collect();
+    let cols: Vec<usize> = (0..512).map(|_| rng.below(ds.n)).collect();
+    runner.bench("block 256x512 materialized", || mat.block(&rows, &cols));
+
+    // Dense linalg substrate (heat kernel path).
+    for &n in &[256usize, 768] {
+        let mut a = Matrix::zeros(n, n);
+        for v in a.data.iter_mut() {
+            *v = rng.normal() * 0.05;
+        }
+        let b = a.clone();
+        runner.bench(&format!("gemm {n}x{n}"), || a.matmul(&b));
+        runner.bench(&format!("expm {n}x{n}"), || expm(&a));
+    }
+    runner.write_csv();
+}

@@ -1,0 +1,137 @@
+//! Theorem 1(1) / §4 cost model: per-iteration cost of the three kernel
+//! k-means algorithms.
+//!
+//! Reproduces the paper's complexity claims empirically:
+//! * Algorithm 2 (truncated): `Õ(kb²)` — scales with b, k, τ but NOT n.
+//! * Algorithm 1: `O(n(b+k))` — linear in n.
+//! * Full batch: `O(n²)` — quadratic in n.
+//!
+//! ```bash
+//! cargo bench --bench bench_iteration
+//! ```
+
+use mbkk::bench::BenchRunner;
+use mbkk::data::synthetic::{blobs, SyntheticSpec};
+use mbkk::kernels::{Gram, KernelFunction};
+use mbkk::kkmeans::{
+    FullBatchConfig, FullBatchKernelKMeans, Init, MiniBatchConfig, MiniBatchKernelKMeans,
+    TruncatedConfig, TruncatedMiniBatchKernelKMeans,
+};
+use mbkk::util::rng::Rng;
+
+const ITERS: usize = 10;
+
+fn dataset(n: usize) -> mbkk::data::Dataset {
+    let mut rng = Rng::seeded(42);
+    blobs(&SyntheticSpec::new(n, 16, 8).with_separation(4.0), &mut rng)
+}
+
+fn trunc_secs_per_iter(gram: &Gram, k: usize, b: usize, tau: usize) -> f64 {
+    let cfg = TruncatedConfig {
+        k,
+        batch_size: b,
+        tau,
+        max_iters: ITERS,
+        epsilon: None,
+        init: Init::Uniform,
+        ..Default::default()
+    };
+    let mut rng = Rng::seeded(1);
+    let sw = mbkk::util::timing::Stopwatch::start();
+    let res = TruncatedMiniBatchKernelKMeans::new(cfg).fit(gram, &mut rng);
+    // Subtract init+finalize via the profiler: report the assign+update time.
+    let hot = res.profiler.phase_secs("assign") + res.profiler.phase_secs("update");
+    let _ = sw;
+    hot / ITERS as f64
+}
+
+fn main() {
+    let mut runner = BenchRunner::new("iteration cost (Theorem 1)");
+
+    // ---- Algorithm 2: scaling in b (fixed n, k, τ) -------------------------
+    let ds = dataset(8000);
+    let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 30.0 }).materialize();
+    for b in [128usize, 256, 512, 1024] {
+        let secs = trunc_secs_per_iter(&gram, 8, b, 200);
+        runner.record(&format!("alg2/iter b={b} (k=8, tau=200, n=8000)"), secs);
+    }
+    // ---- Algorithm 2: scaling in τ ----------------------------------------
+    for tau in [50usize, 100, 200, 400] {
+        let secs = trunc_secs_per_iter(&gram, 8, 256, tau);
+        runner.record(&format!("alg2/iter tau={tau} (k=8, b=256)"), secs);
+    }
+    // ---- Algorithm 2: scaling in k ----------------------------------------
+    for k in [2usize, 8, 32] {
+        let secs = trunc_secs_per_iter(&gram, k, 256, 200);
+        runner.record(&format!("alg2/iter k={k} (b=256, tau=200)"), secs);
+    }
+    // ---- Algorithm 2: INDEPENDENCE of n (the headline) ---------------------
+    for n in [2000usize, 8000] {
+        let ds_n = dataset(n);
+        let gram_n =
+            Gram::on_the_fly(&ds_n, KernelFunction::Gaussian { kappa: 30.0 }).materialize();
+        let secs = trunc_secs_per_iter(&gram_n, 8, 256, 200);
+        runner.record(&format!("alg2/iter n={n} (b=256, tau=200)"), secs);
+    }
+
+    // ---- Algorithm 1: linear in n ------------------------------------------
+    for n in [2000usize, 4000, 8000] {
+        let ds_n = dataset(n);
+        let gram_n =
+            Gram::on_the_fly(&ds_n, KernelFunction::Gaussian { kappa: 30.0 }).materialize();
+        let cfg = MiniBatchConfig {
+            k: 8,
+            batch_size: 256,
+            max_iters: ITERS,
+            init: Init::Uniform,
+            ..Default::default()
+        };
+        let mut rng = Rng::seeded(1);
+        let res = MiniBatchKernelKMeans::new(cfg).fit(&gram_n, &mut rng);
+        let hot = res.profiler.phase_secs("assign")
+            + res.profiler.phase_secs("update")
+            + res.profiler.phase_secs("moments");
+        runner.record(&format!("alg1/iter n={n} (b=256, k=8)"), hot / ITERS as f64);
+    }
+
+    // ---- Full batch: quadratic in n ----------------------------------------
+    for n in [2000usize, 4000, 8000] {
+        let ds_n = dataset(n);
+        let gram_n =
+            Gram::on_the_fly(&ds_n, KernelFunction::Gaussian { kappa: 30.0 }).materialize();
+        let cfg = FullBatchConfig {
+            k: 8,
+            max_iters: 3,
+            init: Init::Uniform,
+            ..Default::default()
+        };
+        let mut rng = Rng::seeded(1);
+        let res = FullBatchKernelKMeans::new(cfg).fit(&gram_n, &mut rng);
+        let hot = res.profiler.phase_secs("assign") + res.profiler.phase_secs("term3");
+        runner.record(
+            &format!("full/iter n={n} (k=8)"),
+            hot / res.iterations as f64,
+        );
+    }
+
+    // Shape checks the paper's claims imply (soft-printed, not asserted:
+    // absolute machines vary, ratios should hold approximately).
+    if let Some(r) = runner.ratio("full/iter n=8000 (k=8)", "alg2/iter n=8000 (b=256, tau=200)") {
+        println!("\n  full-batch / truncated per-iteration ratio at n=8000: {r:.1}x");
+    }
+    if let (Some(a), Some(b)) = (
+        runner
+            .samples()
+            .iter()
+            .find(|s| s.name.contains("alg2/iter n=2000"))
+            .map(|s| s.mean),
+        runner
+            .samples()
+            .iter()
+            .find(|s| s.name.contains("alg2/iter n=8000"))
+            .map(|s| s.mean),
+    ) {
+        println!("  alg2 n-independence: t(n=8000)/t(n=2000) = {:.2} (≈1 expected)", b / a);
+    }
+    runner.write_csv();
+}

@@ -1,0 +1,171 @@
+//! Criterion-style micro-benchmark harness.
+//!
+//! Each benchmark target (`rust/benches/*.rs`, `harness = false`) builds a
+//! [`BenchRunner`], registers closures, and gets warmup, adaptive iteration
+//! counts, and a mean/std/median/min/max report. Results can also be dumped
+//! as CSV rows so `EXPERIMENTS.md` tables are reproducible by re-running
+//! `cargo bench`.
+
+use crate::util::timing::fmt_secs;
+use std::time::Instant;
+
+/// Statistics for one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub iters: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub median: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Sample {
+    fn from_times(name: &str, times: &mut [f64]) -> Sample {
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = times.len();
+        let mean = times.iter().sum::<f64>() / n as f64;
+        let var = times.iter().map(|t| (t - mean).powi(2)).sum::<f64>() / (n.max(2) - 1) as f64;
+        Sample {
+            name: name.to_string(),
+            iters: n,
+            mean,
+            std: var.sqrt(),
+            median: times[n / 2],
+            min: times[0],
+            max: times[n - 1],
+        }
+    }
+}
+
+/// Benchmark registry + runner.
+pub struct BenchRunner {
+    title: String,
+    /// Target wall-clock per case (seconds); adaptive iteration count aims
+    /// for this. Override with MBKK_BENCH_SECS.
+    target_secs: f64,
+    warmup_iters: usize,
+    samples: Vec<Sample>,
+    /// Optional filter (substring) from argv, mirroring `cargo bench -- foo`.
+    filter: Option<String>,
+}
+
+impl BenchRunner {
+    pub fn new(title: &str) -> BenchRunner {
+        let target_secs = std::env::var("MBKK_BENCH_SECS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(1.0);
+        // cargo bench passes `--bench`; any other bare arg is a filter.
+        let filter = std::env::args()
+            .skip(1)
+            .find(|a| !a.starts_with('-'));
+        println!("\n== bench: {title} ==");
+        BenchRunner {
+            title: title.to_string(),
+            target_secs,
+            warmup_iters: 2,
+            samples: Vec::new(),
+            filter,
+        }
+    }
+
+    /// Measure `f`, which performs **one** unit of work per call.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) {
+        if let Some(filter) = &self.filter {
+            if !name.contains(filter.as_str()) {
+                return;
+            }
+        }
+        // Warmup + estimate cost.
+        let mut est = 0.0;
+        for _ in 0..self.warmup_iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            est = t0.elapsed().as_secs_f64();
+        }
+        let iters = ((self.target_secs / est.max(1e-9)) as usize).clamp(3, 1000);
+        let mut times = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        let sample = Sample::from_times(name, &mut times);
+        println!(
+            "  {:<44} {:>10} ± {:>9}  (median {:>10}, n={})",
+            sample.name,
+            fmt_secs(sample.mean),
+            fmt_secs(sample.std),
+            fmt_secs(sample.median),
+            sample.iters
+        );
+        self.samples.push(sample);
+    }
+
+    /// Record an externally measured value (e.g. a full run's wall-clock)
+    /// without re-running it.
+    pub fn record(&mut self, name: &str, secs: f64) {
+        if let Some(filter) = &self.filter {
+            if !name.contains(filter.as_str()) {
+                return;
+            }
+        }
+        println!("  {:<44} {:>10}  (recorded)", name, fmt_secs(secs));
+        self.samples.push(Sample {
+            name: name.to_string(),
+            iters: 1,
+            mean: secs,
+            std: 0.0,
+            median: secs,
+            min: secs,
+            max: secs,
+        });
+    }
+
+    pub fn samples(&self) -> &[Sample] {
+        &self.samples
+    }
+
+    /// Ratio between two named samples' means (for speedup rows).
+    pub fn ratio(&self, slow: &str, fast: &str) -> Option<f64> {
+        let s = self.samples.iter().find(|s| s.name == slow)?.mean;
+        let f = self.samples.iter().find(|s| s.name == fast)?.mean;
+        Some(s / f)
+    }
+
+    /// Emit a CSV file with all samples under `results/bench/`.
+    pub fn write_csv(&self) {
+        let dir = std::path::Path::new("results/bench");
+        if std::fs::create_dir_all(dir).is_err() {
+            return;
+        }
+        let path = dir.join(format!("{}.csv", self.title.replace([' ', '/'], "_")));
+        let mut out = String::from("name,iters,mean_s,std_s,median_s,min_s,max_s\n");
+        for s in &self.samples {
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{}\n",
+                s.name, s.iters, s.mean, s.std, s.median, s.min, s.max
+            ));
+        }
+        let _ = std::fs::write(&path, out);
+        println!("  [csv] {}", path.display());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_statistics() {
+        let mut times = vec![3.0, 1.0, 2.0];
+        let s = Sample::from_times("t", &mut times);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.median, 2.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert!((s.std - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,5 @@
+//! Micro-benchmark harness (criterion replacement for this offline build).
+
+pub mod harness;
+
+pub use harness::{BenchRunner, Sample};

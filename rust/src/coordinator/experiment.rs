@@ -1,0 +1,350 @@
+//! The experiment run model: one cell of a paper figure's grid.
+
+use crate::data::{registry, Dataset};
+use crate::kernels::{graph, sigma, Gram, KernelFunction};
+use crate::kkmeans::{
+    FullBatchConfig, FullBatchKernelKMeans, Init, LearningRate, MiniBatchConfig,
+    MiniBatchKernelKMeans, TruncatedConfig, TruncatedMiniBatchKernelKMeans,
+};
+use crate::kmeans::{KMeans, KMeansConfig, MiniBatchKMeans, MiniBatchKMeansConfig};
+use crate::metrics::{ari, nmi};
+use crate::util::rng::Rng;
+use crate::util::timing::Stopwatch;
+
+/// Which kernel to build for a dataset.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum KernelSpec {
+    /// Gaussian with κ from the Wang et al. heuristic × `multiplier`
+    /// (the paper's "manual tuning" knob).
+    Gaussian { multiplier: f64 },
+    /// k-nn kernel `D⁻¹AD⁻¹`.
+    Knn { neighbors: usize },
+    /// Heat kernel `exp(−t·L̃)` on the knn graph.
+    Heat { neighbors: usize, t: f64 },
+}
+
+impl KernelSpec {
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelSpec::Gaussian { .. } => "gaussian",
+            KernelSpec::Knn { .. } => "knn",
+            KernelSpec::Heat { .. } => "heat",
+        }
+    }
+
+    /// Paper defaults per kernel family.
+    pub fn from_name(name: &str) -> KernelSpec {
+        match name {
+            "gaussian" => KernelSpec::Gaussian { multiplier: 1.0 },
+            "knn" => KernelSpec::Knn { neighbors: 10 },
+            "heat" => KernelSpec::Heat { neighbors: 10, t: 100.0 },
+            other => panic!("unknown kernel {other:?} (gaussian|knn|heat)"),
+        }
+    }
+
+    /// Build the gram provider; returns (gram, build seconds). Feature
+    /// kernels are *materialized* so every algorithm pays only lookups —
+    /// this matches the paper's protocol, which precomputes the kernel
+    /// matrix and reports that cost as the black bars.
+    pub fn build(&self, ds: &Dataset, rng: &mut Rng) -> (Gram<'static>, f64) {
+        let sw = Stopwatch::start();
+        let gram = match *self {
+            KernelSpec::Gaussian { multiplier } => {
+                let kappa = sigma::kappa_heuristic_with(
+                    ds,
+                    rng,
+                    sigma::DEFAULT_PAIR_SAMPLES,
+                    multiplier,
+                );
+                Gram::on_the_fly(ds, KernelFunction::Gaussian { kappa }).materialize()
+            }
+            KernelSpec::Knn { neighbors } => graph::knn_kernel(ds, neighbors),
+            KernelSpec::Heat { neighbors, t } => graph::heat_kernel(ds, neighbors, t),
+        };
+        (gram, sw.secs())
+    }
+
+    /// The Gaussian κ for this dataset (used by the XLA backend path, which
+    /// needs the un-materialized feature kernel).
+    pub fn gaussian_kappa(&self, ds: &Dataset, rng: &mut Rng) -> Option<f64> {
+        match *self {
+            KernelSpec::Gaussian { multiplier } => Some(sigma::kappa_heuristic_with(
+                ds,
+                rng,
+                sigma::DEFAULT_PAIR_SAMPLES,
+                multiplier,
+            )),
+            _ => None,
+        }
+    }
+}
+
+/// Which algorithm a grid cell runs. β-prefixed names (paper convention)
+/// use the Schwartzman (2023) learning rate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AlgoSpec {
+    /// Full-batch kernel k-means (baseline, O(n²)/iter).
+    FullKkm,
+    /// Algorithm 1 (untruncated mini-batch kernel k-means).
+    MbKkm(LearningRate),
+    /// Algorithm 2 (truncated) — the paper's contribution.
+    TruncKkm(LearningRate),
+    /// Non-kernel mini-batch k-means (Sculley).
+    MbKm(LearningRate),
+    /// Non-kernel Lloyd's (extra baseline).
+    Lloyd,
+}
+
+impl AlgoSpec {
+    pub fn name(&self) -> String {
+        match self {
+            AlgoSpec::FullKkm => "full-kkm".into(),
+            AlgoSpec::MbKkm(lr) => format!("{}mb-kkm", beta_prefix(*lr)),
+            AlgoSpec::TruncKkm(lr) => format!("{}trunc-kkm", beta_prefix(*lr)),
+            AlgoSpec::MbKm(lr) => format!("{}mb-km", beta_prefix(*lr)),
+            AlgoSpec::Lloyd => "kmeans".into(),
+        }
+    }
+
+    pub fn from_name(name: &str) -> AlgoSpec {
+        match name {
+            "full-kkm" => AlgoSpec::FullKkm,
+            "mb-kkm" => AlgoSpec::MbKkm(LearningRate::Sklearn),
+            "bmb-kkm" | "β-mb-kkm" => AlgoSpec::MbKkm(LearningRate::Beta),
+            "trunc-kkm" => AlgoSpec::TruncKkm(LearningRate::Sklearn),
+            "btrunc-kkm" | "β-trunc-kkm" => AlgoSpec::TruncKkm(LearningRate::Beta),
+            "mb-km" => AlgoSpec::MbKm(LearningRate::Sklearn),
+            "bmb-km" | "β-mb-km" => AlgoSpec::MbKm(LearningRate::Beta),
+            "kmeans" => AlgoSpec::Lloyd,
+            other => panic!(
+                "unknown algo {other:?} (full-kkm | [b]mb-kkm | [b]trunc-kkm | [b]mb-km | kmeans)"
+            ),
+        }
+    }
+
+    /// Whether the algorithm needs the kernel/gram at all.
+    pub fn is_kernelized(&self) -> bool {
+        !matches!(self, AlgoSpec::MbKm(_) | AlgoSpec::Lloyd)
+    }
+}
+
+fn beta_prefix(lr: LearningRate) -> &'static str {
+    match lr {
+        LearningRate::Beta => "b",
+        LearningRate::Sklearn => "",
+    }
+}
+
+/// One grid cell: everything needed to reproduce a single run.
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    pub dataset: String,
+    /// Global dataset scale factor (DESIGN.md §3 substitution).
+    pub scale: f64,
+    pub kernel: KernelSpec,
+    pub algo: AlgoSpec,
+    pub k: usize,
+    pub batch_size: usize,
+    pub tau: usize,
+    pub max_iters: usize,
+    /// ε for early stopping; None = fixed iterations (paper protocol).
+    pub epsilon: Option<f64>,
+    pub seed: u64,
+}
+
+impl RunSpec {
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{}/{} b={} tau={} seed={}",
+            self.dataset,
+            self.kernel.name(),
+            self.algo.name(),
+            self.batch_size,
+            self.tau,
+            self.seed
+        )
+    }
+}
+
+/// Metrics from one run.
+#[derive(Clone, Debug)]
+pub struct RunOutcome {
+    pub ari: f64,
+    pub nmi: f64,
+    pub objective: f64,
+    pub iterations: usize,
+    pub converged: bool,
+    /// Clustering wall-clock (excludes kernel construction).
+    pub cluster_secs: f64,
+    /// Kernel/gram construction wall-clock (the paper's black bars).
+    pub kernel_secs: f64,
+    /// γ of the gram (Table 1).
+    pub gamma: f64,
+}
+
+/// Execute a run against a pre-built dataset + gram (lets the figure driver
+/// share one gram across the whole grid). `kernel_secs` is threaded through
+/// into the outcome.
+pub fn run_with_gram(
+    spec: &RunSpec,
+    ds: &Dataset,
+    gram: &Gram,
+    kernel_secs: f64,
+) -> RunOutcome {
+    let mut rng = Rng::seeded(spec.seed ^ 0x5EED);
+    let sw = Stopwatch::start();
+    let fit = match spec.algo {
+        AlgoSpec::FullKkm => FullBatchKernelKMeans::new(FullBatchConfig {
+            k: spec.k,
+            max_iters: spec.max_iters,
+            epsilon: spec.epsilon,
+            init: Init::KMeansPlusPlus,
+            weights: None,
+        })
+        .fit(gram, &mut rng),
+        AlgoSpec::MbKkm(lr) => MiniBatchKernelKMeans::new(MiniBatchConfig {
+            k: spec.k,
+            batch_size: spec.batch_size,
+            max_iters: spec.max_iters,
+            epsilon: spec.epsilon,
+            learning_rate: lr,
+            init: Init::KMeansPlusPlus,
+            weights: None,
+        })
+        .fit(gram, &mut rng),
+        AlgoSpec::TruncKkm(lr) => TruncatedMiniBatchKernelKMeans::new(TruncatedConfig {
+            k: spec.k,
+            batch_size: spec.batch_size,
+            tau: spec.tau,
+            max_iters: spec.max_iters,
+            epsilon: spec.epsilon,
+            learning_rate: lr,
+            init: Init::KMeansPlusPlus,
+            weights: None,
+        })
+        .fit(gram, &mut rng),
+        AlgoSpec::MbKm(lr) => MiniBatchKMeans::new(MiniBatchKMeansConfig {
+            k: spec.k,
+            batch_size: spec.batch_size,
+            max_iters: spec.max_iters,
+            epsilon: spec.epsilon,
+            learning_rate: lr,
+        })
+        .fit(ds, &mut rng),
+        AlgoSpec::Lloyd => KMeans::new(KMeansConfig {
+            k: spec.k,
+            max_iters: spec.max_iters,
+            epsilon: spec.epsilon,
+        })
+        .fit(ds, &mut rng),
+    };
+    let cluster_secs = sw.secs();
+    let (ari_v, nmi_v) = match &ds.labels {
+        Some(truth) => (ari(truth, &fit.assignments), nmi(truth, &fit.assignments)),
+        None => (f64::NAN, f64::NAN),
+    };
+    RunOutcome {
+        ari: ari_v,
+        nmi: nmi_v,
+        objective: fit.objective,
+        iterations: fit.iterations,
+        converged: fit.converged,
+        cluster_secs,
+        kernel_secs,
+        gamma: gram.gamma(),
+    }
+}
+
+/// Execute a fully self-contained run (builds dataset + gram itself).
+pub fn run_one(spec: &RunSpec) -> RunOutcome {
+    let ds = registry::load(&spec.dataset, spec.scale, spec.seed);
+    let mut rng = Rng::seeded(spec.seed ^ 0xC0DE);
+    let (gram, kernel_secs) = if spec.algo.is_kernelized() {
+        spec.kernel.build(&ds, &mut rng)
+    } else {
+        (Gram::precomputed("unused", 0, Vec::new()), 0.0)
+    };
+    if spec.algo.is_kernelized() {
+        run_with_gram(spec, &ds, &gram, kernel_secs)
+    } else {
+        // Non-kernel algorithms never touch the gram.
+        let dummy = Gram::precomputed("unused", 0, Vec::new());
+        let mut out = run_with_gram(spec, &ds, &dummy, 0.0);
+        out.gamma = f64::NAN;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base_spec(algo: AlgoSpec) -> RunSpec {
+        RunSpec {
+            dataset: "blobs".into(),
+            scale: 0.05,
+            kernel: KernelSpec::Gaussian { multiplier: 1.0 },
+            algo,
+            k: 5,
+            batch_size: 64,
+            tau: 50,
+            max_iters: 20,
+            epsilon: None,
+            seed: 3,
+        }
+    }
+
+    #[test]
+    fn every_algorithm_runs_end_to_end() {
+        for algo in [
+            AlgoSpec::FullKkm,
+            AlgoSpec::MbKkm(LearningRate::Beta),
+            AlgoSpec::TruncKkm(LearningRate::Beta),
+            AlgoSpec::TruncKkm(LearningRate::Sklearn),
+            AlgoSpec::MbKm(LearningRate::Beta),
+            AlgoSpec::Lloyd,
+        ] {
+            let out = run_one(&base_spec(algo));
+            assert!(out.ari.is_finite(), "{algo:?}");
+            assert!(out.objective.is_finite(), "{algo:?}");
+            assert!(out.cluster_secs >= 0.0);
+            // blobs at separation 3 should cluster reasonably with any algo.
+            assert!(out.ari > 0.3, "{algo:?}: ARI={}", out.ari);
+        }
+    }
+
+    #[test]
+    fn kernel_names_roundtrip() {
+        for name in ["gaussian", "knn", "heat"] {
+            assert_eq!(KernelSpec::from_name(name).name(), name);
+        }
+    }
+
+    #[test]
+    fn algo_names_roundtrip() {
+        for name in [
+            "full-kkm", "mb-kkm", "bmb-kkm", "trunc-kkm", "btrunc-kkm", "mb-km",
+            "bmb-km", "kmeans",
+        ] {
+            assert_eq!(AlgoSpec::from_name(name).name(), name);
+        }
+    }
+
+    #[test]
+    fn knn_kernel_run_has_small_gamma() {
+        let mut spec = base_spec(AlgoSpec::TruncKkm(LearningRate::Beta));
+        spec.kernel = KernelSpec::Knn { neighbors: 8 };
+        let out = run_one(&spec);
+        assert!(out.gamma < 0.5, "knn gamma should be ≪ 1, got {}", out.gamma);
+        assert!(out.ari.is_finite());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let spec = base_spec(AlgoSpec::TruncKkm(LearningRate::Beta));
+        let a = run_one(&spec);
+        let b = run_one(&spec);
+        assert_eq!(a.ari, b.ari);
+        assert_eq!(a.objective, b.objective);
+    }
+}

@@ -1,0 +1,310 @@
+//! The figure/table registry: every figure and table in the paper's
+//! evaluation, mapped to the grid that regenerates it.
+//!
+//! * **Figure 1** — the headline comparison: all four dataset proxies,
+//!   Gaussian kernel, b=1024, τ=200, the five algorithm bars.
+//! * **Figures 2–13** — the appendix grid: {mnist, har, letter, pendigits}
+//!   × {gaussian, knn, heat}, sweeping b and τ for the mini-batch
+//!   algorithms with both learning rates, against the full-batch baseline.
+//! * **Table 1** — empirical γ per dataset × kernel.
+//!
+//! Run via `mbkk figures --fig N` / `--all` or `examples/paper_figures.rs`.
+//! Results land in `results/` as CSV + markdown; EXPERIMENTS.md records the
+//! paper-vs-measured comparison.
+
+use super::experiment::{run_with_gram, AlgoSpec, KernelSpec, RunOutcome, RunSpec};
+use super::report::{write_reports, Row};
+use crate::data::registry;
+use crate::kkmeans::LearningRate;
+use crate::util::parallel::par_run_jobs;
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::path::Path;
+
+/// Declarative description of one paper figure.
+#[derive(Clone, Debug)]
+pub struct FigureSpec {
+    pub id: usize,
+    pub dataset: &'static str,
+    pub kernel_name: &'static str,
+    /// Batch sizes swept (mini-batch algorithms).
+    pub batch_sizes: &'static [usize],
+    /// τ values swept (truncated algorithm).
+    pub taus: &'static [usize],
+}
+
+const PAPER_BS: &[usize] = &[256, 512, 1024, 2048];
+const PAPER_TAUS: &[usize] = &[50, 100, 200, 300];
+const FIG1_BS: &[usize] = &[1024];
+const FIG1_TAUS: &[usize] = &[200];
+
+/// All figure ids (1 = main figure; 2–13 = appendix grid in paper order).
+pub fn figure_ids() -> Vec<usize> {
+    (1..=13).collect()
+}
+
+/// The registry. Figures 2–13 follow the paper's ordering: MNIST (2–4),
+/// HAR (5–7), Letters (8–10), PenDigits (11–13), each × {gaussian, knn,
+/// heat}.
+pub fn figure_spec(id: usize) -> FigureSpec {
+    let (dataset, kernel_name) = match id {
+        1 => ("*", "gaussian"), // all four datasets
+        2 => ("synth_mnist", "gaussian"),
+        3 => ("synth_mnist", "knn"),
+        4 => ("synth_mnist", "heat"),
+        5 => ("synth_har", "gaussian"),
+        6 => ("synth_har", "knn"),
+        7 => ("synth_har", "heat"),
+        8 => ("synth_letters", "gaussian"),
+        9 => ("synth_letters", "knn"),
+        10 => ("synth_letters", "heat"),
+        11 => ("synth_pendigits", "gaussian"),
+        12 => ("synth_pendigits", "knn"),
+        13 => ("synth_pendigits", "heat"),
+        other => panic!("unknown figure {other} (1..=13)"),
+    };
+    FigureSpec {
+        id,
+        dataset,
+        kernel_name,
+        batch_sizes: if id == 1 { FIG1_BS } else { PAPER_BS },
+        taus: if id == 1 { FIG1_TAUS } else { PAPER_TAUS },
+    }
+}
+
+/// Options controlling a figure regeneration run.
+#[derive(Clone, Debug)]
+pub struct FigureOptions {
+    /// Dataset scale factor (1.0 = paper-matched n; default smaller).
+    pub scale: f64,
+    /// Seeds per grid cell (paper: 10).
+    pub repeats: usize,
+    /// Iterations per run (paper: 200).
+    pub max_iters: usize,
+    /// Reduced grid (first/last of each sweep) for CI-speed runs.
+    pub quick: bool,
+    /// Base RNG seed.
+    pub seed: u64,
+}
+
+impl Default for FigureOptions {
+    fn default() -> Self {
+        FigureOptions { scale: 0.25, repeats: 3, max_iters: 200, quick: false, seed: 7 }
+    }
+}
+
+fn thin<T: Copy>(xs: &[T], quick: bool) -> Vec<T> {
+    if quick && xs.len() > 2 {
+        vec![xs[0], xs[xs.len() - 1]]
+    } else {
+        xs.to_vec()
+    }
+}
+
+/// The algorithm roster of the appendix figures.
+fn roster(batch_sizes: &[usize], taus: &[usize]) -> Vec<(AlgoSpec, usize, usize)> {
+    let mut cells = Vec::new();
+    // Full batch: one cell (b, τ irrelevant).
+    cells.push((AlgoSpec::FullKkm, 0, 0));
+    for &b in batch_sizes {
+        for lr in [LearningRate::Beta, LearningRate::Sklearn] {
+            cells.push((AlgoSpec::MbKkm(lr), b, 0));
+            cells.push((AlgoSpec::MbKm(lr), b, 0));
+            for &tau in taus {
+                cells.push((AlgoSpec::TruncKkm(lr), b, tau));
+            }
+        }
+    }
+    cells
+}
+
+/// Regenerate one figure; returns the aggregated rows (also written to
+/// `out_dir` as `figN_<dataset>_<kernel>.{csv,md}` when `out_dir` is given).
+pub fn run_figure(id: usize, opts: &FigureOptions, out_dir: Option<&Path>) -> Result<Vec<Row>> {
+    let spec = figure_spec(id);
+    let datasets: Vec<&str> = if spec.dataset == "*" {
+        registry::PAPER_PROXIES.to_vec()
+    } else {
+        vec![spec.dataset]
+    };
+    let mut all_rows = Vec::new();
+    for dataset in datasets {
+        let rows = run_grid(
+            &format!("fig{id}"),
+            dataset,
+            KernelSpec::from_name(spec.kernel_name),
+            &thin(spec.batch_sizes, opts.quick),
+            &thin(spec.taus, opts.quick),
+            opts,
+        )?;
+        all_rows.extend(rows);
+    }
+    if let Some(dir) = out_dir {
+        let stem = if spec.dataset == "*" {
+            format!("fig{id}_all_{}", spec.kernel_name)
+        } else {
+            format!("fig{id}_{}_{}", spec.dataset, spec.kernel_name)
+        };
+        write_reports(dir, &stem, &all_rows)?;
+    }
+    Ok(all_rows)
+}
+
+/// Run the full grid for one (dataset, kernel): builds the dataset and gram
+/// once, then runs every (algo, b, τ, seed) cell in parallel.
+fn run_grid(
+    figure: &str,
+    dataset: &str,
+    kernel: KernelSpec,
+    batch_sizes: &[usize],
+    taus: &[usize],
+    opts: &FigureOptions,
+) -> Result<Vec<Row>> {
+    let ds = registry::load(dataset, opts.scale, opts.seed);
+    let k = registry::default_k(dataset);
+    let mut rng = Rng::seeded(opts.seed ^ 0xF16);
+    let (gram, kernel_secs) = kernel.build(&ds, &mut rng);
+    eprintln!(
+        "[figures] {figure} {dataset}/{} n={} k={k} gamma={:.4} kernel_secs={:.2}",
+        kernel.name(),
+        ds.n,
+        gram.gamma(),
+        kernel_secs
+    );
+
+    let cells = roster(batch_sizes, taus);
+    let mut rows = Vec::new();
+    for (algo, b, tau) in cells {
+        let spec = RunSpec {
+            dataset: dataset.to_string(),
+            scale: opts.scale,
+            kernel,
+            algo,
+            k,
+            batch_size: if b == 0 { 1024 } else { b },
+            tau: if tau == 0 { usize::MAX } else { tau },
+            max_iters: opts.max_iters,
+            epsilon: None,
+            seed: 0,
+        };
+        // Repeats run in parallel; each clones the spec with its own seed.
+        let jobs: Vec<_> = (0..opts.repeats)
+            .map(|rep| {
+                let mut s = spec.clone();
+                s.seed = opts.seed.wrapping_add(rep as u64 * 7919);
+                let ds = &ds;
+                let gram = &gram;
+                move || run_with_gram(&s, ds, gram, kernel_secs)
+            })
+            .collect();
+        let outcomes: Vec<RunOutcome> = par_run_jobs(jobs);
+        rows.push(Row::aggregate(
+            figure,
+            dataset,
+            kernel.name(),
+            &algo.name(),
+            b,
+            tau,
+            &outcomes,
+        ));
+        let last = rows.last().unwrap();
+        eprintln!(
+            "[figures]   {} b={b} tau={tau}: ARI {:.3}±{:.3} in {:.2}s",
+            algo.name(),
+            last.ari.mean,
+            last.ari.std,
+            last.cluster_secs.mean
+        );
+    }
+    Ok(rows)
+}
+
+/// Table 1: γ per dataset × kernel type.
+pub fn run_gamma_table(scale: f64, seed: u64, out_dir: Option<&Path>) -> Result<String> {
+    let mut md = String::from("| Dataset | Kernel Type | γ |\n|---|---|---|\n");
+    let mut csv = String::from("dataset,kernel,gamma\n");
+    for &dataset in registry::PAPER_PROXIES {
+        let ds = registry::load(dataset, scale, seed);
+        for kernel_name in ["knn", "heat", "gaussian"] {
+            let kernel = KernelSpec::from_name(kernel_name);
+            let mut rng = Rng::seeded(seed);
+            let (gram, _) = kernel.build(&ds, &mut rng);
+            let gamma = gram.gamma();
+            md.push_str(&format!("| {dataset} | {kernel_name} | {gamma:.3e} |\n"));
+            csv.push_str(&format!("{dataset},{kernel_name},{gamma}\n"));
+            eprintln!("[gamma] {dataset}/{kernel_name}: {gamma:.4}");
+        }
+    }
+    if let Some(dir) = out_dir {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join("table1_gamma.md"), &md)?;
+        std::fs::write(dir.join("table1_gamma.csv"), &csv)?;
+    }
+    Ok(md)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_paper_layout() {
+        assert_eq!(figure_ids().len(), 13);
+        let f1 = figure_spec(1);
+        assert_eq!(f1.dataset, "*");
+        assert_eq!(f1.batch_sizes, &[1024]);
+        // 4 datasets × 3 kernels in paper order.
+        let mut seen = std::collections::BTreeSet::new();
+        for id in 2..=13 {
+            let f = figure_spec(id);
+            seen.insert((f.dataset, f.kernel_name));
+            assert_eq!(f.batch_sizes.len(), 4);
+            assert_eq!(f.taus.len(), 4);
+        }
+        assert_eq!(seen.len(), 12);
+    }
+
+    #[test]
+    fn roster_contains_all_paper_algorithms() {
+        let cells = roster(&[256, 1024], &[50, 200]);
+        let names: std::collections::BTreeSet<String> =
+            cells.iter().map(|(a, _, _)| a.name()).collect();
+        for want in ["full-kkm", "bmb-kkm", "mb-kkm", "btrunc-kkm", "trunc-kkm", "bmb-km", "mb-km"] {
+            assert!(names.contains(want), "missing {want}");
+        }
+        // full(1) + per-b: 2·(mbkkm+mbkm) + 2·2 trunc  = 1 + 2·(2+2+4) = 17
+        assert_eq!(cells.len(), 1 + 2 * (2 + 2 + 4));
+    }
+
+    #[test]
+    fn tiny_figure_run_produces_rows() {
+        // Scale far down so this stays a unit test.
+        let opts = FigureOptions {
+            scale: 0.02,
+            repeats: 2,
+            max_iters: 8,
+            quick: true,
+            seed: 5,
+        };
+        let rows = run_figure(11, &opts, None).unwrap();
+        assert!(!rows.is_empty());
+        for r in &rows {
+            assert_eq!(r.dataset, "synth_pendigits");
+            assert_eq!(r.kernel, "gaussian");
+            assert_eq!(r.repeats, 2);
+            assert!(r.ari.mean.is_finite());
+        }
+        // quick ⇒ b sweep thinned to {256, 2048}.
+        let bs: std::collections::BTreeSet<usize> =
+            rows.iter().map(|r| r.batch_size).filter(|&b| b > 0).collect();
+        assert_eq!(bs, [256usize, 2048].into_iter().collect());
+    }
+
+    #[test]
+    fn gamma_table_small() {
+        let md = run_gamma_table(0.02, 3, None).unwrap();
+        // 4 datasets × 3 kernels = 12 data rows + 2 header lines.
+        assert_eq!(md.lines().count(), 14);
+        assert!(md.contains("gaussian"));
+    }
+}

@@ -1,0 +1,22 @@
+//! Experiment coordinator — the launcher that regenerates every table and
+//! figure in the paper's evaluation (§6 + Appendix C).
+//!
+//! * [`experiment`] — the run model: a [`experiment::RunSpec`] names a
+//!   (dataset, kernel, algorithm, b, τ, seed) cell; [`experiment::run_one`]
+//!   executes it and returns metrics + timings. Kernel-matrix construction
+//!   is timed separately, mirroring the paper's black "kernel time" bars.
+//! * [`figures`] — the figure/table registry: which grid each paper figure
+//!   sweeps, and drivers that aggregate repeats into CSV + markdown under
+//!   `results/`.
+//! * [`report`] — aggregation (mean/std over seeds) and writers.
+//!
+//! The CLI (`mbkk figures …`, `mbkk run …`, `mbkk gamma-table`) is a thin
+//! wrapper over this module; `examples/paper_figures.rs` is the end-to-end
+//! driver.
+
+pub mod experiment;
+pub mod figures;
+pub mod report;
+
+pub use experiment::{AlgoSpec, KernelSpec, RunOutcome, RunSpec};
+pub use figures::{figure_ids, run_figure, run_gamma_table, FigureSpec};

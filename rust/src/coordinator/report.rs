@@ -1,0 +1,192 @@
+//! Aggregation over repeated runs and CSV/markdown report writers.
+
+use super::experiment::RunOutcome;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Mean/std summary of a metric over repeats.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Stat {
+    pub mean: f64,
+    pub std: f64,
+}
+
+impl Stat {
+    pub fn of(values: &[f64]) -> Stat {
+        let vals: Vec<f64> = values.iter().copied().filter(|v| v.is_finite()).collect();
+        if vals.is_empty() {
+            return Stat { mean: f64::NAN, std: f64::NAN };
+        }
+        let n = vals.len() as f64;
+        let mean = vals.iter().sum::<f64>() / n;
+        let var = if vals.len() > 1 {
+            vals.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / (n - 1.0)
+        } else {
+            0.0
+        };
+        Stat { mean, std: var.sqrt() }
+    }
+}
+
+/// One aggregated row of a figure grid.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub figure: String,
+    pub dataset: String,
+    pub kernel: String,
+    pub algo: String,
+    pub batch_size: usize,
+    pub tau: usize,
+    pub repeats: usize,
+    pub ari: Stat,
+    pub nmi: Stat,
+    pub objective: Stat,
+    pub cluster_secs: Stat,
+    pub kernel_secs: f64,
+    pub iterations: Stat,
+    pub gamma: f64,
+}
+
+impl Row {
+    /// Aggregate repeated outcomes into a row.
+    pub fn aggregate(
+        figure: &str,
+        dataset: &str,
+        kernel: &str,
+        algo: &str,
+        batch_size: usize,
+        tau: usize,
+        outcomes: &[RunOutcome],
+    ) -> Row {
+        let pick = |f: fn(&RunOutcome) -> f64| -> Vec<f64> {
+            outcomes.iter().map(f).collect()
+        };
+        Row {
+            figure: figure.to_string(),
+            dataset: dataset.to_string(),
+            kernel: kernel.to_string(),
+            algo: algo.to_string(),
+            batch_size,
+            tau,
+            repeats: outcomes.len(),
+            ari: Stat::of(&pick(|o| o.ari)),
+            nmi: Stat::of(&pick(|o| o.nmi)),
+            objective: Stat::of(&pick(|o| o.objective)),
+            cluster_secs: Stat::of(&pick(|o| o.cluster_secs)),
+            kernel_secs: outcomes.first().map(|o| o.kernel_secs).unwrap_or(0.0),
+            iterations: Stat::of(&pick(|o| o.iterations as f64)),
+            gamma: outcomes.first().map(|o| o.gamma).unwrap_or(f64::NAN),
+        }
+    }
+}
+
+pub const CSV_HEADER: &str = "figure,dataset,kernel,algo,b,tau,repeats,\
+ari_mean,ari_std,nmi_mean,nmi_std,obj_mean,obj_std,\
+cluster_secs_mean,cluster_secs_std,kernel_secs,iters_mean,gamma";
+
+/// Render rows as CSV (with header).
+pub fn to_csv(rows: &[Row]) -> String {
+    let mut out = String::from(CSV_HEADER);
+    out.push('\n');
+    for r in rows {
+        out.push_str(&format!(
+            "{},{},{},{},{},{},{},{:.4},{:.4},{:.4},{:.4},{:.6},{:.6},{:.4},{:.4},{:.4},{:.1},{:.6}\n",
+            r.figure, r.dataset, r.kernel, r.algo, r.batch_size, r.tau, r.repeats,
+            r.ari.mean, r.ari.std, r.nmi.mean, r.nmi.std,
+            r.objective.mean, r.objective.std,
+            r.cluster_secs.mean, r.cluster_secs.std, r.kernel_secs,
+            r.iterations.mean, r.gamma,
+        ));
+    }
+    out
+}
+
+/// Render rows as a GitHub-flavoured markdown table (the human-readable
+/// companion of the CSV).
+pub fn to_markdown(rows: &[Row]) -> String {
+    let mut out = String::from(
+        "| algo | b | τ | ARI | NMI | cluster s | kernel s |\n|---|---|---|---|---|---|---|\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "| {} | {} | {} | {:.3}±{:.3} | {:.3}±{:.3} | {:.2} | {:.2} |\n",
+            r.algo,
+            r.batch_size,
+            if r.tau == usize::MAX { "∞".to_string() } else { r.tau.to_string() },
+            r.ari.mean, r.ari.std, r.nmi.mean, r.nmi.std,
+            r.cluster_secs.mean, r.kernel_secs,
+        ));
+    }
+    out
+}
+
+/// Write CSV + markdown next to each other under `out_dir`.
+pub fn write_reports(out_dir: &Path, stem: &str, rows: &[Row]) -> Result<()> {
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("creating {}", out_dir.display()))?;
+    std::fs::write(out_dir.join(format!("{stem}.csv")), to_csv(rows))?;
+    std::fs::write(out_dir.join(format!("{stem}.md")), to_markdown(rows))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(ari: f64, secs: f64) -> RunOutcome {
+        RunOutcome {
+            ari,
+            nmi: ari * 0.9,
+            objective: 1.0 - ari,
+            iterations: 100,
+            converged: false,
+            cluster_secs: secs,
+            kernel_secs: 2.0,
+            gamma: 1.0,
+        }
+    }
+
+    #[test]
+    fn stat_mean_std() {
+        let s = Stat::of(&[1.0, 2.0, 3.0]);
+        assert_eq!(s.mean, 2.0);
+        assert!((s.std - 1.0).abs() < 1e-12);
+        let single = Stat::of(&[5.0]);
+        assert_eq!(single.mean, 5.0);
+        assert_eq!(single.std, 0.0);
+        assert!(Stat::of(&[]).mean.is_nan());
+        // NaNs are filtered, not propagated.
+        let with_nan = Stat::of(&[1.0, f64::NAN, 3.0]);
+        assert_eq!(with_nan.mean, 2.0);
+    }
+
+    #[test]
+    fn aggregate_and_render() {
+        let rows = vec![Row::aggregate(
+            "fig1",
+            "synth_har",
+            "gaussian",
+            "btrunc-kkm",
+            1024,
+            200,
+            &[outcome(0.8, 1.0), outcome(0.9, 2.0)],
+        )];
+        let csv = to_csv(&rows);
+        assert!(csv.starts_with("figure,"));
+        assert!(csv.contains("fig1,synth_har,gaussian,btrunc-kkm,1024,200,2"));
+        assert!(csv.contains("0.8500")); // ari mean
+        let md = to_markdown(&rows);
+        assert!(md.contains("btrunc-kkm"));
+        assert!(md.contains("0.850±"));
+    }
+
+    #[test]
+    fn write_reports_creates_files() {
+        let dir = std::env::temp_dir().join("mbkk_report_test");
+        let rows = vec![Row::aggregate("t", "d", "k", "a", 1, 1, &[outcome(0.5, 0.1)])];
+        write_reports(&dir, "sample", &rows).unwrap();
+        assert!(dir.join("sample.csv").exists());
+        assert!(dir.join("sample.md").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,146 @@
+//! Coreset composition (paper §2: "our results are *complementary* to
+//! coresets … we can compose our method with these techniques").
+//!
+//! A coreset is a weighted subset of X whose clustering cost approximates
+//! the full dataset's. This module provides the two standard lightweight
+//! constructions and the plumbing to run any of the (weighted) kernel
+//! k-means algorithms on top:
+//!
+//! * [`uniform_coreset`] — m uniform points, each weighted n/m. Unbiased
+//!   for every fixed center set; the baseline construction.
+//! * [`sensitivity_coreset`] — importance sampling à la Feldman et al.:
+//!   points are sampled proportionally to their distance to a rough
+//!   solution (a k-means++ seeding) plus a uniform floor, and weighted by
+//!   inverse probability. Sharper on imbalanced data.
+
+use super::Dataset;
+use crate::util::rng::Rng;
+
+/// Uniform coreset: `m` points sampled without replacement, weight `n/m`
+/// each (existing weights are scaled, preserving total mass).
+pub fn uniform_coreset(ds: &Dataset, m: usize, rng: &mut Rng) -> Dataset {
+    let m = m.clamp(1, ds.n);
+    let idx = rng.sample_without_replacement(ds.n, m);
+    let mut out = ds.subset(&idx);
+    let scale = ds.n as f64 / m as f64;
+    let weights = match &out.weights {
+        Some(w) => w.iter().map(|&x| x * scale).collect(),
+        None => vec![scale; m],
+    };
+    out.weights = Some(weights);
+    out.name = format!("{}:coreset{m}", ds.name);
+    out
+}
+
+/// Sensitivity-sampling coreset: sample `m` points with replacement with
+/// probability `p_i ∝ d²(x_i, S) + mean`, where S is a k-means++ seeding of
+/// size `k`; weight each sampled point `1/(m·p_i)` (duplicates merge by
+/// accumulating weight).
+pub fn sensitivity_coreset(ds: &Dataset, m: usize, k: usize, rng: &mut Rng) -> Dataset {
+    assert!(k >= 1 && ds.n >= 1);
+    let m = m.clamp(1, ds.n * 4);
+    // Rough solution: k-means++ seeds on raw features.
+    let seeds = crate::kmeans::kmeanspp_features(ds, k.min(ds.n), rng);
+    let d = ds.d;
+    let k_eff = seeds.len() / d;
+    let mut dist2 = vec![0.0f64; ds.n];
+    for i in 0..ds.n {
+        let mut best = f64::INFINITY;
+        for j in 0..k_eff {
+            let mut s = 0.0;
+            for (x, c) in ds.row(i).iter().zip(&seeds[j * d..(j + 1) * d]) {
+                let diff = *x as f64 - c;
+                s += diff * diff;
+            }
+            best = best.min(s);
+        }
+        dist2[i] = best;
+    }
+    let mean = dist2.iter().sum::<f64>() / ds.n as f64;
+    let sens: Vec<f64> = dist2.iter().map(|&v| v + mean.max(1e-12)).collect();
+    let total: f64 = sens.iter().sum();
+
+    // Sample with replacement; merge duplicates by weight accumulation.
+    let mut weight_of: std::collections::BTreeMap<usize, f64> = Default::default();
+    for _ in 0..m {
+        let i = rng.weighted_choice(&sens);
+        let p = sens[i] / total;
+        *weight_of.entry(i).or_insert(0.0) += ds.weight(i) / (m as f64 * p);
+    }
+    let idx: Vec<usize> = weight_of.keys().copied().collect();
+    let mut out = ds.subset(&idx);
+    out.weights = Some(weight_of.values().copied().collect());
+    out.name = format!("{}:scoreset{m}", ds.name);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{blobs, SyntheticSpec};
+    use crate::kernels::{Gram, KernelFunction};
+    use crate::kkmeans::{TruncatedConfig, TruncatedMiniBatchKernelKMeans};
+    use crate::metrics::ari;
+
+    fn fixture() -> Dataset {
+        let mut rng = Rng::seeded(61);
+        blobs(
+            &SyntheticSpec::new(2000, 6, 4).with_std(0.4).with_separation(6.0),
+            &mut rng,
+        )
+    }
+
+    #[test]
+    fn uniform_coreset_preserves_mass() {
+        let ds = fixture();
+        let mut rng = Rng::seeded(1);
+        let cs = uniform_coreset(&ds, 200, &mut rng);
+        assert_eq!(cs.n, 200);
+        let mass: f64 = cs.weights.as_ref().unwrap().iter().sum();
+        assert!((mass - ds.n as f64).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sensitivity_coreset_unbiased_mass() {
+        let ds = fixture();
+        let mut rng = Rng::seeded(2);
+        let cs = sensitivity_coreset(&ds, 400, 4, &mut rng);
+        assert!(cs.n <= 400);
+        let mass: f64 = cs.weights.as_ref().unwrap().iter().sum();
+        // E[mass] = n; inverse-probability weights have heavy tails, so the
+        // tolerance is loose.
+        let rel = (mass - ds.n as f64).abs() / (ds.n as f64);
+        assert!(rel < 0.5, "mass={mass} vs n={}", ds.n);
+    }
+
+    #[test]
+    fn clustering_composes_with_coreset() {
+        // Cluster the coreset with weighted Algorithm 2, then judge the
+        // *coreset* labels against ground truth restricted to the coreset.
+        let ds = fixture();
+        let mut rng = Rng::seeded(3);
+        let cs = uniform_coreset(&ds, 400, &mut rng);
+        let gram = Gram::on_the_fly(&cs, KernelFunction::Gaussian { kappa: 12.0 });
+        let cfg = TruncatedConfig {
+            k: 4,
+            batch_size: 128,
+            tau: 100,
+            max_iters: 60,
+            weights: cs.weights.clone(),
+            ..Default::default()
+        };
+        let res = TruncatedMiniBatchKernelKMeans::new(cfg).fit(&gram, &mut rng);
+        let truth = cs.labels.as_ref().unwrap();
+        let score = ari(truth, &res.assignments);
+        assert!(score > 0.85, "coreset clustering ARI={score}");
+    }
+
+    #[test]
+    fn coreset_of_everything_is_identity_weighted() {
+        let ds = fixture();
+        let mut rng = Rng::seeded(4);
+        let cs = uniform_coreset(&ds, ds.n, &mut rng);
+        assert_eq!(cs.n, ds.n);
+        assert!(cs.weights.as_ref().unwrap().iter().all(|&w| (w - 1.0).abs() < 1e-9));
+    }
+}

@@ -1,0 +1,157 @@
+//! CSV load/save for datasets.
+//!
+//! Format: one row per point; numeric feature columns; an optional final
+//! `label` column (detected via header or `label_col`). This lets users run
+//! the CLI on their own data (`mbkk run --csv path.csv`), and lets the
+//! figure pipeline persist generated datasets for inspection.
+
+use super::Dataset;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Load a dataset from a CSV file. If the first line is non-numeric it is
+/// treated as a header; a column named `label` (case-insensitive) becomes
+/// the ground-truth labels.
+pub fn load_csv(path: &Path) -> Result<Dataset> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().to_string())
+        .unwrap_or_else(|| "csv".to_string());
+    parse_csv(&name, &text)
+}
+
+/// Parse CSV text (exposed for tests).
+pub fn parse_csv(name: &str, text: &str) -> Result<Dataset> {
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty()).peekable();
+    let first = match lines.peek() {
+        Some(l) => *l,
+        None => bail!("empty csv"),
+    };
+    let first_fields: Vec<&str> = first.split(',').map(str::trim).collect();
+    let has_header = first_fields.iter().any(|f| f.parse::<f64>().is_err());
+
+    let mut label_col: Option<usize> = None;
+    if has_header {
+        for (i, f) in first_fields.iter().enumerate() {
+            if f.eq_ignore_ascii_case("label") || f.eq_ignore_ascii_case("class") {
+                label_col = Some(i);
+            }
+        }
+        lines.next();
+    }
+
+    let mut features: Vec<f32> = Vec::new();
+    let mut labels: Vec<usize> = Vec::new();
+    let mut d: Option<usize> = None;
+    let mut n = 0usize;
+    for (lineno, line) in lines.enumerate() {
+        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+        let width = fields.len();
+        match d {
+            None => d = Some(width),
+            Some(w) if w != width => {
+                bail!("row {} has {} fields, expected {}", lineno + 1, width, w)
+            }
+            _ => {}
+        }
+        for (i, f) in fields.iter().enumerate() {
+            if Some(i) == label_col {
+                let lab: f64 = f.parse().with_context(|| format!("bad label {f:?}"))?;
+                labels.push(lab as usize);
+            } else {
+                let v: f32 = f
+                    .parse()
+                    .with_context(|| format!("row {} col {i}: bad number {f:?}", lineno + 1))?;
+                features.push(v);
+            }
+        }
+        n += 1;
+    }
+    let width = d.context("csv has no data rows")?;
+    let feat_d = width - usize::from(label_col.is_some());
+    let mut ds = Dataset::new(name, features, n, feat_d);
+    if label_col.is_some() {
+        ds = ds.with_labels(labels);
+    }
+    Ok(ds)
+}
+
+/// Write a dataset (features + optional label column) to CSV.
+pub fn save_csv(ds: &Dataset, path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut out = String::new();
+    for j in 0..ds.d {
+        if j > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("f{j}"));
+    }
+    if ds.labels.is_some() {
+        out.push_str(",label");
+    }
+    out.push('\n');
+    for i in 0..ds.n {
+        for (j, v) in ds.row(i).iter().enumerate() {
+            if j > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("{v}"));
+        }
+        if let Some(ls) = &ds.labels {
+            out.push_str(&format!(",{}", ls[i]));
+        }
+        out.push('\n');
+    }
+    std::fs::write(path, out).with_context(|| format!("writing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_with_header_and_labels() {
+        let ds = parse_csv("t", "f0,f1,label\n1,2,0\n3,4,1\n").unwrap();
+        assert_eq!((ds.n, ds.d), (2, 2));
+        assert_eq!(ds.row(1), &[3.0, 4.0]);
+        assert_eq!(ds.labels.as_ref().unwrap(), &vec![0, 1]);
+    }
+
+    #[test]
+    fn parse_headerless() {
+        let ds = parse_csv("t", "1.5,2.5\n3.5,4.5\n").unwrap();
+        assert_eq!((ds.n, ds.d), (2, 2));
+        assert!(ds.labels.is_none());
+    }
+
+    #[test]
+    fn ragged_rows_error() {
+        assert!(parse_csv("t", "1,2\n3\n").is_err());
+    }
+
+    #[test]
+    fn garbage_errors() {
+        assert!(parse_csv("t", "1,foo\n").is_err());
+        assert!(parse_csv("t", "").is_err());
+        assert!(parse_csv("t", "a,b\n").is_err()); // header but no rows
+    }
+
+    #[test]
+    fn roundtrip_via_tempfile() {
+        let dir = std::env::temp_dir().join("mbkk_csv_test");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("roundtrip.csv");
+        let ds = Dataset::new("rt", vec![1.0, 2.0, 3.0, 4.0], 2, 2).with_labels(vec![1, 0]);
+        save_csv(&ds, &path).unwrap();
+        let back = load_csv(&path).unwrap();
+        assert_eq!(back.n, 2);
+        assert_eq!(back.d, 2);
+        assert_eq!(back.row(0), ds.row(0));
+        assert_eq!(back.labels, ds.labels);
+        let _ = std::fs::remove_file(&path);
+    }
+}

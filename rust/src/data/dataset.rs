@@ -1,0 +1,149 @@
+//! The core dataset container.
+
+/// A dataset of `n` points with `d` features each, stored row-major in f32
+/// (matching the compute path), plus optional integer ground-truth labels
+/// (used only for ARI/NMI evaluation, never by the clustering algorithms)
+/// and optional per-point weights (the paper's weighted variant).
+
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    /// Row-major features, length `n * d`.
+    pub features: Vec<f32>,
+    pub n: usize,
+    pub d: usize,
+    /// Ground-truth cluster labels (evaluation only).
+    pub labels: Option<Vec<usize>>,
+    /// Optional per-point weights for the weighted kernel k-means variant;
+    /// `None` means uniform weight 1.
+    pub weights: Option<Vec<f64>>,
+}
+
+impl Dataset {
+    pub fn new(name: &str, features: Vec<f32>, n: usize, d: usize) -> Dataset {
+        assert_eq!(features.len(), n * d, "features length != n*d");
+        Dataset { name: name.to_string(), features, n, d, labels: None, weights: None }
+    }
+
+    pub fn with_labels(mut self, labels: Vec<usize>) -> Dataset {
+        assert_eq!(labels.len(), self.n, "labels length != n");
+        self.labels = Some(labels);
+        self
+    }
+
+    pub fn with_weights(mut self, weights: Vec<f64>) -> Dataset {
+        assert_eq!(weights.len(), self.n, "weights length != n");
+        assert!(weights.iter().all(|&w| w > 0.0), "weights must be positive");
+        self.weights = Some(weights);
+        self
+    }
+
+    /// Row `i` as a feature slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.n);
+        &self.features[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Weight of point `i` (1.0 when unweighted).
+    #[inline]
+    pub fn weight(&self, i: usize) -> f64 {
+        self.weights.as_ref().map(|w| w[i]).unwrap_or(1.0)
+    }
+
+    /// Number of distinct ground-truth labels (0 when unlabeled).
+    pub fn num_classes(&self) -> usize {
+        self.labels
+            .as_ref()
+            .map(|ls| ls.iter().copied().max().map(|m| m + 1).unwrap_or(0))
+            .unwrap_or(0)
+    }
+
+    /// Squared Euclidean distance between rows `i` and `j`.
+    #[inline]
+    pub fn sqdist(&self, i: usize, j: usize) -> f64 {
+        let (a, b) = (self.row(i), self.row(j));
+        let mut s = 0.0f64;
+        for (x, y) in a.iter().zip(b.iter()) {
+            let diff = (*x - *y) as f64;
+            s += diff * diff;
+        }
+        s
+    }
+
+    /// Subsample the first `m` points of a deterministic permutation given by
+    /// `order` (callers pass an RNG-shuffled index vector). Keeps labels and
+    /// weights aligned.
+    pub fn subset(&self, order: &[usize]) -> Dataset {
+        let mut features = Vec::with_capacity(order.len() * self.d);
+        for &i in order {
+            features.extend_from_slice(self.row(i));
+        }
+        let labels = self
+            .labels
+            .as_ref()
+            .map(|ls| order.iter().map(|&i| ls[i]).collect());
+        let weights = self
+            .weights
+            .as_ref()
+            .map(|ws| order.iter().map(|&i| ws[i]).collect::<Vec<_>>());
+        let mut out = Dataset::new(&self.name, features, order.len(), self.d);
+        out.labels = labels;
+        out.weights = weights;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset::new("t", vec![0.0, 0.0, 3.0, 4.0, 1.0, 1.0], 3, 2)
+            .with_labels(vec![0, 1, 0])
+    }
+
+    #[test]
+    fn row_access() {
+        let ds = tiny();
+        assert_eq!(ds.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn sqdist_euclidean() {
+        let ds = tiny();
+        assert_eq!(ds.sqdist(0, 1), 25.0);
+        assert_eq!(ds.sqdist(0, 0), 0.0);
+        assert_eq!(ds.sqdist(0, 2), 2.0);
+    }
+
+    #[test]
+    fn num_classes_counts_from_labels() {
+        let ds = tiny();
+        assert_eq!(ds.num_classes(), 2);
+        let un = Dataset::new("u", vec![0.0], 1, 1);
+        assert_eq!(un.num_classes(), 0);
+    }
+
+    #[test]
+    fn subset_keeps_alignment() {
+        let ds = tiny().with_weights(vec![1.0, 2.0, 3.0]);
+        let sub = ds.subset(&[2, 0]);
+        assert_eq!(sub.n, 2);
+        assert_eq!(sub.row(0), &[1.0, 1.0]);
+        assert_eq!(sub.labels.as_ref().unwrap(), &vec![0, 0]);
+        assert_eq!(sub.weights.as_ref().unwrap(), &vec![3.0, 1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "features length")]
+    fn shape_mismatch_panics() {
+        let _ = Dataset::new("bad", vec![1.0; 5], 2, 3);
+    }
+
+    #[test]
+    fn default_weight_is_one() {
+        let ds = tiny();
+        assert_eq!(ds.weight(0), 1.0);
+    }
+}

@@ -1,0 +1,16 @@
+//! Dataset pipeline: the [`Dataset`] type, CSV I/O, feature scaling,
+//! synthetic generators, and the registry of paper-proxy datasets.
+//!
+//! The paper evaluates on MNIST, PenDigits, Letters, and HAR (UCI
+//! downloads). This environment has no network, so [`registry`] provides
+//! synthetic proxies with matched `(n, d, k)` and controlled cluster
+//! geometry — see DESIGN.md §3 for the substitution argument.
+
+mod dataset;
+pub mod coreset;
+pub mod csvio;
+pub mod registry;
+pub mod scaling;
+pub mod synthetic;
+
+pub use dataset::Dataset;

@@ -1,0 +1,97 @@
+//! Feature scaling: per-feature standardization (zero mean, unit variance),
+//! matching the preprocessing used for the paper's datasets before kernel
+//! computation.
+
+use super::Dataset;
+
+/// Per-feature mean/std learned from a dataset.
+#[derive(Clone, Debug)]
+pub struct StandardScaler {
+    pub mean: Vec<f64>,
+    pub std: Vec<f64>,
+}
+
+impl StandardScaler {
+    /// Fit on a dataset. Features with zero variance get std 1 (no-op).
+    pub fn fit(ds: &Dataset) -> StandardScaler {
+        let d = ds.d;
+        let mut mean = vec![0.0f64; d];
+        for i in 0..ds.n {
+            for (m, v) in mean.iter_mut().zip(ds.row(i)) {
+                *m += *v as f64;
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= ds.n.max(1) as f64;
+        }
+        let mut var = vec![0.0f64; d];
+        for i in 0..ds.n {
+            for ((s, v), m) in var.iter_mut().zip(ds.row(i)).zip(mean.iter()) {
+                let diff = *v as f64 - m;
+                *s += diff * diff;
+            }
+        }
+        let std = var
+            .into_iter()
+            .map(|s| {
+                let sd = (s / ds.n.max(1) as f64).sqrt();
+                if sd > 1e-12 {
+                    sd
+                } else {
+                    1.0
+                }
+            })
+            .collect();
+        StandardScaler { mean, std }
+    }
+
+    /// Apply in place.
+    pub fn transform(&self, ds: &mut Dataset) {
+        assert_eq!(ds.d, self.mean.len());
+        for i in 0..ds.n {
+            let row = &mut ds.features[i * ds.d..(i + 1) * ds.d];
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = ((*v as f64 - self.mean[j]) / self.std[j]) as f32;
+            }
+        }
+    }
+}
+
+/// Fit + transform convenience.
+pub fn standardize(ds: &mut Dataset) {
+    StandardScaler::fit(ds).transform(ds);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standardize_zero_mean_unit_var() {
+        let mut ds = Dataset::new("t", vec![1.0, 10.0, 2.0, 20.0, 3.0, 30.0], 3, 2);
+        standardize(&mut ds);
+        for j in 0..2 {
+            let mut m = 0.0;
+            let mut v = 0.0;
+            for i in 0..3 {
+                m += ds.row(i)[j] as f64;
+            }
+            m /= 3.0;
+            for i in 0..3 {
+                v += (ds.row(i)[j] as f64 - m).powi(2);
+            }
+            v /= 3.0;
+            assert!(m.abs() < 1e-6, "mean={m}");
+            assert!((v - 1.0).abs() < 1e-5, "var={v}");
+        }
+    }
+
+    #[test]
+    fn constant_feature_is_noop() {
+        let mut ds = Dataset::new("t", vec![5.0, 1.0, 5.0, 2.0], 2, 2);
+        standardize(&mut ds);
+        // Constant column becomes exactly zero (x - mean = 0), no NaN.
+        assert_eq!(ds.row(0)[0], 0.0);
+        assert!(ds.features.iter().all(|v| v.is_finite()));
+    }
+}

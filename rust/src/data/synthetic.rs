@@ -1,0 +1,254 @@
+//! Synthetic dataset generators.
+//!
+//! These stand in for the paper's UCI datasets (no network in this build)
+//! and additionally provide the *non-linearly-separable* workloads that the
+//! paper's introduction motivates kernel k-means with: concentric rings and
+//! interleaved moons, where plain k-means fails but a Gaussian-kernel
+//! feature space separates the classes.
+
+use super::Dataset;
+use crate::util::rng::Rng;
+
+/// Parameters for the Gaussian-blob generator.
+#[derive(Clone, Debug)]
+pub struct SyntheticSpec {
+    pub n: usize,
+    pub d: usize,
+    pub k: usize,
+    /// Within-cluster standard deviation.
+    pub cluster_std: f64,
+    /// Distance scale between cluster centers.
+    pub separation: f64,
+    /// Fraction of points whose label is resampled uniformly (label noise),
+    /// which caps achievable ARI like real data does.
+    pub label_noise: f64,
+}
+
+impl SyntheticSpec {
+    pub fn new(n: usize, d: usize, k: usize) -> SyntheticSpec {
+        SyntheticSpec { n, d, k, cluster_std: 1.0, separation: 4.0, label_noise: 0.0 }
+    }
+
+    pub fn with_std(mut self, s: f64) -> Self {
+        self.cluster_std = s;
+        self
+    }
+
+    pub fn with_separation(mut self, s: f64) -> Self {
+        self.separation = s;
+        self
+    }
+
+    pub fn with_label_noise(mut self, p: f64) -> Self {
+        self.label_noise = p;
+        self
+    }
+}
+
+/// Isotropic Gaussian blobs: k centers drawn from N(0, separation²·I),
+/// points N(center, cluster_std²·I), cluster sizes multinomial-uniform.
+pub fn blobs(spec: &SyntheticSpec, rng: &mut Rng) -> Dataset {
+    let SyntheticSpec { n, d, k, cluster_std, separation, label_noise } = *spec;
+    assert!(k >= 1 && n >= k);
+    let mut centers = vec![0.0f64; k * d];
+    for c in centers.iter_mut() {
+        *c = rng.normal() * separation;
+    }
+    let mut features = Vec::with_capacity(n * d);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let c = rng.below(k);
+        for j in 0..d {
+            features.push((centers[c * d + j] + rng.normal() * cluster_std) as f32);
+        }
+        let lab = if label_noise > 0.0 && rng.f64() < label_noise {
+            rng.below(k)
+        } else {
+            c
+        };
+        labels.push(lab);
+    }
+    Dataset::new("blobs", features, n, d).with_labels(labels)
+}
+
+/// Concentric rings in the first two dimensions (remaining dimensions are
+/// small-noise): k rings with radii 1, 2, ..., k. Not linearly separable —
+/// the motivating case for kernel k-means.
+pub fn rings(n: usize, d: usize, k: usize, noise: f64, rng: &mut Rng) -> Dataset {
+    assert!(d >= 2 && k >= 1);
+    let mut features = Vec::with_capacity(n * d);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let c = rng.below(k);
+        let radius = (c + 1) as f64;
+        let theta = rng.f64() * std::f64::consts::TAU;
+        features.push((radius * theta.cos() + rng.normal() * noise) as f32);
+        features.push((radius * theta.sin() + rng.normal() * noise) as f32);
+        for _ in 2..d {
+            features.push((rng.normal() * noise) as f32);
+        }
+        labels.push(c);
+    }
+    Dataset::new("rings", features, n, d).with_labels(labels)
+}
+
+/// Two interleaved half-moons (k is fixed at 2), the classic sklearn
+/// `make_moons` workload. Extra dimensions are noise.
+pub fn moons(n: usize, d: usize, noise: f64, rng: &mut Rng) -> Dataset {
+    assert!(d >= 2);
+    let mut features = Vec::with_capacity(n * d);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let c = rng.below(2);
+        let t = rng.f64() * std::f64::consts::PI;
+        let (x, y) = if c == 0 {
+            (t.cos(), t.sin())
+        } else {
+            (1.0 - t.cos(), 0.5 - t.sin())
+        };
+        features.push((x + rng.normal() * noise) as f32);
+        features.push((y + rng.normal() * noise) as f32);
+        for _ in 2..d {
+            features.push((rng.normal() * noise) as f32);
+        }
+        labels.push(c);
+    }
+    Dataset::new("moons", features, n, d).with_labels(labels)
+}
+
+/// "Manifold blobs": Gaussian blobs in a low-dimensional latent space pushed
+/// through a random nonlinear map (tanh of a random projection plus a
+/// quadratic warp) into `d` dimensions. This mimics image-like data (MNIST):
+/// clusters live on curved manifolds and are *not* linearly separable in the
+/// ambient space, so kernel methods gain a margin over plain k-means.
+pub fn manifold_blobs(
+    n: usize,
+    latent_d: usize,
+    ambient_d: usize,
+    k: usize,
+    rng: &mut Rng,
+) -> Dataset {
+    assert!(latent_d >= 1 && ambient_d >= latent_d);
+    let latent = blobs(
+        &SyntheticSpec::new(n, latent_d, k)
+            .with_std(0.7)
+            .with_separation(2.0),
+        rng,
+    );
+    // Random projection W: latent_d → ambient_d and quadratic mixing.
+    let mut w = vec![0.0f64; latent_d * ambient_d];
+    for v in w.iter_mut() {
+        *v = rng.normal() / (latent_d as f64).sqrt();
+    }
+    let mut w2 = vec![0.0f64; latent_d * ambient_d];
+    for v in w2.iter_mut() {
+        *v = rng.normal() / latent_d as f64;
+    }
+    let mut features = Vec::with_capacity(n * ambient_d);
+    for i in 0..n {
+        let z = latent.row(i);
+        for j in 0..ambient_d {
+            let mut lin = 0.0f64;
+            let mut quad = 0.0f64;
+            for (l, &zl) in z.iter().enumerate() {
+                lin += w[l * ambient_d + j] * zl as f64;
+                quad += w2[l * ambient_d + j] * (zl as f64) * (zl as f64);
+            }
+            features.push((lin.tanh() + 0.5 * quad.tanh() + rng.normal() * 0.05) as f32);
+        }
+    }
+    Dataset::new("manifold_blobs", features, n, ambient_d)
+        .with_labels(latent.labels.unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blobs_shapes_and_labels() {
+        let mut rng = Rng::seeded(1);
+        let ds = blobs(&SyntheticSpec::new(500, 4, 3), &mut rng);
+        assert_eq!((ds.n, ds.d), (500, 4));
+        let labels = ds.labels.as_ref().unwrap();
+        assert_eq!(labels.len(), 500);
+        assert!(labels.iter().all(|&l| l < 3));
+        // All three clusters represented.
+        assert_eq!(ds.num_classes(), 3);
+    }
+
+    #[test]
+    fn blobs_are_separated_when_asked() {
+        let mut rng = Rng::seeded(2);
+        let ds = blobs(
+            &SyntheticSpec::new(600, 8, 3).with_std(0.2).with_separation(10.0),
+            &mut rng,
+        );
+        let labels = ds.labels.as_ref().unwrap();
+        // Within-cluster distances should be far below between-cluster ones.
+        let mut within = 0.0;
+        let mut wcount = 0.0;
+        let mut between = 0.0;
+        let mut bcount = 0.0;
+        for i in (0..ds.n).step_by(7) {
+            for j in (i + 1..ds.n).step_by(11) {
+                let d2 = ds.sqdist(i, j);
+                if labels[i] == labels[j] {
+                    within += d2;
+                    wcount += 1.0;
+                } else {
+                    between += d2;
+                    bcount += 1.0;
+                }
+            }
+        }
+        assert!(within / wcount < between / bcount / 10.0);
+    }
+
+    #[test]
+    fn rings_have_correct_radii() {
+        let mut rng = Rng::seeded(3);
+        let ds = rings(900, 2, 3, 0.0, &mut rng);
+        let labels = ds.labels.as_ref().unwrap();
+        for i in 0..ds.n {
+            let r = ((ds.row(i)[0] as f64).powi(2) + (ds.row(i)[1] as f64).powi(2)).sqrt();
+            assert!((r - (labels[i] + 1) as f64).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn moons_two_classes() {
+        let mut rng = Rng::seeded(4);
+        let ds = moons(400, 3, 0.05, &mut rng);
+        assert_eq!(ds.num_classes(), 2);
+        assert_eq!(ds.d, 3);
+    }
+
+    #[test]
+    fn manifold_blobs_bounded_features() {
+        let mut rng = Rng::seeded(5);
+        let ds = manifold_blobs(300, 4, 32, 5, &mut rng);
+        assert_eq!((ds.n, ds.d), (300, 32));
+        // tanh-based map keeps features bounded.
+        assert!(ds.features.iter().all(|v| v.abs() < 2.5));
+    }
+
+    #[test]
+    fn label_noise_flips_some_labels() {
+        let mut rng = Rng::seeded(6);
+        let clean = blobs(&SyntheticSpec::new(2000, 2, 4).with_separation(50.0), &mut rng);
+        let mut rng2 = Rng::seeded(6);
+        let noisy = blobs(
+            &SyntheticSpec::new(2000, 2, 4).with_separation(50.0).with_label_noise(0.3),
+            &mut rng2,
+        );
+        let same = clean
+            .labels
+            .unwrap()
+            .iter()
+            .zip(noisy.labels.unwrap().iter())
+            .filter(|(a, b)| a == b)
+            .count();
+        assert!(same < 2000);
+    }
+}

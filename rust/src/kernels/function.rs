@@ -1,0 +1,137 @@
+//! Closed-form kernel functions evaluated on feature vectors.
+
+use crate::data::Dataset;
+use crate::util::rng::Rng;
+
+/// A positive-definite kernel `K(x, y)` computable from raw features.
+///
+/// The Gaussian kernel follows the paper's parameterization
+/// `K(x,y) = exp(−‖x−y‖² / κ)` (κ plays the role usually written 2σ²).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum KernelFunction {
+    /// `exp(−‖x−y‖²/κ)` — normalized: K(x,x) = 1, so γ = 1.
+    Gaussian { kappa: f64 },
+    /// `exp(−‖x−y‖/σ)` — normalized: K(x,x) = 1, so γ = 1.
+    Laplacian { sigma: f64 },
+    /// `(g·⟨x,y⟩ + c)^p`.
+    Polynomial { gamma: f64, coef0: f64, degree: u32 },
+    /// `⟨x,y⟩` — plain inner product (kernel k-means degenerates to k-means).
+    Linear,
+}
+
+impl KernelFunction {
+    /// Gaussian kernel with κ from the mean-pairwise-squared-distance
+    /// heuristic of Wang et al. (2019), as used in the paper's §6.
+    pub fn gaussian_with_heuristic_sigma(ds: &Dataset, rng: &mut Rng) -> KernelFunction {
+        KernelFunction::Gaussian { kappa: super::sigma::kappa_heuristic(ds, rng) }
+    }
+
+    /// Evaluate on two feature slices.
+    #[inline]
+    pub fn eval(&self, a: &[f32], b: &[f32]) -> f64 {
+        match *self {
+            KernelFunction::Gaussian { kappa } => {
+                let mut s = 0.0f64;
+                for (x, y) in a.iter().zip(b.iter()) {
+                    let d = (*x - *y) as f64;
+                    s += d * d;
+                }
+                (-s / kappa).exp()
+            }
+            KernelFunction::Laplacian { sigma } => {
+                let mut s = 0.0f64;
+                for (x, y) in a.iter().zip(b.iter()) {
+                    let d = (*x - *y) as f64;
+                    s += d * d;
+                }
+                (-s.sqrt() / sigma).exp()
+            }
+            KernelFunction::Polynomial { gamma, coef0, degree } => {
+                let mut s = 0.0f64;
+                for (x, y) in a.iter().zip(b.iter()) {
+                    s += (*x as f64) * (*y as f64);
+                }
+                (gamma * s + coef0).powi(degree as i32)
+            }
+            KernelFunction::Linear => {
+                let mut s = 0.0f64;
+                for (x, y) in a.iter().zip(b.iter()) {
+                    s += (*x as f64) * (*y as f64);
+                }
+                s
+            }
+        }
+    }
+
+    /// K(x, x) without touching a second row.
+    #[inline]
+    pub fn eval_self(&self, a: &[f32]) -> f64 {
+        match *self {
+            KernelFunction::Gaussian { .. } | KernelFunction::Laplacian { .. } => 1.0,
+            _ => self.eval(a, a),
+        }
+    }
+
+    /// Whether K(x,x) = 1 for all x (γ = 1 normalized kernels).
+    pub fn is_normalized(&self) -> bool {
+        matches!(
+            self,
+            KernelFunction::Gaussian { .. } | KernelFunction::Laplacian { .. }
+        )
+    }
+
+    /// Short display name for reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelFunction::Gaussian { .. } => "gaussian",
+            KernelFunction::Laplacian { .. } => "laplacian",
+            KernelFunction::Polynomial { .. } => "polynomial",
+            KernelFunction::Linear => "linear",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gaussian_basics() {
+        let k = KernelFunction::Gaussian { kappa: 2.0 };
+        let a = [0.0f32, 0.0];
+        let b = [1.0f32, 1.0];
+        assert!((k.eval(&a, &a) - 1.0).abs() < 1e-12);
+        assert!((k.eval(&a, &b) - (-1.0f64).exp()).abs() < 1e-12); // ‖a−b‖²=2, /κ=1
+        assert_eq!(k.eval(&a, &b), k.eval(&b, &a));
+    }
+
+    #[test]
+    fn gaussian_decreases_with_distance() {
+        let k = KernelFunction::Gaussian { kappa: 1.0 };
+        let a = [0.0f32];
+        assert!(k.eval(&a, &[1.0]) > k.eval(&a, &[2.0]));
+        assert!(k.eval(&a, &[10.0]) > 0.0);
+    }
+
+    #[test]
+    fn laplacian_normalized() {
+        let k = KernelFunction::Laplacian { sigma: 1.0 };
+        assert_eq!(k.eval_self(&[3.0, 4.0]), 1.0);
+        assert!((k.eval(&[0.0, 0.0], &[3.0, 4.0]) - (-5.0f64).exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn polynomial_and_linear() {
+        let p = KernelFunction::Polynomial { gamma: 1.0, coef0: 1.0, degree: 2 };
+        assert_eq!(p.eval(&[1.0, 2.0], &[3.0, 4.0]), (11.0 + 1.0) * 12.0); // (1·11+1)² = 144
+        let l = KernelFunction::Linear;
+        assert_eq!(l.eval(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        assert_eq!(l.eval_self(&[3.0, 4.0]), 25.0);
+    }
+
+    #[test]
+    fn normalization_flags() {
+        assert!(KernelFunction::Gaussian { kappa: 1.0 }.is_normalized());
+        assert!(!KernelFunction::Linear.is_normalized());
+    }
+}

@@ -1,0 +1,220 @@
+//! Gram providers: uniform access to kernel values `K(i, j)` over a dataset,
+//! either evaluated on the fly from features or read from a precomputed
+//! matrix (required for the graph kernels, optional as a cache elsewhere).
+
+use super::KernelFunction;
+use crate::data::Dataset;
+use crate::util::parallel::{par_chunks_mut, par_map_indexed};
+
+/// Access to the (implicit) kernel matrix of a dataset.
+pub enum Gram<'a> {
+    /// Evaluate `K(x_i, x_j)` from features on demand.
+    OnTheFly { ds: &'a Dataset, func: KernelFunction, diag: Vec<f64> },
+    /// Dense precomputed matrix (row-major, f32 storage to halve memory;
+    /// kernel values are O(1)-scaled so f32 is ample).
+    Precomputed { name: String, n: usize, data: Vec<f32>, diag: Vec<f64> },
+}
+
+impl<'a> Gram<'a> {
+    /// Wrap a dataset + kernel function.
+    pub fn on_the_fly(ds: &'a Dataset, func: KernelFunction) -> Gram<'a> {
+        let diag = if func.is_normalized() {
+            vec![1.0; ds.n]
+        } else {
+            (0..ds.n).map(|i| func.eval_self(ds.row(i))).collect()
+        };
+        Gram::OnTheFly { ds, func, diag }
+    }
+
+    /// Wrap an explicit kernel matrix (row-major, length n²).
+    pub fn precomputed(name: &str, n: usize, data: Vec<f32>) -> Gram<'static> {
+        assert_eq!(data.len(), n * n, "kernel matrix must be n×n");
+        let diag = (0..n).map(|i| data[i * n + i] as f64).collect();
+        Gram::Precomputed { name: name.to_string(), n, data, diag }
+    }
+
+    /// Materialize an on-the-fly gram into a dense matrix (used by the
+    /// full-batch baseline, which touches all n² entries every iteration).
+    /// Computed in parallel over rows, exploiting symmetry.
+    pub fn materialize(&self) -> Gram<'static> {
+        let n = self.n();
+        let mut data = vec![0.0f32; n * n];
+        match self {
+            Gram::Precomputed { name, data: src, .. } => {
+                data.copy_from_slice(src);
+                Gram::precomputed(name, n, data)
+            }
+            Gram::OnTheFly { ds, func, .. } => {
+                par_chunks_mut(&mut data, |start, chunk| {
+                    // chunks are element-aligned; recover (row, col) spans.
+                    let mut idx = start;
+                    for v in chunk.iter_mut() {
+                        let (i, j) = (idx / n, idx % n);
+                        *v = func.eval(ds.row(i), ds.row(j)) as f32;
+                        idx += 1;
+                    }
+                });
+                Gram::precomputed(&format!("{}:{}", ds.name, func.name()), n, data)
+            }
+        }
+    }
+
+    /// Number of points.
+    pub fn n(&self) -> usize {
+        match self {
+            Gram::OnTheFly { ds, .. } => ds.n,
+            Gram::Precomputed { n, .. } => *n,
+        }
+    }
+
+    /// Kernel value `K(x_i, x_j)`.
+    #[inline]
+    pub fn eval(&self, i: usize, j: usize) -> f64 {
+        match self {
+            Gram::OnTheFly { ds, func, .. } => func.eval(ds.row(i), ds.row(j)),
+            Gram::Precomputed { n, data, .. } => data[i * n + j] as f64,
+        }
+    }
+
+    /// `K(x_i, x_i)` (cached).
+    #[inline]
+    pub fn self_k(&self, i: usize) -> f64 {
+        match self {
+            Gram::OnTheFly { diag, .. } | Gram::Precomputed { diag, .. } => diag[i],
+        }
+    }
+
+    /// γ = max_i ‖φ(x_i)‖ = max_i √K(x_i,x_i) — the parameter of Theorem 1.
+    pub fn gamma(&self) -> f64 {
+        let diag = match self {
+            Gram::OnTheFly { diag, .. } | Gram::Precomputed { diag, .. } => diag,
+        };
+        diag.iter().cloned().fold(0.0f64, f64::max).max(0.0).sqrt()
+    }
+
+    /// Dense block `K(rows, cols)` in row-major order (len = rows·cols),
+    /// computed in parallel. This is the native-backend analogue of the L1
+    /// Pallas gram kernel.
+    pub fn block(&self, rows: &[usize], cols: &[usize]) -> Vec<f64> {
+        let nc = cols.len();
+        if rows.len() * nc == 0 {
+            return Vec::new();
+        }
+        let out = par_map_indexed(rows.len(), |r| {
+            let i = rows[r];
+            let mut row = Vec::with_capacity(nc);
+            match self {
+                Gram::OnTheFly { ds, func, .. } => {
+                    let xi = ds.row(i);
+                    for &j in cols {
+                        row.push(func.eval(xi, ds.row(j)));
+                    }
+                }
+                Gram::Precomputed { n, data, .. } => {
+                    let base = i * n;
+                    for &j in cols {
+                        row.push(data[base + j] as f64);
+                    }
+                }
+            }
+            row
+        });
+        out.into_iter().flatten().collect()
+    }
+
+    /// Fast path: the full i-th row of a *materialized* gram as an f32
+    /// slice (`None` for on-the-fly grams). Hot loops hoist this outside
+    /// their inner loop to skip per-element enum dispatch.
+    #[inline]
+    pub fn row_slice(&self, i: usize) -> Option<&[f32]> {
+        match self {
+            Gram::Precomputed { n, data, .. } => Some(&data[i * n..(i + 1) * n]),
+            Gram::OnTheFly { .. } => None,
+        }
+    }
+
+    /// Display name for reports.
+    pub fn label(&self) -> String {
+        match self {
+            Gram::OnTheFly { ds, func, .. } => format!("{}:{}", ds.name, func.name()),
+            Gram::Precomputed { name, .. } => name.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{blobs, SyntheticSpec};
+    use crate::util::rng::Rng;
+
+    fn fixture() -> (Dataset, KernelFunction) {
+        let mut rng = Rng::seeded(11);
+        let ds = blobs(&SyntheticSpec::new(40, 3, 2), &mut rng);
+        (ds, KernelFunction::Gaussian { kappa: 4.0 })
+    }
+
+    #[test]
+    fn on_the_fly_matches_direct_eval() {
+        let (ds, f) = fixture();
+        let g = Gram::on_the_fly(&ds, f);
+        assert_eq!(g.n(), 40);
+        assert!((g.eval(3, 7) - f.eval(ds.row(3), ds.row(7))).abs() < 1e-15);
+        assert_eq!(g.self_k(5), 1.0);
+        assert!((g.gamma() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn materialize_agrees_with_on_the_fly() {
+        let (ds, f) = fixture();
+        let g = Gram::on_the_fly(&ds, f);
+        let m = g.materialize();
+        for i in (0..40).step_by(3) {
+            for j in (0..40).step_by(5) {
+                assert!((g.eval(i, j) - m.eval(i, j)).abs() < 1e-6, "({i},{j})");
+            }
+        }
+        assert!((m.gamma() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn block_matches_pointwise() {
+        let (ds, f) = fixture();
+        let g = Gram::on_the_fly(&ds, f);
+        let rows = [0, 5, 9];
+        let cols = [1, 2, 3, 4];
+        let blk = g.block(&rows, &cols);
+        assert_eq!(blk.len(), 12);
+        for (r, &i) in rows.iter().enumerate() {
+            for (c, &j) in cols.iter().enumerate() {
+                assert!((blk[r * 4 + c] - g.eval(i, j)).abs() < 1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn precomputed_gamma_from_diag() {
+        let data = vec![4.0f32, 0.5, 0.5, 9.0];
+        let g = Gram::precomputed("t", 2, data);
+        assert_eq!(g.self_k(1), 9.0);
+        assert!((g.gamma() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gram_is_symmetric() {
+        let (ds, f) = fixture();
+        let g = Gram::on_the_fly(&ds, f);
+        for i in 0..10 {
+            for j in 0..10 {
+                assert!((g.eval(i, j) - g.eval(j, i)).abs() < 1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_block() {
+        let (ds, f) = fixture();
+        let g = Gram::on_the_fly(&ds, f);
+        assert!(g.block(&[], &[1, 2]).is_empty());
+    }
+}

@@ -1,0 +1,12 @@
+//! Kernel substrate: kernel functions, gram providers, the graph kernels
+//! (k-nn and heat) from the paper's Appendix C, the σ/κ bandwidth heuristic
+//! (Wang et al. 2019), and the γ = max‖φ(x)‖ statistic that parameterizes
+//! Theorem 1.
+
+mod function;
+mod gram;
+pub mod graph;
+pub mod sigma;
+
+pub use function::KernelFunction;
+pub use gram::Gram;

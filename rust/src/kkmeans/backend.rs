@@ -1,0 +1,176 @@
+//! The assignment-step backend abstraction.
+//!
+//! One iteration of Algorithm 2 needs the `b × k` matrix of squared
+//! feature-space distances between batch points and truncated centers:
+//!
+//! `Δ(x, Ĉ^j) = K(x,x) − 2·Σ_m w_{jm} K(x, s_{jm}) + ⟨Ĉ^j, Ĉ^j⟩`.
+//!
+//! This is the `Õ(kb²)` compute hot-spot, so it is pluggable:
+//!
+//! * [`NativeBackend`] — pure Rust, parallel over batch rows. Always
+//!   available, works with any [`Gram`].
+//! * [`crate::runtime::XlaBackend`] — executes the AOT-compiled JAX/Pallas
+//!   graph (Layer 1/2) through PJRT; available for feature kernels when a
+//!   matching artifact was built by `make artifacts`.
+//!
+//! Backends must agree numerically (integration tests cross-check them).
+
+use super::state::CenterWindow;
+use crate::kernels::Gram;
+use crate::util::parallel::par_rows_mut;
+
+/// Computes batch-to-center squared distances for Algorithm 2.
+pub trait AssignBackend {
+    /// Returns the row-major `batch.len() × centers.len()` distance matrix.
+    /// Distances are squared, clamped at 0 against floating-point rounding.
+    fn distances(
+        &mut self,
+        gram: &Gram,
+        batch: &[usize],
+        centers: &mut [CenterWindow],
+    ) -> Vec<f64>;
+
+    /// Backend label for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust reference backend: gathers each center's support once, caches
+/// `⟨Ĉ,Ĉ⟩` in the window, then computes the cross terms in parallel over
+/// batch rows.
+#[derive(Debug, Default, Clone)]
+pub struct NativeBackend;
+
+impl AssignBackend for NativeBackend {
+    fn distances(
+        &mut self,
+        gram: &Gram,
+        batch: &[usize],
+        centers: &mut [CenterWindow],
+    ) -> Vec<f64> {
+        let k = centers.len();
+        let b = batch.len();
+        // ⟨Ĉ_j, Ĉ_j⟩ (cached inside the window between calls; O(1) when
+        // updates flow through apply_update_cc).
+        let cc: Vec<f64> = centers.iter_mut().map(|c| c.self_inner(gram)).collect();
+        // Materialize supports once, structure-of-arrays for the inner loop.
+        let supports: Vec<(Vec<u32>, Vec<f64>)> = centers
+            .iter()
+            .map(|c| {
+                let mut idx = Vec::with_capacity(c.support_len());
+                let mut ws = Vec::with_capacity(c.support_len());
+                for (y, w) in c.support() {
+                    idx.push(y as u32);
+                    ws.push(w);
+                }
+                (idx, ws)
+            })
+            .collect();
+        let mut out = vec![0.0f64; b * k];
+        par_rows_mut(&mut out, k, |row0, chunk| {
+            for (r, row) in chunk.chunks_mut(k).enumerate() {
+                let x = batch[row0 + r];
+                let kxx = gram.self_k(x);
+                if let Some(grow) = gram.row_slice(x) {
+                    // Materialized fast path: direct row loads, no dispatch.
+                    for (j, (idx, ws)) in supports.iter().enumerate() {
+                        let mut cross = 0.0;
+                        for (&y, &w) in idx.iter().zip(ws.iter()) {
+                            cross += w * grow[y as usize] as f64;
+                        }
+                        row[j] = (kxx - 2.0 * cross + cc[j]).max(0.0);
+                    }
+                } else {
+                    for (j, (idx, ws)) in supports.iter().enumerate() {
+                        let mut cross = 0.0;
+                        for (&y, &w) in idx.iter().zip(ws.iter()) {
+                            cross += w * gram.eval(x, y as usize);
+                        }
+                        row[j] = (kxx - 2.0 * cross + cc[j]).max(0.0);
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Row-wise argmin over a `b × k` distance matrix → (assignment, min dist).
+pub fn argmin_rows(dist: &[f64], k: usize) -> (Vec<usize>, Vec<f64>) {
+    assert!(k >= 1 && dist.len() % k == 0);
+    let b = dist.len() / k;
+    let mut assign = Vec::with_capacity(b);
+    let mut mins = Vec::with_capacity(b);
+    for r in 0..b {
+        let row = &dist[r * k..(r + 1) * k];
+        let mut best = 0usize;
+        let mut bestv = row[0];
+        for (j, &v) in row.iter().enumerate().skip(1) {
+            if v < bestv {
+                best = j;
+                bestv = v;
+            }
+        }
+        assign.push(best);
+        mins.push(bestv);
+    }
+    (assign, mins)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{blobs, SyntheticSpec};
+    use crate::kernels::KernelFunction;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn native_distances_match_bruteforce() {
+        let mut rng = Rng::seeded(99);
+        let ds = blobs(&SyntheticSpec::new(150, 3, 3), &mut rng);
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 5.0 });
+        let mut centers: Vec<CenterWindow> =
+            (0..3).map(|j| CenterWindow::new(j * 10, 40)).collect();
+        for c in centers.iter_mut() {
+            let pts: Vec<usize> = (0..8).map(|_| rng.below(ds.n)).collect();
+            c.apply_update(0.6, &pts, None);
+        }
+        let batch: Vec<usize> = (0..20).map(|_| rng.below(ds.n)).collect();
+        let mut backend = NativeBackend;
+        let dist = backend.distances(&gram, &batch, &mut centers);
+        assert_eq!(dist.len(), 20 * 3);
+        for (r, &x) in batch.iter().enumerate() {
+            for (j, c) in centers.iter_mut().enumerate() {
+                let cross = c.cross_with_point(&gram, x);
+                let want = (gram.self_k(x) - 2.0 * cross + c.self_inner(&gram)).max(0.0);
+                assert!(
+                    (dist[r * 3 + j] - want).abs() < 1e-10,
+                    "r={r} j={j}: {} vs {want}",
+                    dist[r * 3 + j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn distance_to_own_init_point_is_zero() {
+        let mut rng = Rng::seeded(3);
+        let ds = blobs(&SyntheticSpec::new(50, 2, 2), &mut rng);
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 4.0 });
+        let mut centers = vec![CenterWindow::new(7, 10)];
+        let mut backend = NativeBackend;
+        let dist = backend.distances(&gram, &[7], &mut centers);
+        assert!(dist[0].abs() < 1e-12);
+    }
+
+    #[test]
+    fn argmin_rows_basics() {
+        let dist = vec![3.0, 1.0, 2.0, /* row 2 */ 0.5, 4.0, 0.5];
+        let (assign, mins) = argmin_rows(&dist, 3);
+        assert_eq!(assign, vec![1, 0]); // ties break to the lower index
+        assert_eq!(mins, vec![1.0, 0.5]);
+    }
+}

@@ -1,0 +1,170 @@
+//! Center initialization in feature space.
+//!
+//! Kernel k-means++ (Arthur & Vassilvitskii 2007, run through the kernel):
+//! the first center is uniform; each subsequent center is a dataset point
+//! sampled with probability proportional to its squared feature-space
+//! distance to the nearest chosen center:
+//!
+//! `Δ(x, y) = K(x,x) − 2K(x,y) + K(y,y)`.
+//!
+//! Initial centers are single dataset points — trivially convex combinations
+//! of X, as Algorithms 1 and 2 require — and carry the `O(log k)` expected
+//! approximation guarantee used by Theorem 1(3).
+
+use super::Init;
+use crate::kernels::Gram;
+use crate::util::rng::Rng;
+
+/// Choose `k` initial center *point indices* according to `method`.
+pub fn choose_centers(gram: &Gram, k: usize, method: Init, rng: &mut Rng) -> Vec<usize> {
+    let n = gram.n();
+    assert!(k >= 1 && k <= n, "k={k} out of range for n={n}");
+    match method {
+        Init::Uniform => rng.sample_without_replacement(n, k),
+        Init::KMeansPlusPlus => kmeanspp(gram, (0..n).collect(), k, rng),
+        Init::KMeansPlusPlusOnSample(m) => {
+            let m = m.clamp(k, n);
+            let sample = rng.sample_without_replacement(n, m);
+            kmeanspp(gram, sample, k, rng)
+        }
+    }
+}
+
+/// Kernel k-means++ D² sampling over a candidate index set.
+/// Cost: O(|candidates| · k) kernel evaluations.
+fn kmeanspp(gram: &Gram, candidates: Vec<usize>, k: usize, rng: &mut Rng) -> Vec<usize> {
+    let m = candidates.len();
+    assert!(k <= m);
+    let mut centers = Vec::with_capacity(k);
+    let first = candidates[rng.below(m)];
+    centers.push(first);
+    // min squared distance of each candidate to the chosen centers
+    let mut min_d2: Vec<f64> = candidates
+        .iter()
+        .map(|&x| feature_sqdist(gram, x, first))
+        .collect();
+    while centers.len() < k {
+        let next_pos = rng.weighted_choice(&min_d2);
+        let next = candidates[next_pos];
+        // Degenerate case (all remaining distances 0): weighted_choice fell
+        // back to uniform, which may repeat a chosen point; nudge forward.
+        let next = if centers.contains(&next) {
+            match candidates.iter().find(|c| !centers.contains(c)) {
+                Some(&c) => c,
+                None => next, // all points identical; duplicates are fine
+            }
+        } else {
+            next
+        };
+        centers.push(next);
+        for (pos, &x) in candidates.iter().enumerate() {
+            let d2 = feature_sqdist(gram, x, next);
+            if d2 < min_d2[pos] {
+                min_d2[pos] = d2;
+            }
+        }
+    }
+    centers
+}
+
+/// `‖φ(x) − φ(y)‖²` via kernel evaluations (clamped at 0 against rounding).
+#[inline]
+pub fn feature_sqdist(gram: &Gram, x: usize, y: usize) -> f64 {
+    (gram.self_k(x) - 2.0 * gram.eval(x, y) + gram.self_k(y)).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{blobs, SyntheticSpec};
+    use crate::kernels::KernelFunction;
+    use crate::util::rng::Rng;
+
+    fn fixture() -> crate::data::Dataset {
+        let mut rng = Rng::seeded(77);
+        blobs(
+            &SyntheticSpec::new(300, 4, 3).with_std(0.3).with_separation(8.0),
+            &mut rng,
+        )
+    }
+
+    #[test]
+    fn uniform_yields_distinct_valid_indices() {
+        let ds = fixture();
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 8.0 });
+        let mut rng = Rng::seeded(1);
+        let c = choose_centers(&gram, 5, Init::Uniform, &mut rng);
+        assert_eq!(c.len(), 5);
+        let set: std::collections::HashSet<_> = c.iter().collect();
+        assert_eq!(set.len(), 5);
+        assert!(c.iter().all(|&i| i < ds.n));
+    }
+
+    #[test]
+    fn kmeanspp_hits_every_separated_blob() {
+        // With well-separated blobs, D² sampling should pick one center per
+        // blob essentially always.
+        let ds = fixture();
+        let labels = ds.labels.clone().unwrap();
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 50.0 });
+        let mut hits = 0;
+        let trials = 20;
+        for seed in 0..trials {
+            let mut rng = Rng::seeded(seed);
+            let c = choose_centers(&gram, 3, Init::KMeansPlusPlus, &mut rng);
+            let blobs_hit: std::collections::HashSet<_> =
+                c.iter().map(|&i| labels[i]).collect();
+            if blobs_hit.len() == 3 {
+                hits += 1;
+            }
+        }
+        assert!(hits >= trials * 3 / 4, "kmeans++ covered all blobs only {hits}/{trials}");
+    }
+
+    #[test]
+    fn uniform_misses_blobs_sometimes_kmeanspp_wins() {
+        // Sanity: uniform init should cover all 3 blobs noticeably less often
+        // than k-means++ (it's the reason ++ exists).
+        let ds = fixture();
+        let labels = ds.labels.clone().unwrap();
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 50.0 });
+        let mut uniform_hits = 0;
+        for seed in 100..160 {
+            let mut rng = Rng::seeded(seed);
+            let c = choose_centers(&gram, 3, Init::Uniform, &mut rng);
+            let blobs_hit: std::collections::HashSet<_> =
+                c.iter().map(|&i| labels[i]).collect();
+            if blobs_hit.len() == 3 {
+                uniform_hits += 1;
+            }
+        }
+        assert!(uniform_hits < 60, "uniform init suspiciously perfect");
+    }
+
+    #[test]
+    fn sample_variant_stays_within_bounds() {
+        let ds = fixture();
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 8.0 });
+        let mut rng = Rng::seeded(5);
+        let c = choose_centers(&gram, 4, Init::KMeansPlusPlusOnSample(50), &mut rng);
+        assert_eq!(c.len(), 4);
+        assert!(c.iter().all(|&i| i < ds.n));
+    }
+
+    #[test]
+    fn feature_sqdist_zero_on_self_positive_off() {
+        let ds = fixture();
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 8.0 });
+        assert_eq!(feature_sqdist(&gram, 3, 3), 0.0);
+        assert!(feature_sqdist(&gram, 0, 200) > 0.0);
+    }
+
+    #[test]
+    fn identical_points_degenerate_ok() {
+        let ds = crate::data::Dataset::new("dup", vec![1.0f32; 20], 10, 2);
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 1.0 });
+        let mut rng = Rng::seeded(9);
+        let c = choose_centers(&gram, 3, Init::KMeansPlusPlus, &mut rng);
+        assert_eq!(c.len(), 3);
+    }
+}

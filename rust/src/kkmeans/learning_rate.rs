@@ -1,0 +1,113 @@
+//! Learning-rate policies for the mini-batch center update
+//! `C_{i+1}^j = (1−α_i^j)·C_i^j + α_i^j·cm(B_i^j)`.
+//!
+//! * **β rate** (Schwartzman 2023): `α = √(b_j/b)` — does *not* decay to 0
+//!   over time. Theorem 1's termination guarantee and Lemma 3's truncation
+//!   bound both rely on this rate (it decays old contributions
+//!   exponentially). The paper's `β`-prefixed algorithms use it.
+//! * **sklearn rate** (Sculley 2010 / sklearn's `MiniBatchKMeans`):
+//!   `α = b_j / c_j` where `c_j` is the cumulative count of points ever
+//!   assigned to center j. Goes to 0 as `1/i`, so old contributions decay
+//!   only polynomially — the reason truncation interacts poorly with it
+//!   (paper §6 Discussion).
+
+/// Which learning-rate schedule to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LearningRate {
+    /// `α = √(b_j / b)` — Schwartzman (2023). Non-vanishing.
+    Beta,
+    /// `α = b_j / cumulative_count_j` — sklearn. Vanishing.
+    Sklearn,
+}
+
+impl LearningRate {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LearningRate::Beta => "beta",
+            LearningRate::Sklearn => "sklearn",
+        }
+    }
+}
+
+/// Per-run mutable state for a learning-rate schedule (the sklearn rate
+/// tracks cumulative per-center counts).
+#[derive(Clone, Debug)]
+pub struct RateState {
+    kind: LearningRate,
+    /// Cumulative counts per center (sklearn only; seeded at 1 per sklearn's
+    /// own convention so the first batch doesn't fully overwrite init).
+    counts: Vec<f64>,
+}
+
+impl RateState {
+    pub fn new(kind: LearningRate, k: usize) -> RateState {
+        RateState { kind, counts: vec![1.0; k] }
+    }
+
+    /// α for center `j` receiving `b_j` batch points out of a batch of `b`.
+    /// Always in [0, 1]; exactly 0 when `b_j = 0` (center unchanged).
+    pub fn alpha(&mut self, j: usize, b_j: usize, b: usize) -> f64 {
+        debug_assert!(b_j <= b);
+        if b_j == 0 {
+            return 0.0;
+        }
+        match self.kind {
+            LearningRate::Beta => (b_j as f64 / b as f64).sqrt(),
+            LearningRate::Sklearn => {
+                self.counts[j] += b_j as f64;
+                b_j as f64 / self.counts[j]
+            }
+        }
+    }
+
+    pub fn kind(&self) -> LearningRate {
+        self.kind
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn beta_rate_formula() {
+        let mut r = RateState::new(LearningRate::Beta, 3);
+        assert_eq!(r.alpha(0, 0, 100), 0.0);
+        assert!((r.alpha(0, 25, 100) - 0.5).abs() < 1e-12);
+        assert!((r.alpha(1, 100, 100) - 1.0).abs() < 1e-12);
+        // Stateless: same inputs, same output across iterations.
+        assert!((r.alpha(0, 25, 100) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sklearn_rate_decays() {
+        let mut r = RateState::new(LearningRate::Sklearn, 1);
+        let a1 = r.alpha(0, 10, 32);
+        let a2 = r.alpha(0, 10, 32);
+        let a3 = r.alpha(0, 10, 32);
+        assert!(a1 > a2 && a2 > a3, "{a1} {a2} {a3}");
+        // a_i = 10 / (1 + 10·i)
+        assert!((a1 - 10.0 / 11.0).abs() < 1e-12);
+        assert!((a2 - 10.0 / 21.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sklearn_counts_are_per_center() {
+        let mut r = RateState::new(LearningRate::Sklearn, 2);
+        let _ = r.alpha(0, 50, 64);
+        let b = r.alpha(1, 50, 64); // center 1 untouched so far
+        assert!((b - 50.0 / 51.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn alpha_bounded() {
+        let mut beta = RateState::new(LearningRate::Beta, 1);
+        let mut skl = RateState::new(LearningRate::Sklearn, 1);
+        for bj in [0usize, 1, 7, 32] {
+            for state in [&mut beta, &mut skl] {
+                let a = state.alpha(0, bj, 32);
+                assert!((0.0..=1.0).contains(&a));
+            }
+        }
+    }
+}

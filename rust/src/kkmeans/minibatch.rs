@@ -1,0 +1,426 @@
+//! **Algorithm 1** — mini-batch kernel k-means with the recursive distance
+//! update rule (paper §4).
+//!
+//! The centers are never materialized. Instead the algorithm maintains, by
+//! dynamic programming across iterations,
+//!
+//! * `px[x][j] = ⟨φ(x), C_j⟩` for **all** `x ∈ X` — updated via
+//!   `⟨φ(x), C'_j⟩ = (1−α)⟨φ(x), C_j⟩ + α⟨φ(x), cm(B^j)⟩`, and
+//! * `cc[j] = ⟨C_j, C_j⟩` — updated via the expanded square.
+//!
+//! Each iteration costs `O(n(b+k))`: `n·b` kernel evaluations for the new
+//! cross terms plus `n·k` bookkeeping — already far below the full-batch
+//! `O(n²)`, but still linear in `n` (the truncated Algorithm 2 removes even
+//! that).
+
+use super::backend::argmin_rows;
+use super::init::choose_centers;
+use super::learning_rate::{LearningRate, RateState};
+use super::{FitResult, Init};
+use crate::kernels::Gram;
+use crate::util::parallel::par_rows_mut;
+use crate::util::rng::Rng;
+use crate::util::timing::{Profiler, Stopwatch};
+
+/// Configuration for [`MiniBatchKernelKMeans`] (Algorithm 1).
+#[derive(Clone, Debug)]
+pub struct MiniBatchConfig {
+    pub k: usize,
+    /// Batch size `b` (sampled uniformly with repetitions).
+    pub batch_size: usize,
+    pub max_iters: usize,
+    /// Early-stopping threshold ε on batch improvement
+    /// `f_{B_i}(C_i) − f_{B_i}(C_{i+1})`; `None` runs `max_iters` fixed
+    /// iterations (the paper's experimental protocol).
+    pub epsilon: Option<f64>,
+    pub learning_rate: LearningRate,
+    pub init: Init,
+    /// Optional per-point weights (weighted variant, footnote 1).
+    pub weights: Option<Vec<f64>>,
+}
+
+impl Default for MiniBatchConfig {
+    fn default() -> Self {
+        MiniBatchConfig {
+            k: 2,
+            batch_size: 1024,
+            max_iters: 200,
+            epsilon: None,
+            learning_rate: LearningRate::Beta,
+            init: Init::default(),
+            weights: None,
+        }
+    }
+}
+
+/// Algorithm 1 runner.
+pub struct MiniBatchKernelKMeans {
+    cfg: MiniBatchConfig,
+}
+
+impl MiniBatchKernelKMeans {
+    pub fn new(cfg: MiniBatchConfig) -> Self {
+        MiniBatchKernelKMeans { cfg }
+    }
+
+    pub fn fit(&self, gram: &Gram, rng: &mut Rng) -> FitResult {
+        let n = gram.n();
+        let k = self.cfg.k;
+        let b = self.cfg.batch_size.min(n.max(1));
+        assert!(k >= 1 && k <= n);
+        let mut prof = Profiler::new();
+        let weights = self.cfg.weights.as_deref();
+
+        // ---- init: centers are single points --------------------------------
+        let sw = Stopwatch::start();
+        let seeds = choose_centers(gram, k, self.cfg.init, rng);
+        // px[x*k + j] = ⟨φ(x), C_j⟩ ; cc[j] = ⟨C_j, C_j⟩.
+        let mut px = vec![0.0f64; n * k];
+        {
+            let seeds = &seeds;
+            par_rows_mut(&mut px, k, |row0, block| {
+                for (r, row) in block.chunks_mut(k).enumerate() {
+                    let x = row0 + r;
+                    for (j, &s) in seeds.iter().enumerate() {
+                        row[j] = gram.eval(x, s);
+                    }
+                }
+            });
+        }
+        let mut cc: Vec<f64> = seeds.iter().map(|&s| gram.self_k(s)).collect();
+        prof.add("init", sw.secs());
+
+        let mut rate = RateState::new(self.cfg.learning_rate, k);
+        let mut history = Vec::new();
+        let mut iterations = 0;
+        let mut converged = false;
+
+        for _iter in 0..self.cfg.max_iters {
+            iterations += 1;
+            // ---- sample batch & assign -------------------------------------
+            let sw = Stopwatch::start();
+            let batch = rng.sample_with_replacement(n, b);
+            let mut batch_dist = vec![0.0f64; b * k];
+            for (r, &x) in batch.iter().enumerate() {
+                let kxx = gram.self_k(x);
+                for j in 0..k {
+                    batch_dist[r * k + j] = (kxx - 2.0 * px[x * k + j] + cc[j]).max(0.0);
+                }
+            }
+            let (assign, mins) = argmin_rows(&batch_dist, k);
+            let f_before = super::objective::weighted_mean(&batch, &mins, weights);
+            history.push(f_before);
+            prof.add("assign", sw.secs());
+
+            // ---- per-cluster batch members & learning rates ------------------
+            let sw = Stopwatch::start();
+            let mut members: Vec<Vec<usize>> = vec![Vec::new(); k];
+            for (r, &j) in assign.iter().enumerate() {
+                members[j].push(batch[r]);
+            }
+            let alphas: Vec<f64> = (0..k)
+                .map(|j| rate.alpha(j, members[j].len(), b))
+                .collect();
+            // Weighted masses of each batch cluster (for weighted cm).
+            let mass: Vec<f64> = members
+                .iter()
+                .map(|m| match weights {
+                    None => m.len() as f64,
+                    Some(w) => m.iter().map(|&x| w[x]).sum(),
+                })
+                .collect();
+
+            // ⟨C_j, cm(B^j)⟩ from *old* px — O(b).
+            let c_dot_cm: Vec<f64> = (0..k)
+                .map(|j| {
+                    if members[j].is_empty() {
+                        return 0.0;
+                    }
+                    let mut s = 0.0;
+                    for &y in &members[j] {
+                        let wy = weights.map(|w| w[y]).unwrap_or(1.0);
+                        s += wy * px[y * k + j];
+                    }
+                    s / mass[j]
+                })
+                .collect();
+            // ⟨cm(B^j), cm(B^j)⟩ — O(Σ b_j²) ≤ O(b²).
+            let cm_dot_cm: Vec<f64> = (0..k)
+                .map(|j| {
+                    if members[j].is_empty() {
+                        return 0.0;
+                    }
+                    let pts = &members[j];
+                    let mut s = 0.0;
+                    for (a, &y) in pts.iter().enumerate() {
+                        let wy = weights.map(|w| w[y]).unwrap_or(1.0);
+                        s += wy * wy * gram.self_k(y);
+                        for &z in pts.iter().skip(a + 1) {
+                            let wz = weights.map(|w| w[z]).unwrap_or(1.0);
+                            s += 2.0 * wy * wz * gram.eval(y, z);
+                        }
+                    }
+                    s / (mass[j] * mass[j])
+                })
+                .collect();
+            prof.add("moments", sw.secs());
+
+            // ---- DP update: px for all x (O(n·b) kernel evals), cc ----------
+            let sw = Stopwatch::start();
+            {
+                let members = &members;
+                let alphas = &alphas;
+                let mass = &mass;
+                par_rows_mut(&mut px, k, |row0, block| {
+                    for (r, row) in block.chunks_mut(k).enumerate() {
+                        let x = row0 + r;
+                        // Hoist the gram row once per point (§Perf): direct
+                        // f32 loads beat per-element enum dispatch ~3x.
+                        let grow = gram.row_slice(x);
+                        for j in 0..k {
+                            let a = alphas[j];
+                            if a == 0.0 {
+                                continue;
+                            }
+                            let mut cross = 0.0;
+                            match (grow, weights) {
+                                (Some(g), None) => {
+                                    for &y in &members[j] {
+                                        cross += g[y] as f64;
+                                    }
+                                }
+                                (Some(g), Some(w)) => {
+                                    for &y in &members[j] {
+                                        cross += w[y] * g[y] as f64;
+                                    }
+                                }
+                                (None, None) => {
+                                    for &y in &members[j] {
+                                        cross += gram.eval(x, y);
+                                    }
+                                }
+                                (None, Some(w)) => {
+                                    for &y in &members[j] {
+                                        cross += w[y] * gram.eval(x, y);
+                                    }
+                                }
+                            }
+                            row[j] = (1.0 - a) * row[j] + a * cross / mass[j];
+                        }
+                    }
+                });
+            }
+            for j in 0..k {
+                let a = alphas[j];
+                if a == 0.0 {
+                    continue;
+                }
+                cc[j] = (1.0 - a) * (1.0 - a) * cc[j]
+                    + 2.0 * a * (1.0 - a) * c_dot_cm[j]
+                    + a * a * cm_dot_cm[j];
+            }
+            prof.add("update", sw.secs());
+
+            // ---- early stopping on the same batch ---------------------------
+            if let Some(eps) = self.cfg.epsilon {
+                let sw = Stopwatch::start();
+                let mut mins_after = Vec::with_capacity(b);
+                for &x in &batch {
+                    let kxx = gram.self_k(x);
+                    let mut best = f64::INFINITY;
+                    for j in 0..k {
+                        let d = (kxx - 2.0 * px[x * k + j] + cc[j]).max(0.0);
+                        best = best.min(d);
+                    }
+                    mins_after.push(best);
+                }
+                let f_after = super::objective::weighted_mean(&batch, &mins_after, weights);
+                prof.add("stopping", sw.secs());
+                if f_before - f_after < eps {
+                    converged = true;
+                    break;
+                }
+            }
+        }
+
+        // ---- final assignment of all points (from the DP tables) -----------
+        let sw = Stopwatch::start();
+        let mut dist = vec![0.0f64; n * k];
+        {
+            let px = &px;
+            let cc = &cc;
+            par_rows_mut(&mut dist, k, |row0, block| {
+                for (r, row) in block.chunks_mut(k).enumerate() {
+                    let x = row0 + r;
+                    let kxx = gram.self_k(x);
+                    for j in 0..k {
+                        row[j] = (kxx - 2.0 * px[x * k + j] + cc[j]).max(0.0);
+                    }
+                }
+            });
+        }
+        let (assignments, mins) = argmin_rows(&dist, k);
+        let points: Vec<usize> = (0..n).collect();
+        let objective = super::objective::weighted_mean(&points, &mins, weights);
+        prof.add("finalize", sw.secs());
+
+        FitResult { assignments, objective, history, iterations, converged, profiler: prof }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{blobs, SyntheticSpec};
+    use crate::kernels::KernelFunction;
+    use crate::metrics::ari;
+
+    fn fixture(n: usize) -> crate::data::Dataset {
+        let mut rng = Rng::seeded(7);
+        blobs(
+            &SyntheticSpec::new(n, 4, 3).with_std(0.4).with_separation(7.0),
+            &mut rng,
+        )
+    }
+
+    #[test]
+    fn recovers_blobs_with_beta_rate() {
+        let ds = fixture(600);
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 20.0 });
+        let cfg = MiniBatchConfig { k: 3, batch_size: 128, max_iters: 60, ..Default::default() };
+        let mut rng = Rng::seeded(1);
+        let res = MiniBatchKernelKMeans::new(cfg).fit(&gram, &mut rng);
+        let score = ari(ds.labels.as_ref().unwrap(), &res.assignments);
+        assert!(score > 0.9, "ARI={score}");
+    }
+
+    #[test]
+    fn recovers_blobs_with_sklearn_rate() {
+        let ds = fixture(600);
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 20.0 });
+        let cfg = MiniBatchConfig {
+            k: 3,
+            batch_size: 128,
+            max_iters: 60,
+            learning_rate: LearningRate::Sklearn,
+            ..Default::default()
+        };
+        let mut rng = Rng::seeded(2);
+        let res = MiniBatchKernelKMeans::new(cfg).fit(&gram, &mut rng);
+        let score = ari(ds.labels.as_ref().unwrap(), &res.assignments);
+        assert!(score > 0.9, "ARI={score}");
+    }
+
+    #[test]
+    fn early_stopping_fires_on_converged_data() {
+        let ds = fixture(400);
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 20.0 });
+        let cfg = MiniBatchConfig {
+            k: 3,
+            batch_size: 200,
+            max_iters: 200,
+            epsilon: Some(1e-3),
+            ..Default::default()
+        };
+        let mut rng = Rng::seeded(3);
+        let res = MiniBatchKernelKMeans::new(cfg).fit(&gram, &mut rng);
+        assert!(res.converged, "should stop early; ran {}", res.iterations);
+        assert!(res.iterations < 200);
+    }
+
+    #[test]
+    fn px_cc_invariants_vs_bruteforce_window() {
+        // Cross-check Algorithm 1's DP tables against an explicit
+        // CenterWindow fed the same update stream.
+        use crate::kkmeans::state::CenterWindow;
+        let ds = fixture(120);
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 10.0 });
+        let n = ds.n;
+        let k = 2;
+        let b = 16;
+        let seeds = [3usize, 77];
+        let mut px = vec![0.0f64; n * k];
+        for x in 0..n {
+            for (j, &s) in seeds.iter().enumerate() {
+                px[x * k + j] = gram.eval(x, s);
+            }
+        }
+        let mut cc: Vec<f64> = seeds.iter().map(|&s| gram.self_k(s)).collect();
+        let mut windows: Vec<CenterWindow> =
+            seeds.iter().map(|&s| CenterWindow::new(s, usize::MAX)).collect();
+        let mut rng = Rng::seeded(5);
+        for _ in 0..10 {
+            let batch = rng.sample_with_replacement(n, b);
+            // Assign by px/cc.
+            let mut members: Vec<Vec<usize>> = vec![Vec::new(); k];
+            for &x in &batch {
+                let mut best = 0;
+                let mut bestv = f64::INFINITY;
+                for j in 0..k {
+                    let d = gram.self_k(x) - 2.0 * px[x * k + j] + cc[j];
+                    if d < bestv {
+                        best = j;
+                        bestv = d;
+                    }
+                }
+                members[best].push(x);
+            }
+            for j in 0..k {
+                let bj = members[j].len();
+                if bj == 0 {
+                    continue;
+                }
+                let a = (bj as f64 / b as f64).sqrt();
+                // DP update.
+                let mut c_dot_cm = 0.0;
+                for &y in &members[j] {
+                    c_dot_cm += px[y * k + j];
+                }
+                c_dot_cm /= bj as f64;
+                let mut cm2 = 0.0;
+                for &y in &members[j] {
+                    for &z in &members[j] {
+                        cm2 += gram.eval(y, z);
+                    }
+                }
+                cm2 /= (bj * bj) as f64;
+                for x in 0..n {
+                    let mut cross = 0.0;
+                    for &y in &members[j] {
+                        cross += gram.eval(x, y);
+                    }
+                    px[x * k + j] = (1.0 - a) * px[x * k + j] + a * cross / bj as f64;
+                }
+                cc[j] = (1.0 - a) * (1.0 - a) * cc[j]
+                    + 2.0 * a * (1.0 - a) * c_dot_cm
+                    + a * a * cm2;
+                windows[j].apply_update(a, &members[j], None);
+            }
+        }
+        // Compare against the explicit representation.
+        for j in 0..k {
+            let cc_win = windows[j].self_inner(&gram);
+            assert!((cc[j] - cc_win).abs() < 1e-8, "cc[{j}]: {} vs {cc_win}", cc[j]);
+            for x in (0..n).step_by(13) {
+                let px_win = windows[j].cross_with_point(&gram, x);
+                assert!(
+                    (px[x * k + j] - px_win).abs() < 1e-8,
+                    "px[{x},{j}]: {} vs {px_win}",
+                    px[x * k + j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn history_has_one_entry_per_iteration() {
+        let ds = fixture(200);
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 10.0 });
+        let cfg = MiniBatchConfig { k: 3, batch_size: 64, max_iters: 17, ..Default::default() };
+        let mut rng = Rng::seeded(6);
+        let res = MiniBatchKernelKMeans::new(cfg).fit(&gram, &mut rng);
+        assert_eq!(res.iterations, 17);
+        assert_eq!(res.history.len(), 17);
+        assert!(!res.converged);
+    }
+}

@@ -1,0 +1,80 @@
+//! Kernel k-means algorithms — the paper's core contribution.
+//!
+//! Three algorithms over a shared [`crate::kernels::Gram`] substrate:
+//!
+//! * [`FullBatchKernelKMeans`] — Lloyd's algorithm in feature space
+//!   (Dhillon et al. 2004), `O(n²)` per iteration. The baseline.
+//! * [`MiniBatchKernelKMeans`] — the paper's **Algorithm 1**: mini-batch
+//!   updates with the recursive distance rule, maintaining `⟨φ(x), C_j⟩`
+//!   for all `x` by dynamic programming — `O(n(b+k))` per iteration.
+//! * [`TruncatedMiniBatchKernelKMeans`] — the paper's **Algorithm 2**:
+//!   centers are *truncated* to a sliding window of the most recent ≈τ
+//!   support points (Section 4.1), giving `Õ(kb²)` per iteration with no
+//!   dependence on `n`. The assignment step runs through an
+//!   [`AssignBackend`] — pure-Rust native, or the AOT-compiled
+//!   JAX/Pallas graph via [`crate::runtime::XlaBackend`].
+//!
+//! Plus the shared machinery: kernel k-means++ initialization ([`init`]),
+//! the β/sklearn learning-rate policies ([`learning_rate`]), the
+//! sliding-window center state ([`state`]), and objective evaluation
+//! ([`objective`]).
+
+pub mod backend;
+pub mod full_batch;
+pub mod init;
+pub mod learning_rate;
+pub mod minibatch;
+pub mod objective;
+pub mod predict;
+pub mod state;
+pub mod truncated;
+
+pub use backend::{AssignBackend, NativeBackend};
+pub use full_batch::{FullBatchConfig, FullBatchKernelKMeans};
+pub use learning_rate::LearningRate;
+pub use minibatch::{MiniBatchConfig, MiniBatchKernelKMeans};
+pub use predict::{KernelKMeansModel, StreamingKernelKMeans};
+pub use state::CenterWindow;
+pub use truncated::{TruncatedConfig, TruncatedMiniBatchKernelKMeans};
+
+use crate::util::timing::Profiler;
+
+/// Result of fitting any of the clustering algorithms.
+#[derive(Clone, Debug)]
+pub struct FitResult {
+    /// Final hard assignment of every dataset point.
+    pub assignments: Vec<usize>,
+    /// Final full-dataset objective `f_X(C)` (mean squared feature-space
+    /// distance to the closest center; weighted mean in the weighted case).
+    pub objective: f64,
+    /// `f_{B_i}(C_i)` per iteration (batch objective before the update) —
+    /// for mini-batch algorithms; full-batch records `f_X(C_i)`.
+    pub history: Vec<f64>,
+    /// Iterations executed.
+    pub iterations: usize,
+    /// True if the ε early-stopping condition fired (vs. hitting max_iters).
+    pub converged: bool,
+    /// Per-phase timing breakdown.
+    pub profiler: Profiler,
+}
+
+/// How initial centers are chosen. Every option yields centers that are
+/// convex combinations of X (single dataset points), as Algorithm 1 requires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Init {
+    /// k distinct points uniformly at random.
+    Uniform,
+    /// Kernel k-means++ (Arthur & Vassilvitskii 2007 in feature space):
+    /// yields the `O(log k)` expected approximation of Theorem 1(3).
+    KMeansPlusPlus,
+    /// Kernel k-means++ run on a uniform subsample of this size (init cost
+    /// `O(sample·k)` instead of `O(n·k)`); the paper's "any reasonable
+    /// initialization" covers this.
+    KMeansPlusPlusOnSample(usize),
+}
+
+impl Default for Init {
+    fn default() -> Self {
+        Init::KMeansPlusPlus
+    }
+}

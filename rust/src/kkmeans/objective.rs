@@ -1,0 +1,143 @@
+//! Objective evaluation: `f_A(C) = (1/|A|)·Σ_{x∈A} min_j Δ(x, C^j)` and the
+//! weighted generalization `f_A(C) = Σ w_x·f_x / Σ w_x` (paper footnote 1).
+
+use super::backend::{argmin_rows, AssignBackend};
+use super::state::CenterWindow;
+use crate::kernels::Gram;
+
+/// Assign a set of points to truncated centers; returns (assignments,
+/// min squared distances). Runs through the given backend in slabs of
+/// `slab` points so the XLA backend can reuse its fixed-batch executable.
+pub fn assign_points(
+    gram: &Gram,
+    centers: &mut [CenterWindow],
+    points: &[usize],
+    backend: &mut dyn AssignBackend,
+    slab: usize,
+) -> (Vec<usize>, Vec<f64>) {
+    let k = centers.len();
+    let mut assignments = Vec::with_capacity(points.len());
+    let mut dists = Vec::with_capacity(points.len());
+    for chunk in points.chunks(slab.max(1)) {
+        let dist = backend.distances(gram, chunk, centers);
+        let (a, m) = argmin_rows(&dist, k);
+        assignments.extend(a);
+        dists.extend(m);
+    }
+    (assignments, dists)
+}
+
+/// Weighted mean of `min_dists` with optional per-point weights aligned to
+/// `points` (dataset weights, not batch multiplicity).
+pub fn weighted_mean(
+    points: &[usize],
+    min_dists: &[f64],
+    weights: Option<&[f64]>,
+) -> f64 {
+    assert_eq!(points.len(), min_dists.len());
+    if points.is_empty() {
+        return 0.0;
+    }
+    match weights {
+        None => min_dists.iter().sum::<f64>() / points.len() as f64,
+        Some(ws) => {
+            let mut num = 0.0;
+            let mut den = 0.0;
+            for (&p, &d) in points.iter().zip(min_dists.iter()) {
+                let w = ws[p];
+                num += w * d;
+                den += w;
+            }
+            num / den
+        }
+    }
+}
+
+/// Full-dataset objective `f_X(Ĉ)` plus final assignments.
+pub fn evaluate_full(
+    gram: &Gram,
+    centers: &mut [CenterWindow],
+    backend: &mut dyn AssignBackend,
+    weights: Option<&[f64]>,
+) -> (Vec<usize>, f64) {
+    let n = gram.n();
+    let points: Vec<usize> = (0..n).collect();
+    let (assignments, dists) = assign_points(gram, centers, &points, backend, 4096);
+    let obj = weighted_mean(&points, &dists, weights);
+    (assignments, obj)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{blobs, SyntheticSpec};
+    use crate::kernels::KernelFunction;
+    use crate::kkmeans::backend::NativeBackend;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn weighted_mean_reduces_to_mean() {
+        let pts = [0, 1, 2];
+        let d = [1.0, 2.0, 3.0];
+        assert_eq!(weighted_mean(&pts, &d, None), 2.0);
+        let w = [1.0, 1.0, 1.0];
+        assert!((weighted_mean(&pts, &d, Some(&w)) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_mean_respects_weights() {
+        let pts = [0, 1];
+        let d = [0.0, 10.0];
+        let w = [3.0, 1.0];
+        assert!((weighted_mean(&pts, &d, Some(&w)) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slab_size_does_not_change_result() {
+        let mut rng = Rng::seeded(17);
+        let ds = blobs(&SyntheticSpec::new(100, 3, 2), &mut rng);
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 5.0 });
+        let mut centers = vec![CenterWindow::new(0, 30), CenterWindow::new(50, 30)];
+        centers[0].apply_update(0.5, &[1, 2, 3], None);
+        let pts: Vec<usize> = (0..ds.n).collect();
+        let mut be = NativeBackend;
+        let (a1, d1) = assign_points(&gram, &mut centers, &pts, &mut be, 7);
+        let (a2, d2) = assign_points(&gram, &mut centers, &pts, &mut be, 1000);
+        assert_eq!(a1, a2);
+        for (x, y) in d1.iter().zip(d2.iter()) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn evaluate_full_objective_decreases_with_better_centers() {
+        let mut rng = Rng::seeded(19);
+        let ds = blobs(
+            &SyntheticSpec::new(200, 3, 2).with_std(0.3).with_separation(8.0),
+            &mut rng,
+        );
+        let labels = ds.labels.clone().unwrap();
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 10.0 });
+        let mut be = NativeBackend;
+        // Bad: both centers the same point. Good: one per blob, updated with
+        // same-blob members.
+        let mut bad = vec![CenterWindow::new(0, 100), CenterWindow::new(0, 100)];
+        let (_, bad_obj) = evaluate_full(&gram, &mut bad, &mut be, None);
+        let blob0: Vec<usize> = (0..ds.n).filter(|&i| labels[i] == 0).take(20).collect();
+        let blob1: Vec<usize> = (0..ds.n).filter(|&i| labels[i] == 1).take(20).collect();
+        let mut good = vec![
+            CenterWindow::new(blob0[0], 100),
+            CenterWindow::new(blob1[0], 100),
+        ];
+        good[0].apply_update(0.9, &blob0, None);
+        good[1].apply_update(0.9, &blob1, None);
+        let (assign, good_obj) = evaluate_full(&gram, &mut good, &mut be, None);
+        assert!(good_obj < bad_obj, "good={good_obj} bad={bad_obj}");
+        // Good centers should recover the blob structure.
+        let agree = (0..ds.n)
+            .filter(|&i| (assign[i] == 0) == (labels[i] == 0))
+            .count();
+        let agree = agree.max(ds.n - agree);
+        assert!(agree as f64 / ds.n as f64 > 0.95);
+    }
+}

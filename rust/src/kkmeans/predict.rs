@@ -1,0 +1,338 @@
+//! Out-of-sample prediction and streaming clustering.
+//!
+//! The truncated representation makes kernel k-means *servable*: a fitted
+//! model is just k sliding windows over ≤ τ+b support points each, so
+//! assigning a new, unseen point costs O(k·(τ+b)) kernel evaluations —
+//! no access to the training set beyond the support points.
+//!
+//! * [`KernelKMeansModel`] — a frozen model: support features + weights +
+//!   ⟨Ĉ,Ĉ⟩ per center, detached from the training gram. `predict` works on
+//!   arbitrary new feature vectors.
+//! * [`StreamingKernelKMeans`] — the online variant the mini-batch setting
+//!   enables: consume batches from an unbounded stream (no dataset in
+//!   memory at all); each `partial_fit` is one Algorithm 2 iteration whose
+//!   "batch" is whatever the stream delivered.
+
+use super::learning_rate::{LearningRate, RateState};
+use super::state::CenterWindow;
+use crate::data::Dataset;
+use crate::kernels::{Gram, KernelFunction};
+
+/// A frozen, servable kernel k-means model (feature kernels only — the
+/// support points are materialized as raw feature vectors).
+#[derive(Clone, Debug)]
+pub struct KernelKMeansModel {
+    pub kernel: KernelFunction,
+    pub d: usize,
+    /// Per center: support feature rows (flattened s×d) and coefficients.
+    centers: Vec<(Vec<f32>, Vec<f64>)>,
+    /// ⟨Ĉ_j, Ĉ_j⟩ per center.
+    cc: Vec<f64>,
+}
+
+impl KernelKMeansModel {
+    /// Freeze fitted windows into a servable model.
+    pub fn freeze(
+        ds: &Dataset,
+        kernel: KernelFunction,
+        windows: &mut [CenterWindow],
+    ) -> KernelKMeansModel {
+        let gram = Gram::on_the_fly(ds, kernel);
+        let centers = windows
+            .iter()
+            .map(|w| {
+                let mut feats = Vec::new();
+                let mut coefs = Vec::new();
+                for (y, c) in w.support() {
+                    feats.extend_from_slice(ds.row(y));
+                    coefs.push(c);
+                }
+                (feats, coefs)
+            })
+            .collect();
+        let cc = windows.iter_mut().map(|w| w.self_inner(&gram)).collect();
+        KernelKMeansModel { kernel, d: ds.d, centers, cc }
+    }
+
+    pub fn k(&self) -> usize {
+        self.centers.len()
+    }
+
+    /// Squared feature-space distances of one new point to every center.
+    pub fn distances(&self, x: &[f32]) -> Vec<f64> {
+        assert_eq!(x.len(), self.d, "feature dimension mismatch");
+        let kxx = self.kernel.eval_self(x);
+        self.centers
+            .iter()
+            .zip(self.cc.iter())
+            .map(|((feats, coefs), &cc)| {
+                let mut cross = 0.0;
+                for (s, &c) in feats.chunks_exact(self.d).zip(coefs.iter()) {
+                    cross += c * self.kernel.eval(x, s);
+                }
+                (kxx - 2.0 * cross + cc).max(0.0)
+            })
+            .collect()
+    }
+
+    /// Hard assignment of one new point.
+    pub fn predict(&self, x: &[f32]) -> usize {
+        let dist = self.distances(x);
+        dist.iter()
+            .enumerate()
+            .min_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(j, _)| j)
+            .unwrap()
+    }
+
+    /// Batch prediction.
+    pub fn predict_all(&self, ds: &Dataset) -> Vec<usize> {
+        assert_eq!(ds.d, self.d);
+        crate::util::parallel::par_map_indexed(ds.n, |i| self.predict(ds.row(i)))
+    }
+
+    /// Total support size (model footprint in points).
+    pub fn support_points(&self) -> usize {
+        self.centers.iter().map(|(_, c)| c.len()).sum()
+    }
+}
+
+/// Online truncated mini-batch kernel k-means over an unbounded stream.
+///
+/// Feed feature batches with [`StreamingKernelKMeans::partial_fit`]; the
+/// model keeps only the support windows (O(k·(τ+b)) points), never the
+/// stream. Internally the stream is buffered into a bounded reservoir
+/// dataset holding exactly the live support + current batch.
+pub struct StreamingKernelKMeans {
+    kernel: KernelFunction,
+    k: usize,
+    tau: usize,
+    batch_size: usize,
+    rate: RateState,
+    /// Reservoir of feature rows referenced by windows (compacted
+    /// periodically); windows index into it.
+    store: Dataset,
+    windows: Option<Vec<CenterWindow>>,
+    /// Batches consumed.
+    pub iterations: usize,
+}
+
+impl StreamingKernelKMeans {
+    pub fn new(
+        kernel: KernelFunction,
+        d: usize,
+        k: usize,
+        batch_size: usize,
+        tau: usize,
+        lr: LearningRate,
+    ) -> StreamingKernelKMeans {
+        StreamingKernelKMeans {
+            kernel,
+            k,
+            tau,
+            batch_size,
+            rate: RateState::new(lr, k),
+            store: Dataset::new("stream", Vec::new(), 0, d),
+            windows: None,
+            iterations: 0,
+        }
+    }
+
+    fn append_rows(&mut self, rows: &[f32]) -> Vec<usize> {
+        let d = self.store.d;
+        assert_eq!(rows.len() % d, 0, "ragged batch");
+        let n0 = self.store.n;
+        self.store.features.extend_from_slice(rows);
+        self.store.n += rows.len() / d;
+        (n0..self.store.n).collect()
+    }
+
+    /// Drop store rows no longer referenced by any window (keeps the
+    /// memory footprint bounded by O(k·(τ+b)) regardless of stream length).
+    fn compact(&mut self) {
+        let Some(windows) = &self.windows else { return };
+        let d = self.store.d;
+        // Collect referenced indices (sorted, deduped).
+        let mut referenced: Vec<usize> = windows
+            .iter()
+            .flat_map(|w| w.support().map(|(y, _)| y))
+            .collect();
+        referenced.sort_unstable();
+        referenced.dedup();
+        if referenced.len() * 4 > self.store.n * 3 {
+            return; // not worth compacting yet
+        }
+        let mut remap = std::collections::HashMap::with_capacity(referenced.len());
+        let mut features = Vec::with_capacity(referenced.len() * d);
+        for (new_idx, &old_idx) in referenced.iter().enumerate() {
+            remap.insert(old_idx, new_idx);
+            features.extend_from_slice(self.store.row(old_idx));
+        }
+        let store = Dataset::new("stream", features, referenced.len(), d);
+        // Rebuild windows against the new indexing.
+        let rebuilt = windows
+            .iter()
+            .map(|w| w.remap_indices(&remap, self.tau))
+            .collect();
+        self.store = store;
+        self.windows = Some(rebuilt);
+    }
+
+    /// Consume one batch of rows (row-major, length multiple of d). The
+    /// first batches are used for initialization (k distinct-ish seeds);
+    /// afterwards each call is one Algorithm 2 iteration.
+    pub fn partial_fit(&mut self, rows: &[f32], rng: &mut crate::util::rng::Rng) {
+        let ids = self.append_rows(rows);
+        if ids.is_empty() {
+            return;
+        }
+        if self.windows.is_none() {
+            // Initialize from the first batch: kernel k-means++ over it.
+            let gram = Gram::on_the_fly(&self.store, self.kernel);
+            let k = self.k.min(ids.len());
+            let seeds = super::init::choose_centers(
+                &gram,
+                k,
+                super::Init::KMeansPlusPlusOnSample(ids.len()),
+                rng,
+            );
+            self.windows =
+                Some(seeds.iter().map(|&s| CenterWindow::new(s, self.tau)).collect());
+            if ids.len() <= self.k {
+                return;
+            }
+        }
+        let gram = Gram::on_the_fly(&self.store, self.kernel);
+        let mut windows = self.windows.take().unwrap();
+        // Assign the batch.
+        let mut backend = super::backend::NativeBackend;
+        let dist = {
+            use super::backend::AssignBackend;
+            backend.distances(&gram, &ids, &mut windows)
+        };
+        let (assign, _) = super::backend::argmin_rows(&dist, windows.len());
+        let mut members: Vec<Vec<usize>> = vec![Vec::new(); windows.len()];
+        for (r, &j) in assign.iter().enumerate() {
+            members[j].push(ids[r]);
+        }
+        let b = self.batch_size.max(ids.len());
+        for (j, w) in windows.iter_mut().enumerate() {
+            let alpha = self.rate.alpha(j, members[j].len(), b);
+            if alpha > 0.0 {
+                w.apply_update_cc(alpha, &members[j], None, &gram);
+            }
+        }
+        self.windows = Some(windows);
+        self.iterations += 1;
+        if self.store.n > 4 * self.k * (self.tau + self.batch_size) {
+            self.compact();
+        }
+    }
+
+    /// Freeze into a servable model (panics before the first batch).
+    pub fn to_model(&mut self) -> KernelKMeansModel {
+        let windows = self.windows.as_mut().expect("no data consumed yet");
+        KernelKMeansModel::freeze(&self.store, self.kernel, windows)
+    }
+
+    /// Current bounded memory footprint in stored rows.
+    pub fn stored_rows(&self) -> usize {
+        self.store.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{blobs, SyntheticSpec};
+    use crate::kkmeans::{TruncatedConfig, TruncatedMiniBatchKernelKMeans};
+    use crate::metrics::ari;
+    use crate::util::rng::Rng;
+
+    fn fixture(n: usize) -> Dataset {
+        let mut rng = Rng::seeded(8);
+        blobs(
+            &SyntheticSpec::new(n, 6, 3).with_std(0.4).with_separation(7.0),
+            &mut rng,
+        )
+    }
+
+    #[test]
+    fn frozen_model_agrees_with_training_assignments() {
+        let ds = fixture(600);
+        let kernel = KernelFunction::Gaussian { kappa: 12.0 };
+        let gram = Gram::on_the_fly(&ds, kernel);
+        let cfg = TruncatedConfig { k: 3, batch_size: 128, tau: 100, max_iters: 40, ..Default::default() };
+        let mut rng = Rng::seeded(1);
+        let mut fit = TruncatedMiniBatchKernelKMeans::new(cfg)
+            .fit_with_backend(&gram, &mut super::super::backend::NativeBackend, &mut rng);
+        let model = KernelKMeansModel::freeze(&ds, kernel, &mut fit.centers);
+        assert_eq!(model.k(), 3);
+        let same = (0..ds.n)
+            .filter(|&i| model.predict(ds.row(i)) == fit.result.assignments[i])
+            .count();
+        assert_eq!(same, ds.n, "frozen model must replicate training assignments");
+    }
+
+    #[test]
+    fn predicts_held_out_points() {
+        let train = fixture(600);
+        let test = fixture(300); // same generator/seed family ⇒ same blobs
+        let kernel = KernelFunction::Gaussian { kappa: 12.0 };
+        let gram = Gram::on_the_fly(&train, kernel);
+        let cfg = TruncatedConfig { k: 3, batch_size: 128, tau: 100, max_iters: 40, ..Default::default() };
+        let mut rng = Rng::seeded(2);
+        let mut fit = TruncatedMiniBatchKernelKMeans::new(cfg)
+            .fit_with_backend(&gram, &mut super::super::backend::NativeBackend, &mut rng);
+        let model = KernelKMeansModel::freeze(&train, kernel, &mut fit.centers);
+        let pred = model.predict_all(&test);
+        let score = ari(test.labels.as_ref().unwrap(), &pred);
+        assert!(score > 0.9, "held-out ARI={score}");
+        assert!(model.support_points() <= 3 * (100 + 128 + 1));
+    }
+
+    #[test]
+    fn streaming_clusters_an_unbounded_stream_with_bounded_memory() {
+        let ds = fixture(4000);
+        let kernel = KernelFunction::Gaussian { kappa: 12.0 };
+        let mut stream = StreamingKernelKMeans::new(
+            kernel,
+            ds.d,
+            3,
+            128,
+            60,
+            LearningRate::Beta,
+        );
+        let mut rng = Rng::seeded(3);
+        // Feed 60 batches of 128 rows sampled from the generator.
+        for _ in 0..60 {
+            let idx = rng.sample_with_replacement(ds.n, 128);
+            let mut rows = Vec::with_capacity(128 * ds.d);
+            for &i in &idx {
+                rows.extend_from_slice(ds.row(i));
+            }
+            stream.partial_fit(&rows, &mut rng);
+        }
+        assert_eq!(stream.iterations, 60);
+        // Memory bounded: far less than the 60·128 rows consumed.
+        assert!(
+            stream.stored_rows() < 4 * 3 * (60 + 128),
+            "stored {} rows",
+            stream.stored_rows()
+        );
+        let model = stream.to_model();
+        let pred = model.predict_all(&ds);
+        let score = ari(ds.labels.as_ref().unwrap(), &pred);
+        assert!(score > 0.9, "streaming ARI={score}");
+    }
+
+    #[test]
+    #[should_panic(expected = "dimension mismatch")]
+    fn predict_checks_dimension() {
+        let ds = fixture(100);
+        let kernel = KernelFunction::Gaussian { kappa: 4.0 };
+        let mut windows = vec![CenterWindow::new(0, 10)];
+        let model = KernelKMeansModel::freeze(&ds, kernel, &mut windows);
+        let _ = model.predict(&[0.0; 3]);
+    }
+}

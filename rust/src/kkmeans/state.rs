@@ -1,0 +1,652 @@
+//! Sliding-window truncated center state (paper §4.1).
+//!
+//! Each center is implicitly `Ĉ^j = Σ_{(y,w) ∈ window} w·φ(y)`: a sparse
+//! convex-ish combination of recent batch points. After the update
+//! `C_{i+1} = (1−α_i)C_i + α_i·cm(B_i^j)`, the contribution of the batch
+//! from iteration ℓ carries coefficient `α_ℓ · Π_{z=ℓ+1..i}(1−α_z)`.
+//!
+//! The *efficient sliding-window implementation* the paper's footnote 4
+//! alludes to: instead of rescaling every stored coefficient by `(1−α)`
+//! each iteration (O(window) work), we keep per-entry **raw** coefficients
+//! and a single global `scale`; effective coefficient = raw × scale. An
+//! update multiplies `scale` by `(1−α)` and inserts the new entry with
+//! `raw = α/(b_j·scale)` — O(b_j) per update. Underflow is handled by
+//! folding `scale` back into the raws when it gets tiny.
+//!
+//! Truncation (the `Q_i^j` set): the window keeps the minimal suffix of
+//! batches whose point count reaches τ, so the support size is at most
+//! τ + b. While the window still reaches back to iteration 1, the decayed
+//! initial center `C_1^j·Π(1−α)` is retained so `Ĉ = C` exactly
+//! (Equation 1's second case); the first trim drops it.
+
+use crate::kernels::Gram;
+
+/// One iteration's surviving contribution: the batch-cluster points and
+/// their raw per-point coefficients.
+#[derive(Clone, Debug)]
+struct WindowEntry {
+    points: Vec<u32>,
+    /// Raw per-point coefficients (effective = raw × window.scale).
+    raws: Vec<f64>,
+}
+
+impl WindowEntry {
+    fn len(&self) -> usize {
+        self.points.len()
+    }
+}
+
+/// The truncated representation of one center.
+#[derive(Clone, Debug)]
+pub struct CenterWindow {
+    entries: std::collections::VecDeque<WindowEntry>,
+    /// Global decay multiplier (see module docs).
+    scale: f64,
+    /// The initial center `C_1^j` (a single dataset point) with its raw
+    /// coefficient; present while the window still reaches iteration 1.
+    init_point: Option<(u32, f64)>,
+    /// Truncation parameter τ (`usize::MAX` = never truncate ⇒ Algorithm 1
+    /// semantics with an explicit representation).
+    tau: usize,
+    /// Total number of points across entries.
+    total_points: usize,
+    /// Cached ⟨Ĉ, Ĉ⟩; invalidated on update (or maintained incrementally by
+    /// [`CenterWindow::apply_update_cc`]).
+    cc_cache: Option<f64>,
+    /// Updates since the last exact ⟨Ĉ,Ĉ⟩ recomputation (drift control for
+    /// the incremental path).
+    updates_since_exact: u32,
+}
+
+/// Recompute ⟨Ĉ,Ĉ⟩ exactly after this many incremental updates (bounds
+/// floating-point drift; the O(M²) cost amortizes to nothing).
+const CC_REFRESH_PERIOD: u32 = 256;
+
+impl CenterWindow {
+    /// A fresh center at dataset point `init_idx`.
+    pub fn new(init_idx: usize, tau: usize) -> CenterWindow {
+        assert!(tau >= 1);
+        CenterWindow {
+            entries: std::collections::VecDeque::new(),
+            scale: 1.0,
+            init_point: Some((init_idx as u32, 1.0)),
+            tau,
+            total_points: 0,
+            cc_cache: None,
+            updates_since_exact: 0,
+        }
+    }
+
+    /// τ from Lemma 3: `⌈b·ln²(28γ/ε)⌉` guarantees `‖Ĉ−C‖ ≤ ε/28`.
+    pub fn lemma3_tau(b: usize, gamma: f64, epsilon: f64) -> usize {
+        let l = (28.0 * gamma / epsilon).ln().max(1.0);
+        (b as f64 * l * l).ceil() as usize
+    }
+
+    /// Apply the mini-batch update with learning rate `alpha` and the batch
+    /// points assigned to this center. `point_weights`, when given, are the
+    /// (positive) dataset weights of those points — the weighted-variant
+    /// `cm` is the weighted mean.
+    pub fn apply_update(
+        &mut self,
+        alpha: f64,
+        points: &[usize],
+        point_weights: Option<&[f64]>,
+    ) {
+        assert!((0.0..=1.0).contains(&alpha), "alpha={alpha}");
+        if alpha == 0.0 || points.is_empty() {
+            return; // b_j = 0 ⇒ center unchanged
+        }
+        self.cc_cache = None;
+        if alpha >= 1.0 {
+            // Old center's coefficient is exactly 0: drop all history.
+            self.entries.clear();
+            self.init_point = None;
+            self.total_points = 0;
+            self.scale = 1.0;
+        } else {
+            self.scale *= 1.0 - alpha;
+            if self.scale < 1e-150 {
+                self.renormalize();
+            }
+        }
+        // cm(B_i^j) per-point coefficients (sum to 1), scaled by α.
+        let raws: Vec<f64> = match point_weights {
+            None => {
+                let c = alpha / (points.len() as f64 * self.scale);
+                vec![c; points.len()]
+            }
+            Some(ws) => {
+                assert_eq!(ws.len(), points.len());
+                let total: f64 = ws.iter().sum();
+                ws.iter()
+                    .map(|w| alpha * w / (total * self.scale))
+                    .collect()
+            }
+        };
+        self.entries.push_back(WindowEntry {
+            points: points.iter().map(|&p| p as u32).collect(),
+            raws,
+        });
+        self.total_points += points.len();
+        // Trim to the minimal suffix with ≥ τ points (the Q_i^j rule).
+        while let Some(front) = self.entries.front() {
+            let without_front = self.total_points - front.len();
+            if without_front >= self.tau {
+                self.total_points = without_front;
+                self.entries.pop_front();
+                // History no longer reaches iteration 1.
+                self.init_point = None;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn renormalize(&mut self) {
+        let s = self.scale;
+        for e in self.entries.iter_mut() {
+            for r in e.raws.iter_mut() {
+                *r *= s;
+            }
+        }
+        if let Some((_, r)) = self.init_point.as_mut() {
+            *r *= s;
+        }
+        self.scale = 1.0;
+    }
+
+    /// Support size: number of (point, coefficient) pairs representing Ĉ.
+    pub fn support_len(&self) -> usize {
+        self.total_points + usize::from(self.init_point.is_some())
+    }
+
+    /// Iterate the support as (dataset index, effective coefficient).
+    pub fn support(&self) -> impl Iterator<Item = (usize, f64)> + '_ {
+        self.init_point
+            .iter()
+            .map(move |&(idx, raw)| (idx as usize, raw * self.scale))
+            .chain(self.entries.iter().flat_map(move |e| {
+                e.points
+                    .iter()
+                    .zip(e.raws.iter())
+                    .map(move |(&p, &r)| (p as usize, r * self.scale))
+            }))
+    }
+
+    /// Σ of effective coefficients. Equals 1 exactly while untruncated
+    /// (convex combination); drops below 1 once history is discarded.
+    pub fn weight_sum(&self) -> f64 {
+        self.support().map(|(_, w)| w).sum()
+    }
+
+    /// Whether this window still represents the exact (untruncated) center.
+    pub fn is_exact(&self) -> bool {
+        self.init_point.is_some()
+    }
+
+    /// `⟨φ(x), Ĉ⟩` — O(support) kernel evaluations. Takes the materialized
+    /// fast path (direct row loads) when available.
+    pub fn cross_with_point(&self, gram: &Gram, x: usize) -> f64 {
+        if let Some(row) = gram.row_slice(x) {
+            self.support().map(|(y, w)| w * row[y] as f64).sum()
+        } else {
+            self.support().map(|(y, w)| w * gram.eval(x, y)).sum()
+        }
+    }
+
+    /// `⟨Ĉ, Ĉ⟩` — O(support²) kernel evaluations, cached until the next
+    /// update (the two backend calls per iteration share it). When updates
+    /// flow through [`CenterWindow::apply_update_cc`] the cache is
+    /// maintained *incrementally* and this is O(1).
+    pub fn self_inner(&mut self, gram: &Gram) -> f64 {
+        if let Some(cc) = self.cc_cache {
+            return cc;
+        }
+        let sup: Vec<(usize, f64)> = self.support().collect();
+        let mut cc = 0.0;
+        for (a, &(ya, wa)) in sup.iter().enumerate() {
+            if let Some(row) = gram.row_slice(ya) {
+                cc += wa * wa * row[ya] as f64;
+                for &(yb, wb) in sup.iter().skip(a + 1) {
+                    cc += 2.0 * wa * wb * row[yb] as f64;
+                }
+            } else {
+                cc += wa * wa * gram.self_k(ya);
+                for &(yb, wb) in sup.iter().skip(a + 1) {
+                    cc += 2.0 * wa * wb * gram.eval(ya, yb);
+                }
+            }
+        }
+        self.cc_cache = Some(cc);
+        self.updates_since_exact = 0;
+        cc
+    }
+
+    /// Like [`CenterWindow::apply_update`], but maintains `⟨Ĉ,Ĉ⟩`
+    /// incrementally instead of invalidating it: the update rule expands to
+    ///
+    /// `cc' = (1−α)²·cc + 2α(1−α)·⟨Ĉ, cm⟩ + α²·⟨cm, cm⟩`,
+    ///
+    /// costing `O(M·b_j + b_j²)` instead of the `O(M²)` recomputation the
+    /// next `self_inner` would pay — the dominant saving of the §Perf pass
+    /// (EXPERIMENTS.md). Trimmed window entries are subtracted via
+    /// `‖Ĉ−e‖² = cc − 2⟨e,Ĉ⟩ + ‖e‖²`. Every [`CC_REFRESH_PERIOD`] updates
+    /// the cache is recomputed exactly to bound drift.
+    pub fn apply_update_cc(
+        &mut self,
+        alpha: f64,
+        points: &[usize],
+        point_weights: Option<&[f64]>,
+        gram: &Gram,
+    ) {
+        assert!((0.0..=1.0).contains(&alpha), "alpha={alpha}");
+        if alpha == 0.0 || points.is_empty() {
+            return;
+        }
+        self.updates_since_exact += 1;
+        let track = self.updates_since_exact < CC_REFRESH_PERIOD;
+
+        // cm(B) per-point coefficients u (sum to 1).
+        let u: Vec<f64> = match point_weights {
+            None => vec![1.0 / points.len() as f64; points.len()],
+            Some(ws) => {
+                let total: f64 = ws.iter().sum();
+                ws.iter().map(|w| w / total).collect()
+            }
+        };
+
+        if track {
+            let cc = self.self_inner(gram);
+            // ⟨Ĉ, cm⟩ — O(M·b_j).
+            let mut c_dot_cm = 0.0;
+            for (up, &p) in u.iter().zip(points.iter()) {
+                c_dot_cm += up * self.cross_with_point(gram, p);
+            }
+            // ⟨cm, cm⟩ — O(b_j²).
+            let mut cm_dot_cm = 0.0;
+            for (ui, &p) in u.iter().zip(points.iter()) {
+                if let Some(row) = gram.row_slice(p) {
+                    for (uq, &q) in u.iter().zip(points.iter()) {
+                        cm_dot_cm += ui * uq * row[q] as f64;
+                    }
+                } else {
+                    for (uq, &q) in u.iter().zip(points.iter()) {
+                        cm_dot_cm += ui * uq * gram.eval(p, q);
+                    }
+                }
+            }
+            let new_cc = if alpha >= 1.0 {
+                cm_dot_cm
+            } else {
+                (1.0 - alpha) * (1.0 - alpha) * cc
+                    + 2.0 * alpha * (1.0 - alpha) * c_dot_cm
+                    + alpha * alpha * cm_dot_cm
+            };
+            self.cc_cache = Some(new_cc.max(0.0));
+        } else {
+            self.cc_cache = None;
+        }
+
+        // ---- state update (mirrors apply_update, trim-aware) ---------------
+        if alpha >= 1.0 {
+            self.entries.clear();
+            self.init_point = None;
+            self.total_points = 0;
+            self.scale = 1.0;
+        } else {
+            self.scale *= 1.0 - alpha;
+            if self.scale < 1e-150 {
+                self.renormalize();
+            }
+        }
+        let raws: Vec<f64> = u.iter().map(|up| alpha * up / self.scale).collect();
+        self.entries.push_back(WindowEntry {
+            points: points.iter().map(|&p| p as u32).collect(),
+            raws,
+        });
+        self.total_points += points.len();
+
+        let mut popped_any = false;
+        while let Some(front) = self.entries.front() {
+            let without_front = self.total_points - front.len();
+            if without_front < self.tau {
+                break;
+            }
+            if track {
+                // Subtract entry e from cc *before* removing it.
+                let e_pts: Vec<usize> =
+                    front.points.iter().map(|&p| p as usize).collect();
+                let e_ws: Vec<f64> = front.raws.iter().map(|&r| r * self.scale).collect();
+                self.subtract_from_cc(gram, &e_pts, &e_ws);
+            }
+            self.total_points = without_front;
+            self.entries.pop_front();
+            popped_any = true;
+        }
+        if popped_any {
+            if let Some((idx, raw)) = self.init_point {
+                if track {
+                    self.subtract_from_cc(gram, &[idx as usize], &[raw * self.scale]);
+                }
+                self.init_point = None;
+            }
+        }
+        if self.cc_cache.is_none() {
+            // Refresh period hit: recompute exactly now (O(M²), amortized).
+            let _ = self.self_inner(gram);
+        }
+    }
+
+    /// Rebuild this window with dataset indices translated through `remap`
+    /// (used by the streaming reservoir's compaction). Entry structure,
+    /// coefficients, and the cc cache are preserved; unmapped indices panic
+    /// (compaction must keep every referenced row).
+    pub fn remap_indices(
+        &self,
+        remap: &std::collections::HashMap<usize, usize>,
+        tau: usize,
+    ) -> CenterWindow {
+        let map = |p: u32| -> u32 {
+            *remap
+                .get(&(p as usize))
+                .unwrap_or_else(|| panic!("compaction dropped referenced row {p}"))
+                as u32
+        };
+        CenterWindow {
+            entries: self
+                .entries
+                .iter()
+                .map(|e| WindowEntry {
+                    points: e.points.iter().map(|&p| map(p)).collect(),
+                    raws: e.raws.clone(),
+                })
+                .collect(),
+            scale: self.scale,
+            init_point: self.init_point.map(|(p, r)| (map(p), r)),
+            tau,
+            total_points: self.total_points,
+            cc_cache: self.cc_cache,
+            updates_since_exact: self.updates_since_exact,
+        }
+    }
+
+    /// cc ← ‖Ĉ − e‖² where e = Σ w_p φ(p) is currently part of the support.
+    fn subtract_from_cc(&mut self, gram: &Gram, pts: &[usize], ws: &[f64]) {
+        let Some(cc) = self.cc_cache else { return };
+        let mut e_dot_c = 0.0;
+        for (&p, &w) in pts.iter().zip(ws.iter()) {
+            e_dot_c += w * self.cross_with_point(gram, p);
+        }
+        let mut e_dot_e = 0.0;
+        for (&p, &wp) in pts.iter().zip(ws.iter()) {
+            if let Some(row) = gram.row_slice(p) {
+                for (&q, &wq) in pts.iter().zip(ws.iter()) {
+                    e_dot_e += wp * wq * row[q] as f64;
+                }
+            } else {
+                for (&q, &wq) in pts.iter().zip(ws.iter()) {
+                    e_dot_e += wp * wq * gram.eval(p, q);
+                }
+            }
+        }
+        self.cc_cache = Some((cc - 2.0 * e_dot_c + e_dot_e).max(0.0));
+    }
+
+    /// `‖Ĉ − other‖²` where `other` is another window over the same gram —
+    /// used by tests to verify Lemma 3 empirically.
+    pub fn sqdist_to(&self, other: &CenterWindow, gram: &Gram) -> f64 {
+        let a: Vec<(usize, f64)> = self.support().collect();
+        let b: Vec<(usize, f64)> = other.support().collect();
+        // ‖A−B‖² = ⟨A,A⟩ − 2⟨A,B⟩ + ⟨B,B⟩ over combined support.
+        let mut aa = 0.0;
+        for &(ya, wa) in &a {
+            for &(yb, wb) in &a {
+                aa += wa * wb * gram.eval(ya, yb);
+            }
+        }
+        let mut bb = 0.0;
+        for &(ya, wa) in &b {
+            for &(yb, wb) in &b {
+                bb += wa * wb * gram.eval(ya, yb);
+            }
+        }
+        let mut ab = 0.0;
+        for &(ya, wa) in &a {
+            for &(yb, wb) in &b {
+                ab += wa * wb * gram.eval(ya, yb);
+            }
+        }
+        (aa - 2.0 * ab + bb).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{blobs, SyntheticSpec};
+    use crate::kernels::{Gram, KernelFunction};
+    use crate::util::rng::Rng;
+
+    fn fixture() -> crate::data::Dataset {
+        let mut rng = Rng::seeded(55);
+        blobs(&SyntheticSpec::new(120, 3, 3), &mut rng)
+    }
+
+    #[test]
+    fn fresh_window_is_the_init_point() {
+        let w = CenterWindow::new(7, 100);
+        let sup: Vec<_> = w.support().collect();
+        assert_eq!(sup, vec![(7, 1.0)]);
+        assert!(w.is_exact());
+        assert_eq!(w.support_len(), 1);
+    }
+
+    #[test]
+    fn untruncated_weights_sum_to_one() {
+        let mut rng = Rng::seeded(1);
+        let mut w = CenterWindow::new(0, usize::MAX);
+        for _ in 0..30 {
+            let bj = 1 + rng.below(8);
+            let pts: Vec<usize> = (0..bj).map(|_| rng.below(120)).collect();
+            let alpha = (bj as f64 / 32.0).sqrt();
+            w.apply_update(alpha, &pts, None);
+            assert!((w.weight_sum() - 1.0).abs() < 1e-9, "sum={}", w.weight_sum());
+            assert!(w.is_exact());
+        }
+    }
+
+    #[test]
+    fn truncated_weights_at_most_one_and_support_bounded() {
+        let mut rng = Rng::seeded(2);
+        let tau = 20;
+        let b = 16;
+        let mut w = CenterWindow::new(0, tau);
+        for _ in 0..100 {
+            let bj = 1 + rng.below(b);
+            let pts: Vec<usize> = (0..bj).map(|_| rng.below(120)).collect();
+            w.apply_update((bj as f64 / b as f64).sqrt(), &pts, None);
+            let sum = w.weight_sum();
+            assert!(sum <= 1.0 + 1e-9, "sum={sum}");
+            assert!(sum > 0.0);
+            // Support ≤ τ + b (+1 for init while exact).
+            assert!(w.support_len() <= tau + b + 1, "support={}", w.support_len());
+        }
+        assert!(!w.is_exact(), "100 updates of ≥1 point must have trimmed τ=20");
+    }
+
+    #[test]
+    fn window_keeps_minimal_suffix_reaching_tau() {
+        let mut w = CenterWindow::new(0, 10);
+        // Batches of 4 points each: after trim the suffix point count must be
+        // ≥ τ only including the oldest entry, i.e. in [τ, τ+4).
+        for i in 0..20 {
+            let pts: Vec<usize> = (0..4).map(|p| (i * 4 + p) % 100).collect();
+            w.apply_update(0.5, &pts, None);
+        }
+        assert!(w.total_points >= 10 && w.total_points < 14, "{}", w.total_points);
+    }
+
+    #[test]
+    fn alpha_one_resets_history() {
+        let mut w = CenterWindow::new(3, 50);
+        w.apply_update(0.5, &[1, 2], None);
+        w.apply_update(1.0, &[9, 10, 11], None);
+        let sup: Vec<_> = w.support().collect();
+        assert_eq!(sup.len(), 3);
+        assert!(sup.iter().all(|&(p, _)| p >= 9));
+        assert!((w.weight_sum() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn alpha_zero_is_noop() {
+        let mut w = CenterWindow::new(3, 50);
+        w.apply_update(0.5, &[1, 2], None);
+        let before: Vec<_> = w.support().collect();
+        w.apply_update(0.0, &[], None);
+        let after: Vec<_> = w.support().collect();
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn coefficients_match_recursive_expansion() {
+        // Hand-check: C₁ = φ(0); α₁=0.5 with B={1}; α₂=0.25 with B={2,3}.
+        // C₃ = 0.5·0.75·φ(0)... wait: C₂ = 0.5φ(0)+0.5φ(1);
+        // C₃ = 0.75·C₂ + 0.25·cm({2,3})
+        //    = 0.375φ(0) + 0.375φ(1) + 0.125φ(2) + 0.125φ(3).
+        let mut w = CenterWindow::new(0, usize::MAX);
+        w.apply_update(0.5, &[1], None);
+        w.apply_update(0.25, &[2, 3], None);
+        let sup: std::collections::BTreeMap<usize, f64> = w.support().collect();
+        assert!((sup[&0] - 0.375).abs() < 1e-12);
+        assert!((sup[&1] - 0.375).abs() < 1e-12);
+        assert!((sup[&2] - 0.125).abs() < 1e-12);
+        assert!((sup[&3] - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_cm_uses_dataset_weights() {
+        let mut w = CenterWindow::new(0, usize::MAX);
+        // Points 1 and 2 with weights 3 and 1 → cm = 0.75φ(1) + 0.25φ(2).
+        w.apply_update(1.0, &[1, 2], Some(&[3.0, 1.0]));
+        let sup: std::collections::BTreeMap<usize, f64> = w.support().collect();
+        assert!((sup[&1] - 0.75).abs() < 1e-12);
+        assert!((sup[&2] - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn self_inner_matches_bruteforce_and_caches() {
+        let ds = fixture();
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 6.0 });
+        let mut rng = Rng::seeded(3);
+        let mut w = CenterWindow::new(5, 30);
+        for _ in 0..10 {
+            let pts: Vec<usize> = (0..6).map(|_| rng.below(ds.n)).collect();
+            w.apply_update(0.4, &pts, None);
+        }
+        let cc = w.self_inner(&gram);
+        // Brute force over support.
+        let sup: Vec<_> = w.support().collect();
+        let mut brute = 0.0;
+        for &(a, wa) in &sup {
+            for &(b, wb) in &sup {
+                brute += wa * wb * gram.eval(a, b);
+            }
+        }
+        assert!((cc - brute).abs() < 1e-10);
+        assert_eq!(w.self_inner(&gram), cc); // cached value identical
+    }
+
+    #[test]
+    fn cross_with_point_matches_bruteforce() {
+        let ds = fixture();
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 6.0 });
+        let mut w = CenterWindow::new(2, usize::MAX);
+        w.apply_update(0.5, &[10, 20, 30], None);
+        let x = 40;
+        let got = w.cross_with_point(&gram, x);
+        let want: f64 = w.support().map(|(y, c)| c * gram.eval(x, y)).sum();
+        assert!((got - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scale_underflow_renormalizes_transparently() {
+        let mut w = CenterWindow::new(0, 5);
+        // α close to 1 ⇒ scale shrinks brutally fast; 2000 updates would
+        // underflow any fixed scale without renormalization.
+        for i in 0..2000 {
+            w.apply_update(0.999, &[i % 50], None);
+            assert!(w.weight_sum().is_finite());
+        }
+        let sum = w.weight_sum();
+        // Window of ≤ 5+1 recent points with α≈1: total weight ≈ 1.
+        assert!(sum > 0.99 && sum <= 1.0 + 1e-9, "sum={sum}");
+    }
+
+    #[test]
+    fn incremental_cc_matches_bruteforce_over_long_streams() {
+        // apply_update_cc's maintained ⟨Ĉ,Ĉ⟩ must track the brute-force
+        // value through appends, trims, init drop, α=1 resets, and weights.
+        let ds = fixture();
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 6.0 });
+        let mat = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 6.0 }).materialize();
+        for g in [&gram, &mat] {
+            let mut rng = Rng::seeded(12);
+            let mut inc = CenterWindow::new(3, 25);
+            let mut brute = CenterWindow::new(3, 25);
+            for step in 0..120 {
+                let bj = 1 + rng.below(12);
+                let pts: Vec<usize> = (0..bj).map(|_| rng.below(ds.n)).collect();
+                let alpha = if step == 60 { 1.0 } else { (bj as f64 / 16.0).min(1.0).sqrt() };
+                let w: Option<Vec<f64>> = if step % 3 == 0 {
+                    Some(pts.iter().map(|&p| 1.0 + (p % 4) as f64).collect())
+                } else {
+                    None
+                };
+                inc.apply_update_cc(alpha, &pts, w.as_deref(), g);
+                brute.apply_update(alpha, &pts, w.as_deref());
+                let got = inc.self_inner(g);
+                let want = brute.self_inner(g);
+                assert!(
+                    (got - want).abs() < 1e-6,
+                    "step {step}: incremental {got} vs brute {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lemma3_tau_formula() {
+        // τ = ⌈b·ln²(28γ/ε)⌉
+        let tau = CenterWindow::lemma3_tau(100, 1.0, 0.1);
+        let l = (280.0f64).ln();
+        assert_eq!(tau, (100.0 * l * l).ceil() as usize);
+        // Degenerate ε ≥ 28γ clamps to b.
+        assert_eq!(CenterWindow::lemma3_tau(100, 1.0, 100.0), 100);
+    }
+
+    #[test]
+    fn truncation_error_obeys_lemma3_bound() {
+        // Run identical update streams through an untruncated window and a
+        // τ = lemma3 window; final centers must differ by ≤ ε/28 in feature
+        // space (Lemma 3), using the β learning rate.
+        let ds = fixture();
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 6.0 });
+        let epsilon = 0.5f64;
+        let gamma = 1.0;
+        let b = 16;
+        let tau = CenterWindow::lemma3_tau(b, gamma, epsilon);
+        let mut exact = CenterWindow::new(0, usize::MAX);
+        let mut trunc = CenterWindow::new(0, tau);
+        let mut rng = Rng::seeded(8);
+        for _ in 0..60 {
+            let bj = 1 + rng.below(b);
+            let pts: Vec<usize> = (0..bj).map(|_| rng.below(ds.n)).collect();
+            let alpha = (bj as f64 / b as f64).sqrt();
+            exact.apply_update(alpha, &pts, None);
+            trunc.apply_update(alpha, &pts, None);
+        }
+        let err = trunc.sqdist_to(&exact, &gram).sqrt();
+        assert!(err <= epsilon / 28.0 + 1e-9, "err={err} bound={}", epsilon / 28.0);
+    }
+}

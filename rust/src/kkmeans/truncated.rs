@@ -1,0 +1,368 @@
+//! **Algorithm 2** — truncated mini-batch kernel k-means (paper §4.1).
+//!
+//! The headline algorithm: each center is a [`CenterWindow`] over at most
+//! τ+b recent support points, so one iteration costs `O(k(τ+b)²) = Õ(kb²)`
+//! — *independent of n*. With Lemma 3's `τ = ⌈b·ln²(28γ/ε)⌉` the truncated
+//! centers stay within ε/28 of the exact ones, and Theorem 1 gives
+//! termination in `O(γ²/ε)` iterations for
+//! `b = Ω(max{γ⁴,γ²}·ε⁻²·log²(γn/ε))`.
+//!
+//! The assignment hot-spot runs through an [`AssignBackend`]; pass
+//! [`crate::runtime::XlaBackend`] to execute the AOT-compiled JAX/Pallas
+//! graph, or [`NativeBackend`] for the pure-Rust path.
+
+use super::backend::{argmin_rows, AssignBackend, NativeBackend};
+use super::init::choose_centers;
+use super::learning_rate::{LearningRate, RateState};
+use super::state::CenterWindow;
+use super::{FitResult, Init};
+use crate::kernels::Gram;
+use crate::util::rng::Rng;
+use crate::util::timing::{Profiler, Stopwatch};
+
+/// Configuration for [`TruncatedMiniBatchKernelKMeans`] (Algorithm 2).
+#[derive(Clone, Debug)]
+pub struct TruncatedConfig {
+    pub k: usize,
+    /// Batch size `b` (uniform with repetitions).
+    pub batch_size: usize,
+    /// Truncation parameter τ: target number of support points per center.
+    /// The paper sweeps τ ∈ {50, 100, 200, 300}; `usize::MAX` disables
+    /// truncation (Algorithm 1 semantics, explicit representation).
+    pub tau: usize,
+    pub max_iters: usize,
+    /// Early-stopping ε on batch improvement; `None` = fixed iterations.
+    pub epsilon: Option<f64>,
+    pub learning_rate: LearningRate,
+    pub init: Init,
+    /// Optional per-point weights (weighted variant, footnote 1).
+    pub weights: Option<Vec<f64>>,
+}
+
+impl Default for TruncatedConfig {
+    fn default() -> Self {
+        TruncatedConfig {
+            k: 2,
+            batch_size: 1024,
+            tau: 200,
+            max_iters: 200,
+            epsilon: None,
+            learning_rate: LearningRate::Beta,
+            init: Init::default(),
+            weights: None,
+        }
+    }
+}
+
+impl TruncatedConfig {
+    /// τ from Lemma 3 for the given γ and ε.
+    pub fn with_lemma3_tau(mut self, gamma: f64, epsilon: f64) -> Self {
+        self.tau = CenterWindow::lemma3_tau(self.batch_size, gamma, epsilon);
+        self
+    }
+}
+
+/// Detailed fit output: shared [`FitResult`] plus the final center windows
+/// (for inspection, warm restarts, or serving).
+pub struct TruncatedFit {
+    pub result: FitResult,
+    pub centers: Vec<CenterWindow>,
+}
+
+/// Algorithm 2 runner.
+pub struct TruncatedMiniBatchKernelKMeans {
+    cfg: TruncatedConfig,
+}
+
+impl TruncatedMiniBatchKernelKMeans {
+    pub fn new(cfg: TruncatedConfig) -> Self {
+        TruncatedMiniBatchKernelKMeans { cfg }
+    }
+
+    /// Fit with the native backend.
+    pub fn fit(&self, gram: &Gram, rng: &mut Rng) -> FitResult {
+        self.fit_with_backend(gram, &mut NativeBackend, rng).result
+    }
+
+    /// Fit with an explicit assignment backend (native or XLA).
+    pub fn fit_with_backend(
+        &self,
+        gram: &Gram,
+        backend: &mut dyn AssignBackend,
+        rng: &mut Rng,
+    ) -> TruncatedFit {
+        let n = gram.n();
+        let k = self.cfg.k;
+        let b = self.cfg.batch_size.min(n.max(1));
+        assert!(k >= 1 && k <= n);
+        let weights = self.cfg.weights.as_deref();
+        let mut prof = Profiler::new();
+
+        // ---- init ----------------------------------------------------------
+        let sw = Stopwatch::start();
+        let seeds = choose_centers(gram, k, self.cfg.init, rng);
+        let mut centers: Vec<CenterWindow> = seeds
+            .iter()
+            .map(|&s| CenterWindow::new(s, self.cfg.tau))
+            .collect();
+        let mut rate = RateState::new(self.cfg.learning_rate, k);
+        prof.add("init", sw.secs());
+
+        let mut history = Vec::new();
+        let mut iterations = 0;
+        let mut converged = false;
+
+        for _iter in 0..self.cfg.max_iters {
+            iterations += 1;
+            // ---- sample + assign (the Õ(kb²) hot path) ----------------------
+            let sw = Stopwatch::start();
+            let batch = rng.sample_with_replacement(n, b);
+            let dist = backend.distances(gram, &batch, &mut centers);
+            let (assign, mins) = argmin_rows(&dist, k);
+            let f_before = super::objective::weighted_mean(&batch, &mins, weights);
+            history.push(f_before);
+            prof.add("assign", sw.secs());
+
+            // ---- update windows ---------------------------------------------
+            let sw = Stopwatch::start();
+            let mut members: Vec<Vec<usize>> = vec![Vec::new(); k];
+            for (r, &j) in assign.iter().enumerate() {
+                members[j].push(batch[r]);
+            }
+            for j in 0..k {
+                let alpha = rate.alpha(j, members[j].len(), b);
+                if alpha == 0.0 {
+                    continue;
+                }
+                let pw: Option<Vec<f64>> = weights
+                    .map(|w| members[j].iter().map(|&y| w[y]).collect());
+                // Incremental ⟨Ĉ,Ĉ⟩ maintenance (§Perf): O(M·b_j) instead of
+                // the O(M²) recompute the next assignment would pay.
+                centers[j].apply_update_cc(alpha, &members[j], pw.as_deref(), gram);
+            }
+            prof.add("update", sw.secs());
+
+            // ---- early stopping: f_B(Ĉ_i) − f_B(Ĉ_{i+1}) < ε ----------------
+            if let Some(eps) = self.cfg.epsilon {
+                let sw = Stopwatch::start();
+                let dist2 = backend.distances(gram, &batch, &mut centers);
+                let (_, mins2) = argmin_rows(&dist2, k);
+                let f_after = super::objective::weighted_mean(&batch, &mins2, weights);
+                prof.add("stopping", sw.secs());
+                if f_before - f_after < eps {
+                    converged = true;
+                    break;
+                }
+            }
+        }
+
+        // ---- finalize -------------------------------------------------------
+        let sw = Stopwatch::start();
+        let (assignments, objective) =
+            super::objective::evaluate_full(gram, &mut centers, backend, weights);
+        prof.add("finalize", sw.secs());
+
+        TruncatedFit {
+            result: FitResult {
+                assignments,
+                objective,
+                history,
+                iterations,
+                converged,
+                profiler: prof,
+            },
+            centers,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{blobs, rings, SyntheticSpec};
+    use crate::kernels::KernelFunction;
+    use crate::metrics::ari;
+
+    fn fixture(n: usize) -> crate::data::Dataset {
+        let mut rng = Rng::seeded(7);
+        blobs(
+            &SyntheticSpec::new(n, 4, 3).with_std(0.4).with_separation(7.0),
+            &mut rng,
+        )
+    }
+
+    #[test]
+    fn recovers_blobs() {
+        let ds = fixture(800);
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 20.0 });
+        let cfg = TruncatedConfig {
+            k: 3,
+            batch_size: 128,
+            tau: 100,
+            max_iters: 60,
+            ..Default::default()
+        };
+        let mut rng = Rng::seeded(1);
+        let res = TruncatedMiniBatchKernelKMeans::new(cfg).fit(&gram, &mut rng);
+        let score = ari(ds.labels.as_ref().unwrap(), &res.assignments);
+        assert!(score > 0.9, "ARI={score}");
+    }
+
+    #[test]
+    fn separates_rings() {
+        // Heat kernel: affinity diffuses within each ring and not across
+        // (see full_batch tests for why raw knn is too sparse here).
+        let mut rng = Rng::seeded(2);
+        let ds = rings(900, 2, 2, 0.04, &mut rng);
+        let gram = crate::kernels::graph::heat_kernel(&ds, 10, 500.0);
+        let cfg = TruncatedConfig {
+            k: 2,
+            batch_size: 256,
+            tau: 200,
+            max_iters: 80,
+            ..Default::default()
+        };
+        let mut best = 0.0f64;
+        for seed in 0..5 {
+            let mut r = Rng::seeded(seed);
+            let res = TruncatedMiniBatchKernelKMeans::new(cfg.clone()).fit(&gram, &mut r);
+            best = best.max(ari(ds.labels.as_ref().unwrap(), &res.assignments));
+        }
+        assert!(best > 0.85, "ARI={best}");
+    }
+
+    #[test]
+    fn tiny_tau_still_clusters() {
+        // Paper §6: "Surprisingly, this often holds for tiny values of τ
+        // (e.g., 50) far below the theoretical threshold".
+        let ds = fixture(800);
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 20.0 });
+        let cfg = TruncatedConfig {
+            k: 3,
+            batch_size: 128,
+            tau: 20,
+            max_iters: 60,
+            ..Default::default()
+        };
+        let mut rng = Rng::seeded(3);
+        let res = TruncatedMiniBatchKernelKMeans::new(cfg).fit(&gram, &mut rng);
+        let score = ari(ds.labels.as_ref().unwrap(), &res.assignments);
+        assert!(score > 0.8, "ARI={score}");
+    }
+
+    #[test]
+    fn untruncated_matches_algorithm1_objective_closely() {
+        // τ=∞ Algorithm 2 and Algorithm 1 compute the same math through
+        // different representations; with the same seed they see identical
+        // batches and must produce identical assignments.
+        use crate::kkmeans::minibatch::{MiniBatchConfig, MiniBatchKernelKMeans};
+        let ds = fixture(300);
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 15.0 });
+        let base = (3usize, 64usize, 25usize);
+        let cfg2 = TruncatedConfig {
+            k: base.0,
+            batch_size: base.1,
+            tau: usize::MAX,
+            max_iters: base.2,
+            init: Init::Uniform,
+            ..Default::default()
+        };
+        let cfg1 = MiniBatchConfig {
+            k: base.0,
+            batch_size: base.1,
+            max_iters: base.2,
+            init: Init::Uniform,
+            ..Default::default()
+        };
+        let mut r1 = Rng::seeded(11);
+        let mut r2 = Rng::seeded(11);
+        let res1 = MiniBatchKernelKMeans::new(cfg1).fit(&gram, &mut r1);
+        let res2 = TruncatedMiniBatchKernelKMeans::new(cfg2).fit(&gram, &mut r2);
+        assert_eq!(res1.assignments, res2.assignments);
+        assert!((res1.objective - res2.objective).abs() < 1e-8);
+        for (a, b) in res1.history.iter().zip(res2.history.iter()) {
+            assert!((a - b).abs() < 1e-8, "history diverged: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn early_stopping_fires() {
+        let ds = fixture(500);
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 20.0 });
+        let cfg = TruncatedConfig {
+            k: 3,
+            batch_size: 256,
+            tau: 200,
+            max_iters: 300,
+            epsilon: Some(1e-3),
+            ..Default::default()
+        };
+        let mut rng = Rng::seeded(4);
+        let res = TruncatedMiniBatchKernelKMeans::new(cfg).fit(&gram, &mut rng);
+        assert!(res.converged);
+        assert!(res.iterations < 300, "ran {} iterations", res.iterations);
+    }
+
+    #[test]
+    fn support_size_stays_bounded() {
+        let ds = fixture(500);
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 20.0 });
+        let tau = 50;
+        let b = 64;
+        let cfg = TruncatedConfig {
+            k: 3,
+            batch_size: b,
+            tau,
+            max_iters: 40,
+            ..Default::default()
+        };
+        let mut rng = Rng::seeded(5);
+        let fit = TruncatedMiniBatchKernelKMeans::new(cfg)
+            .fit_with_backend(&gram, &mut NativeBackend, &mut rng);
+        for c in &fit.centers {
+            assert!(
+                c.support_len() <= tau + b + 1,
+                "support={} > τ+b+1",
+                c.support_len()
+            );
+        }
+    }
+
+    #[test]
+    fn weighted_variant_runs_and_respects_weights() {
+        let ds = fixture(300);
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 15.0 });
+        let w: Vec<f64> = (0..ds.n).map(|i| 1.0 + (i % 3) as f64).collect();
+        let cfg = TruncatedConfig {
+            k: 3,
+            batch_size: 64,
+            tau: 100,
+            max_iters: 30,
+            weights: Some(w),
+            ..Default::default()
+        };
+        let mut rng = Rng::seeded(6);
+        let res = TruncatedMiniBatchKernelKMeans::new(cfg).fit(&gram, &mut rng);
+        assert_eq!(res.assignments.len(), ds.n);
+        assert!(res.objective.is_finite());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = fixture(300);
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 15.0 });
+        let cfg = TruncatedConfig {
+            k: 3,
+            batch_size: 64,
+            tau: 80,
+            max_iters: 20,
+            ..Default::default()
+        };
+        let mut r1 = Rng::seeded(12);
+        let mut r2 = Rng::seeded(12);
+        let a = TruncatedMiniBatchKernelKMeans::new(cfg.clone()).fit(&gram, &mut r1);
+        let b = TruncatedMiniBatchKernelKMeans::new(cfg).fit(&gram, &mut r2);
+        assert_eq!(a.assignments, b.assignments);
+        assert_eq!(a.objective, b.objective);
+    }
+}

@@ -1,0 +1,149 @@
+//! Lloyd's algorithm (standard k-means) on raw features.
+
+use super::{assign_to_centers, kmeanspp_features};
+use crate::data::Dataset;
+use crate::kkmeans::FitResult;
+use crate::util::rng::Rng;
+use crate::util::timing::{Profiler, Stopwatch};
+
+/// Configuration for [`KMeans`].
+#[derive(Clone, Debug)]
+pub struct KMeansConfig {
+    pub k: usize,
+    pub max_iters: usize,
+    /// Stop when no assignment changes (always on) or when the objective
+    /// improves by less than ε.
+    pub epsilon: Option<f64>,
+}
+
+impl Default for KMeansConfig {
+    fn default() -> Self {
+        KMeansConfig { k: 2, max_iters: 300, epsilon: None }
+    }
+}
+
+/// Standard k-means (k-means++ init, Lloyd iterations).
+pub struct KMeans {
+    cfg: KMeansConfig,
+}
+
+impl KMeans {
+    pub fn new(cfg: KMeansConfig) -> Self {
+        KMeans { cfg }
+    }
+
+    pub fn fit(&self, ds: &Dataset, rng: &mut Rng) -> FitResult {
+        let k = self.cfg.k;
+        let d = ds.d;
+        assert!(k >= 1 && k <= ds.n);
+        let mut prof = Profiler::new();
+        let sw = Stopwatch::start();
+        let mut centers = kmeanspp_features(ds, k, rng);
+        prof.add("init", sw.secs());
+
+        let mut assignments = vec![0usize; ds.n];
+        let mut history = Vec::new();
+        let mut iterations = 0;
+        let mut converged = false;
+        let mut prev_obj = f64::INFINITY;
+
+        for _ in 0..self.cfg.max_iters {
+            iterations += 1;
+            let sw = Stopwatch::start();
+            let (new_assign, obj) = assign_to_centers(ds, &centers, k);
+            prof.add("assign", sw.secs());
+            history.push(obj);
+
+            let sw = Stopwatch::start();
+            // Recompute means.
+            let mut sums = vec![0.0f64; k * d];
+            let mut counts = vec![0usize; k];
+            for (i, &j) in new_assign.iter().enumerate() {
+                counts[j] += 1;
+                for (s, &v) in sums[j * d..(j + 1) * d].iter_mut().zip(ds.row(i)) {
+                    *s += v as f64;
+                }
+            }
+            for j in 0..k {
+                if counts[j] > 0 {
+                    for s in sums[j * d..(j + 1) * d].iter_mut() {
+                        *s /= counts[j] as f64;
+                    }
+                } else {
+                    // Empty cluster: re-seed at a random point.
+                    let p = rng.below(ds.n);
+                    for (s, &v) in sums[j * d..(j + 1) * d].iter_mut().zip(ds.row(p)) {
+                        *s = v as f64;
+                    }
+                }
+            }
+            prof.add("update", sw.secs());
+
+            let changed = new_assign
+                .iter()
+                .zip(assignments.iter())
+                .filter(|(a, b)| a != b)
+                .count();
+            assignments = new_assign;
+            centers = sums;
+
+            if changed == 0 && iterations > 1 {
+                converged = true;
+                break;
+            }
+            if let Some(eps) = self.cfg.epsilon {
+                if prev_obj - obj < eps {
+                    converged = true;
+                    break;
+                }
+            }
+            prev_obj = obj;
+        }
+
+        let sw = Stopwatch::start();
+        let (assignments, objective) = assign_to_centers(ds, &centers, k);
+        prof.add("finalize", sw.secs());
+        FitResult { assignments, objective, history, iterations, converged, profiler: prof }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{blobs, rings, SyntheticSpec};
+    use crate::metrics::ari;
+
+    #[test]
+    fn recovers_separated_blobs() {
+        let mut rng = Rng::seeded(1);
+        let ds = blobs(
+            &SyntheticSpec::new(400, 3, 3).with_std(0.3).with_separation(8.0),
+            &mut rng,
+        );
+        let res = KMeans::new(KMeansConfig { k: 3, ..Default::default() }).fit(&ds, &mut rng);
+        assert!(ari(ds.labels.as_ref().unwrap(), &res.assignments) > 0.95);
+        assert!(res.converged);
+    }
+
+    #[test]
+    fn objective_nonincreasing() {
+        let mut rng = Rng::seeded(2);
+        let ds = blobs(&SyntheticSpec::new(300, 4, 4), &mut rng);
+        let res = KMeans::new(KMeansConfig { k: 4, ..Default::default() }).fit(&ds, &mut rng);
+        for w in res.history.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9);
+        }
+    }
+
+    #[test]
+    fn fails_on_rings_as_expected() {
+        // The motivating negative result: plain k-means cannot separate
+        // concentric rings (ARI stays low) — kernel k-means can (see
+        // kkmeans::full_batch tests). This contrast is the paper's premise.
+        let mut rng = Rng::seeded(3);
+        let ds = rings(600, 2, 2, 0.04, &mut rng);
+        let res = KMeans::new(KMeansConfig { k: 2, ..Default::default() }).fit(&ds, &mut rng);
+        let score = ari(ds.labels.as_ref().unwrap(), &res.assignments);
+        assert!(score < 0.3, "k-means unexpectedly separated rings: ARI={score}");
+    }
+}

@@ -1,0 +1,230 @@
+//! Mini-batch k-means (Sculley 2010) with pluggable learning rate —
+//! sklearn's `α = b_j/c_j` or Schwartzman (2023)'s `α = √(b_j/b)`.
+//!
+//! The center update is `c_j ← (1−α)·c_j + α·mean(batch members)`, exactly
+//! the kernelized update of Algorithm 1 specialized to the linear kernel —
+//! tests exploit that correspondence.
+
+use super::{assign_to_centers, kmeanspp_features, sqdist_to_center};
+use crate::data::Dataset;
+use crate::kkmeans::learning_rate::{LearningRate, RateState};
+use crate::kkmeans::FitResult;
+use crate::util::rng::Rng;
+use crate::util::timing::{Profiler, Stopwatch};
+
+/// Configuration for [`MiniBatchKMeans`].
+#[derive(Clone, Debug)]
+pub struct MiniBatchKMeansConfig {
+    pub k: usize,
+    pub batch_size: usize,
+    pub max_iters: usize,
+    /// Early-stopping ε on batch improvement; `None` = fixed iterations.
+    pub epsilon: Option<f64>,
+    pub learning_rate: LearningRate,
+}
+
+impl Default for MiniBatchKMeansConfig {
+    fn default() -> Self {
+        MiniBatchKMeansConfig {
+            k: 2,
+            batch_size: 1024,
+            max_iters: 200,
+            epsilon: None,
+            learning_rate: LearningRate::Beta,
+        }
+    }
+}
+
+/// Mini-batch k-means runner.
+pub struct MiniBatchKMeans {
+    cfg: MiniBatchKMeansConfig,
+}
+
+impl MiniBatchKMeans {
+    pub fn new(cfg: MiniBatchKMeansConfig) -> Self {
+        MiniBatchKMeans { cfg }
+    }
+
+    pub fn fit(&self, ds: &Dataset, rng: &mut Rng) -> FitResult {
+        let k = self.cfg.k;
+        let d = ds.d;
+        let b = self.cfg.batch_size.min(ds.n.max(1));
+        assert!(k >= 1 && k <= ds.n);
+        let mut prof = Profiler::new();
+
+        let sw = Stopwatch::start();
+        let mut centers = kmeanspp_features(ds, k, rng);
+        let mut rate = RateState::new(self.cfg.learning_rate, k);
+        prof.add("init", sw.secs());
+
+        let mut history = Vec::new();
+        let mut iterations = 0;
+        let mut converged = false;
+
+        for _ in 0..self.cfg.max_iters {
+            iterations += 1;
+            let sw = Stopwatch::start();
+            let batch = rng.sample_with_replacement(ds.n, b);
+            // Assign batch + batch objective before update.
+            let mut members: Vec<Vec<usize>> = vec![Vec::new(); k];
+            let mut f_before = 0.0;
+            for &x in &batch {
+                let row = ds.row(x);
+                let mut best = 0;
+                let mut bestv = f64::INFINITY;
+                for j in 0..k {
+                    let v = sqdist_to_center(row, &centers[j * d..(j + 1) * d]);
+                    if v < bestv {
+                        best = j;
+                        bestv = v;
+                    }
+                }
+                members[best].push(x);
+                f_before += bestv;
+            }
+            f_before /= b as f64;
+            history.push(f_before);
+            prof.add("assign", sw.secs());
+
+            let sw = Stopwatch::start();
+            for j in 0..k {
+                let bj = members[j].len();
+                let alpha = rate.alpha(j, bj, b);
+                if alpha == 0.0 {
+                    continue;
+                }
+                // mean of batch members
+                let mut mean = vec![0.0f64; d];
+                for &x in &members[j] {
+                    for (m, &v) in mean.iter_mut().zip(ds.row(x)) {
+                        *m += v as f64;
+                    }
+                }
+                for m in mean.iter_mut() {
+                    *m /= bj as f64;
+                }
+                for (c, m) in centers[j * d..(j + 1) * d].iter_mut().zip(mean.iter()) {
+                    *c = (1.0 - alpha) * *c + alpha * m;
+                }
+            }
+            prof.add("update", sw.secs());
+
+            if let Some(eps) = self.cfg.epsilon {
+                let sw = Stopwatch::start();
+                let mut f_after = 0.0;
+                for &x in &batch {
+                    let row = ds.row(x);
+                    let mut bestv = f64::INFINITY;
+                    for j in 0..k {
+                        bestv = bestv
+                            .min(sqdist_to_center(row, &centers[j * d..(j + 1) * d]));
+                    }
+                    f_after += bestv;
+                }
+                f_after /= b as f64;
+                prof.add("stopping", sw.secs());
+                if f_before - f_after < eps {
+                    converged = true;
+                    break;
+                }
+            }
+        }
+
+        let sw = Stopwatch::start();
+        let (assignments, objective) = assign_to_centers(ds, &centers, k);
+        prof.add("finalize", sw.secs());
+        FitResult { assignments, objective, history, iterations, converged, profiler: prof }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{blobs, SyntheticSpec};
+    use crate::metrics::ari;
+
+    fn fixture() -> Dataset {
+        let mut rng = Rng::seeded(31);
+        blobs(
+            &SyntheticSpec::new(800, 4, 3).with_std(0.4).with_separation(7.0),
+            &mut rng,
+        )
+    }
+
+    #[test]
+    fn beta_rate_recovers_blobs() {
+        let ds = fixture();
+        let mut rng = Rng::seeded(1);
+        let cfg = MiniBatchKMeansConfig { k: 3, batch_size: 128, max_iters: 60, ..Default::default() };
+        let res = MiniBatchKMeans::new(cfg).fit(&ds, &mut rng);
+        assert!(ari(ds.labels.as_ref().unwrap(), &res.assignments) > 0.9);
+    }
+
+    #[test]
+    fn sklearn_rate_recovers_blobs() {
+        let ds = fixture();
+        let mut rng = Rng::seeded(2);
+        let cfg = MiniBatchKMeansConfig {
+            k: 3,
+            batch_size: 128,
+            max_iters: 60,
+            learning_rate: LearningRate::Sklearn,
+            ..Default::default()
+        };
+        let res = MiniBatchKMeans::new(cfg).fit(&ds, &mut rng);
+        assert!(ari(ds.labels.as_ref().unwrap(), &res.assignments) > 0.9);
+    }
+
+    #[test]
+    fn matches_kernel_algorithm1_under_linear_kernel() {
+        // Mini-batch k-means ≡ Algorithm 1 with the linear kernel: same
+        // seeds ⇒ same batches ⇒ identical assignments and objective.
+        use crate::kernels::{Gram, KernelFunction};
+        use crate::kkmeans::{MiniBatchConfig, MiniBatchKernelKMeans};
+        let mut rng = Rng::seeded(41);
+        let ds = blobs(&SyntheticSpec::new(200, 3, 3), &mut rng);
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Linear);
+        let iters = 15;
+        let mut r1 = Rng::seeded(9);
+        let mut r2 = Rng::seeded(9);
+        let lin = MiniBatchKMeans::new(MiniBatchKMeansConfig {
+            k: 3,
+            batch_size: 64,
+            max_iters: iters,
+            ..Default::default()
+        })
+        .fit(&ds, &mut r1);
+        let ker = MiniBatchKernelKMeans::new(MiniBatchConfig {
+            k: 3,
+            batch_size: 64,
+            max_iters: iters,
+            init: crate::kkmeans::Init::KMeansPlusPlus,
+            ..Default::default()
+        })
+        .fit(&gram, &mut r2);
+        // The feature-space inits differ in representation (explicit point
+        // vs index) but use the same D² sampling over the same distances and
+        // the same RNG stream, so they pick the same seed points.
+        assert_eq!(lin.assignments, ker.assignments);
+        assert!((lin.objective - ker.objective).abs() < 1e-6);
+    }
+
+    #[test]
+    fn early_stopping() {
+        // The β rate does not vanish, so the batch improvement has a
+        // persistent stochastic floor ~ α²·Var(batch mean) — ε must sit
+        // above it (this is exactly Theorem 1's coupling of ε and b).
+        let ds = fixture();
+        let mut rng = Rng::seeded(3);
+        let cfg = MiniBatchKMeansConfig {
+            k: 3,
+            batch_size: 256,
+            max_iters: 500,
+            epsilon: Some(0.02),
+            ..Default::default()
+        };
+        let res = MiniBatchKMeans::new(cfg).fit(&ds, &mut rng);
+        assert!(res.converged);
+        assert!(res.iterations < 500);
+    }
+}

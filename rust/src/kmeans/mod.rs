@@ -1,0 +1,113 @@
+//! Non-kernel k-means baselines: Lloyd's algorithm and Sculley's mini-batch
+//! k-means with both learning-rate schedules (β and sklearn).
+//!
+//! These are the paper's non-kernel comparators (`mb-km` and `β-mb-km` in
+//! the figures) and fill the experimental gap the paper notes: evaluating
+//! Schwartzman (2023)'s learning rate for plain mini-batch k-means.
+
+mod lloyd;
+mod minibatch;
+
+pub use lloyd::{KMeans, KMeansConfig};
+pub use minibatch::{MiniBatchKMeans, MiniBatchKMeansConfig};
+
+use crate::data::Dataset;
+use crate::util::rng::Rng;
+
+/// k-means++ initialization on raw features: returns k explicit centers
+/// (row-major k×d).
+pub fn kmeanspp_features(ds: &Dataset, k: usize, rng: &mut Rng) -> Vec<f64> {
+    assert!(k >= 1 && k <= ds.n);
+    let d = ds.d;
+    let mut centers = Vec::with_capacity(k * d);
+    let first = rng.below(ds.n);
+    centers.extend(ds.row(first).iter().map(|&v| v as f64));
+    let mut min_d2: Vec<f64> = (0..ds.n)
+        .map(|i| sqdist_to_center(ds.row(i), &centers[0..d]))
+        .collect();
+    while centers.len() < k * d {
+        let next = rng.weighted_choice(&min_d2);
+        let start = centers.len();
+        centers.extend(ds.row(next).iter().map(|&v| v as f64));
+        for i in 0..ds.n {
+            let d2 = sqdist_to_center(ds.row(i), &centers[start..start + d]);
+            if d2 < min_d2[i] {
+                min_d2[i] = d2;
+            }
+        }
+    }
+    centers
+}
+
+#[inline]
+pub(crate) fn sqdist_to_center(row: &[f32], center: &[f64]) -> f64 {
+    let mut s = 0.0;
+    for (x, c) in row.iter().zip(center.iter()) {
+        let diff = *x as f64 - c;
+        s += diff * diff;
+    }
+    s
+}
+
+/// Assign every point to its nearest explicit center; returns
+/// (assignments, mean min squared distance).
+pub(crate) fn assign_to_centers(ds: &Dataset, centers: &[f64], k: usize) -> (Vec<usize>, f64) {
+    let d = ds.d;
+    let assignments = crate::util::parallel::par_map_indexed(ds.n, |i| {
+        let row = ds.row(i);
+        let mut best = 0usize;
+        let mut bestv = f64::INFINITY;
+        for j in 0..k {
+            let v = sqdist_to_center(row, &centers[j * d..(j + 1) * d]);
+            if v < bestv {
+                best = j;
+                bestv = v;
+            }
+        }
+        best
+    });
+    let total: f64 = crate::util::parallel::par_fold(
+        ds.n,
+        0.0,
+        |i| {
+            let j = assignments[i];
+            sqdist_to_center(ds.row(i), &centers[j * d..(j + 1) * d])
+        },
+        |a, b| a + b,
+    );
+    (assignments, total / ds.n.max(1) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{blobs, SyntheticSpec};
+
+    #[test]
+    fn kmeanspp_returns_k_centers_from_data() {
+        let mut rng = Rng::seeded(1);
+        let ds = blobs(&SyntheticSpec::new(100, 3, 4), &mut rng);
+        let c = kmeanspp_features(&ds, 4, &mut rng);
+        assert_eq!(c.len(), 4 * 3);
+        // Each center equals some dataset row.
+        for j in 0..4 {
+            let cj = &c[j * 3..(j + 1) * 3];
+            let found = (0..ds.n).any(|i| {
+                ds.row(i)
+                    .iter()
+                    .zip(cj.iter())
+                    .all(|(a, b)| (*a as f64 - b).abs() < 1e-12)
+            });
+            assert!(found, "center {j} is not a dataset point");
+        }
+    }
+
+    #[test]
+    fn assign_to_centers_picks_nearest() {
+        let ds = Dataset::new("t", vec![0.0, 0.0, 10.0, 0.0, 0.1, 0.0], 3, 2);
+        let centers = vec![0.0, 0.0, 10.0, 0.0];
+        let (assign, obj) = assign_to_centers(&ds, &centers, 2);
+        assert_eq!(assign, vec![0, 1, 0]);
+        assert!((obj - (0.0 + 0.0 + 0.01) / 3.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,41 @@
+//! # mbkk — Mini-Batch Kernel *k*-Means
+//!
+//! A production reproduction of **"Mini-Batch Kernel k-means"**
+//! (Jourdan & Schwartzman, 2024): the first mini-batch algorithm for kernel
+//! k-means, with a truncated variant whose per-iteration cost is `Õ(kb²)` —
+//! independent of the dataset size `n` — versus `O(n²)` for the full-batch
+//! algorithm.
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer stack:
+//!
+//! * **L1** — a Pallas gram kernel (`python/compile/kernels/gram.py`) computes
+//!   the kernel block `K(B, S)` between a batch and the sliding-window support
+//!   points, tiled for TPU VMEM/MXU.
+//! * **L2** — a JAX graph (`python/compile/model.py`) composes the gram kernel
+//!   into the full assignment step of Algorithm 2 and is AOT-lowered to HLO
+//!   text at build time (`make artifacts`).
+//! * **L3** — this crate: dataset pipelines, kernel substrates (including the
+//!   knn and heat graph kernels), k-means++ initialization, the full-batch and
+//!   mini-batch algorithms, sliding-window center state, learning-rate
+//!   policies, early stopping, metrics (ARI/NMI), the experiment coordinator
+//!   that regenerates every table and figure in the paper, and a PJRT runtime
+//!   ([`runtime`]) that executes the AOT artifacts from the hot loop. Python
+//!   never runs on the request path.
+//!
+//! See `examples/` for end-to-end drivers and `DESIGN.md` for the experiment
+//! index mapping every figure/table in the paper to a command.
+
+pub mod util;
+pub mod linalg;
+pub mod testutil;
+pub mod bench;
+pub mod data;
+pub mod kernels;
+pub mod kkmeans;
+pub mod kmeans;
+pub mod metrics;
+pub mod runtime;
+pub mod coordinator;
+
+/// Crate version, re-exported for the CLI banner.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

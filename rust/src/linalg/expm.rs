@@ -1,0 +1,191 @@
+//! Matrix exponential via Padé-13 approximation with scaling and squaring
+//! (Higham 2005, "The Scaling and Squaring Method for the Matrix Exponential
+//! Revisited" — the same algorithm scipy.linalg.expm uses).
+//!
+//! This powers the heat-kernel construction `exp(−t·D^{−1/2} A D^{−1/2})`
+//! from the paper's Appendix C. The normalized adjacency has spectrum in
+//! [−1, 1], so the argument norm is ≤ t and small scaling exponents suffice.
+
+use super::Matrix;
+
+/// Padé-13 numerator coefficients (Higham 2005, Table 10.4).
+const B13: [f64; 14] = [
+    64764752532480000.0,
+    32382376266240000.0,
+    7771770303897600.0,
+    1187353796428800.0,
+    129060195264000.0,
+    10559470521600.0,
+    670442572800.0,
+    33522128640.0,
+    1323241920.0,
+    40840800.0,
+    960960.0,
+    16380.0,
+    182.0,
+    1.0,
+];
+
+/// θ_13: the 1-norm threshold under which the Padé-13 approximant reaches
+/// double-precision accuracy without scaling.
+const THETA_13: f64 = 5.371920351148152;
+
+/// Compute exp(A) for a square matrix.
+///
+/// Uses the [13/13] Padé approximant `r(A) = q(A)⁻¹ p(A)` on `A / 2^s`
+/// followed by `s` repeated squarings, with `s = max(0, ⌈log2(‖A‖₁/θ₁₃)⌉)`.
+pub fn expm(a: &Matrix) -> Matrix {
+    assert_eq!(a.rows, a.cols, "expm: matrix must be square");
+    let n = a.rows;
+    if n == 0 {
+        return Matrix::zeros(0, 0);
+    }
+
+    let norm = a.norm_1();
+    let s = if norm > THETA_13 {
+        (norm / THETA_13).log2().ceil().max(0.0) as u32
+    } else {
+        0
+    };
+    let a_scaled = a.scale(1.0 / f64::powi(2.0, s as i32));
+
+    // Powers of the scaled matrix.
+    let a2 = a_scaled.matmul(&a_scaled);
+    let a4 = a2.matmul(&a2);
+    let a6 = a4.matmul(&a2);
+
+    // u = A·(A6·(b13·A6 + b11·A4 + b9·A2) + b7·A6 + b5·A4 + b3·A2 + b1·I)
+    let mut w1 = a6.scale(B13[13]);
+    w1.axpy(B13[11], &a4);
+    w1.axpy(B13[9], &a2);
+    let mut w2 = a6.scale(B13[7]);
+    w2.axpy(B13[5], &a4);
+    w2.axpy(B13[3], &a2);
+    for i in 0..n {
+        *w2.at_mut(i, i) += B13[1];
+    }
+    let u = a_scaled.matmul(&a6.matmul(&w1).add(&w2));
+
+    // v = A6·(b12·A6 + b10·A4 + b8·A2) + b6·A6 + b4·A4 + b2·A2 + b0·I
+    let mut z1 = a6.scale(B13[12]);
+    z1.axpy(B13[10], &a4);
+    z1.axpy(B13[8], &a2);
+    let mut v = a6.matmul(&z1);
+    v.axpy(B13[6], &a6);
+    v.axpy(B13[4], &a4);
+    v.axpy(B13[2], &a2);
+    for i in 0..n {
+        *v.at_mut(i, i) += B13[0];
+    }
+
+    // r = (v − u)⁻¹ (v + u)
+    let denom = v.sub(&u);
+    let numer = v.add(&u);
+    let mut r = denom.solve(&numer);
+
+    for _ in 0..s {
+        r = r.matmul(&r);
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Reference: Taylor series with scaling-and-squaring at high term count.
+    fn expm_taylor(a: &Matrix, terms: usize) -> Matrix {
+        let norm = a.norm_1();
+        let s = if norm > 0.5 { (norm / 0.5).log2().ceil() as u32 } else { 0 };
+        let x = a.scale(1.0 / f64::powi(2.0, s as i32));
+        let n = a.rows;
+        let mut acc = Matrix::identity(n);
+        let mut term = Matrix::identity(n);
+        for t in 1..=terms {
+            term = term.matmul(&x).scale(1.0 / t as f64);
+            acc = acc.add(&term);
+        }
+        for _ in 0..s {
+            acc = acc.matmul(&acc);
+        }
+        acc
+    }
+
+    #[test]
+    fn expm_zero_is_identity() {
+        let z = Matrix::zeros(5, 5);
+        assert!(expm(&z).max_abs_diff(&Matrix::identity(5)) < 1e-14);
+    }
+
+    #[test]
+    fn expm_diagonal() {
+        let mut d = Matrix::zeros(3, 3);
+        *d.at_mut(0, 0) = 1.0;
+        *d.at_mut(1, 1) = -2.0;
+        *d.at_mut(2, 2) = 0.5;
+        let e = expm(&d);
+        assert!((e.at(0, 0) - 1f64.exp()).abs() < 1e-12);
+        assert!((e.at(1, 1) - (-2f64).exp()).abs() < 1e-12);
+        assert!((e.at(2, 2) - 0.5f64.exp()).abs() < 1e-12);
+        assert!(e.at(0, 1).abs() < 1e-14);
+    }
+
+    #[test]
+    fn expm_nilpotent_exact() {
+        // N = [[0,1],[0,0]] → exp(N) = I + N.
+        let n = Matrix::from_rows(vec![vec![0.0, 1.0], vec![0.0, 0.0]]);
+        let e = expm(&n);
+        let want = Matrix::from_rows(vec![vec![1.0, 1.0], vec![0.0, 1.0]]);
+        assert!(e.max_abs_diff(&want) < 1e-13);
+    }
+
+    #[test]
+    fn expm_matches_taylor_on_random_symmetric() {
+        let mut rng = Rng::seeded(31);
+        for &n in &[4usize, 16, 40] {
+            let mut a = Matrix::zeros(n, n);
+            for i in 0..n {
+                for j in 0..=i {
+                    let v = rng.normal() * 0.3;
+                    *a.at_mut(i, j) = v;
+                    *a.at_mut(j, i) = v;
+                }
+            }
+            let fast = expm(&a);
+            let slow = expm_taylor(&a, 40);
+            assert!(
+                fast.max_abs_diff(&slow) < 1e-9,
+                "n={n} diff={}",
+                fast.max_abs_diff(&slow)
+            );
+        }
+    }
+
+    #[test]
+    fn expm_handles_large_norm_via_scaling() {
+        let mut rng = Rng::seeded(37);
+        let n = 10;
+        let mut a = Matrix::zeros(n, n);
+        for v in a.data.iter_mut() {
+            *v = rng.normal() * 3.0; // ‖A‖₁ well above θ₁₃
+        }
+        let fast = expm(&a);
+        let slow = expm_taylor(&a, 80);
+        let rel = fast.max_abs_diff(&slow) / slow.norm_fro().max(1.0);
+        assert!(rel < 1e-9, "rel={rel}");
+    }
+
+    #[test]
+    fn expm_group_property() {
+        // exp(A)·exp(−A) = I for any A.
+        let mut rng = Rng::seeded(41);
+        let n = 8;
+        let mut a = Matrix::zeros(n, n);
+        for v in a.data.iter_mut() {
+            *v = rng.normal();
+        }
+        let prod = expm(&a).matmul(&expm(&a.scale(-1.0)));
+        assert!(prod.max_abs_diff(&Matrix::identity(n)) < 1e-9);
+    }
+}

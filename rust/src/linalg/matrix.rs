@@ -1,0 +1,328 @@
+//! Row-major dense f64 matrix with blocked, parallel multiplication and the
+//! factorizations `expm` needs.
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Matrix {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f64>>) -> Matrix {
+        let r = rows.len();
+        let c = rows.first().map(|x| x.len()).unwrap_or(0);
+        assert!(rows.iter().all(|x| x.len() == c), "ragged rows");
+        Matrix { rows: r, cols: c, data: rows.into_iter().flatten().collect() }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        t
+    }
+
+    /// C = A·B — parallel over row blocks of C. The i-k-j loop order keeps
+    /// the inner loop a contiguous FMA over B's row, which the compiler
+    /// auto-vectorizes.
+    pub fn matmul(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.cols, b.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, b.cols);
+        let mut c = Matrix::zeros(m, n);
+        let a_data = &self.data;
+        let b_data = &b.data;
+        let workers = crate::util::parallel::num_threads().min(m).max(1);
+        let rows_per = m.div_ceil(workers);
+        let kernel = |row0: usize, cblock: &mut [f64]| {
+            let nrows = cblock.len() / n;
+            for ir in 0..nrows {
+                let i = row0 + ir;
+                let crow = &mut cblock[ir * n..(ir + 1) * n];
+                for kk in 0..k {
+                    let aik = a_data[i * k + kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &b_data[kk * n..(kk + 1) * n];
+                    for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                        *cv += aik * bv;
+                    }
+                }
+            }
+        };
+        if workers == 1 || m * k * n < 64 * 64 * 64 {
+            kernel(0, &mut c.data);
+        } else {
+            std::thread::scope(|scope| {
+                for (bi, block) in c.data.chunks_mut(rows_per * n).enumerate() {
+                    let kernel = &kernel;
+                    scope.spawn(move || kernel(bi * rows_per, block));
+                }
+            });
+        }
+        c
+    }
+
+    pub fn add(&self, b: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (b.rows, b.cols));
+        let mut out = self.clone();
+        for (o, x) in out.data.iter_mut().zip(b.data.iter()) {
+            *o += x;
+        }
+        out
+    }
+
+    pub fn sub(&self, b: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (b.rows, b.cols));
+        let mut out = self.clone();
+        for (o, x) in out.data.iter_mut().zip(b.data.iter()) {
+            *o -= x;
+        }
+        out
+    }
+
+    pub fn scale(&self, s: f64) -> Matrix {
+        let mut out = self.clone();
+        for o in out.data.iter_mut() {
+            *o *= s;
+        }
+        out
+    }
+
+    /// In-place axpy: self += s·B.
+    pub fn axpy(&mut self, s: f64, b: &Matrix) {
+        assert_eq!((self.rows, self.cols), (b.rows, b.cols));
+        for (o, x) in self.data.iter_mut().zip(b.data.iter()) {
+            *o += s * x;
+        }
+    }
+
+    /// Max column-sum norm (induced 1-norm) — used to pick the expm scaling.
+    pub fn norm_1(&self) -> f64 {
+        let mut sums = vec![0.0f64; self.cols];
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                sums[j] += self.at(i, j).abs();
+            }
+        }
+        sums.into_iter().fold(0.0, f64::max)
+    }
+
+    pub fn norm_fro(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs_diff(&self, b: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (b.rows, b.cols));
+        self.data
+            .iter()
+            .zip(b.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Solve A·X = B via LU with partial pivoting (consumes a copy of A).
+    /// Used by the Padé-13 expm rational solve. Panics on exactly singular
+    /// pivots (cannot happen for the diagonally-dominant Padé denominators).
+    pub fn solve(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.rows, self.cols, "solve: A must be square");
+        assert_eq!(self.rows, b.rows, "solve: dimension mismatch");
+        let n = self.rows;
+        let mut lu = self.data.clone();
+        let mut x = b.clone();
+        let nb = b.cols;
+        let mut piv: Vec<usize> = (0..n).collect();
+        for col in 0..n {
+            // pivot
+            let mut best = col;
+            let mut best_abs = lu[piv[col] * n + col].abs();
+            for r in col + 1..n {
+                let v = lu[piv[r] * n + col].abs();
+                if v > best_abs {
+                    best = r;
+                    best_abs = v;
+                }
+            }
+            piv.swap(col, best);
+            let p = piv[col];
+            let pivot = lu[p * n + col];
+            assert!(pivot != 0.0, "solve: singular matrix at column {col}");
+            for r in col + 1..n {
+                let pr = piv[r];
+                let factor = lu[pr * n + col] / pivot;
+                lu[pr * n + col] = factor;
+                for c in col + 1..n {
+                    lu[pr * n + c] -= factor * lu[p * n + c];
+                }
+            }
+        }
+        // forward substitution (apply pivots to rows of B lazily via piv)
+        let xin = x.data.clone();
+        for (r, &pr) in piv.iter().enumerate() {
+            x.data[r * nb..(r + 1) * nb].copy_from_slice(&xin[pr * nb..(pr + 1) * nb]);
+        }
+        for col in 0..n {
+            for r in col + 1..n {
+                let factor = lu[piv[r] * n + col];
+                if factor == 0.0 {
+                    continue;
+                }
+                let (top, bottom) = x.data.split_at_mut(r * nb);
+                let src = &top[col * nb..(col + 1) * nb];
+                let dst = &mut bottom[..nb];
+                for (d, s) in dst.iter_mut().zip(src.iter()) {
+                    *d -= factor * s;
+                }
+            }
+        }
+        // back substitution
+        for col in (0..n).rev() {
+            let pivot = lu[piv[col] * n + col];
+            for c in 0..nb {
+                x.data[col * nb + c] /= pivot;
+            }
+            for r in 0..col {
+                let factor = lu[piv[r] * n + col];
+                if factor == 0.0 {
+                    continue;
+                }
+                let (top, bottom) = x.data.split_at_mut(col * nb);
+                let src = &bottom[..nb];
+                let dst = &mut top[r * nb..(r + 1) * nb];
+                for (d, s) in dst.iter_mut().zip(src.iter()) {
+                    *d -= factor * s;
+                }
+            }
+        }
+        x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random(rng: &mut Rng, r: usize, c: usize) -> Matrix {
+        let mut m = Matrix::zeros(r, c);
+        for v in m.data.iter_mut() {
+            *v = rng.normal();
+        }
+        m
+    }
+
+    fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for k in 0..a.cols {
+                    s += a.at(i, k) * b.at(k, j);
+                }
+                *c.at_mut(i, j) = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::seeded(3);
+        for &(m, k, n) in &[(1, 1, 1), (3, 4, 5), (17, 9, 23), (64, 64, 64)] {
+            let a = random(&mut rng, m, k);
+            let b = random(&mut rng, k, n);
+            let fast = a.matmul(&b);
+            let slow = naive_matmul(&a, &b);
+            assert!(fast.max_abs_diff(&slow) < 1e-10, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::seeded(4);
+        let a = random(&mut rng, 12, 12);
+        let i = Matrix::identity(12);
+        assert!(a.matmul(&i).max_abs_diff(&a) < 1e-12);
+        assert!(i.matmul(&a).max_abs_diff(&a) < 1e-12);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::seeded(5);
+        let a = random(&mut rng, 7, 13);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn norms() {
+        let m = Matrix::from_rows(vec![vec![1.0, -2.0], vec![3.0, 4.0]]);
+        assert_eq!(m.norm_1(), 6.0); // max column abs-sum = |−2|+|4| = 6
+        assert!((m.norm_fro() - (30.0f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_recovers_solution() {
+        let mut rng = Rng::seeded(6);
+        let n = 20;
+        // Diagonally dominant → well conditioned.
+        let mut a = random(&mut rng, n, n);
+        for i in 0..n {
+            *a.at_mut(i, i) += n as f64;
+        }
+        let x_true = random(&mut rng, n, 3);
+        let b = a.matmul(&x_true);
+        let x = a.solve(&b);
+        assert!(x.max_abs_diff(&x_true) < 1e-8);
+    }
+
+    #[test]
+    fn solve_with_pivoting_handles_zero_diagonal() {
+        // A = [[0,1],[1,0]] needs a row swap.
+        let a = Matrix::from_rows(vec![vec![0.0, 1.0], vec![1.0, 0.0]]);
+        let b = Matrix::from_rows(vec![vec![2.0], vec![3.0]]);
+        let x = a.solve(&b);
+        assert!((x.at(0, 0) - 3.0).abs() < 1e-12);
+        assert!((x.at(1, 0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn matmul_shape_check() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(2, 3);
+        let _ = a.matmul(&b);
+    }
+}

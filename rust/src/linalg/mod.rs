@@ -1,0 +1,13 @@
+//! Dense linear-algebra substrate.
+//!
+//! The heat-kernel construction (`exp(−t·D^{−1/2} A D^{−1/2})`, Chung 1997)
+//! needs a dense matrix type, a fast GEMM, matrix norms, an LU solver, and a
+//! scaling-and-squaring matrix exponential. No linear-algebra crate is
+//! available offline, so this module implements exactly that surface with
+//! blocked, thread-parallel kernels.
+
+mod matrix;
+mod expm;
+
+pub use expm::expm;
+pub use matrix::Matrix;

@@ -1,0 +1,265 @@
+//! `mbkk` — the launcher for mini-batch kernel k-means.
+//!
+//! ```text
+//! mbkk quickstart                         # 30-second demo on blobs
+//! mbkk run --dataset synth_pendigits --algo btrunc-kkm --batch 1024 --tau 200
+//! mbkk figures --fig 1 --out results/    # regenerate a paper figure
+//! mbkk figures --all --quick             # the whole evaluation, reduced grid
+//! mbkk gamma-table                       # paper Table 1
+//! mbkk info                              # datasets, artifacts, backends
+//! ```
+
+use anyhow::Result;
+use mbkk::coordinator::{experiment, figures};
+use mbkk::data::registry;
+use mbkk::kkmeans::AssignBackend;
+use mbkk::runtime;
+use mbkk::util::cli::Args;
+use mbkk::util::rng::Rng;
+use std::path::Path;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("quickstart") => quickstart(&args),
+        Some("run") => run(&args),
+        Some("figures") => run_figures(&args),
+        Some("gamma-table") => gamma_table(&args),
+        Some("info") => info(&args),
+        _ => {
+            eprintln!(
+                "mbkk {} — mini-batch kernel k-means (Jourdan & Schwartzman 2024)\n\
+                 \n\
+                 usage: mbkk <subcommand> [options]\n\
+                 \n\
+                 subcommands:\n\
+                 \x20 quickstart               quick demo on synthetic blobs\n\
+                 \x20 run                      run one algorithm on one dataset\n\
+                 \x20     --dataset NAME       {:?}\n\
+                 \x20     --csv PATH           ... or your own CSV (label column optional)\n\
+                 \x20     --algo NAME          full-kkm | [b]mb-kkm | [b]trunc-kkm | [b]mb-km | kmeans\n\
+                 \x20     --kernel NAME        gaussian | knn | heat\n\
+                 \x20     --k N --batch N --tau N --iters N --epsilon F --seed N\n\
+                 \x20     --scale F            dataset size multiplier (default 0.25)\n\
+                 \x20     --backend NAME       native | xla (needs `make artifacts`)\n\
+                 \x20 figures                  regenerate paper figures (CSV+md under --out)\n\
+                 \x20     --fig N | --all      figure id 1..13\n\
+                 \x20     --scale F --repeats N --iters N --quick --out DIR\n\
+                 \x20 gamma-table              paper Table 1 (γ per dataset × kernel)\n\
+                 \x20 info                     environment, datasets, artifacts\n",
+                mbkk::VERSION,
+                registry::ALL,
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn quickstart(args: &Args) -> Result<()> {
+    let seed = args.get_parse_or("seed", 7u64);
+    args.finish();
+    println!("== mbkk quickstart: truncated mini-batch kernel k-means on blobs ==");
+    let spec = experiment::RunSpec {
+        dataset: "blobs".into(),
+        scale: 0.5,
+        kernel: experiment::KernelSpec::Gaussian { multiplier: 1.0 },
+        algo: experiment::AlgoSpec::TruncKkm(mbkk::kkmeans::LearningRate::Beta),
+        k: 5,
+        batch_size: 256,
+        tau: 100,
+        max_iters: 100,
+        epsilon: Some(1e-3),
+        seed,
+    };
+    let out = experiment::run_one(&spec);
+    println!("dataset:   blobs (n≈2500, d=8, k=5)");
+    println!("ARI:       {:.3}", out.ari);
+    println!("NMI:       {:.3}", out.nmi);
+    println!("objective: {:.4}", out.objective);
+    println!(
+        "iterations: {}{}",
+        out.iterations,
+        if out.converged { " (early-stopped)" } else { "" }
+    );
+    println!("kernel build: {:.3}s, clustering: {:.3}s", out.kernel_secs, out.cluster_secs);
+    println!("\nNext: `mbkk figures --fig 1` or see examples/.");
+    Ok(())
+}
+
+fn run(args: &Args) -> Result<()> {
+    let algo = experiment::AlgoSpec::from_name(&args.get_or("algo", "btrunc-kkm"));
+    let kernel = experiment::KernelSpec::from_name(&args.get_or("kernel", "gaussian"));
+    let dataset = args.get_or("dataset", "synth_pendigits");
+    let scale = args.get_parse_or("scale", 0.25f64);
+    let seed = args.get_parse_or("seed", 7u64);
+    let backend = args.get_or("backend", "native");
+    let csv = args.get("csv").map(|s| s.to_string());
+    let k_opt = args.get("k").map(|s| s.parse::<usize>().expect("--k"));
+    let spec = experiment::RunSpec {
+        dataset: dataset.clone(),
+        scale,
+        kernel,
+        algo,
+        k: k_opt.unwrap_or(0), // filled below
+        batch_size: args.get_parse_or("batch", 1024usize),
+        tau: args.get_parse_or("tau", 200usize),
+        max_iters: args.get_parse_or("iters", 200usize),
+        epsilon: args.get("epsilon").map(|e| e.parse().expect("--epsilon")),
+        seed,
+    };
+    args.finish();
+
+    // Resolve the dataset: registry name or user CSV.
+    let ds = match &csv {
+        Some(path) => mbkk::data::csvio::load_csv(Path::new(path))?,
+        None => registry::load(&dataset, scale, seed),
+    };
+    let mut spec = spec;
+    spec.k = k_opt
+        .or_else(|| (ds.num_classes() > 0).then(|| ds.num_classes()))
+        .expect("--k required for unlabeled CSV data");
+
+    println!(
+        "run: {} on {} (n={}, d={}, k={})",
+        spec.algo.name(),
+        ds.name,
+        ds.n,
+        ds.d,
+        spec.k
+    );
+    let outcome = match backend.as_str() {
+        "native" => {
+            let mut rng = Rng::seeded(seed ^ 0xC0DE);
+            let (gram, kernel_secs) = spec.kernel.build(&ds, &mut rng);
+            experiment::run_with_gram(&spec, &ds, &gram, kernel_secs)
+        }
+        "xla" => run_with_xla_backend(&spec, &ds)?,
+        other => anyhow::bail!("unknown backend {other:?} (native|xla)"),
+    };
+    println!("ARI:        {:.4}", outcome.ari);
+    println!("NMI:        {:.4}", outcome.nmi);
+    println!("objective:  {:.6}", outcome.objective);
+    println!("gamma:      {:.4}", outcome.gamma);
+    println!(
+        "iterations: {}{}",
+        outcome.iterations,
+        if outcome.converged { " (early-stopped)" } else { "" }
+    );
+    println!("kernel:     {:.3}s", outcome.kernel_secs);
+    println!("clustering: {:.3}s", outcome.cluster_secs);
+    Ok(())
+}
+
+/// The XLA path runs the truncated algorithm against the *feature* kernel
+/// (the AOT graph evaluates the Gaussian kernel itself — no materialized
+/// gram, no Python).
+fn run_with_xla_backend(
+    spec: &experiment::RunSpec,
+    ds: &mbkk::data::Dataset,
+) -> Result<experiment::RunOutcome> {
+    use mbkk::kernels::{Gram, KernelFunction};
+    use mbkk::kkmeans::{TruncatedConfig, TruncatedMiniBatchKernelKMeans};
+    let experiment::AlgoSpec::TruncKkm(lr) = spec.algo else {
+        anyhow::bail!("--backend xla supports the truncated algorithm ([b]trunc-kkm) only");
+    };
+    let mut rng = Rng::seeded(spec.seed ^ 0xC0DE);
+    let kappa = spec
+        .kernel
+        .gaussian_kappa(ds, &mut rng)
+        .ok_or_else(|| anyhow::anyhow!("--backend xla requires --kernel gaussian"))?;
+    let gram = Gram::on_the_fly(ds, KernelFunction::Gaussian { kappa });
+    let mut backend = runtime::XlaBackend::load_default()?;
+    let cfg = TruncatedConfig {
+        k: spec.k,
+        batch_size: spec.batch_size,
+        tau: spec.tau,
+        max_iters: spec.max_iters,
+        epsilon: spec.epsilon,
+        learning_rate: lr,
+        init: mbkk::kkmeans::Init::KMeansPlusPlus,
+        weights: None,
+    };
+    let mut fit_rng = Rng::seeded(spec.seed ^ 0x5EED);
+    let sw = mbkk::util::timing::Stopwatch::start();
+    let fit = TruncatedMiniBatchKernelKMeans::new(cfg)
+        .fit_with_backend(&gram, &mut backend, &mut fit_rng);
+    let cluster_secs = sw.secs();
+    println!(
+        "[xla] calls: {} xla / {} native-fallback",
+        backend.xla_calls, backend.fallback_calls
+    );
+    let (ari_v, nmi_v) = match &ds.labels {
+        Some(t) => (
+            mbkk::metrics::ari(t, &fit.result.assignments),
+            mbkk::metrics::nmi(t, &fit.result.assignments),
+        ),
+        None => (f64::NAN, f64::NAN),
+    };
+    Ok(experiment::RunOutcome {
+        ari: ari_v,
+        nmi: nmi_v,
+        objective: fit.result.objective,
+        iterations: fit.result.iterations,
+        converged: fit.result.converged,
+        cluster_secs,
+        kernel_secs: 0.0,
+        gamma: gram.gamma(),
+    })
+}
+
+fn run_figures(args: &Args) -> Result<()> {
+    let opts = figures::FigureOptions {
+        scale: args.get_parse_or("scale", 0.25f64),
+        repeats: args.get_parse_or("repeats", 3usize),
+        max_iters: args.get_parse_or("iters", 200usize),
+        quick: args.flag("quick"),
+        seed: args.get_parse_or("seed", 7u64),
+    };
+    let out_dir = args.get_or("out", "results");
+    let all = args.flag("all");
+    let fig: Option<usize> = args.get("fig").map(|f| f.parse().expect("--fig"));
+    args.finish();
+    let ids: Vec<usize> = if all {
+        figures::figure_ids()
+    } else {
+        vec![fig.expect("pass --fig N or --all")]
+    };
+    for id in ids {
+        let rows = figures::run_figure(id, &opts, Some(Path::new(&out_dir)))?;
+        println!("figure {id}: {} rows -> {out_dir}/", rows.len());
+    }
+    Ok(())
+}
+
+fn gamma_table(args: &Args) -> Result<()> {
+    let scale = args.get_parse_or("scale", 0.1f64);
+    let seed = args.get_parse_or("seed", 7u64);
+    let out_dir = args.get_or("out", "results");
+    args.finish();
+    let md = figures::run_gamma_table(scale, seed, Some(Path::new(&out_dir)))?;
+    println!("{md}");
+    Ok(())
+}
+
+fn info(args: &Args) -> Result<()> {
+    args.finish();
+    println!("mbkk {}", mbkk::VERSION);
+    println!("threads: {}", mbkk::util::parallel::num_threads());
+    println!("datasets: {:?}", registry::ALL);
+    let dir = runtime::DEFAULT_ARTIFACT_DIR;
+    if runtime::artifacts_available(dir) {
+        let manifest = runtime::Manifest::load(Path::new(dir))?;
+        println!("artifacts ({}):", manifest.artifacts.len());
+        for a in &manifest.artifacts {
+            println!(
+                "  {} (b={}, k={}, m={}, d={:?})",
+                a.name, a.b, a.k, a.m, a.d
+            );
+        }
+        let backend = runtime::XlaBackend::load(Path::new(dir))?;
+        println!("xla backend: available ({})", backend.name());
+    } else {
+        println!("artifacts: none (run `make artifacts`)");
+    }
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! Contingency table between two labelings — the shared substrate of ARI
+//! and NMI. Stored sparsely (cluster-pair → count) so k_a·k_b never
+//! materializes densely.
+
+use std::collections::BTreeMap;
+
+/// Sparse contingency table.
+#[derive(Debug, Clone)]
+pub struct Contingency {
+    pub n: usize,
+    /// Count per (row cluster, col cluster) pair.
+    counts: BTreeMap<(usize, usize), usize>,
+    pub row_sums: Vec<usize>,
+    pub col_sums: Vec<usize>,
+}
+
+impl Contingency {
+    pub fn new(labels_a: &[usize], labels_b: &[usize]) -> Contingency {
+        assert_eq!(
+            labels_a.len(),
+            labels_b.len(),
+            "labelings must cover the same points"
+        );
+        let ka = labels_a.iter().copied().max().map(|m| m + 1).unwrap_or(0);
+        let kb = labels_b.iter().copied().max().map(|m| m + 1).unwrap_or(0);
+        let mut counts = BTreeMap::new();
+        let mut row_sums = vec![0usize; ka];
+        let mut col_sums = vec![0usize; kb];
+        for (&a, &b) in labels_a.iter().zip(labels_b.iter()) {
+            *counts.entry((a, b)).or_insert(0) += 1;
+            row_sums[a] += 1;
+            col_sums[b] += 1;
+        }
+        Contingency { n: labels_a.len(), counts, row_sums, col_sums }
+    }
+
+    /// Iterate non-zero cells as (row, col, count).
+    pub fn cells(&self) -> impl Iterator<Item = (usize, usize, usize)> + '_ {
+        self.counts.iter().map(|(&(i, j), &v)| (i, j, v))
+    }
+
+    /// Cell lookup (0 when absent).
+    pub fn get(&self, i: usize, j: usize) -> usize {
+        self.counts.get(&(i, j)).copied().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_counts_and_margins() {
+        let a = [0, 0, 1, 1, 1];
+        let b = [0, 1, 1, 1, 0];
+        let c = Contingency::new(&a, &b);
+        assert_eq!(c.n, 5);
+        assert_eq!(c.get(0, 0), 1);
+        assert_eq!(c.get(0, 1), 1);
+        assert_eq!(c.get(1, 1), 2);
+        assert_eq!(c.get(1, 0), 1);
+        assert_eq!(c.row_sums, vec![2, 3]);
+        assert_eq!(c.col_sums, vec![2, 3]);
+        let total: usize = c.cells().map(|(_, _, v)| v).sum();
+        assert_eq!(total, 5);
+    }
+
+    #[test]
+    fn empty_labelings() {
+        let c = Contingency::new(&[], &[]);
+        assert_eq!(c.n, 0);
+        assert_eq!(c.cells().count(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "same points")]
+    fn mismatched_lengths_panic() {
+        let _ = Contingency::new(&[0, 1], &[0]);
+    }
+}

@@ -1,0 +1,158 @@
+//! Clustering evaluation metrics: Adjusted Rand Index (Rand 1971; Gates &
+//! Ahn 2017) and Normalized Mutual Information (Lancichinetti et al. 2009)
+//! — the two scores the paper reports — plus the contingency-table
+//! machinery they share.
+
+mod contingency;
+
+pub use contingency::Contingency;
+
+/// Adjusted Rand Index between two labelings.
+///
+/// `ARI = (RI − E[RI]) / (max RI − E[RI])`, computed from the contingency
+/// table with pair counts. 1.0 = identical partitions (up to relabeling),
+/// ~0 = independent, negative = worse than chance.
+pub fn ari(labels_a: &[usize], labels_b: &[usize]) -> f64 {
+    let c = Contingency::new(labels_a, labels_b);
+    let n = c.n as f64;
+    if n < 2.0 {
+        return 1.0;
+    }
+    let comb2 = |x: f64| x * (x - 1.0) / 2.0;
+    let sum_cells: f64 = c.cells().map(|(_, _, v)| comb2(v as f64)).sum();
+    let sum_a: f64 = c.row_sums.iter().map(|&v| comb2(v as f64)).sum();
+    let sum_b: f64 = c.col_sums.iter().map(|&v| comb2(v as f64)).sum();
+    let expected = sum_a * sum_b / comb2(n);
+    let max_index = 0.5 * (sum_a + sum_b);
+    if (max_index - expected).abs() < 1e-12 {
+        // Both partitions trivial (all-one-cluster or all-singletons).
+        return if (sum_cells - expected).abs() < 1e-12 { 1.0 } else { 0.0 };
+    }
+    (sum_cells - expected) / (max_index - expected)
+}
+
+/// Normalized Mutual Information with arithmetic-mean normalization
+/// (`NMI = 2·I(A;B) / (H(A) + H(B))`, sklearn's default). 1.0 = identical
+/// partitions, 0 = independent.
+pub fn nmi(labels_a: &[usize], labels_b: &[usize]) -> f64 {
+    let c = Contingency::new(labels_a, labels_b);
+    let n = c.n as f64;
+    if n == 0.0 {
+        return 1.0;
+    }
+    let mut h_a = 0.0;
+    for &r in &c.row_sums {
+        if r > 0 {
+            let p = r as f64 / n;
+            h_a -= p * p.ln();
+        }
+    }
+    let mut h_b = 0.0;
+    for &s in &c.col_sums {
+        if s > 0 {
+            let p = s as f64 / n;
+            h_b -= p * p.ln();
+        }
+    }
+    if h_a <= 0.0 && h_b <= 0.0 {
+        return 1.0; // both partitions trivial and identical in structure
+    }
+    let mut mi = 0.0;
+    for (i, j, v) in c.cells() {
+        if v > 0 {
+            let pij = v as f64 / n;
+            let pi = c.row_sums[i] as f64 / n;
+            let pj = c.col_sums[j] as f64 / n;
+            mi += pij * (pij / (pi * pj)).ln();
+        }
+    }
+    (2.0 * mi / (h_a + h_b)).clamp(0.0, 1.0)
+}
+
+/// Cluster-size histogram of a labeling (diagnostics for reports).
+pub fn cluster_sizes(labels: &[usize]) -> Vec<usize> {
+    let k = labels.iter().copied().max().map(|m| m + 1).unwrap_or(0);
+    let mut sizes = vec![0usize; k];
+    for &l in labels {
+        sizes[l] += 1;
+    }
+    sizes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn ari_perfect_match() {
+        let a = [0, 0, 1, 1, 2, 2];
+        assert!((ari(&a, &a) - 1.0).abs() < 1e-12);
+        // Relabeled version still perfect.
+        let b = [2, 2, 0, 0, 1, 1];
+        assert!((ari(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ari_known_value() {
+        // sklearn: adjusted_rand_score([0,0,1,1],[0,0,1,2]) = 0.5714285714...
+        let a = [0, 0, 1, 1];
+        let b = [0, 0, 1, 2];
+        assert!((ari(&a, &b) - 0.5714285714285714).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ari_independent_near_zero() {
+        let mut rng = Rng::seeded(1);
+        let a: Vec<usize> = (0..5000).map(|_| rng.below(4)).collect();
+        let b: Vec<usize> = (0..5000).map(|_| rng.below(4)).collect();
+        assert!(ari(&a, &b).abs() < 0.02);
+    }
+
+    #[test]
+    fn ari_single_cluster_vs_same() {
+        let a = [0, 0, 0];
+        assert!((ari(&a, &a) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nmi_perfect_and_relabeled() {
+        let a = [0, 0, 1, 1, 2, 2];
+        let b = [1, 1, 2, 2, 0, 0];
+        assert!((nmi(&a, &a) - 1.0).abs() < 1e-12);
+        assert!((nmi(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nmi_known_value() {
+        // Hand computation with arithmetic-mean normalization:
+        // H(A)=ln2, H(B)=−(½ln½ + 2·¼ln¼)≈1.0397, I(A;B)=ln2
+        // ⇒ NMI = 2·ln2/(ln2+1.0397) = 0.8000…
+        let a = [0, 0, 1, 1];
+        let b = [0, 0, 1, 2];
+        let got = nmi(&a, &b);
+        assert!((got - 0.8).abs() < 1e-3, "nmi={got}");
+    }
+
+    #[test]
+    fn nmi_independent_near_zero() {
+        let mut rng = Rng::seeded(2);
+        let a: Vec<usize> = (0..5000).map(|_| rng.below(5)).collect();
+        let b: Vec<usize> = (0..5000).map(|_| rng.below(5)).collect();
+        assert!(nmi(&a, &b) < 0.01);
+    }
+
+    #[test]
+    fn metrics_symmetric() {
+        let a = [0, 1, 1, 2, 0, 2, 1];
+        let b = [1, 1, 0, 2, 2, 0, 0];
+        assert!((ari(&a, &b) - ari(&b, &a)).abs() < 1e-12);
+        assert!((nmi(&a, &b) - nmi(&b, &a)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cluster_sizes_counts() {
+        assert_eq!(cluster_sizes(&[0, 2, 2, 1]), vec![1, 1, 2]);
+        assert_eq!(cluster_sizes(&[]), Vec::<usize>::new());
+    }
+}

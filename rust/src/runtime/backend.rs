@@ -1,0 +1,268 @@
+//! [`XlaBackend`]: the AOT-compiled assignment step as an
+//! [`AssignBackend`].
+//!
+//! For Gaussian feature kernels the backend marshals the batch features,
+//! the zero-padded per-center support tensors, and the coefficient matrix
+//! into PJRT literals and executes the `assign_gaussian` graph lowered by
+//! `python/compile/aot.py`. Batches smaller than the artifact's fixed `b`
+//! are padded (extra rows repeat point 0 and are sliced away); windows
+//! shorter than `m` are zero-padded (zero weights contribute nothing —
+//! verified in `python/tests/test_model.py`).
+//!
+//! Configurations with no matching artifact (wrong k/d, window larger than
+//! every artifact, non-Gaussian or precomputed grams) fall back to the
+//! [`NativeBackend`]; `fallback_calls` counts them so benchmarks and tests
+//! can assert which path actually ran.
+
+use crate::kernels::{Gram, KernelFunction};
+use crate::kkmeans::state::CenterWindow;
+use crate::kkmeans::{AssignBackend, NativeBackend};
+use crate::runtime::engine::Engine;
+use anyhow::Result;
+use std::path::Path;
+
+/// PJRT-executing assignment backend with native fallback.
+pub struct XlaBackend {
+    engine: Engine,
+    native: NativeBackend,
+    /// Calls served by the XLA path.
+    pub xla_calls: u64,
+    /// Calls that fell back to the native path.
+    pub fallback_calls: u64,
+}
+
+impl XlaBackend {
+    /// Load the artifact manifest and create the PJRT client.
+    pub fn load(artifact_dir: &Path) -> Result<XlaBackend> {
+        Ok(XlaBackend {
+            engine: Engine::load(artifact_dir)?,
+            native: NativeBackend,
+            xla_calls: 0,
+            fallback_calls: 0,
+        })
+    }
+
+    /// Convenience: load from the default `artifacts/` directory.
+    pub fn load_default() -> Result<XlaBackend> {
+        Self::load(Path::new(super::DEFAULT_ARTIFACT_DIR))
+    }
+
+    fn try_xla(
+        &mut self,
+        gram: &Gram,
+        batch: &[usize],
+        centers: &mut [CenterWindow],
+    ) -> Option<Vec<f64>> {
+        // Only the Gaussian feature kernel lowers to the assign_gaussian
+        // graph; everything else uses the native path.
+        let (ds, kappa) = match gram {
+            Gram::OnTheFly { ds, func: KernelFunction::Gaussian { kappa }, .. } => {
+                (*ds, *kappa)
+            }
+            _ => return None,
+        };
+        let k = centers.len();
+        let d = ds.d;
+        let needed_m = centers.iter().map(|c| c.support_len()).max().unwrap_or(1);
+        let spec = self
+            .engine
+            .manifest()
+            .find_gaussian(batch.len(), k, d, needed_m)?
+            .clone();
+        let (b_art, m_art) = (spec.b, spec.m);
+
+        // ---- marshal inputs ------------------------------------------------
+        // Batch features, padded to b_art rows by repeating row 0.
+        let mut bf = vec![0.0f32; b_art * d];
+        for (r, &x) in batch.iter().enumerate() {
+            bf[r * d..(r + 1) * d].copy_from_slice(ds.row(x));
+        }
+        for r in batch.len()..b_art {
+            let src = ds.row(batch.first().copied().unwrap_or(0)).to_vec();
+            bf[r * d..(r + 1) * d].copy_from_slice(&src);
+        }
+        // Support tensors + weights, zero-padded to m_art slots.
+        let mut sf = vec![0.0f32; k * m_art * d];
+        let mut wf = vec![0.0f32; k * m_art];
+        for (j, c) in centers.iter().enumerate() {
+            for (slot, (y, w)) in c.support().enumerate() {
+                debug_assert!(slot < m_art);
+                let dst = (j * m_art + slot) * d;
+                sf[dst..dst + d].copy_from_slice(ds.row(y));
+                wf[j * m_art + slot] = w as f32;
+            }
+        }
+        let batch_lit = xla::Literal::vec1(&bf)
+            .reshape(&[b_art as i64, d as i64])
+            .ok()?;
+        let support_lit = xla::Literal::vec1(&sf)
+            .reshape(&[k as i64, m_art as i64, d as i64])
+            .ok()?;
+        let weights_lit = xla::Literal::vec1(&wf)
+            .reshape(&[k as i64, m_art as i64])
+            .ok()?;
+        let inv_kappa = xla::Literal::scalar((1.0 / kappa) as f32);
+
+        // ---- execute ---------------------------------------------------------
+        let out = self
+            .engine
+            .run_f32(&spec, &[batch_lit, support_lit, weights_lit, inv_kappa])
+            .ok()?;
+        debug_assert_eq!(out.len(), b_art * k);
+        Some(
+            out[..batch.len() * k]
+                .iter()
+                .map(|&v| v as f64)
+                .collect(),
+        )
+    }
+}
+
+impl AssignBackend for XlaBackend {
+    fn distances(
+        &mut self,
+        gram: &Gram,
+        batch: &[usize],
+        centers: &mut [CenterWindow],
+    ) -> Vec<f64> {
+        match self.try_xla(gram, batch, centers) {
+            Some(dist) => {
+                self.xla_calls += 1;
+                dist
+            }
+            None => {
+                self.fallback_calls += 1;
+                self.native.distances(gram, batch, centers)
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{blobs, SyntheticSpec};
+    use crate::util::rng::Rng;
+
+    fn artifact_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    /// Build a (dataset, centers) fixture matching the (b64, k4, d8) test
+    /// artifact.
+    fn fixture(rng: &mut Rng) -> (crate::data::Dataset, Vec<CenterWindow>) {
+        let ds = blobs(&SyntheticSpec::new(300, 8, 4), rng);
+        let mut centers: Vec<CenterWindow> =
+            (0..4).map(|j| CenterWindow::new(j * 40, 40)).collect();
+        for c in centers.iter_mut() {
+            for _ in 0..4 {
+                let pts: Vec<usize> = (0..9).map(|_| rng.below(ds.n)).collect();
+                c.apply_update(0.5, &pts, None);
+            }
+        }
+        (ds, centers)
+    }
+
+    #[test]
+    fn xla_matches_native_backend() {
+        let Some(dir) = artifact_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let mut rng = Rng::seeded(1234);
+        let (ds, mut centers) = fixture(&mut rng);
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 7.0 });
+        let batch: Vec<usize> = (0..64).map(|_| rng.below(ds.n)).collect();
+
+        let mut xla = XlaBackend::load(&dir).unwrap();
+        let mut centers2 = centers.clone();
+        let dx = xla.distances(&gram, &batch, &mut centers);
+        assert_eq!(xla.xla_calls, 1, "expected the XLA path to serve this call");
+        let dn = NativeBackend.distances(&gram, &batch, &mut centers2);
+        assert_eq!(dx.len(), dn.len());
+        for (i, (a, b)) in dx.iter().zip(dn.iter()).enumerate() {
+            assert!((a - b).abs() < 1e-3, "idx {i}: xla={a} native={b}");
+        }
+    }
+
+    #[test]
+    fn short_batches_are_padded_and_sliced() {
+        let Some(dir) = artifact_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let mut rng = Rng::seeded(99);
+        let (ds, mut centers) = fixture(&mut rng);
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 7.0 });
+        let batch: Vec<usize> = (0..17).map(|_| rng.below(ds.n)).collect();
+        let mut xla = XlaBackend::load(&dir).unwrap();
+        let mut centers2 = centers.clone();
+        let dx = xla.distances(&gram, &batch, &mut centers);
+        assert_eq!(dx.len(), 17 * 4);
+        assert_eq!(xla.xla_calls, 1);
+        let dn = NativeBackend.distances(&gram, &batch, &mut centers2);
+        for (a, b) in dx.iter().zip(dn.iter()) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn unsupported_configs_fall_back_to_native() {
+        let Some(dir) = artifact_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let mut rng = Rng::seeded(5);
+        let ds = blobs(&SyntheticSpec::new(100, 8, 3), &mut rng);
+        // k=3 has no artifact → fallback.
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 7.0 });
+        let mut centers: Vec<CenterWindow> =
+            (0..3).map(|j| CenterWindow::new(j, 20)).collect();
+        let batch: Vec<usize> = (0..32).collect();
+        let mut xla = XlaBackend::load(&dir).unwrap();
+        let _ = xla.distances(&gram, &batch, &mut centers);
+        assert_eq!(xla.fallback_calls, 1);
+        // Non-Gaussian kernel → fallback.
+        let gram2 = Gram::on_the_fly(&ds, KernelFunction::Linear);
+        let _ = xla.distances(&gram2, &batch, &mut centers);
+        assert_eq!(xla.fallback_calls, 2);
+    }
+
+    #[test]
+    fn end_to_end_fit_through_xla_backend() {
+        let Some(dir) = artifact_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        use crate::kkmeans::{TruncatedConfig, TruncatedMiniBatchKernelKMeans};
+        use crate::metrics::ari;
+        let mut rng = Rng::seeded(31);
+        let ds = blobs(
+            &SyntheticSpec::new(500, 8, 4).with_std(0.4).with_separation(6.0),
+            &mut rng,
+        );
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 16.0 });
+        let cfg = TruncatedConfig {
+            k: 4,
+            batch_size: 64,
+            tau: 100,
+            max_iters: 40,
+            ..Default::default()
+        };
+        let mut backend = XlaBackend::load(&dir).unwrap();
+        let mut best = 0.0f64;
+        for seed in 0..3 {
+            let mut fit_rng = Rng::seeded(seed);
+            let fit = TruncatedMiniBatchKernelKMeans::new(cfg.clone())
+                .fit_with_backend(&gram, &mut backend, &mut fit_rng);
+            best = best.max(ari(ds.labels.as_ref().unwrap(), &fit.result.assignments));
+        }
+        assert!(backend.xla_calls > 0, "XLA path never used");
+        assert!(best > 0.85, "best ARI={best}");
+    }
+}

@@ -1,0 +1,126 @@
+//! PJRT engine: a CPU PJRT client plus a lazy cache of compiled
+//! executables, keyed by artifact name.
+//!
+//! Compilation happens once per artifact per process (the paper's protocol
+//! compiles one executable per model variant); execution is then a plain
+//! synchronous PJRT call from the clustering hot loop.
+
+use super::manifest::{ArtifactSpec, Manifest};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// PJRT client + executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client and load the manifest from `dir`.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, manifest, cache: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (once) and return the executable for an artifact.
+    pub fn executable(&mut self, spec: &ArtifactSpec) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(&spec.name) {
+            let path = self.manifest.path_of(spec);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", spec.name))?;
+            self.cache.insert(spec.name.clone(), exe);
+        }
+        Ok(&self.cache[&spec.name])
+    }
+
+    /// Execute an artifact on f32 input literals; returns the flat f32
+    /// vector of the single (tuple-wrapped) output.
+    pub fn run_f32(
+        &mut self,
+        spec: &ArtifactSpec,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<f32>> {
+        let exe = self.executable(spec)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", spec.name))?[0][0]
+            .to_literal_sync()?;
+        // Lowered with return_tuple=True → 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Number of executables compiled so far (diagnostics).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn engine_loads_and_compiles_smallest_artifact() {
+        let Some(dir) = artifact_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let mut engine = Engine::load(&dir).unwrap();
+        assert!(engine.platform().to_lowercase().contains("cpu")
+            || engine.platform().to_lowercase().contains("host"));
+        let spec = engine
+            .manifest()
+            .find_gaussian(64, 4, 8, 100)
+            .expect("test artifact (b64,k4,d8) missing — re-run make artifacts")
+            .clone();
+        // Build zero inputs of the right shapes: batch (b,d), support
+        // (k,m,d), weights (k,m), inv_kappa ().
+        let (b, k, m, d) = (spec.b, spec.k, spec.m, spec.d.unwrap());
+        let batch = xla::Literal::vec1(&vec![0.0f32; b * d])
+            .reshape(&[b as i64, d as i64])
+            .unwrap();
+        let support = xla::Literal::vec1(&vec![0.0f32; k * m * d])
+            .reshape(&[k as i64, m as i64, d as i64])
+            .unwrap();
+        let weights = xla::Literal::vec1(&vec![0.0f32; k * m])
+            .reshape(&[k as i64, m as i64])
+            .unwrap();
+        let inv_kappa = xla::Literal::scalar(1.0f32);
+        let out = engine
+            .run_f32(&spec, &[batch, support, weights, inv_kappa])
+            .unwrap();
+        assert_eq!(out.len(), b * k);
+        // All-zero weights ⇒ dist = K(x,x) = 1 everywhere.
+        for v in out {
+            assert!((v - 1.0).abs() < 1e-5, "{v}");
+        }
+        assert_eq!(engine.compiled_count(), 1);
+        // Second call hits the cache.
+        let _ = engine.executable(&spec).unwrap();
+        assert_eq!(engine.compiled_count(), 1);
+    }
+}

@@ -1,0 +1,143 @@
+//! Artifact manifest: what `make artifacts` built and how to pick an
+//! executable for a run configuration.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    /// Graph kind: `assign_gaussian` (feature kernel) or
+    /// `assign_precomputed` (graph kernels).
+    pub kind: String,
+    /// Fixed batch size the graph was lowered for.
+    pub b: usize,
+    /// Number of centers.
+    pub k: usize,
+    /// Support capacity per center (zero-padded windows).
+    pub m: usize,
+    /// Feature dimension (feature-kernel graphs only).
+    pub d: Option<usize>,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load from `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let root = Json::parse(text).context("manifest.json is not valid JSON")?;
+        let version = root.get("version").as_usize().unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let mut artifacts = Vec::new();
+        for a in root
+            .get("artifacts")
+            .as_arr()
+            .context("manifest missing 'artifacts' array")?
+        {
+            artifacts.push(ArtifactSpec {
+                name: a.get("name").as_str().context("artifact missing name")?.to_string(),
+                file: a.get("file").as_str().context("artifact missing file")?.to_string(),
+                kind: a.get("kind").as_str().context("artifact missing kind")?.to_string(),
+                b: a.get("b").as_usize().context("artifact missing b")?,
+                k: a.get("k").as_usize().context("artifact missing k")?,
+                m: a.get("m").as_usize().context("artifact missing m")?,
+                d: a.get("d").as_usize(),
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    /// Pick the best Gaussian assign-step artifact for a run: exact `k` and
+    /// `d`, batch capacity ≥ `b`, support capacity ≥ `min_m`; among
+    /// candidates prefer the tightest (smallest b, then smallest m) so we
+    /// waste the least padding compute.
+    pub fn find_gaussian(
+        &self,
+        b: usize,
+        k: usize,
+        d: usize,
+        min_m: usize,
+    ) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.kind == "assign_gaussian"
+                    && a.k == k
+                    && a.d == Some(d)
+                    && a.b >= b
+                    && a.m >= min_m
+            })
+            .min_by_key(|a| (a.b, a.m))
+    }
+
+    /// Absolute path of an artifact file.
+    pub fn path_of(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "version": 1,
+        "artifacts": [
+            {"name": "g1", "file": "g1.hlo.txt", "kind": "assign_gaussian",
+             "b": 256, "k": 10, "m": 640, "d": 16},
+            {"name": "g2", "file": "g2.hlo.txt", "kind": "assign_gaussian",
+             "b": 1024, "k": 10, "m": 1408, "d": 16},
+            {"name": "p1", "file": "p1.hlo.txt", "kind": "assign_precomputed",
+             "b": 64, "k": 4, "m": 192}
+        ]
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        assert_eq!(m.artifacts[0].b, 256);
+        assert_eq!(m.artifacts[2].d, None);
+        assert_eq!(m.path_of(&m.artifacts[0]), PathBuf::from("/tmp/a/g1.hlo.txt"));
+    }
+
+    #[test]
+    fn find_gaussian_prefers_tightest_fit() {
+        let m = Manifest::parse(Path::new("."), SAMPLE).unwrap();
+        // Exact small fit.
+        assert_eq!(m.find_gaussian(256, 10, 16, 500).unwrap().name, "g1");
+        // Batch too large for g1 → g2.
+        assert_eq!(m.find_gaussian(512, 10, 16, 500).unwrap().name, "g2");
+        // Window too large for g1 → g2.
+        assert_eq!(m.find_gaussian(256, 10, 16, 700).unwrap().name, "g2");
+        // No k match.
+        assert!(m.find_gaussian(256, 3, 16, 100).is_none());
+        // No d match.
+        assert!(m.find_gaussian(256, 10, 32, 100).is_none());
+    }
+
+    #[test]
+    fn rejects_bad_versions_and_shapes() {
+        assert!(Manifest::parse(Path::new("."), r#"{"version": 2, "artifacts": []}"#).is_err());
+        assert!(Manifest::parse(Path::new("."), r#"{"version": 1}"#).is_err());
+        assert!(Manifest::parse(Path::new("."), "not json").is_err());
+    }
+}

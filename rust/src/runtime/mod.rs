@@ -1,0 +1,29 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `make artifacts` (Layer 1/2 — JAX + Pallas) and executes them from the
+//! Rust hot path via the `xla` crate's PJRT CPU client.
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json` and selects an
+//!   artifact for a run configuration.
+//! * [`engine`] — PJRT client + lazy executable compilation cache.
+//! * [`XlaBackend`] — an [`crate::kkmeans::AssignBackend`] that marshals
+//!   the batch/support/weight tensors and runs the assignment-step graph.
+//!
+//! Python is only involved at build time; these modules read text files and
+//! talk to PJRT directly.
+
+pub mod backend;
+pub mod engine;
+pub mod manifest;
+
+pub use backend::XlaBackend;
+pub use engine::Engine;
+pub use manifest::{ArtifactSpec, Manifest};
+
+/// Default artifact directory, relative to the repo root / cwd.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
+
+/// True when an artifact directory with a manifest exists (used by tests
+/// and the CLI to decide whether the XLA backend is available).
+pub fn artifacts_available(dir: &str) -> bool {
+    std::path::Path::new(dir).join("manifest.json").exists()
+}

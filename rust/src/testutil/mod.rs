@@ -1,0 +1,4 @@
+//! Test-only infrastructure: a small property-based testing harness
+//! (proptest is unavailable in this offline build) and shared fixtures.
+
+pub mod prop;

@@ -1,0 +1,278 @@
+//! Property-based testing harness (proptest replacement).
+//!
+//! Model: a [`Gen<T>`] produces random values from an [`Rng`]; [`check`]
+//! runs a property over many generated cases and, on failure, greedily
+//! shrinks the input via the generator's `shrink` candidates before
+//! panicking with the minimal counterexample and the seed to reproduce it.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the xla_extension rpath on this image)
+//! use mbkk::testutil::prop::{check, usize_in, vec_of};
+//! check("reverse twice is identity", vec_of(usize_in(0..100), 0..20), |v| {
+//!     let mut w = v.clone();
+//!     w.reverse();
+//!     w.reverse();
+//!     w == *v
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+use std::ops::Range;
+
+/// Number of cases per property (override with MBKK_PROP_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("MBKK_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// A generator of random values with shrinking.
+pub trait Gen<T> {
+    fn generate(&self, rng: &mut Rng) -> T;
+    /// Candidate smaller values; the checker tries them in order.
+    fn shrink(&self, value: &T) -> Vec<T> {
+        let _ = value;
+        Vec::new()
+    }
+}
+
+/// Run `prop` over `default_cases()` generated inputs. Panics with the
+/// (shrunk) counterexample on failure.
+pub fn check<T: std::fmt::Debug + Clone>(
+    name: &str,
+    gen: impl Gen<T>,
+    prop: impl Fn(&T) -> bool,
+) {
+    check_with_seed(name, gen, prop, 0xC0FFEE, default_cases());
+}
+
+/// [`check`] with explicit seed and case count, for reproducing failures.
+pub fn check_with_seed<T: std::fmt::Debug + Clone>(
+    name: &str,
+    gen: impl Gen<T>,
+    prop: impl Fn(&T) -> bool,
+    seed: u64,
+    cases: usize,
+) {
+    let mut rng = Rng::seeded(seed);
+    for case in 0..cases {
+        let input = gen.generate(&mut rng);
+        if !prop(&input) {
+            let minimal = shrink_loop(&gen, input, &prop);
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}).\n\
+                 minimal counterexample: {minimal:?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<T: Clone>(gen: &impl Gen<T>, mut failing: T, prop: &impl Fn(&T) -> bool) -> T {
+    // Greedy descent, bounded to avoid pathological loops.
+    for _ in 0..1000 {
+        let mut improved = false;
+        for cand in gen.shrink(&failing) {
+            if !prop(&cand) {
+                failing = cand;
+                improved = true;
+                break;
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    failing
+}
+
+// ---- primitive generators --------------------------------------------------
+
+pub struct UsizeIn(pub Range<usize>);
+
+/// usize in [lo, hi).
+pub fn usize_in(r: Range<usize>) -> UsizeIn {
+    assert!(!r.is_empty());
+    UsizeIn(r)
+}
+
+impl Gen<usize> for UsizeIn {
+    fn generate(&self, rng: &mut Rng) -> usize {
+        self.0.start + rng.below(self.0.end - self.0.start)
+    }
+
+    fn shrink(&self, value: &usize) -> Vec<usize> {
+        let lo = self.0.start;
+        let mut out = Vec::new();
+        if *value > lo {
+            out.push(lo);
+            out.push(lo + (value - lo) / 2);
+            out.push(value - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+pub struct F64In(pub Range<f64>);
+
+/// f64 uniform in [lo, hi).
+pub fn f64_in(r: Range<f64>) -> F64In {
+    assert!(r.start < r.end);
+    F64In(r)
+}
+
+impl Gen<f64> for F64In {
+    fn generate(&self, rng: &mut Rng) -> f64 {
+        rng.range_f64(self.0.start, self.0.end)
+    }
+
+    fn shrink(&self, value: &f64) -> Vec<f64> {
+        let lo = self.0.start;
+        if *value > lo + 1e-12 {
+            vec![lo, lo + (value - lo) / 2.0]
+        } else {
+            vec![]
+        }
+    }
+}
+
+/// Vec of T with length drawn from `len`.
+pub struct VecOf<G> {
+    elem: G,
+    len: Range<usize>,
+}
+
+pub fn vec_of<G>(elem: G, len: Range<usize>) -> VecOf<G> {
+    VecOf { elem, len }
+}
+
+impl<T: Clone, G: Gen<T>> Gen<Vec<T>> for VecOf<G> {
+    fn generate(&self, rng: &mut Rng) -> Vec<T> {
+        let span = self.len.end - self.len.start;
+        let n = self.len.start + if span > 0 { rng.below(span) } else { 0 };
+        (0..n).map(|_| self.elem.generate(rng)).collect()
+    }
+
+    fn shrink(&self, value: &Vec<T>) -> Vec<Vec<T>> {
+        let mut out = Vec::new();
+        // Structural shrinks: drop halves, drop single elements.
+        if value.len() > self.len.start {
+            out.push(value[..value.len() / 2.max(self.len.start)].to_vec());
+            if value.len() >= 1 {
+                let mut v = value.clone();
+                v.pop();
+                if v.len() >= self.len.start {
+                    out.push(v);
+                }
+            }
+        }
+        // Element-wise shrinks on the first shrinkable element.
+        for (i, x) in value.iter().enumerate() {
+            let cands = self.elem.shrink(x);
+            if !cands.is_empty() {
+                for c in cands.into_iter().take(2) {
+                    let mut v = value.clone();
+                    v[i] = c;
+                    out.push(v);
+                }
+                break;
+            }
+        }
+        out
+    }
+}
+
+/// Pair of independent generators.
+pub struct PairOf<G1, G2>(pub G1, pub G2);
+
+pub fn pair_of<G1, G2>(a: G1, b: G2) -> PairOf<G1, G2> {
+    PairOf(a, b)
+}
+
+impl<A: Clone, B: Clone, G1: Gen<A>, G2: Gen<B>> Gen<(A, B)> for PairOf<G1, G2> {
+    fn generate(&self, rng: &mut Rng) -> (A, B) {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+
+    fn shrink(&self, value: &(A, B)) -> Vec<(A, B)> {
+        let mut out: Vec<(A, B)> = self
+            .0
+            .shrink(&value.0)
+            .into_iter()
+            .map(|a| (a, value.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&value.1).into_iter().map(|b| (value.0.clone(), b)));
+        out
+    }
+}
+
+/// Generator defined by a closure (no shrinking).
+pub struct FromFn<F>(pub F);
+
+pub fn from_fn<T, F: Fn(&mut Rng) -> T>(f: F) -> FromFn<F> {
+    FromFn(f)
+}
+
+impl<T, F: Fn(&mut Rng) -> T> Gen<T> for FromFn<F> {
+    fn generate(&self, rng: &mut Rng) -> T {
+        (self.0)(rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add commutes", pair_of(usize_in(0..100), usize_in(0..100)), |(a, b)| {
+            a + b == b + a
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimal() {
+        let result = std::panic::catch_unwind(|| {
+            check("all < 50", usize_in(0..100), |&x| x < 50);
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // Greedy shrink should land on exactly 50 (the smallest failure).
+        assert!(msg.contains("counterexample: 50"), "msg: {msg}");
+    }
+
+    #[test]
+    fn vec_generator_respects_length_bounds() {
+        let gen = vec_of(usize_in(0..10), 2..5);
+        let mut rng = Rng::seeded(1);
+        for _ in 0..100 {
+            let v = gen.generate(&mut rng);
+            assert!((2..5).contains(&v.len()));
+            assert!(v.iter().all(|&x| x < 10));
+        }
+    }
+
+    #[test]
+    fn vec_shrink_reduces_length() {
+        let result = std::panic::catch_unwind(|| {
+            check("vecs shorter than 3", vec_of(usize_in(0..5), 0..20), |v| v.len() < 3);
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // Minimal failing vec has length exactly 3.
+        let needle = "counterexample: [";
+        let idx = msg.find(needle).unwrap();
+        let tail = &msg[idx + needle.len()..];
+        let count = tail.split(']').next().unwrap().split(',').count();
+        assert_eq!(count, 3, "msg: {msg}");
+    }
+
+    #[test]
+    fn f64_generator_in_range() {
+        let gen = f64_in(-1.0..2.0);
+        let mut rng = Rng::seeded(2);
+        for _ in 0..200 {
+            let x = gen.generate(&mut rng);
+            assert!((-1.0..2.0).contains(&x));
+        }
+    }
+}

@@ -1,0 +1,183 @@
+//! Tiny command-line argument parser (clap is unavailable offline).
+//!
+//! Supports `subcommand --flag --key value --key=value positional` grammars,
+//! typed accessors with defaults, and a collected-error report for unknown
+//! keys via [`Args::finish`].
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: one optional subcommand, key→value options, bare
+/// flags, and positional arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+    consumed: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        // First bare token (not starting with '-') is the subcommand.
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                args.subcommand = it.next();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.opts.insert(stripped.to_string(), v);
+                } else {
+                    args.flags.push(stripped.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse the process's own argv.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().insert(key.to_string());
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed option with default; panics with a friendly message on parse
+    /// failure (CLI surface, so failing fast is correct).
+    pub fn get_parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.get(key) {
+            None => default,
+            Some(s) => s
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key}: cannot parse {s:?}")),
+        }
+    }
+
+    /// Comma-separated list option, e.g. `--batch-sizes 256,512,1024`.
+    pub fn get_list<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Vec<T>
+    where
+        T: Clone,
+    {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .filter(|p| !p.is_empty())
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .unwrap_or_else(|_| panic!("--{key}: cannot parse element {p:?}"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Bare flag (also true when given as `--key true/1`).
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        if self.flags.iter().any(|f| f == key) {
+            return true;
+        }
+        matches!(self.opts.get(key).map(|s| s.as_str()), Some("true" | "1" | "yes"))
+    }
+
+    /// Returns the list of keys the user passed that no accessor touched —
+    /// catches typos like `--bacth-size`.
+    pub fn unknown_keys(&self) -> Vec<String> {
+        let consumed = self.consumed.borrow();
+        self.opts
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !consumed.contains(*k))
+            .cloned()
+            .collect()
+    }
+
+    /// Abort with a message if any unrecognised options remain.
+    pub fn finish(&self) {
+        let unknown = self.unknown_keys();
+        if !unknown.is_empty() {
+            eprintln!("error: unknown option(s): {}", unknown.join(", "));
+            std::process::exit(2);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // Note the grammar: a bare flag immediately followed by a bare token
+        // would swallow it as a value, so positionals precede options.
+        let a = parse(&["run", "extra", "--dataset", "rings", "--k=3", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get("dataset"), Some("rings"));
+        assert_eq!(a.get_parse_or("k", 0usize), 3);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["run"]);
+        assert_eq!(a.get_or("dataset", "blobs"), "blobs");
+        assert_eq!(a.get_parse_or("batch", 256usize), 256);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse(&["x", "--bs", "256,512, 1024"]);
+        assert_eq!(a.get_list("bs", &[0usize]), vec![256, 512, 1024]);
+        assert_eq!(a.get_list("tau", &[50usize, 100]), vec![50, 100]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag_not_swallowed() {
+        let a = parse(&["x", "--fast", "--k", "3"]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.get_parse_or("k", 0usize), 3);
+    }
+
+    #[test]
+    fn unknown_key_detection() {
+        let a = parse(&["x", "--good", "1", "--typo", "2"]);
+        let _ = a.get("good");
+        assert_eq!(a.unknown_keys(), vec!["typo".to_string()]);
+    }
+
+    #[test]
+    fn no_subcommand_when_leading_dash() {
+        let a = parse(&["--k", "2"]);
+        assert!(a.subcommand.is_none());
+        assert_eq!(a.get_parse_or("k", 0usize), 2);
+    }
+}

@@ -1,0 +1,12 @@
+//! General-purpose substrates the coordinator depends on.
+//!
+//! This build runs fully offline with only the `xla` crate vendored, so the
+//! usual ecosystem crates (rand, serde, clap, rayon) are re-implemented here
+//! at exactly the scope this project needs. Each module carries its own unit
+//! tests.
+
+pub mod rng;
+pub mod json;
+pub mod cli;
+pub mod parallel;
+pub mod timing;

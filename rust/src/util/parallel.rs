@@ -1,0 +1,251 @@
+//! Data-parallel helpers over std::thread scoped threads (rayon replacement).
+//!
+//! The clustering hot paths are embarrassingly parallel over rows (batch
+//! points, dataset points, matrix rows). [`par_chunks_mut`] splits an output
+//! slice into contiguous chunks, one per worker; [`par_map_indexed`] maps an
+//! index range; both fall back to the serial path for tiny inputs where
+//! thread spawn overhead dominates.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use: `MBKK_THREADS` env override, else
+/// available parallelism, capped at 16 (the workloads stop scaling there).
+pub fn num_threads() -> usize {
+    static CACHED: AtomicUsize = AtomicUsize::new(0);
+    let cached = CACHED.load(Ordering::Relaxed);
+    if cached != 0 {
+        return cached;
+    }
+    let n = std::env::var("MBKK_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+                .min(16)
+        });
+    CACHED.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Minimum amount of work (items) per thread before parallelism pays off.
+const MIN_ITEMS_PER_THREAD: usize = 256;
+
+/// Run `f(chunk_start_index, chunk)` in parallel over contiguous mutable
+/// chunks of `out`, with `chunk.len() ≈ out.len() / workers`.
+pub fn par_chunks_mut<T: Send, F>(out: &mut [T], f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = out.len();
+    if n == 0 {
+        return;
+    }
+    let workers = num_threads().min(n.div_ceil(MIN_ITEMS_PER_THREAD)).max(1);
+    if workers == 1 {
+        f(0, out);
+        return;
+    }
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|scope| {
+        for (ci, piece) in out.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            scope.spawn(move || f(ci * chunk, piece));
+        }
+    });
+}
+
+/// Like [`par_chunks_mut`] but splits on whole-row boundaries of a
+/// row-major matrix with `row_len` elements per row. `f(first_row, rows)`
+/// receives the index of its first row and a row-aligned mutable block.
+pub fn par_rows_mut<T: Send, F>(out: &mut [T], row_len: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(row_len > 0 && out.len() % row_len == 0, "non-rectangular data");
+    let nrows = out.len() / row_len;
+    if nrows == 0 {
+        return;
+    }
+    let workers = num_threads()
+        .min(out.len().div_ceil(MIN_ITEMS_PER_THREAD))
+        .min(nrows)
+        .max(1);
+    if workers == 1 {
+        f(0, out);
+        return;
+    }
+    let rows_per = nrows.div_ceil(workers);
+    std::thread::scope(|scope| {
+        for (bi, block) in out.chunks_mut(rows_per * row_len).enumerate() {
+            let f = &f;
+            scope.spawn(move || f(bi * rows_per, block));
+        }
+    });
+}
+
+/// Parallel map over `0..n`, collecting results in order.
+pub fn par_map_indexed<T: Send, F>(n: usize, f: F) -> Vec<T>
+where
+    F: Fn(usize) -> T + Sync,
+    T: Default + Clone,
+{
+    let mut out = vec![T::default(); n];
+    par_chunks_mut(&mut out, |start, chunk| {
+        for (i, slot) in chunk.iter_mut().enumerate() {
+            *slot = f(start + i);
+        }
+    });
+    out
+}
+
+/// Parallel fold: maps `0..n` through `map` on worker threads and reduces the
+/// per-thread partials with `reduce`. Used for objective evaluation (sums).
+pub fn par_fold<A, M, R>(n: usize, identity: A, map: M, reduce: R) -> A
+where
+    A: Send + Clone,
+    M: Fn(usize) -> A + Sync,
+    R: Fn(A, A) -> A + Send + Sync,
+{
+    if n == 0 {
+        return identity;
+    }
+    let workers = num_threads().min(n.div_ceil(MIN_ITEMS_PER_THREAD)).max(1);
+    if workers == 1 {
+        let mut acc = identity;
+        for i in 0..n {
+            acc = reduce(acc, map(i));
+        }
+        return acc;
+    }
+    let chunk = n.div_ceil(workers);
+    let mut partials: Vec<Option<A>> = Vec::new();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for w in 0..workers {
+            let lo = w * chunk;
+            let hi = ((w + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let map = &map;
+            let reduce = &reduce;
+            let id = identity.clone();
+            handles.push(scope.spawn(move || {
+                let mut acc = id;
+                for i in lo..hi {
+                    acc = reduce(acc, map(i));
+                }
+                acc
+            }));
+        }
+        for h in handles {
+            partials.push(Some(h.join().expect("worker panicked")));
+        }
+    });
+    let mut acc = identity;
+    for p in partials.into_iter().flatten() {
+        acc = reduce(acc, p);
+    }
+    acc
+}
+
+/// Run a list of independent jobs with at most `num_threads()` in flight.
+/// Used by the experiment coordinator to run grid cells concurrently.
+pub fn par_run_jobs<T: Send, F>(jobs: Vec<F>) -> Vec<T>
+where
+    F: FnOnce() -> T + Send,
+{
+    let n = jobs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = num_threads().min(n);
+    if workers == 1 {
+        return jobs.into_iter().map(|j| j()).collect();
+    }
+    let queue: Vec<std::sync::Mutex<Option<F>>> =
+        jobs.into_iter().map(|j| std::sync::Mutex::new(Some(j))).collect();
+    let next = AtomicUsize::new(0);
+    let results: Vec<std::sync::Mutex<Option<T>>> =
+        (0..n).map(|_| std::sync::Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let job = queue[i].lock().unwrap().take().unwrap();
+                let r = job();
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("job missing result"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_chunks_covers_all_indices() {
+        let mut out = vec![0usize; 10_000];
+        par_chunks_mut(&mut out, |start, chunk| {
+            for (i, v) in chunk.iter_mut().enumerate() {
+                *v = start + i;
+            }
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i);
+        }
+    }
+
+    #[test]
+    fn par_map_matches_serial() {
+        let got = par_map_indexed(5000, |i| i * i);
+        let want: Vec<usize> = (0..5000).map(|i| i * i).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn par_fold_sums() {
+        let s = par_fold(10_000, 0u64, |i| i as u64, |a, b| a + b);
+        assert_eq!(s, 9999 * 10_000 / 2);
+    }
+
+    #[test]
+    fn small_inputs_take_serial_path() {
+        let mut out = vec![0; 3];
+        par_chunks_mut(&mut out, |start, chunk| {
+            for (i, v) in chunk.iter_mut().enumerate() {
+                *v = start + i + 1;
+            }
+        });
+        assert_eq!(out, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn par_run_jobs_preserves_order() {
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..50usize)
+            .map(|i| Box::new(move || i * 2) as Box<dyn FnOnce() -> usize + Send>)
+            .collect();
+        let out = par_run_jobs(jobs);
+        assert_eq!(out, (0..50).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_inputs_ok() {
+        let mut e: Vec<u8> = vec![];
+        par_chunks_mut(&mut e, |_, _| {});
+        assert_eq!(par_fold(0, 7i32, |_| 0, |a, b| a + b), 7);
+        let out: Vec<i32> = par_run_jobs(Vec::<Box<dyn FnOnce() -> i32 + Send>>::new());
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,173 @@
+//! Wall-clock timing helpers and a lightweight phase profiler.
+//!
+//! The experiment coordinator reports per-phase timings (kernel/gram
+//! construction, initialization, iterations) exactly like the paper's plots
+//! split "kernel time" (black bars) from clustering time.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Stopwatch returning elapsed seconds.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let sw = Stopwatch::start();
+    let out = f();
+    (out, sw.secs())
+}
+
+/// Accumulating named-phase profiler.
+///
+/// ```no_run
+/// // (no_run: doctest binaries lack the xla_extension rpath on this image)
+/// use mbkk::util::timing::Profiler;
+/// let mut prof = Profiler::new();
+/// prof.scope("assign", || { /* work */ });
+/// prof.add("update", 0.5e-3);
+/// assert!(prof.total() > 0.0);
+/// ```
+#[derive(Debug, Default, Clone)]
+pub struct Profiler {
+    phases: BTreeMap<String, (f64, u64)>, // name -> (total secs, count)
+}
+
+impl Profiler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record `secs` against the named phase.
+    pub fn add(&mut self, phase: &str, secs: f64) {
+        let e = self.phases.entry(phase.to_string()).or_insert((0.0, 0));
+        e.0 += secs;
+        e.1 += 1;
+    }
+
+    /// Time a closure under a phase name.
+    pub fn scope<T>(&mut self, phase: &str, f: impl FnOnce() -> T) -> T {
+        let (out, secs) = timed(f);
+        self.add(phase, secs);
+        out
+    }
+
+    /// Total seconds attributed to a phase.
+    pub fn phase_secs(&self, phase: &str) -> f64 {
+        self.phases.get(phase).map(|(s, _)| *s).unwrap_or(0.0)
+    }
+
+    pub fn phase_count(&self, phase: &str) -> u64 {
+        self.phases.get(phase).map(|(_, c)| *c).unwrap_or(0)
+    }
+
+    /// Sum over all phases.
+    pub fn total(&self) -> f64 {
+        self.phases.values().map(|(s, _)| s).sum()
+    }
+
+    /// Merge another profiler's counters into this one.
+    pub fn merge(&mut self, other: &Profiler) {
+        for (k, (s, c)) in &other.phases {
+            let e = self.phases.entry(k.clone()).or_insert((0.0, 0));
+            e.0 += s;
+            e.1 += c;
+        }
+    }
+
+    /// Render a fixed-width summary table.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<24} {:>12} {:>10} {:>12}\n",
+            "phase", "total (s)", "calls", "mean (ms)"
+        ));
+        for (name, (secs, count)) in &self.phases {
+            let mean_ms = if *count > 0 { secs / *count as f64 * 1e3 } else { 0.0 };
+            out.push_str(&format!(
+                "{:<24} {:>12.4} {:>10} {:>12.4}\n",
+                name, secs, count, mean_ms
+            ));
+        }
+        out
+    }
+
+    /// Iterate phases as (name, total_secs, count).
+    pub fn iter(&self) -> impl Iterator<Item = (&str, f64, u64)> {
+        self.phases.iter().map(|(k, (s, c))| (k.as_str(), *s, *c))
+    }
+}
+
+/// Format seconds human-readably (ns/µs/ms/s).
+pub fn fmt_secs(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{secs:.3}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(sw.secs() >= 0.002);
+    }
+
+    #[test]
+    fn profiler_accumulates() {
+        let mut p = Profiler::new();
+        p.add("a", 1.0);
+        p.add("a", 2.0);
+        p.add("b", 0.5);
+        assert_eq!(p.phase_secs("a"), 3.0);
+        assert_eq!(p.phase_count("a"), 2);
+        assert_eq!(p.total(), 3.5);
+        let report = p.report();
+        assert!(report.contains('a') && report.contains('b'));
+    }
+
+    #[test]
+    fn profiler_merge() {
+        let mut p = Profiler::new();
+        p.add("x", 1.0);
+        let mut q = Profiler::new();
+        q.add("x", 2.0);
+        q.add("y", 3.0);
+        p.merge(&q);
+        assert_eq!(p.phase_secs("x"), 3.0);
+        assert_eq!(p.phase_secs("y"), 3.0);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert!(fmt_secs(5e-10).ends_with("ns"));
+        assert!(fmt_secs(5e-6).ends_with("µs"));
+        assert!(fmt_secs(5e-3).ends_with("ms"));
+        assert!(fmt_secs(5.0).ends_with('s'));
+    }
+}

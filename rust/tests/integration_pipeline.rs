@@ -1,0 +1,167 @@
+//! Cross-module integration tests: CSV → kernel → clustering → metrics,
+//! registry → figure rows, coreset composition, and backend agreement at
+//! the fit level.
+
+use mbkk::coordinator::experiment::{run_one, AlgoSpec, KernelSpec, RunSpec};
+use mbkk::coordinator::figures;
+use mbkk::data::{csvio, registry};
+use mbkk::kernels::{Gram, KernelFunction};
+use mbkk::kkmeans::{LearningRate, TruncatedConfig, TruncatedMiniBatchKernelKMeans};
+use mbkk::metrics::ari;
+use mbkk::util::rng::Rng;
+
+#[test]
+fn csv_roundtrip_cluster_pipeline() {
+    // Generate → save CSV → load CSV → cluster → evaluate: the full user
+    // path of `mbkk run --csv`.
+    let mut rng = Rng::seeded(11);
+    let ds = mbkk::data::synthetic::blobs(
+        &mbkk::data::synthetic::SyntheticSpec::new(400, 5, 3)
+            .with_std(0.3)
+            .with_separation(7.0),
+        &mut rng,
+    );
+    let dir = std::env::temp_dir().join("mbkk_integration");
+    let path = dir.join("blobs.csv");
+    csvio::save_csv(&ds, &path).unwrap();
+    let loaded = csvio::load_csv(&path).unwrap();
+    assert_eq!(loaded.n, ds.n);
+
+    let gram = Gram::on_the_fly(&loaded, KernelFunction::Gaussian { kappa: 10.0 });
+    let cfg = TruncatedConfig { k: 3, batch_size: 128, tau: 100, max_iters: 50, ..Default::default() };
+    let res = TruncatedMiniBatchKernelKMeans::new(cfg).fit(&gram, &mut rng);
+    let score = ari(loaded.labels.as_ref().unwrap(), &res.assignments);
+    assert!(score > 0.9, "pipeline ARI={score}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn registry_datasets_cluster_above_chance() {
+    // Every proxy dataset must be learnable: the truncated algorithm beats
+    // chance by a wide margin at small scale.
+    for &name in registry::PAPER_PROXIES {
+        let spec = RunSpec {
+            dataset: name.into(),
+            scale: 0.04,
+            kernel: KernelSpec::Gaussian { multiplier: 1.0 },
+            algo: AlgoSpec::TruncKkm(LearningRate::Beta),
+            k: registry::default_k(name),
+            batch_size: 128,
+            tau: 100,
+            max_iters: 60,
+            epsilon: None,
+            seed: 5,
+        };
+        let out = run_one(&spec);
+        assert!(out.ari > 0.15, "{name}: ARI={} too close to chance", out.ari);
+        assert!(out.nmi > 0.2, "{name}: NMI={}", out.nmi);
+    }
+}
+
+#[test]
+fn gamma_table_matches_paper_shape() {
+    // Paper Table 1's qualitative shape: γ(gaussian)=1 exactly;
+    // γ(knn) ≪ γ(heat) < 1.
+    let md = figures::run_gamma_table(0.03, 9, None).unwrap();
+    for line in md.lines().skip(2) {
+        let cols: Vec<&str> = line.split('|').map(str::trim).collect();
+        let kernel = cols[2];
+        let gamma: f64 = cols[3].parse().unwrap();
+        match kernel {
+            "gaussian" => assert!((gamma - 1.0).abs() < 1e-6, "{line}"),
+            "knn" => assert!(gamma < 0.25, "{line}"),
+            "heat" => assert!(gamma < 1.0, "{line}"),
+            other => panic!("unexpected kernel {other}"),
+        }
+    }
+}
+
+#[test]
+fn figure1_rows_support_paper_ordering() {
+    // Tiny figure-1 run: kernel mini-batch quality ≈ full batch (within
+    // noise), and every expected algo row is present for all four proxies.
+    let opts = figures::FigureOptions {
+        scale: 0.03,
+        repeats: 2,
+        max_iters: 40,
+        quick: true,
+        seed: 3,
+    };
+    let rows = figures::run_figure(1, &opts, None).unwrap();
+    let datasets: std::collections::BTreeSet<&str> =
+        rows.iter().map(|r| r.dataset.as_str()).collect();
+    assert_eq!(datasets.len(), 4);
+    for &dataset in registry::PAPER_PROXIES {
+        let full = rows
+            .iter()
+            .find(|r| r.dataset == dataset && r.algo == "full-kkm")
+            .unwrap();
+        let trunc = rows
+            .iter()
+            .find(|r| r.dataset == dataset && r.algo == "btrunc-kkm")
+            .unwrap();
+        assert!(
+            trunc.ari.mean > full.ari.mean - 0.25,
+            "{dataset}: truncated ARI {} collapsed vs full {}",
+            trunc.ari.mean,
+            full.ari.mean
+        );
+    }
+}
+
+#[test]
+fn coreset_then_minibatch_composition() {
+    // §2 composability: coreset → weighted truncated mini-batch on a
+    // registry dataset keeps quality while shrinking n by 5x.
+    let ds = registry::load("synth_pendigits", 0.08, 13);
+    let mut rng = Rng::seeded(13);
+    let cs = mbkk::data::coreset::uniform_coreset(&ds, ds.n / 5, &mut rng);
+    let gram = Gram::on_the_fly(&cs, KernelFunction::Gaussian { kappa: cs.d as f64 });
+    let cfg = TruncatedConfig {
+        k: 10,
+        batch_size: 128,
+        tau: 100,
+        max_iters: 60,
+        weights: cs.weights.clone(),
+        ..Default::default()
+    };
+    let res = TruncatedMiniBatchKernelKMeans::new(cfg).fit(&gram, &mut rng);
+    let score = ari(cs.labels.as_ref().unwrap(), &res.assignments);
+    assert!(score > 0.3, "coreset composition ARI={score}");
+}
+
+#[test]
+fn xla_and_native_full_fits_agree_statistically() {
+    // When artifacts exist, a full fit through each backend with the same
+    // seed must produce identical assignments except where f32-vs-f64
+    // rounding flips a near-tie. We assert ≥99% agreement.
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut rng = Rng::seeded(77);
+    let ds = mbkk::data::synthetic::blobs(
+        &mbkk::data::synthetic::SyntheticSpec::new(600, 8, 4).with_separation(5.0),
+        &mut rng,
+    );
+    let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 16.0 });
+    let cfg = TruncatedConfig { k: 4, batch_size: 64, tau: 100, max_iters: 30, ..Default::default() };
+    let mut native_rng = Rng::seeded(4);
+    let native = TruncatedMiniBatchKernelKMeans::new(cfg.clone())
+        .fit_with_backend(&gram, &mut mbkk::kkmeans::NativeBackend, &mut native_rng);
+    let mut xla = mbkk::runtime::XlaBackend::load(dir).unwrap();
+    let mut xla_rng = Rng::seeded(4);
+    let xfit = TruncatedMiniBatchKernelKMeans::new(cfg)
+        .fit_with_backend(&gram, &mut xla, &mut xla_rng);
+    assert!(xla.xla_calls > 0);
+    let agree = native
+        .result
+        .assignments
+        .iter()
+        .zip(xfit.result.assignments.iter())
+        .filter(|(a, b)| a == b)
+        .count();
+    let frac = agree as f64 / ds.n as f64;
+    assert!(frac > 0.99, "backend agreement only {frac}");
+}
