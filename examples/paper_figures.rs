@@ -18,7 +18,7 @@ use mbkk::util::cli::Args;
 use mbkk::util::timing::Stopwatch;
 use std::path::Path;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mbkk::util::error::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     let opts = FigureOptions {
         scale: args.get_parse_or("scale", 0.15f64),

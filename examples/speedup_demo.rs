@@ -14,7 +14,7 @@ use mbkk::kkmeans::LearningRate;
 use mbkk::util::cli::Args;
 use mbkk::util::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mbkk::util::error::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     let dataset = args.get_or("dataset", "synth_pendigits");
     let scale = args.get_parse_or("scale", 0.6f64);

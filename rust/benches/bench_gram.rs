@@ -5,6 +5,9 @@
 //! * Full gram materialization (the paper's "kernel time" black bars).
 //! * Dense GEMM + `expm` (the heat-kernel substrate).
 //!
+//! Merges its samples into the repo-root `BENCH_baseline.json` perf
+//! trajectory (see README.md "Benchmarks").
+//!
 //! ```bash
 //! cargo bench --bench bench_gram
 //! ```
@@ -48,4 +51,5 @@ fn main() {
         runner.bench(&format!("expm {n}x{n}"), || expm(&a));
     }
     runner.write_csv();
+    runner.write_baseline(&BenchRunner::baseline_path());
 }

@@ -6,6 +6,9 @@
 //! * Algorithm 1: `O(n(b+k))` — linear in n.
 //! * Full batch: `O(n²)` — quadratic in n.
 //!
+//! Merges its samples into the repo-root `BENCH_baseline.json` perf
+//! trajectory (see README.md "Benchmarks").
+//!
 //! ```bash
 //! cargo bench --bench bench_iteration
 //! ```
@@ -134,4 +137,5 @@ fn main() {
         println!("  alg2 n-independence: t(n=8000)/t(n=2000) = {:.2} (≈1 expected)", b / a);
     }
     runner.write_csv();
+    runner.write_baseline(&BenchRunner::baseline_path());
 }

@@ -2,22 +2,32 @@
 //!
 //! Each benchmark target (`rust/benches/*.rs`, `harness = false`) builds a
 //! [`BenchRunner`], registers closures, and gets warmup, adaptive iteration
-//! counts, and a mean/std/median/min/max report. Results can also be dumped
-//! as CSV rows so `EXPERIMENTS.md` tables are reproducible by re-running
-//! `cargo bench`.
+//! counts, and a mean/std/median/min/max report. Results can be dumped as
+//! CSV rows (per-suite files under `results/bench/`) and merged into the
+//! repo-root `BENCH_baseline.json` perf trajectory
+//! ([`BenchRunner::write_baseline`]), so every PR can be compared against
+//! the previous snapshot by re-running `cargo bench`.
 
+use crate::util::json::Json;
 use crate::util::timing::fmt_secs;
 use std::time::Instant;
 
 /// Statistics for one benchmark case.
 #[derive(Debug, Clone)]
 pub struct Sample {
+    /// Case name as registered with [`BenchRunner::bench`].
     pub name: String,
+    /// Number of measured iterations.
     pub iters: usize,
+    /// Mean seconds per iteration.
     pub mean: f64,
+    /// Sample standard deviation (seconds).
     pub std: f64,
+    /// Median seconds per iteration.
     pub median: f64,
+    /// Fastest iteration (seconds).
     pub min: f64,
+    /// Slowest iteration (seconds).
     pub max: f64,
 }
 
@@ -52,6 +62,7 @@ pub struct BenchRunner {
 }
 
 impl BenchRunner {
+    /// Create a runner for one bench suite; prints the suite banner.
     pub fn new(title: &str) -> BenchRunner {
         let target_secs = std::env::var("MBKK_BENCH_SECS")
             .ok()
@@ -124,6 +135,7 @@ impl BenchRunner {
         });
     }
 
+    /// All samples collected so far.
     pub fn samples(&self) -> &[Sample] {
         &self.samples
     }
@@ -133,6 +145,82 @@ impl BenchRunner {
         let s = self.samples.iter().find(|s| s.name == slow)?.mean;
         let f = self.samples.iter().find(|s| s.name == fast)?.mean;
         Some(s / f)
+    }
+
+    /// Default location of the perf-trajectory snapshot: the repository
+    /// root, one directory above the crate manifest.
+    pub fn baseline_path() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_baseline.json")
+    }
+
+    /// Merge this runner's samples into the `BENCH_baseline.json` perf
+    /// trajectory at `path` (see [`BenchRunner::baseline_path`]).
+    ///
+    /// The file maps suite title → case name → timing stats. Fresh samples
+    /// overwrite their own case entries and carry `"provenance": "measured"`;
+    /// every other case — other suites, and cases this run skipped via an
+    /// argv filter — is preserved as-is, so a partial run can neither erase
+    /// nor launder the estimated-seed entries the repo ships with. The
+    /// top-level `provenance` summarizes the cases: `"measured"` only when
+    /// every case in the file is, `"partially-measured"` otherwise.
+    pub fn write_baseline(&self, path: &std::path::Path) {
+        if self.samples.is_empty() {
+            return;
+        }
+        let root = std::fs::read_to_string(path)
+            .ok()
+            .and_then(|text| Json::parse(&text).ok())
+            .unwrap_or(Json::Null);
+        let mut suites = match root.get("suites") {
+            Json::Obj(m) => m.clone(),
+            _ => Default::default(),
+        };
+        let mut cases = match suites.get(&self.title) {
+            Some(Json::Obj(m)) => m.clone(),
+            _ => Default::default(),
+        };
+        // Threads are recorded per case: suites (and earlier cases of this
+        // suite) may have been measured under a different MBKK_THREADS.
+        let threads = crate::util::parallel::num_threads();
+        for s in &self.samples {
+            cases.insert(
+                s.name.clone(),
+                Json::obj(vec![
+                    ("provenance", Json::Str("measured".into())),
+                    ("threads", Json::Num(threads as f64)),
+                    ("iters", Json::Num(s.iters as f64)),
+                    ("mean_s", Json::Num(s.mean)),
+                    ("std_s", Json::Num(s.std)),
+                    ("median_s", Json::Num(s.median)),
+                    ("min_s", Json::Num(s.min)),
+                    ("max_s", Json::Num(s.max)),
+                ]),
+            );
+        }
+        suites.insert(self.title.clone(), Json::Obj(cases));
+        let all_measured = suites.values().all(|suite| match suite {
+            Json::Obj(cs) => cs
+                .values()
+                .all(|c| c.get("provenance").as_str() == Some("measured")),
+            _ => false,
+        });
+        let mut fields = vec![("schema", Json::Num(1.0))];
+        // Keep the file's explanatory note (it documents the seed origin).
+        if let Some(note) = root.get("note").as_str() {
+            fields.push(("note", Json::Str(note.to_string())));
+        }
+        fields.push((
+            "provenance",
+            Json::Str(
+                if all_measured { "measured" } else { "partially-measured" }.into(),
+            ),
+        ));
+        fields.push(("suites", Json::Obj(suites)));
+        let root = Json::obj(fields);
+        match std::fs::write(path, root.to_pretty()) {
+            Ok(()) => println!("  [baseline] {}", path.display()),
+            Err(e) => eprintln!("  [baseline] write failed: {e}"),
+        }
     }
 
     /// Emit a CSV file with all samples under `results/bench/`.
@@ -167,5 +255,81 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 3.0);
         assert!((s.std - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn baseline_merges_suites() {
+        let path = std::env::temp_dir()
+            .join(format!("mbkk_baseline_test_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let mut a = BenchRunner::new("suite-a");
+        a.record("case1", 0.5);
+        a.write_baseline(&path);
+        let mut b = BenchRunner::new("suite-b");
+        b.record("case2", 0.25);
+        b.write_baseline(&path);
+        let root = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(root.get("provenance").as_str(), Some("measured"));
+        let suites = root.get("suites");
+        assert_eq!(
+            suites.get("suite-a").get("case1").get("mean_s").as_f64(),
+            Some(0.5)
+        );
+        assert_eq!(
+            suites.get("suite-b").get("case2").get("median_s").as_f64(),
+            Some(0.25)
+        );
+        // Re-measuring one case of suite-a overwrites it while keeping both
+        // suite-a's other cases and suite-b (a filtered run must not erase
+        // what it skipped).
+        let mut a2 = BenchRunner::new("suite-a");
+        a2.record("case1b", 0.0625);
+        a2.write_baseline(&path);
+        let mut a3 = BenchRunner::new("suite-a");
+        a3.record("case1", 0.125);
+        a3.write_baseline(&path);
+        let root = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(
+            root.get("suites").get("suite-a").get("case1").get("mean_s").as_f64(),
+            Some(0.125)
+        );
+        assert_eq!(
+            root.get("suites").get("suite-a").get("case1b").get("mean_s").as_f64(),
+            Some(0.0625)
+        );
+        assert!(root.get("suites").get("suite-b").as_obj().is_some());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn baseline_does_not_launder_estimated_cases() {
+        let path = std::env::temp_dir()
+            .join(format!("mbkk_baseline_prov_test_{}.json", std::process::id()));
+        std::fs::write(
+            &path,
+            r#"{"schema": 1, "note": "seed origin", "provenance": "estimated-seed",
+                "suites": {"other": {"guess": {"provenance": "estimated-seed",
+                "iters": 0, "mean_s": 0.5}}}}"#,
+        )
+        .unwrap();
+        let mut r = BenchRunner::new("fresh-suite");
+        r.record("real", 0.25);
+        r.write_baseline(&path);
+        let root = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        // The estimated case survives untouched, the note is kept, and the
+        // top level reports the mix honestly.
+        assert_eq!(root.get("provenance").as_str(), Some("partially-measured"));
+        assert_eq!(root.get("note").as_str(), Some("seed origin"));
+        let guess = root.get("suites").get("other").get("guess");
+        assert_eq!(guess.get("provenance").as_str(), Some("estimated-seed"));
+        assert_eq!(
+            root.get("suites")
+                .get("fresh-suite")
+                .get("real")
+                .get("provenance")
+                .as_str(),
+            Some("measured")
+        );
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -24,6 +24,7 @@ pub enum KernelSpec {
 }
 
 impl KernelSpec {
+    /// Short display name for reports.
     pub fn name(&self) -> &'static str {
         match self {
             KernelSpec::Gaussian { .. } => "gaussian",
@@ -96,6 +97,7 @@ pub enum AlgoSpec {
 }
 
 impl AlgoSpec {
+    /// Display name in the paper's convention (β prefix → `b`).
     pub fn name(&self) -> String {
         match self {
             AlgoSpec::FullKkm => "full-kkm".into(),
@@ -106,6 +108,7 @@ impl AlgoSpec {
         }
     }
 
+    /// Parse a CLI algorithm name (panics on unknown names).
     pub fn from_name(name: &str) -> AlgoSpec {
         match name {
             "full-kkm" => AlgoSpec::FullKkm,
@@ -138,21 +141,30 @@ fn beta_prefix(lr: LearningRate) -> &'static str {
 /// One grid cell: everything needed to reproduce a single run.
 #[derive(Clone, Debug)]
 pub struct RunSpec {
+    /// Registry dataset name.
     pub dataset: String,
     /// Global dataset scale factor (DESIGN.md §3 substitution).
     pub scale: f64,
+    /// Which kernel to build.
     pub kernel: KernelSpec,
+    /// Which algorithm to run.
     pub algo: AlgoSpec,
+    /// Number of clusters.
     pub k: usize,
+    /// Batch size `b` (mini-batch algorithms).
     pub batch_size: usize,
+    /// Truncation parameter τ (Algorithm 2).
     pub tau: usize,
+    /// Iteration budget.
     pub max_iters: usize,
     /// ε for early stopping; None = fixed iterations (paper protocol).
     pub epsilon: Option<f64>,
+    /// RNG seed (dataset + run streams derive from it).
     pub seed: u64,
 }
 
 impl RunSpec {
+    /// Compact one-line cell description for logs.
     pub fn label(&self) -> String {
         format!(
             "{}/{}/{} b={} tau={} seed={}",
@@ -169,10 +181,15 @@ impl RunSpec {
 /// Metrics from one run.
 #[derive(Clone, Debug)]
 pub struct RunOutcome {
+    /// Adjusted Rand Index against ground truth (NaN when unlabeled).
     pub ari: f64,
+    /// Normalized Mutual Information against ground truth (NaN when unlabeled).
     pub nmi: f64,
+    /// Final full-dataset objective `f_X(C)`.
     pub objective: f64,
+    /// Iterations executed.
     pub iterations: usize,
+    /// Whether the ε early-stopping condition fired.
     pub converged: bool,
     /// Clustering wall-clock (excludes kernel construction).
     pub cluster_secs: f64,

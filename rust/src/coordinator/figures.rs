@@ -16,16 +16,19 @@ use super::experiment::{run_with_gram, AlgoSpec, KernelSpec, RunOutcome, RunSpec
 use super::report::{write_reports, Row};
 use crate::data::registry;
 use crate::kkmeans::LearningRate;
+use crate::util::error::Result;
 use crate::util::parallel::par_run_jobs;
 use crate::util::rng::Rng;
-use anyhow::Result;
 use std::path::Path;
 
 /// Declarative description of one paper figure.
 #[derive(Clone, Debug)]
 pub struct FigureSpec {
+    /// Figure id, 1..=13.
     pub id: usize,
+    /// Registry dataset name (`"*"` = all four paper proxies).
     pub dataset: &'static str,
+    /// Kernel family the figure sweeps.
     pub kernel_name: &'static str,
     /// Batch sizes swept (mini-batch algorithms).
     pub batch_sizes: &'static [usize],

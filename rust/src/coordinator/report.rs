@@ -1,17 +1,20 @@
 //! Aggregation over repeated runs and CSV/markdown report writers.
 
 use super::experiment::RunOutcome;
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 use std::path::Path;
 
 /// Mean/std summary of a metric over repeats.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Stat {
+    /// Mean over finite values.
     pub mean: f64,
+    /// Sample standard deviation over finite values.
     pub std: f64,
 }
 
 impl Stat {
+    /// Summarize a metric's values (NaNs are filtered, not propagated).
     pub fn of(values: &[f64]) -> Stat {
         let vals: Vec<f64> = values.iter().copied().filter(|v| v.is_finite()).collect();
         if vals.is_empty() {
@@ -31,19 +34,33 @@ impl Stat {
 /// One aggregated row of a figure grid.
 #[derive(Clone, Debug)]
 pub struct Row {
+    /// Figure label, e.g. `fig1`.
     pub figure: String,
+    /// Registry dataset name.
     pub dataset: String,
+    /// Kernel family name.
     pub kernel: String,
+    /// Algorithm name (paper convention).
     pub algo: String,
+    /// Batch size `b` of the cell (0 for full batch).
     pub batch_size: usize,
+    /// Truncation τ of the cell (0 / `usize::MAX` for untruncated).
     pub tau: usize,
+    /// Number of seeds aggregated.
     pub repeats: usize,
+    /// ARI over repeats.
     pub ari: Stat,
+    /// NMI over repeats.
     pub nmi: Stat,
+    /// Final objective over repeats.
     pub objective: Stat,
+    /// Clustering wall-clock over repeats (excludes kernel build).
     pub cluster_secs: Stat,
+    /// Kernel/gram construction wall-clock (shared across repeats).
     pub kernel_secs: f64,
+    /// Iterations executed over repeats.
     pub iterations: Stat,
+    /// γ of the gram.
     pub gamma: f64,
 }
 
@@ -80,6 +97,7 @@ impl Row {
     }
 }
 
+/// Header row of the figure CSVs ([`to_csv`]).
 pub const CSV_HEADER: &str = "figure,dataset,kernel,algo,b,tau,repeats,\
 ari_mean,ari_std,nmi_mean,nmi_std,obj_mean,obj_std,\
 cluster_secs_mean,cluster_secs_std,kernel_secs,iters_mean,gamma";

@@ -6,7 +6,8 @@
 //! figure pipeline persist generated datasets for inspection.
 
 use super::Dataset;
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 use std::path::Path;
 
 /// Load a dataset from a CSV file. If the first line is non-numeric it is

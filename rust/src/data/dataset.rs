@@ -7,10 +7,13 @@
 
 #[derive(Clone, Debug)]
 pub struct Dataset {
+    /// Display name for reports.
     pub name: String,
     /// Row-major features, length `n * d`.
     pub features: Vec<f32>,
+    /// Number of points.
     pub n: usize,
+    /// Feature dimension.
     pub d: usize,
     /// Ground-truth cluster labels (evaluation only).
     pub labels: Option<Vec<usize>>,
@@ -20,17 +23,20 @@ pub struct Dataset {
 }
 
 impl Dataset {
+    /// Wrap row-major features into a dataset (panics on shape mismatch).
     pub fn new(name: &str, features: Vec<f32>, n: usize, d: usize) -> Dataset {
         assert_eq!(features.len(), n * d, "features length != n*d");
         Dataset { name: name.to_string(), features, n, d, labels: None, weights: None }
     }
 
+    /// Attach ground-truth labels (evaluation only).
     pub fn with_labels(mut self, labels: Vec<usize>) -> Dataset {
         assert_eq!(labels.len(), self.n, "labels length != n");
         self.labels = Some(labels);
         self
     }
 
+    /// Attach positive per-point weights (the weighted variant).
     pub fn with_weights(mut self, weights: Vec<f64>) -> Dataset {
         assert_eq!(weights.len(), self.n, "weights length != n");
         assert!(weights.iter().all(|&w| w > 0.0), "weights must be positive");

@@ -7,7 +7,9 @@ use super::Dataset;
 /// Per-feature mean/std learned from a dataset.
 #[derive(Clone, Debug)]
 pub struct StandardScaler {
+    /// Per-feature mean.
     pub mean: Vec<f64>,
+    /// Per-feature standard deviation (1.0 for constant features).
     pub std: Vec<f64>,
 }
 

@@ -12,8 +12,11 @@ use crate::util::rng::Rng;
 /// Parameters for the Gaussian-blob generator.
 #[derive(Clone, Debug)]
 pub struct SyntheticSpec {
+    /// Number of points.
     pub n: usize,
+    /// Feature dimension.
     pub d: usize,
+    /// Number of clusters.
     pub k: usize,
     /// Within-cluster standard deviation.
     pub cluster_std: f64,
@@ -25,20 +28,24 @@ pub struct SyntheticSpec {
 }
 
 impl SyntheticSpec {
+    /// Spec with default geometry (std 1.0, separation 4.0, no noise).
     pub fn new(n: usize, d: usize, k: usize) -> SyntheticSpec {
         SyntheticSpec { n, d, k, cluster_std: 1.0, separation: 4.0, label_noise: 0.0 }
     }
 
+    /// Set the within-cluster standard deviation.
     pub fn with_std(mut self, s: f64) -> Self {
         self.cluster_std = s;
         self
     }
 
+    /// Set the center-separation scale.
     pub fn with_separation(mut self, s: f64) -> Self {
         self.separation = s;
         self
     }
 
+    /// Set the label-noise fraction.
     pub fn with_label_noise(mut self, p: f64) -> Self {
         self.label_noise = p;
         self

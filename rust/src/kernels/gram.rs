@@ -1,18 +1,43 @@
 //! Gram providers: uniform access to kernel values `K(i, j)` over a dataset,
 //! either evaluated on the fly from features or read from a precomputed
 //! matrix (required for the graph kernels, optional as a cache elsewhere).
+//!
+//! The block operations ([`Gram::materialize`], [`Gram::block`],
+//! [`Gram::weighted_cross_into`]) run through a cache-tiled engine
+//! (DESIGN.md §5): kernel evaluations are walked in column tiles sized by
+//! [`super::tile::tile_cols`] so a tile of feature rows stays L1/L2-resident
+//! across the whole batch chunk, and materialization exploits symmetry by
+//! computing only the tiles of the upper triangle and mirroring each value.
+//! This is the native-backend analogue of the L1 Pallas gram kernel.
 
+use super::tile;
 use super::KernelFunction;
 use crate::data::Dataset;
-use crate::util::parallel::{par_chunks_mut, par_map_indexed};
+use crate::util::parallel::{par_dynamic, par_rows_mut, SharedSlice};
 
 /// Access to the (implicit) kernel matrix of a dataset.
 pub enum Gram<'a> {
     /// Evaluate `K(x_i, x_j)` from features on demand.
-    OnTheFly { ds: &'a Dataset, func: KernelFunction, diag: Vec<f64> },
+    OnTheFly {
+        /// The dataset whose rows feed the kernel function.
+        ds: &'a Dataset,
+        /// The closed-form kernel.
+        func: KernelFunction,
+        /// Cached diagonal `K(x_i, x_i)`.
+        diag: Vec<f64>,
+    },
     /// Dense precomputed matrix (row-major, f32 storage to halve memory;
     /// kernel values are O(1)-scaled so f32 is ample).
-    Precomputed { name: String, n: usize, data: Vec<f32>, diag: Vec<f64> },
+    Precomputed {
+        /// Display name for reports.
+        name: String,
+        /// Number of points.
+        n: usize,
+        /// Row-major n×n kernel values.
+        data: Vec<f32>,
+        /// Cached diagonal `K(x_i, x_i)`.
+        diag: Vec<f64>,
+    },
 }
 
 impl<'a> Gram<'a> {
@@ -35,25 +60,69 @@ impl<'a> Gram<'a> {
 
     /// Materialize an on-the-fly gram into a dense matrix (used by the
     /// full-batch baseline, which touches all n² entries every iteration).
-    /// Computed in parallel over rows, exploiting symmetry.
+    ///
+    /// Tiled and symmetric: the upper triangle is partitioned into square
+    /// tiles, a dynamic worker pool computes each tile (diagonal tiles
+    /// carry half the work of off-diagonal ones, so dynamic scheduling
+    /// beats contiguous row chunks), and every value is mirrored into the
+    /// lower triangle as it is produced — n(n+1)/2 kernel evaluations
+    /// instead of n².
     pub fn materialize(&self) -> Gram<'static> {
+        let tile_len = match self {
+            Gram::OnTheFly { ds, .. } => tile::tile_cols(ds.d).min(ds.n.max(1)),
+            Gram::Precomputed { .. } => 1, // ignored: materialize_tiled clones
+        };
+        self.materialize_tiled(tile_len)
+    }
+
+    /// [`Gram::materialize`] with an explicit tile edge length (exposed so
+    /// tests can force tile boundaries on small inputs; `materialize` picks
+    /// the L2-sized default).
+    pub fn materialize_tiled(&self, tile_len: usize) -> Gram<'static> {
         let n = self.n();
-        let mut data = vec![0.0f32; n * n];
         match self {
-            Gram::Precomputed { name, data: src, .. } => {
-                data.copy_from_slice(src);
-                Gram::precomputed(name, n, data)
+            Gram::Precomputed { name, data, .. } => {
+                Gram::precomputed(name, n, data.clone())
             }
             Gram::OnTheFly { ds, func, .. } => {
-                par_chunks_mut(&mut data, |start, chunk| {
-                    // chunks are element-aligned; recover (row, col) spans.
-                    let mut idx = start;
-                    for v in chunk.iter_mut() {
-                        let (i, j) = (idx / n, idx % n);
-                        *v = func.eval(ds.row(i), ds.row(j)) as f32;
-                        idx += 1;
+                let t = tile_len.clamp(1, n.max(1));
+                let mut data = vec![0.0f32; n * n];
+                let nblocks = n.div_ceil(t.max(1)).max(1);
+                // Upper-triangle tile list: block (bi, bj) with bi ≤ bj owns
+                // every unordered index pair {i, j} with i in bi's rows,
+                // j in bj's columns and i ≤ j.
+                let mut tiles = Vec::with_capacity(nblocks * (nblocks + 1) / 2);
+                for bi in 0..nblocks {
+                    for bj in bi..nblocks {
+                        tiles.push((bi * t, bj * t));
                     }
-                });
+                }
+                {
+                    let shared = SharedSlice::new(&mut data);
+                    let shared = &shared;
+                    par_dynamic(tiles.len(), |ti| {
+                        let (r0, c0) = tiles[ti];
+                        let r1 = (r0 + t).min(n);
+                        let c1 = (c0 + t).min(n);
+                        for i in r0..r1 {
+                            let xi = ds.row(i);
+                            // Diagonal tiles compute only j ≥ i.
+                            let jstart = if c0 == r0 { i } else { c0 };
+                            for j in jstart..c1 {
+                                let v = func.eval(xi, ds.row(j)) as f32;
+                                // SAFETY: each unordered pair {i, j} belongs
+                                // to exactly one upper tile, so the writes to
+                                // (i,j) and its mirror (j,i) are disjoint
+                                // across tiles; within a tile they run on one
+                                // thread.
+                                unsafe {
+                                    shared.write(i * n + j, v);
+                                    shared.write(j * n + i, v);
+                                }
+                            }
+                        }
+                    });
+                }
                 Gram::precomputed(&format!("{}:{}", ds.name, func.name()), n, data)
             }
         }
@@ -93,33 +162,138 @@ impl<'a> Gram<'a> {
     }
 
     /// Dense block `K(rows, cols)` in row-major order (len = rows·cols),
-    /// computed in parallel. This is the native-backend analogue of the L1
-    /// Pallas gram kernel.
+    /// computed in parallel through the tiled engine.
     pub fn block(&self, rows: &[usize], cols: &[usize]) -> Vec<f64> {
+        let mut out = vec![0.0f64; rows.len() * cols.len()];
+        self.block_into(rows, cols, &mut out);
+        out
+    }
+
+    /// Fill `out` (row-major, `rows.len() × cols.len()`) with the dense
+    /// block `K(rows, cols)` without allocating — the hot-loop entry point.
+    pub fn block_into(&self, rows: &[usize], cols: &[usize], out: &mut [f64]) {
+        self.block_into_tiled(rows, cols, self.default_tile(), out);
+    }
+
+    /// [`Gram::block_into`] with an explicit column-tile width (exposed so
+    /// tests can force tile boundaries on small inputs).
+    pub fn block_into_tiled(
+        &self,
+        rows: &[usize],
+        cols: &[usize],
+        tile_len: usize,
+        out: &mut [f64],
+    ) {
         let nc = cols.len();
-        if rows.len() * nc == 0 {
-            return Vec::new();
+        assert_eq!(out.len(), rows.len() * nc, "block_into: bad output shape");
+        if out.is_empty() {
+            return;
         }
-        let out = par_map_indexed(rows.len(), |r| {
-            let i = rows[r];
-            let mut row = Vec::with_capacity(nc);
-            match self {
-                Gram::OnTheFly { ds, func, .. } => {
-                    let xi = ds.row(i);
-                    for &j in cols {
-                        row.push(func.eval(xi, ds.row(j)));
+        let t = tile_len.max(1);
+        match self {
+            Gram::Precomputed { n, data, .. } => {
+                let n = *n;
+                par_rows_mut(out, nc, |r0, chunk| {
+                    for (r, orow) in chunk.chunks_mut(nc).enumerate() {
+                        let base = rows[r0 + r] * n;
+                        for (o, &j) in orow.iter_mut().zip(cols.iter()) {
+                            *o = data[base + j] as f64;
+                        }
                     }
-                }
-                Gram::Precomputed { n, data, .. } => {
-                    let base = i * n;
-                    for &j in cols {
-                        row.push(data[base + j] as f64);
-                    }
-                }
+                });
             }
-            row
-        });
-        out.into_iter().flatten().collect()
+            Gram::OnTheFly { ds, func, .. } => {
+                par_rows_mut(out, nc, |r0, chunk| {
+                    let nrows = chunk.len() / nc;
+                    let mut c0 = 0;
+                    // Column-tile outer loop: the tile's feature rows are
+                    // reused across every batch row in this chunk while hot.
+                    for ctile in cols.chunks(t) {
+                        for r in 0..nrows {
+                            let xi = ds.row(rows[r0 + r]);
+                            let orow = &mut chunk[r * nc + c0..r * nc + c0 + ctile.len()];
+                            for (o, &j) in orow.iter_mut().zip(ctile.iter()) {
+                                *o = func.eval(xi, ds.row(j));
+                            }
+                        }
+                        c0 += ctile.len();
+                    }
+                });
+            }
+        }
+    }
+
+    /// Fused weighted cross-term engine for the assignment step.
+    ///
+    /// Given the concatenated support of `k` centers — dataset indices
+    /// `sup_idx` with coefficients `sup_w`, center `j` owning the slice
+    /// `ranges[j] = (start, end)` — fills
+    /// `out[r·k + j] = Σ_{m ∈ ranges[j]} w_m · K(batch[r], sup_idx[m])`.
+    ///
+    /// This is the `K(B, S)·w` contraction of Algorithm 2's distance
+    /// formula, computed without materializing the `b × |S|` block: kernel
+    /// values are consumed the moment they are produced, tiled over support
+    /// columns so each tile's features stay cache-resident across the whole
+    /// batch chunk.
+    pub fn weighted_cross_into(
+        &self,
+        batch: &[usize],
+        sup_idx: &[u32],
+        sup_w: &[f64],
+        ranges: &[(usize, usize)],
+        out: &mut [f64],
+    ) {
+        let k = ranges.len();
+        assert_eq!(sup_idx.len(), sup_w.len(), "support index/weight mismatch");
+        assert_eq!(out.len(), batch.len() * k, "weighted_cross_into: bad shape");
+        if out.is_empty() {
+            return;
+        }
+        match self {
+            Gram::Precomputed { n, data, .. } => {
+                let n = *n;
+                par_rows_mut(out, k, |r0, chunk| {
+                    for (r, orow) in chunk.chunks_mut(k).enumerate() {
+                        // Materialized fast path: one contiguous gram row per
+                        // batch point, gathered per support entry.
+                        let g = &data[batch[r0 + r] * n..(batch[r0 + r] + 1) * n];
+                        for (o, &(s, e)) in orow.iter_mut().zip(ranges.iter()) {
+                            let mut acc = 0.0;
+                            for (&y, &w) in sup_idx[s..e].iter().zip(&sup_w[s..e]) {
+                                acc += w * g[y as usize] as f64;
+                            }
+                            *o = acc;
+                        }
+                    }
+                });
+            }
+            Gram::OnTheFly { ds, func, .. } => {
+                let t = tile::tile_cols(ds.d);
+                par_rows_mut(out, k, |r0, chunk| {
+                    for v in chunk.iter_mut() {
+                        *v = 0.0;
+                    }
+                    let nrows = chunk.len() / k;
+                    for (j, &(s, e)) in ranges.iter().enumerate() {
+                        let mut m0 = s;
+                        while m0 < e {
+                            let m1 = (m0 + t).min(e);
+                            for r in 0..nrows {
+                                let xi = ds.row(batch[r0 + r]);
+                                let mut acc = 0.0;
+                                for (&y, &w) in
+                                    sup_idx[m0..m1].iter().zip(&sup_w[m0..m1])
+                                {
+                                    acc += w * func.eval(xi, ds.row(y as usize));
+                                }
+                                chunk[r * k + j] += acc;
+                            }
+                            m0 = m1;
+                        }
+                    }
+                });
+            }
+        }
     }
 
     /// Fast path: the full i-th row of a *materialized* gram as an f32
@@ -138,6 +312,14 @@ impl<'a> Gram<'a> {
         match self {
             Gram::OnTheFly { ds, func, .. } => format!("{}:{}", ds.name, func.name()),
             Gram::Precomputed { name, .. } => name.clone(),
+        }
+    }
+
+    /// Default column-tile width for this provider.
+    fn default_tile(&self) -> usize {
+        match self {
+            Gram::OnTheFly { ds, .. } => tile::tile_cols(ds.d),
+            Gram::Precomputed { .. } => tile::MAX_TILE_COLS,
         }
     }
 }
@@ -178,6 +360,37 @@ mod tests {
     }
 
     #[test]
+    fn materialize_tiled_any_tile_size() {
+        // Tile edges of 1, a non-divisor, and > n must all produce the same
+        // full matrix as direct evaluation.
+        let (ds, f) = fixture();
+        let g = Gram::on_the_fly(&ds, f);
+        for t in [1usize, 7, 40, 64] {
+            let m = g.materialize_tiled(t);
+            for i in 0..ds.n {
+                for j in 0..ds.n {
+                    assert!(
+                        (g.eval(i, j) - m.eval(i, j)).abs() < 1e-6,
+                        "tile={t} ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn materialized_is_exactly_symmetric() {
+        // Mirroring writes the identical f32, so symmetry is bit-exact.
+        let (ds, f) = fixture();
+        let m = Gram::on_the_fly(&ds, f).materialize_tiled(7);
+        for i in 0..ds.n {
+            for j in 0..ds.n {
+                assert_eq!(m.eval(i, j), m.eval(j, i), "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
     fn block_matches_pointwise() {
         let (ds, f) = fixture();
         let g = Gram::on_the_fly(&ds, f);
@@ -188,6 +401,56 @@ mod tests {
         for (r, &i) in rows.iter().enumerate() {
             for (c, &j) in cols.iter().enumerate() {
                 assert!((blk[r * 4 + c] - g.eval(i, j)).abs() < 1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn block_tiled_matches_naive_across_tile_edges() {
+        let (ds, f) = fixture();
+        let g = Gram::on_the_fly(&ds, f);
+        let mat = g.materialize();
+        let rows: Vec<usize> = (0..ds.n).step_by(2).collect();
+        let cols: Vec<usize> = (0..ds.n).rev().collect(); // unsorted, full width
+        for grm in [&g, &mat] {
+            for t in [1usize, 3, 5, 100] {
+                let mut out = vec![0.0f64; rows.len() * cols.len()];
+                grm.block_into_tiled(&rows, &cols, t, &mut out);
+                for (r, &i) in rows.iter().enumerate() {
+                    for (c, &j) in cols.iter().enumerate() {
+                        assert!(
+                            (out[r * cols.len() + c] - g.eval(i, j)).abs() < 1e-6,
+                            "tile={t} ({i},{j})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_cross_matches_naive() {
+        let (ds, f) = fixture();
+        let g = Gram::on_the_fly(&ds, f);
+        let mat = g.materialize();
+        let mut rng = Rng::seeded(5);
+        let batch: Vec<usize> = (0..17).map(|_| rng.below(ds.n)).collect();
+        // Three centers with supports of different sizes (one empty).
+        let sup_idx: Vec<u32> = (0..30).map(|_| rng.below(ds.n) as u32).collect();
+        let sup_w: Vec<f64> = (0..30).map(|_| rng.f64()).collect();
+        let ranges = [(0usize, 12usize), (12, 12), (12, 30)];
+        for grm in [&g, &mat] {
+            let mut out = vec![f64::NAN; batch.len() * ranges.len()];
+            grm.weighted_cross_into(&batch, &sup_idx, &sup_w, &ranges, &mut out);
+            for (r, &x) in batch.iter().enumerate() {
+                for (j, &(s, e)) in ranges.iter().enumerate() {
+                    let want: f64 = (s..e)
+                        .map(|m| sup_w[m] * g.eval(x, sup_idx[m] as usize))
+                        .sum();
+                    let got = out[r * ranges.len() + j];
+                    // 1e-5: the materialized path reads f32-stored values.
+                    assert!((got - want).abs() < 1e-5, "r={r} j={j}: {got} vs {want}");
+                }
             }
         }
     }
@@ -216,5 +479,6 @@ mod tests {
         let (ds, f) = fixture();
         let g = Gram::on_the_fly(&ds, f);
         assert!(g.block(&[], &[1, 2]).is_empty());
+        assert!(g.block(&[1, 2], &[]).is_empty());
     }
 }

@@ -77,7 +77,8 @@ pub fn knn_kernel(ds: &Dataset, k_neighbors: usize) -> Gram<'static> {
 /// kernel on the normalized *Laplacian* `L̃ = I − N`, whose exponential has
 /// spectrum in `[e^{−2t}, 1]`: symmetric positive definite, diagonal < 1,
 /// and empirically γ ≪ 1 for moderate t, matching Table 1. We implement
-/// Chung's definition and document the discrepancy here and in DESIGN.md.
+/// Chung's definition; DESIGN.md §4 records the full discrepancy argument
+/// and the integration test that pins the resulting γ ordering.
 pub fn heat_kernel(ds: &Dataset, k_neighbors: usize, t: f64) -> Gram<'static> {
     assert!(t > 0.0, "heat kernel temperature must be positive");
     let n = ds.n;

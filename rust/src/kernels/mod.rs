@@ -7,6 +7,7 @@ mod function;
 mod gram;
 pub mod graph;
 pub mod sigma;
+pub mod tile;
 
 pub use function::KernelFunction;
 pub use gram::Gram;

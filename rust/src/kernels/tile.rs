@@ -1,0 +1,59 @@
+//! Cache-tiling parameters for the gram/assignment hot path.
+//!
+//! The blocked engine (DESIGN.md §5) walks kernel evaluations in column
+//! tiles: a tile of support/column feature rows is loaded once and reused
+//! against every batch row in the current thread chunk, so the tile's
+//! features stay L1/L2-resident instead of being streamed from DRAM once
+//! per batch row. The tile width is chosen so one tile of f32 features
+//! (`cols × d × 4` bytes) fits comfortably in half of a conservative
+//! per-core L2 budget, leaving the other half for the batch rows and the
+//! output accumulators.
+
+/// Per-core cache budget the column tile is sized against (bytes). Half of
+/// a conservative 128 KiB L2 slice — small enough to also behave well on
+/// big.LITTLE parts and shared-L2 designs.
+pub const TILE_BYTES: usize = 64 * 1024;
+
+/// Hard bounds on the tile width: below 8 columns the loop overhead
+/// dominates; above 1024 the index/coefficient arrays start competing with
+/// the features for cache.
+pub const MIN_TILE_COLS: usize = 8;
+
+/// Upper bound companion of [`MIN_TILE_COLS`].
+pub const MAX_TILE_COLS: usize = 1024;
+
+/// Number of feature columns per tile for dimension `d` (f32 storage).
+pub fn tile_cols(d: usize) -> usize {
+    (TILE_BYTES / (4 * d.max(1))).clamp(MIN_TILE_COLS, MAX_TILE_COLS)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tile_cols_bounds() {
+        assert_eq!(tile_cols(0), MAX_TILE_COLS);
+        assert_eq!(tile_cols(1), MAX_TILE_COLS); // 16384 clamped down
+        assert_eq!(tile_cols(16), MAX_TILE_COLS);
+        assert_eq!(tile_cols(128), 128);
+        assert_eq!(tile_cols(1 << 20), MIN_TILE_COLS);
+        // Monotone non-increasing in d.
+        let mut prev = usize::MAX;
+        for d in [1, 2, 8, 64, 512, 4096] {
+            let t = tile_cols(d);
+            assert!(t <= prev);
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn tile_fits_budget() {
+        for d in [4usize, 16, 128, 784] {
+            let t = tile_cols(d);
+            if t > MIN_TILE_COLS {
+                assert!(t * d * 4 <= TILE_BYTES, "d={d}: tile {t} overflows budget");
+            }
+        }
+    }
+}

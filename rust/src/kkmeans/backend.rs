@@ -17,7 +17,6 @@
 
 use super::state::CenterWindow;
 use crate::kernels::Gram;
-use crate::util::parallel::par_rows_mut;
 
 /// Computes batch-to-center squared distances for Algorithm 2.
 pub trait AssignBackend {
@@ -34,9 +33,14 @@ pub trait AssignBackend {
     fn name(&self) -> &'static str;
 }
 
-/// Pure-Rust reference backend: gathers each center's support once, caches
-/// `⟨Ĉ,Ĉ⟩` in the window, then computes the cross terms in parallel over
-/// batch rows.
+/// Pure-Rust reference backend.
+///
+/// Gathers every center's support once into one concatenated
+/// structure-of-arrays buffer, caches `⟨Ĉ,Ĉ⟩` in the window, and runs the
+/// cross-term contraction `K(B, S)·w` through the tiled engine
+/// ([`Gram::weighted_cross_into`]): parallel over batch rows, tiled over
+/// support columns so each tile of support features stays cache-resident
+/// across the whole batch chunk (DESIGN.md §5).
 #[derive(Debug, Default, Clone)]
 pub struct NativeBackend;
 
@@ -52,44 +56,30 @@ impl AssignBackend for NativeBackend {
         // ⟨Ĉ_j, Ĉ_j⟩ (cached inside the window between calls; O(1) when
         // updates flow through apply_update_cc).
         let cc: Vec<f64> = centers.iter_mut().map(|c| c.self_inner(gram)).collect();
-        // Materialize supports once, structure-of-arrays for the inner loop.
-        let supports: Vec<(Vec<u32>, Vec<f64>)> = centers
-            .iter()
-            .map(|c| {
-                let mut idx = Vec::with_capacity(c.support_len());
-                let mut ws = Vec::with_capacity(c.support_len());
-                for (y, w) in c.support() {
-                    idx.push(y as u32);
-                    ws.push(w);
-                }
-                (idx, ws)
-            })
-            .collect();
-        let mut out = vec![0.0f64; b * k];
-        par_rows_mut(&mut out, k, |row0, chunk| {
-            for (r, row) in chunk.chunks_mut(k).enumerate() {
-                let x = batch[row0 + r];
-                let kxx = gram.self_k(x);
-                if let Some(grow) = gram.row_slice(x) {
-                    // Materialized fast path: direct row loads, no dispatch.
-                    for (j, (idx, ws)) in supports.iter().enumerate() {
-                        let mut cross = 0.0;
-                        for (&y, &w) in idx.iter().zip(ws.iter()) {
-                            cross += w * grow[y as usize] as f64;
-                        }
-                        row[j] = (kxx - 2.0 * cross + cc[j]).max(0.0);
-                    }
-                } else {
-                    for (j, (idx, ws)) in supports.iter().enumerate() {
-                        let mut cross = 0.0;
-                        for (&y, &w) in idx.iter().zip(ws.iter()) {
-                            cross += w * gram.eval(x, y as usize);
-                        }
-                        row[j] = (kxx - 2.0 * cross + cc[j]).max(0.0);
-                    }
-                }
+        // Concatenated supports: center j owns sup_idx[ranges[j].0..ranges[j].1].
+        let total: usize = centers.iter().map(|c| c.support_len()).sum();
+        let mut sup_idx: Vec<u32> = Vec::with_capacity(total);
+        let mut sup_w: Vec<f64> = Vec::with_capacity(total);
+        let mut ranges: Vec<(usize, usize)> = Vec::with_capacity(k);
+        for c in centers.iter() {
+            let start = sup_idx.len();
+            for (y, w) in c.support() {
+                sup_idx.push(y as u32);
+                sup_w.push(w);
             }
-        });
+            ranges.push((start, sup_idx.len()));
+        }
+        // out[r·k + j] = Σ_m w_m·K(x_r, s_m), then finished into distances
+        // in place: Δ = K(x,x) − 2·cross + ⟨Ĉ,Ĉ⟩, clamped at 0.
+        let mut out = vec![0.0f64; b * k];
+        gram.weighted_cross_into(batch, &sup_idx, &sup_w, &ranges, &mut out);
+        for (r, &x) in batch.iter().enumerate() {
+            let kxx = gram.self_k(x);
+            let row = &mut out[r * k..(r + 1) * k];
+            for (v, &ccj) in row.iter_mut().zip(cc.iter()) {
+                *v = (kxx - 2.0 * *v + ccj).max(0.0);
+            }
+        }
         out
     }
 

@@ -21,12 +21,14 @@ use crate::util::timing::{Profiler, Stopwatch};
 /// Configuration for [`FullBatchKernelKMeans`].
 #[derive(Clone, Debug)]
 pub struct FullBatchConfig {
+    /// Number of clusters.
     pub k: usize,
     /// Maximum Lloyd iterations.
     pub max_iters: usize,
     /// Early stop when the objective improves by less than ε (`None` ⇒ run
     /// until assignments stabilize or `max_iters`).
     pub epsilon: Option<f64>,
+    /// Center initialization method.
     pub init: Init,
     /// Optional per-point weights (weighted kernel k-means).
     pub weights: Option<Vec<f64>>,
@@ -50,6 +52,7 @@ pub struct FullBatchKernelKMeans {
 }
 
 impl FullBatchKernelKMeans {
+    /// Wrap a configuration (validates weights).
     pub fn new(cfg: FullBatchConfig) -> Self {
         if let Some(w) = &cfg.weights {
             assert!(w.iter().all(|&x| x > 0.0), "weights must be positive");

@@ -21,6 +21,7 @@ pub enum LearningRate {
 }
 
 impl LearningRate {
+    /// Short display name for reports.
     pub fn name(&self) -> &'static str {
         match self {
             LearningRate::Beta => "beta",
@@ -40,6 +41,7 @@ pub struct RateState {
 }
 
 impl RateState {
+    /// Fresh state for `k` centers.
     pub fn new(kind: LearningRate, k: usize) -> RateState {
         RateState { kind, counts: vec![1.0; k] }
     }
@@ -60,6 +62,7 @@ impl RateState {
         }
     }
 
+    /// Which schedule this state drives.
     pub fn kind(&self) -> LearningRate {
         self.kind
     }

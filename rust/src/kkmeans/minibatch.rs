@@ -18,22 +18,26 @@ use super::init::choose_centers;
 use super::learning_rate::{LearningRate, RateState};
 use super::{FitResult, Init};
 use crate::kernels::Gram;
-use crate::util::parallel::par_rows_mut;
+use crate::util::parallel::{par_rows_mut, par_rows_mut3};
 use crate::util::rng::Rng;
 use crate::util::timing::{Profiler, Stopwatch};
 
 /// Configuration for [`MiniBatchKernelKMeans`] (Algorithm 1).
 #[derive(Clone, Debug)]
 pub struct MiniBatchConfig {
+    /// Number of clusters.
     pub k: usize,
     /// Batch size `b` (sampled uniformly with repetitions).
     pub batch_size: usize,
+    /// Iteration budget.
     pub max_iters: usize,
     /// Early-stopping threshold ε on batch improvement
     /// `f_{B_i}(C_i) − f_{B_i}(C_{i+1})`; `None` runs `max_iters` fixed
     /// iterations (the paper's experimental protocol).
     pub epsilon: Option<f64>,
+    /// Learning-rate schedule for the center updates.
     pub learning_rate: LearningRate,
+    /// Center initialization method.
     pub init: Init,
     /// Optional per-point weights (weighted variant, footnote 1).
     pub weights: Option<Vec<f64>>,
@@ -59,10 +63,12 @@ pub struct MiniBatchKernelKMeans {
 }
 
 impl MiniBatchKernelKMeans {
+    /// Wrap a configuration.
     pub fn new(cfg: MiniBatchConfig) -> Self {
         MiniBatchKernelKMeans { cfg }
     }
 
+    /// Run Algorithm 1 over the gram.
     pub fn fit(&self, gram: &Gram, rng: &mut Rng) -> FitResult {
         let n = gram.n();
         let k = self.cfg.k;
@@ -94,6 +100,14 @@ impl MiniBatchKernelKMeans {
         let mut history = Vec::new();
         let mut iterations = 0;
         let mut converged = false;
+        // Maintained by the fused update+argmin pass: the assignment and min
+        // squared distance of *every* dataset point under the current
+        // centers. Each iteration's DP sweep already touches every px row,
+        // so the argmin rides along for free and the final assignment pass
+        // disappears (§Perf, DESIGN.md §5).
+        let mut assign_all = vec![0usize; n];
+        let mut mins_all = vec![0.0f64; n];
+        let mut have_assignment = false;
 
         for _iter in 0..self.cfg.max_iters {
             iterations += 1;
@@ -165,51 +179,12 @@ impl MiniBatchKernelKMeans {
                 .collect();
             prof.add("moments", sw.secs());
 
-            // ---- DP update: px for all x (O(n·b) kernel evals), cc ----------
+            // ---- DP update fused with the argmin pass ------------------------
+            // cc's recursion needs only the O(b) moments above, so it updates
+            // *first*; the px sweep then reads the new cc and emits each
+            // point's distance-argmin in the same cache-warm visit — every
+            // row of the DP tables is touched exactly once per iteration.
             let sw = Stopwatch::start();
-            {
-                let members = &members;
-                let alphas = &alphas;
-                let mass = &mass;
-                par_rows_mut(&mut px, k, |row0, block| {
-                    for (r, row) in block.chunks_mut(k).enumerate() {
-                        let x = row0 + r;
-                        // Hoist the gram row once per point (§Perf): direct
-                        // f32 loads beat per-element enum dispatch ~3x.
-                        let grow = gram.row_slice(x);
-                        for j in 0..k {
-                            let a = alphas[j];
-                            if a == 0.0 {
-                                continue;
-                            }
-                            let mut cross = 0.0;
-                            match (grow, weights) {
-                                (Some(g), None) => {
-                                    for &y in &members[j] {
-                                        cross += g[y] as f64;
-                                    }
-                                }
-                                (Some(g), Some(w)) => {
-                                    for &y in &members[j] {
-                                        cross += w[y] * g[y] as f64;
-                                    }
-                                }
-                                (None, None) => {
-                                    for &y in &members[j] {
-                                        cross += gram.eval(x, y);
-                                    }
-                                }
-                                (None, Some(w)) => {
-                                    for &y in &members[j] {
-                                        cross += w[y] * gram.eval(x, y);
-                                    }
-                                }
-                            }
-                            row[j] = (1.0 - a) * row[j] + a * cross / mass[j];
-                        }
-                    }
-                });
-            }
             for j in 0..k {
                 let a = alphas[j];
                 if a == 0.0 {
@@ -219,21 +194,81 @@ impl MiniBatchKernelKMeans {
                     + 2.0 * a * (1.0 - a) * c_dot_cm[j]
                     + a * a * cm_dot_cm[j];
             }
+            {
+                let members = &members;
+                let alphas = &alphas;
+                let mass = &mass;
+                let cc = &cc;
+                par_rows_mut3(
+                    &mut px,
+                    k,
+                    &mut assign_all,
+                    1,
+                    &mut mins_all,
+                    1,
+                    |row0, block, ab, mb| {
+                        for (r, row) in block.chunks_mut(k).enumerate() {
+                            let x = row0 + r;
+                            // Hoist the gram row once per point (§Perf):
+                            // direct f32 loads beat per-element enum
+                            // dispatch ~3x.
+                            let grow = gram.row_slice(x);
+                            for j in 0..k {
+                                let a = alphas[j];
+                                if a == 0.0 {
+                                    continue;
+                                }
+                                let mut cross = 0.0;
+                                match (grow, weights) {
+                                    (Some(g), None) => {
+                                        for &y in &members[j] {
+                                            cross += g[y] as f64;
+                                        }
+                                    }
+                                    (Some(g), Some(w)) => {
+                                        for &y in &members[j] {
+                                            cross += w[y] * g[y] as f64;
+                                        }
+                                    }
+                                    (None, None) => {
+                                        for &y in &members[j] {
+                                            cross += gram.eval(x, y);
+                                        }
+                                    }
+                                    (None, Some(w)) => {
+                                        for &y in &members[j] {
+                                            cross += w[y] * gram.eval(x, y);
+                                        }
+                                    }
+                                }
+                                row[j] = (1.0 - a) * row[j] + a * cross / mass[j];
+                            }
+                            // Fused argmin over the freshly-updated row.
+                            let kxx = gram.self_k(x);
+                            let mut best = 0usize;
+                            let mut bestv = f64::INFINITY;
+                            for (j, &pxj) in row.iter().enumerate() {
+                                let d = (kxx - 2.0 * pxj + cc[j]).max(0.0);
+                                if d < bestv {
+                                    best = j;
+                                    bestv = d;
+                                }
+                            }
+                            ab[r] = best;
+                            mb[r] = bestv;
+                        }
+                    },
+                );
+            }
+            have_assignment = true;
             prof.add("update", sw.secs());
 
             // ---- early stopping on the same batch ---------------------------
+            // The fused pass already computed every point's post-update min
+            // distance; the batch objective is a gather.
             if let Some(eps) = self.cfg.epsilon {
                 let sw = Stopwatch::start();
-                let mut mins_after = Vec::with_capacity(b);
-                for &x in &batch {
-                    let kxx = gram.self_k(x);
-                    let mut best = f64::INFINITY;
-                    for j in 0..k {
-                        let d = (kxx - 2.0 * px[x * k + j] + cc[j]).max(0.0);
-                        best = best.min(d);
-                    }
-                    mins_after.push(best);
-                }
+                let mins_after: Vec<f64> = batch.iter().map(|&x| mins_all[x]).collect();
                 let f_after = super::objective::weighted_mean(&batch, &mins_after, weights);
                 prof.add("stopping", sw.secs());
                 if f_before - f_after < eps {
@@ -243,28 +278,37 @@ impl MiniBatchKernelKMeans {
             }
         }
 
-        // ---- final assignment of all points (from the DP tables) -----------
+        // ---- finalize: the fused pass left assignments/mins for all points --
         let sw = Stopwatch::start();
-        let mut dist = vec![0.0f64; n * k];
-        {
-            let px = &px;
-            let cc = &cc;
-            par_rows_mut(&mut dist, k, |row0, block| {
-                for (r, row) in block.chunks_mut(k).enumerate() {
-                    let x = row0 + r;
-                    let kxx = gram.self_k(x);
-                    for j in 0..k {
-                        row[j] = (kxx - 2.0 * px[x * k + j] + cc[j]).max(0.0);
+        if !have_assignment {
+            // max_iters = 0: no fused sweep ran; assign from the init tables.
+            for x in 0..n {
+                let kxx = gram.self_k(x);
+                let mut best = 0usize;
+                let mut bestv = f64::INFINITY;
+                for j in 0..k {
+                    let d = (kxx - 2.0 * px[x * k + j] + cc[j]).max(0.0);
+                    if d < bestv {
+                        best = j;
+                        bestv = d;
                     }
                 }
-            });
+                assign_all[x] = best;
+                mins_all[x] = bestv;
+            }
         }
-        let (assignments, mins) = argmin_rows(&dist, k);
         let points: Vec<usize> = (0..n).collect();
-        let objective = super::objective::weighted_mean(&points, &mins, weights);
+        let objective = super::objective::weighted_mean(&points, &mins_all, weights);
         prof.add("finalize", sw.secs());
 
-        FitResult { assignments, objective, history, iterations, converged, profiler: prof }
+        FitResult {
+            assignments: assign_all,
+            objective,
+            history,
+            iterations,
+            converged,
+            profiler: prof,
+        }
     }
 }
 

@@ -22,7 +22,9 @@ use crate::kernels::{Gram, KernelFunction};
 /// support points are materialized as raw feature vectors).
 #[derive(Clone, Debug)]
 pub struct KernelKMeansModel {
+    /// The feature kernel the model was trained with.
     pub kernel: KernelFunction,
+    /// Feature dimension.
     pub d: usize,
     /// Per center: support feature rows (flattened s×d) and coefficients.
     centers: Vec<(Vec<f32>, Vec<f64>)>,
@@ -54,6 +56,7 @@ impl KernelKMeansModel {
         KernelKMeansModel { kernel, d: ds.d, centers, cc }
     }
 
+    /// Number of centers.
     pub fn k(&self) -> usize {
         self.centers.len()
     }
@@ -118,6 +121,7 @@ pub struct StreamingKernelKMeans {
 }
 
 impl StreamingKernelKMeans {
+    /// Fresh streaming clusterer for `d`-dimensional rows.
     pub fn new(
         kernel: KernelFunction,
         d: usize,

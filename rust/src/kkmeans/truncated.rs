@@ -9,7 +9,9 @@
 //!
 //! The assignment hot-spot runs through an [`AssignBackend`]; pass
 //! [`crate::runtime::XlaBackend`] to execute the AOT-compiled JAX/Pallas
-//! graph, or [`NativeBackend`] for the pure-Rust path.
+//! graph, or [`NativeBackend`] for the pure-Rust path — which serves the
+//! `K(B, S)·w` contraction through the cache-tiled engine in
+//! [`crate::kernels::Gram::weighted_cross_into`] (DESIGN.md §5).
 
 use super::backend::{argmin_rows, AssignBackend, NativeBackend};
 use super::init::choose_centers;
@@ -23,6 +25,7 @@ use crate::util::timing::{Profiler, Stopwatch};
 /// Configuration for [`TruncatedMiniBatchKernelKMeans`] (Algorithm 2).
 #[derive(Clone, Debug)]
 pub struct TruncatedConfig {
+    /// Number of clusters.
     pub k: usize,
     /// Batch size `b` (uniform with repetitions).
     pub batch_size: usize,
@@ -30,10 +33,13 @@ pub struct TruncatedConfig {
     /// The paper sweeps τ ∈ {50, 100, 200, 300}; `usize::MAX` disables
     /// truncation (Algorithm 1 semantics, explicit representation).
     pub tau: usize,
+    /// Iteration budget.
     pub max_iters: usize,
     /// Early-stopping ε on batch improvement; `None` = fixed iterations.
     pub epsilon: Option<f64>,
+    /// Learning-rate schedule for the center updates.
     pub learning_rate: LearningRate,
+    /// Center initialization method.
     pub init: Init,
     /// Optional per-point weights (weighted variant, footnote 1).
     pub weights: Option<Vec<f64>>,
@@ -65,7 +71,9 @@ impl TruncatedConfig {
 /// Detailed fit output: shared [`FitResult`] plus the final center windows
 /// (for inspection, warm restarts, or serving).
 pub struct TruncatedFit {
+    /// The shared fit output (assignments, objective, history, profiler).
     pub result: FitResult,
+    /// Final truncated center windows.
     pub centers: Vec<CenterWindow>,
 }
 
@@ -75,6 +83,7 @@ pub struct TruncatedMiniBatchKernelKMeans {
 }
 
 impl TruncatedMiniBatchKernelKMeans {
+    /// Wrap a configuration.
     pub fn new(cfg: TruncatedConfig) -> Self {
         TruncatedMiniBatchKernelKMeans { cfg }
     }

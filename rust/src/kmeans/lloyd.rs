@@ -9,7 +9,9 @@ use crate::util::timing::{Profiler, Stopwatch};
 /// Configuration for [`KMeans`].
 #[derive(Clone, Debug)]
 pub struct KMeansConfig {
+    /// Number of clusters.
     pub k: usize,
+    /// Iteration budget.
     pub max_iters: usize,
     /// Stop when no assignment changes (always on) or when the objective
     /// improves by less than ε.
@@ -28,10 +30,12 @@ pub struct KMeans {
 }
 
 impl KMeans {
+    /// Wrap a configuration.
     pub fn new(cfg: KMeansConfig) -> Self {
         KMeans { cfg }
     }
 
+    /// Run Lloyd's algorithm on raw features.
     pub fn fit(&self, ds: &Dataset, rng: &mut Rng) -> FitResult {
         let k = self.cfg.k;
         let d = ds.d;

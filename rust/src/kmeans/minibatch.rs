@@ -15,11 +15,15 @@ use crate::util::timing::{Profiler, Stopwatch};
 /// Configuration for [`MiniBatchKMeans`].
 #[derive(Clone, Debug)]
 pub struct MiniBatchKMeansConfig {
+    /// Number of clusters.
     pub k: usize,
+    /// Batch size `b` (uniform with repetitions).
     pub batch_size: usize,
+    /// Iteration budget.
     pub max_iters: usize,
     /// Early-stopping ε on batch improvement; `None` = fixed iterations.
     pub epsilon: Option<f64>,
+    /// Learning-rate schedule for the center updates.
     pub learning_rate: LearningRate,
 }
 
@@ -41,10 +45,12 @@ pub struct MiniBatchKMeans {
 }
 
 impl MiniBatchKMeans {
+    /// Wrap a configuration.
     pub fn new(cfg: MiniBatchKMeansConfig) -> Self {
         MiniBatchKMeans { cfg }
     }
 
+    /// Run Sculley-style mini-batch k-means on raw features.
     pub fn fit(&self, ds: &Dataset, rng: &mut Rng) -> FitResult {
         let k = self.cfg.k;
         let d = ds.d;

@@ -22,20 +22,22 @@
 //!   ([`runtime`]) that executes the AOT artifacts from the hot loop. Python
 //!   never runs on the request path.
 //!
-//! See `examples/` for end-to-end drivers and `DESIGN.md` for the experiment
-//! index mapping every figure/table in the paper to a command.
+//! See `examples/` for end-to-end drivers and `DESIGN.md` §2 for the
+//! experiment index mapping every figure/table in the paper to a command.
 
-pub mod util;
-pub mod linalg;
-pub mod testutil;
+#![warn(missing_docs)]
+
 pub mod bench;
+pub mod coordinator;
 pub mod data;
 pub mod kernels;
 pub mod kkmeans;
 pub mod kmeans;
+pub mod linalg;
 pub mod metrics;
 pub mod runtime;
-pub mod coordinator;
+pub mod testutil;
+pub mod util;
 
 /// Crate version, re-exported for the CLI banner.
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -4,16 +4,21 @@
 /// Row-major dense matrix.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Matrix {
+    /// Number of rows.
     pub rows: usize,
+    /// Number of columns.
     pub cols: usize,
+    /// Row-major values, length `rows * cols`.
     pub data: Vec<f64>,
 }
 
 impl Matrix {
+    /// All-zero matrix.
     pub fn zeros(rows: usize, cols: usize) -> Matrix {
         Matrix { rows, cols, data: vec![0.0; rows * cols] }
     }
 
+    /// The n×n identity.
     pub fn identity(n: usize) -> Matrix {
         let mut m = Matrix::zeros(n, n);
         for i in 0..n {
@@ -22,6 +27,7 @@ impl Matrix {
         m
     }
 
+    /// Build from a list of equal-length rows.
     pub fn from_rows(rows: Vec<Vec<f64>>) -> Matrix {
         let r = rows.len();
         let c = rows.first().map(|x| x.len()).unwrap_or(0);
@@ -29,22 +35,26 @@ impl Matrix {
         Matrix { rows: r, cols: c, data: rows.into_iter().flatten().collect() }
     }
 
+    /// Element (i, j).
     #[inline]
     pub fn at(&self, i: usize, j: usize) -> f64 {
         debug_assert!(i < self.rows && j < self.cols);
         self.data[i * self.cols + j]
     }
 
+    /// Mutable element (i, j).
     #[inline]
     pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
         debug_assert!(i < self.rows && j < self.cols);
         &mut self.data[i * self.cols + j]
     }
 
+    /// Row `i` as a slice.
     pub fn row(&self, i: usize) -> &[f64] {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// The transposed matrix.
     pub fn transpose(&self) -> Matrix {
         let mut t = Matrix::zeros(self.cols, self.rows);
         for i in 0..self.rows {
@@ -96,6 +106,7 @@ impl Matrix {
         c
     }
 
+    /// Elementwise sum `self + B`.
     pub fn add(&self, b: &Matrix) -> Matrix {
         assert_eq!((self.rows, self.cols), (b.rows, b.cols));
         let mut out = self.clone();
@@ -105,6 +116,7 @@ impl Matrix {
         out
     }
 
+    /// Elementwise difference `self − B`.
     pub fn sub(&self, b: &Matrix) -> Matrix {
         assert_eq!((self.rows, self.cols), (b.rows, b.cols));
         let mut out = self.clone();
@@ -114,6 +126,7 @@ impl Matrix {
         out
     }
 
+    /// Scalar multiple `s·self`.
     pub fn scale(&self, s: f64) -> Matrix {
         let mut out = self.clone();
         for o in out.data.iter_mut() {
@@ -141,10 +154,12 @@ impl Matrix {
         sums.into_iter().fold(0.0, f64::max)
     }
 
+    /// Frobenius norm.
     pub fn norm_fro(&self) -> f64 {
         self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
     }
 
+    /// Largest absolute elementwise difference to `b`.
     pub fn max_abs_diff(&self, b: &Matrix) -> f64 {
         assert_eq!((self.rows, self.cols), (b.rows, b.cols));
         self.data

@@ -9,8 +9,8 @@
 //! mbkk info                              # datasets, artifacts, backends
 //! ```
 
-use anyhow::Result;
 use mbkk::coordinator::{experiment, figures};
+use mbkk::util::error::Result;
 use mbkk::data::registry;
 use mbkk::kkmeans::AssignBackend;
 use mbkk::runtime;
@@ -134,7 +134,7 @@ fn run(args: &Args) -> Result<()> {
             experiment::run_with_gram(&spec, &ds, &gram, kernel_secs)
         }
         "xla" => run_with_xla_backend(&spec, &ds)?,
-        other => anyhow::bail!("unknown backend {other:?} (native|xla)"),
+        other => mbkk::bail!("unknown backend {other:?} (native|xla)"),
     };
     println!("ARI:        {:.4}", outcome.ari);
     println!("NMI:        {:.4}", outcome.nmi);
@@ -160,13 +160,13 @@ fn run_with_xla_backend(
     use mbkk::kernels::{Gram, KernelFunction};
     use mbkk::kkmeans::{TruncatedConfig, TruncatedMiniBatchKernelKMeans};
     let experiment::AlgoSpec::TruncKkm(lr) = spec.algo else {
-        anyhow::bail!("--backend xla supports the truncated algorithm ([b]trunc-kkm) only");
+        mbkk::bail!("--backend xla supports the truncated algorithm ([b]trunc-kkm) only");
     };
     let mut rng = Rng::seeded(spec.seed ^ 0xC0DE);
     let kappa = spec
         .kernel
         .gaussian_kappa(ds, &mut rng)
-        .ok_or_else(|| anyhow::anyhow!("--backend xla requires --kernel gaussian"))?;
+        .ok_or_else(|| mbkk::format_err!("--backend xla requires --kernel gaussian"))?;
     let gram = Gram::on_the_fly(ds, KernelFunction::Gaussian { kappa });
     let mut backend = runtime::XlaBackend::load_default()?;
     let cfg = TruncatedConfig {

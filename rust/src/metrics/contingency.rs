@@ -7,14 +7,18 @@ use std::collections::BTreeMap;
 /// Sparse contingency table.
 #[derive(Debug, Clone)]
 pub struct Contingency {
+    /// Total number of points.
     pub n: usize,
     /// Count per (row cluster, col cluster) pair.
     counts: BTreeMap<(usize, usize), usize>,
+    /// Cluster sizes of the first labeling.
     pub row_sums: Vec<usize>,
+    /// Cluster sizes of the second labeling.
     pub col_sums: Vec<usize>,
 }
 
 impl Contingency {
+    /// Build the table from two labelings over the same points.
     pub fn new(labels_a: &[usize], labels_b: &[usize]) -> Contingency {
         assert_eq!(
             labels_a.len(),

@@ -1,14 +1,17 @@
 //! Artifact manifest: what `make artifacts` built and how to pick an
 //! executable for a run configuration.
 
+use crate::bail;
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
-use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 
 /// One AOT-compiled artifact.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ArtifactSpec {
+    /// Unique artifact name (cache key).
     pub name: String,
+    /// HLO text file name, relative to the manifest directory.
     pub file: String,
     /// Graph kind: `assign_gaussian` (feature kernel) or
     /// `assign_precomputed` (graph kernels).
@@ -26,7 +29,9 @@ pub struct ArtifactSpec {
 /// Parsed `manifest.json`.
 #[derive(Clone, Debug, Default)]
 pub struct Manifest {
+    /// Directory the manifest was loaded from (artifact paths are relative).
     pub dir: PathBuf,
+    /// All artifacts `make artifacts` built.
     pub artifacts: Vec<ArtifactSpec>,
 }
 

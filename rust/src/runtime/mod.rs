@@ -1,15 +1,19 @@
-//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
-//! `make artifacts` (Layer 1/2 — JAX + Pallas) and executes them from the
-//! Rust hot path via the `xla` crate's PJRT CPU client.
+//! PJRT runtime layer: manages the AOT-compiled HLO artifacts produced by
+//! `make artifacts` (Layer 1/2 — JAX + Pallas) for execution from the Rust
+//! hot path.
 //!
 //! * [`manifest`] — parses `artifacts/manifest.json` and selects an
 //!   artifact for a run configuration.
-//! * [`engine`] — PJRT client + lazy executable compilation cache.
+//! * [`engine`] — the executable cache. In this offline build it is a
+//!   graceful shim: no PJRT bindings can be linked (see the module docs of
+//!   [`engine`] and DESIGN.md §1), so execution requests error and the
+//!   caller falls back to the native path.
 //! * [`XlaBackend`] — an [`crate::kkmeans::AssignBackend`] that marshals
-//!   the batch/support/weight tensors and runs the assignment-step graph.
+//!   the batch/support/weight tensors for the assignment-step graph, with
+//!   a counted [`crate::kkmeans::NativeBackend`] fallback.
 //!
-//! Python is only involved at build time; these modules read text files and
-//! talk to PJRT directly.
+//! Python is only involved at build time; these modules read text files
+//! and never shell out.
 
 pub mod backend;
 pub mod engine;

@@ -29,6 +29,7 @@ pub fn default_cases() -> usize {
 
 /// A generator of random values with shrinking.
 pub trait Gen<T> {
+    /// Produce one random value.
     fn generate(&self, rng: &mut Rng) -> T;
     /// Candidate smaller values; the checker tries them in order.
     fn shrink(&self, value: &T) -> Vec<T> {
@@ -88,6 +89,7 @@ fn shrink_loop<T: Clone>(gen: &impl Gen<T>, mut failing: T, prop: &impl Fn(&T) -
 
 // ---- primitive generators --------------------------------------------------
 
+/// Generator of `usize` values in a range (see [`usize_in`]).
 pub struct UsizeIn(pub Range<usize>);
 
 /// usize in [lo, hi).
@@ -114,6 +116,7 @@ impl Gen<usize> for UsizeIn {
     }
 }
 
+/// Generator of `f64` values in a range (see [`f64_in`]).
 pub struct F64In(pub Range<f64>);
 
 /// f64 uniform in [lo, hi).
@@ -143,6 +146,7 @@ pub struct VecOf<G> {
     len: Range<usize>,
 }
 
+/// Generator of vectors of `elem` with length drawn from `len`.
 pub fn vec_of<G>(elem: G, len: Range<usize>) -> VecOf<G> {
     VecOf { elem, len }
 }
@@ -186,6 +190,7 @@ impl<T: Clone, G: Gen<T>> Gen<Vec<T>> for VecOf<G> {
 /// Pair of independent generators.
 pub struct PairOf<G1, G2>(pub G1, pub G2);
 
+/// Generator of pairs from two independent generators.
 pub fn pair_of<G1, G2>(a: G1, b: G2) -> PairOf<G1, G2> {
     PairOf(a, b)
 }
@@ -210,6 +215,7 @@ impl<A: Clone, B: Clone, G1: Gen<A>, G2: Gen<B>> Gen<(A, B)> for PairOf<G1, G2> 
 /// Generator defined by a closure (no shrinking).
 pub struct FromFn<F>(pub F);
 
+/// Wrap a closure as a [`Gen`] (no shrinking).
 pub fn from_fn<T, F: Fn(&mut Rng) -> T>(f: F) -> FromFn<F> {
     FromFn(f)
 }

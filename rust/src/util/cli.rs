@@ -10,9 +10,11 @@ use std::collections::BTreeMap;
 /// flags, and positional arguments.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
+    /// First bare token, e.g. `run` in `mbkk run --k 3`.
     pub subcommand: Option<String>,
     opts: BTreeMap<String, String>,
     flags: Vec<String>,
+    /// Bare tokens that are neither the subcommand nor option values.
     pub positional: Vec<String>,
     consumed: std::cell::RefCell<std::collections::BTreeSet<String>>,
 }
@@ -60,6 +62,7 @@ impl Args {
         self.opts.get(key).map(|s| s.as_str())
     }
 
+    /// String option with a default.
     pub fn get_or(&self, key: &str, default: &str) -> String {
         self.get(key).unwrap_or(default).to_string()
     }

@@ -1,0 +1,150 @@
+//! Minimal error-handling substrate (the `anyhow` replacement for this
+//! zero-dependency offline build).
+//!
+//! Provides exactly the surface the crate uses: a string-chained [`Error`]
+//! type, the [`Result`] alias, a [`Context`] extension trait for `Result`
+//! and `Option`, and the [`crate::format_err!`] / [`crate::bail!`] macros.
+//! Errors are formatted eagerly into a single human-readable message with
+//! outer context prepended (`"reading foo.csv: No such file or directory"`),
+//! which is all the CLI and coordinator ever do with them.
+
+use std::fmt;
+
+/// A formatted error message with context layers folded in.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Create an error from any displayable message.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Wrap this error with an outer context line.
+    pub fn wrap(self, ctx: impl fmt::Display) -> Error {
+        Error { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `fn main() -> Result<()>` prints the Debug form on error; make it
+        // the readable message rather than a struct dump.
+        f.write_str(&self.msg)
+    }
+}
+
+// Note: `Error` deliberately does NOT implement `std::error::Error`, which
+// is what keeps this blanket conversion coherent (no overlap with the
+// reflexive `From<T> for T`).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// Crate-wide result alias with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding context to `Result` and `Option` values.
+pub trait Context<T> {
+    /// Attach a fixed context message to the error/`None` case.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+
+    /// Attach a lazily-computed context message to the error/`None` case.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{ctx}: {e}") })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string, like `anyhow::anyhow!`.
+#[macro_export]
+macro_rules! format_err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early from a `Result`-returning function with a formatted
+/// [`Error`], like `anyhow::bail!`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::format_err!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/real/path/xyz")
+            .context("reading config")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn context_prepends_message() {
+        let err = io_fail().unwrap_err();
+        let text = format!("{err}");
+        assert!(text.starts_with("reading config: "), "{text}");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse() -> Result<i32> {
+            let v: i32 = "not a number".parse()?;
+            Ok(v)
+        }
+        assert!(parse().is_err());
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u8> = None;
+        let err = none.context("missing field").unwrap_err();
+        assert_eq!(format!("{err}"), "missing field");
+        let some = Some(3u8).with_context(|| "unused").unwrap();
+        assert_eq!(some, 3);
+    }
+
+    #[test]
+    fn macros_format() {
+        fn f(flag: bool) -> Result<()> {
+            if flag {
+                bail!("bad value {}", 42);
+            }
+            Ok(())
+        }
+        assert_eq!(format!("{}", f(true).unwrap_err()), "bad value 42");
+        assert!(f(false).is_ok());
+        let e = format_err!("x={x}", x = 7).wrap("outer");
+        assert_eq!(format!("{e}"), "outer: x=7");
+    }
+}

@@ -12,18 +12,26 @@ use std::fmt;
 /// A JSON value. Objects use a BTreeMap so serialization is deterministic.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (held as f64; adequate for every payload here).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys ⇒ deterministic serialization).
     Obj(BTreeMap<String, Json>),
 }
 
 /// Parse error with byte offset for diagnostics.
 #[derive(Debug)]
 pub struct JsonError {
+    /// What went wrong.
     pub msg: String,
+    /// Byte offset into the input where parsing failed.
     pub offset: usize,
 }
 
@@ -38,20 +46,24 @@ impl std::error::Error for JsonError {}
 impl Json {
     // ---- constructors ----------------------------------------------------
 
+    /// Build an object from (key, value) pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build an array of numbers.
     pub fn arr_num<I: IntoIterator<Item = f64>>(xs: I) -> Json {
         Json::Arr(xs.into_iter().map(Json::Num).collect())
     }
 
+    /// Build an array of strings.
     pub fn arr_str<I: IntoIterator<Item = String>>(xs: I) -> Json {
         Json::Arr(xs.into_iter().map(Json::Str).collect())
     }
 
     // ---- accessors --------------------------------------------------------
 
+    /// The number, if this is a [`Json::Num`].
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -59,6 +71,7 @@ impl Json {
         }
     }
 
+    /// The number as a non-negative integer, if it is one exactly.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().and_then(|x| {
             if x >= 0.0 && x.fract() == 0.0 {
@@ -69,6 +82,7 @@ impl Json {
         })
     }
 
+    /// The string, if this is a [`Json::Str`].
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -76,6 +90,7 @@ impl Json {
         }
     }
 
+    /// The boolean, if this is a [`Json::Bool`].
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -83,6 +98,7 @@ impl Json {
         }
     }
 
+    /// The items, if this is a [`Json::Arr`].
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -90,6 +106,7 @@ impl Json {
         }
     }
 
+    /// The map, if this is a [`Json::Obj`].
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -105,6 +122,7 @@ impl Json {
 
     // ---- parsing ----------------------------------------------------------
 
+    /// Parse a complete JSON document (trailing characters are an error).
     pub fn parse(input: &str) -> Result<Json, JsonError> {
         let mut p = Parser { bytes: input.as_bytes(), pos: 0 };
         p.skip_ws();

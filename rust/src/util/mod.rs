@@ -5,8 +5,9 @@
 //! at exactly the scope this project needs. Each module carries its own unit
 //! tests.
 
-pub mod rng;
-pub mod json;
 pub mod cli;
+pub mod error;
+pub mod json;
 pub mod parallel;
+pub mod rng;
 pub mod timing;

@@ -86,6 +86,140 @@ where
     });
 }
 
+/// Like [`par_rows_mut`], but hands each worker row-aligned blocks of
+/// *three* parallel arrays describing the same rows: `a` with `la` elements
+/// per row, `b` with `lb`, `c` with `lc`. Used by the fused
+/// update-plus-argmin pass of Algorithm 1, which writes the `px` table, the
+/// assignment vector, and the min-distance vector in one sweep over the
+/// dataset (see `kkmeans::minibatch`).
+pub fn par_rows_mut3<A: Send, B: Send, C: Send, F>(
+    a: &mut [A],
+    la: usize,
+    b: &mut [B],
+    lb: usize,
+    c: &mut [C],
+    lc: usize,
+    f: F,
+) where
+    F: Fn(usize, &mut [A], &mut [B], &mut [C]) + Sync,
+{
+    assert!(la > 0 && lb > 0 && lc > 0, "zero-width rows");
+    assert!(a.len() % la == 0, "non-rectangular data");
+    let nrows = a.len() / la;
+    assert_eq!(b.len(), nrows * lb, "row count mismatch (b)");
+    assert_eq!(c.len(), nrows * lc, "row count mismatch (c)");
+    if nrows == 0 {
+        return;
+    }
+    let workers = num_threads()
+        .min(a.len().div_ceil(MIN_ITEMS_PER_THREAD))
+        .min(nrows)
+        .max(1);
+    if workers == 1 {
+        f(0, a, b, c);
+        return;
+    }
+    let rows_per = nrows.div_ceil(workers);
+    std::thread::scope(|scope| {
+        let blocks = a
+            .chunks_mut(rows_per * la)
+            .zip(b.chunks_mut(rows_per * lb))
+            .zip(c.chunks_mut(rows_per * lc));
+        for (bi, ((ba, bb), bc)) in blocks.enumerate() {
+            let f = &f;
+            scope.spawn(move || f(bi * rows_per, ba, bb, bc));
+        }
+    });
+}
+
+/// Run `f(i)` for every `i in 0..count` across worker threads, pulling
+/// indices from a shared atomic counter. Unlike the contiguous-chunk
+/// helpers this load-balances *dynamically*, which matters when work per
+/// index is irregular — e.g. the symmetric gram tiles, where diagonal tiles
+/// do half the work of off-diagonal ones.
+pub fn par_dynamic<F>(count: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if count == 0 {
+        return;
+    }
+    let workers = num_threads().min(count);
+    if workers <= 1 {
+        for i in 0..count {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let f = &f;
+            let next = &next;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= count {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Shared-write view over a mutable slice for parallel kernels whose write
+/// sets are *provably disjoint* but not expressible as contiguous chunks —
+/// the symmetric gram materializer writes both `(i, j)` and its mirror
+/// `(j, i)` from the tile that owns the unordered pair `{i, j}`.
+///
+/// Safety contract: concurrent [`SharedSlice::write`] calls from different
+/// threads must target distinct indices. The only constructor borrows the
+/// slice mutably for the view's lifetime, so no other access can coexist.
+pub struct SharedSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: std::marker::PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: the view is only a carrier for the raw pointer; all dereferencing
+// goes through the `unsafe fn write` whose contract forbids overlapping
+// writes. `T: Send` bounds match sending &mut [T] chunks to threads.
+unsafe impl<'a, T: Send> Send for SharedSlice<'a, T> {}
+unsafe impl<'a, T: Send> Sync for SharedSlice<'a, T> {}
+
+impl<'a, T> SharedSlice<'a, T> {
+    /// Create a shared-write view over `slice`.
+    pub fn new(slice: &'a mut [T]) -> SharedSlice<'a, T> {
+        SharedSlice {
+            ptr: slice.as_mut_ptr(),
+            len: slice.len(),
+            _marker: std::marker::PhantomData,
+        }
+    }
+
+    /// Number of elements in the underlying slice.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether the underlying slice is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Write `value` at `idx`.
+    ///
+    /// # Safety
+    ///
+    /// `idx` must be in bounds, and no concurrent write (from any thread)
+    /// may target the same index while this call executes.
+    #[inline]
+    pub unsafe fn write(&self, idx: usize, value: T) {
+        debug_assert!(idx < self.len, "SharedSlice write out of bounds");
+        *self.ptr.add(idx) = value;
+    }
+}
+
 /// Parallel map over `0..n`, collecting results in order.
 pub fn par_map_indexed<T: Send, F>(n: usize, f: F) -> Vec<T>
 where
@@ -238,6 +372,62 @@ mod tests {
             .collect();
         let out = par_run_jobs(jobs);
         assert_eq!(out, (0..50).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_rows_mut3_aligned_rows() {
+        let n = 1000;
+        let k = 3;
+        let mut a = vec![0usize; n * k];
+        let mut b = vec![0usize; n];
+        let mut c = vec![0.0f64; n];
+        par_rows_mut3(&mut a, k, &mut b, 1, &mut c, 1, |row0, ba, bb, bc| {
+            for (r, row) in ba.chunks_mut(k).enumerate() {
+                let x = row0 + r;
+                for (j, v) in row.iter_mut().enumerate() {
+                    *v = x * k + j;
+                }
+                bb[r] = x;
+                bc[r] = x as f64;
+            }
+        });
+        for (i, v) in a.iter().enumerate() {
+            assert_eq!(*v, i);
+        }
+        for (i, v) in b.iter().enumerate() {
+            assert_eq!(*v, i);
+        }
+        assert_eq!(c[999], 999.0);
+    }
+
+    #[test]
+    fn par_dynamic_covers_all_indices() {
+        let flags: Vec<std::sync::atomic::AtomicUsize> =
+            (0..500).map(|_| AtomicUsize::new(0)).collect();
+        par_dynamic(500, |i| {
+            flags[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for f in &flags {
+            assert_eq!(f.load(Ordering::Relaxed), 1);
+        }
+        par_dynamic(0, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn shared_slice_disjoint_writes() {
+        let mut data = vec![0u32; 256];
+        {
+            let view = SharedSlice::new(&mut data);
+            assert_eq!(view.len(), 256);
+            assert!(!view.is_empty());
+            par_dynamic(256, |i| {
+                // Each index written exactly once — the contract.
+                unsafe { view.write(i, i as u32 + 1) };
+            });
+        }
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i as u32 + 1);
+        }
     }
 
     #[test]

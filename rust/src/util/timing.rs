@@ -14,14 +14,17 @@ pub struct Stopwatch {
 }
 
 impl Stopwatch {
+    /// Start timing now.
     pub fn start() -> Self {
         Stopwatch { start: Instant::now() }
     }
 
+    /// Elapsed time since [`Stopwatch::start`].
     pub fn elapsed(&self) -> Duration {
         self.start.elapsed()
     }
 
+    /// Elapsed seconds since [`Stopwatch::start`].
     pub fn secs(&self) -> f64 {
         self.elapsed().as_secs_f64()
     }
@@ -50,6 +53,7 @@ pub struct Profiler {
 }
 
 impl Profiler {
+    /// Empty profiler.
     pub fn new() -> Self {
         Self::default()
     }
@@ -73,6 +77,7 @@ impl Profiler {
         self.phases.get(phase).map(|(s, _)| *s).unwrap_or(0.0)
     }
 
+    /// Number of recordings against a phase.
     pub fn phase_count(&self, phase: &str) -> u64 {
         self.phases.get(phase).map(|(_, c)| *c).unwrap_or(0)
     }

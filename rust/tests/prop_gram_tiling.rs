@@ -1,0 +1,168 @@
+//! Property tests for the tiled gram engine (DESIGN.md §5): randomized
+//! shapes, kernels, and tile widths must never change the numbers —
+//! materialization agrees with on-the-fly evaluation entry-wise,
+//! materialized matrices are exactly symmetric, and the tiled `K(B, S)`
+//! block/contraction paths match naive double loops.
+
+use mbkk::data::synthetic::{blobs, SyntheticSpec};
+use mbkk::kernels::{Gram, KernelFunction};
+use mbkk::testutil::prop::{check, from_fn};
+use mbkk::util::rng::Rng;
+
+/// Relative closeness against f32 gram storage: polynomial/linear kernels
+/// on raw blob features reach 1e8, where f32 rounding alone is ~10, so
+/// tolerances must scale with magnitude.
+fn close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= 1e-4 * a.abs().max(b.abs()).max(1.0)
+}
+
+/// A random (dataset, kernel) pair small enough for O(n²) oracles.
+fn random_case(rng: &mut Rng) -> (mbkk::data::Dataset, KernelFunction) {
+    let n = 8 + rng.below(40);
+    let d = 1 + rng.below(6);
+    let k = 1 + rng.below(4);
+    let ds = blobs(&SyntheticSpec::new(n, d, k), rng);
+    let func = match rng.below(4) {
+        0 => KernelFunction::Gaussian { kappa: 0.5 + rng.f64() * 8.0 },
+        1 => KernelFunction::Laplacian { sigma: 0.5 + rng.f64() * 4.0 },
+        2 => KernelFunction::Polynomial {
+            gamma: 0.1 + rng.f64(),
+            coef0: rng.f64(),
+            degree: 1 + rng.below(3) as u32,
+        },
+        _ => KernelFunction::Linear,
+    };
+    (ds, func)
+}
+
+#[test]
+fn prop_materialize_agrees_entrywise_for_any_tile() {
+    let gen = from_fn(|rng| {
+        let (ds, func) = random_case(rng);
+        let tile = 1 + rng.below(ds.n + 8);
+        (ds, func, tile)
+    });
+    check("materialize ≡ on-the-fly entry-wise", gen, |(ds, func, tile)| {
+        let fly = Gram::on_the_fly(ds, *func);
+        let mat = fly.materialize_tiled(*tile);
+        for i in 0..ds.n {
+            for j in 0..ds.n {
+                if !close(fly.eval(i, j), mat.eval(i, j)) {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_materialized_matrix_is_symmetric_with_correct_diagonal() {
+    let gen = from_fn(|rng| {
+        let (ds, func) = random_case(rng);
+        let tile = 1 + rng.below(ds.n + 8);
+        (ds, func, tile)
+    });
+    check("materialized gram symmetric + diag", gen, |(ds, func, tile)| {
+        let fly = Gram::on_the_fly(ds, *func);
+        let mat = fly.materialize_tiled(*tile);
+        for i in 0..ds.n {
+            // Mirrored writes make symmetry bit-exact, not just approximate.
+            for j in 0..ds.n {
+                if mat.eval(i, j) != mat.eval(j, i) {
+                    return false;
+                }
+            }
+            if !close(mat.self_k(i), fly.self_k(i)) {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_tiled_block_matches_naive_double_loop() {
+    let gen = from_fn(|rng| {
+        let (ds, func) = random_case(rng);
+        let n = ds.n;
+        let rows: Vec<usize> = (0..1 + rng.below(20)).map(|_| rng.below(n)).collect();
+        let cols: Vec<usize> = (0..1 + rng.below(30)).map(|_| rng.below(n)).collect();
+        let tile = 1 + rng.below(cols.len() + 4);
+        (ds, func, rows, cols, tile)
+    });
+    check(
+        "tiled K(B,S) block ≡ naive double loop",
+        gen,
+        |(ds, func, rows, cols, tile)| {
+            let fly = Gram::on_the_fly(ds, *func);
+            let mat = fly.materialize();
+            for gram in [&fly, &mat] {
+                let mut out = vec![f64::NAN; rows.len() * cols.len()];
+                gram.block_into_tiled(rows, cols, *tile, &mut out);
+                for (r, &i) in rows.iter().enumerate() {
+                    for (c, &j) in cols.iter().enumerate() {
+                        let want = fly.eval(i, j);
+                        if !close(out[r * cols.len() + c], want) {
+                            return false;
+                        }
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_weighted_cross_matches_naive_contraction() {
+    // The fused K(B,S)·w engine against an explicit two-loop oracle, over
+    // random center counts, support sizes (including empty), and weights.
+    let gen = from_fn(|rng| {
+        let (ds, func) = random_case(rng);
+        let n = ds.n;
+        let k = 1 + rng.below(5);
+        let batch: Vec<usize> = (0..1 + rng.below(24)).map(|_| rng.below(n)).collect();
+        let mut sup_idx: Vec<u32> = Vec::new();
+        let mut sup_w: Vec<f64> = Vec::new();
+        let mut ranges: Vec<(usize, usize)> = Vec::new();
+        for _ in 0..k {
+            let start = sup_idx.len();
+            for _ in 0..rng.below(30) {
+                sup_idx.push(rng.below(n) as u32);
+                sup_w.push(rng.f64() * 2.0 - 0.5);
+            }
+            ranges.push((start, sup_idx.len()));
+        }
+        (ds, func, batch, sup_idx, sup_w, ranges)
+    });
+    check(
+        "weighted_cross_into ≡ naive Σ w·K",
+        gen,
+        |(ds, func, batch, sup_idx, sup_w, ranges)| {
+            let fly = Gram::on_the_fly(ds, *func);
+            let mat = fly.materialize();
+            let k = ranges.len();
+            for gram in [&fly, &mat] {
+                let mut out = vec![f64::NAN; batch.len() * k];
+                gram.weighted_cross_into(batch, sup_idx, sup_w, ranges, &mut out);
+                for (r, &x) in batch.iter().enumerate() {
+                    for (j, &(s, e)) in ranges.iter().enumerate() {
+                        let want: f64 = (s..e)
+                            .map(|m| sup_w[m] * fly.eval(x, sup_idx[m] as usize))
+                            .sum();
+                        // Mixed-sign weights can cancel, so scale the
+                        // tolerance by the magnitude sum, not the result.
+                        let scale: f64 = (s..e)
+                            .map(|m| (sup_w[m] * fly.eval(x, sup_idx[m] as usize)).abs())
+                            .sum();
+                        if (out[r * k + j] - want).abs() > 1e-4 * scale.max(1.0) {
+                            return false;
+                        }
+                    }
+                }
+            }
+            true
+        },
+    );
+}
