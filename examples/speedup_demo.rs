@@ -46,7 +46,7 @@ fn main() -> mbkk::util::error::Result<()> {
             epsilon: None,
             seed: 3,
         };
-        let out = run_with_gram(&spec, &ds, &gram, kernel_secs);
+        let out = run_with_gram(&spec, &ds, Some(&gram), kernel_secs);
         println!(
             "{name:<28} {:>8.2}s   ARI {:.3}   NMI {:.3}   obj {:.5}",
             out.cluster_secs, out.ari, out.nmi, out.objective

@@ -48,7 +48,7 @@ fn main() {
                 epsilon: None,
                 seed: 3,
             };
-            run_with_gram(&spec, &ds, &gram, kernel_secs)
+            run_with_gram(&spec, &ds, Some(&gram), kernel_secs)
         };
 
         let full = run(AlgoSpec::FullKkm, 1024, usize::MAX);

@@ -1,0 +1,126 @@
+//! Streaming-provider benchmarks (ISSUE 2): the tile-LRU-cached provider
+//! vs the materialized table on the assignment hot path, plus end-to-end
+//! mini-batch fits at large-n scales where the table could not exist.
+//!
+//! Scenario sizes scale with `MBKK_BENCH_SCALE` (default 0.05):
+//!
+//! * the assignment comparison runs at `n = 160_000·scale` (default 8000),
+//!   where both providers fit in memory and can be compared head to head;
+//! * the large-n fits run at `n = 1_000_000·scale` (default 50_000) through
+//!   the streaming provider only — at scale 1.0 this is the full
+//!   million-point `blobs_1m` scenario, whose dense gram would be 4 TB.
+//!
+//! CI's `bench-smoke` job runs this suite at `MBKK_BENCH_SCALE=0.02` and
+//! uploads the merged `BENCH_baseline.json` as a workflow artifact. Case
+//! names are scale-independent so re-runs overwrite their own entries; the
+//! printed banner records the concrete n of each run.
+//!
+//! ```bash
+//! cargo bench --bench bench_stream                      # default preset
+//! MBKK_BENCH_SCALE=1.0 cargo bench --bench bench_stream # full 1M points
+//! ```
+
+use mbkk::bench::BenchRunner;
+use mbkk::data::synthetic::{blobs, SyntheticSpec};
+use mbkk::kernels::{CachedGram, Gram, KernelFunction};
+use mbkk::kkmeans::{
+    AssignBackend, CenterWindow, Init, LearningRate, MiniBatchConfig,
+    MiniBatchKernelKMeans, NativeBackend, TruncatedConfig, TruncatedMiniBatchKernelKMeans,
+};
+use mbkk::util::rng::Rng;
+use mbkk::util::timing::Stopwatch;
+
+fn scale() -> f64 {
+    std::env::var("MBKK_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|&s: &f64| s > 0.0)
+        .unwrap_or(0.05)
+}
+
+fn windows(rng: &mut Rng, n: usize, k: usize, tau: usize) -> Vec<CenterWindow> {
+    let mut centers: Vec<CenterWindow> = (0..k).map(|j| CenterWindow::new(j, tau)).collect();
+    for c in centers.iter_mut() {
+        for _ in 0..(tau / 16).max(1) {
+            let pts: Vec<usize> = (0..16).map(|_| rng.below(n)).collect();
+            c.apply_update(0.4, &pts, None);
+        }
+    }
+    centers
+}
+
+fn main() {
+    let mut runner = BenchRunner::new("streaming provider");
+    let s = scale();
+
+    // ---- assignment step: materialized table vs tile-LRU cache -------------
+    let n_cmp = ((160_000.0 * s) as usize).clamp(2_000, 20_000);
+    let (k, b, tau, d) = (10usize, 256usize, 200usize, 16usize);
+    println!("  [setup] assignment comparison at n={n_cmp} (b={b}, k={k}, tau={tau})");
+    let mut rng = Rng::seeded(17);
+    let ds = blobs(&SyntheticSpec::new(n_cmp, d, k).with_separation(4.0), &mut rng);
+    let kernel = KernelFunction::Gaussian { kappa: 2.0 * d as f64 };
+    let mat = Gram::on_the_fly(&ds, kernel).materialize();
+    let cached = CachedGram::new(Gram::on_the_fly(&ds, kernel), 64 << 20);
+    let mut centers = windows(&mut rng, ds.n, k, tau);
+    let batch: Vec<usize> = (0..b).map(|_| rng.below(ds.n)).collect();
+    let mut native = NativeBackend;
+    runner.bench("assign b=256 materialized", || {
+        native.distances(&mat, &batch, &mut centers)
+    });
+    // One priming pass, then the steady-state (warm-cache) rate — the
+    // regime consecutive mini-batch iterations actually see, because the
+    // support set changes by at most one batch per iteration.
+    let _ = native.distances(&cached, &batch, &mut centers);
+    runner.bench("assign b=256 streaming-warm", || {
+        native.distances(&cached, &batch, &mut centers)
+    });
+    println!("  [cache] {}", cached.cache_stats().summary());
+
+    // ---- large-n fits through the streaming provider only ------------------
+    let n_big = ((1_000_000.0 * s) as usize).max(10_000);
+    println!("  [setup] streaming fits at n={n_big} (4·n² = {:.1} GB table avoided)",
+        4.0 * (n_big as f64) * (n_big as f64) / 1e9);
+    let mut rng = Rng::seeded(23);
+    let ds_big = blobs(&SyntheticSpec::new(n_big, d, k).with_separation(3.0), &mut rng);
+    let big = CachedGram::new(Gram::on_the_fly(&ds_big, kernel), 64 << 20);
+
+    let sw = Stopwatch::start();
+    let cfg = TruncatedConfig {
+        k,
+        batch_size: b,
+        tau,
+        max_iters: 20,
+        epsilon: None,
+        learning_rate: LearningRate::Beta,
+        init: Init::KMeansPlusPlusOnSample(2000),
+        weights: None,
+    };
+    let mut fit_rng = Rng::seeded(1);
+    let fit = TruncatedMiniBatchKernelKMeans::new(cfg).fit(&big, &mut fit_rng);
+    runner.record("trunc-fit streaming (20 iters)", sw.secs());
+    println!(
+        "  [trunc] objective {:.5} in {} iters; cache: {}",
+        fit.objective,
+        fit.iterations,
+        big.cache_stats().summary()
+    );
+
+    let sw = Stopwatch::start();
+    let cfg = MiniBatchConfig {
+        k,
+        batch_size: b,
+        max_iters: 5,
+        epsilon: None,
+        learning_rate: LearningRate::Beta,
+        init: Init::KMeansPlusPlusOnSample(2000),
+        weights: None,
+    };
+    let mut fit_rng = Rng::seeded(2);
+    let fit = MiniBatchKernelKMeans::new(cfg).fit(&big, &mut fit_rng);
+    runner.record("mb-fit streaming (5 iters)", sw.secs());
+    println!("  [mb]    objective {:.5} in {} iters", fit.objective, fit.iterations);
+
+    runner.write_csv();
+    runner.write_baseline(&BenchRunner::baseline_path());
+}

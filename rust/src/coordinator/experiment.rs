@@ -1,7 +1,15 @@
 //! The experiment run model: one cell of a paper figure's grid.
+//!
+//! Besides the grid-cell model ([`RunSpec`] → [`RunOutcome`]), this module
+//! owns the **gram realization policy** ([`GramStrategy`]): whether a run's
+//! kernel is materialized into a dense n×n table (the paper's protocol,
+//! fine up to the [`DEFAULT_MAX_TABLE_BYTES`] threshold) or served by the
+//! streaming tile-LRU provider (`O(n·d + cache)` memory, the path that
+//! unlocks million-point runs). Algorithms only ever see
+//! `&dyn KernelProvider`, so the choice is made once, here.
 
 use crate::data::{registry, Dataset};
-use crate::kernels::{graph, sigma, Gram, KernelFunction};
+use crate::kernels::{graph, sigma, CachedGram, CacheStats, Gram, KernelFunction, KernelProvider};
 use crate::kkmeans::{
     FullBatchConfig, FullBatchKernelKMeans, Init, LearningRate, MiniBatchConfig,
     MiniBatchKernelKMeans, TruncatedConfig, TruncatedMiniBatchKernelKMeans,
@@ -43,13 +51,33 @@ impl KernelSpec {
         }
     }
 
-    /// Build the gram provider; returns (gram, build seconds). Feature
-    /// kernels are *materialized* so every algorithm pays only lookups —
-    /// this matches the paper's protocol, which precomputes the kernel
-    /// matrix and reports that cost as the black bars.
+    /// Build a fully *materialized* gram; returns (gram, build seconds).
+    /// This matches the paper's protocol, which precomputes the kernel
+    /// matrix and reports that cost as the black bars. The figure driver
+    /// uses it to share one table across a whole grid; scale-sensitive
+    /// paths go through [`KernelSpec::build_with`] instead.
     pub fn build(&self, ds: &Dataset, rng: &mut Rng) -> (Gram<'static>, f64) {
         let sw = Stopwatch::start();
-        let gram = match *self {
+        let gram = match self.build_with(ds, rng, GramStrategy::Materialize).0 {
+            BuiltGram::Materialized(g) => g,
+            BuiltGram::Streaming(_) => unreachable!("Materialize never streams"),
+        };
+        (gram, sw.secs())
+    }
+
+    /// Build the gram provider under a [`GramStrategy`]; returns the built
+    /// provider and the build seconds. Feature kernels honour the strategy
+    /// (materialize vs stream); graph kernels are dense n×n by construction
+    /// and always materialize (forcing `Stream` for them panics with a
+    /// clear message — their O(n²) build cost dwarfs any table saving).
+    pub fn build_with<'a>(
+        &self,
+        ds: &'a Dataset,
+        rng: &mut Rng,
+        strategy: GramStrategy,
+    ) -> (BuiltGram<'a>, f64) {
+        let sw = Stopwatch::start();
+        let built = match *self {
             KernelSpec::Gaussian { multiplier } => {
                 let kappa = sigma::kappa_heuristic_with(
                     ds,
@@ -57,12 +85,23 @@ impl KernelSpec {
                     sigma::DEFAULT_PAIR_SAMPLES,
                     multiplier,
                 );
-                Gram::on_the_fly(ds, KernelFunction::Gaussian { kappa }).materialize()
+                let fly = Gram::on_the_fly(ds, KernelFunction::Gaussian { kappa });
+                if strategy.materializes(ds.n) {
+                    BuiltGram::Materialized(fly.materialize())
+                } else {
+                    BuiltGram::Streaming(CachedGram::new(fly, strategy.cache_bytes()))
+                }
             }
-            KernelSpec::Knn { neighbors } => graph::knn_kernel(ds, neighbors),
-            KernelSpec::Heat { neighbors, t } => graph::heat_kernel(ds, neighbors, t),
+            KernelSpec::Knn { neighbors } => {
+                check_graph_kernel_feasible("knn", ds.n, strategy);
+                BuiltGram::Materialized(graph::knn_kernel(ds, neighbors))
+            }
+            KernelSpec::Heat { neighbors, t } => {
+                check_graph_kernel_feasible("heat", ds.n, strategy);
+                BuiltGram::Materialized(graph::heat_kernel(ds, neighbors, t))
+            }
         };
-        (gram, sw.secs())
+        (built, sw.secs())
     }
 
     /// The Gaussian κ for this dataset (used by the XLA backend path, which
@@ -76,6 +115,150 @@ impl KernelSpec {
                 multiplier,
             )),
             _ => None,
+        }
+    }
+}
+
+/// Fail fast instead of attempting a multi-TB allocation: graph kernels
+/// are dense n×n by construction, so explicit `Stream` is contradictory
+/// and an `Auto` run whose table would blow the budget must error *before*
+/// `knn_adjacency` starts its O(n²) build, not OOM inside it.
+fn check_graph_kernel_feasible(kernel: &str, n: usize, strategy: GramStrategy) {
+    assert!(
+        !matches!(strategy, GramStrategy::Stream { .. }),
+        "--stream is not supported for the {kernel} kernel: graph kernels \
+         are built as dense n×n matrices regardless (run without --stream)"
+    );
+    assert!(
+        strategy.materializes(n),
+        "the {kernel} kernel over n={n} points needs a dense n×n matrix \
+         ({:.1} GB) exceeding the configured table budget; graph kernels \
+         cannot stream — reduce --scale, use a feature kernel \
+         (--kernel gaussian), or force the dense build with --materialize",
+        4.0 * (n as f64) * (n as f64) / 1e9
+    );
+}
+
+/// Largest dense kernel table [`GramStrategy::Auto`] will materialize:
+/// 2 GiB of f32, i.e. n ≈ 23k. Above it the streaming tile-LRU provider
+/// serves the run in `O(n·d + cache)` memory.
+pub const DEFAULT_MAX_TABLE_BYTES: usize = 2 << 30;
+
+/// Default tile-LRU cache budget (MiB) for streaming runs.
+pub const DEFAULT_CACHE_MB: usize = 64;
+
+/// How a run's kernel access is realized (the n-threshold policy that
+/// replaces the unconditional `Gram::materialize()` of earlier revisions).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GramStrategy {
+    /// Materialize when the n×n f32 table fits `max_table_bytes`; stream
+    /// through a `cache_mb`-MiB tile-LRU cache otherwise.
+    Auto {
+        /// Largest table the policy will allocate, in bytes.
+        max_table_bytes: usize,
+        /// Tile-LRU budget (MiB) for runs that fall on the streaming side.
+        cache_mb: usize,
+    },
+    /// Always materialize (the paper's protocol; O(n²) memory).
+    Materialize,
+    /// Always stream (feature kernels only; `--stream` on the CLI).
+    Stream {
+        /// Tile-LRU budget in MiB.
+        cache_mb: usize,
+    },
+}
+
+impl Default for GramStrategy {
+    fn default() -> Self {
+        GramStrategy::Auto {
+            max_table_bytes: DEFAULT_MAX_TABLE_BYTES,
+            cache_mb: DEFAULT_CACHE_MB,
+        }
+    }
+}
+
+impl GramStrategy {
+    /// Whether a feature kernel over `n` points gets a dense table.
+    pub fn materializes(&self, n: usize) -> bool {
+        match *self {
+            GramStrategy::Materialize => true,
+            GramStrategy::Stream { .. } => false,
+            GramStrategy::Auto { max_table_bytes, .. } => {
+                (n as u128) * (n as u128) * 4 <= max_table_bytes as u128
+            }
+        }
+    }
+
+    /// Tile-LRU budget in bytes for the streaming side of this strategy.
+    pub fn cache_bytes(&self) -> usize {
+        match *self {
+            GramStrategy::Auto { cache_mb, .. } | GramStrategy::Stream { cache_mb } => {
+                cache_mb << 20
+            }
+            GramStrategy::Materialize => DEFAULT_CACHE_MB << 20,
+        }
+    }
+
+    /// Algorithm-aware effective strategy. Full-batch kernel k-means reads
+    /// all n² pairs every iteration, so the dense table is the only
+    /// sensible representation: explicit `Stream` is rejected (it would
+    /// only add cache overhead and ulp-level reduction-order differences),
+    /// and an `Auto` run whose table cannot fit fails fast instead of
+    /// thrashing the tile cache for hours. Mini-batch algorithms pass
+    /// through unchanged.
+    pub fn resolve(self, algo: AlgoSpec, n: usize) -> GramStrategy {
+        if !matches!(algo, AlgoSpec::FullKkm) {
+            return self;
+        }
+        assert!(
+            !matches!(self, GramStrategy::Stream { .. }),
+            "--stream is not supported for full-kkm: every full-batch iteration \
+             touches all n² kernel pairs, so streaming only adds overhead (run \
+             without --stream, or use a mini-batch algorithm)"
+        );
+        assert!(
+            self.materializes(n),
+            "full-kkm over n={n} needs the dense n×n table ({:.1} GB), which \
+             exceeds the table budget — use a mini-batch algorithm at this \
+             scale, or force the table with --materialize",
+            4.0 * (n as f64) * (n as f64) / 1e9
+        );
+        GramStrategy::Materialize
+    }
+}
+
+/// A realized gram provider: either a dense table (detached from the
+/// dataset) or a streaming cached provider borrowing the dataset's
+/// features.
+pub enum BuiltGram<'a> {
+    /// Dense n×n table (O(n²) memory, O(1) lookups).
+    Materialized(Gram<'static>),
+    /// Tile-LRU-cached on-demand evaluation (O(cache) memory).
+    Streaming(CachedGram<'a>),
+}
+
+impl BuiltGram<'_> {
+    /// The provider to hand to algorithms.
+    pub fn provider(&self) -> &dyn KernelProvider {
+        match self {
+            BuiltGram::Materialized(g) => g,
+            BuiltGram::Streaming(c) => c,
+        }
+    }
+
+    /// `"materialized"` or `"streaming"` for logs.
+    pub fn mode(&self) -> &'static str {
+        match self {
+            BuiltGram::Materialized(_) => "materialized",
+            BuiltGram::Streaming(_) => "streaming",
+        }
+    }
+
+    /// Tile-cache counters (streaming mode only).
+    pub fn cache_stats(&self) -> Option<CacheStats> {
+        match self {
+            BuiltGram::Materialized(_) => None,
+            BuiltGram::Streaming(c) => Some(c.cache_stats()),
         }
     }
 }
@@ -199,18 +382,44 @@ pub struct RunOutcome {
     pub gamma: f64,
 }
 
+/// k-means++ candidate cap for coordinator-driven *mini-batch* runs: above
+/// this n the init switches to D² sampling over a uniform subsample (the
+/// paper's "any reasonable initialization" covers this) — full-candidate
+/// k-means++ at streaming scale would pay k·n single-column kernel fetches
+/// before the first iteration even starts. Full-batch runs keep the full
+/// k-means++ (their per-iteration cost dwarfs it).
+pub const INIT_SAMPLE_THRESHOLD: usize = 65_536;
+
+/// Mini-batch init policy: full kernel k-means++ up to
+/// [`INIT_SAMPLE_THRESHOLD`] candidates, sampled k-means++ above it.
+fn default_init(n: usize) -> Init {
+    if n > INIT_SAMPLE_THRESHOLD {
+        Init::KMeansPlusPlusOnSample(INIT_SAMPLE_THRESHOLD)
+    } else {
+        Init::KMeansPlusPlus
+    }
+}
+
 /// Execute a run against a pre-built dataset + gram (lets the figure driver
 /// share one gram across the whole grid). `kernel_secs` is threaded through
 /// into the outcome.
+///
+/// `gram` is `None` exactly when no kernel is needed — the non-kernel
+/// algorithms (`mb-km`, `kmeans`) run straight off the features, and the
+/// "no gram" case is typed instead of sentinel-valued. Kernelized
+/// algorithms panic on `None`.
 pub fn run_with_gram(
     spec: &RunSpec,
     ds: &Dataset,
-    gram: &Gram,
+    gram: Option<&dyn KernelProvider>,
     kernel_secs: f64,
 ) -> RunOutcome {
     let mut rng = Rng::seeded(spec.seed ^ 0x5EED);
     let sw = Stopwatch::start();
     let fit = match spec.algo {
+        // Full batch keeps the paper-protocol full k-means++: its O(n·k)
+        // init is dwarfed by the O(n²) iterations, and sampling would
+        // change results for forced large-n materialized runs.
         AlgoSpec::FullKkm => FullBatchKernelKMeans::new(FullBatchConfig {
             k: spec.k,
             max_iters: spec.max_iters,
@@ -218,17 +427,17 @@ pub fn run_with_gram(
             init: Init::KMeansPlusPlus,
             weights: None,
         })
-        .fit(gram, &mut rng),
+        .fit(gram.expect("kernelized algorithm requires a gram provider"), &mut rng),
         AlgoSpec::MbKkm(lr) => MiniBatchKernelKMeans::new(MiniBatchConfig {
             k: spec.k,
             batch_size: spec.batch_size,
             max_iters: spec.max_iters,
             epsilon: spec.epsilon,
             learning_rate: lr,
-            init: Init::KMeansPlusPlus,
+            init: default_init(ds.n),
             weights: None,
         })
-        .fit(gram, &mut rng),
+        .fit(gram.expect("kernelized algorithm requires a gram provider"), &mut rng),
         AlgoSpec::TruncKkm(lr) => TruncatedMiniBatchKernelKMeans::new(TruncatedConfig {
             k: spec.k,
             batch_size: spec.batch_size,
@@ -236,10 +445,10 @@ pub fn run_with_gram(
             max_iters: spec.max_iters,
             epsilon: spec.epsilon,
             learning_rate: lr,
-            init: Init::KMeansPlusPlus,
+            init: default_init(ds.n),
             weights: None,
         })
-        .fit(gram, &mut rng),
+        .fit(gram.expect("kernelized algorithm requires a gram provider"), &mut rng),
         AlgoSpec::MbKm(lr) => MiniBatchKMeans::new(MiniBatchKMeansConfig {
             k: spec.k,
             batch_size: spec.batch_size,
@@ -268,27 +477,58 @@ pub fn run_with_gram(
         converged: fit.converged,
         cluster_secs,
         kernel_secs,
-        gamma: gram.gamma(),
+        gamma: gram.map(|g| g.gamma()).unwrap_or(f64::NAN),
     }
 }
 
-/// Execute a fully self-contained run (builds dataset + gram itself).
+/// Execute a fully self-contained run under the default [`GramStrategy`]
+/// (materialize below the table threshold, stream above it).
 pub fn run_one(spec: &RunSpec) -> RunOutcome {
+    run_one_with(spec, GramStrategy::default())
+}
+
+/// [`run_one`] with an explicit gram-realization strategy (the CLI threads
+/// `--stream` / `--cache-mb` through here).
+pub fn run_one_with(spec: &RunSpec, strategy: GramStrategy) -> RunOutcome {
     let ds = registry::load(&spec.dataset, spec.scale, spec.seed);
-    let mut rng = Rng::seeded(spec.seed ^ 0xC0DE);
-    let (gram, kernel_secs) = if spec.algo.is_kernelized() {
-        spec.kernel.build(&ds, &mut rng)
-    } else {
-        (Gram::precomputed("unused", 0, Vec::new()), 0.0)
-    };
+    run_on_dataset(spec, &ds, strategy).0
+}
+
+/// How the gram was realized for a run — the CLI surfaces this next to the
+/// outcome.
+pub struct GramReport {
+    /// Provider display name.
+    pub label: String,
+    /// `"materialized"` or `"streaming"`.
+    pub mode: &'static str,
+    /// Tile-cache counters (streaming mode only).
+    pub cache: Option<CacheStats>,
+}
+
+/// Execute a run against an already-loaded dataset under a strategy —
+/// the single code path behind both [`run_one_with`] and the CLI `run`
+/// subcommand (which loads datasets from CSV too), so the rng derivation,
+/// strategy resolution, and build order can never drift between them.
+/// Returns `None` for the report when the algorithm needs no kernel.
+pub fn run_on_dataset(
+    spec: &RunSpec,
+    ds: &Dataset,
+    strategy: GramStrategy,
+) -> (RunOutcome, Option<GramReport>) {
     if spec.algo.is_kernelized() {
-        run_with_gram(spec, &ds, &gram, kernel_secs)
+        let strategy = strategy.resolve(spec.algo, ds.n);
+        let mut rng = Rng::seeded(spec.seed ^ 0xC0DE);
+        let (built, kernel_secs) = spec.kernel.build_with(ds, &mut rng, strategy);
+        let outcome = run_with_gram(spec, ds, Some(built.provider()), kernel_secs);
+        let report = GramReport {
+            label: built.provider().label(),
+            mode: built.mode(),
+            cache: built.cache_stats(),
+        };
+        (outcome, Some(report))
     } else {
-        // Non-kernel algorithms never touch the gram.
-        let dummy = Gram::precomputed("unused", 0, Vec::new());
-        let mut out = run_with_gram(spec, &ds, &dummy, 0.0);
-        out.gamma = f64::NAN;
-        out
+        // Non-kernel algorithms: no gram is ever built (typed, not dummy).
+        (run_with_gram(spec, ds, None, 0.0), None)
     }
 }
 
@@ -363,5 +603,103 @@ mod tests {
         let b = run_one(&spec);
         assert_eq!(a.ari, b.ari);
         assert_eq!(a.objective, b.objective);
+    }
+
+    #[test]
+    fn auto_policy_thresholds_on_table_bytes() {
+        let auto = GramStrategy::default();
+        assert!(auto.materializes(1000));
+        assert!(auto.materializes(23_000)); // 23k² ×4 ≈ 2.1e9... just below 2^31
+        assert!(!auto.materializes(24_000));
+        assert!(!auto.materializes(1_000_000));
+        assert!(GramStrategy::Materialize.materializes(1_000_000));
+        assert!(!GramStrategy::Stream { cache_mb: 8 }.materializes(100));
+        assert_eq!(GramStrategy::Stream { cache_mb: 8 }.cache_bytes(), 8 << 20);
+    }
+
+    #[test]
+    fn streaming_run_matches_materialized_bit_for_bit() {
+        // The tentpole contract at coordinator level: forcing the streaming
+        // provider must reproduce the materialized run exactly — same
+        // assignments drive the same ARI, and the objective bits agree.
+        for algo in [
+            AlgoSpec::MbKkm(LearningRate::Beta),
+            AlgoSpec::TruncKkm(LearningRate::Beta),
+        ] {
+            let spec = base_spec(algo);
+            let mat = run_one_with(&spec, GramStrategy::Materialize);
+            let stream = run_one_with(&spec, GramStrategy::Stream { cache_mb: 8 });
+            assert_eq!(mat.ari.to_bits(), stream.ari.to_bits(), "{algo:?}");
+            assert_eq!(mat.nmi.to_bits(), stream.nmi.to_bits(), "{algo:?}");
+            assert_eq!(
+                mat.objective.to_bits(),
+                stream.objective.to_bits(),
+                "{algo:?}"
+            );
+            assert_eq!(mat.gamma.to_bits(), stream.gamma.to_bits(), "{algo:?}");
+        }
+    }
+
+    #[test]
+    fn auto_policy_streams_when_table_would_not_fit() {
+        // Shrinking the table budget to nothing forces the streaming path;
+        // the outcome must still be the materialized one, bit for bit.
+        let spec = base_spec(AlgoSpec::TruncKkm(LearningRate::Beta));
+        let forced = run_one_with(
+            &spec,
+            GramStrategy::Auto { max_table_bytes: 0, cache_mb: 4 },
+        );
+        let mat = run_one_with(&spec, GramStrategy::Materialize);
+        assert_eq!(forced.objective.to_bits(), mat.objective.to_bits());
+        assert_eq!(forced.ari.to_bits(), mat.ari.to_bits());
+    }
+
+    #[test]
+    fn non_kernel_runs_build_no_gram() {
+        // The typed no-kernel path: gamma is NaN (nothing to measure) and
+        // kernel_secs is exactly zero because no gram was ever built.
+        let out = run_one(&base_spec(AlgoSpec::Lloyd));
+        assert!(out.gamma.is_nan());
+        assert_eq!(out.kernel_secs, 0.0);
+        assert!(out.ari.is_finite());
+    }
+
+    #[test]
+    #[should_panic(expected = "not supported for the knn kernel")]
+    fn stream_strategy_rejects_graph_kernels() {
+        let mut spec = base_spec(AlgoSpec::TruncKkm(LearningRate::Beta));
+        spec.kernel = KernelSpec::Knn { neighbors: 8 };
+        let _ = run_one_with(&spec, GramStrategy::Stream { cache_mb: 8 });
+    }
+
+    #[test]
+    fn full_batch_always_resolves_to_materialize() {
+        let auto = GramStrategy::default();
+        assert_eq!(
+            auto.resolve(AlgoSpec::FullKkm, 500),
+            GramStrategy::Materialize
+        );
+        // Mini-batch algorithms pass through unchanged.
+        assert_eq!(auto.resolve(AlgoSpec::TruncKkm(LearningRate::Beta), 500), auto);
+        assert_eq!(auto.resolve(AlgoSpec::MbKkm(LearningRate::Beta), 500), auto);
+    }
+
+    #[test]
+    #[should_panic(expected = "not supported for full-kkm")]
+    fn stream_strategy_rejects_full_batch() {
+        let _ = GramStrategy::Stream { cache_mb: 8 }.resolve(AlgoSpec::FullKkm, 500);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot stream")]
+    fn auto_budget_fails_fast_for_oversized_graph_kernels() {
+        // A graph kernel whose dense table blows the Auto budget must error
+        // before the O(n²) adjacency build starts, not OOM inside it.
+        let mut spec = base_spec(AlgoSpec::TruncKkm(LearningRate::Beta));
+        spec.kernel = KernelSpec::Heat { neighbors: 8, t: 10.0 };
+        let _ = run_one_with(
+            &spec,
+            GramStrategy::Auto { max_table_bytes: 0, cache_mb: 4 },
+        );
     }
 }

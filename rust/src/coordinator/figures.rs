@@ -197,7 +197,7 @@ fn run_grid(
                 s.seed = opts.seed.wrapping_add(rep as u64 * 7919);
                 let ds = &ds;
                 let gram = &gram;
-                move || run_with_gram(&s, ds, gram, kernel_secs)
+                move || run_with_gram(&s, ds, Some(gram), kernel_secs)
             })
             .collect();
         let outcomes: Vec<RunOutcome> = par_run_jobs(jobs);

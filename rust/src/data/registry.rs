@@ -17,6 +17,9 @@
 //!   space (images on a low-dimensional manifold; n reduced 70000→10000 so
 //!   the full-batch baseline is feasible; d reduced 784→128).
 //! * `rings` / `moons` — the non-linearly-separable motivating workloads.
+//! * `blobs_1m`        — 1,000,000×16, k=10: the million-point scale
+//!   scenario; only tractable through the streaming kernel provider
+//!   (a dense gram would be 4 TB — see DESIGN.md §6).
 //!
 //! All proxies are deterministic in the seed, standardized, and sized by a
 //! global `scale` factor so CI-time runs can shrink the grid uniformly.
@@ -35,6 +38,7 @@ pub const ALL: &[&str] = &[
     "rings",
     "moons",
     "blobs",
+    "blobs_1m",
 ];
 
 /// The four paper-figure proxies in the paper's plotting order.
@@ -51,6 +55,7 @@ pub fn default_k(name: &str) -> usize {
         "rings" => 3,
         "moons" => 2,
         "blobs" => 5,
+        "blobs_1m" => 10,
         _ => panic!("unknown dataset {name:?}"),
     }
 }
@@ -99,6 +104,18 @@ pub fn load(name: &str, scale: f64, seed: u64) -> Dataset {
         "blobs" => {
             let n = scaled(5000, 5);
             synthetic::blobs(&SyntheticSpec::new(n, 8, 5).with_separation(3.0), &mut rng)
+        }
+        "blobs_1m" => {
+            // The million-point scale scenario (ISSUE 2): a dense n×n gram
+            // would be 4 TB, so this dataset is only tractable through the
+            // streaming provider. Generation is O(n·d) and deterministic.
+            let n = scaled(1_000_000, 10);
+            let mut d = synthetic::blobs(
+                &SyntheticSpec::new(n, 16, 10).with_separation(3.0),
+                &mut rng,
+            );
+            d.name = name.into();
+            d
         }
         other => panic!("unknown dataset {other:?} (known: {ALL:?})"),
     };

@@ -1,0 +1,674 @@
+//! The streaming kernel provider: a bounded, sharded tile-LRU cache over an
+//! on-demand kernel (DESIGN.md §6).
+//!
+//! [`CachedGram`] wraps a base [`Gram`] and serves every access through
+//! [`TileCache`], which memoizes kernel values in fixed-width **tiles**: the
+//! slots `K(i, t·W .. (t+1)·W)` of one row, with `W =` [`CACHE_TILE_COLS`].
+//! Tiles are filled *lazily* (only requested slots are computed; empty
+//! slots carry a NaN sentinel), so scattered support lookups never pay for
+//! unrequested columns, while dense sweeps amortize one map entry over up
+//! to `W` values.
+//!
+//! Eviction is a sharded **two-generation LRU approximation**: each shard
+//! keeps a `hot` and a `cold` hash map, each bounded to half the shard's
+//! tile budget. Fresh tiles enter `cold`; a tile touched a second time is
+//! promoted to `hot`. When `cold` fills it is dropped wholesale; when `hot`
+//! fills it is demoted to `cold` (displacing the previous `cold`). One-touch
+//! scan traffic — e.g. Algorithm 1's full-dataset sweep — therefore churns
+//! only `cold` and can never wash the recurring `K(B, S)` tiles out of
+//! `hot`, which is exactly the reuse pattern the mini-batch algorithms
+//! exhibit (support sets overlap heavily between consecutive batches).
+//!
+//! **Numerical contract.** `CachedGram` quantizes every kernel value to f32
+//! — the same rounding [`Gram::materialize`] applies when it stores the
+//! dense table — and performs its block reductions in the same order as
+//! the materialized fast path. A cache hit returns bit-for-bit the value a
+//! miss would compute, so results never depend on cache state, budget, or
+//! eviction history, and streaming runs are *bit-identical* to materialized
+//! runs (pinned by `tests/prop_stream_equivalence.rs`).
+
+use super::provider::{GatherPlan, KernelProvider};
+use super::{Gram, KernelFunction};
+use crate::data::Dataset;
+use crate::util::parallel::par_rows_mut;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Columns per cached tile. Small enough that scattered support lookups
+/// waste little memory on unfilled slots (slots are lazily computed
+/// anyway), large enough that dense row sweeps amortize the map overhead.
+pub const CACHE_TILE_COLS: usize = 32;
+
+/// Number of independently locked shards; keys hash-distribute across them
+/// so the parallel assignment sweep rarely contends on one mutex.
+const NSHARDS: usize = 64;
+
+/// Estimated per-tile bookkeeping bytes (hash-map entry + box header),
+/// added to the payload when converting a byte budget into a tile budget.
+const TILE_OVERHEAD_BYTES: usize = 48;
+
+/// One lazily-filled tile: `CACHE_TILE_COLS` f32 slots, NaN = not computed.
+type Tile = Box<[f32]>;
+
+/// Counters describing a [`TileCache`]'s behaviour so far.
+#[derive(Clone, Copy, Debug)]
+pub struct CacheStats {
+    /// Values served from a cached slot.
+    pub hits: u64,
+    /// Values computed (and then cached).
+    pub misses: u64,
+    /// Tiles dropped by generation eviction.
+    pub evictions: u64,
+    /// Tiles currently resident across all shards.
+    pub resident_tiles: usize,
+    /// Hard ceiling on resident tiles (2 generations × shard budget).
+    pub max_tiles: usize,
+}
+
+impl CacheStats {
+    /// Fraction of lookups served from cache (0 when nothing was looked up).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// One-line human summary for CLI/bench output.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} hits / {} misses ({:.1}% hit rate), {} / {} tiles resident, {} evicted",
+            self.hits,
+            self.misses,
+            100.0 * self.hit_rate(),
+            self.resident_tiles,
+            self.max_tiles,
+            self.evictions
+        )
+    }
+}
+
+struct Shard {
+    hot: HashMap<u64, Tile>,
+    cold: HashMap<u64, Tile>,
+}
+
+impl Shard {
+    /// Find `key`, promoting a `cold` hit into `hot` (second-touch
+    /// admission). Returns the tile and the number of tiles evicted by any
+    /// generation rotation the promotion triggered.
+    fn lookup(&mut self, key: u64, cap: usize) -> (Option<&mut Tile>, usize) {
+        if self.hot.contains_key(&key) {
+            return (self.hot.get_mut(&key), 0);
+        }
+        if let Some(tile) = self.cold.remove(&key) {
+            let mut evicted = 0;
+            if self.hot.len() >= cap {
+                // Hot generation full: demote it wholesale; the previous
+                // cold generation (minus the tile being promoted) is gone.
+                evicted = self.cold.len();
+                self.cold = std::mem::take(&mut self.hot);
+            }
+            self.hot.insert(key, tile);
+            return (self.hot.get_mut(&key), evicted);
+        }
+        (None, 0)
+    }
+
+    /// Find `key` without promoting (used by the write-back phase so that a
+    /// freshly inserted tile still needs a genuine second touch to reach
+    /// `hot`).
+    fn peek_mut(&mut self, key: u64) -> Option<&mut Tile> {
+        if let Some(t) = self.hot.get_mut(&key) {
+            return Some(t);
+        }
+        self.cold.get_mut(&key)
+    }
+
+    /// Insert a fresh all-NaN tile into `cold`, clearing the generation
+    /// first if it is full. Returns the tile and the evicted count.
+    fn insert_fresh(&mut self, key: u64, cap: usize) -> (&mut Tile, usize) {
+        let mut evicted = 0;
+        if self.cold.len() >= cap {
+            evicted = self.cold.len();
+            self.cold.clear();
+        }
+        let tile: Tile = vec![f32::NAN; CACHE_TILE_COLS].into_boxed_slice();
+        self.cold.insert(key, tile);
+        (self.cold.get_mut(&key).expect("just inserted"), evicted)
+    }
+}
+
+/// Sharded, budget-bounded tile cache (see the module docs for the design).
+pub struct TileCache {
+    shards: Vec<Mutex<Shard>>,
+    /// Per-shard, per-generation tile budget.
+    cap_per_generation: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl TileCache {
+    /// Cache bounded to roughly `budget_bytes` of tile payload + overhead.
+    /// The budget is clamped so every shard can hold at least one tile per
+    /// generation (a zero budget still yields a tiny working cache).
+    pub fn new(budget_bytes: usize) -> TileCache {
+        let tile_bytes = CACHE_TILE_COLS * 4 + TILE_OVERHEAD_BYTES;
+        let budget_tiles = budget_bytes / tile_bytes;
+        let cap_per_generation = (budget_tiles / (2 * NSHARDS)).max(1);
+        TileCache {
+            shards: (0..NSHARDS)
+                .map(|_| Mutex::new(Shard { hot: HashMap::new(), cold: HashMap::new() }))
+                .collect(),
+            cap_per_generation,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    fn shard_of(key: u64) -> usize {
+        // Fibonacci multiply-shift: the top bits mix row and tile index.
+        (key.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 58) as usize % NSHARDS
+    }
+
+    fn key_of(row: usize, ct: usize) -> u64 {
+        debug_assert!(row < (1usize << 37) && ct < (1usize << 27));
+        ((row as u64) << 27) | ct as u64
+    }
+
+    /// Fetch `K(row, cols[g])` into `vals[g]` for a group of columns that
+    /// all live in column-tile `ct` (`cols.len() ≤ CACHE_TILE_COLS` after
+    /// deduplication). Slots not yet cached are computed via `eval` and
+    /// written back. `eval` runs outside the shard lock.
+    pub fn fetch_group(
+        &self,
+        row: usize,
+        ct: usize,
+        cols: &[u32],
+        vals: &mut [f32],
+        eval: &mut dyn FnMut(usize) -> f32,
+    ) {
+        assert_eq!(cols.len(), vals.len());
+        // Hard bound (not debug-only): the miss bookkeeping below is a u64
+        // bitmask, so group width must stay ≤ CACHE_TILE_COLS (< 64).
+        assert!(cols.len() <= CACHE_TILE_COLS, "dedup groups before fetching");
+        debug_assert!(cols.iter().all(|&c| c as usize / CACHE_TILE_COLS == ct));
+        if cols.is_empty() {
+            return;
+        }
+        let key = Self::key_of(row, ct);
+        let si = Self::shard_of(key);
+        let mut missing: u64 = 0;
+        {
+            let mut shard = self.shards[si].lock().expect("cache shard poisoned");
+            let (tile, evicted) = shard.lookup(key, self.cap_per_generation);
+            match tile {
+                Some(tile) => {
+                    for (g, &c) in cols.iter().enumerate() {
+                        let v = tile[c as usize % CACHE_TILE_COLS];
+                        if v.is_nan() {
+                            missing |= 1 << g;
+                        } else {
+                            vals[g] = v;
+                        }
+                    }
+                }
+                None => missing = (1u64 << cols.len()) - 1,
+            }
+            if evicted > 0 {
+                self.evictions.fetch_add(evicted as u64, Ordering::Relaxed);
+            }
+        }
+        let nmiss = missing.count_ones() as u64;
+        self.hits.fetch_add(cols.len() as u64 - nmiss, Ordering::Relaxed);
+        if nmiss == 0 {
+            return;
+        }
+        self.misses.fetch_add(nmiss, Ordering::Relaxed);
+        for (g, &c) in cols.iter().enumerate() {
+            if missing & (1 << g) != 0 {
+                vals[g] = eval(c as usize);
+            }
+        }
+        let mut shard = self.shards[si].lock().expect("cache shard poisoned");
+        // Get-or-insert in two steps (the single-`match` form trips NLL).
+        let mut evicted = 0;
+        if shard.peek_mut(key).is_none() {
+            let (_, ev) = shard.insert_fresh(key, self.cap_per_generation);
+            evicted = ev;
+        }
+        let tile = shard.peek_mut(key).expect("tile present after insert");
+        for (g, &c) in cols.iter().enumerate() {
+            if missing & (1 << g) != 0 {
+                tile[c as usize % CACHE_TILE_COLS] = vals[g];
+            }
+        }
+        drop(shard);
+        if evicted > 0 {
+            self.evictions.fetch_add(evicted as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Snapshot of the cache counters and residency.
+    pub fn stats(&self) -> CacheStats {
+        let mut resident = 0;
+        for shard in &self.shards {
+            let s = shard.lock().expect("cache shard poisoned");
+            resident += s.hot.len() + s.cold.len();
+        }
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            resident_tiles: resident,
+            max_tiles: 2 * self.cap_per_generation * NSHARDS,
+        }
+    }
+}
+
+/// The streaming kernel provider: a base [`Gram`] behind a [`TileCache`],
+/// with every value quantized to f32 (see the module docs for the
+/// numerical contract).
+pub struct CachedGram<'a> {
+    base: Gram<'a>,
+    cache: TileCache,
+    /// f32-quantized diagonal (identical to what a materialized table's
+    /// diagonal would hold).
+    diag: Vec<f64>,
+}
+
+impl<'a> CachedGram<'a> {
+    /// Wrap `base` with a tile cache bounded to `cache_budget_bytes`.
+    pub fn new(base: Gram<'a>, cache_budget_bytes: usize) -> CachedGram<'a> {
+        let n = base.n();
+        let diag: Vec<f64> = (0..n).map(|i| (base.self_k(i) as f32) as f64).collect();
+        CachedGram { base, cache: TileCache::new(cache_budget_bytes), diag }
+    }
+
+    /// Cache behaviour counters (hit rate, residency, evictions).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Quantized kernel value through the cache.
+    fn value(&self, i: usize, j: usize) -> f64 {
+        let mut v = [0.0f32];
+        self.cache.fetch_group(
+            i,
+            j / CACHE_TILE_COLS,
+            &[j as u32],
+            &mut v,
+            &mut |jj| self.base.eval(i, jj) as f32,
+        );
+        v[0] as f64
+    }
+
+    /// Tile-group a column multiset: returns `(ct, col, pos)` sorted by
+    /// `(ct, col)`, where `pos` indexes the original `cols` order. Shared
+    /// by every batch row of a block operation, so it is built once per
+    /// call.
+    fn group_cols(cols: impl Iterator<Item = u32>) -> Vec<(u32, u32, u32)> {
+        let mut groups: Vec<(u32, u32, u32)> = cols
+            .enumerate()
+            .map(|(pos, c)| ((c as usize / CACHE_TILE_COLS) as u32, c, pos as u32))
+            .collect();
+        groups.sort_unstable();
+        groups
+    }
+
+    /// Fetch `K(x, col)` for every grouped position into `dst[pos]`.
+    /// `gcols`/`gvals` are reusable scratch buffers (≤ one tile wide).
+    fn fetch_row_grouped(
+        &self,
+        x: usize,
+        groups: &[(u32, u32, u32)],
+        dst: &mut [f32],
+        gcols: &mut Vec<u32>,
+        gvals: &mut Vec<f32>,
+    ) {
+        let mut i0 = 0;
+        while i0 < groups.len() {
+            let ct = groups[i0].0;
+            let mut i1 = i0;
+            gcols.clear();
+            while i1 < groups.len() && groups[i1].0 == ct {
+                let c = groups[i1].1;
+                if gcols.last() != Some(&c) {
+                    gcols.push(c);
+                }
+                i1 += 1;
+            }
+            gvals.clear();
+            gvals.resize(gcols.len(), 0.0);
+            self.cache.fetch_group(x, ct as usize, gcols, gvals, &mut |j| {
+                self.base.eval(x, j) as f32
+            });
+            // Scatter back: entries with duplicate columns are consecutive
+            // (sorted by (ct, col)), so one pointer walks the dedup list.
+            let mut di = 0;
+            for g in &groups[i0..i1] {
+                if g.1 != gcols[di] {
+                    di += 1;
+                }
+                dst[g.2 as usize] = gvals[di];
+            }
+            i0 = i1;
+        }
+    }
+}
+
+impl KernelProvider for CachedGram<'_> {
+    fn n(&self) -> usize {
+        self.base.n()
+    }
+
+    fn eval(&self, i: usize, j: usize) -> f64 {
+        self.value(i, j)
+    }
+
+    fn self_k(&self, i: usize) -> f64 {
+        self.diag[i]
+    }
+
+    fn label(&self) -> String {
+        format!("{}+tile-lru", self.base.label())
+    }
+
+    fn gamma(&self) -> f64 {
+        self.diag.iter().cloned().fold(0.0f64, f64::max).max(0.0).sqrt()
+    }
+
+    fn feature_kernel(&self) -> Option<(&Dataset, KernelFunction)> {
+        // Exposes the *unquantized* base kernel: an AssignBackend that
+        // routes this to the AOT graph computes from raw features, which
+        // agrees with the native quantized path only statistically (same
+        // tolerance as the existing OnTheFly-vs-XLA contract) — the f32
+        // bit-identity guarantee applies to the native paths only.
+        self.base.feature_kernel()
+    }
+
+    fn plan_gather(&self, cols: &[u32]) -> GatherPlan {
+        GatherPlan {
+            cols: cols.to_vec(),
+            groups: Some(Self::group_cols(cols.iter().copied())),
+        }
+    }
+
+    fn row_gather_planned(&self, x: usize, plan: &GatherPlan, out: &mut [f64]) {
+        assert_eq!(plan.cols.len(), out.len(), "row_gather_planned: bad shape");
+        let Some(groups) = plan.groups.as_ref() else {
+            // Plan built by a different provider: plain per-element path.
+            for (o, &j) in out.iter_mut().zip(plan.cols.iter()) {
+                *o = self.value(x, j as usize);
+            }
+            return;
+        };
+        // Allocation-free per-row walk: the grouping/sort was hoisted into
+        // the plan, and the ≤ 32-wide dedup buffers live on the stack.
+        let mut gcols = [0u32; CACHE_TILE_COLS];
+        let mut gvals = [0.0f32; CACHE_TILE_COLS];
+        let mut i0 = 0;
+        while i0 < groups.len() {
+            let ct = groups[i0].0;
+            let mut i1 = i0;
+            let mut glen = 0;
+            while i1 < groups.len() && groups[i1].0 == ct {
+                let c = groups[i1].1;
+                if glen == 0 || gcols[glen - 1] != c {
+                    gcols[glen] = c;
+                    glen += 1;
+                }
+                i1 += 1;
+            }
+            self.cache.fetch_group(x, ct as usize, &gcols[..glen], &mut gvals[..glen], &mut |j| {
+                self.base.eval(x, j) as f32
+            });
+            let mut di = 0;
+            for g in &groups[i0..i1] {
+                if g.1 != gcols[di] {
+                    di += 1;
+                }
+                out[g.2 as usize] = gvals[di] as f64;
+            }
+            i0 = i1;
+        }
+    }
+
+    fn block_into(&self, rows: &[usize], cols: &[usize], out: &mut [f64]) {
+        let nc = cols.len();
+        assert_eq!(out.len(), rows.len() * nc, "block_into: bad output shape");
+        if out.is_empty() {
+            return;
+        }
+        let groups = Self::group_cols(cols.iter().map(|&c| c as u32));
+        par_rows_mut(out, nc, |r0, chunk| {
+            let mut scratch = vec![0.0f32; nc];
+            let mut gcols = Vec::with_capacity(CACHE_TILE_COLS);
+            let mut gvals = Vec::with_capacity(CACHE_TILE_COLS);
+            for (r, orow) in chunk.chunks_mut(nc).enumerate() {
+                let x = rows[r0 + r];
+                self.fetch_row_grouped(x, &groups, &mut scratch, &mut gcols, &mut gvals);
+                for (o, &v) in orow.iter_mut().zip(scratch.iter()) {
+                    *o = v as f64;
+                }
+            }
+        });
+    }
+
+    fn weighted_cross_into(
+        &self,
+        batch: &[usize],
+        sup_idx: &[u32],
+        sup_w: &[f64],
+        ranges: &[(usize, usize)],
+        out: &mut [f64],
+    ) {
+        let k = ranges.len();
+        assert_eq!(sup_idx.len(), sup_w.len(), "support index/weight mismatch");
+        assert_eq!(out.len(), batch.len() * k, "weighted_cross_into: bad shape");
+        if out.is_empty() {
+            return;
+        }
+        let groups = Self::group_cols(sup_idx.iter().copied());
+        par_rows_mut(out, k, |r0, chunk| {
+            let mut scratch = vec![0.0f32; sup_idx.len()];
+            let mut gcols = Vec::with_capacity(CACHE_TILE_COLS);
+            let mut gvals = Vec::with_capacity(CACHE_TILE_COLS);
+            for (r, orow) in chunk.chunks_mut(k).enumerate() {
+                let x = batch[r0 + r];
+                self.fetch_row_grouped(x, &groups, &mut scratch, &mut gcols, &mut gvals);
+                // Identical accumulation order to the materialized fast
+                // path in `Gram::weighted_cross_into` — part of the
+                // bit-identity contract.
+                for (o, &(s, e)) in orow.iter_mut().zip(ranges.iter()) {
+                    let mut acc = 0.0;
+                    for (&v, &w) in scratch[s..e].iter().zip(&sup_w[s..e]) {
+                        acc += w * v as f64;
+                    }
+                    *o = acc;
+                }
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{blobs, SyntheticSpec};
+    use crate::util::rng::Rng;
+
+    fn fixture(n: usize) -> Dataset {
+        let mut rng = Rng::seeded(91);
+        blobs(&SyntheticSpec::new(n, 5, 3), &mut rng)
+    }
+
+    fn cached(ds: &Dataset, budget: usize) -> CachedGram<'_> {
+        CachedGram::new(Gram::on_the_fly(ds, KernelFunction::Gaussian { kappa: 6.0 }), budget)
+    }
+
+    #[test]
+    fn values_match_materialized_bit_for_bit() {
+        let ds = fixture(80);
+        let mat = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 6.0 }).materialize();
+        let cg = cached(&ds, 1 << 20);
+        for i in 0..ds.n {
+            for j in 0..ds.n {
+                assert_eq!(cg.eval(i, j).to_bits(), Gram::eval(&mat, i, j).to_bits(), "({i},{j})");
+            }
+            assert_eq!(cg.self_k(i).to_bits(), Gram::self_k(&mat, i).to_bits());
+        }
+        assert_eq!(KernelProvider::gamma(&cg).to_bits(), Gram::gamma(&mat).to_bits());
+    }
+
+    #[test]
+    fn hits_do_not_change_values() {
+        // Every repeated access must return the first-computed value even
+        // after evictions (determinism contract).
+        let ds = fixture(60);
+        let cg = cached(&ds, 0); // minimal cache: max eviction churn
+        let mut first = Vec::new();
+        for i in 0..ds.n {
+            first.push(cg.eval(i, (i * 7) % ds.n));
+        }
+        for _round in 0..3 {
+            for i in 0..ds.n {
+                assert_eq!(cg.eval(i, (i * 7) % ds.n).to_bits(), first[i].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn repeated_block_access_hits_cache() {
+        let ds = fixture(100);
+        let cg = cached(&ds, 4 << 20);
+        let rows: Vec<usize> = (0..20).collect();
+        let cols: Vec<usize> = (30..80).collect();
+        let mut out = vec![0.0f64; rows.len() * cols.len()];
+        cg.block_into(&rows, &cols, &mut out);
+        let cold = cg.cache_stats();
+        assert_eq!(cold.hits, 0, "first pass must be all misses");
+        assert_eq!(cold.misses, (rows.len() * cols.len()) as u64);
+        cg.block_into(&rows, &cols, &mut out);
+        let warm = cg.cache_stats();
+        assert_eq!(warm.misses, cold.misses, "second pass must not recompute");
+        assert_eq!(warm.hits, cold.misses);
+        assert!(warm.hit_rate() > 0.49);
+    }
+
+    #[test]
+    fn residency_stays_within_budget_under_churn() {
+        let ds = fixture(400);
+        let budget = 16 * 1024; // tiny: forces constant generation turnover
+        let cg = cached(&ds, budget);
+        let mut rng = Rng::seeded(4);
+        for _ in 0..50 {
+            let rows: Vec<usize> = (0..30).map(|_| rng.below(ds.n)).collect();
+            let cols: Vec<usize> = (0..60).map(|_| rng.below(ds.n)).collect();
+            let mut out = vec![0.0f64; rows.len() * cols.len()];
+            cg.block_into(&rows, &cols, &mut out);
+            let st = cg.cache_stats();
+            assert!(
+                st.resident_tiles <= st.max_tiles,
+                "resident {} > cap {}",
+                st.resident_tiles,
+                st.max_tiles
+            );
+        }
+        assert!(cg.cache_stats().evictions > 0, "tiny budget must evict");
+    }
+
+    #[test]
+    fn weighted_cross_matches_gram_with_duplicates() {
+        let ds = fixture(120);
+        let fly = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 6.0 });
+        let mat = fly.materialize();
+        let cg = cached(&ds, 1 << 20);
+        let mut rng = Rng::seeded(8);
+        let batch: Vec<usize> = (0..15).map(|_| rng.below(ds.n)).collect();
+        // Support with heavy duplication (same point repeated within and
+        // across tiles) — exercises the dedup scatter.
+        let mut sup_idx: Vec<u32> = (0..40).map(|_| rng.below(ds.n) as u32).collect();
+        sup_idx[5] = sup_idx[4];
+        sup_idx[6] = sup_idx[4];
+        let sup_w: Vec<f64> = (0..40).map(|_| rng.f64()).collect();
+        let ranges = [(0usize, 7usize), (7, 7), (7, 40)];
+        let mut got = vec![f64::NAN; batch.len() * ranges.len()];
+        cg.weighted_cross_into(&batch, &sup_idx, &sup_w, &ranges, &mut got);
+        let mut want = vec![f64::NAN; batch.len() * ranges.len()];
+        Gram::weighted_cross_into(&mat, &batch, &sup_idx, &sup_w, &ranges, &mut want);
+        for (g, w) in got.iter().zip(want.iter()) {
+            assert_eq!(g.to_bits(), w.to_bits(), "cached vs materialized cross");
+        }
+    }
+
+    #[test]
+    fn concurrent_access_is_consistent() {
+        // Hammer one cache from the parallel block path and check against
+        // direct evaluation afterwards.
+        let ds = fixture(300);
+        let cg = cached(&ds, 64 * 1024);
+        let rows: Vec<usize> = (0..ds.n).collect();
+        let cols: Vec<usize> = (0..ds.n).step_by(3).collect();
+        let mut out = vec![0.0f64; rows.len() * cols.len()];
+        cg.block_into(&rows, &cols, &mut out);
+        let base = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 6.0 });
+        for (r, &i) in rows.iter().enumerate().step_by(17) {
+            for (c, &j) in cols.iter().enumerate().step_by(13) {
+                let want = (Gram::eval(&base, i, j) as f32) as f64;
+                assert_eq!(out[r * cols.len() + c].to_bits(), want.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn stats_summary_is_humane() {
+        let ds = fixture(50);
+        let cg = cached(&ds, 1 << 20);
+        let _ = cg.eval(0, 1);
+        let _ = cg.eval(0, 1);
+        let s = cg.cache_stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert!(s.summary().contains("50.0% hit rate"), "{}", s.summary());
+    }
+
+    #[test]
+    fn planned_gather_matches_eval_with_duplicates() {
+        let ds = fixture(150);
+        let cg = cached(&ds, 1 << 20);
+        let mut rng = Rng::seeded(13);
+        // Unsorted multiset with duplicates across and within tiles.
+        let mut cols: Vec<u32> = (0..50).map(|_| rng.below(ds.n) as u32).collect();
+        cols[7] = cols[3];
+        cols[9] = cols[3];
+        let plan = cg.plan_gather(&cols);
+        let mut out = vec![f64::NAN; cols.len()];
+        for x in [0usize, 42, 149] {
+            cg.row_gather_planned(x, &plan, &mut out);
+            for (m, &c) in cols.iter().enumerate() {
+                assert_eq!(out[m].to_bits(), cg.eval(x, c as usize).to_bits(), "m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn wraps_precomputed_grams_transparently() {
+        // The cache layer must be a no-op wrapper over an already
+        // materialized table (used by the graph-kernel equivalence tests).
+        let data = vec![1.0f32, 0.25, 0.25, 0.5];
+        let base = Gram::precomputed("t", 2, data.clone());
+        let cg = CachedGram::new(Gram::precomputed("t", 2, data), 1 << 16);
+        for i in 0..2 {
+            for j in 0..2 {
+                assert_eq!(cg.eval(i, j).to_bits(), Gram::eval(&base, i, j).to_bits());
+            }
+        }
+        assert_eq!(cg.self_k(1), 0.5);
+        assert!(cg.label().contains("tile-lru"));
+    }
+}

@@ -315,6 +315,17 @@ impl<'a> Gram<'a> {
         }
     }
 
+    /// The underlying (dataset, closed-form kernel) pair for feature
+    /// kernels; `None` for precomputed tables. The XLA backend uses this to
+    /// marshal raw features into the AOT graph without matching on the
+    /// concrete provider type.
+    pub fn feature_kernel(&self) -> Option<(&Dataset, KernelFunction)> {
+        match self {
+            Gram::OnTheFly { ds, func, .. } => Some((ds, *func)),
+            Gram::Precomputed { .. } => None,
+        }
+    }
+
     /// Default column-tile width for this provider.
     fn default_tile(&self) -> usize {
         match self {

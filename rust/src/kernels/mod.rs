@@ -1,13 +1,19 @@
-//! Kernel substrate: kernel functions, gram providers, the graph kernels
-//! (k-nn and heat) from the paper's Appendix C, the σ/κ bandwidth heuristic
+//! Kernel substrate: kernel functions, gram providers behind the
+//! [`KernelProvider`] abstraction (on-the-fly, materialized, and the
+//! streaming tile-LRU-cached [`CachedGram`]), the graph kernels (k-nn and
+//! heat) from the paper's Appendix C, the σ/κ bandwidth heuristic
 //! (Wang et al. 2019), and the γ = max‖φ(x)‖ statistic that parameterizes
 //! Theorem 1.
 
+mod cache;
 mod function;
 mod gram;
 pub mod graph;
+mod provider;
 pub mod sigma;
 pub mod tile;
 
+pub use cache::{CacheStats, CachedGram, TileCache, CACHE_TILE_COLS};
 pub use function::KernelFunction;
 pub use gram::Gram;
+pub use provider::{GatherPlan, KernelProvider};

@@ -1,0 +1,289 @@
+//! [`KernelProvider`]: the uniform kernel-access abstraction every
+//! algorithm runs against.
+//!
+//! The trait unifies the three access modes of DESIGN.md §6:
+//!
+//! * **on-the-fly** — [`Gram::OnTheFly`] evaluates `K(x_i, x_j)` from
+//!   features on demand (zero memory beyond the dataset),
+//! * **materialized** — [`Gram::Precomputed`] reads a dense n×n f32 table
+//!   (O(n²) memory, O(1) lookups; the paper's protocol),
+//! * **streaming** — [`super::CachedGram`] evaluates on demand through a
+//!   bounded sharded tile-LRU cache (O(cache budget) memory, amortized
+//!   lookups for the hot `K(B, S)` tiles that recur across iterations).
+//!
+//! Algorithms, backends, and the experiment coordinator accept
+//! `&dyn KernelProvider`, so which mode serves a run is a *policy* decision
+//! (`coordinator::experiment::GramStrategy`) instead of a hard-coded
+//! `Gram::materialize()` call — the change that lifts the O(n²) memory wall
+//! off every mini-batch variant.
+//!
+//! Providers must be [`Sync`]: the hot paths fan batch rows out over scoped
+//! worker threads that share one provider reference.
+
+use super::{Gram, KernelFunction};
+use crate::data::Dataset;
+use crate::util::parallel::par_rows_mut;
+
+/// Uniform access to the (implicit) kernel matrix of a dataset.
+///
+/// The four required methods are the point-wise core; the block operations
+/// have straightforward default implementations that providers override
+/// with tiled/cached engines. Implementations must be deterministic: the
+/// value of `K(i, j)` may never depend on access history (the streaming
+/// provider's cache is a pure memoization layer).
+pub trait KernelProvider: Sync {
+    /// Number of points.
+    fn n(&self) -> usize;
+
+    /// Kernel value `K(x_i, x_j)`.
+    fn eval(&self, i: usize, j: usize) -> f64;
+
+    /// `K(x_i, x_i)` (providers cache the diagonal).
+    fn self_k(&self, i: usize) -> f64;
+
+    /// Display name for reports.
+    fn label(&self) -> String;
+
+    /// γ = max_i ‖φ(x_i)‖ = max_i √K(x_i,x_i) — the parameter of Theorem 1.
+    fn gamma(&self) -> f64 {
+        let mut m = 0.0f64;
+        for i in 0..self.n() {
+            m = m.max(self.self_k(i));
+        }
+        m.max(0.0).sqrt()
+    }
+
+    /// Fast path: the full i-th row as an f32 slice, available only for
+    /// materialized tables. Hot loops hoist this outside their inner loop
+    /// to skip per-element dispatch.
+    fn row_slice(&self, _i: usize) -> Option<&[f32]> {
+        None
+    }
+
+    /// The underlying (dataset, closed-form kernel) pair for providers that
+    /// evaluate a feature kernel — `None` for precomputed tables. The XLA
+    /// backend uses this to marshal raw features into the AOT graph.
+    fn feature_kernel(&self) -> Option<(&Dataset, KernelFunction)> {
+        None
+    }
+
+    /// Build a reusable gather plan for a fixed column multiset. Pair with
+    /// [`KernelProvider::row_gather_planned`] in loops that gather the
+    /// *same* columns for many rows (Algorithm 1's fused px sweep): any
+    /// per-call grouping/sorting a provider needs is hoisted into the plan
+    /// and paid once, not once per row. Default: stores the columns
+    /// verbatim.
+    fn plan_gather(&self, cols: &[u32]) -> GatherPlan {
+        GatherPlan { cols: cols.to_vec(), groups: None }
+    }
+
+    /// Gather one row's scattered kernel values through a plan from
+    /// [`KernelProvider::plan_gather`]: `out[m] = K(x, cols[m])` in the
+    /// plan's column order — values and order identical to per-element
+    /// [`KernelProvider::eval`]. Default: per-element evaluation.
+    fn row_gather_planned(&self, x: usize, plan: &GatherPlan, out: &mut [f64]) {
+        assert_eq!(plan.cols.len(), out.len(), "row_gather_planned: bad shape");
+        for (o, &j) in out.iter_mut().zip(plan.cols.iter()) {
+            *o = self.eval(x, j as usize);
+        }
+    }
+
+    /// Fill `out` (row-major, `rows.len() × cols.len()`) with the dense
+    /// block `K(rows, cols)`. Default: parallel point-wise evaluation.
+    fn block_into(&self, rows: &[usize], cols: &[usize], out: &mut [f64]) {
+        let nc = cols.len();
+        assert_eq!(out.len(), rows.len() * nc, "block_into: bad output shape");
+        if out.is_empty() {
+            return;
+        }
+        par_rows_mut(out, nc, |r0, chunk| {
+            for (r, orow) in chunk.chunks_mut(nc).enumerate() {
+                let i = rows[r0 + r];
+                for (o, &j) in orow.iter_mut().zip(cols.iter()) {
+                    *o = self.eval(i, j);
+                }
+            }
+        });
+    }
+
+    /// Fused weighted cross-term contraction for the assignment step:
+    /// given the concatenated support of `k` centers — dataset indices
+    /// `sup_idx` with coefficients `sup_w`, center `j` owning the slice
+    /// `ranges[j] = (start, end)` — fills
+    /// `out[r·k + j] = Σ_{m ∈ ranges[j]} w_m · K(batch[r], sup_idx[m])`.
+    /// Default: parallel point-wise evaluation in support order.
+    fn weighted_cross_into(
+        &self,
+        batch: &[usize],
+        sup_idx: &[u32],
+        sup_w: &[f64],
+        ranges: &[(usize, usize)],
+        out: &mut [f64],
+    ) {
+        let k = ranges.len();
+        assert_eq!(sup_idx.len(), sup_w.len(), "support index/weight mismatch");
+        assert_eq!(out.len(), batch.len() * k, "weighted_cross_into: bad shape");
+        if out.is_empty() {
+            return;
+        }
+        par_rows_mut(out, k, |r0, chunk| {
+            for (r, orow) in chunk.chunks_mut(k).enumerate() {
+                let x = batch[r0 + r];
+                for (o, &(s, e)) in orow.iter_mut().zip(ranges.iter()) {
+                    let mut acc = 0.0;
+                    for (&y, &w) in sup_idx[s..e].iter().zip(&sup_w[s..e]) {
+                        acc += w * self.eval(x, y as usize);
+                    }
+                    *o = acc;
+                }
+            }
+        });
+    }
+}
+
+/// A reusable column-gather plan (see [`KernelProvider::plan_gather`]):
+/// the column multiset plus whatever provider-specific precomputation the
+/// builder chose to hoist (the streaming provider stores its sorted tile
+/// grouping here so the per-row hot path never re-sorts).
+pub struct GatherPlan {
+    pub(super) cols: Vec<u32>,
+    /// `(tile, col, pos)` sorted by `(tile, col)` — present when built by
+    /// the streaming tile-LRU provider, ignored by everything else.
+    pub(super) groups: Option<Vec<(u32, u32, u32)>>,
+}
+
+impl KernelProvider for Gram<'_> {
+    fn n(&self) -> usize {
+        Gram::n(self)
+    }
+
+    fn eval(&self, i: usize, j: usize) -> f64 {
+        Gram::eval(self, i, j)
+    }
+
+    fn self_k(&self, i: usize) -> f64 {
+        Gram::self_k(self, i)
+    }
+
+    fn label(&self) -> String {
+        Gram::label(self)
+    }
+
+    fn gamma(&self) -> f64 {
+        Gram::gamma(self)
+    }
+
+    fn row_slice(&self, i: usize) -> Option<&[f32]> {
+        Gram::row_slice(self, i)
+    }
+
+    fn feature_kernel(&self) -> Option<(&Dataset, KernelFunction)> {
+        Gram::feature_kernel(self)
+    }
+
+    fn block_into(&self, rows: &[usize], cols: &[usize], out: &mut [f64]) {
+        Gram::block_into(self, rows, cols, out)
+    }
+
+    fn weighted_cross_into(
+        &self,
+        batch: &[usize],
+        sup_idx: &[u32],
+        sup_w: &[f64],
+        ranges: &[(usize, usize)],
+        out: &mut [f64],
+    ) {
+        Gram::weighted_cross_into(self, batch, sup_idx, sup_w, ranges, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{blobs, SyntheticSpec};
+    use crate::util::rng::Rng;
+
+    /// A minimal provider exercising the trait defaults: a linear kernel
+    /// evaluated straight off a dataset.
+    struct PlainLinear<'a>(&'a Dataset);
+
+    impl KernelProvider for PlainLinear<'_> {
+        fn n(&self) -> usize {
+            self.0.n
+        }
+
+        fn eval(&self, i: usize, j: usize) -> f64 {
+            KernelFunction::Linear.eval(self.0.row(i), self.0.row(j))
+        }
+
+        fn self_k(&self, i: usize) -> f64 {
+            self.eval(i, i)
+        }
+
+        fn label(&self) -> String {
+            "plain-linear".into()
+        }
+    }
+
+    fn fixture() -> Dataset {
+        let mut rng = Rng::seeded(31);
+        blobs(&SyntheticSpec::new(30, 3, 2), &mut rng)
+    }
+
+    #[test]
+    fn default_gamma_scans_diagonal() {
+        let ds = fixture();
+        let p = PlainLinear(&ds);
+        let want = (0..ds.n)
+            .map(|i| p.self_k(i))
+            .fold(0.0f64, f64::max)
+            .sqrt();
+        assert!((KernelProvider::gamma(&p) - want).abs() < 1e-12);
+        assert!(p.row_slice(0).is_none());
+        assert!(p.feature_kernel().is_none());
+    }
+
+    #[test]
+    fn default_block_and_cross_match_pointwise() {
+        let ds = fixture();
+        let p = PlainLinear(&ds);
+        let rows = [0usize, 7, 11];
+        let cols = [3usize, 4, 9, 20];
+        let mut blk = vec![0.0f64; rows.len() * cols.len()];
+        p.block_into(&rows, &cols, &mut blk);
+        for (r, &i) in rows.iter().enumerate() {
+            for (c, &j) in cols.iter().enumerate() {
+                assert_eq!(blk[r * cols.len() + c], p.eval(i, j));
+            }
+        }
+        let batch = [1usize, 2, 5];
+        let sup_idx = [0u32, 3, 6, 9];
+        let sup_w = [0.5f64, 0.25, 0.125, 0.0625];
+        let ranges = [(0usize, 2usize), (2, 4)];
+        let mut out = vec![f64::NAN; batch.len() * ranges.len()];
+        p.weighted_cross_into(&batch, &sup_idx, &sup_w, &ranges, &mut out);
+        for (r, &x) in batch.iter().enumerate() {
+            for (j, &(s, e)) in ranges.iter().enumerate() {
+                let want: f64 = (s..e)
+                    .map(|m| sup_w[m] * p.eval(x, sup_idx[m] as usize))
+                    .sum();
+                assert!((out[r * ranges.len() + j] - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn gram_delegates_through_the_trait() {
+        let ds = fixture();
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 4.0 });
+        let dynp: &dyn KernelProvider = &gram;
+        assert_eq!(dynp.n(), ds.n);
+        assert_eq!(dynp.eval(2, 9), Gram::eval(&gram, 2, 9));
+        assert_eq!(dynp.self_k(4), 1.0);
+        assert!(dynp.feature_kernel().is_some());
+        let mat = gram.materialize();
+        let dynm: &dyn KernelProvider = &mat;
+        assert!(dynm.row_slice(3).is_some());
+        assert!(dynm.feature_kernel().is_none());
+    }
+}

@@ -8,7 +8,8 @@
 //! This is the `Õ(kb²)` compute hot-spot, so it is pluggable:
 //!
 //! * [`NativeBackend`] — pure Rust, parallel over batch rows. Always
-//!   available, works with any [`Gram`].
+//!   available, works with any [`KernelProvider`] (on-the-fly,
+//!   materialized, or the streaming tile-LRU-cached provider).
 //! * [`crate::runtime::XlaBackend`] — executes the AOT-compiled JAX/Pallas
 //!   graph (Layer 1/2) through PJRT; available for feature kernels when a
 //!   matching artifact was built by `make artifacts`.
@@ -16,7 +17,7 @@
 //! Backends must agree numerically (integration tests cross-check them).
 
 use super::state::CenterWindow;
-use crate::kernels::Gram;
+use crate::kernels::KernelProvider;
 
 /// Computes batch-to-center squared distances for Algorithm 2.
 pub trait AssignBackend {
@@ -24,7 +25,7 @@ pub trait AssignBackend {
     /// Distances are squared, clamped at 0 against floating-point rounding.
     fn distances(
         &mut self,
-        gram: &Gram,
+        gram: &dyn KernelProvider,
         batch: &[usize],
         centers: &mut [CenterWindow],
     ) -> Vec<f64>;
@@ -37,8 +38,8 @@ pub trait AssignBackend {
 ///
 /// Gathers every center's support once into one concatenated
 /// structure-of-arrays buffer, caches `⟨Ĉ,Ĉ⟩` in the window, and runs the
-/// cross-term contraction `K(B, S)·w` through the tiled engine
-/// ([`Gram::weighted_cross_into`]): parallel over batch rows, tiled over
+/// cross-term contraction `K(B, S)·w` through the provider's engine
+/// ([`KernelProvider::weighted_cross_into`]): parallel over batch rows, tiled over
 /// support columns so each tile of support features stays cache-resident
 /// across the whole batch chunk (DESIGN.md §5).
 #[derive(Debug, Default, Clone)]
@@ -47,7 +48,7 @@ pub struct NativeBackend;
 impl AssignBackend for NativeBackend {
     fn distances(
         &mut self,
-        gram: &Gram,
+        gram: &dyn KernelProvider,
         batch: &[usize],
         centers: &mut [CenterWindow],
     ) -> Vec<f64> {
@@ -114,7 +115,7 @@ pub fn argmin_rows(dist: &[f64], k: usize) -> (Vec<usize>, Vec<f64>) {
 mod tests {
     use super::*;
     use crate::data::synthetic::{blobs, SyntheticSpec};
-    use crate::kernels::KernelFunction;
+    use crate::kernels::{Gram, KernelFunction};
     use crate::util::rng::Rng;
 
     #[test]

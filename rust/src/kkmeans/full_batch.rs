@@ -13,7 +13,7 @@
 use super::backend::argmin_rows;
 use super::init::choose_centers;
 use super::{FitResult, Init};
-use crate::kernels::Gram;
+use crate::kernels::KernelProvider;
 use crate::util::parallel::par_rows_mut;
 use crate::util::rng::Rng;
 use crate::util::timing::{Profiler, Stopwatch};
@@ -61,7 +61,7 @@ impl FullBatchKernelKMeans {
     }
 
     /// Run Lloyd's algorithm in feature space.
-    pub fn fit(&self, gram: &Gram, rng: &mut Rng) -> FitResult {
+    pub fn fit(&self, gram: &dyn KernelProvider, rng: &mut Rng) -> FitResult {
         let n = gram.n();
         let k = self.cfg.k;
         assert!(k >= 1 && k <= n);
@@ -231,7 +231,7 @@ impl FullBatchKernelKMeans {
 mod tests {
     use super::*;
     use crate::data::synthetic::{blobs, rings, SyntheticSpec};
-    use crate::kernels::KernelFunction;
+    use crate::kernels::{Gram, KernelFunction};
     use crate::metrics::ari;
 
     #[test]

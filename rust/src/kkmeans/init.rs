@@ -12,11 +12,16 @@
 //! approximation guarantee used by Theorem 1(3).
 
 use super::Init;
-use crate::kernels::Gram;
+use crate::kernels::KernelProvider;
 use crate::util::rng::Rng;
 
 /// Choose `k` initial center *point indices* according to `method`.
-pub fn choose_centers(gram: &Gram, k: usize, method: Init, rng: &mut Rng) -> Vec<usize> {
+pub fn choose_centers(
+    gram: &dyn KernelProvider,
+    k: usize,
+    method: Init,
+    rng: &mut Rng,
+) -> Vec<usize> {
     let n = gram.n();
     assert!(k >= 1 && k <= n, "k={k} out of range for n={n}");
     match method {
@@ -31,17 +36,28 @@ pub fn choose_centers(gram: &Gram, k: usize, method: Init, rng: &mut Rng) -> Vec
 }
 
 /// Kernel k-means++ D² sampling over a candidate index set.
-/// Cost: O(|candidates| · k) kernel evaluations.
-fn kmeanspp(gram: &Gram, candidates: Vec<usize>, k: usize, rng: &mut Rng) -> Vec<usize> {
+/// Cost: O(|candidates| · k) kernel evaluations. The per-center distance
+/// sweep gathers `K(candidates, center)` through the provider's block
+/// engine — parallel over candidates, and tile-grouped on the streaming
+/// provider — with values identical to per-element [`feature_sqdist`].
+fn kmeanspp(
+    gram: &dyn KernelProvider,
+    candidates: Vec<usize>,
+    k: usize,
+    rng: &mut Rng,
+) -> Vec<usize> {
     let m = candidates.len();
     assert!(k <= m);
     let mut centers = Vec::with_capacity(k);
     let first = candidates[rng.below(m)];
     centers.push(first);
+    let mut col = vec![0.0f64; m];
+    gram.block_into(&candidates, &[first], &mut col);
     // min squared distance of each candidate to the chosen centers
     let mut min_d2: Vec<f64> = candidates
         .iter()
-        .map(|&x| feature_sqdist(gram, x, first))
+        .zip(col.iter())
+        .map(|(&x, &kxy)| sqdist_from_cross(gram, x, first, kxy))
         .collect();
     while centers.len() < k {
         let next_pos = rng.weighted_choice(&min_d2);
@@ -57,8 +73,9 @@ fn kmeanspp(gram: &Gram, candidates: Vec<usize>, k: usize, rng: &mut Rng) -> Vec
             next
         };
         centers.push(next);
+        gram.block_into(&candidates, &[next], &mut col);
         for (pos, &x) in candidates.iter().enumerate() {
-            let d2 = feature_sqdist(gram, x, next);
+            let d2 = sqdist_from_cross(gram, x, next, col[pos]);
             if d2 < min_d2[pos] {
                 min_d2[pos] = d2;
             }
@@ -67,9 +84,17 @@ fn kmeanspp(gram: &Gram, candidates: Vec<usize>, k: usize, rng: &mut Rng) -> Vec
     centers
 }
 
+/// `‖φ(x) − φ(y)‖²` given an already-gathered cross term `kxy = K(x, y)`
+/// (clamped at 0 against rounding) — must stay arithmetically identical to
+/// [`feature_sqdist`].
+#[inline]
+fn sqdist_from_cross(gram: &dyn KernelProvider, x: usize, y: usize, kxy: f64) -> f64 {
+    (gram.self_k(x) - 2.0 * kxy + gram.self_k(y)).max(0.0)
+}
+
 /// `‖φ(x) − φ(y)‖²` via kernel evaluations (clamped at 0 against rounding).
 #[inline]
-pub fn feature_sqdist(gram: &Gram, x: usize, y: usize) -> f64 {
+pub fn feature_sqdist(gram: &dyn KernelProvider, x: usize, y: usize) -> f64 {
     (gram.self_k(x) - 2.0 * gram.eval(x, y) + gram.self_k(y)).max(0.0)
 }
 
@@ -77,7 +102,7 @@ pub fn feature_sqdist(gram: &Gram, x: usize, y: usize) -> f64 {
 mod tests {
     use super::*;
     use crate::data::synthetic::{blobs, SyntheticSpec};
-    use crate::kernels::KernelFunction;
+    use crate::kernels::{Gram, KernelFunction};
     use crate::util::rng::Rng;
 
     fn fixture() -> crate::data::Dataset {

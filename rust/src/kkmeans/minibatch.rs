@@ -17,7 +17,7 @@ use super::backend::argmin_rows;
 use super::init::choose_centers;
 use super::learning_rate::{LearningRate, RateState};
 use super::{FitResult, Init};
-use crate::kernels::Gram;
+use crate::kernels::KernelProvider;
 use crate::util::parallel::{par_rows_mut, par_rows_mut3};
 use crate::util::rng::Rng;
 use crate::util::timing::{Profiler, Stopwatch};
@@ -69,7 +69,7 @@ impl MiniBatchKernelKMeans {
     }
 
     /// Run Algorithm 1 over the gram.
-    pub fn fit(&self, gram: &Gram, rng: &mut Rng) -> FitResult {
+    pub fn fit(&self, gram: &dyn KernelProvider, rng: &mut Rng) -> FitResult {
         let n = gram.n();
         let k = self.cfg.k;
         let b = self.cfg.batch_size.min(n.max(1));
@@ -194,11 +194,28 @@ impl MiniBatchKernelKMeans {
                     + 2.0 * a * (1.0 - a) * c_dot_cm[j]
                     + a * a * cm_dot_cm[j];
             }
+            // Concatenated member columns (center j owns mranges[j]): lets
+            // the non-materialized branch gather each row's kernel values
+            // in one planned-gather call — on the streaming provider that
+            // amortizes cache lookups over whole tiles instead of paying
+            // two locks per value, and the grouping/sort is hoisted into
+            // the plan once per iteration, not once per point.
+            let mut mcols: Vec<u32> = Vec::with_capacity(b);
+            let mut mranges: Vec<(usize, usize)> = Vec::with_capacity(k);
+            for mjs in members.iter() {
+                let start = mcols.len();
+                mcols.extend(mjs.iter().map(|&y| y as u32));
+                mranges.push((start, mcols.len()));
+            }
+            let plan = gram.plan_gather(&mcols);
             {
                 let members = &members;
                 let alphas = &alphas;
                 let mass = &mass;
                 let cc = &cc;
+                let mcols = &mcols;
+                let mranges = &mranges;
+                let plan = &plan;
                 par_rows_mut3(
                     &mut px,
                     k,
@@ -207,18 +224,26 @@ impl MiniBatchKernelKMeans {
                     &mut mins_all,
                     1,
                     |row0, block, ab, mb| {
+                        let mut gathered = vec![0.0f64; mcols.len()];
                         for (r, row) in block.chunks_mut(k).enumerate() {
                             let x = row0 + r;
                             // Hoist the gram row once per point (§Perf):
                             // direct f32 loads beat per-element enum
                             // dispatch ~3x.
                             let grow = gram.row_slice(x);
+                            if grow.is_none() {
+                                gram.row_gather_planned(x, plan, &mut gathered);
+                            }
                             for j in 0..k {
                                 let a = alphas[j];
                                 if a == 0.0 {
                                     continue;
                                 }
+                                let (s, e) = mranges[j];
                                 let mut cross = 0.0;
+                                // Per-center reduction in member order — the
+                                // same accumulation order in every branch
+                                // (bit-identity across providers).
                                 match (grow, weights) {
                                     (Some(g), None) => {
                                         for &y in &members[j] {
@@ -231,13 +256,15 @@ impl MiniBatchKernelKMeans {
                                         }
                                     }
                                     (None, None) => {
-                                        for &y in &members[j] {
-                                            cross += gram.eval(x, y);
+                                        for &v in &gathered[s..e] {
+                                            cross += v;
                                         }
                                     }
                                     (None, Some(w)) => {
-                                        for &y in &members[j] {
-                                            cross += w[y] * gram.eval(x, y);
+                                        for (&c, &v) in
+                                            mcols[s..e].iter().zip(&gathered[s..e])
+                                        {
+                                            cross += w[c as usize] * v;
                                         }
                                     }
                                 }
@@ -316,7 +343,7 @@ impl MiniBatchKernelKMeans {
 mod tests {
     use super::*;
     use crate::data::synthetic::{blobs, SyntheticSpec};
-    use crate::kernels::KernelFunction;
+    use crate::kernels::{Gram, KernelFunction};
     use crate::metrics::ari;
 
     fn fixture(n: usize) -> crate::data::Dataset {

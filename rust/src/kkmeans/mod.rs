@@ -1,6 +1,10 @@
 //! Kernel k-means algorithms — the paper's core contribution.
 //!
-//! Three algorithms over a shared [`crate::kernels::Gram`] substrate:
+//! Three algorithms over a shared [`crate::kernels::KernelProvider`]
+//! substrate — every `fit` accepts `&dyn KernelProvider`, so the same
+//! algorithm runs against an on-the-fly kernel, a materialized n×n table,
+//! or the streaming tile-LRU-cached provider
+//! ([`crate::kernels::CachedGram`]) without code changes:
 //!
 //! * [`FullBatchKernelKMeans`] — Lloyd's algorithm in feature space
 //!   (Dhillon et al. 2004), `O(n²)` per iteration. The baseline.

@@ -3,13 +3,13 @@
 
 use super::backend::{argmin_rows, AssignBackend};
 use super::state::CenterWindow;
-use crate::kernels::Gram;
+use crate::kernels::KernelProvider;
 
 /// Assign a set of points to truncated centers; returns (assignments,
 /// min squared distances). Runs through the given backend in slabs of
 /// `slab` points so the XLA backend can reuse its fixed-batch executable.
 pub fn assign_points(
-    gram: &Gram,
+    gram: &dyn KernelProvider,
     centers: &mut [CenterWindow],
     points: &[usize],
     backend: &mut dyn AssignBackend,
@@ -55,7 +55,7 @@ pub fn weighted_mean(
 
 /// Full-dataset objective `f_X(Ĉ)` plus final assignments.
 pub fn evaluate_full(
-    gram: &Gram,
+    gram: &dyn KernelProvider,
     centers: &mut [CenterWindow],
     backend: &mut dyn AssignBackend,
     weights: Option<&[f64]>,
@@ -71,7 +71,7 @@ pub fn evaluate_full(
 mod tests {
     use super::*;
     use crate::data::synthetic::{blobs, SyntheticSpec};
-    use crate::kernels::KernelFunction;
+    use crate::kernels::{Gram, KernelFunction};
     use crate::kkmeans::backend::NativeBackend;
     use crate::util::rng::Rng;
 

@@ -12,6 +12,12 @@
 //!   enables: consume batches from an unbounded stream (no dataset in
 //!   memory at all); each `partial_fit` is one Algorithm 2 iteration whose
 //!   "batch" is whatever the stream delivered.
+//!
+//! Both ride the [`crate::kernels::KernelProvider`] abstraction: the
+//! reservoir gram here is on-the-fly (the reservoir is tiny by
+//! construction), while offline million-point fits go through the
+//! streaming tile-LRU provider selected by the experiment coordinator's
+//! n-threshold policy (DESIGN.md §6).
 
 use super::learning_rate::{LearningRate, RateState};
 use super::state::CenterWindow;

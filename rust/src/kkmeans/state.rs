@@ -19,7 +19,7 @@
 //! initial center `C_1^j·Π(1−α)` is retained so `Ĉ = C` exactly
 //! (Equation 1's second case); the first trim drops it.
 
-use crate::kernels::Gram;
+use crate::kernels::KernelProvider;
 
 /// One iteration's surviving contribution: the batch-cluster points and
 /// their raw per-point coefficients.
@@ -60,7 +60,7 @@ pub struct CenterWindow {
 
 /// Recompute ⟨Ĉ,Ĉ⟩ exactly after this many incremental updates (bounds
 /// floating-point drift; the O(M²) cost amortizes to nothing).
-const CC_REFRESH_PERIOD: u32 = 256;
+pub const CC_REFRESH_PERIOD: u32 = 256;
 
 impl CenterWindow {
     /// A fresh center at dataset point `init_idx`.
@@ -187,7 +187,7 @@ impl CenterWindow {
 
     /// `⟨φ(x), Ĉ⟩` — O(support) kernel evaluations. Takes the materialized
     /// fast path (direct row loads) when available.
-    pub fn cross_with_point(&self, gram: &Gram, x: usize) -> f64 {
+    pub fn cross_with_point(&self, gram: &dyn KernelProvider, x: usize) -> f64 {
         if let Some(row) = gram.row_slice(x) {
             self.support().map(|(y, w)| w * row[y] as f64).sum()
         } else {
@@ -199,7 +199,7 @@ impl CenterWindow {
     /// update (the two backend calls per iteration share it). When updates
     /// flow through [`CenterWindow::apply_update_cc`] the cache is
     /// maintained *incrementally* and this is O(1).
-    pub fn self_inner(&mut self, gram: &Gram) -> f64 {
+    pub fn self_inner(&mut self, gram: &dyn KernelProvider) -> f64 {
         if let Some(cc) = self.cc_cache {
             return cc;
         }
@@ -238,7 +238,7 @@ impl CenterWindow {
         alpha: f64,
         points: &[usize],
         point_weights: Option<&[f64]>,
-        gram: &Gram,
+        gram: &dyn KernelProvider,
     ) {
         assert!((0.0..=1.0).contains(&alpha), "alpha={alpha}");
         if alpha == 0.0 || points.is_empty() {
@@ -372,7 +372,7 @@ impl CenterWindow {
     }
 
     /// cc ← ‖Ĉ − e‖² where e = Σ w_p φ(p) is currently part of the support.
-    fn subtract_from_cc(&mut self, gram: &Gram, pts: &[usize], ws: &[f64]) {
+    fn subtract_from_cc(&mut self, gram: &dyn KernelProvider, pts: &[usize], ws: &[f64]) {
         let Some(cc) = self.cc_cache else { return };
         let mut e_dot_c = 0.0;
         for (&p, &w) in pts.iter().zip(ws.iter()) {
@@ -395,7 +395,7 @@ impl CenterWindow {
 
     /// `‖Ĉ − other‖²` where `other` is another window over the same gram —
     /// used by tests to verify Lemma 3 empirically.
-    pub fn sqdist_to(&self, other: &CenterWindow, gram: &Gram) -> f64 {
+    pub fn sqdist_to(&self, other: &CenterWindow, gram: &dyn KernelProvider) -> f64 {
         let a: Vec<(usize, f64)> = self.support().collect();
         let b: Vec<(usize, f64)> = other.support().collect();
         // ‖A−B‖² = ⟨A,A⟩ − 2⟨A,B⟩ + ⟨B,B⟩ over combined support.

@@ -18,7 +18,7 @@ use super::init::choose_centers;
 use super::learning_rate::{LearningRate, RateState};
 use super::state::CenterWindow;
 use super::{FitResult, Init};
-use crate::kernels::Gram;
+use crate::kernels::KernelProvider;
 use crate::util::rng::Rng;
 use crate::util::timing::{Profiler, Stopwatch};
 
@@ -89,14 +89,14 @@ impl TruncatedMiniBatchKernelKMeans {
     }
 
     /// Fit with the native backend.
-    pub fn fit(&self, gram: &Gram, rng: &mut Rng) -> FitResult {
+    pub fn fit(&self, gram: &dyn KernelProvider, rng: &mut Rng) -> FitResult {
         self.fit_with_backend(gram, &mut NativeBackend, rng).result
     }
 
     /// Fit with an explicit assignment backend (native or XLA).
     pub fn fit_with_backend(
         &self,
-        gram: &Gram,
+        gram: &dyn KernelProvider,
         backend: &mut dyn AssignBackend,
         rng: &mut Rng,
     ) -> TruncatedFit {
@@ -189,7 +189,7 @@ impl TruncatedMiniBatchKernelKMeans {
 mod tests {
     use super::*;
     use crate::data::synthetic::{blobs, rings, SyntheticSpec};
-    use crate::kernels::KernelFunction;
+    use crate::kernels::{Gram, KernelFunction};
     use crate::metrics::ari;
 
     fn fixture(n: usize) -> crate::data::Dataset {

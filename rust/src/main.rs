@@ -42,6 +42,11 @@ fn main() -> Result<()> {
                  \x20     --k N --batch N --tau N --iters N --epsilon F --seed N\n\
                  \x20     --scale F            dataset size multiplier (default 0.25)\n\
                  \x20     --backend NAME       native | xla (needs `make artifacts`)\n\
+                 \x20     --stream             never materialize the n×n gram: stream kernel\n\
+                 \x20                          values through the tile-LRU cache (feature\n\
+                 \x20                          kernels; default policy auto-streams above n≈23k)\n\
+                 \x20     --cache-mb N         tile-LRU budget in MiB for streaming runs (64)\n\
+                 \x20     --materialize        force the dense n×n table at any n\n\
                  \x20 figures                  regenerate paper figures (CSV+md under --out)\n\
                  \x20     --fig N | --all      figure id 1..13\n\
                  \x20     --scale F --repeats N --iters N --quick --out DIR\n\
@@ -95,6 +100,19 @@ fn run(args: &Args) -> Result<()> {
     let backend = args.get_or("backend", "native");
     let csv = args.get("csv").map(|s| s.to_string());
     let k_opt = args.get("k").map(|s| s.parse::<usize>().expect("--k"));
+    let cache_mb = args.get_parse_or("cache-mb", experiment::DEFAULT_CACHE_MB);
+    let gram_flags_set = args.flag("stream")
+        || args.flag("materialize")
+        || args.get("cache-mb").is_some();
+    let strategy = match (args.flag("stream"), args.flag("materialize")) {
+        (true, true) => mbkk::bail!("--stream and --materialize are mutually exclusive"),
+        (true, false) => experiment::GramStrategy::Stream { cache_mb },
+        (false, true) => experiment::GramStrategy::Materialize,
+        (false, false) => experiment::GramStrategy::Auto {
+            max_table_bytes: experiment::DEFAULT_MAX_TABLE_BYTES,
+            cache_mb,
+        },
+    };
     let spec = experiment::RunSpec {
         dataset: dataset.clone(),
         scale,
@@ -119,6 +137,14 @@ fn run(args: &Args) -> Result<()> {
         .or_else(|| (ds.num_classes() > 0).then(|| ds.num_classes()))
         .expect("--k required for unlabeled CSV data");
 
+    if gram_flags_set && !spec.algo.is_kernelized() {
+        mbkk::bail!(
+            "--stream/--materialize/--cache-mb apply to kernelized algorithms \
+             only ({} runs on raw features, no gram is built)",
+            spec.algo.name()
+        );
+    }
+
     println!(
         "run: {} on {} (n={}, d={}, k={})",
         spec.algo.name(),
@@ -129,11 +155,25 @@ fn run(args: &Args) -> Result<()> {
     );
     let outcome = match backend.as_str() {
         "native" => {
-            let mut rng = Rng::seeded(seed ^ 0xC0DE);
-            let (gram, kernel_secs) = spec.kernel.build(&ds, &mut rng);
-            experiment::run_with_gram(&spec, &ds, &gram, kernel_secs)
+            let (out, report) = experiment::run_on_dataset(&spec, &ds, strategy);
+            if let Some(report) = report {
+                println!("gram:       {} ({})", report.label, report.mode);
+                if let Some(stats) = report.cache {
+                    println!("cache:      {}", stats.summary());
+                }
+            }
+            out
         }
-        "xla" => run_with_xla_backend(&spec, &ds)?,
+        "xla" => {
+            if gram_flags_set {
+                mbkk::bail!(
+                    "--stream/--materialize/--cache-mb apply to the native backend \
+                     only: the xla backend always evaluates the feature kernel on \
+                     the fly through the AOT graph"
+                );
+            }
+            run_with_xla_backend(&spec, &ds)?
+        }
         other => mbkk::bail!("unknown backend {other:?} (native|xla)"),
     };
     println!("ARI:        {:.4}", outcome.ari);

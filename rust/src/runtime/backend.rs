@@ -15,7 +15,7 @@
 //! runtime — fall back to the [`NativeBackend`]; `fallback_calls` counts
 //! them so benchmarks and tests can assert which path actually ran.
 
-use crate::kernels::{Gram, KernelFunction};
+use crate::kernels::{KernelFunction, KernelProvider};
 use crate::kkmeans::state::CenterWindow;
 use crate::kkmeans::{AssignBackend, NativeBackend};
 use crate::runtime::engine::Engine;
@@ -50,7 +50,7 @@ impl XlaBackend {
 
     fn try_xla(
         &mut self,
-        gram: &Gram,
+        gram: &dyn KernelProvider,
         batch: &[usize],
         centers: &mut [CenterWindow],
     ) -> Option<Vec<f64>> {
@@ -61,11 +61,12 @@ impl XlaBackend {
             return None;
         }
         // Only the Gaussian feature kernel lowers to the assign_gaussian
-        // graph; everything else uses the native path.
-        let (ds, kappa) = match gram {
-            Gram::OnTheFly { ds, func: KernelFunction::Gaussian { kappa }, .. } => {
-                (*ds, *kappa)
-            }
+        // graph; everything else uses the native path. The provider
+        // abstraction exposes exactly what the marshaler needs — raw
+        // features + the closed-form kernel — so both the on-the-fly and
+        // the streaming tile-LRU providers can route here.
+        let (ds, kappa) = match gram.feature_kernel() {
+            Some((ds, KernelFunction::Gaussian { kappa })) => (ds, kappa),
             _ => return None,
         };
         let k = centers.len();
@@ -120,7 +121,7 @@ impl XlaBackend {
 impl AssignBackend for XlaBackend {
     fn distances(
         &mut self,
-        gram: &Gram,
+        gram: &dyn KernelProvider,
         batch: &[usize],
         centers: &mut [CenterWindow],
     ) -> Vec<f64> {
@@ -145,6 +146,7 @@ impl AssignBackend for XlaBackend {
 mod tests {
     use super::*;
     use crate::data::synthetic::{blobs, SyntheticSpec};
+    use crate::kernels::Gram;
     use crate::util::rng::Rng;
 
     const SAMPLE: &str = r#"{

@@ -1,0 +1,188 @@
+//! Streaming ≡ materialized equivalence (the tentpole acceptance property
+//! of ISSUE 2).
+//!
+//! The streaming provider ([`CachedGram`]) quantizes every kernel value to
+//! f32 — the same rounding the materialized table applies on store — and
+//! performs its reductions in the materialized fast path's order, so a
+//! mini-batch run served by the tile-LRU cache must be **bit-identical**
+//! to the same run served by the dense n×n table: identical assignment
+//! vectors and identical objective bits, for any seed, batch size, τ,
+//! cache budget, and kernel family (Gaussian feature kernel and the knn
+//! graph kernel are pinned here).
+//!
+//! Full-batch Lloyd's is deliberately *not* in the bit-identity roster:
+//! its materialized fast path reduces the term3 row sums in a different
+//! association order than the eval path (2·Σ vs Σ·2), which is a ulp-level
+//! difference by construction — and full-batch over a streamed gram is the
+//! O(n²)-per-iteration anti-pattern the streaming path exists to avoid.
+//! The coordinator enforces this: `GramStrategy::resolve` routes full-kkm
+//! to the materialized table (or fails fast when it cannot fit), so the
+//! streamed-full-batch combination is unreachable through `run_one_with`
+//! and the CLI.
+
+use mbkk::data::synthetic::{blobs, SyntheticSpec};
+use mbkk::data::Dataset;
+use mbkk::kernels::{graph, CachedGram, Gram, KernelFunction, KernelProvider};
+use mbkk::kkmeans::{
+    Init, LearningRate, MiniBatchConfig, MiniBatchKernelKMeans, TruncatedConfig,
+    TruncatedMiniBatchKernelKMeans,
+};
+use mbkk::testutil::prop::{check_with_seed, from_fn};
+use mbkk::util::rng::Rng;
+
+/// One fit summary: (algorithm label, assignments, objective bits).
+type FitSummary = (String, Vec<usize>, u64);
+
+fn dataset(seed: u64, n: usize) -> Dataset {
+    let mut rng = Rng::seeded(seed ^ 0xD5);
+    blobs(
+        &SyntheticSpec::new(n, 4, 3).with_std(0.6).with_separation(5.0),
+        &mut rng,
+    )
+}
+
+/// Run every mini-batch variant against `gram` with a fixed seed.
+fn fit_roster(gram: &dyn KernelProvider, seed: u64, b: usize, tau: usize) -> Vec<FitSummary> {
+    let mut out = Vec::new();
+    for lr in [LearningRate::Beta, LearningRate::Sklearn] {
+        let cfg = MiniBatchConfig {
+            k: 3,
+            batch_size: b,
+            max_iters: 12,
+            epsilon: None,
+            learning_rate: lr,
+            init: Init::KMeansPlusPlus,
+            weights: None,
+        };
+        let mut rng = Rng::seeded(seed);
+        let fit = MiniBatchKernelKMeans::new(cfg).fit(gram, &mut rng);
+        out.push((format!("mb-kkm/{lr:?}"), fit.assignments, fit.objective.to_bits()));
+    }
+    for tau in [tau, usize::MAX] {
+        let cfg = TruncatedConfig {
+            k: 3,
+            batch_size: b,
+            tau,
+            max_iters: 12,
+            epsilon: Some(1e-9),
+            learning_rate: LearningRate::Beta,
+            init: Init::KMeansPlusPlus,
+            weights: None,
+        };
+        let mut rng = Rng::seeded(seed ^ 0x7A0);
+        let fit = TruncatedMiniBatchKernelKMeans::new(cfg).fit(gram, &mut rng);
+        out.push((format!("trunc-kkm/tau={tau}"), fit.assignments, fit.objective.to_bits()));
+    }
+    out
+}
+
+fn assert_identical(mat: &[FitSummary], stream: &[FitSummary]) -> bool {
+    assert_eq!(mat.len(), stream.len());
+    for ((name_m, assign_m, obj_m), (name_s, assign_s, obj_s)) in
+        mat.iter().zip(stream.iter())
+    {
+        assert_eq!(name_m, name_s);
+        if assign_m != assign_s {
+            eprintln!("{name_m}: assignments diverged");
+            return false;
+        }
+        if obj_m != obj_s {
+            eprintln!(
+                "{name_m}: objective bits diverged: {} vs {}",
+                f64::from_bits(*obj_m),
+                f64::from_bits(*obj_s)
+            );
+            return false;
+        }
+    }
+    true
+}
+
+#[test]
+fn gaussian_streaming_equals_materialized() {
+    // Property: for random (seed, n, b) the tile-LRU streaming provider
+    // and the materialized table produce bit-identical runs.
+    let gen = from_fn(|rng: &mut Rng| {
+        (rng.next_u64(), 90 + rng.below(120), 16 + rng.below(48))
+    });
+    check_with_seed(
+        "gaussian streaming ≡ materialized",
+        gen,
+        |&(seed, n, b)| {
+            let ds = dataset(seed, n);
+            let kernel = KernelFunction::Gaussian { kappa: 9.0 };
+            let mat = Gram::on_the_fly(&ds, kernel).materialize();
+            let cached = CachedGram::new(Gram::on_the_fly(&ds, kernel), 2 << 20);
+            let a = fit_roster(&mat, seed, b, 30);
+            let z = fit_roster(&cached, seed, b, 30);
+            assert_identical(&a, &z)
+        },
+        0xE0_15EED,
+        8,
+    );
+}
+
+#[test]
+fn knn_streaming_equals_materialized() {
+    // Same property through the knn graph kernel: the cache layer wraps
+    // the precomputed table and must be fully transparent.
+    for seed in [3u64, 11, 27] {
+        let ds = dataset(seed, 150);
+        let base = graph::knn_kernel(&ds, 8);
+        let mat = base.materialize(); // clone of the dense table
+        let cached = CachedGram::new(base, 1 << 20);
+        let a = fit_roster(&mat, seed, 32, 40);
+        let z = fit_roster(&cached, seed, 32, 40);
+        assert!(assert_identical(&a, &z), "seed {seed}");
+    }
+}
+
+#[test]
+fn eviction_churn_does_not_change_results() {
+    // A pathologically small cache budget (constant generation turnover)
+    // must produce the same bits as an ample one: the cache is a pure
+    // memoization layer, never a source of truth.
+    let ds = dataset(5, 200);
+    let kernel = KernelFunction::Gaussian { kappa: 9.0 };
+    let ample = CachedGram::new(Gram::on_the_fly(&ds, kernel), 16 << 20);
+    let starved = CachedGram::new(Gram::on_the_fly(&ds, kernel), 0);
+    let a = fit_roster(&ample, 5, 32, 30);
+    let z = fit_roster(&starved, 5, 32, 30);
+    assert!(assert_identical(&a, &z));
+    let st = starved.cache_stats();
+    assert!(st.evictions > 0, "starved cache must have evicted tiles");
+    assert!(st.resident_tiles <= st.max_tiles);
+}
+
+#[test]
+fn streaming_memory_stays_bounded_during_a_fit() {
+    // The acceptance-criterion shape check at test scale: a fit through a
+    // small cache never exceeds the cache's tile ceiling even though the
+    // run touches every row of an (implicit) n×n gram.
+    let ds = dataset(9, 600);
+    let kernel = KernelFunction::Gaussian { kappa: 9.0 };
+    let cached = CachedGram::new(Gram::on_the_fly(&ds, kernel), 256 * 1024);
+    let cfg = TruncatedConfig {
+        k: 3,
+        batch_size: 64,
+        tau: 50,
+        max_iters: 25,
+        epsilon: None,
+        learning_rate: LearningRate::Beta,
+        init: Init::KMeansPlusPlus,
+        weights: None,
+    };
+    let mut rng = Rng::seeded(1);
+    let fit = TruncatedMiniBatchKernelKMeans::new(cfg).fit(&cached, &mut rng);
+    assert!(fit.objective.is_finite());
+    let st = cached.cache_stats();
+    assert!(
+        st.resident_tiles <= st.max_tiles,
+        "resident {} > ceiling {}",
+        st.resident_tiles,
+        st.max_tiles
+    );
+    // The support window recurs across iterations, so the cache must
+    // actually be earning its keep (strictly positive hit rate).
+    assert!(st.hit_rate() > 0.1, "hit rate {:.3}", st.hit_rate());
+}
