@@ -1,0 +1,115 @@
+//! Panel micro-kernel + worker-pool benchmarks (ISSUE 3).
+//!
+//! * Panel block fill vs the pre-panel scalar engine (difference-form
+//!   per-pair evaluation, reimplemented here as the baseline) at d = 16
+//!   and d = 128 — the acceptance criterion asks ≥ 2x at d = 128.
+//! * Dispatch latency of the persistent pool vs scoped per-call spawning
+//!   (the old `util::parallel` implementation, reimplemented here) — the
+//!   overhead that used to sit on every 1-2 ms Algorithm-2 iteration.
+//!
+//! Merges its samples into the repo-root `BENCH_baseline.json` perf
+//! trajectory (suite "panel micro-kernels").
+//!
+//! ```bash
+//! RUSTFLAGS="-C target-cpu=native" cargo bench --bench bench_panel
+//! ```
+
+use mbkk::bench::BenchRunner;
+use mbkk::data::synthetic::{blobs, SyntheticSpec};
+use mbkk::data::Dataset;
+use mbkk::kernels::{Gram, KernelFunction};
+use mbkk::util::parallel;
+use mbkk::util::rng::Rng;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// The pre-panel scalar engine: difference-form Gaussian per pair,
+/// parallel over batch rows — what `Gram::block_into` compiled to before
+/// the panel rewrite (per-pair loop-carried f64 chain).
+fn scalar_block(ds: &Dataset, kappa: f64, rows: &[usize], cols: &[usize], out: &mut [f64]) {
+    let nc = cols.len();
+    parallel::par_rows_mut(out, nc, |r0, chunk| {
+        for (r, orow) in chunk.chunks_mut(nc).enumerate() {
+            let xi = ds.row(rows[r0 + r]);
+            for (o, &j) in orow.iter_mut().zip(cols.iter()) {
+                let mut s = 0.0f64;
+                for (x, y) in xi.iter().zip(ds.row(j)) {
+                    let d = (*x - *y) as f64;
+                    s += d * d;
+                }
+                *o = (-s / kappa).exp();
+            }
+        }
+    });
+}
+
+/// The pre-pool dispatcher: spawn scoped threads for one parallel region,
+/// atomic-counter claimed — what `par_dynamic` compiled to before the
+/// persistent pool.
+fn scoped_spawn_dispatch(count: usize, f: &(dyn Fn(usize) + Sync)) {
+    let workers = parallel::num_threads().min(count);
+    if workers <= 1 {
+        for i in 0..count {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let next = &next;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= count {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+fn main() {
+    let mut runner = BenchRunner::new("panel micro-kernels");
+    let mut rng = Rng::seeded(17);
+
+    for &d in &[16usize, 128] {
+        let ds = blobs(&SyntheticSpec::new(8000, d, 5), &mut rng);
+        let kappa = d as f64;
+        let fly = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa });
+        let rows: Vec<usize> = (0..256).map(|_| rng.below(ds.n)).collect();
+        let cols: Vec<usize> = (0..512).map(|_| rng.below(ds.n)).collect();
+        let mut out = vec![0.0f64; rows.len() * cols.len()];
+        // Warm the norm cache outside the timed region (one-time cost,
+        // amortized over a whole run).
+        let _ = ds.sq_norms();
+        runner.bench(&format!("panel block 256x512 d={d}"), || {
+            fly.block_into(&rows, &cols, &mut out);
+        });
+        runner.bench(&format!("scalar block 256x512 d={d}"), || {
+            scalar_block(&ds, kappa, &rows, &cols, &mut out);
+        });
+        if let Some(r) =
+            runner.ratio(&format!("scalar block 256x512 d={d}"), &format!("panel block 256x512 d={d}"))
+        {
+            println!("  -> panel speedup over scalar at d={d}: {r:.2}x");
+        }
+    }
+
+    // Dispatch latency: tiny tasks, so the measurement is dominated by
+    // region setup/teardown rather than payload.
+    let payload = |i: usize| {
+        std::hint::black_box((0..64u64).fold(i as u64, |a, b| a ^ (a + b)));
+    };
+    runner.bench("pool dispatch 64 tasks", || {
+        parallel::par_dynamic(64, payload);
+    });
+    runner.bench("scoped-spawn dispatch 64 tasks", || {
+        scoped_spawn_dispatch(64, &payload);
+    });
+    if let Some(r) = runner.ratio("scoped-spawn dispatch 64 tasks", "pool dispatch 64 tasks") {
+        println!("  -> pool dispatch speedup over scoped spawn: {r:.2}x");
+    }
+
+    runner.write_csv();
+    runner.write_baseline(&BenchRunner::baseline_path());
+}

@@ -1,10 +1,20 @@
 //! The core dataset container.
 
+use crate::util::fmath;
+use std::sync::OnceLock;
+
 /// A dataset of `n` points with `d` features each, stored row-major in f32
 /// (matching the compute path), plus optional integer ground-truth labels
 /// (used only for ARI/NMI evaluation, never by the clustering algorithms)
 /// and optional per-point weights (the paper's weighted variant).
-
+///
+/// The per-row squared norms `‖x_i‖²` are computed once on first use and
+/// cached ([`Dataset::sq_norms`]): the panel kernel engine, the σ/κ
+/// bandwidth heuristic, and k-means++ D² sampling all expand squared
+/// distances as `‖x‖² + ‖y‖² − 2⟨x,y⟩` against this cache instead of
+/// re-deriving differences per pair. Code that mutates `features` in place
+/// after construction must call [`Dataset::invalidate_caches`] (the
+/// standard scaler does).
 #[derive(Clone, Debug)]
 pub struct Dataset {
     /// Display name for reports.
@@ -20,13 +30,23 @@ pub struct Dataset {
     /// Optional per-point weights for the weighted kernel k-means variant;
     /// `None` means uniform weight 1.
     pub weights: Option<Vec<f64>>,
+    /// Lazily computed per-row squared norms (see [`Dataset::sq_norms`]).
+    sq_norms: OnceLock<Vec<f64>>,
 }
 
 impl Dataset {
     /// Wrap row-major features into a dataset (panics on shape mismatch).
     pub fn new(name: &str, features: Vec<f32>, n: usize, d: usize) -> Dataset {
         assert_eq!(features.len(), n * d, "features length != n*d");
-        Dataset { name: name.to_string(), features, n, d, labels: None, weights: None }
+        Dataset {
+            name: name.to_string(),
+            features,
+            n,
+            d,
+            labels: None,
+            weights: None,
+            sq_norms: OnceLock::new(),
+        }
     }
 
     /// Attach ground-truth labels (evaluation only).
@@ -65,16 +85,40 @@ impl Dataset {
             .unwrap_or(0)
     }
 
-    /// Squared Euclidean distance between rows `i` and `j`.
+    /// Per-row squared norms `‖x_i‖²`, computed once (in parallel) and
+    /// cached. Each entry is one sequential f64 chain over the row — the
+    /// exact reduction [`crate::util::fmath::dot_f64`] performs — so the
+    /// panel engine's norms-expansion distances are deterministic.
+    pub fn sq_norms(&self) -> &[f64] {
+        let norms = self.sq_norms.get_or_init(|| {
+            let mut norms = vec![0.0f64; self.n];
+            crate::util::parallel::par_chunks_mut(&mut norms, |start, chunk| {
+                for (i, out) in chunk.iter_mut().enumerate() {
+                    *out = fmath::sq_norm_f64(self.row(start + i));
+                }
+            });
+            norms
+        });
+        debug_assert_eq!(
+            norms.len(),
+            self.n,
+            "stale sq_norms: features were resized without invalidate_caches"
+        );
+        norms
+    }
+
+    /// Drop the cached squared norms. Must be called by anything that
+    /// mutates `features` in place after the cache may have been built.
+    pub fn invalidate_caches(&mut self) {
+        self.sq_norms = OnceLock::new();
+    }
+
+    /// Squared Euclidean distance between rows `i` and `j`, via the cached
+    /// norms: `(‖x_i‖² + ‖x_j‖²) − 2⟨x_i, x_j⟩`, clamped at 0.
     #[inline]
     pub fn sqdist(&self, i: usize, j: usize) -> f64 {
-        let (a, b) = (self.row(i), self.row(j));
-        let mut s = 0.0f64;
-        for (x, y) in a.iter().zip(b.iter()) {
-            let diff = (*x - *y) as f64;
-            s += diff * diff;
-        }
-        s
+        let norms = self.sq_norms();
+        fmath::sqdist_from_norms(norms[i], norms[j], fmath::dot_f64(self.row(i), self.row(j)))
     }
 
     /// Subsample the first `m` points of a deterministic permutation given by
@@ -151,5 +195,17 @@ mod tests {
     fn default_weight_is_one() {
         let ds = tiny();
         assert_eq!(ds.weight(0), 1.0);
+    }
+
+    #[test]
+    fn sq_norms_cached_and_invalidated() {
+        let mut ds = tiny();
+        assert_eq!(ds.sq_norms(), &[0.0, 25.0, 2.0][..]);
+        // Mutating features without invalidation would serve stale norms;
+        // invalidate_caches recomputes.
+        ds.features[0] = 2.0;
+        ds.invalidate_caches();
+        assert_eq!(ds.sq_norms()[0], 4.0);
+        assert_eq!(ds.sqdist(0, 2), 2.0); // (2−1)² + (0−1)²
     }
 }

@@ -47,7 +47,8 @@ impl StandardScaler {
         StandardScaler { mean, std }
     }
 
-    /// Apply in place.
+    /// Apply in place (drops the dataset's cached squared norms, which the
+    /// rewrite invalidates).
     pub fn transform(&self, ds: &mut Dataset) {
         assert_eq!(ds.d, self.mean.len());
         for i in 0..ds.n {
@@ -56,6 +57,7 @@ impl StandardScaler {
                 *v = ((*v as f64 - self.mean[j]) / self.std[j]) as f32;
             }
         }
+        ds.invalidate_caches();
     }
 }
 

@@ -22,10 +22,12 @@
 //! **Numerical contract.** `CachedGram` quantizes every kernel value to f32
 //! — the same rounding [`Gram::materialize`] applies when it stores the
 //! dense table — and performs its block reductions in the same order as
-//! the materialized fast path. A cache hit returns bit-for-bit the value a
-//! miss would compute, so results never depend on cache state, budget, or
-//! eviction history, and streaming runs are *bit-identical* to materialized
-//! runs (pinned by `tests/prop_stream_equivalence.rs`).
+//! the materialized fast path. Miss batches are filled through the same
+//! panel engine (`Gram::eval_cols_f32` → [`super::panel::KernelPanel`])
+//! that fills the dense table, so a cache hit returns bit-for-bit the
+//! value a miss would compute, results never depend on cache state,
+//! budget, or eviction history, and streaming runs are *bit-identical* to
+//! materialized runs (pinned by `tests/prop_stream_equivalence.rs`).
 
 use super::provider::{GatherPlan, KernelProvider};
 use super::{Gram, KernelFunction};
@@ -183,15 +185,17 @@ impl TileCache {
 
     /// Fetch `K(row, cols[g])` into `vals[g]` for a group of columns that
     /// all live in column-tile `ct` (`cols.len() ≤ CACHE_TILE_COLS` after
-    /// deduplication). Slots not yet cached are computed via `eval` and
-    /// written back. `eval` runs outside the shard lock.
+    /// deduplication). Slots not yet cached are computed by **one** call
+    /// to `eval(missing_cols, out)` — a batched fill the panel engine
+    /// serves as a single micro-kernel row — and written back. `eval` runs
+    /// outside the shard lock.
     pub fn fetch_group(
         &self,
         row: usize,
         ct: usize,
         cols: &[u32],
         vals: &mut [f32],
-        eval: &mut dyn FnMut(usize) -> f32,
+        eval: &mut dyn FnMut(&[u32], &mut [f32]),
     ) {
         assert_eq!(cols.len(), vals.len());
         // Hard bound (not debug-only): the miss bookkeeping below is a u64
@@ -230,9 +234,23 @@ impl TileCache {
             return;
         }
         self.misses.fetch_add(nmiss, Ordering::Relaxed);
+        // Batch the missing columns into one eval call (stack buffers: a
+        // group is at most one tile wide).
+        let mut miss_cols = [0u32; CACHE_TILE_COLS];
+        let mut miss_vals = [0.0f32; CACHE_TILE_COLS];
+        let mut nm = 0;
         for (g, &c) in cols.iter().enumerate() {
             if missing & (1 << g) != 0 {
-                vals[g] = eval(c as usize);
+                miss_cols[nm] = c;
+                nm += 1;
+            }
+        }
+        eval(&miss_cols[..nm], &mut miss_vals[..nm]);
+        let mut mi = 0;
+        for (g, v) in vals.iter_mut().enumerate() {
+            if missing & (1 << g) != 0 {
+                *v = miss_vals[mi];
+                mi += 1;
             }
         }
         let mut shard = self.shards[si].lock().expect("cache shard poisoned");
@@ -303,7 +321,7 @@ impl<'a> CachedGram<'a> {
             j / CACHE_TILE_COLS,
             &[j as u32],
             &mut v,
-            &mut |jj| self.base.eval(i, jj) as f32,
+            &mut |cols, out| self.base.eval_cols_f32(i, cols, out),
         );
         v[0] as f64
     }
@@ -345,8 +363,8 @@ impl<'a> CachedGram<'a> {
             }
             gvals.clear();
             gvals.resize(gcols.len(), 0.0);
-            self.cache.fetch_group(x, ct as usize, gcols, gvals, &mut |j| {
-                self.base.eval(x, j) as f32
+            self.cache.fetch_group(x, ct as usize, gcols, gvals, &mut |cols, out| {
+                self.base.eval_cols_f32(x, cols, out)
             });
             // Scatter back: entries with duplicate columns are consecutive
             // (sorted by (ct, col)), so one pointer walks the dedup list.
@@ -425,9 +443,13 @@ impl KernelProvider for CachedGram<'_> {
                 }
                 i1 += 1;
             }
-            self.cache.fetch_group(x, ct as usize, &gcols[..glen], &mut gvals[..glen], &mut |j| {
-                self.base.eval(x, j) as f32
-            });
+            self.cache.fetch_group(
+                x,
+                ct as usize,
+                &gcols[..glen],
+                &mut gvals[..glen],
+                &mut |cols, out| self.base.eval_cols_f32(x, cols, out),
+            );
             let mut di = 0;
             for g in &groups[i0..i1] {
                 if g.1 != gcols[di] {

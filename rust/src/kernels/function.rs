@@ -1,6 +1,16 @@
 //! Closed-form kernel functions evaluated on feature vectors.
+//!
+//! Since the panel engine landed (DESIGN.md §7), every kernel value in the
+//! crate is defined by one shared arithmetic: a sequential-f64 inner
+//! product ([`crate::util::fmath::dot_f64`]) finished through
+//! [`super::panel::KernelPanel::finish`] — Gaussian/Laplacian distances
+//! come from the norms expansion `‖x‖² + ‖y‖² − 2⟨x,y⟩`, not the
+//! difference form. [`KernelFunction::eval`] replays exactly that
+//! arithmetic (deriving the norms inline), so the scalar fallback is
+//! bit-identical to every blocked path.
 
 use crate::data::Dataset;
+use crate::util::fmath;
 use crate::util::rng::Rng;
 
 /// A positive-definite kernel `K(x, y)` computable from raw features.
@@ -26,41 +36,19 @@ impl KernelFunction {
         KernelFunction::Gaussian { kappa: super::sigma::kappa_heuristic(ds, rng) }
     }
 
-    /// Evaluate on two feature slices.
+    /// Evaluate on two feature slices — the panel engine's per-value
+    /// arithmetic with the squared norms derived inline (callers with a
+    /// [`Dataset`] at hand should go through [`super::panel::KernelPanel`],
+    /// which reuses the cached norms).
     #[inline]
     pub fn eval(&self, a: &[f32], b: &[f32]) -> f64 {
-        match *self {
-            KernelFunction::Gaussian { kappa } => {
-                let mut s = 0.0f64;
-                for (x, y) in a.iter().zip(b.iter()) {
-                    let d = (*x - *y) as f64;
-                    s += d * d;
-                }
-                (-s / kappa).exp()
+        let (na, nb) = match self {
+            KernelFunction::Gaussian { .. } | KernelFunction::Laplacian { .. } => {
+                (fmath::sq_norm_f64(a), fmath::sq_norm_f64(b))
             }
-            KernelFunction::Laplacian { sigma } => {
-                let mut s = 0.0f64;
-                for (x, y) in a.iter().zip(b.iter()) {
-                    let d = (*x - *y) as f64;
-                    s += d * d;
-                }
-                (-s.sqrt() / sigma).exp()
-            }
-            KernelFunction::Polynomial { gamma, coef0, degree } => {
-                let mut s = 0.0f64;
-                for (x, y) in a.iter().zip(b.iter()) {
-                    s += (*x as f64) * (*y as f64);
-                }
-                (gamma * s + coef0).powi(degree as i32)
-            }
-            KernelFunction::Linear => {
-                let mut s = 0.0f64;
-                for (x, y) in a.iter().zip(b.iter()) {
-                    s += (*x as f64) * (*y as f64);
-                }
-                s
-            }
-        }
+            _ => (0.0, 0.0), // dot kernels: finish ignores the norms
+        };
+        super::panel::KernelPanel::finish(*self, na, nb, fmath::dot_f64(a, b))
     }
 
     /// K(x, x) without touching a second row.

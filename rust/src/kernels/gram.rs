@@ -3,13 +3,16 @@
 //! matrix (required for the graph kernels, optional as a cache elsewhere).
 //!
 //! The block operations ([`Gram::materialize`], [`Gram::block`],
-//! [`Gram::weighted_cross_into`]) run through a cache-tiled engine
-//! (DESIGN.md §5): kernel evaluations are walked in column tiles sized by
-//! [`super::tile::tile_cols`] so a tile of feature rows stays L1/L2-resident
-//! across the whole batch chunk, and materialization exploits symmetry by
-//! computing only the tiles of the upper triangle and mirroring each value.
-//! This is the native-backend analogue of the L1 Pallas gram kernel.
+//! [`Gram::weighted_cross_into`]) run through the panel micro-kernel
+//! engine ([`super::panel::KernelPanel`], DESIGN.md §7): kernel blocks are
+//! computed as register-tiled inner-product panels against cached row
+//! norms, walked in column tiles sized by [`super::tile::tile_cols`] so a
+//! packed tile of feature columns stays L1/L2-resident across the whole
+//! batch chunk, and materialization exploits symmetry by computing only
+//! the tiles of the upper triangle and mirroring each value. This is the
+//! native-backend analogue of the L1 Pallas gram kernel.
 
+use super::panel::KernelPanel;
 use super::tile;
 use super::KernelFunction;
 use crate::data::Dataset;
@@ -69,7 +72,10 @@ impl<'a> Gram<'a> {
     /// instead of n².
     pub fn materialize(&self) -> Gram<'static> {
         let tile_len = match self {
-            Gram::OnTheFly { ds, .. } => tile::tile_cols(ds.d).min(ds.n.max(1)),
+            // Square tiles: capped at 256 so one tile's panel staging
+            // buffers stay well under a megabyte per worker while the tile
+            // count still saturates the pool.
+            Gram::OnTheFly { ds, .. } => tile::tile_cols(ds.d).min(256).min(ds.n.max(1)),
             Gram::Precomputed { .. } => 1, // ignored: materialize_tiled clones
         };
         self.materialize_tiled(tile_len)
@@ -89,27 +95,39 @@ impl<'a> Gram<'a> {
                 let mut data = vec![0.0f32; n * n];
                 let nblocks = n.div_ceil(t.max(1)).max(1);
                 // Upper-triangle tile list: block (bi, bj) with bi ≤ bj owns
-                // every unordered index pair {i, j} with i in bi's rows,
-                // j in bj's columns and i ≤ j.
+                // every unordered index pair {i, j} with i in bi's rows and
+                // j in bj's columns.
                 let mut tiles = Vec::with_capacity(nblocks * (nblocks + 1) / 2);
                 for bi in 0..nblocks {
                     for bj in bi..nblocks {
                         tiles.push((bi * t, bj * t));
                     }
                 }
+                let panel = KernelPanel::new(ds, *func);
                 {
                     let shared = SharedSlice::new(&mut data);
                     let shared = &shared;
+                    let panel = &panel;
                     par_dynamic(tiles.len(), |ti| {
                         let (r0, c0) = tiles[ti];
-                        let r1 = (r0 + t).min(n);
-                        let c1 = (c0 + t).min(n);
-                        for i in r0..r1 {
-                            let xi = ds.row(i);
-                            // Diagonal tiles compute only j ≥ i.
-                            let jstart = if c0 == r0 { i } else { c0 };
-                            for j in jstart..c1 {
-                                let v = func.eval(xi, ds.row(j)) as f32;
+                        let rows: Vec<usize> = (r0..(r0 + t).min(n)).collect();
+                        let cols: Vec<usize> = (c0..(c0 + t).min(n)).collect();
+                        let mut scratch = vec![0.0f64; rows.len() * cols.len()];
+                        // The full rectangular tile through the panel engine;
+                        // diagonal tiles redo their lower half, which is a
+                        // 1/nblocks fraction of the work and cheaper than a
+                        // triangular micro-kernel. Per-pair arithmetic is
+                        // commutative at the bit level (see KernelPanel), so
+                        // a diagonal tile's (i,j) and (j,i) agree exactly.
+                        panel.fill_f64(&rows, &cols, &mut scratch);
+                        for (r, &i) in rows.iter().enumerate() {
+                            for (c, &j) in cols.iter().enumerate() {
+                                if c0 == r0 && j < i {
+                                    continue; // lower half of a diagonal tile
+                                }
+                                // Quantize at the storage boundary — the same
+                                // `as f32` every other engine applies.
+                                let v = scratch[r * cols.len() + c] as f32;
                                 // SAFETY: each unordered pair {i, j} belongs
                                 // to exactly one upper tile, so the writes to
                                 // (i,j) and its mirror (j,i) are disjoint
@@ -136,12 +154,34 @@ impl<'a> Gram<'a> {
         }
     }
 
-    /// Kernel value `K(x_i, x_j)`.
+    /// Kernel value `K(x_i, x_j)`. On-the-fly evaluation goes through the
+    /// panel arithmetic with the dataset's cached norms — bit-identical to
+    /// what the block engines compute and the materialized table stores
+    /// (before the table's f32 quantization).
     #[inline]
     pub fn eval(&self, i: usize, j: usize) -> f64 {
         match self {
-            Gram::OnTheFly { ds, func, .. } => func.eval(ds.row(i), ds.row(j)),
+            Gram::OnTheFly { ds, func, .. } => KernelPanel::new(ds, *func).eval_idx(i, j),
             Gram::Precomputed { n, data, .. } => data[i * n + j] as f64,
+        }
+    }
+
+    /// Gather `out[m] = K(x_i, cols[m]) as f32` — the streaming tile
+    /// cache's batched miss fill. On-the-fly grams run one panel row
+    /// (values identical to `eval(i, ·) as f32`); materialized grams
+    /// gather from the dense row.
+    pub fn eval_cols_f32(&self, i: usize, cols: &[u32], out: &mut [f32]) {
+        assert_eq!(cols.len(), out.len(), "eval_cols_f32: bad shape");
+        match self {
+            Gram::Precomputed { n, data, .. } => {
+                let row = &data[i * n..(i + 1) * n];
+                for (o, &j) in out.iter_mut().zip(cols.iter()) {
+                    *o = row[j as usize];
+                }
+            }
+            Gram::OnTheFly { ds, func, .. } => {
+                KernelPanel::new(ds, *func).fill_row_f32_u32(i, cols, out);
+            }
         }
     }
 
@@ -176,7 +216,8 @@ impl<'a> Gram<'a> {
     }
 
     /// [`Gram::block_into`] with an explicit column-tile width (exposed so
-    /// tests can force tile boundaries on small inputs).
+    /// tests can force tile boundaries on small inputs; values are
+    /// independent of the tile width by the panel bit-identity contract).
     pub fn block_into_tiled(
         &self,
         rows: &[usize],
@@ -203,19 +244,22 @@ impl<'a> Gram<'a> {
                 });
             }
             Gram::OnTheFly { ds, func, .. } => {
+                let panel = KernelPanel::new(ds, *func);
+                let panel = &panel;
                 par_rows_mut(out, nc, |r0, chunk| {
                     let nrows = chunk.len() / nc;
                     let mut c0 = 0;
-                    // Column-tile outer loop: the tile's feature rows are
-                    // reused across every batch row in this chunk while hot.
+                    // Column-tile outer loop: each packed tile of feature
+                    // columns is reused across every batch row in this
+                    // chunk while hot (the panel re-packs per NR-block,
+                    // amortized over the chunk's rows).
                     for ctile in cols.chunks(t) {
-                        for r in 0..nrows {
-                            let xi = ds.row(rows[r0 + r]);
-                            let orow = &mut chunk[r * nc + c0..r * nc + c0 + ctile.len()];
-                            for (o, &j) in orow.iter_mut().zip(ctile.iter()) {
-                                *o = func.eval(xi, ds.row(j));
-                            }
-                        }
+                        panel.fill_f64_strided(
+                            &rows[r0..r0 + nrows],
+                            ctile,
+                            nc,
+                            &mut chunk[c0..],
+                        );
                         c0 += ctile.len();
                     }
                 });
@@ -269,22 +313,37 @@ impl<'a> Gram<'a> {
             }
             Gram::OnTheFly { ds, func, .. } => {
                 let t = tile::tile_cols(ds.d);
+                let panel = KernelPanel::new(ds, *func);
+                let panel = &panel;
                 par_rows_mut(out, k, |r0, chunk| {
                     for v in chunk.iter_mut() {
                         *v = 0.0;
                     }
                     let nrows = chunk.len() / k;
+                    let brows = &batch[r0..r0 + nrows];
+                    // Reusable per-chunk buffers: the support tile's column
+                    // indices (usize view of sup_idx) and the K(B, tile)
+                    // staging the contraction consumes — zeroed once here;
+                    // fill_f64 fully overwrites the slice it is given, so
+                    // the tile loop never re-initializes.
+                    let mut tcols: Vec<usize> = Vec::with_capacity(t);
+                    let mut kvals: Vec<f64> = vec![0.0; nrows * t];
                     for (j, &(s, e)) in ranges.iter().enumerate() {
                         let mut m0 = s;
                         while m0 < e {
                             let m1 = (m0 + t).min(e);
-                            for r in 0..nrows {
-                                let xi = ds.row(batch[r0 + r]);
+                            tcols.clear();
+                            tcols.extend(sup_idx[m0..m1].iter().map(|&y| y as usize));
+                            let kv = &mut kvals[..nrows * tcols.len()];
+                            // Panel-fill K(batch rows, support tile), then
+                            // contract with the weights in support order —
+                            // the same per-(r, j) accumulation order as the
+                            // scalar engine and the naive oracle.
+                            panel.fill_f64(brows, &tcols, kv);
+                            for (r, krow) in kv.chunks(tcols.len()).enumerate() {
                                 let mut acc = 0.0;
-                                for (&y, &w) in
-                                    sup_idx[m0..m1].iter().zip(&sup_w[m0..m1])
-                                {
-                                    acc += w * func.eval(xi, ds.row(y as usize));
+                                for (&kval, &w) in krow.iter().zip(&sup_w[m0..m1]) {
+                                    acc += w * kval;
                                 }
                                 chunk[r * k + j] += acc;
                             }

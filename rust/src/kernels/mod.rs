@@ -1,14 +1,16 @@
-//! Kernel substrate: kernel functions, gram providers behind the
-//! [`KernelProvider`] abstraction (on-the-fly, materialized, and the
-//! streaming tile-LRU-cached [`CachedGram`]), the graph kernels (k-nn and
-//! heat) from the paper's Appendix C, the σ/κ bandwidth heuristic
-//! (Wang et al. 2019), and the γ = max‖φ(x)‖ statistic that parameterizes
-//! Theorem 1.
+//! Kernel substrate: kernel functions, the panel micro-kernel engine
+//! ([`KernelPanel`], DESIGN.md §7) every block fill runs through, gram
+//! providers behind the [`KernelProvider`] abstraction (on-the-fly,
+//! materialized, and the streaming tile-LRU-cached [`CachedGram`]), the
+//! graph kernels (k-nn and heat) from the paper's Appendix C, the σ/κ
+//! bandwidth heuristic (Wang et al. 2019), and the γ = max‖φ(x)‖ statistic
+//! that parameterizes Theorem 1.
 
 mod cache;
 mod function;
 mod gram;
 pub mod graph;
+pub mod panel;
 mod provider;
 pub mod sigma;
 pub mod tile;
@@ -16,4 +18,5 @@ pub mod tile;
 pub use cache::{CacheStats, CachedGram, TileCache, CACHE_TILE_COLS};
 pub use function::KernelFunction;
 pub use gram::Gram;
+pub use panel::KernelPanel;
 pub use provider::{GatherPlan, KernelProvider};

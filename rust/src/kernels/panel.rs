@@ -1,0 +1,483 @@
+//! Panel micro-kernels: blocked kernel-block evaluation (DESIGN.md §7).
+//!
+//! The scalar path evaluates `K(x, y)` one pair at a time; each pair is a
+//! single loop-carried f64 chain, so the CPU retires roughly one
+//! fused-multiply-add per FP-add latency (~4 cycles) and the SIMD units
+//! idle. [`KernelPanel`] instead computes an `MR × NR` *panel* of inner
+//! products per micro-kernel invocation — `MR·NR` independent accumulator
+//! chains that the compiler keeps in vector registers — and derives
+//! distances from cached squared norms:
+//!
+//! `‖x − y‖² = ‖x‖² + ‖y‖² − 2⟨x, y⟩`,
+//!
+//! followed by a separate batched transcendental pass (`exp` for
+//! Gaussian/Laplacian, `powi` for polynomial). The column panel is packed
+//! once per `NR`-block into a dimension-major f64 buffer and then streamed
+//! against every row, so the pack cost amortizes over the whole row set
+//! and the inner loop is branch- and gather-free.
+//!
+//! **Bit-identity contract.** Speed comes from parallelism *across* output
+//! values only: each value's inner product is the sequential f64 chain of
+//! [`fmath::dot_f64`], its distance is [`fmath::sqdist_from_norms`], and
+//! its finish is [`KernelPanel::finish`] — so any tile shape, any blocking,
+//! and the scalar fallback produce bit-for-bit identical f64 values, and
+//! one `as f32` quantization at the storage boundary yields the identical
+//! table no matter which engine filled it. The streaming-vs-materialized
+//! equivalence suite (`tests/prop_stream_equivalence.rs`) pins this.
+
+use super::KernelFunction;
+use crate::data::Dataset;
+use crate::util::fmath;
+use std::cell::RefCell;
+
+thread_local! {
+    /// Reused dimension-major pack buffer. Pool worker threads persist for
+    /// the process lifetime, so after warm-up a fill never allocates —
+    /// `resize` to an unchanged `d` is a no-op and capacity is retained
+    /// across datasets. Not re-entered: nothing inside a fill calls back
+    /// into another fill on the same thread.
+    static PACK_BUF: RefCell<Vec<[f64; PANEL_COLS]>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Rows per micro-kernel invocation (register-tile height).
+pub const PANEL_ROWS: usize = 4;
+
+/// Columns per micro-kernel invocation (register-tile width). Together
+/// with [`PANEL_ROWS`] this yields 32 independent f64 accumulator chains —
+/// 8 × 4-lane vector registers on AVX2-class hardware, which both hides
+/// the FP-add latency and saturates the FMA ports.
+pub const PANEL_COLS: usize = 8;
+
+/// A kernel function bound to a dataset and its cached squared norms,
+/// exposing blocked fill entry points. Construction is cheap (the norms
+/// are memoized on the [`Dataset`]); hot loops may build one per call.
+pub struct KernelPanel<'a> {
+    ds: &'a Dataset,
+    func: KernelFunction,
+    norms: &'a [f64],
+}
+
+impl<'a> KernelPanel<'a> {
+    /// Bind `func` to `ds`, computing the row-norm cache on first use.
+    pub fn new(ds: &'a Dataset, func: KernelFunction) -> KernelPanel<'a> {
+        let norms = match func {
+            // Dot-product kernels never touch the norms.
+            KernelFunction::Polynomial { .. } | KernelFunction::Linear => &[],
+            _ => ds.sq_norms(),
+        };
+        KernelPanel { ds, func, norms }
+    }
+
+    /// The bound kernel function.
+    pub fn func(&self) -> KernelFunction {
+        self.func
+    }
+
+    /// Finish one kernel value from cached norms and an inner product —
+    /// the single definition of the value-level arithmetic every engine
+    /// (scalar, panel, table, cache) replays.
+    #[inline]
+    pub fn finish(func: KernelFunction, ni: f64, nj: f64, dot: f64) -> f64 {
+        match func {
+            KernelFunction::Gaussian { kappa } => {
+                (-fmath::sqdist_from_norms(ni, nj, dot) / kappa).exp()
+            }
+            KernelFunction::Laplacian { sigma } => {
+                (-fmath::sqdist_from_norms(ni, nj, dot).sqrt() / sigma).exp()
+            }
+            KernelFunction::Polynomial { gamma, coef0, degree } => {
+                (gamma * dot + coef0).powi(degree as i32)
+            }
+            KernelFunction::Linear => dot,
+        }
+    }
+
+    /// `K(x_i, x_j)` — the scalar reference the panels are bit-identical
+    /// to.
+    #[inline]
+    pub fn eval_idx(&self, i: usize, j: usize) -> f64 {
+        let dot = fmath::dot_f64(self.ds.row(i), self.ds.row(j));
+        let (ni, nj) = self.norm_pair(i, j);
+        Self::finish(self.func, ni, nj, dot)
+    }
+
+    #[inline]
+    fn norm_pair(&self, i: usize, j: usize) -> (f64, f64) {
+        if self.norms.is_empty() {
+            (0.0, 0.0) // dot kernels: finish ignores the norms
+        } else {
+            (self.norms[i], self.norms[j])
+        }
+    }
+
+    /// Fill `out` (row-major, `rows.len() × cols.len()`, row stride
+    /// `cols.len()`) with `K(rows, cols)` as unquantized f64.
+    pub fn fill_f64(&self, rows: &[usize], cols: &[usize], out: &mut [f64]) {
+        self.fill_f64_strided(rows, cols, cols.len(), out);
+    }
+
+    /// [`KernelPanel::fill_f64`] with an explicit output row stride
+    /// (`ostride ≥ cols.len()`); row `r` of the block lands at
+    /// `out[r*ostride ..][.. cols.len()]`. Serial — callers parallelize
+    /// over row chunks.
+    pub fn fill_f64_strided(
+        &self,
+        rows: &[usize],
+        cols: &[usize],
+        ostride: usize,
+        out: &mut [f64],
+    ) {
+        let nc = cols.len();
+        assert!(ostride >= nc, "fill: stride narrower than the column set");
+        if rows.is_empty() || nc == 0 {
+            return;
+        }
+        assert!(
+            out.len() >= (rows.len() - 1) * ostride + nc,
+            "fill: output buffer too small"
+        );
+        if rows.len() == 1 {
+            // Single-row fast path (the streaming cache's miss batches):
+            // direct sequential dots, no pack, no allocation. Bit-identical
+            // to the micro-kernel by the fmath reduction-order contract.
+            let xi = self.ds.row(rows[0]);
+            for (o, &col) in out[..nc].iter_mut().zip(cols.iter()) {
+                *o = fmath::dot_f64(xi, self.ds.row(col));
+            }
+            self.finish_rows(rows, cols, ostride, out);
+            return;
+        }
+        let d = self.ds.d;
+        // Dimension-major packed column panel: pack[t][c] = x_{cols[c0+c]}[t],
+        // zero-padded to PANEL_COLS so the micro-kernel is branch-free.
+        // The buffer is thread-local: the hot paths call this once per
+        // column tile per chunk, and a fresh allocation each time would be
+        // avoidable traffic in the dispatch-sensitive iteration loop.
+        PACK_BUF.with(|cell| {
+            let mut pack = cell.borrow_mut();
+            pack.resize(d, [0.0; PANEL_COLS]);
+            let mut c0 = 0;
+            while c0 < nc {
+                let cw = PANEL_COLS.min(nc - c0);
+                for (c, &col) in cols[c0..c0 + cw].iter().enumerate() {
+                    for (slab, &v) in pack.iter_mut().zip(self.ds.row(col)) {
+                        slab[c] = v as f64;
+                    }
+                }
+                // Zero the padding lanes (stale from earlier blocks/calls).
+                if cw < PANEL_COLS {
+                    for slab in pack.iter_mut() {
+                        for lane in slab.iter_mut().skip(cw) {
+                            *lane = 0.0;
+                        }
+                    }
+                }
+                let mut r0 = 0;
+                while r0 < rows.len() {
+                    let rw = PANEL_ROWS.min(rows.len() - r0);
+                    let acc = self.dot_micro_kernel(&rows[r0..r0 + rw], &pack);
+                    for (r, accr) in acc.iter().enumerate().take(rw) {
+                        let dst =
+                            &mut out[(r0 + r) * ostride + c0..(r0 + r) * ostride + c0 + cw];
+                        dst.copy_from_slice(&accr[..cw]);
+                    }
+                    r0 += rw;
+                }
+                c0 += cw;
+            }
+        });
+        self.finish_rows(rows, cols, ostride, out);
+    }
+
+    /// Batched finish pass (the `exp` loop for Gaussian/Laplacian) over an
+    /// already-filled dot block.
+    fn finish_rows(&self, rows: &[usize], cols: &[usize], ostride: usize, out: &mut [f64]) {
+        if matches!(self.func, KernelFunction::Linear) {
+            return;
+        }
+        let nc = cols.len();
+        for (r, &row) in rows.iter().enumerate() {
+            let (ni, _) = self.norm_pair(row, row);
+            let orow = &mut out[r * ostride..r * ostride + nc];
+            for (o, &col) in orow.iter_mut().zip(cols.iter()) {
+                let (_, nj) = self.norm_pair(row, col);
+                *o = Self::finish(self.func, ni, nj, *o);
+            }
+        }
+    }
+
+    /// The register-tiled dot micro-kernel: up to [`PANEL_ROWS`] rows
+    /// against one packed [`PANEL_COLS`]-wide column panel. Each of the
+    /// `MR × NR` accumulators is a sequential f64 chain over `d` —
+    /// bit-identical to [`fmath::dot_f64`] — and the chains are mutually
+    /// independent, which is what the autovectorizer needs.
+    #[inline]
+    fn dot_micro_kernel(
+        &self,
+        rows: &[usize],
+        pack: &[[f64; PANEL_COLS]],
+    ) -> [[f64; PANEL_COLS]; PANEL_ROWS] {
+        let mut acc = [[0.0f64; PANEL_COLS]; PANEL_ROWS];
+        match rows {
+            [r0, r1, r2, r3] => {
+                let (a0, a1) = (self.ds.row(*r0), self.ds.row(*r1));
+                let (a2, a3) = (self.ds.row(*r2), self.ds.row(*r3));
+                // Zipped iteration (all streams have length d) keeps the
+                // inner loop free of bounds checks.
+                let streams = pack.iter().zip(a0).zip(a1).zip(a2).zip(a3);
+                for ((((slab, &x0), &x1), &x2), &x3) in streams {
+                    let (v0, v1) = (x0 as f64, x1 as f64);
+                    let (v2, v3) = (x2 as f64, x3 as f64);
+                    for c in 0..PANEL_COLS {
+                        acc[0][c] += v0 * slab[c];
+                        acc[1][c] += v1 * slab[c];
+                        acc[2][c] += v2 * slab[c];
+                        acc[3][c] += v3 * slab[c];
+                    }
+                }
+            }
+            _ => {
+                for (accr, &row) in acc.iter_mut().zip(rows.iter()) {
+                    let a = self.ds.row(row);
+                    for (slab, &x) in pack.iter().zip(a) {
+                        let v = x as f64;
+                        for c in 0..PANEL_COLS {
+                            accr[c] += v * slab[c];
+                        }
+                    }
+                }
+            }
+        }
+        acc
+    }
+
+    /// Fill `out` (row-major, `rows.len() × cols.len()`) with `K(rows,
+    /// cols)` quantized to f32 — the exact values a materialized table
+    /// stores. `scratch` is a reusable f64 staging buffer (cleared and
+    /// resized as needed).
+    pub fn fill_f32(
+        &self,
+        rows: &[usize],
+        cols: &[usize],
+        scratch: &mut Vec<f64>,
+        out: &mut [f32],
+    ) {
+        let len = rows.len() * cols.len();
+        assert_eq!(out.len(), len, "fill_f32: bad output shape");
+        scratch.clear();
+        scratch.resize(len, 0.0);
+        self.fill_f64(rows, cols, scratch);
+        for (o, &v) in out.iter_mut().zip(scratch.iter()) {
+            *o = v as f32;
+        }
+    }
+
+    /// Fill one row's scattered kernel values as f32:
+    /// `out[m] = K(x, cols[m]) as f32`. Stack-buffered for the streaming
+    /// tile cache's miss batches (≤ one cache tile wide); falls back to a
+    /// heap scratch above that.
+    pub fn fill_row_f32(&self, x: usize, cols: &[usize], out: &mut [f32]) {
+        assert_eq!(cols.len(), out.len(), "fill_row_f32: bad shape");
+        const STACK: usize = 32;
+        if cols.len() <= STACK {
+            let mut buf = [0.0f64; STACK];
+            self.fill_f64(&[x], cols, &mut buf[..cols.len()]);
+            for (o, &v) in out.iter_mut().zip(buf[..cols.len()].iter()) {
+                *o = v as f32;
+            }
+        } else {
+            let mut scratch = Vec::new();
+            self.fill_f32(&[x], cols, &mut scratch, out);
+        }
+    }
+
+    /// [`KernelPanel::fill_row_f32`] for a `u32` column list (the streaming
+    /// tile cache's index width): converts through a stack buffer in
+    /// tile-sized chunks, allocation-free at any length.
+    pub fn fill_row_f32_u32(&self, x: usize, cols: &[u32], out: &mut [f32]) {
+        assert_eq!(cols.len(), out.len(), "fill_row_f32_u32: bad shape");
+        const STACK: usize = 32;
+        let mut buf = [0usize; STACK];
+        let mut c0 = 0;
+        while c0 < cols.len() {
+            let cw = STACK.min(cols.len() - c0);
+            for (b, &c) in buf[..cw].iter_mut().zip(&cols[c0..c0 + cw]) {
+                *b = c as usize;
+            }
+            self.fill_row_f32(x, &buf[..cw], &mut out[c0..c0 + cw]);
+            c0 += cw;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{blobs, SyntheticSpec};
+    use crate::util::rng::Rng;
+
+    /// Independent reference: the pre-panel difference-form scalar kernel.
+    fn reference_eval(func: KernelFunction, a: &[f32], b: &[f32]) -> f64 {
+        match func {
+            KernelFunction::Gaussian { kappa } => {
+                let mut s = 0.0f64;
+                for (x, y) in a.iter().zip(b.iter()) {
+                    let d = (*x - *y) as f64;
+                    s += d * d;
+                }
+                (-s / kappa).exp()
+            }
+            KernelFunction::Laplacian { sigma } => {
+                let mut s = 0.0f64;
+                for (x, y) in a.iter().zip(b.iter()) {
+                    let d = (*x - *y) as f64;
+                    s += d * d;
+                }
+                (-s.sqrt() / sigma).exp()
+            }
+            KernelFunction::Polynomial { gamma, coef0, degree } => {
+                let mut s = 0.0f64;
+                for (x, y) in a.iter().zip(b.iter()) {
+                    s += (*x as f64) * (*y as f64);
+                }
+                (gamma * s + coef0).powi(degree as i32)
+            }
+            KernelFunction::Linear => {
+                let mut s = 0.0f64;
+                for (x, y) in a.iter().zip(b.iter()) {
+                    s += (*x as f64) * (*y as f64);
+                }
+                s
+            }
+        }
+    }
+
+    fn kernels() -> Vec<KernelFunction> {
+        vec![
+            KernelFunction::Gaussian { kappa: 5.0 },
+            KernelFunction::Laplacian { sigma: 2.0 },
+            KernelFunction::Polynomial { gamma: 0.5, coef0: 1.0, degree: 3 },
+            KernelFunction::Linear,
+        ]
+    }
+
+    #[test]
+    fn panel_fill_matches_eval_idx_bitwise() {
+        let mut rng = Rng::seeded(21);
+        for d in [1usize, 3, 16, 128] {
+            let ds = blobs(&SyntheticSpec::new(60, d, 3), &mut rng);
+            for func in kernels() {
+                let p = KernelPanel::new(&ds, func);
+                // Odd shapes: remainder rows (5 % 4) and cols (13 % 8).
+                let rows: Vec<usize> = (0..5).map(|_| rng.below(ds.n)).collect();
+                let cols: Vec<usize> = (0..13).map(|_| rng.below(ds.n)).collect();
+                let mut out = vec![f64::NAN; rows.len() * cols.len()];
+                p.fill_f64(&rows, &cols, &mut out);
+                for (r, &i) in rows.iter().enumerate() {
+                    for (c, &j) in cols.iter().enumerate() {
+                        let got = out[r * cols.len() + c];
+                        let want = p.eval_idx(i, j);
+                        assert_eq!(
+                            got.to_bits(),
+                            want.to_bits(),
+                            "d={d} {func:?} ({i},{j}): {got} vs {want}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn panel_matches_difference_form_reference() {
+        let mut rng = Rng::seeded(33);
+        for d in [1usize, 3, 16, 128] {
+            let ds = blobs(&SyntheticSpec::new(40, d, 2), &mut rng);
+            for func in kernels() {
+                let p = KernelPanel::new(&ds, func);
+                for _ in 0..50 {
+                    let (i, j) = (rng.below(ds.n), rng.below(ds.n));
+                    let got = p.eval_idx(i, j);
+                    let want = reference_eval(func, ds.row(i), ds.row(j));
+                    let tol = 1e-6 * want.abs().max(1.0);
+                    assert!(
+                        (got - want).abs() <= tol,
+                        "d={d} {func:?} ({i},{j}): {got} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn strided_fill_writes_only_its_window() {
+        let mut rng = Rng::seeded(7);
+        let ds = blobs(&SyntheticSpec::new(30, 6, 2), &mut rng);
+        let p = KernelPanel::new(&ds, KernelFunction::Gaussian { kappa: 4.0 });
+        let rows = [2usize, 9, 17];
+        let cols = [1usize, 4, 7, 11, 20];
+        let stride = 9;
+        let mut out = vec![f64::NAN; rows.len() * stride];
+        p.fill_f64_strided(&rows, &cols, stride, &mut out);
+        for (r, &i) in rows.iter().enumerate() {
+            for (c, &j) in cols.iter().enumerate() {
+                assert_eq!(out[r * stride + c].to_bits(), p.eval_idx(i, j).to_bits());
+            }
+            for c in cols.len()..stride {
+                if r * stride + c < out.len() {
+                    assert!(out[r * stride + c].is_nan(), "wrote outside window");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn f32_fill_and_row_fill_agree() {
+        let mut rng = Rng::seeded(11);
+        let ds = blobs(&SyntheticSpec::new(50, 16, 2), &mut rng);
+        for func in kernels() {
+            let p = KernelPanel::new(&ds, func);
+            let rows: Vec<usize> = (0..7).map(|_| rng.below(ds.n)).collect();
+            let cols: Vec<usize> = (0..37).map(|_| rng.below(ds.n)).collect();
+            let mut scratch = Vec::new();
+            let mut block = vec![0.0f32; rows.len() * cols.len()];
+            p.fill_f32(&rows, &cols, &mut scratch, &mut block);
+            let mut row_out = vec![0.0f32; cols.len()];
+            for (r, &i) in rows.iter().enumerate() {
+                p.fill_row_f32(i, &cols, &mut row_out);
+                for (c, (&a, &b)) in
+                    block[r * cols.len()..(r + 1) * cols.len()].iter().zip(&row_out).enumerate()
+                {
+                    assert_eq!(a.to_bits(), b.to_bits(), "r={r} c={c}");
+                    assert_eq!(a.to_bits(), (p.eval_idx(i, cols[c]) as f32).to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn normalized_diagonal_is_exactly_one() {
+        let mut rng = Rng::seeded(2);
+        let ds = blobs(&SyntheticSpec::new(20, 8, 2), &mut rng);
+        for func in [
+            KernelFunction::Gaussian { kappa: 3.0 },
+            KernelFunction::Laplacian { sigma: 1.5 },
+        ] {
+            let p = KernelPanel::new(&ds, func);
+            for i in 0..ds.n {
+                assert_eq!(p.eval_idx(i, i), 1.0, "{func:?} diag({i})");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_shapes_are_noops() {
+        let mut rng = Rng::seeded(4);
+        let ds = blobs(&SyntheticSpec::new(10, 3, 1), &mut rng);
+        let p = KernelPanel::new(&ds, KernelFunction::Linear);
+        let mut out: Vec<f64> = vec![];
+        p.fill_f64(&[], &[], &mut out);
+        p.fill_f64(&[1, 2], &[], &mut out);
+        p.fill_f64(&[], &[1, 2], &mut out);
+    }
+}

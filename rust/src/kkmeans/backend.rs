@@ -39,9 +39,11 @@ pub trait AssignBackend {
 /// Gathers every center's support once into one concatenated
 /// structure-of-arrays buffer, caches `⟨Ĉ,Ĉ⟩` in the window, and runs the
 /// cross-term contraction `K(B, S)·w` through the provider's engine
-/// ([`KernelProvider::weighted_cross_into`]): parallel over batch rows, tiled over
-/// support columns so each tile of support features stays cache-resident
-/// across the whole batch chunk (DESIGN.md §5).
+/// ([`KernelProvider::weighted_cross_into`]): parallel over batch rows
+/// (pool-dispatched, no per-call thread spawns), with kernel values
+/// produced by the panel micro-kernels against cached row norms and tiled
+/// over support columns so each packed tile stays cache-resident across
+/// the whole batch chunk (DESIGN.md §5 and §7).
 #[derive(Debug, Default, Clone)]
 pub struct NativeBackend;
 

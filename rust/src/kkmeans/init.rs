@@ -38,8 +38,10 @@ pub fn choose_centers(
 /// Kernel k-means++ D² sampling over a candidate index set.
 /// Cost: O(|candidates| · k) kernel evaluations. The per-center distance
 /// sweep gathers `K(candidates, center)` through the provider's block
-/// engine — parallel over candidates, and tile-grouped on the streaming
-/// provider — with values identical to per-element [`feature_sqdist`].
+/// engine — parallel over candidates, served by the panel micro-kernels
+/// (with their cached-norm distance expansion) on feature kernels, and
+/// tile-grouped on the streaming provider — with values identical to
+/// per-element [`feature_sqdist`].
 fn kmeanspp(
     gram: &dyn KernelProvider,
     candidates: Vec<usize>,

@@ -32,8 +32,10 @@ pub struct KernelKMeansModel {
     pub kernel: KernelFunction,
     /// Feature dimension.
     pub d: usize,
-    /// Per center: support feature rows (flattened s×d) and coefficients.
-    centers: Vec<(Vec<f32>, Vec<f64>)>,
+    /// Per center: support feature rows (flattened s×d), coefficients,
+    /// and cached squared norms `‖s‖²` (one per support row) for the
+    /// panel-style distance expansion in [`KernelKMeansModel::distances`].
+    centers: Vec<(Vec<f32>, Vec<f64>, Vec<f64>)>,
     /// ⟨Ĉ_j, Ĉ_j⟩ per center.
     cc: Vec<f64>,
 }
@@ -51,11 +53,16 @@ impl KernelKMeansModel {
             .map(|w| {
                 let mut feats = Vec::new();
                 let mut coefs = Vec::new();
+                let mut norms = Vec::new();
                 for (y, c) in w.support() {
                     feats.extend_from_slice(ds.row(y));
                     coefs.push(c);
+                    // Per-row O(d) — bit-identical to Dataset::sq_norms
+                    // without forcing the full-store cache build (which
+                    // dot-product kernels would never read).
+                    norms.push(crate::util::fmath::sq_norm_f64(ds.row(y)));
                 }
-                (feats, coefs)
+                (feats, coefs, norms)
             })
             .collect();
         let cc = windows.iter_mut().map(|w| w.self_inner(&gram)).collect();
@@ -68,16 +75,25 @@ impl KernelKMeansModel {
     }
 
     /// Squared feature-space distances of one new point to every center.
+    ///
+    /// The query norm `‖x‖²` is computed once and each support norm comes
+    /// from the freeze-time cache, so every kernel value costs a single
+    /// inner product — bit-identical to `KernelFunction::eval` (the panel
+    /// arithmetic, `KernelPanel::finish` over the same sequential dot).
     pub fn distances(&self, x: &[f32]) -> Vec<f64> {
         assert_eq!(x.len(), self.d, "feature dimension mismatch");
         let kxx = self.kernel.eval_self(x);
+        let nx = crate::util::fmath::sq_norm_f64(x);
         self.centers
             .iter()
             .zip(self.cc.iter())
-            .map(|((feats, coefs), &cc)| {
+            .map(|((feats, coefs, norms), &cc)| {
                 let mut cross = 0.0;
-                for (s, &c) in feats.chunks_exact(self.d).zip(coefs.iter()) {
-                    cross += c * self.kernel.eval(x, s);
+                for ((s, &c), &ns) in
+                    feats.chunks_exact(self.d).zip(coefs.iter()).zip(norms.iter())
+                {
+                    let dot = crate::util::fmath::dot_f64(x, s);
+                    cross += c * crate::kernels::KernelPanel::finish(self.kernel, nx, ns, dot);
                 }
                 (kxx - 2.0 * cross + cc).max(0.0)
             })
@@ -102,7 +118,7 @@ impl KernelKMeansModel {
 
     /// Total support size (model footprint in points).
     pub fn support_points(&self) -> usize {
-        self.centers.iter().map(|(_, c)| c.len()).sum()
+        self.centers.iter().map(|(_, c, _)| c.len()).sum()
     }
 }
 
@@ -154,6 +170,9 @@ impl StreamingKernelKMeans {
         let n0 = self.store.n;
         self.store.features.extend_from_slice(rows);
         self.store.n += rows.len() / d;
+        // The store grew in place: drop the cached row norms so the panel
+        // engine rebuilds them at the new length.
+        self.store.invalidate_caches();
         (n0..self.store.n).collect()
     }
 

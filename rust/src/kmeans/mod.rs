@@ -15,24 +15,24 @@ use crate::data::Dataset;
 use crate::util::rng::Rng;
 
 /// k-means++ initialization on raw features: returns k explicit centers
-/// (row-major k×d).
+/// (row-major k×d). Every candidate center is a dataset point, so the D²
+/// sweep runs point-to-point through [`Dataset::sqdist`] — the cached
+/// squared norms plus one inner product per pair, instead of re-deriving
+/// per-feature differences against a copied center vector.
 pub fn kmeanspp_features(ds: &Dataset, k: usize, rng: &mut Rng) -> Vec<f64> {
     assert!(k >= 1 && k <= ds.n);
     let d = ds.d;
     let mut centers = Vec::with_capacity(k * d);
     let first = rng.below(ds.n);
     centers.extend(ds.row(first).iter().map(|&v| v as f64));
-    let mut min_d2: Vec<f64> = (0..ds.n)
-        .map(|i| sqdist_to_center(ds.row(i), &centers[0..d]))
-        .collect();
+    let mut min_d2: Vec<f64> = (0..ds.n).map(|i| ds.sqdist(i, first)).collect();
     while centers.len() < k * d {
         let next = rng.weighted_choice(&min_d2);
-        let start = centers.len();
         centers.extend(ds.row(next).iter().map(|&v| v as f64));
-        for i in 0..ds.n {
-            let d2 = sqdist_to_center(ds.row(i), &centers[start..start + d]);
-            if d2 < min_d2[i] {
-                min_d2[i] = d2;
+        for (i, m) in min_d2.iter_mut().enumerate() {
+            let d2 = ds.sqdist(i, next);
+            if d2 < *m {
+                *m = d2;
             }
         }
     }

@@ -65,44 +65,76 @@ impl Matrix {
         t
     }
 
-    /// C = A·B — parallel over row blocks of C. The i-k-j loop order keeps
-    /// the inner loop a contiguous FMA over B's row, which the compiler
-    /// auto-vectorizes.
+    /// Minimum fused multiply-adds a worker must have before another
+    /// thread pays off (≈ a few hundred µs of GEMM work).
+    const MIN_FLOPS_PER_WORKER: usize = 64 * 64 * 64;
+
+    /// C = A·B — parallel over row blocks of C through the worker pool.
+    /// The i-k-j loop order keeps the inner loop a contiguous FMA over B's
+    /// row, which the compiler auto-vectorizes; the k loop is blocked so
+    /// the touched rows of B stay L2-resident across the block's C rows
+    /// (the expm Padé ladder multiplies 768×768 and larger, where B no
+    /// longer fits in cache). Worker count comes from the *per-worker*
+    /// flop estimate `m·k·n / workers`, not from a flat total threshold —
+    /// the old check went parallel whenever the total crossed 64³, which
+    /// for wide-thread machines handed each worker far less work than the
+    /// dispatch cost.
+    ///
+    /// Zero entries of A are skipped only when A is actually sparse
+    /// (≥ 1/8 zeros, as in the identity-plus-perturbation Padé terms); the
+    /// dense variant runs branch-free in the inner loops.
     pub fn matmul(&self, b: &Matrix) -> Matrix {
         assert_eq!(self.cols, b.rows, "matmul shape mismatch");
         let (m, k, n) = (self.rows, self.cols, b.cols);
         let mut c = Matrix::zeros(m, n);
+        if m == 0 || k == 0 || n == 0 {
+            return c;
+        }
         let a_data = &self.data;
         let b_data = &b.data;
-        let workers = crate::util::parallel::num_threads().min(m).max(1);
-        let rows_per = m.div_ceil(workers);
-        let kernel = |row0: usize, cblock: &mut [f64]| {
+        // One O(m·k) scan decides the kernel variant; trivial next to the
+        // O(m·k·n) multiply it specializes.
+        let zeros = a_data.iter().filter(|v| **v == 0.0).count();
+        let sparse = zeros * 8 >= a_data.len();
+        // Block the k loop so each block's rows of B (kc·n f64) fit in
+        // ~128 KiB of L2 alongside the C rows being accumulated.
+        let kc = (16 * 1024 / n.max(1)).max(16).min(k);
+        let kernel = move |row0: usize, cblock: &mut [f64]| {
             let nrows = cblock.len() / n;
-            for ir in 0..nrows {
-                let i = row0 + ir;
-                let crow = &mut cblock[ir * n..(ir + 1) * n];
-                for kk in 0..k {
-                    let aik = a_data[i * k + kk];
-                    if aik == 0.0 {
-                        continue;
-                    }
-                    let brow = &b_data[kk * n..(kk + 1) * n];
-                    for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
-                        *cv += aik * bv;
+            let mut k0 = 0;
+            while k0 < k {
+                let k1 = (k0 + kc).min(k);
+                for ir in 0..nrows {
+                    let i = row0 + ir;
+                    let crow = &mut cblock[ir * n..(ir + 1) * n];
+                    let ablock = &a_data[i * k + k0..i * k + k1];
+                    if sparse {
+                        for (off, &aik) in ablock.iter().enumerate() {
+                            if aik == 0.0 {
+                                continue;
+                            }
+                            let brow = &b_data[(k0 + off) * n..(k0 + off + 1) * n];
+                            for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                                *cv += aik * bv;
+                            }
+                        }
+                    } else {
+                        for (off, &aik) in ablock.iter().enumerate() {
+                            let brow = &b_data[(k0 + off) * n..(k0 + off + 1) * n];
+                            for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                                *cv += aik * bv;
+                            }
+                        }
                     }
                 }
+                k0 = k1;
             }
         };
-        if workers == 1 || m * k * n < 64 * 64 * 64 {
-            kernel(0, &mut c.data);
-        } else {
-            std::thread::scope(|scope| {
-                for (bi, block) in c.data.chunks_mut(rows_per * n).enumerate() {
-                    let kernel = &kernel;
-                    scope.spawn(move || kernel(bi * rows_per, block));
-                }
-            });
-        }
+        let workers = crate::util::parallel::num_threads()
+            .min((m * k * n) / Self::MIN_FLOPS_PER_WORKER)
+            .min(m)
+            .max(1);
+        crate::util::parallel::par_rows_mut_workers(&mut c.data, n, workers, kernel);
         c
     }
 
@@ -283,6 +315,44 @@ mod tests {
             let slow = naive_matmul(&a, &b);
             assert!(fast.max_abs_diff(&slow) < 1e-10, "({m},{k},{n})");
         }
+    }
+
+    #[test]
+    fn matmul_matches_naive_across_k_blocks() {
+        // n = 300 gives kc = max(16, 16384/300) = 54, so k = 130 crosses
+        // several k-blocks; results must be bit-compatible with the naive
+        // ascending-k accumulation (blocking preserves the order).
+        let mut rng = Rng::seeded(8);
+        let a = random(&mut rng, 20, 130);
+        let b = random(&mut rng, 130, 300);
+        assert!(a.matmul(&b).max_abs_diff(&naive_matmul(&a, &b)) < 1e-10);
+    }
+
+    #[test]
+    fn matmul_sparse_variant_matches() {
+        // > 1/8 zeros flips the skip-zero kernel on.
+        let mut rng = Rng::seeded(9);
+        let mut a = random(&mut rng, 33, 70);
+        for (i, v) in a.data.iter_mut().enumerate() {
+            if i % 3 != 0 {
+                *v = 0.0;
+            }
+        }
+        let b = random(&mut rng, 70, 41);
+        assert!(a.matmul(&b).max_abs_diff(&naive_matmul(&a, &b)) < 1e-10);
+    }
+
+    #[test]
+    fn matmul_empty_dims() {
+        let a = Matrix::zeros(0, 5);
+        let b = Matrix::zeros(5, 4);
+        let c = a.matmul(&b);
+        assert_eq!((c.rows, c.cols), (0, 4));
+        let a = Matrix::zeros(3, 0);
+        let b = Matrix::zeros(0, 2);
+        let c = a.matmul(&b);
+        assert_eq!((c.rows, c.cols), (3, 2));
+        assert!(c.data.iter().all(|&v| v == 0.0));
     }
 
     #[test]

@@ -1,0 +1,79 @@
+//! Scalar floating-point primitives that pin the panel engine's
+//! per-value reduction order.
+//!
+//! Every kernel value in the crate — scalar [`crate::kernels::KernelFunction::eval`],
+//! panel tile fills, the materialized table, the streaming tile cache — is
+//! computed from f32 features through **exactly** the arithmetic defined
+//! here: each inner product is a single sequential f64 chain over the
+//! feature dimension. The panel micro-kernels gain their speed from
+//! instruction-level parallelism *across* output values (32 independent
+//! chains in flight), never from re-associating *within* one value, so a
+//! value computed by any tile shape, any thread count, or the scalar
+//! fallback is bit-for-bit the same f64 — the invariant the
+//! streaming-vs-materialized equivalence suite pins.
+
+/// `Σ_t a[t]·b[t]` with each f32 widened to f64 and accumulated in one
+/// sequential f64 chain — the reduction order every panel path replays.
+#[inline]
+pub fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
+    let mut s = 0.0f64;
+    for (x, y) in a.iter().zip(b.iter()) {
+        s += (*x as f64) * (*y as f64);
+    }
+    s
+}
+
+/// `‖a‖²` via [`dot_f64`] — the cached per-row squared norm.
+#[inline]
+pub fn sq_norm_f64(a: &[f32]) -> f64 {
+    dot_f64(a, a)
+}
+
+/// Squared Euclidean distance from cached squared norms and an inner
+/// product: `(‖a‖² + ‖b‖²) − 2⟨a,b⟩`, clamped at 0 against cancellation
+/// (the norms expansion can go a few ulp negative where the difference
+/// form cannot). The association `(na + nb) − 2·dot` is part of the
+/// bit-identity contract — do not re-order.
+#[inline]
+pub fn sqdist_from_norms(na: f64, nb: f64, dot: f64) -> f64 {
+    ((na + nb) - 2.0 * dot).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [4.0f32, -5.0, 6.0];
+        assert_eq!(dot_f64(&a, &b), 4.0 - 10.0 + 18.0);
+        assert_eq!(dot_f64(&[], &[]), 0.0);
+        assert_eq!(sq_norm_f64(&[3.0, 4.0]), 25.0);
+    }
+
+    #[test]
+    fn sqdist_exact_small_integers() {
+        // (0,0) vs (3,4): norms 0 and 25, dot 0 → 25.
+        assert_eq!(sqdist_from_norms(0.0, 25.0, 0.0), 25.0);
+        // Identical points: (n + n) − 2n is exactly 0 in IEEE arithmetic.
+        let n = sq_norm_f64(&[1.5, -2.25, 8.0]);
+        assert_eq!(sqdist_from_norms(n, n, n), 0.0);
+    }
+
+    #[test]
+    fn sqdist_clamps_cancellation() {
+        // Force a tiny negative: na + nb slightly below 2·dot.
+        let v = sqdist_from_norms(1.0, 1.0, 1.0 + 1e-15);
+        assert_eq!(v, 0.0);
+    }
+
+    #[test]
+    fn sqdist_is_commutative_in_norms() {
+        let (na, nb, d) = (7.25, 0.125, 0.5);
+        assert_eq!(
+            sqdist_from_norms(na, nb, d).to_bits(),
+            sqdist_from_norms(nb, na, d).to_bits()
+        );
+    }
+}

@@ -7,7 +7,9 @@
 
 pub mod cli;
 pub mod error;
+pub mod fmath;
 pub mod json;
 pub mod parallel;
+pub mod pool;
 pub mod rng;
 pub mod timing;

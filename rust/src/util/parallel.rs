@@ -1,15 +1,21 @@
-//! Data-parallel helpers over std::thread scoped threads (rayon replacement).
+//! Data-parallel helpers over the persistent worker pool (rayon
+//! replacement — see [`super::pool`] and ADR-002).
 //!
 //! The clustering hot paths are embarrassingly parallel over rows (batch
 //! points, dataset points, matrix rows). [`par_chunks_mut`] splits an output
 //! slice into contiguous chunks, one per worker; [`par_map_indexed`] maps an
 //! index range; both fall back to the serial path for tiny inputs where
-//! thread spawn overhead dominates.
+//! dispatch overhead dominates. No helper spawns OS threads per invocation:
+//! every parallel region is a *job* submitted to the process-wide pool,
+//! whose `num_threads() − 1` workers are spawned once and reused.
 
+use super::pool;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// Number of worker threads to use: `MBKK_THREADS` env override, else
 /// available parallelism, capped at 16 (the workloads stop scaling there).
+/// Read once and cached — the pool sizes itself off the first call.
 pub fn num_threads() -> usize {
     static CACHED: AtomicUsize = AtomicUsize::new(0);
     let cached = CACHED.load(Ordering::Relaxed);
@@ -49,11 +55,15 @@ where
         return;
     }
     let chunk = n.div_ceil(workers);
-    std::thread::scope(|scope| {
-        for (ci, piece) in out.chunks_mut(chunk).enumerate() {
-            let f = &f;
-            scope.spawn(move || f(ci * chunk, piece));
-        }
+    let njobs = n.div_ceil(chunk);
+    let view = SharedSlice::new(out);
+    let view = &view;
+    pool::run(njobs, &|ci| {
+        let start = ci * chunk;
+        let len = chunk.min(n - start);
+        // SAFETY: job indices map to disjoint [start, start+len) ranges.
+        let piece = unsafe { view.chunk_mut(start, len) };
+        f(start, piece);
     });
 }
 
@@ -64,25 +74,39 @@ pub fn par_rows_mut<T: Send, F>(out: &mut [T], row_len: usize, f: F)
 where
     F: Fn(usize, &mut [T]) + Sync,
 {
+    let workers = num_threads()
+        .min(out.len().div_ceil(MIN_ITEMS_PER_THREAD))
+        .max(1);
+    par_rows_mut_workers(out, row_len, workers, f);
+}
+
+/// [`par_rows_mut`] with an explicit worker-count target, for callers whose
+/// per-item cost is far from uniform bytes (matmul sizes its workers from a
+/// flop estimate, not from `out.len()`).
+pub fn par_rows_mut_workers<T: Send, F>(out: &mut [T], row_len: usize, workers: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
     assert!(row_len > 0 && out.len() % row_len == 0, "non-rectangular data");
     let nrows = out.len() / row_len;
     if nrows == 0 {
         return;
     }
-    let workers = num_threads()
-        .min(out.len().div_ceil(MIN_ITEMS_PER_THREAD))
-        .min(nrows)
-        .max(1);
+    let workers = workers.min(nrows).max(1);
     if workers == 1 {
         f(0, out);
         return;
     }
     let rows_per = nrows.div_ceil(workers);
-    std::thread::scope(|scope| {
-        for (bi, block) in out.chunks_mut(rows_per * row_len).enumerate() {
-            let f = &f;
-            scope.spawn(move || f(bi * rows_per, block));
-        }
+    let njobs = nrows.div_ceil(rows_per);
+    let view = SharedSlice::new(out);
+    let view = &view;
+    pool::run(njobs, &|bi| {
+        let row0 = bi * rows_per;
+        let rows = rows_per.min(nrows - row0);
+        // SAFETY: job indices map to disjoint row-aligned ranges.
+        let block = unsafe { view.chunk_mut(row0 * row_len, rows * row_len) };
+        f(row0, block);
     });
 }
 
@@ -120,51 +144,37 @@ pub fn par_rows_mut3<A: Send, B: Send, C: Send, F>(
         return;
     }
     let rows_per = nrows.div_ceil(workers);
-    std::thread::scope(|scope| {
-        let blocks = a
-            .chunks_mut(rows_per * la)
-            .zip(b.chunks_mut(rows_per * lb))
-            .zip(c.chunks_mut(rows_per * lc));
-        for (bi, ((ba, bb), bc)) in blocks.enumerate() {
-            let f = &f;
-            scope.spawn(move || f(bi * rows_per, ba, bb, bc));
-        }
+    let njobs = nrows.div_ceil(rows_per);
+    let va = SharedSlice::new(a);
+    let vb = SharedSlice::new(b);
+    let vc = SharedSlice::new(c);
+    let (va, vb, vc) = (&va, &vb, &vc);
+    pool::run(njobs, &|bi| {
+        let row0 = bi * rows_per;
+        let rows = rows_per.min(nrows - row0);
+        // SAFETY: job indices map to disjoint row-aligned ranges in each of
+        // the three arrays.
+        let (ba, bb, bc) = unsafe {
+            (
+                va.chunk_mut(row0 * la, rows * la),
+                vb.chunk_mut(row0 * lb, rows * lb),
+                vc.chunk_mut(row0 * lc, rows * lc),
+            )
+        };
+        f(row0, ba, bb, bc);
     });
 }
 
-/// Run `f(i)` for every `i in 0..count` across worker threads, pulling
-/// indices from a shared atomic counter. Unlike the contiguous-chunk
-/// helpers this load-balances *dynamically*, which matters when work per
-/// index is irregular — e.g. the symmetric gram tiles, where diagonal tiles
-/// do half the work of off-diagonal ones.
+/// Run `f(i)` for every `i in 0..count` across the pool, one task per
+/// index. Tasks are claimed from a shared atomic counter, so this
+/// load-balances *dynamically*, which matters when work per index is
+/// irregular — e.g. the symmetric gram tiles, where diagonal tiles do half
+/// the work of off-diagonal ones.
 pub fn par_dynamic<F>(count: usize, f: F)
 where
     F: Fn(usize) + Sync,
 {
-    if count == 0 {
-        return;
-    }
-    let workers = num_threads().min(count);
-    if workers <= 1 {
-        for i in 0..count {
-            f(i);
-        }
-        return;
-    }
-    let next = AtomicUsize::new(0);
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            let f = &f;
-            let next = &next;
-            scope.spawn(move || loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= count {
-                    break;
-                }
-                f(i);
-            });
-        }
-    });
+    pool::run(count, &f);
 }
 
 /// Shared-write view over a mutable slice for parallel kernels whose write
@@ -173,8 +183,10 @@ where
 /// `(j, i)` from the tile that owns the unordered pair `{i, j}`.
 ///
 /// Safety contract: concurrent [`SharedSlice::write`] calls from different
-/// threads must target distinct indices. The only constructor borrows the
-/// slice mutably for the view's lifetime, so no other access can coexist.
+/// threads must target distinct indices, and [`SharedSlice::chunk_mut`]
+/// subslices handed to different threads must not overlap. The only
+/// constructor borrows the slice mutably for the view's lifetime, so no
+/// other access can coexist.
 pub struct SharedSlice<'a, T> {
     ptr: *mut T,
     len: usize,
@@ -182,8 +194,8 @@ pub struct SharedSlice<'a, T> {
 }
 
 // SAFETY: the view is only a carrier for the raw pointer; all dereferencing
-// goes through the `unsafe fn write` whose contract forbids overlapping
-// writes. `T: Send` bounds match sending &mut [T] chunks to threads.
+// goes through the `unsafe` methods whose contracts forbid overlapping
+// access. `T: Send` bounds match sending &mut [T] chunks to threads.
 unsafe impl<'a, T: Send> Send for SharedSlice<'a, T> {}
 unsafe impl<'a, T: Send> Sync for SharedSlice<'a, T> {}
 
@@ -218,6 +230,19 @@ impl<'a, T> SharedSlice<'a, T> {
         debug_assert!(idx < self.len, "SharedSlice write out of bounds");
         *self.ptr.add(idx) = value;
     }
+
+    /// Reborrow `[start, start + len)` as a mutable subslice.
+    ///
+    /// # Safety
+    ///
+    /// The range must be in bounds, and ranges handed to concurrently
+    /// running closures must be pairwise disjoint (no element may be
+    /// reachable through two live subslices).
+    #[inline]
+    pub unsafe fn chunk_mut(&self, start: usize, len: usize) -> &'a mut [T] {
+        debug_assert!(start + len <= self.len, "SharedSlice chunk out of bounds");
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
 }
 
 /// Parallel map over `0..n`, collecting results in order.
@@ -235,8 +260,9 @@ where
     out
 }
 
-/// Parallel fold: maps `0..n` through `map` on worker threads and reduces the
-/// per-thread partials with `reduce`. Used for objective evaluation (sums).
+/// Parallel fold: maps `0..n` through `map` on pool workers and reduces the
+/// per-chunk partials with `reduce`, in chunk order (deterministic for a
+/// fixed `num_threads()`). Used for objective evaluation (sums).
 pub fn par_fold<A, M, R>(n: usize, identity: A, map: M, reduce: R) -> A
 where
     A: Send + Clone,
@@ -255,39 +281,42 @@ where
         return acc;
     }
     let chunk = n.div_ceil(workers);
-    let mut partials: Vec<Option<A>> = Vec::new();
-    std::thread::scope(|scope| {
-        let mut handles = Vec::new();
-        for w in 0..workers {
-            let lo = w * chunk;
-            let hi = ((w + 1) * chunk).min(n);
-            if lo >= hi {
-                break;
+    let njobs = n.div_ceil(chunk);
+    let partials: Vec<Mutex<Option<A>>> = (0..njobs).map(|_| Mutex::new(None)).collect();
+    // Per-job identity seeds, cloned up front: `A` is only `Send`, so the
+    // tasks take owned seeds instead of sharing `&identity` across threads.
+    let seeds: Vec<Mutex<Option<A>>> =
+        (0..njobs).map(|_| Mutex::new(Some(identity.clone()))).collect();
+    {
+        let partials = &partials;
+        let seeds = &seeds;
+        let map = &map;
+        let reduce = &reduce;
+        pool::run(njobs, &|ci| {
+            let lo = ci * chunk;
+            let hi = (lo + chunk).min(n);
+            let mut acc = seeds[ci]
+                .lock()
+                .expect("par_fold seed poisoned")
+                .take()
+                .expect("par_fold seed claimed twice");
+            for i in lo..hi {
+                acc = reduce(acc, map(i));
             }
-            let map = &map;
-            let reduce = &reduce;
-            let id = identity.clone();
-            handles.push(scope.spawn(move || {
-                let mut acc = id;
-                for i in lo..hi {
-                    acc = reduce(acc, map(i));
-                }
-                acc
-            }));
-        }
-        for h in handles {
-            partials.push(Some(h.join().expect("worker panicked")));
-        }
-    });
+            *partials[ci].lock().expect("par_fold partial poisoned") = Some(acc);
+        });
+    }
     let mut acc = identity;
-    for p in partials.into_iter().flatten() {
-        acc = reduce(acc, p);
+    for p in partials {
+        let p = p.into_inner().expect("par_fold partial poisoned");
+        acc = reduce(acc, p.expect("worker panicked"));
     }
     acc
 }
 
-/// Run a list of independent jobs with at most `num_threads()` in flight.
-/// Used by the experiment coordinator to run grid cells concurrently.
+/// Run a list of independent jobs with bounded concurrency (the pool's
+/// width). Used by the experiment coordinator to run grid cells
+/// concurrently.
 pub fn par_run_jobs<T: Send, F>(jobs: Vec<F>) -> Vec<T>
 where
     F: FnOnce() -> T + Send,
@@ -296,28 +325,21 @@ where
     if n == 0 {
         return Vec::new();
     }
-    let workers = num_threads().min(n);
-    if workers == 1 {
+    if num_threads() == 1 {
         return jobs.into_iter().map(|j| j()).collect();
     }
-    let queue: Vec<std::sync::Mutex<Option<F>>> =
-        jobs.into_iter().map(|j| std::sync::Mutex::new(Some(j))).collect();
-    let next = AtomicUsize::new(0);
-    let results: Vec<std::sync::Mutex<Option<T>>> =
-        (0..n).map(|_| std::sync::Mutex::new(None)).collect();
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let job = queue[i].lock().unwrap().take().unwrap();
-                let r = job();
-                *results[i].lock().unwrap() = Some(r);
-            });
-        }
-    });
+    let queue: Vec<Mutex<Option<F>>> =
+        jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
+    let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    {
+        let queue = &queue;
+        let results = &results;
+        pool::run(n, &|i| {
+            let job = queue[i].lock().unwrap().take().expect("job claimed twice");
+            let r = job();
+            *results[i].lock().unwrap() = Some(r);
+        });
+    }
     results
         .into_iter()
         .map(|m| m.into_inner().unwrap().expect("job missing result"))
@@ -437,5 +459,37 @@ mod tests {
         assert_eq!(par_fold(0, 7i32, |_| 0, |a, b| a + b), 7);
         let out: Vec<i32> = par_run_jobs(Vec::<Box<dyn FnOnce() -> i32 + Send>>::new());
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn nested_parallel_regions_complete() {
+        // A region whose tasks submit further regions, with BOTH levels
+        // genuinely on the pool: par_dynamic submits one task per index
+        // (no serial-path threshold), so the outer tasks run on pool
+        // workers and the inner submissions exercise nested draining. The
+        // pool must never deadlock, and every inner result must land.
+        let got: Vec<Mutex<u64>> = (0..64).map(|_| Mutex::new(0)).collect();
+        par_dynamic(64, |i| {
+            let inner = par_fold(512, 0u64, |j| (i * j) as u64, |a, b| a + b);
+            *got[i].lock().unwrap() = inner;
+        });
+        for (i, v) in got.iter().enumerate() {
+            assert_eq!(*v.lock().unwrap(), (i as u64) * (511 * 512 / 2));
+        }
+    }
+
+    #[test]
+    fn par_rows_mut_workers_explicit_count() {
+        let mut out = vec![0usize; 37 * 4];
+        par_rows_mut_workers(&mut out, 4, 8, |row0, block| {
+            for (r, row) in block.chunks_mut(4).enumerate() {
+                for v in row.iter_mut() {
+                    *v = row0 + r;
+                }
+            }
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i / 4);
+        }
     }
 }

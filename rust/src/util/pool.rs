@@ -1,0 +1,303 @@
+//! The persistent worker pool behind every `par_*` helper (ADR-002).
+//!
+//! Earlier revisions spawned OS threads per parallel region through
+//! `std::thread::scope` (ADR-001). That costs ~10µs of spawn/join per
+//! region, which is invisible next to second-long materializations but
+//! dominates the 1-2 ms Algorithm-2 iterations the paper's Õ(kb²) bound
+//! promises — an iteration crosses several parallel regions (cross-term
+//! contraction, distance finish, px sweep), so spawn overhead alone could
+//! eat tens of percent of the budget. This module keeps `num_threads() − 1`
+//! workers alive for the process lifetime and hands them *jobs*: a shared
+//! closure plus an atomic task counter.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Zero dependencies** — std `Mutex`/`Condvar`/atomics only.
+//! 2. **Borrowing closures** — the `par_*` helpers pass closures that
+//!    borrow grams and output slices from the caller's stack, so jobs
+//!    cannot be `'static`. [`run`] erases the closure lifetime and
+//!    guarantees the erased reference is dead before it returns: it blocks
+//!    until every task of its job has *finished* (not merely been claimed),
+//!    and workers never touch a job whose task counter is exhausted.
+//! 3. **Nested submission** — a worker executing a task may itself call
+//!    [`run`] (matmul inside a coordinator grid cell, norms inside a panel
+//!    fill). The submitting thread always participates in draining its own
+//!    job, so a nested region completes even when every pool worker is
+//!    busy; idle workers may steal nested tasks through the shared queue.
+//!    No thread ever blocks while holding a task, so there is no circular
+//!    wait.
+//! 4. **Panic transparency** — a panicking task is caught on the worker,
+//!    its payload is carried back, and the submitting thread re-raises it
+//!    via `resume_unwind`, preserving `should_panic` messages exactly like
+//!    the scoped-thread join used to.
+//!
+//! Scheduling is deliberately simple: a `Mutex<Vec<Arc<Job>>>` of live
+//! jobs plus one `Condvar`. Tasks are claimed with `fetch_add` on the
+//! job's counter, which gives dynamic load balancing for free (the
+//! property the old `par_dynamic` built separately). The queue never holds
+//! more than a handful of jobs (one per in-flight parallel region), so a
+//! linear scan beats any cleverer structure.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, Once, OnceLock};
+
+/// A parallel region: `count` tasks sharing one lifetime-erased closure.
+struct Job {
+    /// The region's closure, borrowed from the submitting stack frame.
+    /// Only dereferenced for claimed task indices `< count`, all of which
+    /// complete before [`run`] returns — after that the pointer may dangle
+    /// but is provably never read again (the claim counter is exhausted).
+    f: *const (dyn Fn(usize) + Sync),
+    /// Number of tasks in the region.
+    count: usize,
+    /// Next unclaimed task index (may overshoot `count`).
+    next: AtomicUsize,
+    /// Tasks claimed but not yet finished + tasks unclaimed.
+    pending: AtomicUsize,
+    /// Set when any task panicked.
+    panicked: AtomicBool,
+    /// First panic payload, re-raised on the submitting thread.
+    payload: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+    /// Completion signal: guards nothing, pairs with `pending`.
+    done_lock: Mutex<()>,
+    done_cv: Condvar,
+}
+
+// SAFETY: `f` is only shared between threads inside `run`'s lifetime
+// window (see the field comment); the closure itself is `Sync`, and every
+// other field is a thread-safe primitive.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+/// Live-job queue + worker parking lot.
+struct Pool {
+    jobs: Mutex<Vec<Arc<Job>>>,
+    work_cv: Condvar,
+    /// Number of worker threads (pool width, excluding submitters).
+    workers: usize,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+static SPAWN_WORKERS: Once = Once::new();
+
+/// The pool, spawning its workers on first use. `None` when
+/// `num_threads() == 1` (everything stays serial).
+fn pool() -> Option<&'static Pool> {
+    let n = super::parallel::num_threads();
+    if n <= 1 {
+        return None;
+    }
+    let pool = POOL.get_or_init(|| Pool {
+        jobs: Mutex::new(Vec::new()),
+        work_cv: Condvar::new(),
+        workers: n - 1,
+    });
+    SPAWN_WORKERS.call_once(|| {
+        // The submitting thread always participates, so n−1 workers give n
+        // lanes of parallelism.
+        for w in 0..pool.workers {
+            std::thread::Builder::new()
+                .name(format!("mbkk-pool-{w}"))
+                .spawn(move || worker_loop(pool))
+                .expect("failed to spawn pool worker");
+        }
+    });
+    Some(pool)
+}
+
+/// Worker main: nap on the condvar until some job has unclaimed tasks,
+/// drain it, repeat. Exhausted jobs are pruned opportunistically (the
+/// submitter also prunes its own job, so this is belt-and-braces).
+fn worker_loop(pool: &'static Pool) {
+    let mut guard = pool.jobs.lock().expect("pool queue poisoned");
+    loop {
+        let job = guard
+            .iter()
+            .find(|j| j.next.load(Ordering::Relaxed) < j.count)
+            .cloned();
+        match job {
+            Some(job) => {
+                drop(guard);
+                run_tasks(&job);
+                guard = pool.jobs.lock().expect("pool queue poisoned");
+                guard.retain(|j| j.next.load(Ordering::Relaxed) < j.count);
+            }
+            None => {
+                guard = pool.work_cv.wait(guard).expect("pool queue poisoned");
+            }
+        }
+    }
+}
+
+/// Claim-and-execute loop shared by workers and the submitting thread.
+fn run_tasks(job: &Job) {
+    loop {
+        let i = job.next.fetch_add(1, Ordering::Relaxed);
+        if i >= job.count {
+            return;
+        }
+        // SAFETY: `i < count`, so `run` has not returned yet and the
+        // closure reference is alive (see the `Job::f` field contract).
+        let f = unsafe { &*job.f };
+        if let Err(p) = catch_unwind(AssertUnwindSafe(|| f(i))) {
+            let mut slot = job.payload.lock().expect("panic slot poisoned");
+            if slot.is_none() {
+                *slot = Some(p);
+            }
+            drop(slot);
+            job.panicked.store(true, Ordering::Relaxed);
+        }
+        // Release pairs with the Acquire load in `run`'s completion wait,
+        // making this task's writes visible to the submitter.
+        if job.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let _g = job.done_lock.lock().expect("done lock poisoned");
+            job.done_cv.notify_all();
+        }
+    }
+}
+
+/// Execute `f(0) … f(count − 1)` across the pool and the calling thread,
+/// returning once **all** tasks have finished. Tasks are claimed from a
+/// shared atomic counter, so irregular task costs load-balance
+/// dynamically. Panics in any task are re-raised here with their original
+/// payload. With one configured thread (or `count ≤ 1`) this is a plain
+/// serial loop — no pool is ever spawned.
+pub fn run(count: usize, f: &(dyn Fn(usize) + Sync)) {
+    if count == 0 {
+        return;
+    }
+    // Check the task count before touching the pool: a single-task region
+    // must stay serial without spawning workers it will never use.
+    let pool = if count > 1 { pool() } else { None };
+    let Some(pool) = pool else {
+        for i in 0..count {
+            f(i);
+        }
+        return;
+    };
+    // SAFETY of the lifetime erasure: the reference is only dereferenced
+    // for claimed tasks, and this function does not return until
+    // `pending == 0`, i.e. until every dereference has completed.
+    let f_static: &'static (dyn Fn(usize) + Sync) = unsafe {
+        std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
+    };
+    let job = Arc::new(Job {
+        f: f_static,
+        count,
+        next: AtomicUsize::new(0),
+        pending: AtomicUsize::new(count),
+        panicked: AtomicBool::new(false),
+        payload: Mutex::new(None),
+        done_lock: Mutex::new(()),
+        done_cv: Condvar::new(),
+    });
+    {
+        let mut q = pool.jobs.lock().expect("pool queue poisoned");
+        q.push(Arc::clone(&job));
+    }
+    // Wake only as many workers as the job can use (the submitter takes
+    // one lane itself) — notify_all would stampede the whole pool through
+    // a futex wake + queue-mutex bounce for a 2-task region.
+    for _ in 0..pool.workers.min(count - 1) {
+        pool.work_cv.notify_one();
+    }
+    // Participate: drain our own job so completion never depends on pool
+    // availability (this is what makes nested use deadlock-free).
+    run_tasks(&job);
+    {
+        let mut g = job.done_lock.lock().expect("done lock poisoned");
+        while job.pending.load(Ordering::Acquire) > 0 {
+            g = job.done_cv.wait(g).expect("done lock poisoned");
+        }
+    }
+    {
+        let mut q = pool.jobs.lock().expect("pool queue poisoned");
+        q.retain(|j| !Arc::ptr_eq(j, &job));
+    }
+    if job.panicked.load(Ordering::Relaxed) {
+        let payload = job.payload.lock().expect("panic slot poisoned").take();
+        match payload {
+            Some(p) => resume_unwind(p),
+            None => panic!("pool task panicked"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_every_index_exactly_once() {
+        let flags: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        run(1000, &|i| {
+            flags[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for f in &flags {
+            assert_eq!(f.load(Ordering::Relaxed), 1);
+        }
+    }
+
+    #[test]
+    fn zero_and_one_task_serial() {
+        run(0, &|_| panic!("must not run"));
+        let hit = AtomicUsize::new(0);
+        run(1, &|i| {
+            assert_eq!(i, 0);
+            hit.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hit.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn nested_submission_completes() {
+        // Every outer task submits an inner region; with a busy pool the
+        // submitting threads must drain their own jobs.
+        let total = AtomicUsize::new(0);
+        run(8, &|_| {
+            run(16, &|_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 8 * 16);
+    }
+
+    #[test]
+    fn writes_are_visible_after_run() {
+        let mut out = vec![0usize; 4096];
+        {
+            let view = crate::util::parallel::SharedSlice::new(&mut out);
+            let view = &view;
+            run(4096, &|i| unsafe { view.write(i, i + 1) });
+        }
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i + 1);
+        }
+    }
+
+    #[test]
+    fn panic_payload_is_preserved() {
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            run(64, &|i| {
+                if i == 33 {
+                    panic!("boom at 33");
+                }
+            });
+        }));
+        let payload = caught.expect_err("must propagate the panic");
+        let msg = payload
+            .downcast_ref::<&str>()
+            .copied()
+            .map(str::to_string)
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_default();
+        assert!(msg.contains("boom at 33"), "payload lost: {msg}");
+        // The pool must stay usable after a panicked job.
+        let n = AtomicUsize::new(0);
+        run(128, &|_| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 128);
+    }
+}
