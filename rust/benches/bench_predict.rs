@@ -1,0 +1,72 @@
+//! Prediction-service benchmarks (ISSUE 4): the batched [`PredictEngine`]
+//! against the scalar per-query `KernelKMeansModel::predict` path it
+//! replaces on the serving hot path, plus the artifact round-trip cost.
+//!
+//! Merges its samples into the repo-root `BENCH_baseline.json` perf
+//! trajectory (suite "prediction service" — the same suite the CLI's
+//! `serve-bench` loop records into).
+//!
+//! ```bash
+//! RUSTFLAGS="-C target-cpu=native" cargo bench --bench bench_predict
+//! ```
+//!
+//! `MBKK_BENCH_SCALE` shrinks the query set for smoke runs (CI uses 0.1).
+
+use mbkk::bench::BenchRunner;
+use mbkk::data::synthetic::{blobs, SyntheticSpec};
+use mbkk::kernels::{Gram, KernelFunction};
+use mbkk::kkmeans::{
+    KernelKMeansModel, NativeBackend, TruncatedConfig, TruncatedMiniBatchKernelKMeans,
+};
+use mbkk::serve::PredictEngine;
+use mbkk::util::rng::Rng;
+
+fn main() {
+    let mut runner = BenchRunner::new("prediction service");
+    let scale: f64 = std::env::var("MBKK_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+    let n = ((4000.0 * scale) as usize).max(512);
+    let mut rng = Rng::seeded(19);
+
+    for &d in &[16usize, 128] {
+        let ds = blobs(&SyntheticSpec::new(n, d, 8), &mut rng);
+        let kernel = KernelFunction::Gaussian { kappa: d as f64 };
+        let gram = Gram::on_the_fly(&ds, kernel);
+        let mut fit_rng = Rng::seeded(7);
+        let mut fit = TruncatedMiniBatchKernelKMeans::new(TruncatedConfig {
+            k: 8,
+            batch_size: 256,
+            tau: 100,
+            max_iters: 20,
+            ..Default::default()
+        })
+        .fit_with_backend(&gram, &mut NativeBackend, &mut fit_rng);
+        let model = KernelKMeansModel::freeze(&ds, kernel, &mut fit.centers);
+        let engine = PredictEngine::new(&model);
+        println!(
+            "  [setup] d={d}: {} queries x {} support points x {} centers",
+            ds.n,
+            model.support_points(),
+            model.k()
+        );
+
+        let scalar_name = format!("scalar predict batch d={d}");
+        let engine_name = format!("batched engine predict d={d}");
+        runner.bench(&scalar_name, || model.predict_all(&ds));
+        runner.bench(&engine_name, || engine.predict_batch(&ds.features));
+        if let Some(speedup) = runner.ratio(&scalar_name, &engine_name) {
+            println!("  -> batched speedup {speedup:.2}x at d={d}");
+        }
+
+        if d == 16 {
+            runner.bench("model save+load round-trip d=16", || {
+                KernelKMeansModel::from_bytes(&model.to_bytes()).expect("round-trip")
+            });
+        }
+    }
+
+    runner.write_csv();
+    runner.write_baseline(&BenchRunner::baseline_path());
+}

@@ -8,11 +8,13 @@
 //! unlocks million-point runs). Algorithms only ever see
 //! `&dyn KernelProvider`, so the choice is made once, here.
 
+use crate::bail;
 use crate::data::{registry, Dataset};
 use crate::kernels::{graph, sigma, CachedGram, CacheStats, Gram, KernelFunction, KernelProvider};
 use crate::kkmeans::{
-    FullBatchConfig, FullBatchKernelKMeans, Init, LearningRate, MiniBatchConfig,
-    MiniBatchKernelKMeans, TruncatedConfig, TruncatedMiniBatchKernelKMeans,
+    FullBatchConfig, FullBatchKernelKMeans, Init, KernelKMeansModel, LearningRate,
+    MiniBatchConfig, MiniBatchKernelKMeans, NativeBackend, TruncatedConfig,
+    TruncatedMiniBatchKernelKMeans,
 };
 use crate::kmeans::{KMeans, KMeansConfig, MiniBatchKMeans, MiniBatchKMeansConfig};
 use crate::metrics::{ari, nmi};
@@ -79,18 +81,7 @@ impl KernelSpec {
         let sw = Stopwatch::start();
         let built = match *self {
             KernelSpec::Gaussian { multiplier } => {
-                let kappa = sigma::kappa_heuristic_with(
-                    ds,
-                    rng,
-                    sigma::DEFAULT_PAIR_SAMPLES,
-                    multiplier,
-                );
-                let fly = Gram::on_the_fly(ds, KernelFunction::Gaussian { kappa });
-                if strategy.materializes(ds.n) {
-                    BuiltGram::Materialized(fly.materialize())
-                } else {
-                    BuiltGram::Streaming(CachedGram::new(fly, strategy.cache_bytes()))
-                }
+                build_gaussian(ds, rng, multiplier, strategy).0
             }
             KernelSpec::Knn { neighbors } => {
                 check_graph_kernel_feasible("knn", ds.n, strategy);
@@ -117,6 +108,29 @@ impl KernelSpec {
             _ => None,
         }
     }
+}
+
+/// Resolve the Gaussian feature kernel (κ heuristic) and realize its gram
+/// under a strategy — the single Gaussian build path shared by
+/// [`KernelSpec::build_with`] (and through it every `run`) and
+/// [`fit_servable_model`], so the two can never drift in RNG consumption
+/// or gram realization.
+fn build_gaussian<'a>(
+    ds: &'a Dataset,
+    rng: &mut Rng,
+    multiplier: f64,
+    strategy: GramStrategy,
+) -> (BuiltGram<'a>, KernelFunction) {
+    let kappa =
+        sigma::kappa_heuristic_with(ds, rng, sigma::DEFAULT_PAIR_SAMPLES, multiplier);
+    let func = KernelFunction::Gaussian { kappa };
+    let fly = Gram::on_the_fly(ds, func);
+    let built = if strategy.materializes(ds.n) {
+        BuiltGram::Materialized(fly.materialize())
+    } else {
+        BuiltGram::Streaming(CachedGram::new(fly, strategy.cache_bytes()))
+    };
+    (built, func)
 }
 
 /// Fail fast instead of attempting a multi-TB allocation: graph kernels
@@ -532,6 +546,99 @@ pub fn run_on_dataset(
     }
 }
 
+/// A servable fit: the frozen model plus the run metrics and gram report
+/// the `run` subcommand would have printed for the same spec.
+pub struct ServableFit {
+    /// The frozen, persistable model (`KernelKMeansModel::save`).
+    pub model: KernelKMeansModel,
+    /// Run metrics (identical derivation to [`run_on_dataset`]).
+    pub outcome: RunOutcome,
+    /// How the training gram was realized.
+    pub report: GramReport,
+}
+
+/// Train a servable model — the `fit` CLI path of the fit→persist→serve
+/// split (DESIGN.md §8).
+///
+/// Runs the truncated algorithm (the only variant whose centers are
+/// sliding windows [`KernelKMeansModel::freeze`] can detach from the
+/// training set) against a *feature* kernel, then freezes the final
+/// windows into a model. Graph kernels are rejected: they are defined on
+/// the training graph only and have no out-of-sample extension to serve.
+///
+/// RNG derivation (kernel stream `seed ^ 0xC0DE`, fit stream
+/// `seed ^ 0x5EED`) and gram realization match [`run_on_dataset`]
+/// exactly, so `fit` reproduces the metrics `run` reports for the same
+/// spec — pinned by this module's tests.
+pub fn fit_servable_model(
+    spec: &RunSpec,
+    ds: &Dataset,
+    strategy: GramStrategy,
+) -> crate::util::error::Result<ServableFit> {
+    let AlgoSpec::TruncKkm(lr) = spec.algo else {
+        bail!(
+            "fit serves the truncated algorithm only ([b]trunc-kkm): its \
+             sliding-window centers are what freeze detaches from the \
+             training set (got {})",
+            spec.algo.name()
+        );
+    };
+    let KernelSpec::Gaussian { multiplier } = spec.kernel else {
+        bail!(
+            "fit requires a feature kernel (--kernel gaussian): the {} graph \
+             kernel is defined on the training graph only and cannot score \
+             unseen points",
+            spec.kernel.name()
+        );
+    };
+    let strategy = strategy.resolve(spec.algo, ds.n);
+    let mut krng = Rng::seeded(spec.seed ^ 0xC0DE);
+    let sw = Stopwatch::start();
+    // The same build path `run_on_dataset` reaches through build_with, fed
+    // by the same seed derivation — fit and run cannot drift.
+    let (built, func) = build_gaussian(ds, &mut krng, multiplier, strategy);
+    let kernel_secs = sw.secs();
+
+    let mut fit_rng = Rng::seeded(spec.seed ^ 0x5EED);
+    let sw = Stopwatch::start();
+    let mut fit = TruncatedMiniBatchKernelKMeans::new(TruncatedConfig {
+        k: spec.k,
+        batch_size: spec.batch_size,
+        tau: spec.tau,
+        max_iters: spec.max_iters,
+        epsilon: spec.epsilon,
+        learning_rate: lr,
+        init: default_init(ds.n),
+        weights: None,
+    })
+    .fit_with_backend(built.provider(), &mut NativeBackend, &mut fit_rng);
+    let cluster_secs = sw.secs();
+
+    let model = KernelKMeansModel::freeze(ds, func, &mut fit.centers);
+    let (ari_v, nmi_v) = match &ds.labels {
+        Some(t) => (ari(t, &fit.result.assignments), nmi(t, &fit.result.assignments)),
+        None => (f64::NAN, f64::NAN),
+    };
+    Ok(ServableFit {
+        model,
+        outcome: RunOutcome {
+            ari: ari_v,
+            nmi: nmi_v,
+            objective: fit.result.objective,
+            iterations: fit.result.iterations,
+            converged: fit.result.converged,
+            cluster_secs,
+            kernel_secs,
+            gamma: built.provider().gamma(),
+        },
+        report: GramReport {
+            label: built.provider().label(),
+            mode: built.mode(),
+            cache: built.cache_stats(),
+        },
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -688,6 +795,41 @@ mod tests {
     #[should_panic(expected = "not supported for full-kkm")]
     fn stream_strategy_rejects_full_batch() {
         let _ = GramStrategy::Stream { cache_mb: 8 }.resolve(AlgoSpec::FullKkm, 500);
+    }
+
+    #[test]
+    fn fit_servable_model_reproduces_run_metrics_and_assignments() {
+        // fit and run share the exact rng derivation and gram realization,
+        // so their metrics must agree to the bit; the frozen model must
+        // reproduce the training assignments on the training points.
+        let spec = base_spec(AlgoSpec::TruncKkm(LearningRate::Beta));
+        let ds = registry::load(&spec.dataset, spec.scale, spec.seed);
+        let strategy = GramStrategy::default();
+        let fit = fit_servable_model(&spec, &ds, strategy).expect("servable fit");
+        let (run, _) = run_on_dataset(&spec, &ds, strategy);
+        assert_eq!(fit.outcome.ari.to_bits(), run.ari.to_bits());
+        assert_eq!(fit.outcome.objective.to_bits(), run.objective.to_bits());
+        assert_eq!(fit.outcome.iterations, run.iterations);
+        assert_eq!(fit.model.k(), spec.k);
+        assert!(fit.model.support_points() > 0);
+        let pred = fit.model.predict_all(&ds);
+        let score = ari(ds.labels.as_ref().unwrap(), &pred);
+        assert!(score > 0.3, "served ARI={score}");
+    }
+
+    #[test]
+    fn fit_servable_model_rejects_unservable_specs() {
+        let ds = registry::load("blobs", 0.05, 3);
+        let mut graph_spec = base_spec(AlgoSpec::TruncKkm(LearningRate::Beta));
+        graph_spec.kernel = KernelSpec::Knn { neighbors: 8 };
+        let err = fit_servable_model(&graph_spec, &ds, GramStrategy::default())
+            .unwrap_err();
+        assert!(format!("{err}").contains("feature kernel"), "{err}");
+
+        let full_spec = base_spec(AlgoSpec::FullKkm);
+        let err =
+            fit_servable_model(&full_spec, &ds, GramStrategy::default()).unwrap_err();
+        assert!(format!("{err}").contains("truncated algorithm"), "{err}");
     }
 
     #[test]

@@ -48,6 +48,53 @@ pub const PANEL_ROWS: usize = 4;
 /// the FP-add latency and saturates the FMA ports.
 pub const PANEL_COLS: usize = 8;
 
+/// The register-tiled dot micro-kernel: up to [`PANEL_ROWS`] feature rows
+/// against one dimension-major packed [`PANEL_COLS`]-wide column panel
+/// (`pack[t][c]` = column c's value in dimension t, zero-padded). Each of
+/// the `MR × NR` accumulators is a sequential f64 chain over `d` —
+/// bit-identical to [`fmath::dot_f64`] — and the chains are mutually
+/// independent, which is what the autovectorizer needs.
+///
+/// This is the **single definition** of the panel dot arithmetic: the
+/// training-side block fills ([`KernelPanel`]) and the serving-side batch
+/// engine (`serve::PredictEngine`) both call it, so the crate-wide
+/// bit-identity contract cannot drift between the two.
+#[inline]
+pub(crate) fn dot_rows_micro_kernel(
+    rows: &[&[f32]],
+    pack: &[[f64; PANEL_COLS]],
+) -> [[f64; PANEL_COLS]; PANEL_ROWS] {
+    let mut acc = [[0.0f64; PANEL_COLS]; PANEL_ROWS];
+    match rows {
+        [a0, a1, a2, a3] => {
+            // Zipped iteration (all streams have length d) keeps the
+            // inner loop free of bounds checks.
+            let streams = pack.iter().zip(*a0).zip(*a1).zip(*a2).zip(*a3);
+            for ((((slab, &x0), &x1), &x2), &x3) in streams {
+                let (v0, v1) = (x0 as f64, x1 as f64);
+                let (v2, v3) = (x2 as f64, x3 as f64);
+                for c in 0..PANEL_COLS {
+                    acc[0][c] += v0 * slab[c];
+                    acc[1][c] += v1 * slab[c];
+                    acc[2][c] += v2 * slab[c];
+                    acc[3][c] += v3 * slab[c];
+                }
+            }
+        }
+        _ => {
+            for (accr, a) in acc.iter_mut().zip(rows.iter()) {
+                for (slab, &x) in pack.iter().zip(a.iter()) {
+                    let v = x as f64;
+                    for c in 0..PANEL_COLS {
+                        accr[c] += v * slab[c];
+                    }
+                }
+            }
+        }
+    }
+    acc
+}
+
 /// A kernel function bound to a dataset and its cached squared norms,
 /// exposing blocked fill entry points. Construction is cheap (the norms
 /// are memoized on the [`Dataset`]); hot loops may build one per call.
@@ -206,49 +253,20 @@ impl<'a> KernelPanel<'a> {
         }
     }
 
-    /// The register-tiled dot micro-kernel: up to [`PANEL_ROWS`] rows
-    /// against one packed [`PANEL_COLS`]-wide column panel. Each of the
-    /// `MR × NR` accumulators is a sequential f64 chain over `d` —
-    /// bit-identical to [`fmath::dot_f64`] — and the chains are mutually
-    /// independent, which is what the autovectorizer needs.
+    /// The register-tiled dot micro-kernel over dataset row indices —
+    /// resolves the feature slices and delegates to the shared
+    /// [`dot_rows_micro_kernel`].
     #[inline]
     fn dot_micro_kernel(
         &self,
         rows: &[usize],
         pack: &[[f64; PANEL_COLS]],
     ) -> [[f64; PANEL_COLS]; PANEL_ROWS] {
-        let mut acc = [[0.0f64; PANEL_COLS]; PANEL_ROWS];
-        match rows {
-            [r0, r1, r2, r3] => {
-                let (a0, a1) = (self.ds.row(*r0), self.ds.row(*r1));
-                let (a2, a3) = (self.ds.row(*r2), self.ds.row(*r3));
-                // Zipped iteration (all streams have length d) keeps the
-                // inner loop free of bounds checks.
-                let streams = pack.iter().zip(a0).zip(a1).zip(a2).zip(a3);
-                for ((((slab, &x0), &x1), &x2), &x3) in streams {
-                    let (v0, v1) = (x0 as f64, x1 as f64);
-                    let (v2, v3) = (x2 as f64, x3 as f64);
-                    for c in 0..PANEL_COLS {
-                        acc[0][c] += v0 * slab[c];
-                        acc[1][c] += v1 * slab[c];
-                        acc[2][c] += v2 * slab[c];
-                        acc[3][c] += v3 * slab[c];
-                    }
-                }
-            }
-            _ => {
-                for (accr, &row) in acc.iter_mut().zip(rows.iter()) {
-                    let a = self.ds.row(row);
-                    for (slab, &x) in pack.iter().zip(a) {
-                        let v = x as f64;
-                        for c in 0..PANEL_COLS {
-                            accr[c] += v * slab[c];
-                        }
-                    }
-                }
-            }
+        let mut slices: [&[f32]; PANEL_ROWS] = [&[]; PANEL_ROWS];
+        for (s, &r) in slices.iter_mut().zip(rows.iter()) {
+            *s = self.ds.row(r);
         }
-        acc
+        dot_rows_micro_kernel(&slices[..rows.len().min(PANEL_ROWS)], pack)
     }
 
     /// Fill `out` (row-major, `rows.len() × cols.len()`) with `K(rows,

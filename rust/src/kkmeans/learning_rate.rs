@@ -66,6 +66,18 @@ impl RateState {
     pub fn kind(&self) -> LearningRate {
         self.kind
     }
+
+    /// Cumulative per-center counts, exported for the `serve::format`
+    /// stream checkpoint (the sklearn rate's only mutable state).
+    pub(crate) fn counts(&self) -> &[f64] {
+        &self.counts
+    }
+
+    /// Rebuild from checkpointed parts — the inverse of
+    /// [`RateState::counts`] for a known schedule kind.
+    pub(crate) fn from_parts(kind: LearningRate, counts: Vec<f64>) -> RateState {
+        RateState { kind, counts }
+    }
 }
 
 #[cfg(test)]

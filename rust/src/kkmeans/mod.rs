@@ -39,7 +39,7 @@ pub use learning_rate::LearningRate;
 pub use minibatch::{MiniBatchConfig, MiniBatchKernelKMeans};
 pub use predict::{KernelKMeansModel, StreamingKernelKMeans};
 pub use state::CenterWindow;
-pub use truncated::{TruncatedConfig, TruncatedMiniBatchKernelKMeans};
+pub use truncated::{TruncatedConfig, TruncatedFit, TruncatedMiniBatchKernelKMeans};
 
 use crate::util::timing::Profiler;
 

@@ -35,9 +35,10 @@ pub struct KernelKMeansModel {
     /// Per center: support feature rows (flattened s×d), coefficients,
     /// and cached squared norms `‖s‖²` (one per support row) for the
     /// panel-style distance expansion in [`KernelKMeansModel::distances`].
-    centers: Vec<(Vec<f32>, Vec<f64>, Vec<f64>)>,
+    /// `pub(crate)` for the `serve` layer (artifact format + batch engine).
+    pub(crate) centers: Vec<(Vec<f32>, Vec<f64>, Vec<f64>)>,
     /// ⟨Ĉ_j, Ĉ_j⟩ per center.
-    cc: Vec<f64>,
+    pub(crate) cc: Vec<f64>,
 }
 
 impl KernelKMeansModel {
@@ -120,6 +121,31 @@ impl KernelKMeansModel {
     pub fn support_points(&self) -> usize {
         self.centers.iter().map(|(_, c, _)| c.len()).sum()
     }
+
+    // ---- persistence (serve::format, DESIGN.md §8) -------------------------
+
+    /// Serialize into the versioned serving artifact (kind `model`).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        crate::serve::format::model_to_bytes(self)
+    }
+
+    /// Parse an artifact produced by [`KernelKMeansModel::to_bytes`] /
+    /// [`KernelKMeansModel::save`]. Validates magic, format version, kernel
+    /// parameters, and exact payload shape; malformed input is an error,
+    /// never a panic.
+    pub fn from_bytes(bytes: &[u8]) -> crate::util::error::Result<KernelKMeansModel> {
+        crate::serve::format::model_from_bytes(bytes)
+    }
+
+    /// Write the versioned model artifact to `path`.
+    pub fn save(&self, path: &std::path::Path) -> crate::util::error::Result<()> {
+        crate::serve::format::save_model(self, path)
+    }
+
+    /// Load a model artifact from `path` (see [`KernelKMeansModel::from_bytes`]).
+    pub fn load(path: &std::path::Path) -> crate::util::error::Result<KernelKMeansModel> {
+        crate::serve::format::load_model(path)
+    }
 }
 
 /// Online truncated mini-batch kernel k-means over an unbounded stream.
@@ -129,15 +155,15 @@ impl KernelKMeansModel {
 /// stream. Internally the stream is buffered into a bounded reservoir
 /// dataset holding exactly the live support + current batch.
 pub struct StreamingKernelKMeans {
-    kernel: KernelFunction,
-    k: usize,
-    tau: usize,
-    batch_size: usize,
-    rate: RateState,
+    pub(crate) kernel: KernelFunction,
+    pub(crate) k: usize,
+    pub(crate) tau: usize,
+    pub(crate) batch_size: usize,
+    pub(crate) rate: RateState,
     /// Reservoir of feature rows referenced by windows (compacted
     /// periodically); windows index into it.
-    store: Dataset,
-    windows: Option<Vec<CenterWindow>>,
+    pub(crate) store: Dataset,
+    pub(crate) windows: Option<Vec<CenterWindow>>,
     /// Batches consumed.
     pub iterations: usize,
 }
@@ -267,6 +293,36 @@ impl StreamingKernelKMeans {
     /// Current bounded memory footprint in stored rows.
     pub fn stored_rows(&self) -> usize {
         self.store.n
+    }
+
+    // ---- checkpointing (serve::format, DESIGN.md §8) -----------------------
+    //
+    // Snapshot/resume go through the same versioned artifact format as
+    // frozen models (kind `stream`): the reservoir, every window's raw
+    // entry structure, the learning-rate counters, and the iteration count
+    // are captured exactly, so `resume` + further `partial_fit` calls are
+    // bit-for-bit the uninterrupted run (the caller keeps the RNG stream —
+    // `partial_fit` only draws from it before the first batch).
+
+    /// Serialize the full streaming state into a checkpoint artifact.
+    pub fn snapshot_bytes(&self) -> Vec<u8> {
+        crate::serve::format::stream_to_bytes(self)
+    }
+
+    /// Restore a stream from [`StreamingKernelKMeans::snapshot_bytes`]
+    /// output. Malformed input is an error, never a panic.
+    pub fn resume_bytes(bytes: &[u8]) -> crate::util::error::Result<StreamingKernelKMeans> {
+        crate::serve::format::stream_from_bytes(bytes)
+    }
+
+    /// Write a checkpoint artifact to `path`.
+    pub fn snapshot(&self, path: &std::path::Path) -> crate::util::error::Result<()> {
+        crate::serve::format::save_stream(self, path)
+    }
+
+    /// Resume from a checkpoint written by [`StreamingKernelKMeans::snapshot`].
+    pub fn resume(path: &std::path::Path) -> crate::util::error::Result<StreamingKernelKMeans> {
+        crate::serve::format::load_stream(path)
     }
 }
 

@@ -36,6 +36,44 @@ impl WindowEntry {
     }
 }
 
+/// Borrowed view of one window's complete internal state, read by the
+/// versioned checkpoint writer (`serve::format`, kind `stream`) with zero
+/// copying of the support data. The owned inverse for loading is
+/// [`WindowState`] → [`CenterWindow::from_state`].
+pub(crate) struct WindowView<'a> {
+    /// `(points, raw coefficients)` per surviving entry, oldest first.
+    pub entries: Vec<(&'a [u32], &'a [f64])>,
+    /// Global decay multiplier (effective coefficient = raw × scale).
+    pub scale: f64,
+    /// The decayed initial center, while the window still reaches
+    /// iteration 1.
+    pub init_point: Option<(u32, f64)>,
+    /// Maintained ⟨Ĉ,Ĉ⟩, if valid at snapshot time.
+    pub cc_cache: Option<f64>,
+    /// Incremental-cc drift counter (schedules the next exact refresh).
+    pub updates_since_exact: u32,
+}
+
+/// One window's complete internal state, owned — what the checkpoint
+/// loader rebuilds and hands to [`CenterWindow::from_state`] for a
+/// bit-for-bit restore.
+#[derive(Clone, Debug)]
+pub(crate) struct WindowState {
+    /// `(points, raw coefficients)` per surviving entry, oldest first.
+    pub entries: Vec<(Vec<u32>, Vec<f64>)>,
+    /// Global decay multiplier (effective coefficient = raw × scale).
+    pub scale: f64,
+    /// The decayed initial center, while the window still reaches
+    /// iteration 1.
+    pub init_point: Option<(u32, f64)>,
+    /// Truncation parameter τ.
+    pub tau: usize,
+    /// Maintained ⟨Ĉ,Ĉ⟩, if valid at snapshot time.
+    pub cc_cache: Option<f64>,
+    /// Incremental-cc drift counter (schedules the next exact refresh).
+    pub updates_since_exact: u32,
+}
+
 /// The truncated representation of one center.
 #[derive(Clone, Debug)]
 pub struct CenterWindow {
@@ -371,6 +409,52 @@ impl CenterWindow {
         }
     }
 
+    /// Borrow the complete internal state for the `serve::format` stream
+    /// checkpoint (kind `stream`). Everything a bit-for-bit resume needs is
+    /// exposed: entry structure with *raw* coefficients, the global decay
+    /// `scale`, the retained initial center, the maintained ⟨Ĉ,Ĉ⟩ cache,
+    /// and the drift counter that schedules the next exact recomputation —
+    /// without cloning the O(τ+b) support arrays (only a small vector of
+    /// slice pairs is allocated).
+    pub(crate) fn state_view(&self) -> WindowView<'_> {
+        WindowView {
+            entries: self
+                .entries
+                .iter()
+                .map(|e| (e.points.as_slice(), e.raws.as_slice()))
+                .collect(),
+            scale: self.scale,
+            init_point: self.init_point,
+            cc_cache: self.cc_cache,
+            updates_since_exact: self.updates_since_exact,
+        }
+    }
+
+    /// Rebuild a window from an exported state — the exact inverse of
+    /// [`CenterWindow::state_view`]. `total_points` is derived (it is
+    /// always the sum of entry lengths); the caller (the artifact loader)
+    /// has already validated index bounds and per-entry shape.
+    pub(crate) fn from_state(s: WindowState) -> CenterWindow {
+        assert!(s.tau >= 1);
+        let total_points = s.entries.iter().map(|(pts, _)| pts.len()).sum();
+        CenterWindow {
+            entries: s
+                .entries
+                .into_iter()
+                .map(|(points, raws)| {
+                    assert_eq!(points.len(), raws.len(), "ragged window entry");
+                    WindowEntry { points, raws }
+                })
+                .collect(),
+            scale: s.scale,
+            init_point: s.init_point,
+            tau: s.tau,
+            total_points,
+            cc_cache: s.cc_cache,
+            updates_since_exact: s.updates_since_exact,
+        }
+    }
+
     /// cc ← ‖Ĉ − e‖² where e = Σ w_p φ(p) is currently part of the support.
     fn subtract_from_cc(&mut self, gram: &dyn KernelProvider, pts: &[usize], ws: &[f64]) {
         let Some(cc) = self.cc_cache else { return };
@@ -612,6 +696,53 @@ mod tests {
                     "step {step}: incremental {got} vs brute {want}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn export_import_state_is_bitwise_transparent() {
+        // A window round-tripped through WindowState must expose the same
+        // support bit-for-bit AND keep evolving identically (cc cache and
+        // drift counter included) under further updates.
+        let ds = fixture();
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 6.0 });
+        let mut rng = Rng::seeded(9);
+        let mut original = CenterWindow::new(4, 15);
+        for _ in 0..25 {
+            let pts: Vec<usize> =
+                (0..1 + rng.below(6)).map(|_| rng.below(ds.n)).collect();
+            original.apply_update_cc(0.4, &pts, None, &gram);
+        }
+        // Round-trip through the borrowed writer view and the owned loader
+        // state — exactly what snapshot → resume does.
+        let view = original.state_view();
+        let mut restored = CenterWindow::from_state(WindowState {
+            entries: view
+                .entries
+                .iter()
+                .map(|(p, r)| (p.to_vec(), r.to_vec()))
+                .collect(),
+            scale: view.scale,
+            init_point: view.init_point,
+            tau: 15,
+            cc_cache: view.cc_cache,
+            updates_since_exact: view.updates_since_exact,
+        });
+        let a: Vec<_> = original.support().collect();
+        let b: Vec<_> = restored.support().collect();
+        assert_eq!(a.len(), b.len());
+        for ((ya, wa), (yb, wb)) in a.iter().zip(b.iter()) {
+            assert_eq!(ya, yb);
+            assert_eq!(wa.to_bits(), wb.to_bits());
+        }
+        for _ in 0..10 {
+            let pts: Vec<usize> = (0..3).map(|_| rng.below(ds.n)).collect();
+            original.apply_update_cc(0.3, &pts, None, &gram);
+            restored.apply_update_cc(0.3, &pts, None, &gram);
+            assert_eq!(
+                original.self_inner(&gram).to_bits(),
+                restored.self_inner(&gram).to_bits()
+            );
         }
     }
 

@@ -36,6 +36,7 @@ pub mod kmeans;
 pub mod linalg;
 pub mod metrics;
 pub mod runtime;
+pub mod serve;
 pub mod testutil;
 pub mod util;
 

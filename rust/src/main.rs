@@ -3,6 +3,9 @@
 //! ```text
 //! mbkk quickstart                         # 30-second demo on blobs
 //! mbkk run --dataset synth_pendigits --algo btrunc-kkm --batch 1024 --tau 200
+//! mbkk fit --dataset blobs --out model.mbkk      # train + persist a model
+//! mbkk predict --model model.mbkk --dataset blobs # load + batch-score
+//! mbkk serve-bench --model model.mbkk --secs 3   # sustained queries/sec
 //! mbkk figures --fig 1 --out results/    # regenerate a paper figure
 //! mbkk figures --all --quick             # the whole evaluation, reduced grid
 //! mbkk gamma-table                       # paper Table 1
@@ -10,12 +13,14 @@
 //! ```
 
 use mbkk::coordinator::{experiment, figures};
-use mbkk::util::error::Result;
 use mbkk::data::registry;
-use mbkk::kkmeans::AssignBackend;
+use mbkk::kkmeans::{AssignBackend, KernelKMeansModel};
 use mbkk::runtime;
+use mbkk::serve::PredictEngine;
 use mbkk::util::cli::Args;
+use mbkk::util::error::{Context, Result};
 use mbkk::util::rng::Rng;
+use mbkk::util::timing::Stopwatch;
 use std::path::Path;
 
 fn main() -> Result<()> {
@@ -23,6 +28,9 @@ fn main() -> Result<()> {
     match args.subcommand.as_deref() {
         Some("quickstart") => quickstart(&args),
         Some("run") => run(&args),
+        Some("fit") => fit(&args),
+        Some("predict") => predict(&args),
+        Some("serve-bench") => serve_bench(&args),
         Some("figures") => run_figures(&args),
         Some("gamma-table") => gamma_table(&args),
         Some("info") => info(&args),
@@ -47,6 +55,18 @@ fn main() -> Result<()> {
                  \x20                          kernels; default policy auto-streams above n≈23k)\n\
                  \x20     --cache-mb N         tile-LRU budget in MiB for streaming runs (64)\n\
                  \x20     --materialize        force the dense n×n table at any n\n\
+                 \x20 fit                      train + save a servable model artifact\n\
+                 \x20     --dataset/--csv/--scale/--k/--batch/--tau/--iters/--seed as `run`\n\
+                 \x20     --out PATH           artifact path (default model.mbkk)\n\
+                 \x20 predict                  load a model + batch-score a dataset\n\
+                 \x20     --model PATH         artifact from `fit` (default model.mbkk)\n\
+                 \x20     --dataset/--csv/--scale/--seed as `run`\n\
+                 \x20     --chunk N            query rows per engine batch (8192)\n\
+                 \x20     --scalar             per-query scalar path (baseline)\n\
+                 \x20     --out PATH           write index,assignment CSV\n\
+                 \x20 serve-bench              sustained queries/sec loop over a model\n\
+                 \x20     --model PATH         artifact (fits one on the fly if omitted)\n\
+                 \x20     --secs F --batch-queries N --no-baseline\n\
                  \x20 figures                  regenerate paper figures (CSV+md under --out)\n\
                  \x20     --fig N | --all      figure id 1..13\n\
                  \x20     --scale F --repeats N --iters N --quick --out DIR\n\
@@ -91,17 +111,12 @@ fn quickstart(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn run(args: &Args) -> Result<()> {
-    let algo = experiment::AlgoSpec::from_name(&args.get_or("algo", "btrunc-kkm"));
-    let kernel = experiment::KernelSpec::from_name(&args.get_or("kernel", "gaussian"));
-    let dataset = args.get_or("dataset", "synth_pendigits");
-    let scale = args.get_parse_or("scale", 0.25f64);
-    let seed = args.get_parse_or("seed", 7u64);
-    let backend = args.get_or("backend", "native");
-    let csv = args.get("csv").map(|s| s.to_string());
-    let k_opt = args.get("k").map(|s| s.parse::<usize>().expect("--k"));
+/// Parse the shared `--stream` / `--materialize` / `--cache-mb` gram flags
+/// (used by `run` and `fit`); the bool reports whether any was passed, for
+/// the contextual errors below.
+fn gram_strategy(args: &Args) -> Result<(experiment::GramStrategy, bool)> {
     let cache_mb = args.get_parse_or("cache-mb", experiment::DEFAULT_CACHE_MB);
-    let gram_flags_set = args.flag("stream")
+    let set = args.flag("stream")
         || args.flag("materialize")
         || args.get("cache-mb").is_some();
     let strategy = match (args.flag("stream"), args.flag("materialize")) {
@@ -113,6 +128,32 @@ fn run(args: &Args) -> Result<()> {
             cache_mb,
         },
     };
+    Ok((strategy, set))
+}
+
+/// Resolve `--csv PATH` or a registry dataset name.
+fn resolve_dataset(
+    csv: &Option<String>,
+    dataset: &str,
+    scale: f64,
+    seed: u64,
+) -> Result<mbkk::data::Dataset> {
+    match csv {
+        Some(path) => mbkk::data::csvio::load_csv(Path::new(path)),
+        None => Ok(registry::load(dataset, scale, seed)),
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    let algo = experiment::AlgoSpec::from_name(&args.get_or("algo", "btrunc-kkm"));
+    let kernel = experiment::KernelSpec::from_name(&args.get_or("kernel", "gaussian"));
+    let dataset = args.get_or("dataset", "synth_pendigits");
+    let scale = args.get_parse_or("scale", 0.25f64);
+    let seed = args.get_parse_or("seed", 7u64);
+    let backend = args.get_or("backend", "native");
+    let csv = args.get("csv").map(|s| s.to_string());
+    let k_opt = args.get("k").map(|s| s.parse::<usize>().expect("--k"));
+    let (strategy, gram_flags_set) = gram_strategy(args)?;
     let spec = experiment::RunSpec {
         dataset: dataset.clone(),
         scale,
@@ -128,10 +169,7 @@ fn run(args: &Args) -> Result<()> {
     args.finish();
 
     // Resolve the dataset: registry name or user CSV.
-    let ds = match &csv {
-        Some(path) => mbkk::data::csvio::load_csv(Path::new(path))?,
-        None => registry::load(&dataset, scale, seed),
-    };
+    let ds = resolve_dataset(&csv, &dataset, scale, seed)?;
     let mut spec = spec;
     spec.k = k_opt
         .or_else(|| (ds.num_classes() > 0).then(|| ds.num_classes()))
@@ -245,6 +283,221 @@ fn run_with_xla_backend(
         kernel_secs: 0.0,
         gamma: gram.gamma(),
     })
+}
+
+/// `fit`: train the truncated algorithm and persist the frozen model as a
+/// versioned artifact — the first half of the fit→persist→serve split.
+fn fit(args: &Args) -> Result<()> {
+    let algo = experiment::AlgoSpec::from_name(&args.get_or("algo", "btrunc-kkm"));
+    let kernel = experiment::KernelSpec::from_name(&args.get_or("kernel", "gaussian"));
+    let dataset = args.get_or("dataset", "blobs");
+    let scale = args.get_parse_or("scale", 0.25f64);
+    let seed = args.get_parse_or("seed", 7u64);
+    let out = args.get_or("out", "model.mbkk");
+    let csv = args.get("csv").map(|s| s.to_string());
+    let k_opt = args.get("k").map(|s| s.parse::<usize>().expect("--k"));
+    let (strategy, _) = gram_strategy(args)?;
+    let mut spec = experiment::RunSpec {
+        dataset: dataset.clone(),
+        scale,
+        kernel,
+        algo,
+        k: 0, // filled below
+        batch_size: args.get_parse_or("batch", 1024usize),
+        tau: args.get_parse_or("tau", 200usize),
+        max_iters: args.get_parse_or("iters", 200usize),
+        epsilon: args.get("epsilon").map(|e| e.parse().expect("--epsilon")),
+        seed,
+    };
+    args.finish();
+
+    let ds = resolve_dataset(&csv, &dataset, scale, seed)?;
+    spec.k = k_opt
+        .or_else(|| (ds.num_classes() > 0).then(|| ds.num_classes()))
+        .expect("--k required for unlabeled CSV data");
+    println!(
+        "fit: {} on {} (n={}, d={}, k={})",
+        spec.algo.name(),
+        ds.name,
+        ds.n,
+        ds.d,
+        spec.k
+    );
+    let fit = experiment::fit_servable_model(&spec, &ds, strategy)?;
+    println!("gram:       {} ({})", fit.report.label, fit.report.mode);
+    if let Some(stats) = fit.report.cache {
+        println!("cache:      {}", stats.summary());
+    }
+    println!("ARI:        {:.4}", fit.outcome.ari);
+    println!("objective:  {:.6}", fit.outcome.objective);
+    println!(
+        "iterations: {}{}",
+        fit.outcome.iterations,
+        if fit.outcome.converged { " (early-stopped)" } else { "" }
+    );
+    println!("kernel:     {:.3}s", fit.outcome.kernel_secs);
+    println!("clustering: {:.3}s", fit.outcome.cluster_secs);
+    let bytes = fit.model.to_bytes();
+    std::fs::write(Path::new(&out), &bytes)
+        .with_context(|| format!("writing model artifact {out}"))?;
+    println!(
+        "model:      {out} ({} centers, {} support points, {} bytes)",
+        fit.model.k(),
+        fit.model.support_points(),
+        bytes.len()
+    );
+    Ok(())
+}
+
+/// `predict`: load a model artifact and batch-score a dataset through the
+/// [`PredictEngine`], reporting throughput (and ARI when labels exist).
+fn predict(args: &Args) -> Result<()> {
+    let model_path = args.get_or("model", "model.mbkk");
+    let dataset = args.get_or("dataset", "blobs");
+    let scale = args.get_parse_or("scale", 0.25f64);
+    let seed = args.get_parse_or("seed", 7u64);
+    let csv = args.get("csv").map(|s| s.to_string());
+    let chunk = args.get_parse_or("chunk", 8192usize).max(1);
+    let scalar = args.flag("scalar");
+    let out_csv = args.get("out").map(|s| s.to_string());
+    args.finish();
+
+    let model = KernelKMeansModel::load(Path::new(&model_path))?;
+    let ds = resolve_dataset(&csv, &dataset, scale, seed)?;
+    if ds.d != model.d {
+        mbkk::bail!(
+            "dataset {} has d={} but the model was trained with d={}",
+            ds.name,
+            ds.d,
+            model.d
+        );
+    }
+    println!(
+        "model:      {model_path} (k={}, d={}, {} support points, {} kernel)",
+        model.k(),
+        model.d,
+        model.support_points(),
+        model.kernel.name()
+    );
+    let engine = PredictEngine::new(&model);
+    let sw = Stopwatch::start();
+    let assignments = if scalar {
+        model.predict_all(&ds)
+    } else {
+        let mut assignments = vec![0usize; ds.n];
+        let mut q0 = 0;
+        while q0 < ds.n {
+            let q1 = (q0 + chunk).min(ds.n);
+            engine.predict_into(
+                &ds.features[q0 * ds.d..q1 * ds.d],
+                &mut assignments[q0..q1],
+            );
+            q0 = q1;
+        }
+        assignments
+    };
+    let secs = sw.secs();
+    println!("queries:    {}", ds.n);
+    println!(
+        "throughput: {:.0} queries/s ({} path, chunk {chunk})",
+        ds.n as f64 / secs.max(1e-12),
+        if scalar { "scalar" } else { "batched" }
+    );
+    if let Some(truth) = &ds.labels {
+        println!("ARI:        {:.4}", mbkk::metrics::ari(truth, &assignments));
+    }
+    let mut sizes = vec![0usize; model.k()];
+    for &a in &assignments {
+        sizes[a] += 1;
+    }
+    println!("clusters:   {sizes:?}");
+    if let Some(path) = out_csv {
+        let mut text = String::from("index,assignment\n");
+        for (i, a) in assignments.iter().enumerate() {
+            text.push_str(&format!("{i},{a}\n"));
+        }
+        std::fs::write(Path::new(&path), text)
+            .with_context(|| format!("writing assignments {path}"))?;
+        println!("wrote:      {path}");
+    }
+    Ok(())
+}
+
+/// `serve-bench`: drive a sustained query loop against a model for
+/// `--secs` seconds and report queries/sec; the measurement is merged into
+/// the `prediction service` suite of `BENCH_baseline.json` (alongside
+/// `cargo bench --bench bench_predict`) unless `--no-baseline` is given.
+fn serve_bench(args: &Args) -> Result<()> {
+    let model_path = args.get("model").map(|s| s.to_string());
+    let dataset = args.get_or("dataset", "blobs");
+    let scale = args.get_parse_or("scale", 0.25f64);
+    let seed = args.get_parse_or("seed", 7u64);
+    let secs_budget = args.get_parse_or("secs", 3.0f64);
+    let qbatch = args.get_parse_or("batch-queries", 512usize).max(1);
+    let no_baseline = args.flag("no-baseline");
+    args.finish();
+
+    let ds = registry::load(&dataset, scale, seed);
+    let model = match &model_path {
+        Some(p) => KernelKMeansModel::load(Path::new(p))?,
+        None => {
+            println!("no --model given: fitting a fresh model on {} first", ds.name);
+            let spec = experiment::RunSpec {
+                dataset: dataset.clone(),
+                scale,
+                kernel: experiment::KernelSpec::Gaussian { multiplier: 1.0 },
+                algo: experiment::AlgoSpec::TruncKkm(mbkk::kkmeans::LearningRate::Beta),
+                k: ds.num_classes().max(2),
+                batch_size: 256,
+                tau: 100,
+                max_iters: 60,
+                epsilon: None,
+                seed,
+            };
+            experiment::fit_servable_model(&spec, &ds, experiment::GramStrategy::default())?
+                .model
+        }
+    };
+    if ds.d != model.d {
+        mbkk::bail!(
+            "query dataset {} has d={} but the model was trained with d={}",
+            ds.name,
+            ds.d,
+            model.d
+        );
+    }
+    let engine = PredictEngine::new(&model);
+    let qbatch = qbatch.min(ds.n.max(1));
+    let mut out = vec![0usize; qbatch];
+    // Warm the pool and the engine before the measured window.
+    engine.predict_into(&ds.features[..qbatch * ds.d], &mut out);
+    let sw = Stopwatch::start();
+    let mut served = 0u64;
+    let mut batches = 0u64;
+    let mut start = 0usize;
+    while sw.secs() < secs_budget {
+        if start + qbatch > ds.n {
+            start = 0;
+        }
+        engine.predict_into(
+            &ds.features[start * ds.d..(start + qbatch) * ds.d],
+            &mut out,
+        );
+        start += qbatch;
+        served += qbatch as u64;
+        batches += 1;
+    }
+    let secs = sw.secs();
+    let qps = served as f64 / secs.max(1e-12);
+    println!(
+        "sustained:  {qps:.0} queries/s ({batches} batches of {qbatch} over {secs:.2}s)"
+    );
+    if !no_baseline {
+        let mut runner = mbkk::bench::BenchRunner::new("prediction service");
+        runner.record("serve-bench seconds/query", 1.0 / qps.max(1e-12));
+        runner.write_baseline(&mbkk::bench::BenchRunner::baseline_path());
+    }
+    Ok(())
 }
 
 fn run_figures(args: &Args) -> Result<()> {

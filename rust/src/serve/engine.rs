@@ -1,0 +1,354 @@
+//! The batched prediction hot path (DESIGN.md §8).
+//!
+//! [`KernelKMeansModel::distances`] serves one query at a time: every
+//! (query, support) kernel value is a loop-carried f64 dot chain, so the
+//! CPU retires roughly one fused-multiply-add per FP-add *latency* and
+//! the SIMD units idle — the same pathology the panel engine (DESIGN.md
+//! §7) removed from training. [`PredictEngine`] applies the identical
+//! cure to serving:
+//!
+//! * the model's support rows are packed **once at construction** into
+//!   dimension-major [`PANEL_COLS`]-wide f64 panels (they are frozen, so
+//!   unlike training there is nothing to re-pack per call),
+//! * each batch walks queries in [`PANEL_ROWS`]-tall blocks against those
+//!   panels — `4 × 8 = 32` independent accumulator chains in flight,
+//! * the support norms come from the model (frozen at `freeze` time,
+//!   never recomputed), the per-value finish is the shared
+//!   [`KernelPanel::finish`], the per-center contraction consumes kernel
+//!   values in support order, and the argmin is fused into the same
+//!   per-query sweep.
+//!
+//! **Bit-identity contract.** As everywhere else in the crate, speed
+//! comes from parallelism *across* values only: each dot is the
+//! sequential chain of [`fmath::dot_f64`], each distance the association
+//! `(K(x,x) − 2·cross) + ⟨Ĉ,Ĉ⟩` clamped at 0, each tie broken
+//! first-minimum under `total_cmp` — so batched output is bit-for-bit
+//! the scalar [`KernelKMeansModel::predict`], for any batch size, any
+//! remainder, and any thread count. The serving conformance suite
+//! (`rust/tests/conformance_serve.rs`) pins this across
+//! d ∈ {1, 3, 16, 128} and odd batch remainders.
+
+use crate::data::Dataset;
+use crate::kernels::panel::{self, PANEL_COLS, PANEL_ROWS};
+use crate::kernels::{KernelFunction, KernelPanel};
+use crate::kkmeans::KernelKMeansModel;
+use crate::util::fmath;
+use crate::util::parallel::{par_chunks_mut, par_rows_mut};
+
+/// A frozen model compiled for batched serving: support rows packed into
+/// register-tile panels, norms and coefficients flattened center-major.
+/// Construction is O(support · d); build one per loaded model and reuse
+/// it across batches.
+pub struct PredictEngine {
+    kernel: KernelFunction,
+    d: usize,
+    k: usize,
+    /// ⟨Ĉ_j, Ĉ_j⟩ per center.
+    cc: Vec<f64>,
+    /// Flattened support coefficients, center-major (center 0's support
+    /// first, in freeze order — the scalar accumulation order).
+    coefs: Vec<f64>,
+    /// Frozen support squared norms, aligned with `coefs`.
+    norms: Vec<f64>,
+    /// Owning center per support row, aligned with `coefs`.
+    center_of: Vec<u32>,
+    /// Total support rows.
+    n_sup: usize,
+    /// Dimension-major packed support panels: panel `p` holds support
+    /// rows `[p·8, p·8+8)` as `pack[p·d + t][c] = sup[p·8+c][t]`
+    /// (f64-widened, zero-padded past `n_sup`) — the slab layout
+    /// [`panel::dot_rows_micro_kernel`] consumes.
+    pack: Vec<[f64; PANEL_COLS]>,
+}
+
+impl PredictEngine {
+    /// Compile `model` for batched serving.
+    pub fn new(model: &KernelKMeansModel) -> PredictEngine {
+        assert!(model.d >= 1, "cannot serve a zero-dimensional model");
+        assert!(model.k() >= 1, "cannot serve an empty model");
+        let d = model.d;
+        let mut coefs = Vec::new();
+        let mut norms = Vec::new();
+        let mut center_of = Vec::new();
+        let mut sup_rows: Vec<&[f32]> = Vec::new();
+        for (j, (feats, cfs, nms)) in model.centers.iter().enumerate() {
+            for (row, (&c, &nm)) in
+                feats.chunks_exact(d).zip(cfs.iter().zip(nms.iter()))
+            {
+                sup_rows.push(row);
+                coefs.push(c);
+                norms.push(nm);
+                center_of.push(j as u32);
+            }
+        }
+        let n_sup = sup_rows.len();
+        let n_panels = n_sup.div_ceil(PANEL_COLS);
+        let mut pack = vec![[0.0f64; PANEL_COLS]; n_panels * d];
+        for (m, row) in sup_rows.iter().enumerate() {
+            let (p, c) = (m / PANEL_COLS, m % PANEL_COLS);
+            for (t, &v) in row.iter().enumerate() {
+                pack[p * d + t][c] = v as f64;
+            }
+        }
+        PredictEngine {
+            kernel: model.kernel,
+            d,
+            k: model.k(),
+            cc: model.cc.clone(),
+            coefs,
+            norms,
+            center_of,
+            n_sup,
+            pack,
+        }
+    }
+
+    /// Number of centers.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Feature dimension the engine serves.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Total packed support rows.
+    pub fn support_points(&self) -> usize {
+        self.n_sup
+    }
+
+    fn batch_len(&self, rows: &[f32]) -> usize {
+        assert_eq!(
+            rows.len() % self.d,
+            0,
+            "feature dimension mismatch: query batch is not a multiple of d={}",
+            self.d
+        );
+        rows.len() / self.d
+    }
+
+    /// Squared feature-space distances for a packed row-major query batch
+    /// (`rows.len()` must be a multiple of `d`). Returns `nq × k`
+    /// row-major values, bit-identical to per-query
+    /// [`KernelKMeansModel::distances`].
+    pub fn distances_batch(&self, rows: &[f32]) -> Vec<f64> {
+        let nq = self.batch_len(rows);
+        let mut out = vec![0.0f64; nq * self.k];
+        self.distances_into(rows, &mut out);
+        out
+    }
+
+    /// [`PredictEngine::distances_batch`] into a caller buffer
+    /// (`out.len() == nq · k`), parallel over query blocks.
+    pub fn distances_into(&self, rows: &[f32], out: &mut [f64]) {
+        let nq = self.batch_len(rows);
+        assert_eq!(out.len(), nq * self.k, "distances_into: bad output shape");
+        if nq == 0 {
+            return;
+        }
+        par_rows_mut(out, self.k, |q0, chunk| {
+            let mut cross = vec![0.0f64; PANEL_ROWS * self.k];
+            let nrows = chunk.len() / self.k;
+            let mut r0 = 0;
+            while r0 < nrows {
+                let rw = PANEL_ROWS.min(nrows - r0);
+                let mut qs: [&[f32]; PANEL_ROWS] = [&[]; PANEL_ROWS];
+                for (r, q) in qs.iter_mut().enumerate().take(rw) {
+                    let qi = q0 + r0 + r;
+                    *q = &rows[qi * self.d..(qi + 1) * self.d];
+                }
+                self.block_distances(
+                    &qs[..rw],
+                    &mut cross,
+                    &mut chunk[r0 * self.k..(r0 + rw) * self.k],
+                );
+                r0 += rw;
+            }
+        });
+    }
+
+    /// Hard assignments for a packed row-major query batch — bit-identical
+    /// to per-query [`KernelKMeansModel::predict`], argmin fused into the
+    /// block sweep.
+    pub fn predict_batch(&self, rows: &[f32]) -> Vec<usize> {
+        let nq = self.batch_len(rows);
+        let mut out = vec![0usize; nq];
+        self.predict_into(rows, &mut out);
+        out
+    }
+
+    /// [`PredictEngine::predict_batch`] into a caller buffer
+    /// (`out.len() == nq`).
+    pub fn predict_into(&self, rows: &[f32], out: &mut [usize]) {
+        let nq = self.batch_len(rows);
+        assert_eq!(out.len(), nq, "predict_into: bad output shape");
+        if nq == 0 {
+            return;
+        }
+        par_chunks_mut(out, |q0, chunk| {
+            let mut cross = vec![0.0f64; PANEL_ROWS * self.k];
+            let mut dist = vec![0.0f64; PANEL_ROWS * self.k];
+            let mut r0 = 0;
+            while r0 < chunk.len() {
+                let rw = PANEL_ROWS.min(chunk.len() - r0);
+                let mut qs: [&[f32]; PANEL_ROWS] = [&[]; PANEL_ROWS];
+                for (r, q) in qs.iter_mut().enumerate().take(rw) {
+                    let qi = q0 + r0 + r;
+                    *q = &rows[qi * self.d..(qi + 1) * self.d];
+                }
+                self.block_distances(&qs[..rw], &mut cross, &mut dist[..rw * self.k]);
+                for r in 0..rw {
+                    let drow = &dist[r * self.k..(r + 1) * self.k];
+                    // First-minimum under the total order — the same tie
+                    // rule as scalar predict's `min_by(total_cmp)`.
+                    let mut best = 0usize;
+                    for (j, v) in drow.iter().enumerate().skip(1) {
+                        if v.total_cmp(&drow[best]) == std::cmp::Ordering::Less {
+                            best = j;
+                        }
+                    }
+                    chunk[r0 + r] = best;
+                }
+                r0 += rw;
+            }
+        });
+    }
+
+    /// Batch-predict a whole dataset (dimension-checked).
+    pub fn predict_dataset(&self, ds: &Dataset) -> Vec<usize> {
+        assert_eq!(ds.d, self.d, "feature dimension mismatch");
+        self.predict_batch(&ds.features)
+    }
+
+    /// Distances for one block of ≤ [`PANEL_ROWS`] queries: micro-kernel
+    /// dots against every support panel, finish + per-center contraction
+    /// in support order, distance assembly. `cross` is reusable scratch of
+    /// at least `PANEL_ROWS · k`; `out` receives `qs.len() · k` values.
+    fn block_distances(&self, qs: &[&[f32]], cross: &mut [f64], out: &mut [f64]) {
+        let qr = qs.len();
+        let k = self.k;
+        debug_assert!(qr >= 1 && qr <= PANEL_ROWS);
+        debug_assert_eq!(out.len(), qr * k);
+        cross[..qr * k].fill(0.0);
+        let mut nq = [0.0f64; PANEL_ROWS];
+        let mut kxx = [0.0f64; PANEL_ROWS];
+        for (r, q) in qs.iter().enumerate() {
+            nq[r] = fmath::sq_norm_f64(q);
+            kxx[r] = self.kernel.eval_self(q);
+        }
+        for p in 0..self.n_sup.div_ceil(PANEL_COLS) {
+            // The shared training/serving micro-kernel (single definition
+            // of the panel dot arithmetic — see kernels::panel).
+            let acc = panel::dot_rows_micro_kernel(
+                qs,
+                &self.pack[p * self.d..(p + 1) * self.d],
+            );
+            let m0 = p * PANEL_COLS;
+            let cw = PANEL_COLS.min(self.n_sup - m0);
+            for c in 0..cw {
+                let m = m0 + c;
+                let j = self.center_of[m] as usize;
+                let w = self.coefs[m];
+                let ns = self.norms[m];
+                for (r, accr) in acc.iter().enumerate().take(qr) {
+                    let kval = KernelPanel::finish(self.kernel, nq[r], ns, accr[c]);
+                    cross[r * k + j] += w * kval;
+                }
+            }
+        }
+        for r in 0..qr {
+            for j in 0..k {
+                out[r * k + j] = (kxx[r] - 2.0 * cross[r * k + j] + self.cc[j]).max(0.0);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{blobs, SyntheticSpec};
+    use crate::kkmeans::CenterWindow;
+    use crate::util::rng::Rng;
+
+    fn model_for(d: usize, kernel: KernelFunction) -> (Dataset, KernelKMeansModel) {
+        let mut rng = Rng::seeded(71);
+        let ds = blobs(&SyntheticSpec::new(60, d, 3), &mut rng);
+        let mut windows: Vec<CenterWindow> =
+            (0..3).map(|j| CenterWindow::new(j * 9, 17)).collect();
+        for step in 0..10 {
+            for (j, w) in windows.iter_mut().enumerate() {
+                let pts: Vec<usize> =
+                    (0..1 + (step + j) % 4).map(|_| rng.below(ds.n)).collect();
+                w.apply_update(0.4, &pts, None);
+            }
+        }
+        let model = KernelKMeansModel::freeze(&ds, kernel, &mut windows);
+        (ds, model)
+    }
+
+    #[test]
+    fn batched_distances_match_scalar_bitwise() {
+        for d in [1usize, 3, 16, 128] {
+            let (ds, model) = model_for(d, KernelFunction::Gaussian { kappa: d as f64 + 1.0 });
+            let engine = PredictEngine::new(&model);
+            assert_eq!(engine.support_points(), model.support_points());
+            // Odd batch remainders around the 4-row block size.
+            for nq in [1usize, 2, 3, 4, 5, 7, 13] {
+                let rows = &ds.features[..nq * d];
+                let got = engine.distances_batch(rows);
+                for q in 0..nq {
+                    let want = model.distances(&rows[q * d..(q + 1) * d]);
+                    for (j, w) in want.iter().enumerate() {
+                        assert_eq!(
+                            got[q * engine.k() + j].to_bits(),
+                            w.to_bits(),
+                            "d={d} nq={nq} q={q} j={j}"
+                        );
+                    }
+                }
+                let pred = engine.predict_batch(rows);
+                for q in 0..nq {
+                    assert_eq!(pred[q], model.predict(&rows[q * d..(q + 1) * d]));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dot_product_kernels_served_identically() {
+        for kernel in [
+            KernelFunction::Linear,
+            KernelFunction::Polynomial { gamma: 0.5, coef0: 1.0, degree: 2 },
+            KernelFunction::Laplacian { sigma: 2.0 },
+        ] {
+            let (ds, model) = model_for(5, kernel);
+            let engine = PredictEngine::new(&model);
+            let rows = &ds.features[..9 * 5];
+            let got = engine.distances_batch(rows);
+            for q in 0..9 {
+                let want = model.distances(&rows[q * 5..(q + 1) * 5]);
+                for (j, w) in want.iter().enumerate() {
+                    assert_eq!(got[q * 3 + j].to_bits(), w.to_bits(), "{kernel:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let (_, model) = model_for(3, KernelFunction::Linear);
+        let engine = PredictEngine::new(&model);
+        assert!(engine.predict_batch(&[]).is_empty());
+        assert!(engine.distances_batch(&[]).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "dimension mismatch")]
+    fn ragged_batch_panics_like_scalar_predict() {
+        let (_, model) = model_for(3, KernelFunction::Linear);
+        let engine = PredictEngine::new(&model);
+        let _ = engine.predict_batch(&[0.0; 4]);
+    }
+}

@@ -1,0 +1,858 @@
+//! The versioned on-disk artifact format behind `fit` → `predict`
+//! (DESIGN.md §8).
+//!
+//! Two artifact kinds share one container:
+//!
+//! * **`model`** — a frozen [`KernelKMeansModel`]: per-center support
+//!   feature rows, coefficients, cached squared norms, and ⟨Ĉ,Ĉ⟩.
+//! * **`stream`** — a [`StreamingKernelKMeans`] checkpoint: the reservoir
+//!   dataset, every window's raw entry structure, the learning-rate
+//!   counters, and the iteration count — everything a bit-for-bit
+//!   `resume` needs.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! offset 0   8 bytes   magic "MBKKMDL\0"
+//! offset 8   u32       header length H
+//! offset 12  H bytes   JSON header (util::json): format_version, kind,
+//!                      kernel parameters, dimensions, and every count
+//!                      needed to compute the exact payload size
+//! offset 12+H          binary payload: f32/f64/u32 arrays in the order
+//!                      the header describes
+//! ```
+//!
+//! Float *scalars* that only parameterize the kernel live in the JSON
+//! header (Rust's shortest-round-trip formatting re-parses bit-exactly);
+//! every float *array* lives in the binary payload verbatim, so a
+//! save→load round trip is bit-identical by construction.
+//!
+//! **Version policy** (mirrors [`crate::runtime::manifest`]): loaders
+//! accept exactly [`FORMAT_VERSION`] and reject anything else with a
+//! clear error — never a silent best-effort parse. Additive evolution
+//! bumps the version; old binaries refuse new artifacts instead of
+//! misreading them. **Robustness contract**: malformed input of any kind
+//! (bad magic, truncated header or payload, corrupt JSON, unknown
+//! kernels, out-of-range indices) yields an [`Error`](crate::util::error)
+//! — the loaders never panic and never allocate more than the input's
+//! own length. The serving conformance suite
+//! (`rust/tests/conformance_serve.rs`) pins all of this.
+
+use crate::data::Dataset;
+use crate::kernels::KernelFunction;
+use crate::kkmeans::learning_rate::RateState;
+use crate::kkmeans::state::{WindowState, WindowView};
+use crate::kkmeans::{CenterWindow, KernelKMeansModel, LearningRate, StreamingKernelKMeans};
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+use crate::{bail, format_err};
+use std::path::Path;
+
+/// Artifact magic: identifies both kinds; the header's `kind` field
+/// disambiguates.
+pub const MAGIC: [u8; 8] = *b"MBKKMDL\0";
+
+/// The one format version this build reads and writes.
+pub const FORMAT_VERSION: usize = 1;
+
+// ---- container ------------------------------------------------------------
+
+fn assemble(header: Json, payload: Vec<u8>) -> Vec<u8> {
+    let htext = header.to_string();
+    let mut out = Vec::with_capacity(12 + htext.len() + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&(htext.len() as u32).to_le_bytes());
+    out.extend_from_slice(htext.as_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Validate magic + version, parse the header, and return it with the
+/// payload slice. `want_kind` cross-checks that a model artifact is not
+/// opened as a checkpoint or vice versa.
+fn split_artifact<'a>(bytes: &'a [u8], want_kind: &str) -> Result<(Json, &'a [u8])> {
+    if bytes.len() < 12 {
+        bail!("artifact too short ({} bytes): not an mbkk artifact", bytes.len());
+    }
+    if bytes[..8] != MAGIC {
+        bail!("bad magic: not an mbkk model/checkpoint artifact");
+    }
+    let hlen = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize;
+    let rest = &bytes[12..];
+    if hlen > rest.len() {
+        bail!(
+            "artifact header truncated (header claims {hlen} bytes, {} available)",
+            rest.len()
+        );
+    }
+    let text =
+        std::str::from_utf8(&rest[..hlen]).context("artifact header is not UTF-8")?;
+    let header = Json::parse(text).context("artifact header is not valid JSON")?;
+    let version = header
+        .get("format_version")
+        .as_usize()
+        .context("artifact header missing format_version")?;
+    if version != FORMAT_VERSION {
+        bail!(
+            "unsupported artifact format version {version} \
+             (this build reads version {FORMAT_VERSION})"
+        );
+    }
+    let kind = header
+        .get("kind")
+        .as_str()
+        .context("artifact header missing kind")?;
+    if kind != want_kind {
+        bail!(
+            "artifact kind {kind:?} where {want_kind:?} was expected \
+             (a {kind:?} artifact cannot be opened as a {want_kind:?})"
+        );
+    }
+    Ok((header, &rest[hlen..]))
+}
+
+// ---- binary payload helpers -----------------------------------------------
+
+fn push_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn push_f64s(buf: &mut Vec<u8>, xs: &[f64]) {
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn push_u32s(buf: &mut Vec<u8>, xs: &[u32]) {
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Bounds-checked little-endian payload reader. Every `take` is validated
+/// against the remaining input, so a truncated payload is an error at the
+/// exact offset, never a slice panic. (The loaders additionally pre-check
+/// the *total* payload size from the header's counts before reading, so
+/// in practice the per-take errors only fire on internally inconsistent
+/// input.)
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(bytes: &'a [u8]) -> Reader<'a> {
+        Reader { bytes, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.bytes.len())
+            .ok_or_else(|| {
+                format_err!(
+                    "artifact payload truncated at byte {} ({} more wanted, {} left)",
+                    self.pos,
+                    n,
+                    self.bytes.len() - self.pos
+                )
+            })?;
+        let s = &self.bytes[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn f64s(&mut self, n: usize) -> Result<Vec<f64>> {
+        let raw = self.take(n * 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| {
+                f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]])
+            })
+            .collect())
+    }
+
+    fn u32s(&mut self, n: usize) -> Result<Vec<u32>> {
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(self.f64s(1)?[0])
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.pos != self.bytes.len() {
+            bail!(
+                "artifact payload has {} trailing bytes (corrupt or a newer writer)",
+                self.bytes.len() - self.pos
+            );
+        }
+        Ok(())
+    }
+}
+
+// ---- kernel parameters ----------------------------------------------------
+
+fn kernel_to_json(f: KernelFunction) -> Json {
+    match f {
+        KernelFunction::Gaussian { kappa } => Json::obj(vec![
+            ("name", Json::Str("gaussian".into())),
+            ("kappa", Json::Num(kappa)),
+        ]),
+        KernelFunction::Laplacian { sigma } => Json::obj(vec![
+            ("name", Json::Str("laplacian".into())),
+            ("sigma", Json::Num(sigma)),
+        ]),
+        KernelFunction::Polynomial { gamma, coef0, degree } => Json::obj(vec![
+            ("name", Json::Str("polynomial".into())),
+            ("gamma", Json::Num(gamma)),
+            ("coef0", Json::Num(coef0)),
+            ("degree", Json::Num(degree as f64)),
+        ]),
+        KernelFunction::Linear => {
+            Json::obj(vec![("name", Json::Str("linear".into()))])
+        }
+    }
+}
+
+fn kernel_from_json(j: &Json) -> Result<KernelFunction> {
+    let name = j
+        .get("name")
+        .as_str()
+        .context("artifact header missing kernel name")?;
+    let num = |key: &str| -> Result<f64> {
+        let v = j
+            .get(key)
+            .as_f64()
+            .with_context(|| format!("kernel {name:?} missing parameter {key:?}"))?;
+        if !v.is_finite() {
+            bail!("kernel {name:?} parameter {key:?} is not finite");
+        }
+        Ok(v)
+    };
+    match name {
+        "gaussian" => Ok(KernelFunction::Gaussian { kappa: num("kappa")? }),
+        "laplacian" => Ok(KernelFunction::Laplacian { sigma: num("sigma")? }),
+        "polynomial" => {
+            let degree = j
+                .get("degree")
+                .as_usize()
+                .context("kernel \"polynomial\" missing integer degree")?;
+            Ok(KernelFunction::Polynomial {
+                gamma: num("gamma")?,
+                coef0: num("coef0")?,
+                degree: u32::try_from(degree)
+                    .ok()
+                    .with_context(|| format!("polynomial degree {degree} exceeds u32"))?,
+            })
+        }
+        "linear" => Ok(KernelFunction::Linear),
+        other => bail!(
+            "unknown kernel {other:?} in artifact header \
+             (this build knows gaussian|laplacian|polynomial|linear)"
+        ),
+    }
+}
+
+// ---- kind "model" ---------------------------------------------------------
+
+/// Serialize a frozen model (kind `model`).
+pub fn model_to_bytes(model: &KernelKMeansModel) -> Vec<u8> {
+    let support: Vec<Json> = model
+        .centers
+        .iter()
+        .map(|(_, coefs, _)| Json::Num(coefs.len() as f64))
+        .collect();
+    let header = Json::obj(vec![
+        ("format_version", Json::Num(FORMAT_VERSION as f64)),
+        ("kind", Json::Str("model".into())),
+        ("kernel", kernel_to_json(model.kernel)),
+        ("d", Json::Num(model.d as f64)),
+        ("k", Json::Num(model.k() as f64)),
+        ("support", Json::Arr(support)),
+    ]);
+    let mut payload = Vec::new();
+    for (feats, coefs, norms) in model.centers.iter() {
+        push_f32s(&mut payload, feats);
+        push_f64s(&mut payload, coefs);
+        push_f64s(&mut payload, norms);
+    }
+    push_f64s(&mut payload, &model.cc);
+    assemble(header, payload)
+}
+
+/// Parse a kind-`model` artifact. See the module docs for the validation
+/// and robustness contract.
+pub fn model_from_bytes(bytes: &[u8]) -> Result<KernelKMeansModel> {
+    let (header, payload) = split_artifact(bytes, "model")?;
+    let kernel = kernel_from_json(header.get("kernel"))?;
+    let d = header.get("d").as_usize().context("artifact header missing d")?;
+    let k = header.get("k").as_usize().context("artifact header missing k")?;
+    if d == 0 {
+        bail!("artifact header has d=0 (a model must have a feature dimension)");
+    }
+    if k == 0 {
+        bail!("artifact header has k=0 (a model must have at least one center)");
+    }
+    let support = header
+        .get("support")
+        .as_arr()
+        .context("artifact header missing support counts")?;
+    if support.len() != k {
+        bail!(
+            "artifact header has {} support counts for k={k} centers",
+            support.len()
+        );
+    }
+    let counts: Vec<usize> = support
+        .iter()
+        .map(|s| s.as_usize().context("artifact header has a non-integer support count"))
+        .collect::<Result<_>>()?;
+    // Exact payload-size pre-check in u128 (immune to adversarial counts)
+    // before any array is read: a short payload is "truncated", a long one
+    // is "trailing bytes", both with byte-accurate messages.
+    let mut expect: u128 = (k as u128) * 8;
+    for &s in &counts {
+        expect += (s as u128) * (d as u128) * 4 + (s as u128) * 16;
+    }
+    if expect != payload.len() as u128 {
+        bail!(
+            "model payload truncated or corrupt: header describes {expect} bytes, \
+             found {}",
+            payload.len()
+        );
+    }
+    let mut r = Reader::new(payload);
+    let mut centers = Vec::with_capacity(k);
+    for &s in &counts {
+        // s * d cannot overflow usize here: the pre-check above bounds it
+        // by the actual payload length.
+        let feats = r.f32s(s * d)?;
+        let coefs = r.f64s(s)?;
+        let norms = r.f64s(s)?;
+        centers.push((feats, coefs, norms));
+    }
+    let cc = r.f64s(k)?;
+    r.done()?;
+    Ok(KernelKMeansModel { kernel, d, centers, cc })
+}
+
+/// Write a model artifact to `path`.
+pub fn save_model(model: &KernelKMeansModel, path: &Path) -> Result<()> {
+    std::fs::write(path, model_to_bytes(model))
+        .with_context(|| format!("writing model artifact {}", path.display()))
+}
+
+/// Load a model artifact from `path`.
+pub fn load_model(path: &Path) -> Result<KernelKMeansModel> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading model artifact {}", path.display()))?;
+    model_from_bytes(&bytes)
+        .with_context(|| format!("loading model artifact {}", path.display()))
+}
+
+// ---- kind "stream" --------------------------------------------------------
+
+/// Serialize a streaming checkpoint (kind `stream`). The window state is
+/// read through borrowed [`WindowView`]s — no copy of the O(k·(τ+b))
+/// support arrays is made on the checkpoint path.
+pub fn stream_to_bytes(s: &StreamingKernelKMeans) -> Vec<u8> {
+    let states: Vec<WindowView<'_>> = s
+        .windows
+        .as_ref()
+        .map(|ws| ws.iter().map(|w| w.state_view()).collect())
+        .unwrap_or_default();
+    let windows_json: Vec<Json> = states
+        .iter()
+        .map(|w| {
+            Json::obj(vec![
+                (
+                    "entries",
+                    Json::arr_num(w.entries.iter().map(|(p, _)| p.len() as f64)),
+                ),
+                ("has_init", Json::Bool(w.init_point.is_some())),
+                (
+                    "init_idx",
+                    match w.init_point {
+                        Some((idx, _)) => Json::Num(idx as f64),
+                        None => Json::Null,
+                    },
+                ),
+                ("has_cc", Json::Bool(w.cc_cache.is_some())),
+                ("updates_since_exact", Json::Num(w.updates_since_exact as f64)),
+            ])
+        })
+        .collect();
+    let header = Json::obj(vec![
+        ("format_version", Json::Num(FORMAT_VERSION as f64)),
+        ("kind", Json::Str("stream".into())),
+        ("kernel", kernel_to_json(s.kernel)),
+        ("d", Json::Num(s.store.d as f64)),
+        ("k", Json::Num(s.k as f64)),
+        ("tau", Json::Num(s.tau as f64)),
+        ("batch_size", Json::Num(s.batch_size as f64)),
+        ("iterations", Json::Num(s.iterations as f64)),
+        ("rate", Json::Str(s.rate.kind().name().into())),
+        ("rate_counts", Json::Num(s.rate.counts().len() as f64)),
+        ("store_n", Json::Num(s.store.n as f64)),
+        ("has_windows", Json::Bool(s.windows.is_some())),
+        ("windows", Json::Arr(windows_json)),
+    ]);
+    let mut payload = Vec::new();
+    push_f32s(&mut payload, &s.store.features);
+    push_f64s(&mut payload, s.rate.counts());
+    for w in &states {
+        for (points, raws) in &w.entries {
+            push_u32s(&mut payload, points);
+            push_f64s(&mut payload, raws);
+        }
+        push_f64s(&mut payload, &[w.scale]);
+        if let Some((_, raw)) = w.init_point {
+            push_f64s(&mut payload, &[raw]);
+        }
+        if let Some(cc) = w.cc_cache {
+            push_f64s(&mut payload, &[cc]);
+        }
+    }
+    assemble(header, payload)
+}
+
+/// Per-window structure pulled from the header before the payload is read.
+struct WinMeta {
+    entry_lens: Vec<usize>,
+    has_init: bool,
+    init_idx: u32,
+    has_cc: bool,
+    updates_since_exact: u32,
+}
+
+/// Parse a kind-`stream` checkpoint artifact.
+pub fn stream_from_bytes(bytes: &[u8]) -> Result<StreamingKernelKMeans> {
+    let (header, payload) = split_artifact(bytes, "stream")?;
+    let kernel = kernel_from_json(header.get("kernel"))?;
+    let want = |key: &str| -> Result<usize> {
+        header
+            .get(key)
+            .as_usize()
+            .with_context(|| format!("artifact header missing {key}"))
+    };
+    let d = want("d")?;
+    let k = want("k")?;
+    let tau = want("tau")?;
+    let batch_size = want("batch_size")?;
+    let iterations = want("iterations")?;
+    let rate_counts_len = want("rate_counts")?;
+    let store_n = want("store_n")?;
+    if d == 0 {
+        bail!("artifact header has d=0 (a stream must have a feature dimension)");
+    }
+    if k == 0 {
+        bail!("artifact header has k=0 (a stream must have at least one center)");
+    }
+    if tau == 0 {
+        bail!("artifact header has tau=0 (truncation windows need tau >= 1)");
+    }
+    // Writer invariants the loader must enforce, or a corrupt checkpoint
+    // loads fine and panics later inside partial_fit (out-of-bounds rate
+    // counts, empty-window assignment) — violating the never-panic
+    // contract above.
+    if rate_counts_len != k {
+        bail!(
+            "artifact header has {rate_counts_len} learning-rate counters for \
+             k={k} centers"
+        );
+    }
+    let rate_kind = match header
+        .get("rate")
+        .as_str()
+        .context("artifact header missing rate")?
+    {
+        "beta" => LearningRate::Beta,
+        "sklearn" => LearningRate::Sklearn,
+        other => bail!("unknown learning-rate schedule {other:?} in artifact header"),
+    };
+    let has_windows = header
+        .get("has_windows")
+        .as_bool()
+        .context("artifact header missing has_windows")?;
+    let windows_json = header
+        .get("windows")
+        .as_arr()
+        .context("artifact header missing windows")?;
+    if !has_windows && !windows_json.is_empty() {
+        bail!("artifact header lists windows but has_windows=false");
+    }
+    // The writer emits min(k, first-batch size) ≥ 1 windows once
+    // initialized; anything outside [1, k] is corrupt.
+    if has_windows && (windows_json.is_empty() || windows_json.len() > k) {
+        bail!(
+            "artifact header has {} windows for k={k} centers",
+            windows_json.len()
+        );
+    }
+    let mut metas = Vec::with_capacity(windows_json.len());
+    for w in windows_json {
+        let entry_lens: Vec<usize> = w
+            .get("entries")
+            .as_arr()
+            .context("window header missing entries")?
+            .iter()
+            .map(|e| e.as_usize().context("window header has a non-integer entry length"))
+            .collect::<Result<_>>()?;
+        let has_init = w
+            .get("has_init")
+            .as_bool()
+            .context("window header missing has_init")?;
+        let init_idx = if has_init {
+            let idx = w
+                .get("init_idx")
+                .as_usize()
+                .context("window header missing init_idx")?;
+            u32::try_from(idx).ok().context("window init_idx exceeds u32")?
+        } else {
+            0
+        };
+        let updates = w
+            .get("updates_since_exact")
+            .as_usize()
+            .context("window header missing updates_since_exact")?;
+        metas.push(WinMeta {
+            entry_lens,
+            has_init,
+            init_idx,
+            has_cc: w
+                .get("has_cc")
+                .as_bool()
+                .context("window header missing has_cc")?,
+            updates_since_exact: u32::try_from(updates)
+                .ok()
+                .context("window updates_since_exact exceeds u32")?,
+        });
+    }
+    // Exact payload-size pre-check (u128; see model_from_bytes).
+    let mut expect: u128 =
+        (store_n as u128) * (d as u128) * 4 + (rate_counts_len as u128) * 8;
+    for m in &metas {
+        for &len in &m.entry_lens {
+            expect += (len as u128) * 12; // u32 points + f64 raws
+        }
+        expect += 8; // scale
+        expect += 8 * u128::from(m.has_init) + 8 * u128::from(m.has_cc);
+    }
+    if expect != payload.len() as u128 {
+        bail!(
+            "checkpoint payload truncated or corrupt: header describes {expect} \
+             bytes, found {}",
+            payload.len()
+        );
+    }
+    let mut r = Reader::new(payload);
+    let features = r.f32s(store_n * d)?;
+    let counts = r.f64s(rate_counts_len)?;
+    let mut windows = Vec::with_capacity(metas.len());
+    for m in &metas {
+        let mut entries = Vec::with_capacity(m.entry_lens.len());
+        for &len in &m.entry_lens {
+            let points = r.u32s(len)?;
+            if let Some(&bad) = points.iter().find(|&&p| p as usize >= store_n) {
+                bail!(
+                    "checkpoint window references store row {bad} but the \
+                     reservoir has only {store_n} rows"
+                );
+            }
+            let raws = r.f64s(len)?;
+            entries.push((points, raws));
+        }
+        let scale = r.f64()?;
+        let init_point = if m.has_init {
+            if m.init_idx as usize >= store_n {
+                bail!(
+                    "checkpoint window init point {} is outside the {store_n}-row \
+                     reservoir",
+                    m.init_idx
+                );
+            }
+            Some((m.init_idx, r.f64()?))
+        } else {
+            None
+        };
+        let cc_cache = if m.has_cc { Some(r.f64()?) } else { None };
+        windows.push(CenterWindow::from_state(WindowState {
+            entries,
+            scale,
+            init_point,
+            tau,
+            cc_cache,
+            updates_since_exact: m.updates_since_exact,
+        }));
+    }
+    r.done()?;
+    Ok(StreamingKernelKMeans {
+        kernel,
+        k,
+        tau,
+        batch_size,
+        rate: RateState::from_parts(rate_kind, counts),
+        store: Dataset::new("stream", features, store_n, d),
+        windows: has_windows.then_some(windows),
+        iterations,
+    })
+}
+
+/// Write a checkpoint artifact to `path`.
+pub fn save_stream(s: &StreamingKernelKMeans, path: &Path) -> Result<()> {
+    std::fs::write(path, stream_to_bytes(s))
+        .with_context(|| format!("writing checkpoint artifact {}", path.display()))
+}
+
+/// Load a checkpoint artifact from `path`.
+pub fn load_stream(path: &Path) -> Result<StreamingKernelKMeans> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading checkpoint artifact {}", path.display()))?;
+    stream_from_bytes(&bytes)
+        .with_context(|| format!("loading checkpoint artifact {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{blobs, SyntheticSpec};
+    use crate::util::rng::Rng;
+
+    fn tiny_model(kernel: KernelFunction) -> KernelKMeansModel {
+        let mut rng = Rng::seeded(41);
+        let ds = blobs(&SyntheticSpec::new(30, 3, 2), &mut rng);
+        let mut windows: Vec<CenterWindow> =
+            (0..2).map(|j| CenterWindow::new(j * 5, 9)).collect();
+        for step in 0..6 {
+            for w in windows.iter_mut() {
+                let pts: Vec<usize> =
+                    (0..1 + step % 3).map(|_| rng.below(ds.n)).collect();
+                w.apply_update(0.5, &pts, None);
+            }
+        }
+        KernelKMeansModel::freeze(&ds, kernel, &mut windows)
+    }
+
+    #[test]
+    fn model_roundtrip_is_bit_identical_for_every_kernel() {
+        for kernel in [
+            KernelFunction::Gaussian { kappa: 3.5 },
+            KernelFunction::Laplacian { sigma: 1.25 },
+            KernelFunction::Polynomial { gamma: 0.5, coef0: 1.0, degree: 3 },
+            KernelFunction::Linear,
+        ] {
+            let model = tiny_model(kernel);
+            let bytes = model_to_bytes(&model);
+            let back = model_from_bytes(&bytes).expect("roundtrip");
+            assert_eq!(back.kernel, model.kernel);
+            assert_eq!(model_to_bytes(&back), bytes, "{kernel:?}");
+        }
+    }
+
+    #[test]
+    fn loader_rejects_bad_magic_version_and_kind() {
+        let model = tiny_model(KernelFunction::Linear);
+        let good = model_to_bytes(&model);
+
+        let mut bad_magic = good.clone();
+        bad_magic[0] ^= 0xFF;
+        let err = model_from_bytes(&bad_magic).unwrap_err();
+        assert!(format!("{err}").contains("magic"), "{err}");
+
+        // Patch the version inside the JSON header, rebuilding the length.
+        let hlen = u32::from_le_bytes([good[8], good[9], good[10], good[11]]) as usize;
+        let header = std::str::from_utf8(&good[12..12 + hlen]).unwrap();
+        let patched = header.replace("\"format_version\":1", "\"format_version\":99");
+        let mut v99 = Vec::new();
+        v99.extend_from_slice(&good[..8]);
+        v99.extend_from_slice(&(patched.len() as u32).to_le_bytes());
+        v99.extend_from_slice(patched.as_bytes());
+        v99.extend_from_slice(&good[12 + hlen..]);
+        let err = model_from_bytes(&v99).unwrap_err();
+        assert!(format!("{err}").contains("version 99"), "{err}");
+
+        // A model artifact must not open as a stream checkpoint.
+        let err = stream_from_bytes(&good).unwrap_err();
+        assert!(format!("{err}").contains("kind"), "{err}");
+    }
+
+    #[test]
+    fn loader_errors_on_every_truncation_point() {
+        let model = tiny_model(KernelFunction::Gaussian { kappa: 2.0 });
+        let good = model_to_bytes(&model);
+        for len in 0..good.len() {
+            assert!(
+                model_from_bytes(&good[..len]).is_err(),
+                "prefix of {len}/{} bytes must fail to parse",
+                good.len()
+            );
+        }
+        let mut long = good.clone();
+        long.push(0);
+        assert!(model_from_bytes(&long).is_err(), "trailing bytes must fail");
+    }
+
+    #[test]
+    fn stream_roundtrip_preserves_every_byte() {
+        let mut rng = Rng::seeded(5);
+        let ds = blobs(&SyntheticSpec::new(400, 4, 3), &mut rng);
+        let mut s = StreamingKernelKMeans::new(
+            KernelFunction::Gaussian { kappa: 5.0 },
+            ds.d,
+            3,
+            32,
+            20,
+            LearningRate::Sklearn,
+        );
+        for _ in 0..8 {
+            let idx = rng.sample_with_replacement(ds.n, 32);
+            let mut rows = Vec::with_capacity(32 * ds.d);
+            for &i in &idx {
+                rows.extend_from_slice(ds.row(i));
+            }
+            s.partial_fit(&rows, &mut rng);
+        }
+        let bytes = stream_to_bytes(&s);
+        let back = stream_from_bytes(&bytes).expect("roundtrip");
+        assert_eq!(back.iterations, s.iterations);
+        assert_eq!(stream_to_bytes(&back), bytes);
+    }
+
+    #[test]
+    fn fresh_stream_snapshot_roundtrips() {
+        // Before the first batch there are no windows; the checkpoint must
+        // still round-trip (has_windows=false).
+        let s = StreamingKernelKMeans::new(
+            KernelFunction::Linear,
+            2,
+            4,
+            16,
+            10,
+            LearningRate::Beta,
+        );
+        let bytes = stream_to_bytes(&s);
+        let back = stream_from_bytes(&bytes).expect("roundtrip");
+        assert_eq!(back.iterations, 0);
+        assert_eq!(stream_to_bytes(&back), bytes);
+    }
+
+    /// Rebuild an artifact with one header substring replaced (adjusting
+    /// the length prefix), leaving the payload untouched.
+    fn patch_header(bytes: &[u8], from: &str, to: &str) -> Vec<u8> {
+        let hlen = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize;
+        let header = std::str::from_utf8(&bytes[12..12 + hlen]).unwrap();
+        let patched = header.replace(from, to);
+        assert_ne!(patched, header, "patch {from:?} must hit the header");
+        let mut out = Vec::new();
+        out.extend_from_slice(&bytes[..8]);
+        out.extend_from_slice(&(patched.len() as u32).to_le_bytes());
+        out.extend_from_slice(patched.as_bytes());
+        out.extend_from_slice(&bytes[12 + hlen..]);
+        out
+    }
+
+    #[test]
+    fn stream_loader_enforces_writer_invariants() {
+        // A checkpoint whose header is internally consistent for the size
+        // pre-check but violates writer invariants (k vs rate counters vs
+        // window count) must fail at load, not panic inside partial_fit.
+        let mut rng = Rng::seeded(13);
+        let ds = blobs(&SyntheticSpec::new(100, 3, 2), &mut rng);
+        let mut s = StreamingKernelKMeans::new(
+            KernelFunction::Gaussian { kappa: 4.0 },
+            ds.d,
+            3,
+            16,
+            10,
+            LearningRate::Sklearn,
+        );
+        let idx = rng.sample_with_replacement(ds.n, 16);
+        let mut rows = Vec::new();
+        for &i in &idx {
+            rows.extend_from_slice(ds.row(i));
+        }
+        s.partial_fit(&rows, &mut rng);
+        let good = stream_to_bytes(&s);
+        // k inflated: the 3 rate counters no longer cover 99 centers.
+        let err = stream_from_bytes(&patch_header(&good, "\"k\":3", "\"k\":99")).unwrap_err();
+        assert!(format!("{err}").contains("learning-rate counters"), "{err}");
+        // More advertised counters than centers.
+        let err = stream_from_bytes(&patch_header(
+            &good,
+            "\"rate_counts\":3",
+            "\"rate_counts\":4",
+        ))
+        .unwrap_err();
+        assert!(format!("{err}").contains("learning-rate counters"), "{err}");
+        // Initialized stream with an empty window list.
+        let fresh = StreamingKernelKMeans::new(
+            KernelFunction::Linear,
+            2,
+            2,
+            8,
+            5,
+            LearningRate::Beta,
+        );
+        let err = stream_from_bytes(&patch_header(
+            &stream_to_bytes(&fresh),
+            "\"has_windows\":false",
+            "\"has_windows\":true",
+        ))
+        .unwrap_err();
+        assert!(format!("{err}").contains("windows"), "{err}");
+    }
+
+    #[test]
+    fn stream_loader_rejects_out_of_range_indices() {
+        let mut rng = Rng::seeded(6);
+        let ds = blobs(&SyntheticSpec::new(100, 3, 2), &mut rng);
+        let mut s = StreamingKernelKMeans::new(
+            KernelFunction::Gaussian { kappa: 4.0 },
+            ds.d,
+            2,
+            16,
+            10,
+            LearningRate::Beta,
+        );
+        let idx = rng.sample_with_replacement(ds.n, 16);
+        let mut rows = Vec::new();
+        for &i in &idx {
+            rows.extend_from_slice(ds.row(i));
+        }
+        s.partial_fit(&rows, &mut rng);
+        let good = stream_to_bytes(&s);
+        // Shrink the advertised reservoir without touching the windows:
+        // every header is rebuilt with store_n=0 and an empty feature block.
+        let hlen = u32::from_le_bytes([good[8], good[9], good[10], good[11]]) as usize;
+        let header = std::str::from_utf8(&good[12..12 + hlen]).unwrap();
+        let store_n = s.stored_rows();
+        let patched = header.replace(&format!("\"store_n\":{store_n}"), "\"store_n\":0");
+        assert_ne!(patched, header, "test patch must hit the header");
+        let mut tampered = Vec::new();
+        tampered.extend_from_slice(&good[..8]);
+        tampered.extend_from_slice(&(patched.len() as u32).to_le_bytes());
+        tampered.extend_from_slice(patched.as_bytes());
+        tampered.extend_from_slice(&good[12 + hlen + store_n * ds.d * 4..]);
+        let err = stream_from_bytes(&tampered).unwrap_err();
+        assert!(
+            format!("{err}").contains("reservoir") || format!("{err}").contains("init point"),
+            "{err}"
+        );
+    }
+}

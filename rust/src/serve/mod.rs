@@ -1,0 +1,23 @@
+//! Model persistence and the batched prediction service (DESIGN.md §8).
+//!
+//! The truncated representation makes a fitted kernel k-means model
+//! *servable* — assigning a new point costs O(k·(τ+b)) kernel evaluations
+//! with no access to the training set — and this module gives that a
+//! production shape:
+//!
+//! * [`format`] — the versioned on-disk artifact format behind
+//!   `KernelKMeansModel::{save, load}` and
+//!   `StreamingKernelKMeans::{snapshot, resume}` (zero-dep: a JSON header
+//!   via `util::json` plus a little-endian binary payload).
+//! * [`PredictEngine`] — batched query answering through packed support
+//!   panels and the persistent worker pool, bit-identical to the scalar
+//!   `KernelKMeansModel::predict`.
+//!
+//! The CLI's `fit` / `predict` / `serve-bench` subcommands are thin
+//! drivers over these two pieces plus
+//! `coordinator::experiment::fit_servable_model`.
+
+pub mod engine;
+pub mod format;
+
+pub use engine::PredictEngine;

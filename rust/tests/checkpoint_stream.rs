@@ -1,0 +1,141 @@
+//! Checkpoint conformance (ISSUE 4): `StreamingKernelKMeans`
+//! snapshot → resume → `partial_fit` must match an uninterrupted run
+//! **bit-for-bit** on the same RNG stream.
+//!
+//! The checkpoint artifact captures the reservoir, every window's raw
+//! entry structure (including the incrementally-maintained ⟨Ĉ,Ĉ⟩ cache
+//! and its drift counter), the learning-rate counters, and the iteration
+//! count — so the resumed twin's entire future trajectory, including
+//! reservoir compactions and the cc refresh schedule, is the
+//! uninterrupted one. Final-state equality is asserted on the serialized
+//! bytes themselves, the strongest possible form.
+
+use mbkk::data::synthetic::{blobs, SyntheticSpec};
+use mbkk::data::Dataset;
+use mbkk::kernels::KernelFunction;
+use mbkk::kkmeans::{LearningRate, StreamingKernelKMeans};
+use mbkk::util::rng::Rng;
+use std::path::PathBuf;
+
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("mbkk_checkpoint_{tag}_{}.mbkk", std::process::id()))
+}
+
+/// Pre-generate a deterministic batch stream so the uninterrupted and the
+/// interrupted twin consume identical rows.
+fn batch_stream(ds: &Dataset, n_batches: usize, batch: usize) -> Vec<Vec<f32>> {
+    let mut rng = Rng::seeded(99);
+    (0..n_batches)
+        .map(|_| {
+            let idx = rng.sample_with_replacement(ds.n, batch);
+            let mut rows = Vec::with_capacity(batch * ds.d);
+            for &i in &idx {
+                rows.extend_from_slice(ds.row(i));
+            }
+            rows
+        })
+        .collect()
+}
+
+#[test]
+fn snapshot_resume_matches_uninterrupted_run_bit_for_bit() {
+    // Both learning rates: Beta is stateless, Sklearn carries per-center
+    // counts the checkpoint must restore exactly.
+    for (tag, lr) in [("beta", LearningRate::Beta), ("sklearn", LearningRate::Sklearn)] {
+        let mut drng = Rng::seeded(8);
+        let ds = blobs(
+            &SyntheticSpec::new(2000, 6, 3).with_std(0.4).with_separation(7.0),
+            &mut drng,
+        );
+        let kernel = KernelFunction::Gaussian { kappa: 12.0 };
+        // 30 batches of 96 against k=3, tau=40, b=96: the reservoir crosses
+        // its 4·k·(τ+b) = 1632-row compaction threshold shortly *after* the
+        // iteration-15 checkpoint, so the restored windows and reservoir go
+        // through a full compaction remap on the resumed side — any
+        // restoration drift would surface as diverging row indices.
+        let batches = batch_stream(&ds, 30, 96);
+
+        let mut uninterrupted =
+            StreamingKernelKMeans::new(kernel, ds.d, 3, 96, 40, lr);
+        let mut rng_a = Rng::seeded(3);
+        for b in &batches {
+            uninterrupted.partial_fit(b, &mut rng_a);
+        }
+
+        let mut first_half = StreamingKernelKMeans::new(kernel, ds.d, 3, 96, 40, lr);
+        let mut rng_b = Rng::seeded(3);
+        for b in &batches[..15] {
+            first_half.partial_fit(b, &mut rng_b);
+        }
+        let path = tmp_path(tag);
+        first_half.snapshot(&path).expect("snapshot");
+        drop(first_half);
+        let mut resumed = StreamingKernelKMeans::resume(&path).expect("resume");
+        std::fs::remove_file(&path).ok();
+        assert_eq!(resumed.iterations, 15);
+        for b in &batches[15..] {
+            // partial_fit only draws from the RNG before the first batch
+            // (init), so continuing on rng_b keeps the streams identical.
+            resumed.partial_fit(b, &mut rng_b);
+        }
+
+        assert_eq!(uninterrupted.iterations, resumed.iterations, "{tag}");
+        assert_eq!(uninterrupted.stored_rows(), resumed.stored_rows(), "{tag}");
+        assert_eq!(
+            uninterrupted.snapshot_bytes(),
+            resumed.snapshot_bytes(),
+            "{tag}: resumed stream diverged from the uninterrupted run"
+        );
+        // And the served artifacts agree byte-for-byte too.
+        assert_eq!(
+            uninterrupted.to_model().to_bytes(),
+            resumed.to_model().to_bytes(),
+            "{tag}"
+        );
+    }
+}
+
+#[test]
+fn snapshot_before_first_batch_roundtrips_and_resumes() {
+    let mut rng = Rng::seeded(4);
+    let ds = blobs(&SyntheticSpec::new(400, 5, 2), &mut rng);
+    let kernel = KernelFunction::Gaussian { kappa: 8.0 };
+    let batches = batch_stream(&ds, 6, 64);
+
+    // Checkpoint an untouched stream (no windows yet) and feed the whole
+    // stream after resume; a twin fed directly must match bit-for-bit.
+    let fresh = StreamingKernelKMeans::new(kernel, ds.d, 2, 64, 30, LearningRate::Beta);
+    assert_eq!(fresh.iterations, 0);
+    let mut resumed =
+        StreamingKernelKMeans::resume_bytes(&fresh.snapshot_bytes()).expect("resume");
+    let mut twin = StreamingKernelKMeans::new(kernel, ds.d, 2, 64, 30, LearningRate::Beta);
+    let mut rng_a = Rng::seeded(5);
+    let mut rng_b = Rng::seeded(5);
+    for b in &batches {
+        resumed.partial_fit(b, &mut rng_a);
+        twin.partial_fit(b, &mut rng_b);
+    }
+    assert_eq!(resumed.snapshot_bytes(), twin.snapshot_bytes());
+}
+
+#[test]
+fn repeated_checkpointing_is_stable() {
+    // snapshot(resume(snapshot(x))) == snapshot(x): the format is a fixed
+    // point after one round trip (no re-encoding drift).
+    let mut rng = Rng::seeded(12);
+    let ds = blobs(&SyntheticSpec::new(500, 4, 3), &mut rng);
+    let mut s = StreamingKernelKMeans::new(
+        KernelFunction::Laplacian { sigma: 3.0 },
+        ds.d,
+        3,
+        48,
+        25,
+        LearningRate::Sklearn,
+    );
+    for b in &batch_stream(&ds, 10, 48) {
+        s.partial_fit(b, &mut rng);
+    }
+    let once = s.snapshot_bytes();
+    let resumed = StreamingKernelKMeans::resume_bytes(&once).expect("resume");
+    assert_eq!(resumed.snapshot_bytes(), once);
+}

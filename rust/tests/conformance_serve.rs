@@ -1,0 +1,220 @@
+//! Serving conformance suite (ISSUE 4): pins the persistence format and
+//! the batched prediction engine end to end.
+//!
+//! Contract under test (DESIGN.md §8):
+//!
+//! 1. save → load → predict is **bit-identical** to the in-memory model —
+//!    the artifact round trip changes no byte of the model and no bit of
+//!    any distance.
+//! 2. Batched [`PredictEngine`] output is **bit-identical** to scalar
+//!    [`KernelKMeansModel::predict`] across d ∈ {1, 3, 16, 128} and odd
+//!    batch remainders (the 4-row block's tail and the 8-wide panel's
+//!    padding lanes).
+//! 3. Corrupted, truncated, or wrong-version artifacts fail with clear
+//!    errors — never a panic, at any truncation point.
+
+use mbkk::data::synthetic::{blobs, SyntheticSpec};
+use mbkk::data::Dataset;
+use mbkk::kernels::KernelFunction;
+use mbkk::kkmeans::{CenterWindow, KernelKMeansModel, LearningRate, StreamingKernelKMeans};
+use mbkk::serve::PredictEngine;
+use mbkk::util::rng::Rng;
+use std::path::PathBuf;
+
+/// A model with irregular per-center support sizes (entry boundaries do
+/// not align with the 8-wide panels) without paying for a full fit.
+fn model_for(d: usize, kernel: KernelFunction, seed: u64) -> (Dataset, KernelKMeansModel) {
+    let mut rng = Rng::seeded(seed);
+    let ds = blobs(&SyntheticSpec::new(80, d, 3), &mut rng);
+    let mut windows: Vec<CenterWindow> =
+        (0..3).map(|j| CenterWindow::new(j * 7, 23)).collect();
+    for step in 0..12 {
+        for (j, w) in windows.iter_mut().enumerate() {
+            let pts: Vec<usize> =
+                (0..1 + (step + j) % 5).map(|_| rng.below(ds.n)).collect();
+            w.apply_update(0.4, &pts, None);
+        }
+    }
+    let model = KernelKMeansModel::freeze(&ds, kernel, &mut windows);
+    (ds, model)
+}
+
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("mbkk_conformance_{tag}_{}.mbkk", std::process::id()))
+}
+
+#[test]
+fn save_load_predict_is_bit_identical() {
+    for (i, kernel) in [
+        KernelFunction::Gaussian { kappa: 9.0 },
+        KernelFunction::Laplacian { sigma: 2.0 },
+        KernelFunction::Polynomial { gamma: 0.5, coef0: 1.0, degree: 3 },
+        KernelFunction::Linear,
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let (ds, model) = model_for(6, kernel, 11 + i as u64);
+        let path = tmp_path(&format!("roundtrip_{i}"));
+        model.save(&path).expect("save");
+        let loaded = KernelKMeansModel::load(&path).expect("load");
+        std::fs::remove_file(&path).ok();
+
+        // The artifact round trip preserves the model byte-for-byte...
+        assert_eq!(loaded.to_bytes(), model.to_bytes(), "{kernel:?}");
+        assert_eq!(loaded.kernel, model.kernel);
+        assert_eq!(loaded.d, model.d);
+        assert_eq!(loaded.k(), model.k());
+        assert_eq!(loaded.support_points(), model.support_points());
+
+        // ...and therefore every distance and assignment bit-for-bit.
+        for q in 0..ds.n {
+            let a = model.distances(ds.row(q));
+            let b = loaded.distances(ds.row(q));
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{kernel:?} q={q}");
+            }
+            assert_eq!(model.predict(ds.row(q)), loaded.predict(ds.row(q)));
+        }
+    }
+}
+
+#[test]
+fn batched_engine_is_bit_identical_to_scalar_predict() {
+    for d in [1usize, 3, 16, 128] {
+        let kernel = KernelFunction::Gaussian { kappa: d as f64 + 3.0 };
+        let (ds, model) = model_for(d, kernel, 31);
+        let engine = PredictEngine::new(&model);
+        assert_eq!(engine.k(), model.k());
+        assert_eq!(engine.d(), model.d);
+        // Odd remainders around the engine's 4-row blocks, including a
+        // batch bigger than one parallel chunk threshold.
+        for nq in [1usize, 2, 3, 4, 5, 7, 13, 80] {
+            let rows = &ds.features[..nq.min(ds.n) * d];
+            let nq = rows.len() / d;
+            let dist = engine.distances_batch(rows);
+            let pred = engine.predict_batch(rows);
+            for q in 0..nq {
+                let query = &rows[q * d..(q + 1) * d];
+                let want = model.distances(query);
+                for (j, w) in want.iter().enumerate() {
+                    assert_eq!(
+                        dist[q * model.k() + j].to_bits(),
+                        w.to_bits(),
+                        "d={d} nq={nq} q={q} j={j}"
+                    );
+                }
+                assert_eq!(pred[q], model.predict(query), "d={d} nq={nq} q={q}");
+            }
+        }
+    }
+}
+
+#[test]
+fn engine_on_loaded_model_matches_engine_on_original() {
+    let (ds, model) = model_for(16, KernelFunction::Gaussian { kappa: 20.0 }, 5);
+    let loaded = KernelKMeansModel::from_bytes(&model.to_bytes()).expect("round trip");
+    let a = PredictEngine::new(&model).predict_dataset(&ds);
+    let b = PredictEngine::new(&loaded).predict_dataset(&ds);
+    assert_eq!(a, b);
+}
+
+#[test]
+fn corrupted_artifacts_error_and_never_panic() {
+    let (_, model) = model_for(4, KernelFunction::Gaussian { kappa: 5.0 }, 17);
+    let good = model.to_bytes();
+
+    // Bad magic.
+    let mut bad = good.clone();
+    bad[0] ^= 0x55;
+    let err = KernelKMeansModel::from_bytes(&bad).unwrap_err();
+    assert!(format!("{err}").contains("magic"), "{err}");
+
+    // Garbage header bytes of the same length (invalid JSON).
+    let hlen = u32::from_le_bytes([good[8], good[9], good[10], good[11]]) as usize;
+    let mut garbage = good.clone();
+    for b in garbage[12..12 + hlen].iter_mut() {
+        *b = b'#';
+    }
+    let err = KernelKMeansModel::from_bytes(&garbage).unwrap_err();
+    assert!(format!("{err}").contains("JSON"), "{err}");
+
+    // Flipped payload byte still parses (values are opaque floats) but a
+    // *removed* payload byte must be caught by the size check.
+    let mut short = good.clone();
+    short.pop();
+    let err = KernelKMeansModel::from_bytes(&short).unwrap_err();
+    assert!(
+        format!("{err}").contains("truncated") || format!("{err}").contains("corrupt"),
+        "{err}"
+    );
+
+    // Trailing junk is rejected too.
+    let mut long = good.clone();
+    long.extend_from_slice(&[0, 1, 2, 3]);
+    assert!(KernelKMeansModel::from_bytes(&long).is_err());
+}
+
+#[test]
+fn every_truncation_point_errors() {
+    let (_, model) = model_for(3, KernelFunction::Linear, 23);
+    let good = model.to_bytes();
+    for len in 0..good.len() {
+        assert!(
+            KernelKMeansModel::from_bytes(&good[..len]).is_err(),
+            "prefix of {len}/{} bytes must fail cleanly",
+            good.len()
+        );
+    }
+}
+
+#[test]
+fn wrong_version_is_rejected_with_a_clear_error() {
+    let (_, model) = model_for(4, KernelFunction::Linear, 29);
+    let good = model.to_bytes();
+    let hlen = u32::from_le_bytes([good[8], good[9], good[10], good[11]]) as usize;
+    let header = std::str::from_utf8(&good[12..12 + hlen]).unwrap();
+    let patched = header.replace("\"format_version\":1", "\"format_version\":7");
+    assert_ne!(patched, header, "patch must hit the version field");
+    let mut v7 = Vec::new();
+    v7.extend_from_slice(&good[..8]);
+    v7.extend_from_slice(&(patched.len() as u32).to_le_bytes());
+    v7.extend_from_slice(patched.as_bytes());
+    v7.extend_from_slice(&good[12 + hlen..]);
+    let err = KernelKMeansModel::from_bytes(&v7).unwrap_err();
+    let text = format!("{err}");
+    assert!(text.contains("version 7") && text.contains("version 1"), "{text}");
+}
+
+#[test]
+fn artifact_kinds_do_not_cross_load() {
+    let (ds, model) = model_for(4, KernelFunction::Gaussian { kappa: 5.0 }, 37);
+    // A model artifact is not a checkpoint...
+    let err = StreamingKernelKMeans::resume_bytes(&model.to_bytes()).unwrap_err();
+    assert!(format!("{err}").contains("kind"), "{err}");
+    // ...and a checkpoint is not a model.
+    let mut rng = Rng::seeded(2);
+    let mut stream = StreamingKernelKMeans::new(
+        model.kernel,
+        ds.d,
+        3,
+        16,
+        20,
+        LearningRate::Beta,
+    );
+    let mut rows = Vec::new();
+    for _ in 0..16 {
+        rows.extend_from_slice(ds.row(rng.below(ds.n)));
+    }
+    stream.partial_fit(&rows, &mut rng);
+    let err = KernelKMeansModel::from_bytes(&stream.snapshot_bytes()).unwrap_err();
+    assert!(format!("{err}").contains("kind"), "{err}");
+}
+
+#[test]
+fn load_of_missing_file_is_an_error_with_the_path() {
+    let path = tmp_path("definitely_missing");
+    std::fs::remove_file(&path).ok();
+    let err = KernelKMeansModel::load(&path).unwrap_err();
+    assert!(format!("{err}").contains("mbkk_conformance"), "{err}");
+}

@@ -1,0 +1,112 @@
+//! Property (ISSUE 4): for a converged mini-batch fit on a small blob
+//! dataset, `predict` on the training points reproduces the final
+//! training assignments — and the materialized and streaming providers
+//! agree with each other bit-for-bit at every stage (fit assignments,
+//! frozen artifact bytes, served predictions).
+
+use mbkk::data::synthetic::{blobs, SyntheticSpec};
+use mbkk::kernels::{CachedGram, Gram, KernelFunction, KernelProvider};
+use mbkk::kkmeans::{
+    KernelKMeansModel, NativeBackend, TruncatedConfig, TruncatedFit,
+    TruncatedMiniBatchKernelKMeans,
+};
+use mbkk::metrics::ari;
+use mbkk::serve::PredictEngine;
+use mbkk::util::rng::Rng;
+
+fn fit_on(provider: &dyn KernelProvider) -> TruncatedFit {
+    let cfg = TruncatedConfig {
+        k: 3,
+        batch_size: 128,
+        tau: 100,
+        max_iters: 40,
+        ..Default::default()
+    };
+    let mut rng = Rng::seeded(1);
+    TruncatedMiniBatchKernelKMeans::new(cfg).fit_with_backend(
+        provider,
+        &mut NativeBackend,
+        &mut rng,
+    )
+}
+
+#[test]
+fn predict_reproduces_training_assignments_across_providers() {
+    let mut rng = Rng::seeded(8);
+    // Well-separated blobs (≈17σ between centers): a converged fit's
+    // assignment margins dwarf the f32 table quantization, so the frozen
+    // model's exact-arithmetic predictions must reproduce the training
+    // assignments point for point.
+    let ds = blobs(
+        &SyntheticSpec::new(600, 6, 3).with_std(0.4).with_separation(7.0),
+        &mut rng,
+    );
+    let kernel = KernelFunction::Gaussian { kappa: 12.0 };
+
+    let materialized = Gram::on_the_fly(&ds, kernel).materialize();
+    let mut fit_mat = fit_on(&materialized);
+    let streaming = CachedGram::new(Gram::on_the_fly(&ds, kernel), 4 << 20);
+    let mut fit_stream = fit_on(&streaming);
+
+    // The §6 bit-identity contract at fit level: both providers drive the
+    // exact same trajectory.
+    assert_eq!(fit_mat.result.assignments, fit_stream.result.assignments);
+    assert_eq!(
+        fit_mat.result.objective.to_bits(),
+        fit_stream.result.objective.to_bits()
+    );
+
+    // Freezing detaches the centers; the artifacts must be bit-identical
+    // across providers (support rows, coefficients, norms, and the
+    // incrementally-maintained ⟨Ĉ,Ĉ⟩ all agree).
+    let model_mat = KernelKMeansModel::freeze(&ds, kernel, &mut fit_mat.centers);
+    let model_stream = KernelKMeansModel::freeze(&ds, kernel, &mut fit_stream.centers);
+    assert_eq!(
+        model_mat.to_bytes(),
+        model_stream.to_bytes(),
+        "frozen artifacts must not depend on how the training gram was served"
+    );
+
+    // The served model reproduces the final training assignments on the
+    // training points — scalar path and batched engine alike.
+    let scalar_pred = model_mat.predict_all(&ds);
+    assert_eq!(
+        scalar_pred, fit_mat.result.assignments,
+        "predict must reproduce the final training assignments"
+    );
+    let engine_pred = PredictEngine::new(&model_mat).predict_dataset(&ds);
+    assert_eq!(engine_pred, scalar_pred);
+
+    // Sanity: the run actually converged to the planted structure.
+    let score = ari(ds.labels.as_ref().unwrap(), &scalar_pred);
+    assert!(score > 0.99, "training ARI={score}");
+}
+
+#[test]
+fn held_out_points_are_served_consistently_after_a_round_trip() {
+    // Same generator family ⇒ same blob structure for held-out queries;
+    // the persisted artifact must serve them exactly like the in-memory
+    // model, through both the scalar and the batched path.
+    let mut rng = Rng::seeded(8);
+    let train = blobs(
+        &SyntheticSpec::new(600, 6, 3).with_std(0.4).with_separation(7.0),
+        &mut rng,
+    );
+    // Same seed ⇒ the generator draws the same cluster centers, so the
+    // held-out points come from the same blobs the model was fitted on.
+    let mut rng2 = Rng::seeded(8);
+    let held_out = blobs(
+        &SyntheticSpec::new(240, 6, 3).with_std(0.4).with_separation(7.0),
+        &mut rng2,
+    );
+    let kernel = KernelFunction::Gaussian { kappa: 12.0 };
+    let gram = Gram::on_the_fly(&train, kernel);
+    let mut fit = fit_on(&gram);
+    let model = KernelKMeansModel::freeze(&train, kernel, &mut fit.centers);
+    let loaded = KernelKMeansModel::from_bytes(&model.to_bytes()).expect("round trip");
+    let scalar = model.predict_all(&held_out);
+    let served = PredictEngine::new(&loaded).predict_dataset(&held_out);
+    assert_eq!(scalar, served);
+    let score = ari(held_out.labels.as_ref().unwrap(), &served);
+    assert!(score > 0.95, "held-out ARI={score}");
+}
