@@ -19,7 +19,7 @@ use crate::kkmeans::{
 use crate::kmeans::{KMeans, KMeansConfig, MiniBatchKMeans, MiniBatchKMeansConfig};
 use crate::metrics::{ari, nmi};
 use crate::util::rng::Rng;
-use crate::util::timing::Stopwatch;
+use crate::util::timing::{Profiler, Stopwatch};
 
 /// Which kernel to build for a dataset.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -394,6 +394,10 @@ pub struct RunOutcome {
     pub kernel_secs: f64,
     /// γ of the gram (Table 1).
     pub gamma: f64,
+    /// The fit's per-phase timing breakdown (init/refresh/assign/moments/
+    /// update/stopping/finalize for the mini-batch algorithms) — surfaced
+    /// by the CLI's `--profile` flag.
+    pub profiler: Profiler,
 }
 
 /// k-means++ candidate cap for coordinator-driven *mini-batch* runs: above
@@ -492,6 +496,7 @@ pub fn run_with_gram(
         cluster_secs,
         kernel_secs,
         gamma: gram.map(|g| g.gamma()).unwrap_or(f64::NAN),
+        profiler: fit.profiler,
     }
 }
 
@@ -630,6 +635,7 @@ pub fn fit_servable_model(
             cluster_secs,
             kernel_secs,
             gamma: built.provider().gamma(),
+            profiler: fit.result.profiler.clone(),
         },
         report: GramReport {
             label: built.provider().label(),

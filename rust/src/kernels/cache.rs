@@ -417,6 +417,41 @@ impl KernelProvider for CachedGram<'_> {
         }
     }
 
+    fn plan_gather_extend(&self, plan: &mut GatherPlan, new_cols: &[u32]) {
+        // Incremental merge: group the appendix on its own, offset its
+        // positions past the existing columns, and merge the two
+        // (tile, col, pos)-sorted runs — O(plan + new) instead of the
+        // O(len·log len) full re-sort, with a result identical to
+        // rebuilding from scratch (all new positions sort after all old
+        // ones at equal (tile, col)). Algorithm 1's lazy state leans on
+        // this: its full-history plan grows by one batch per iteration.
+        let offset = plan.cols.len() as u32;
+        plan.cols.extend_from_slice(new_cols);
+        let mut add = Self::group_cols(new_cols.iter().copied());
+        for g in add.iter_mut() {
+            g.2 += offset;
+        }
+        match plan.groups.as_mut() {
+            None => plan.groups = Some(Self::group_cols(plan.cols.iter().copied())),
+            Some(old) => {
+                let mut merged = Vec::with_capacity(old.len() + add.len());
+                let (mut i, mut j) = (0, 0);
+                while i < old.len() && j < add.len() {
+                    if old[i] <= add[j] {
+                        merged.push(old[i]);
+                        i += 1;
+                    } else {
+                        merged.push(add[j]);
+                        j += 1;
+                    }
+                }
+                merged.extend_from_slice(&old[i..]);
+                merged.extend_from_slice(&add[j..]);
+                *old = merged;
+            }
+        }
+    }
+
     fn row_gather_planned(&self, x: usize, plan: &GatherPlan, out: &mut [f64]) {
         assert_eq!(plan.cols.len(), out.len(), "row_gather_planned: bad shape");
         let Some(groups) = plan.groups.as_ref() else {
@@ -645,6 +680,34 @@ mod tests {
                 let want = (Gram::eval(&base, i, j) as f32) as f64;
                 assert_eq!(out[r * cols.len() + c].to_bits(), want.to_bits());
             }
+        }
+    }
+
+    #[test]
+    fn plan_extend_equals_rebuild() {
+        // Extending a plan batch-by-batch (the lazy state's per-iteration
+        // growth) must gather exactly what a from-scratch plan over the
+        // concatenation gathers, duplicates and all.
+        let ds = fixture(200);
+        let cg = cached(&ds, 1 << 20);
+        let mut rng = Rng::seeded(13);
+        let mut all: Vec<u32> = (0..25).map(|_| rng.below(ds.n) as u32).collect();
+        let mut grown = KernelProvider::plan_gather(&cg, &all);
+        for _round in 0..4 {
+            let add: Vec<u32> = (0..1 + rng.below(40)).map(|_| rng.below(ds.n) as u32).collect();
+            cg.plan_gather_extend(&mut grown, &add);
+            all.extend_from_slice(&add);
+        }
+        let rebuilt = KernelProvider::plan_gather(&cg, &all);
+        assert_eq!(grown.len(), rebuilt.len());
+        let x = 7;
+        let mut got = vec![f64::NAN; all.len()];
+        let mut want = vec![f64::NAN; all.len()];
+        cg.row_gather_planned(x, &grown, &mut got);
+        cg.row_gather_planned(x, &rebuilt, &mut want);
+        for (m, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+            assert_eq!(g.to_bits(), w.to_bits(), "col {m}");
+            assert_eq!(g.to_bits(), cg.eval(x, all[m] as usize).to_bits());
         }
     }
 

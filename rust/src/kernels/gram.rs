@@ -185,6 +185,27 @@ impl<'a> Gram<'a> {
         }
     }
 
+    /// Gather `out[m] = K(x_i, cols[m])` as unquantized f64, in column
+    /// order — values bitwise identical to per-element [`Gram::eval`].
+    /// Materialized grams load from the dense row; on-the-fly grams run the
+    /// row through the panel engine in 32-column chunks, which Algorithm
+    /// 1's lazy replay uses to rebuild a stale point against its whole
+    /// update log in one call instead of per-element enum dispatch.
+    pub fn row_gather_cols(&self, i: usize, cols: &[u32], out: &mut [f64]) {
+        assert_eq!(cols.len(), out.len(), "row_gather_cols: bad shape");
+        match self {
+            Gram::Precomputed { n, data, .. } => {
+                let row = &data[i * n..(i + 1) * n];
+                for (o, &j) in out.iter_mut().zip(cols.iter()) {
+                    *o = row[j as usize] as f64;
+                }
+            }
+            Gram::OnTheFly { ds, func, .. } => {
+                KernelPanel::new(ds, *func).fill_row_f64_u32(i, cols, out);
+            }
+        }
+    }
+
     /// `K(x_i, x_i)` (cached).
     #[inline]
     pub fn self_k(&self, i: usize) -> f64 {

@@ -326,6 +326,27 @@ impl<'a> KernelPanel<'a> {
             c0 += cw;
         }
     }
+
+    /// One row's kernel values for a `u32` column list as **unquantized**
+    /// f64 — bitwise identical to per-pair [`KernelPanel::eval_idx`] by the
+    /// fmath reduction-order contract. Feeds Algorithm 1's lazy replay,
+    /// which rebuilds a stale point's `⟨φ(x), C_j⟩` row against its whole
+    /// update log in one gather; converts through a stack buffer in
+    /// tile-sized chunks, allocation-free at any length.
+    pub fn fill_row_f64_u32(&self, x: usize, cols: &[u32], out: &mut [f64]) {
+        assert_eq!(cols.len(), out.len(), "fill_row_f64_u32: bad shape");
+        const STACK: usize = 32;
+        let mut buf = [0usize; STACK];
+        let mut c0 = 0;
+        while c0 < cols.len() {
+            let cw = STACK.min(cols.len() - c0);
+            for (b, &c) in buf[..cw].iter_mut().zip(&cols[c0..c0 + cw]) {
+                *b = c as usize;
+            }
+            self.fill_f64(&[x], &buf[..cw], &mut out[c0..c0 + cw]);
+            c0 += cw;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -484,6 +505,32 @@ mod tests {
             let p = KernelPanel::new(&ds, func);
             for i in 0..ds.n {
                 assert_eq!(p.eval_idx(i, i), 1.0, "{func:?} diag({i})");
+            }
+        }
+    }
+
+    #[test]
+    fn fill_row_f64_u32_is_bitwise_eval() {
+        // The lazy-replay gather must reproduce eval_idx to the bit at any
+        // length, across the 32-wide staging chunk boundary.
+        let mut rng = Rng::seeded(6);
+        let ds = blobs(&SyntheticSpec::new(80, 5, 2), &mut rng);
+        for func in [
+            KernelFunction::Gaussian { kappa: 3.0 },
+            KernelFunction::Linear,
+        ] {
+            let p = KernelPanel::new(&ds, func);
+            for len in [1usize, 31, 32, 33, 77] {
+                let cols: Vec<u32> = (0..len).map(|_| rng.below(ds.n) as u32).collect();
+                let mut out = vec![f64::NAN; len];
+                p.fill_row_f64_u32(3, &cols, &mut out);
+                for (m, &c) in cols.iter().enumerate() {
+                    assert_eq!(
+                        out[m].to_bits(),
+                        p.eval_idx(3, c as usize).to_bits(),
+                        "{func:?} len={len} m={m}"
+                    );
+                }
             }
         }
     }

@@ -88,6 +88,22 @@ pub trait KernelProvider: Sync {
         }
     }
 
+    /// Extend a plan from [`KernelProvider::plan_gather`] with columns
+    /// appended to the end of its column list — semantically identical to
+    /// rebuilding the plan over the concatenation, but providers with
+    /// sorted internal structure (the streaming tile cache) override it to
+    /// merge incrementally in O(plan + new) instead of re-sorting.
+    /// Algorithm 1's lazy state extends its full-history plan by one batch
+    /// per iteration through this. Default: append the columns; if the
+    /// plan carries structure this provider cannot extend, rebuild.
+    fn plan_gather_extend(&self, plan: &mut GatherPlan, new_cols: &[u32]) {
+        plan.cols.extend_from_slice(new_cols);
+        if plan.groups.is_some() {
+            let rebuilt = self.plan_gather(&plan.cols);
+            *plan = rebuilt;
+        }
+    }
+
     /// Fill `out` (row-major, `rows.len() × cols.len()`) with the dense
     /// block `K(rows, cols)`. Default: parallel point-wise evaluation.
     fn block_into(&self, rows: &[usize], cols: &[usize], out: &mut [f64]) {
@@ -152,6 +168,18 @@ pub struct GatherPlan {
     pub(super) groups: Option<Vec<(u32, u32, u32)>>,
 }
 
+impl GatherPlan {
+    /// Number of columns the plan covers (the required gather width).
+    pub fn len(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Whether the plan covers no columns.
+    pub fn is_empty(&self) -> bool {
+        self.cols.is_empty()
+    }
+}
+
 impl KernelProvider for Gram<'_> {
     fn n(&self) -> usize {
         Gram::n(self)
@@ -179,6 +207,10 @@ impl KernelProvider for Gram<'_> {
 
     fn feature_kernel(&self) -> Option<(&Dataset, KernelFunction)> {
         Gram::feature_kernel(self)
+    }
+
+    fn row_gather_planned(&self, x: usize, plan: &GatherPlan, out: &mut [f64]) {
+        Gram::row_gather_cols(self, x, &plan.cols, out)
     }
 
     fn block_into(&self, rows: &[usize], cols: &[usize], out: &mut [f64]) {

@@ -20,6 +20,12 @@ use super::state::CenterWindow;
 use crate::kernels::KernelProvider;
 
 /// Computes batch-to-center squared distances for Algorithm 2.
+///
+/// The two distance methods are mutually defaulted — an implementation
+/// must override at least one of them. Hot loops call
+/// [`AssignBackend::distances_into`] with a buffer hoisted out of the
+/// iteration loop, so a fit performs no per-iteration distance-matrix
+/// allocations on backends that override it.
 pub trait AssignBackend {
     /// Returns the row-major `batch.len() × centers.len()` distance matrix.
     /// Distances are squared, clamped at 0 against floating-point rounding.
@@ -28,7 +34,23 @@ pub trait AssignBackend {
         gram: &dyn KernelProvider,
         batch: &[usize],
         centers: &mut [CenterWindow],
-    ) -> Vec<f64>;
+    ) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.distances_into(gram, batch, centers, &mut out);
+        out
+    }
+
+    /// [`AssignBackend::distances`] into a caller-owned buffer (resized to
+    /// `batch.len() × centers.len()`), reusing its capacity across calls.
+    fn distances_into(
+        &mut self,
+        gram: &dyn KernelProvider,
+        batch: &[usize],
+        centers: &mut [CenterWindow],
+        out: &mut Vec<f64>,
+    ) {
+        *out = self.distances(gram, batch, centers);
+    }
 
     /// Backend label for reports.
     fn name(&self) -> &'static str;
@@ -48,12 +70,13 @@ pub trait AssignBackend {
 pub struct NativeBackend;
 
 impl AssignBackend for NativeBackend {
-    fn distances(
+    fn distances_into(
         &mut self,
         gram: &dyn KernelProvider,
         batch: &[usize],
         centers: &mut [CenterWindow],
-    ) -> Vec<f64> {
+        out: &mut Vec<f64>,
+    ) {
         let k = centers.len();
         let b = batch.len();
         // ⟨Ĉ_j, Ĉ_j⟩ (cached inside the window between calls; O(1) when
@@ -74,8 +97,9 @@ impl AssignBackend for NativeBackend {
         }
         // out[r·k + j] = Σ_m w_m·K(x_r, s_m), then finished into distances
         // in place: Δ = K(x,x) − 2·cross + ⟨Ĉ,Ĉ⟩, clamped at 0.
-        let mut out = vec![0.0f64; b * k];
-        gram.weighted_cross_into(batch, &sup_idx, &sup_w, &ranges, &mut out);
+        out.clear();
+        out.resize(b * k, 0.0);
+        gram.weighted_cross_into(batch, &sup_idx, &sup_w, &ranges, out);
         for (r, &x) in batch.iter().enumerate() {
             let kxx = gram.self_k(x);
             let row = &mut out[r * k..(r + 1) * k];
@@ -83,7 +107,6 @@ impl AssignBackend for NativeBackend {
                 *v = (kxx - 2.0 * *v + ccj).max(0.0);
             }
         }
-        out
     }
 
     fn name(&self) -> &'static str {
@@ -93,10 +116,26 @@ impl AssignBackend for NativeBackend {
 
 /// Row-wise argmin over a `b × k` distance matrix → (assignment, min dist).
 pub fn argmin_rows(dist: &[f64], k: usize) -> (Vec<usize>, Vec<f64>) {
+    let mut assign = Vec::new();
+    let mut mins = Vec::new();
+    argmin_rows_into(dist, k, &mut assign, &mut mins);
+    (assign, mins)
+}
+
+/// [`argmin_rows`] into caller-owned buffers (cleared, then filled) —
+/// the per-iteration form, reusing capacity across a fit's iterations.
+pub fn argmin_rows_into(
+    dist: &[f64],
+    k: usize,
+    assign: &mut Vec<usize>,
+    mins: &mut Vec<f64>,
+) {
     assert!(k >= 1 && dist.len() % k == 0);
     let b = dist.len() / k;
-    let mut assign = Vec::with_capacity(b);
-    let mut mins = Vec::with_capacity(b);
+    assign.clear();
+    mins.clear();
+    assign.reserve(b);
+    mins.reserve(b);
     for r in 0..b {
         let row = &dist[r * k..(r + 1) * k];
         let mut best = 0usize;
@@ -110,7 +149,6 @@ pub fn argmin_rows(dist: &[f64], k: usize) -> (Vec<usize>, Vec<f64>) {
         assign.push(best);
         mins.push(bestv);
     }
-    (assign, mins)
 }
 
 #[cfg(test)]

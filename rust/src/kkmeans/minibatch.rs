@@ -1,24 +1,35 @@
 //! **Algorithm 1** — mini-batch kernel k-means with the recursive distance
-//! update rule (paper §4).
+//! update rule (paper §4), served by lazy generation-stamped state.
 //!
-//! The centers are never materialized. Instead the algorithm maintains, by
-//! dynamic programming across iterations,
+//! The centers are never materialized. The algorithm maintains, by dynamic
+//! programming across iterations,
 //!
-//! * `px[x][j] = ⟨φ(x), C_j⟩` for **all** `x ∈ X` — updated via
+//! * `px[x][j] = ⟨φ(x), C_j⟩` — updated via
 //!   `⟨φ(x), C'_j⟩ = (1−α)⟨φ(x), C_j⟩ + α⟨φ(x), cm(B^j)⟩`, and
 //! * `cc[j] = ⟨C_j, C_j⟩` — updated via the expanded square.
 //!
-//! Each iteration costs `O(n(b+k))`: `n·b` kernel evaluations for the new
-//! cross terms plus `n·k` bookkeeping — already far below the full-batch
-//! `O(n²)`, but still linear in `n` (the truncated Algorithm 2 removes even
-//! that).
+//! Earlier revisions applied the `px` recursion *eagerly* to every dataset
+//! point each iteration — an `O(n(b+k))` sweep that kept iteration time
+//! linear in `n`. The sweep is gone: `px` now lives in a
+//! [`LazyAssignState`], which stamps every point with the generation (log
+//! length) it was last refreshed at and replays only the updates appended
+//! since, on demand. An iteration touches exactly the `b` sampled points
+//! and costs `O(kb + b·Δ)` kernel evaluations, where `Δ` is the support
+//! appended since those points' last refresh — `Õ(kb²)` in the paper's
+//! regime, with `n` appearing nowhere in the loop. `n` is visited exactly
+//! twice: optionally at init (k-means++ seeding) and once in the finalize
+//! pass, which replays the whole log against every point as one blocked
+//! engine-served sweep with the argmin fused in (DESIGN.md §9). The lazy
+//! replay performs the same recursion steps, in the same order, over the
+//! same kernel values as the removed eager sweep, so results are
+//! bit-identical to it — pinned by `rust/tests/prop_lazy_eager.rs`.
 
-use super::backend::argmin_rows;
+use super::backend::argmin_rows_into;
 use super::init::choose_centers;
 use super::learning_rate::{LearningRate, RateState};
+use super::state::LazyAssignState;
 use super::{FitResult, Init};
 use crate::kernels::KernelProvider;
-use crate::util::parallel::{par_rows_mut, par_rows_mut3};
 use crate::util::rng::Rng;
 use crate::util::timing::{Profiler, Stopwatch};
 
@@ -77,22 +88,11 @@ impl MiniBatchKernelKMeans {
         let mut prof = Profiler::new();
         let weights = self.cfg.weights.as_deref();
 
-        // ---- init: centers are single points --------------------------------
+        // ---- init: seeds only — the old O(n·k) px table build is gone; a
+        // point's initial row K(x, seed_j) materializes on first refresh.
         let sw = Stopwatch::start();
         let seeds = choose_centers(gram, k, self.cfg.init, rng);
-        // px[x*k + j] = ⟨φ(x), C_j⟩ ; cc[j] = ⟨C_j, C_j⟩.
-        let mut px = vec![0.0f64; n * k];
-        {
-            let seeds = &seeds;
-            par_rows_mut(&mut px, k, |row0, block| {
-                for (r, row) in block.chunks_mut(k).enumerate() {
-                    let x = row0 + r;
-                    for (j, &s) in seeds.iter().enumerate() {
-                        row[j] = gram.eval(x, s);
-                    }
-                }
-            });
-        }
+        let mut state = LazyAssignState::new(n, &seeds);
         let mut cc: Vec<f64> = seeds.iter().map(|&s| gram.self_k(s)).collect();
         prof.add("init", sw.secs());
 
@@ -100,70 +100,81 @@ impl MiniBatchKernelKMeans {
         let mut history = Vec::new();
         let mut iterations = 0;
         let mut converged = false;
-        // Maintained by the fused update+argmin pass: the assignment and min
-        // squared distance of *every* dataset point under the current
-        // centers. Each iteration's DP sweep already touches every px row,
-        // so the argmin rides along for free and the final assignment pass
-        // disappears (§Perf, DESIGN.md §5).
-        let mut assign_all = vec![0usize; n];
-        let mut mins_all = vec![0.0f64; n];
-        let mut have_assignment = false;
+
+        // Buffers hoisted out of the iteration loop (§Perf): beyond the
+        // update log's append-only growth, the loop performs no
+        // per-iteration allocations.
+        let mut batch: Vec<usize> = Vec::with_capacity(b);
+        let mut batch_dist = vec![0.0f64; b * k];
+        let mut assign: Vec<usize> = Vec::with_capacity(b);
+        let mut mins: Vec<f64> = Vec::with_capacity(b);
+        let mut members: Vec<Vec<usize>> = vec![Vec::new(); k];
+        let mut alphas = vec![0.0f64; k];
+        let mut mass = vec![0.0f64; k];
+        let mut c_dot_cm = vec![0.0f64; k];
+        let mut cm_dot_cm = vec![0.0f64; k];
 
         for _iter in 0..self.cfg.max_iters {
             iterations += 1;
-            // ---- sample batch & assign -------------------------------------
+            // ---- sample + refresh: touch ONLY the b sampled points ----------
+            // The refresh replays each sampled point's pending log suffix —
+            // the work the eager sweep used to do for all n points, deferred
+            // to the moment (and the points) the iteration actually needs.
             let sw = Stopwatch::start();
-            let batch = rng.sample_with_replacement(n, b);
-            let mut batch_dist = vec![0.0f64; b * k];
+            rng.sample_with_replacement_into(n, b, &mut batch);
+            state.refresh(gram, &batch, weights);
+            prof.add("refresh", sw.secs());
+
+            // ---- assign the batch under the current centers -----------------
+            let sw = Stopwatch::start();
             for (r, &x) in batch.iter().enumerate() {
                 let kxx = gram.self_k(x);
-                for j in 0..k {
-                    batch_dist[r * k + j] = (kxx - 2.0 * px[x * k + j] + cc[j]).max(0.0);
+                let row = state.px_row(x);
+                for (j, (&pxj, &ccj)) in row.iter().zip(cc.iter()).enumerate() {
+                    batch_dist[r * k + j] = (kxx - 2.0 * pxj + ccj).max(0.0);
                 }
             }
-            let (assign, mins) = argmin_rows(&batch_dist, k);
+            argmin_rows_into(&batch_dist, k, &mut assign, &mut mins);
             let f_before = super::objective::weighted_mean(&batch, &mins, weights);
             history.push(f_before);
             prof.add("assign", sw.secs());
 
-            // ---- per-cluster batch members & learning rates ------------------
+            // ---- per-cluster members, rates & O(b²) batch moments -----------
             let sw = Stopwatch::start();
-            let mut members: Vec<Vec<usize>> = vec![Vec::new(); k];
+            for m in members.iter_mut() {
+                m.clear();
+            }
             for (r, &j) in assign.iter().enumerate() {
                 members[j].push(batch[r]);
             }
-            let alphas: Vec<f64> = (0..k)
-                .map(|j| rate.alpha(j, members[j].len(), b))
-                .collect();
+            for j in 0..k {
+                alphas[j] = rate.alpha(j, members[j].len(), b);
+            }
             // Weighted masses of each batch cluster (for weighted cm).
-            let mass: Vec<f64> = members
-                .iter()
-                .map(|m| match weights {
+            for (j, m) in members.iter().enumerate() {
+                mass[j] = match weights {
                     None => m.len() as f64,
                     Some(w) => m.iter().map(|&x| w[x]).sum(),
-                })
-                .collect();
-
-            // ⟨C_j, cm(B^j)⟩ from *old* px — O(b).
-            let c_dot_cm: Vec<f64> = (0..k)
-                .map(|j| {
-                    if members[j].is_empty() {
-                        return 0.0;
-                    }
+                };
+            }
+            // ⟨C_j, cm(B^j)⟩ from the refreshed (pre-update) px — O(b).
+            for j in 0..k {
+                c_dot_cm[j] = if members[j].is_empty() {
+                    0.0
+                } else {
                     let mut s = 0.0;
                     for &y in &members[j] {
                         let wy = weights.map(|w| w[y]).unwrap_or(1.0);
-                        s += wy * px[y * k + j];
+                        s += wy * state.px_row(y)[j];
                     }
                     s / mass[j]
-                })
-                .collect();
+                };
+            }
             // ⟨cm(B^j), cm(B^j)⟩ — O(Σ b_j²) ≤ O(b²).
-            let cm_dot_cm: Vec<f64> = (0..k)
-                .map(|j| {
-                    if members[j].is_empty() {
-                        return 0.0;
-                    }
+            for j in 0..k {
+                cm_dot_cm[j] = if members[j].is_empty() {
+                    0.0
+                } else {
                     let pts = &members[j];
                     let mut s = 0.0;
                     for (a, &y) in pts.iter().enumerate() {
@@ -175,15 +186,14 @@ impl MiniBatchKernelKMeans {
                         }
                     }
                     s / (mass[j] * mass[j])
-                })
-                .collect();
+                };
+            }
             prof.add("moments", sw.secs());
 
-            // ---- DP update fused with the argmin pass ------------------------
-            // cc's recursion needs only the O(b) moments above, so it updates
-            // *first*; the px sweep then reads the new cc and emits each
-            // point's distance-argmin in the same cache-warm visit — every
-            // row of the DP tables is touched exactly once per iteration.
+            // ---- cc recursion + log append (O(kb) — n appears nowhere) ------
+            // cc needs only the O(b) moments above; px is *not* swept —
+            // each center's update is appended to the replay log, to be
+            // applied to a point's row the next time that point is touched.
             let sw = Stopwatch::start();
             for j in 0..k {
                 let a = alphas[j];
@@ -193,110 +203,30 @@ impl MiniBatchKernelKMeans {
                 cc[j] = (1.0 - a) * (1.0 - a) * cc[j]
                     + 2.0 * a * (1.0 - a) * c_dot_cm[j]
                     + a * a * cm_dot_cm[j];
+                state.append_update(j, a, mass[j], &members[j]);
             }
-            // Concatenated member columns (center j owns mranges[j]): lets
-            // the non-materialized branch gather each row's kernel values
-            // in one planned-gather call — on the streaming provider that
-            // amortizes cache lookups over whole tiles instead of paying
-            // two locks per value, and the grouping/sort is hoisted into
-            // the plan once per iteration, not once per point.
-            let mut mcols: Vec<u32> = Vec::with_capacity(b);
-            let mut mranges: Vec<(usize, usize)> = Vec::with_capacity(k);
-            for mjs in members.iter() {
-                let start = mcols.len();
-                mcols.extend(mjs.iter().map(|&y| y as u32));
-                mranges.push((start, mcols.len()));
-            }
-            let plan = gram.plan_gather(&mcols);
-            {
-                let members = &members;
-                let alphas = &alphas;
-                let mass = &mass;
-                let cc = &cc;
-                let mcols = &mcols;
-                let mranges = &mranges;
-                let plan = &plan;
-                par_rows_mut3(
-                    &mut px,
-                    k,
-                    &mut assign_all,
-                    1,
-                    &mut mins_all,
-                    1,
-                    |row0, block, ab, mb| {
-                        let mut gathered = vec![0.0f64; mcols.len()];
-                        for (r, row) in block.chunks_mut(k).enumerate() {
-                            let x = row0 + r;
-                            // Hoist the gram row once per point (§Perf):
-                            // direct f32 loads beat per-element enum
-                            // dispatch ~3x.
-                            let grow = gram.row_slice(x);
-                            if grow.is_none() {
-                                gram.row_gather_planned(x, plan, &mut gathered);
-                            }
-                            for j in 0..k {
-                                let a = alphas[j];
-                                if a == 0.0 {
-                                    continue;
-                                }
-                                let (s, e) = mranges[j];
-                                let mut cross = 0.0;
-                                // Per-center reduction in member order — the
-                                // same accumulation order in every branch
-                                // (bit-identity across providers).
-                                match (grow, weights) {
-                                    (Some(g), None) => {
-                                        for &y in &members[j] {
-                                            cross += g[y] as f64;
-                                        }
-                                    }
-                                    (Some(g), Some(w)) => {
-                                        for &y in &members[j] {
-                                            cross += w[y] * g[y] as f64;
-                                        }
-                                    }
-                                    (None, None) => {
-                                        for &v in &gathered[s..e] {
-                                            cross += v;
-                                        }
-                                    }
-                                    (None, Some(w)) => {
-                                        for (&c, &v) in
-                                            mcols[s..e].iter().zip(&gathered[s..e])
-                                        {
-                                            cross += w[c as usize] * v;
-                                        }
-                                    }
-                                }
-                                row[j] = (1.0 - a) * row[j] + a * cross / mass[j];
-                            }
-                            // Fused argmin over the freshly-updated row.
-                            let kxx = gram.self_k(x);
-                            let mut best = 0usize;
-                            let mut bestv = f64::INFINITY;
-                            for (j, &pxj) in row.iter().enumerate() {
-                                let d = (kxx - 2.0 * pxj + cc[j]).max(0.0);
-                                if d < bestv {
-                                    best = j;
-                                    bestv = d;
-                                }
-                            }
-                            ab[r] = best;
-                            mb[r] = bestv;
-                        }
-                    },
-                );
-            }
-            have_assignment = true;
             prof.add("update", sw.secs());
 
             // ---- early stopping on the same batch ---------------------------
-            // The fused pass already computed every point's post-update min
-            // distance; the batch objective is a gather.
             if let Some(eps) = self.cfg.epsilon {
                 let sw = Stopwatch::start();
-                let mins_after: Vec<f64> = batch.iter().map(|&x| mins_all[x]).collect();
-                let f_after = super::objective::weighted_mean(&batch, &mins_after, weights);
+                // Replay just this iteration's entries onto the batch and
+                // re-score it under the updated centers — O(b·Σb_j), still
+                // independent of n.
+                state.refresh(gram, &batch, weights);
+                for (r, &x) in batch.iter().enumerate() {
+                    let kxx = gram.self_k(x);
+                    let row = state.px_row(x);
+                    let mut bestv = f64::INFINITY;
+                    for (&pxj, &ccj) in row.iter().zip(cc.iter()) {
+                        let d = (kxx - 2.0 * pxj + ccj).max(0.0);
+                        if d < bestv {
+                            bestv = d;
+                        }
+                    }
+                    mins[r] = bestv;
+                }
+                let f_after = super::objective::weighted_mean(&batch, &mins, weights);
                 prof.add("stopping", sw.secs());
                 if f_before - f_after < eps {
                     converged = true;
@@ -305,37 +235,16 @@ impl MiniBatchKernelKMeans {
             }
         }
 
-        // ---- finalize: the fused pass left assignments/mins for all points --
+        // ---- finalize: the single full-dataset pass -------------------------
+        // Every point replays its pending log suffix (most points: the whole
+        // log, as one blocked engine-served gather) and gets its assignment
+        // in the same fused visit — the only place n re-enters after init.
         let sw = Stopwatch::start();
-        if !have_assignment {
-            // max_iters = 0: no fused sweep ran; assign from the init tables.
-            for x in 0..n {
-                let kxx = gram.self_k(x);
-                let mut best = 0usize;
-                let mut bestv = f64::INFINITY;
-                for j in 0..k {
-                    let d = (kxx - 2.0 * px[x * k + j] + cc[j]).max(0.0);
-                    if d < bestv {
-                        best = j;
-                        bestv = d;
-                    }
-                }
-                assign_all[x] = best;
-                mins_all[x] = bestv;
-            }
-        }
-        let points: Vec<usize> = (0..n).collect();
-        let objective = super::objective::weighted_mean(&points, &mins_all, weights);
+        let (assignments, mins_all) = state.finalize(gram, &cc, weights);
+        let objective = super::objective::weighted_mean_all(&mins_all, weights);
         prof.add("finalize", sw.secs());
 
-        FitResult {
-            assignments: assign_all,
-            objective,
-            history,
-            iterations,
-            converged,
-            profiler: prof,
-        }
+        FitResult { assignments, objective, history, iterations, converged, profiler: prof }
     }
 }
 

@@ -10,7 +10,10 @@
 //!   (Dhillon et al. 2004), `O(n²)` per iteration. The baseline.
 //! * [`MiniBatchKernelKMeans`] — the paper's **Algorithm 1**: mini-batch
 //!   updates with the recursive distance rule, maintaining `⟨φ(x), C_j⟩`
-//!   for all `x` by dynamic programming — `O(n(b+k))` per iteration.
+//!   by *lazy, generation-stamped* dynamic programming
+//!   ([`state::LazyAssignState`]) — an iteration touches only the `b`
+//!   sampled points (`Õ(kb²)` in the paper's regime, independent of `n`);
+//!   the full dataset is visited once, in the finalize pass.
 //! * [`TruncatedMiniBatchKernelKMeans`] — the paper's **Algorithm 2**:
 //!   centers are *truncated* to a sliding window of the most recent ≈τ
 //!   support points (Section 4.1), giving `Õ(kb²)` per iteration with no
@@ -38,7 +41,7 @@ pub use full_batch::{FullBatchConfig, FullBatchKernelKMeans};
 pub use learning_rate::LearningRate;
 pub use minibatch::{MiniBatchConfig, MiniBatchKernelKMeans};
 pub use predict::{KernelKMeansModel, StreamingKernelKMeans};
-pub use state::CenterWindow;
+pub use state::{CenterWindow, LazyAssignState};
 pub use truncated::{TruncatedConfig, TruncatedFit, TruncatedMiniBatchKernelKMeans};
 
 use crate::util::timing::Profiler;

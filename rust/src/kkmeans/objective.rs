@@ -1,13 +1,15 @@
 //! Objective evaluation: `f_A(C) = (1/|A|)·Σ_{x∈A} min_j Δ(x, C^j)` and the
 //! weighted generalization `f_A(C) = Σ w_x·f_x / Σ w_x` (paper footnote 1).
 
-use super::backend::{argmin_rows, AssignBackend};
+use super::backend::{argmin_rows_into, AssignBackend};
 use super::state::CenterWindow;
 use crate::kernels::KernelProvider;
 
 /// Assign a set of points to truncated centers; returns (assignments,
 /// min squared distances). Runs through the given backend in slabs of
 /// `slab` points so the XLA backend can reuse its fixed-batch executable.
+/// The distance matrix and per-slab argmin buffers are hoisted out of the
+/// slab loop and reused across it.
 pub fn assign_points(
     gram: &dyn KernelProvider,
     centers: &mut [CenterWindow],
@@ -18,11 +20,14 @@ pub fn assign_points(
     let k = centers.len();
     let mut assignments = Vec::with_capacity(points.len());
     let mut dists = Vec::with_capacity(points.len());
+    let mut dist = Vec::new();
+    let mut a = Vec::new();
+    let mut m = Vec::new();
     for chunk in points.chunks(slab.max(1)) {
-        let dist = backend.distances(gram, chunk, centers);
-        let (a, m) = argmin_rows(&dist, k);
-        assignments.extend(a);
-        dists.extend(m);
+        backend.distances_into(gram, chunk, centers, &mut dist);
+        argmin_rows_into(&dist, k, &mut a, &mut m);
+        assignments.extend_from_slice(&a);
+        dists.extend_from_slice(&m);
     }
     (assignments, dists)
 }
@@ -53,6 +58,28 @@ pub fn weighted_mean(
     }
 }
 
+/// [`weighted_mean`] over the *whole* dataset — `min_dists[x]` is point
+/// x's min squared distance — without materializing the identity index
+/// vector (8 MB of indices at n = 10⁶). Identical accumulation order to
+/// `weighted_mean(&(0..n).collect::<Vec<_>>(), …)`.
+pub fn weighted_mean_all(min_dists: &[f64], weights: Option<&[f64]>) -> f64 {
+    if min_dists.is_empty() {
+        return 0.0;
+    }
+    match weights {
+        None => min_dists.iter().sum::<f64>() / min_dists.len() as f64,
+        Some(ws) => {
+            let mut num = 0.0;
+            let mut den = 0.0;
+            for (&w, &d) in ws.iter().zip(min_dists.iter()) {
+                num += w * d;
+                den += w;
+            }
+            num / den
+        }
+    }
+}
+
 /// Full-dataset objective `f_X(Ĉ)` plus final assignments.
 pub fn evaluate_full(
     gram: &dyn KernelProvider,
@@ -63,7 +90,7 @@ pub fn evaluate_full(
     let n = gram.n();
     let points: Vec<usize> = (0..n).collect();
     let (assignments, dists) = assign_points(gram, centers, &points, backend, 4096);
-    let obj = weighted_mean(&points, &dists, weights);
+    let obj = weighted_mean_all(&dists, weights);
     (assignments, obj)
 }
 
@@ -82,6 +109,22 @@ mod tests {
         assert_eq!(weighted_mean(&pts, &d, None), 2.0);
         let w = [1.0, 1.0, 1.0];
         assert!((weighted_mean(&pts, &d, Some(&w)) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_mean_all_matches_indexed_form() {
+        let d = [0.25, 3.0, 1.5, 0.0, 7.0];
+        let w = [1.0, 2.0, 0.5, 3.0, 1.0];
+        let pts: Vec<usize> = (0..d.len()).collect();
+        assert_eq!(
+            weighted_mean_all(&d, None).to_bits(),
+            weighted_mean(&pts, &d, None).to_bits()
+        );
+        assert_eq!(
+            weighted_mean_all(&d, Some(&w)).to_bits(),
+            weighted_mean(&pts, &d, Some(&w)).to_bits()
+        );
+        assert_eq!(weighted_mean_all(&[], None), 0.0);
     }
 
     #[test]

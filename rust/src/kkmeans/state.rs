@@ -18,8 +18,19 @@
 //! τ + b. While the window still reaches back to iteration 1, the decayed
 //! initial center `C_1^j·Π(1−α)` is retained so `Ĉ = C` exactly
 //! (Equation 1's second case); the first trim drops it.
+//!
+//! This module also owns [`LazyAssignState`] — Algorithm 1's lazy,
+//! generation-stamped `⟨φ(x), C_j⟩` table (DESIGN.md §9). Where
+//! [`CenterWindow`] represents a center *explicitly* (support points ×
+//! coefficients), the lazy state keeps the center update *log* and
+//! reconstructs any point's `px[x][j]` on demand by replaying exactly the
+//! recursion steps the removed eager sweep would have applied — so the
+//! replay is bit-identical to the eager dynamic program while an iteration
+//! touches only the b sampled points.
 
-use crate::kernels::KernelProvider;
+use crate::kernels::{GatherPlan, KernelProvider};
+use crate::util::parallel::{par_dynamic, par_rows_mut3, SharedSlice};
+use std::sync::Mutex;
 
 /// One iteration's surviving contribution: the batch-cluster points and
 /// their raw per-point coefficients.
@@ -505,6 +516,336 @@ impl CenterWindow {
     }
 }
 
+/// Stamp sentinel: the point has never been refreshed (its `px` row is
+/// garbage and must be rebuilt from the seed columns before any replay).
+const STAMP_UNINIT: u32 = u32::MAX;
+
+/// One center update in the replay log: everything needed to re-apply
+/// `px ← (1−α)·px + α·⟨φ(x), cm(B^j)⟩` for any point, later.
+struct UpdateEntry {
+    /// Center index j.
+    center: u32,
+    /// Learning rate α of this update.
+    alpha: f64,
+    /// Weighted mass of the batch members (the `cm` denominator).
+    mass: f64,
+    /// Member columns: `cols[start..end]`, assignment order, duplicates
+    /// kept — the replay's accumulation order is pinned to it.
+    start: usize,
+    end: usize,
+}
+
+/// Algorithm 1's lazy, generation-stamped assignment state (DESIGN.md §9).
+///
+/// Replaces the eager full-n `px` sweep: each point's row of
+/// `px[x][j] = ⟨φ(x), C_j⟩` carries the *generation* (log length) it was
+/// last refreshed at, and a refresh replays only the update entries
+/// appended since — the same `(1−α)·px + α·cross/mass` recursion steps, in
+/// the same order, over the same kernel values the eager sweep used, so
+/// refreshed rows are **bit-identical** to eagerly maintained ones. An
+/// iteration refreshes exactly the b sampled points (`Õ(kb·Δ)` where Δ is
+/// the support appended since their last refresh); the full dataset is
+/// visited once, in [`LazyAssignState::finalize`].
+///
+/// Kernel values come from the provider's fastest bit-stable path: direct
+/// row loads on materialized tables, a planned gather (tile-batched on the
+/// streaming provider, panel-filled on feature kernels) for full replays,
+/// and per-element `eval` for short suffixes.
+pub struct LazyAssignState {
+    k: usize,
+    /// Column universe of the log: `cols[..k]` are the seed columns, entry
+    /// member columns follow append-only. A full replay gathers one row
+    /// against this whole list in a single planned call.
+    cols: Vec<u32>,
+    /// The update log, in application order.
+    entries: Vec<UpdateEntry>,
+    /// `px[x·k + j] = ⟨φ(x), C_j⟩` as of generation `stamp[x]`.
+    px: Vec<f64>,
+    /// Per-point generation: number of log entries already applied to the
+    /// point's row ([`STAMP_UNINIT`] = row not yet initialized).
+    stamp: Vec<u32>,
+    /// Gather plan over `cols[..planned]` (non-materialized providers).
+    plan: Option<GatherPlan>,
+    planned: usize,
+    /// Scratch for refresh bookkeeping: unique (point, old stamp) pairs.
+    pending: Vec<(usize, u32)>,
+    /// Reusable per-worker gather buffers — hoisted out of the iteration
+    /// loop so a fit performs no per-iteration scratch allocations.
+    scratch: Mutex<Vec<Vec<f64>>>,
+}
+
+impl LazyAssignState {
+    /// Fresh state for `n` points, `k` centers seeded at dataset points
+    /// `seeds`. O(n) bookkeeping, **zero** kernel evaluations — a point's
+    /// initial `px` row (`K(x, seed_j)`) is built lazily on first refresh.
+    pub fn new(n: usize, seeds: &[usize]) -> LazyAssignState {
+        let k = seeds.len();
+        assert!(k >= 1, "need at least one center");
+        assert!(n > 0 && n - 1 <= u32::MAX as usize, "n out of u32 range");
+        LazyAssignState {
+            k,
+            cols: seeds.iter().map(|&s| s as u32).collect(),
+            entries: Vec::new(),
+            px: vec![0.0f64; n * k],
+            stamp: vec![STAMP_UNINIT; n],
+            plan: None,
+            planned: 0,
+            pending: Vec::new(),
+            scratch: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Number of updates appended so far (the current generation).
+    pub fn generation(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// The point's `px` row — valid only after a refresh in the current
+    /// generation (callers refresh the batch, then read).
+    pub fn px_row(&self, x: usize) -> &[f64] {
+        &self.px[x * self.k..(x + 1) * self.k]
+    }
+
+    /// Append one center update to the log: center `j` moved toward the
+    /// weighted mean of `members` (weighted mass `mass`) with rate `alpha`.
+    /// O(b_j) — nothing is applied to any `px` row here.
+    pub fn append_update(&mut self, j: usize, alpha: f64, mass: f64, members: &[usize]) {
+        debug_assert!(j < self.k && alpha > 0.0);
+        assert!(self.entries.len() < STAMP_UNINIT as usize - 1, "update log overflow");
+        let start = self.cols.len();
+        self.cols.extend(members.iter().map(|&y| y as u32));
+        self.entries.push(UpdateEntry {
+            center: j as u32,
+            alpha,
+            mass,
+            start,
+            end: self.cols.len(),
+        });
+    }
+
+    /// Bring every point in `points` (duplicates fine) to the current
+    /// generation: replay the entries appended since each point's stamp,
+    /// in parallel over the pool. Rows already current are skipped.
+    pub fn refresh(
+        &mut self,
+        gram: &dyn KernelProvider,
+        points: &[usize],
+        weights: Option<&[f64]>,
+    ) {
+        let cur = self.entries.len() as u32;
+        self.pending.clear();
+        self.pending.extend(points.iter().map(|&x| (x, 0u32)));
+        self.pending.sort_unstable_by_key(|p| p.0);
+        self.pending.dedup_by_key(|p| p.0);
+        let stamp = &mut self.stamp;
+        let mut any_full = false;
+        self.pending.retain_mut(|p| {
+            let s = stamp[p.0];
+            if s == cur {
+                return false;
+            }
+            p.1 = s;
+            stamp[p.0] = cur;
+            any_full |= s == STAMP_UNINIT;
+            true
+        });
+        if self.pending.is_empty() {
+            return;
+        }
+        if any_full && gram.row_slice(self.pending[0].0).is_none() {
+            self.ensure_plan(gram);
+        }
+        let (k, entries, cols) = (self.k, &self.entries, &self.cols);
+        let (plan, scratch) = (self.plan.as_ref(), &self.scratch);
+        let pend: &[(usize, u32)] = &self.pending;
+        let view = SharedSlice::new(&mut self.px);
+        let view = &view;
+        par_dynamic(pend.len(), |i| {
+            let (x, old) = pend[i];
+            // SAFETY: pending points are deduplicated, so the k-wide row
+            // ranges handed to concurrent tasks are pairwise disjoint.
+            let row = unsafe { view.chunk_mut(x * k, k) };
+            replay_row(gram, row, x, old, entries, cols, plan, weights, scratch);
+        });
+    }
+
+    /// The single full-dataset pass: bring every row to the final
+    /// generation (one blocked replay over the whole log — the `K(X, S)·A`
+    /// contraction, served by row loads / planned tile gathers / panel
+    /// fills depending on the provider) and emit each point's assignment
+    /// and min squared distance under the final centers, fused in the same
+    /// cache-warm visit. Consumes the state: replaying a log twice would
+    /// double-apply it.
+    pub fn finalize(
+        mut self,
+        gram: &dyn KernelProvider,
+        cc: &[f64],
+        weights: Option<&[f64]>,
+    ) -> (Vec<usize>, Vec<f64>) {
+        assert_eq!(cc.len(), self.k);
+        let n = self.stamp.len();
+        if gram.row_slice(0).is_none() {
+            self.ensure_plan(gram);
+        }
+        let cur = self.entries.len() as u32;
+        let LazyAssignState { k, cols, entries, mut px, stamp, plan, scratch, .. } = self;
+        let plan = plan.as_ref();
+        let mut assign = vec![0usize; n];
+        let mut mins = vec![0.0f64; n];
+        {
+            let (entries, cols, stamp, scratch) = (&entries, &cols, &stamp, &scratch);
+            par_rows_mut3(
+                &mut px,
+                k,
+                &mut assign,
+                1,
+                &mut mins,
+                1,
+                |row0, pxb, ab, mb| {
+                    for (r, row) in pxb.chunks_mut(k).enumerate() {
+                        let x = row0 + r;
+                        let old = stamp[x];
+                        if old != cur {
+                            replay_row(gram, row, x, old, entries, cols, plan, weights, scratch);
+                        }
+                        let kxx = gram.self_k(x);
+                        let mut best = 0usize;
+                        let mut bestv = f64::INFINITY;
+                        for (j, &pxj) in row.iter().enumerate() {
+                            let d = (kxx - 2.0 * pxj + cc[j]).max(0.0);
+                            if d < bestv {
+                                best = j;
+                                bestv = d;
+                            }
+                        }
+                        ab[r] = best;
+                        mb[r] = bestv;
+                    }
+                },
+            );
+        }
+        (assign, mins)
+    }
+
+    /// Make the gather plan cover the whole column list (providers without
+    /// direct row access). Appends since the last call are merged through
+    /// [`KernelProvider::plan_gather_extend`], so the per-iteration cost is
+    /// linear in the plan, not `O(len·log len)` re-sorts.
+    fn ensure_plan(&mut self, gram: &dyn KernelProvider) {
+        if self.planned == self.cols.len() && self.plan.is_some() {
+            return;
+        }
+        match self.plan.as_mut() {
+            None => self.plan = Some(gram.plan_gather(&self.cols)),
+            Some(plan) => gram.plan_gather_extend(plan, &self.cols[self.planned..]),
+        }
+        self.planned = self.cols.len();
+    }
+}
+
+/// Replay the log suffix `entries[old_stamp..]` onto one point's `px` row —
+/// the bit-identity core. Every branch accumulates each entry's cross term
+/// as one sequential f64 chain in member order and applies
+/// `(1−α)·px + α·cross/mass`, exactly the arithmetic of the removed eager
+/// sweep; the branches differ only in where the kernel values come from
+/// (materialized row, planned gather, per-element eval), which the
+/// providers pin to identical values.
+#[allow(clippy::too_many_arguments)]
+fn replay_row(
+    gram: &dyn KernelProvider,
+    row: &mut [f64],
+    x: usize,
+    old_stamp: u32,
+    entries: &[UpdateEntry],
+    cols: &[u32],
+    plan: Option<&GatherPlan>,
+    weights: Option<&[f64]>,
+    scratch: &Mutex<Vec<Vec<f64>>>,
+) {
+    let k = row.len();
+    if let Some(g) = gram.row_slice(x) {
+        // Materialized fast path: direct f32 row loads.
+        let from = if old_stamp == STAMP_UNINIT {
+            for (r, &s) in row.iter_mut().zip(cols[..k].iter()) {
+                *r = g[s as usize] as f64;
+            }
+            0
+        } else {
+            old_stamp as usize
+        };
+        for e in &entries[from..] {
+            let mut cross = 0.0;
+            match weights {
+                None => {
+                    for &y in &cols[e.start..e.end] {
+                        cross += g[y as usize] as f64;
+                    }
+                }
+                Some(w) => {
+                    for &y in &cols[e.start..e.end] {
+                        cross += w[y as usize] * g[y as usize] as f64;
+                    }
+                }
+            }
+            apply_step(row, e, cross);
+        }
+    } else if old_stamp == STAMP_UNINIT {
+        // Full replay: one planned gather of the entire column universe
+        // (tile-batched on the streaming provider, panel-filled on feature
+        // kernels), then the recursion reads from the buffer.
+        let plan = plan.expect("full lazy replay needs a gather plan");
+        debug_assert_eq!(plan.len(), cols.len(), "plan lags the update log");
+        let mut buf = scratch.lock().unwrap().pop().unwrap_or_default();
+        buf.resize(cols.len(), 0.0);
+        gram.row_gather_planned(x, plan, &mut buf);
+        row.copy_from_slice(&buf[..k]);
+        for e in entries {
+            let mut cross = 0.0;
+            match weights {
+                None => {
+                    for &v in &buf[e.start..e.end] {
+                        cross += v;
+                    }
+                }
+                Some(w) => {
+                    for (&y, &v) in cols[e.start..e.end].iter().zip(&buf[e.start..e.end]) {
+                        cross += w[y as usize] * v;
+                    }
+                }
+            }
+            apply_step(row, e, cross);
+        }
+        scratch.lock().unwrap().push(buf);
+    } else {
+        // Short suffix on a non-materialized provider: per-element eval
+        // (same values as the gathered path by the provider contract).
+        for e in &entries[old_stamp as usize..] {
+            let mut cross = 0.0;
+            match weights {
+                None => {
+                    for &y in &cols[e.start..e.end] {
+                        cross += gram.eval(x, y as usize);
+                    }
+                }
+                Some(w) => {
+                    for &y in &cols[e.start..e.end] {
+                        cross += w[y as usize] * gram.eval(x, y as usize);
+                    }
+                }
+            }
+            apply_step(row, e, cross);
+        }
+    }
+}
+
+/// One recursion step of the lazy replay — the same expression, in the same
+/// f64 evaluation order, as the eager sweep's update line.
+#[inline]
+fn apply_step(row: &mut [f64], e: &UpdateEntry, cross: f64) {
+    let j = e.center as usize;
+    row[j] = (1.0 - e.alpha) * row[j] + e.alpha * cross / e.mass;
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -744,6 +1085,151 @@ mod tests {
                 restored.self_inner(&gram).to_bits()
             );
         }
+    }
+
+    /// Eager reference: the removed full-n sweep's recursion, per point.
+    /// `px ← (1−α)px + α·cross/mass` with cross accumulated in member
+    /// order from per-element eval — the op sequence the lazy replay must
+    /// reproduce bit-for-bit.
+    #[allow(clippy::too_many_arguments)]
+    fn eager_apply(
+        gram: &dyn KernelProvider,
+        px: &mut [f64],
+        k: usize,
+        j: usize,
+        alpha: f64,
+        mass: f64,
+        members: &[usize],
+        weights: Option<&[f64]>,
+    ) {
+        let n = gram.n();
+        for x in 0..n {
+            let mut cross = 0.0;
+            match weights {
+                None => {
+                    for &y in members {
+                        cross += gram.eval(x, y);
+                    }
+                }
+                Some(w) => {
+                    for &y in members {
+                        cross += w[y] * gram.eval(x, y);
+                    }
+                }
+            }
+            px[x * k + j] = (1.0 - alpha) * px[x * k + j] + alpha * cross / mass;
+        }
+    }
+
+    #[test]
+    fn lazy_refresh_is_bit_identical_to_eager_recursion() {
+        // Drive a LazyAssignState and an eager full-table reference with
+        // the same update stream, refreshing random subsets at random
+        // times; every refreshed row must match the eager table to the
+        // bit, on every provider flavour, weighted and not.
+        let ds = fixture();
+        let fly = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 6.0 });
+        let mat = fly.materialize();
+        let w: Vec<f64> = (0..ds.n).map(|i| 1.0 + (i % 5) as f64).collect();
+        for g in [&fly, &mat] {
+            for weights in [None, Some(w.as_slice())] {
+                let mut rng = Rng::seeded(21);
+                let k = 3;
+                let seeds = [4usize, 40, 90];
+                let mut lazy = LazyAssignState::new(ds.n, &seeds);
+                let mut px = vec![0.0f64; ds.n * k];
+                for x in 0..ds.n {
+                    for (j, &s) in seeds.iter().enumerate() {
+                        px[x * k + j] = g.eval(x, s);
+                    }
+                }
+                for _step in 0..15 {
+                    let bj = 1 + rng.below(8);
+                    let members: Vec<usize> = (0..bj).map(|_| rng.below(ds.n)).collect();
+                    let j = rng.below(k);
+                    let alpha = (bj as f64 / 16.0).sqrt();
+                    let mass = match weights {
+                        None => members.len() as f64,
+                        Some(w) => members.iter().map(|&y| w[y]).sum(),
+                    };
+                    eager_apply(g, &mut px, k, j, alpha, mass, &members, weights);
+                    lazy.append_update(j, alpha, mass, &members);
+                    // Refresh a random subset (with duplicates) mid-stream.
+                    let probe: Vec<usize> = (0..6).map(|_| rng.below(ds.n)).collect();
+                    lazy.refresh(g, &probe, weights);
+                    for &x in &probe {
+                        for j in 0..k {
+                            assert_eq!(
+                                lazy.px_row(x)[j].to_bits(),
+                                px[x * k + j].to_bits(),
+                                "px[{x},{j}] diverged mid-stream"
+                            );
+                        }
+                    }
+                }
+                // Finalize must refresh every remaining row identically and
+                // fuse the same argmin the eager sweep would compute.
+                let cc = vec![1.0f64; k];
+                let (assign, mins) = lazy.finalize(g, &cc, weights);
+                for x in 0..ds.n {
+                    let kxx = g.self_k(x);
+                    let mut best = 0usize;
+                    let mut bestv = f64::INFINITY;
+                    for j in 0..k {
+                        let d = (kxx - 2.0 * px[x * k + j] + cc[j]).max(0.0);
+                        if d < bestv {
+                            best = j;
+                            bestv = d;
+                        }
+                    }
+                    assert_eq!(assign[x], best, "assignment diverged at {x}");
+                    assert_eq!(mins[x].to_bits(), bestv.to_bits(), "min at {x}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lazy_state_with_no_updates_assigns_from_seeds() {
+        // generation 0 (max_iters = 0 in Algorithm 1): finalize must build
+        // every row from the seed columns and argmin against them.
+        let ds = fixture();
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 6.0 });
+        let seeds = [7usize, 70];
+        let lazy = LazyAssignState::new(ds.n, &seeds);
+        assert_eq!(lazy.generation(), 0);
+        let cc: Vec<f64> = seeds.iter().map(|&s| gram.self_k(s)).collect();
+        let (assign, mins) = lazy.finalize(&gram, &cc, None);
+        for x in 0..ds.n {
+            let mut best = 0;
+            let mut bestv = f64::INFINITY;
+            for (j, &s) in seeds.iter().enumerate() {
+                let d = (gram.self_k(x) - 2.0 * gram.eval(x, s) + cc[j]).max(0.0);
+                if d < bestv {
+                    best = j;
+                    bestv = d;
+                }
+            }
+            assert_eq!(assign[x], best);
+            assert!((mins[x] - bestv).abs() < 1e-15);
+        }
+        // The seed points themselves are at distance 0 from their center.
+        assert_eq!(assign[7], 0);
+        assert!(mins[7].abs() < 1e-12);
+    }
+
+    #[test]
+    fn refresh_skips_current_rows_and_tolerates_duplicates() {
+        let ds = fixture();
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 6.0 });
+        let mut lazy = LazyAssignState::new(ds.n, &[0, 1]);
+        lazy.append_update(0, 0.5, 3.0, &[5, 6, 7]);
+        lazy.refresh(&gram, &[9, 9, 3, 9], None);
+        let before: Vec<u64> = lazy.px_row(9).iter().map(|v| v.to_bits()).collect();
+        // A second refresh at the same generation must be a no-op.
+        lazy.refresh(&gram, &[9, 3], None);
+        let after: Vec<u64> = lazy.px_row(9).iter().map(|v| v.to_bits()).collect();
+        assert_eq!(before, after);
     }
 
     #[test]

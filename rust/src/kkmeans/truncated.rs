@@ -13,7 +13,7 @@
 //! `K(B, S)·w` contraction through the cache-tiled engine in
 //! [`crate::kernels::Gram::weighted_cross_into`] (DESIGN.md §5).
 
-use super::backend::{argmin_rows, AssignBackend, NativeBackend};
+use super::backend::{argmin_rows_into, AssignBackend, NativeBackend};
 use super::init::choose_centers;
 use super::learning_rate::{LearningRate, RateState};
 use super::state::CenterWindow;
@@ -121,20 +121,32 @@ impl TruncatedMiniBatchKernelKMeans {
         let mut iterations = 0;
         let mut converged = false;
 
+        // Buffers hoisted out of the iteration loop (§Perf): the distance
+        // matrix, argmin outputs, member lists, and per-center weight
+        // staging are reused across iterations.
+        let mut batch: Vec<usize> = Vec::with_capacity(b);
+        let mut dist: Vec<f64> = Vec::new();
+        let mut assign: Vec<usize> = Vec::with_capacity(b);
+        let mut mins: Vec<f64> = Vec::with_capacity(b);
+        let mut members: Vec<Vec<usize>> = vec![Vec::new(); k];
+        let mut pw: Vec<f64> = Vec::new();
+
         for _iter in 0..self.cfg.max_iters {
             iterations += 1;
             // ---- sample + assign (the Õ(kb²) hot path) ----------------------
             let sw = Stopwatch::start();
-            let batch = rng.sample_with_replacement(n, b);
-            let dist = backend.distances(gram, &batch, &mut centers);
-            let (assign, mins) = argmin_rows(&dist, k);
+            rng.sample_with_replacement_into(n, b, &mut batch);
+            backend.distances_into(gram, &batch, &mut centers, &mut dist);
+            argmin_rows_into(&dist, k, &mut assign, &mut mins);
             let f_before = super::objective::weighted_mean(&batch, &mins, weights);
             history.push(f_before);
             prof.add("assign", sw.secs());
 
             // ---- update windows ---------------------------------------------
             let sw = Stopwatch::start();
-            let mut members: Vec<Vec<usize>> = vec![Vec::new(); k];
+            for m in members.iter_mut() {
+                m.clear();
+            }
             for (r, &j) in assign.iter().enumerate() {
                 members[j].push(batch[r]);
             }
@@ -143,20 +155,26 @@ impl TruncatedMiniBatchKernelKMeans {
                 if alpha == 0.0 {
                     continue;
                 }
-                let pw: Option<Vec<f64>> = weights
-                    .map(|w| members[j].iter().map(|&y| w[y]).collect());
+                let pwj: Option<&[f64]> = match weights {
+                    None => None,
+                    Some(w) => {
+                        pw.clear();
+                        pw.extend(members[j].iter().map(|&y| w[y]));
+                        Some(pw.as_slice())
+                    }
+                };
                 // Incremental ⟨Ĉ,Ĉ⟩ maintenance (§Perf): O(M·b_j) instead of
                 // the O(M²) recompute the next assignment would pay.
-                centers[j].apply_update_cc(alpha, &members[j], pw.as_deref(), gram);
+                centers[j].apply_update_cc(alpha, &members[j], pwj, gram);
             }
             prof.add("update", sw.secs());
 
             // ---- early stopping: f_B(Ĉ_i) − f_B(Ĉ_{i+1}) < ε ----------------
             if let Some(eps) = self.cfg.epsilon {
                 let sw = Stopwatch::start();
-                let dist2 = backend.distances(gram, &batch, &mut centers);
-                let (_, mins2) = argmin_rows(&dist2, k);
-                let f_after = super::objective::weighted_mean(&batch, &mins2, weights);
+                backend.distances_into(gram, &batch, &mut centers, &mut dist);
+                argmin_rows_into(&dist, k, &mut assign, &mut mins);
+                let f_after = super::objective::weighted_mean(&batch, &mins, weights);
                 prof.add("stopping", sw.secs());
                 if f_before - f_after < eps {
                     converged = true;

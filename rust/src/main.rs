@@ -55,8 +55,12 @@ fn main() -> Result<()> {
                  \x20                          kernels; default policy auto-streams above n≈23k)\n\
                  \x20     --cache-mb N         tile-LRU budget in MiB for streaming runs (64)\n\
                  \x20     --materialize        force the dense n×n table at any n\n\
+                 \x20     --profile            print the fit's per-phase timing table\n\
+                 \x20                          (init/refresh/assign/moments/update/stopping/\n\
+                 \x20                          finalize splits, without a debugger)\n\
                  \x20 fit                      train + save a servable model artifact\n\
-                 \x20     --dataset/--csv/--scale/--k/--batch/--tau/--iters/--seed as `run`\n\
+                 \x20     --dataset/--csv/--scale/--k/--batch/--tau/--iters/--seed/\n\
+                 \x20     --profile as `run`\n\
                  \x20     --out PATH           artifact path (default model.mbkk)\n\
                  \x20 predict                  load a model + batch-score a dataset\n\
                  \x20     --model PATH         artifact from `fit` (default model.mbkk)\n\
@@ -153,6 +157,7 @@ fn run(args: &Args) -> Result<()> {
     let backend = args.get_or("backend", "native");
     let csv = args.get("csv").map(|s| s.to_string());
     let k_opt = args.get("k").map(|s| s.parse::<usize>().expect("--k"));
+    let show_profile = args.flag("profile");
     let (strategy, gram_flags_set) = gram_strategy(args)?;
     let spec = experiment::RunSpec {
         dataset: dataset.clone(),
@@ -225,6 +230,9 @@ fn run(args: &Args) -> Result<()> {
     );
     println!("kernel:     {:.3}s", outcome.kernel_secs);
     println!("clustering: {:.3}s", outcome.cluster_secs);
+    if show_profile {
+        print!("\nphase timings:\n{}", outcome.profiler.report());
+    }
     Ok(())
 }
 
@@ -282,6 +290,7 @@ fn run_with_xla_backend(
         cluster_secs,
         kernel_secs: 0.0,
         gamma: gram.gamma(),
+        profiler: fit.result.profiler,
     })
 }
 
@@ -296,6 +305,7 @@ fn fit(args: &Args) -> Result<()> {
     let out = args.get_or("out", "model.mbkk");
     let csv = args.get("csv").map(|s| s.to_string());
     let k_opt = args.get("k").map(|s| s.parse::<usize>().expect("--k"));
+    let show_profile = args.flag("profile");
     let (strategy, _) = gram_strategy(args)?;
     let mut spec = experiment::RunSpec {
         dataset: dataset.clone(),
@@ -337,6 +347,9 @@ fn fit(args: &Args) -> Result<()> {
     );
     println!("kernel:     {:.3}s", fit.outcome.kernel_secs);
     println!("clustering: {:.3}s", fit.outcome.cluster_secs);
+    if show_profile {
+        print!("\nphase timings:\n{}", fit.outcome.profiler.report());
+    }
     let bytes = fit.model.to_bytes();
     std::fs::write(Path::new(&out), &bytes)
         .with_context(|| format!("writing model artifact {out}"))?;

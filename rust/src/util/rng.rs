@@ -144,7 +144,21 @@ impl Rng {
     /// Sample `m` indices uniformly from [0, n) **with** repetitions — the
     /// paper's batch sampling model.
     pub fn sample_with_replacement(&mut self, n: usize, m: usize) -> Vec<usize> {
-        (0..m).map(|_| self.below(n)).collect()
+        let mut out = Vec::new();
+        self.sample_with_replacement_into(n, m, &mut out);
+        out
+    }
+
+    /// [`Rng::sample_with_replacement`] into a caller-owned buffer
+    /// (cleared, then filled) — draws the identical index sequence, but
+    /// lets iteration loops reuse one batch buffer instead of allocating
+    /// per iteration.
+    pub fn sample_with_replacement_into(&mut self, n: usize, m: usize, out: &mut Vec<usize>) {
+        out.clear();
+        out.reserve(m);
+        for _ in 0..m {
+            out.push(self.below(n));
+        }
     }
 
     /// Sample `m` distinct indices from [0, n) (partial Fisher–Yates when m ≪ n,

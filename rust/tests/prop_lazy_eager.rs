@@ -1,0 +1,357 @@
+//! Lazy ≡ eager equivalence (the tentpole acceptance property of ISSUE 5).
+//!
+//! Algorithm 1's eager full-n `px` sweep was replaced by lazy,
+//! generation-stamped state (`kkmeans::state::LazyAssignState`): each
+//! point's `⟨φ(x), C_j⟩` row carries the generation it was last refreshed
+//! at, and a refresh replays only the update-log entries appended since.
+//! The replay performs the *same recursion steps in the same order over
+//! the same kernel values* as the removed sweep, so a lazy fit must be
+//! **bit-identical** to the eager implementation: identical assignment
+//! vectors, identical objective bits, identical history bits — across
+//! both learning rates, weighted and unweighted, with and without early
+//! stopping, on the materialized, streaming (tile-LRU), and on-the-fly
+//! providers.
+//!
+//! The eager reference below is a faithful transcription of the removed
+//! sweep (per-element kernel evaluation, member-order accumulation,
+//! fused post-update argmin); the property drives both implementations
+//! from identically seeded RNGs.
+
+use mbkk::data::synthetic::{blobs, SyntheticSpec};
+use mbkk::data::Dataset;
+use mbkk::kernels::{CachedGram, Gram, KernelFunction, KernelProvider};
+use mbkk::kkmeans::backend::argmin_rows;
+use mbkk::kkmeans::init::choose_centers;
+use mbkk::kkmeans::learning_rate::RateState;
+use mbkk::kkmeans::objective::weighted_mean;
+use mbkk::kkmeans::{Init, LearningRate, MiniBatchConfig, MiniBatchKernelKMeans};
+use mbkk::testutil::prop::{check_with_seed, from_fn};
+use mbkk::util::rng::Rng;
+
+fn dataset(seed: u64, n: usize) -> Dataset {
+    let mut rng = Rng::seeded(seed ^ 0xA7);
+    blobs(
+        &SyntheticSpec::new(n, 4, 3).with_std(0.6).with_separation(5.0),
+        &mut rng,
+    )
+}
+
+/// The removed eager Algorithm 1, transcribed: full-n px table at init,
+/// full-n DP sweep + fused argmin every iteration. Returns
+/// (assignments, objective, history, iterations, converged).
+#[allow(clippy::too_many_arguments)]
+fn eager_fit(
+    gram: &dyn KernelProvider,
+    k: usize,
+    b: usize,
+    max_iters: usize,
+    epsilon: Option<f64>,
+    lr: LearningRate,
+    init: Init,
+    weights: Option<&[f64]>,
+    rng: &mut Rng,
+) -> (Vec<usize>, f64, Vec<f64>, usize, bool) {
+    let n = gram.n();
+    let b = b.min(n.max(1));
+    let seeds = choose_centers(gram, k, init, rng);
+    let mut px = vec![0.0f64; n * k];
+    for x in 0..n {
+        for (j, &s) in seeds.iter().enumerate() {
+            px[x * k + j] = gram.eval(x, s);
+        }
+    }
+    let mut cc: Vec<f64> = seeds.iter().map(|&s| gram.self_k(s)).collect();
+    let mut rate = RateState::new(lr, k);
+    let mut history = Vec::new();
+    let mut assign_all = vec![0usize; n];
+    let mut mins_all = vec![0.0f64; n];
+    let mut have_assignment = false;
+    let mut iterations = 0;
+    let mut converged = false;
+
+    for _iter in 0..max_iters {
+        iterations += 1;
+        let batch = rng.sample_with_replacement(n, b);
+        let mut batch_dist = vec![0.0f64; b * k];
+        for (r, &x) in batch.iter().enumerate() {
+            let kxx = gram.self_k(x);
+            for j in 0..k {
+                batch_dist[r * k + j] = (kxx - 2.0 * px[x * k + j] + cc[j]).max(0.0);
+            }
+        }
+        let (assign, mins) = argmin_rows(&batch_dist, k);
+        let f_before = weighted_mean(&batch, &mins, weights);
+        history.push(f_before);
+
+        let mut members: Vec<Vec<usize>> = vec![Vec::new(); k];
+        for (r, &j) in assign.iter().enumerate() {
+            members[j].push(batch[r]);
+        }
+        let alphas: Vec<f64> = (0..k).map(|j| rate.alpha(j, members[j].len(), b)).collect();
+        let mass: Vec<f64> = members
+            .iter()
+            .map(|m| match weights {
+                None => m.len() as f64,
+                Some(w) => m.iter().map(|&x| w[x]).sum(),
+            })
+            .collect();
+        let c_dot_cm: Vec<f64> = (0..k)
+            .map(|j| {
+                if members[j].is_empty() {
+                    return 0.0;
+                }
+                let mut s = 0.0;
+                for &y in &members[j] {
+                    let wy = weights.map(|w| w[y]).unwrap_or(1.0);
+                    s += wy * px[y * k + j];
+                }
+                s / mass[j]
+            })
+            .collect();
+        let cm_dot_cm: Vec<f64> = (0..k)
+            .map(|j| {
+                if members[j].is_empty() {
+                    return 0.0;
+                }
+                let pts = &members[j];
+                let mut s = 0.0;
+                for (a, &y) in pts.iter().enumerate() {
+                    let wy = weights.map(|w| w[y]).unwrap_or(1.0);
+                    s += wy * wy * gram.self_k(y);
+                    for &z in pts.iter().skip(a + 1) {
+                        let wz = weights.map(|w| w[z]).unwrap_or(1.0);
+                        s += 2.0 * wy * wz * gram.eval(y, z);
+                    }
+                }
+                s / (mass[j] * mass[j])
+            })
+            .collect();
+
+        for j in 0..k {
+            let a = alphas[j];
+            if a == 0.0 {
+                continue;
+            }
+            cc[j] = (1.0 - a) * (1.0 - a) * cc[j]
+                + 2.0 * a * (1.0 - a) * c_dot_cm[j]
+                + a * a * cm_dot_cm[j];
+        }
+        // The eager full-n sweep with the fused post-update argmin.
+        for x in 0..n {
+            for j in 0..k {
+                let a = alphas[j];
+                if a == 0.0 {
+                    continue;
+                }
+                let mut cross = 0.0;
+                match weights {
+                    None => {
+                        for &y in &members[j] {
+                            cross += gram.eval(x, y);
+                        }
+                    }
+                    Some(w) => {
+                        for &y in &members[j] {
+                            cross += w[y] * gram.eval(x, y);
+                        }
+                    }
+                }
+                px[x * k + j] = (1.0 - a) * px[x * k + j] + a * cross / mass[j];
+            }
+            let kxx = gram.self_k(x);
+            let mut best = 0usize;
+            let mut bestv = f64::INFINITY;
+            for j in 0..k {
+                let d = (kxx - 2.0 * px[x * k + j] + cc[j]).max(0.0);
+                if d < bestv {
+                    best = j;
+                    bestv = d;
+                }
+            }
+            assign_all[x] = best;
+            mins_all[x] = bestv;
+        }
+        have_assignment = true;
+
+        if let Some(eps) = epsilon {
+            let mins_after: Vec<f64> = batch.iter().map(|&x| mins_all[x]).collect();
+            let f_after = weighted_mean(&batch, &mins_after, weights);
+            if f_before - f_after < eps {
+                converged = true;
+                break;
+            }
+        }
+    }
+
+    if !have_assignment {
+        for x in 0..n {
+            let kxx = gram.self_k(x);
+            let mut best = 0usize;
+            let mut bestv = f64::INFINITY;
+            for j in 0..k {
+                let d = (kxx - 2.0 * px[x * k + j] + cc[j]).max(0.0);
+                if d < bestv {
+                    best = j;
+                    bestv = d;
+                }
+            }
+            assign_all[x] = best;
+            mins_all[x] = bestv;
+        }
+    }
+    let points: Vec<usize> = (0..n).collect();
+    let objective = weighted_mean(&points, &mins_all, weights);
+    (assign_all, objective, history, iterations, converged)
+}
+
+/// Run the real (lazy) fit and the eager reference from identically
+/// seeded RNGs and demand bit-identity.
+#[allow(clippy::too_many_arguments)]
+fn assert_lazy_equals_eager(
+    gram: &dyn KernelProvider,
+    label: &str,
+    seed: u64,
+    k: usize,
+    b: usize,
+    max_iters: usize,
+    epsilon: Option<f64>,
+    lr: LearningRate,
+    init: Init,
+    weights: Option<&[f64]>,
+) -> bool {
+    let cfg = MiniBatchConfig {
+        k,
+        batch_size: b,
+        max_iters,
+        epsilon,
+        learning_rate: lr,
+        init,
+        weights: weights.map(|w| w.to_vec()),
+    };
+    let mut lazy_rng = Rng::seeded(seed);
+    let lazy = MiniBatchKernelKMeans::new(cfg).fit(gram, &mut lazy_rng);
+    let mut eager_rng = Rng::seeded(seed);
+    let (assign, objective, history, iterations, converged) =
+        eager_fit(gram, k, b, max_iters, epsilon, lr, init, weights, &mut eager_rng);
+    if lazy.assignments != assign {
+        eprintln!("{label}: assignments diverged");
+        return false;
+    }
+    if lazy.objective.to_bits() != objective.to_bits() {
+        eprintln!(
+            "{label}: objective bits diverged: {} vs {objective}",
+            lazy.objective
+        );
+        return false;
+    }
+    let history_matches = lazy.history.len() == history.len()
+        && lazy.history.iter().zip(history.iter()).all(|(a, b)| a.to_bits() == b.to_bits());
+    if !history_matches {
+        eprintln!("{label}: history diverged");
+        return false;
+    }
+    if lazy.iterations != iterations || lazy.converged != converged {
+        eprintln!("{label}: iteration/convergence bookkeeping diverged");
+        return false;
+    }
+    true
+}
+
+#[test]
+fn lazy_equals_eager_across_rates_weights_and_providers() {
+    // Property: for random (seed, n, b), on every provider flavour, both
+    // learning rates, weighted and unweighted, the lazy fit reproduces
+    // the eager sweep bit-for-bit.
+    let gen = from_fn(|rng: &mut Rng| {
+        (rng.next_u64(), 80 + rng.below(100), 12 + rng.below(40))
+    });
+    check_with_seed(
+        "lazy ≡ eager (rates × weights × providers)",
+        gen,
+        |&(seed, n, b)| {
+            let ds = dataset(seed, n);
+            let fly = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 8.0 });
+            let mat = fly.materialize();
+            let cached = CachedGram::new(
+                Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 8.0 }),
+                256 * 1024,
+            );
+            let w: Vec<f64> = (0..n).map(|i| 1.0 + (i % 4) as f64).collect();
+            let providers: [(&dyn KernelProvider, &str); 3] =
+                [(&fly, "on-the-fly"), (&mat, "materialized"), (&cached, "streaming")];
+            for (gram, pname) in providers {
+                for lr in [LearningRate::Beta, LearningRate::Sklearn] {
+                    for weights in [None, Some(w.as_slice())] {
+                        let label = format!(
+                            "{pname}/{lr:?}/w={} seed={seed} n={n} b={b}",
+                            weights.is_some()
+                        );
+                        if !assert_lazy_equals_eager(
+                            gram,
+                            &label,
+                            seed,
+                            3,
+                            b,
+                            10,
+                            None,
+                            lr,
+                            Init::KMeansPlusPlus,
+                            weights,
+                        ) {
+                            return false;
+                        }
+                    }
+                }
+            }
+            true
+        },
+        0xBEEF,
+        12,
+    );
+}
+
+#[test]
+fn lazy_equals_eager_with_early_stopping() {
+    // The ε path re-scores the batch after the update: the lazy state
+    // replays that iteration's log entries; the eager sweep read its
+    // maintained post-update mins. Same bits, same stopping iteration.
+    let ds = dataset(5, 160);
+    let mat = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 8.0 }).materialize();
+    for (seed, eps) in [(3u64, 1e-3), (9, 1e-2), (11, 1e-6)] {
+        assert!(
+            assert_lazy_equals_eager(
+                &mat,
+                &format!("eps={eps} seed={seed}"),
+                seed,
+                3,
+                32,
+                80,
+                Some(eps),
+                LearningRate::Beta,
+                Init::KMeansPlusPlus,
+                None,
+            ),
+            "early-stopping equivalence failed (eps={eps} seed={seed})"
+        );
+    }
+}
+
+#[test]
+fn lazy_equals_eager_at_zero_iterations() {
+    // max_iters = 0: the finalize pass must assign from the seed columns
+    // exactly as the eager init tables did.
+    let ds = dataset(7, 90);
+    let fly = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 8.0 });
+    assert!(assert_lazy_equals_eager(
+        &fly,
+        "zero-iters",
+        17,
+        4,
+        16,
+        0,
+        None,
+        LearningRate::Beta,
+        Init::Uniform,
+        None,
+    ));
+}
