@@ -41,6 +41,7 @@ fn main() -> mbkk::util::error::Result<()> {
             algo,
             k,
             batch_size: 1024,
+            schedule: mbkk::kkmeans::ScheduleSpec::Fixed,
             tau,
             max_iters: iters,
             epsilon: None,

@@ -4,7 +4,10 @@
 //!
 //! Runs full-batch, Algorithm 1, and Algorithm 2 on each paper-proxy
 //! dataset for a fixed iteration budget and reports total clustering time,
-//! the speedup ratios, and the ARI gap.
+//! the speedup ratios, and the ARI gap. Two extra cases per dataset track
+//! the ISSUE-6 additions: the nested (geometric-growth) batch schedule and
+//! the ε-terminated run (windowed confidence rule), whose cost depends on
+//! how early the rule fires.
 //!
 //! ```bash
 //! cargo bench --bench bench_speedup
@@ -13,7 +16,7 @@
 use mbkk::bench::BenchRunner;
 use mbkk::coordinator::experiment::{run_with_gram, AlgoSpec, KernelSpec, RunSpec};
 use mbkk::data::registry;
-use mbkk::kkmeans::LearningRate;
+use mbkk::kkmeans::{LearningRate, ScheduleSpec};
 use mbkk::util::rng::Rng;
 
 fn main() {
@@ -35,7 +38,11 @@ fn main() {
         let mut rng = Rng::seeded(7);
         let (gram, kernel_secs) = kernel.build(&ds, &mut rng);
 
-        let mut run = |algo: AlgoSpec, b: usize, tau: usize| {
+        let mut run = |algo: AlgoSpec,
+                       b: usize,
+                       schedule: ScheduleSpec,
+                       tau: usize,
+                       epsilon: Option<f64>| {
             let spec = RunSpec {
                 dataset: dataset.to_string(),
                 scale,
@@ -43,30 +50,51 @@ fn main() {
                 algo,
                 k,
                 batch_size: b,
+                schedule,
                 tau,
                 max_iters: iters,
-                epsilon: None,
+                epsilon,
                 seed: 3,
             };
             run_with_gram(&spec, &ds, Some(&gram), kernel_secs)
         };
 
-        let full = run(AlgoSpec::FullKkm, 1024, usize::MAX);
-        let alg1 = run(AlgoSpec::MbKkm(LearningRate::Beta), 256, usize::MAX);
-        let alg2_big = run(AlgoSpec::TruncKkm(LearningRate::Beta), 1024, 200);
-        let alg2 = run(AlgoSpec::TruncKkm(LearningRate::Beta), 256, 100);
+        let fixed = ScheduleSpec::Fixed;
+        let nested = ScheduleSpec::Nested { growth: 2.0 };
+        let full = run(AlgoSpec::FullKkm, 1024, fixed, usize::MAX, None);
+        let alg1 = run(AlgoSpec::MbKkm(LearningRate::Beta), 256, fixed, usize::MAX, None);
+        let alg2_big = run(AlgoSpec::TruncKkm(LearningRate::Beta), 1024, fixed, 200, None);
+        let alg2 = run(AlgoSpec::TruncKkm(LearningRate::Beta), 256, fixed, 100, None);
+        let alg2_nested = run(AlgoSpec::TruncKkm(LearningRate::Beta), 256, nested, 200, None);
+        let alg2_eps = run(
+            AlgoSpec::TruncKkm(LearningRate::Beta),
+            256,
+            fixed,
+            200,
+            Some(1e-3),
+        );
 
-        runner.record(&format!("{dataset}/full-kkm (n={})", ds.n), full.cluster_secs);
+        runner.record(&format!("{dataset}/full-kkm"), full.cluster_secs);
         runner.record(&format!("{dataset}/bmb-kkm (alg1, b=256)"), alg1.cluster_secs);
         runner.record(&format!("{dataset}/btrunc-kkm (alg2, b=1024)"), alg2_big.cluster_secs);
         runner.record(&format!("{dataset}/btrunc-kkm (alg2, b=256)"), alg2.cluster_secs);
+        runner.record(
+            &format!("{dataset}/btrunc-kkm (alg2, nested g=2)"),
+            alg2_nested.cluster_secs,
+        );
+        runner.record(
+            &format!("{dataset}/btrunc-kkm (alg2, eps-term)"),
+            alg2_eps.cluster_secs,
+        );
 
         lines.push(format!(
-            "  {dataset:<16} full {:>7.2}s (ARI {:.3}) | alg1 b=256 {:>6.2}s ({:.1}x, ARI {:.3}) | alg2 b=1024 {:>6.2}s ({:.1}x, ARI {:.3}) | alg2 b=256 {:>6.2}s ({:.1}x, ARI {:.3})",
+            "  {dataset:<16} full {:>7.2}s (ARI {:.3}) | alg1 b=256 {:>6.2}s ({:.1}x, ARI {:.3}) | alg2 b=1024 {:>6.2}s ({:.1}x, ARI {:.3}) | alg2 b=256 {:>6.2}s ({:.1}x, ARI {:.3}) | nested {:>6.2}s ({:.1}x) | eps {:>6.2}s ({} iters)",
             full.cluster_secs, full.ari,
             alg1.cluster_secs, full.cluster_secs / alg1.cluster_secs.max(1e-9), alg1.ari,
             alg2_big.cluster_secs, full.cluster_secs / alg2_big.cluster_secs.max(1e-9), alg2_big.ari,
             alg2.cluster_secs, full.cluster_secs / alg2.cluster_secs.max(1e-9), alg2.ari,
+            alg2_nested.cluster_secs, full.cluster_secs / alg2_nested.cluster_secs.max(1e-9),
+            alg2_eps.cluster_secs, alg2_eps.iterations,
         ));
     }
     println!("\n  == speedup summary (paper: 10-100x with minimal quality loss) ==");
@@ -74,4 +102,5 @@ fn main() {
         println!("{l}");
     }
     runner.write_csv();
+    runner.write_baseline(&BenchRunner::baseline_path());
 }

@@ -95,6 +95,7 @@ fn main() {
         learning_rate: LearningRate::Beta,
         init: Init::KMeansPlusPlusOnSample(2000),
         weights: None,
+        ..Default::default()
     };
     let mut fit_rng = Rng::seeded(1);
     let fit = TruncatedMiniBatchKernelKMeans::new(cfg).fit(&big, &mut fit_rng);
@@ -115,6 +116,7 @@ fn main() {
         learning_rate: LearningRate::Beta,
         init: Init::KMeansPlusPlusOnSample(2000),
         weights: None,
+        ..Default::default()
     };
     let mut fit_rng = Rng::seeded(2);
     let fit = MiniBatchKernelKMeans::new(cfg).fit(&big, &mut fit_rng);

@@ -13,8 +13,8 @@ use crate::data::{registry, Dataset};
 use crate::kernels::{graph, sigma, CachedGram, CacheStats, Gram, KernelFunction, KernelProvider};
 use crate::kkmeans::{
     FullBatchConfig, FullBatchKernelKMeans, Init, KernelKMeansModel, LearningRate,
-    MiniBatchConfig, MiniBatchKernelKMeans, NativeBackend, TruncatedConfig,
-    TruncatedMiniBatchKernelKMeans,
+    MiniBatchConfig, MiniBatchKernelKMeans, NativeBackend, ScheduleSpec, TerminationDecision,
+    TerminationMode, TruncatedConfig, TruncatedMiniBatchKernelKMeans,
 };
 use crate::kmeans::{KMeans, KMeansConfig, MiniBatchKMeans, MiniBatchKMeansConfig};
 use crate::metrics::{ari, nmi};
@@ -350,6 +350,8 @@ pub struct RunSpec {
     pub k: usize,
     /// Batch size `b` (mini-batch algorithms).
     pub batch_size: usize,
+    /// Batch schedule for the mini-batch algorithms (fixed or nested).
+    pub schedule: ScheduleSpec,
     /// Truncation parameter τ (Algorithm 2).
     pub tau: usize,
     /// Iteration budget.
@@ -364,11 +366,12 @@ impl RunSpec {
     /// Compact one-line cell description for logs.
     pub fn label(&self) -> String {
         format!(
-            "{}/{}/{} b={} tau={} seed={}",
+            "{}/{}/{} b={} sched={} tau={} seed={}",
             self.dataset,
             self.kernel.name(),
             self.algo.name(),
             self.batch_size,
+            self.schedule.label(),
             self.tau,
             self.seed
         )
@@ -394,6 +397,9 @@ pub struct RunOutcome {
     pub kernel_secs: f64,
     /// γ of the gram (Table 1).
     pub gamma: f64,
+    /// The ε stop rule's recorded decision sequence (empty without ε) —
+    /// replayable evidence for how termination was reached.
+    pub decisions: Vec<TerminationDecision>,
     /// The fit's per-phase timing breakdown (init/refresh/assign/moments/
     /// update/stopping/finalize for the mini-batch algorithms) — surfaced
     /// by the CLI's `--profile` flag.
@@ -449,8 +455,10 @@ pub fn run_with_gram(
         AlgoSpec::MbKkm(lr) => MiniBatchKernelKMeans::new(MiniBatchConfig {
             k: spec.k,
             batch_size: spec.batch_size,
+            schedule: spec.schedule,
             max_iters: spec.max_iters,
             epsilon: spec.epsilon,
+            termination: TerminationMode::default(),
             learning_rate: lr,
             init: default_init(ds.n),
             weights: None,
@@ -459,9 +467,11 @@ pub fn run_with_gram(
         AlgoSpec::TruncKkm(lr) => TruncatedMiniBatchKernelKMeans::new(TruncatedConfig {
             k: spec.k,
             batch_size: spec.batch_size,
+            schedule: spec.schedule,
             tau: spec.tau,
             max_iters: spec.max_iters,
             epsilon: spec.epsilon,
+            termination: TerminationMode::default(),
             learning_rate: lr,
             init: default_init(ds.n),
             weights: None,
@@ -496,6 +506,7 @@ pub fn run_with_gram(
         cluster_secs,
         kernel_secs,
         gamma: gram.map(|g| g.gamma()).unwrap_or(f64::NAN),
+        decisions: fit.decisions,
         profiler: fit.profiler,
     }
 }
@@ -609,9 +620,11 @@ pub fn fit_servable_model(
     let mut fit = TruncatedMiniBatchKernelKMeans::new(TruncatedConfig {
         k: spec.k,
         batch_size: spec.batch_size,
+        schedule: spec.schedule,
         tau: spec.tau,
         max_iters: spec.max_iters,
         epsilon: spec.epsilon,
+        termination: TerminationMode::default(),
         learning_rate: lr,
         init: default_init(ds.n),
         weights: None,
@@ -635,6 +648,7 @@ pub fn fit_servable_model(
             cluster_secs,
             kernel_secs,
             gamma: built.provider().gamma(),
+            decisions: fit.result.decisions.clone(),
             profiler: fit.result.profiler.clone(),
         },
         report: GramReport {
@@ -657,6 +671,7 @@ mod tests {
             algo,
             k: 5,
             batch_size: 64,
+            schedule: ScheduleSpec::Fixed,
             tau: 50,
             max_iters: 20,
             epsilon: None,

@@ -185,6 +185,7 @@ fn run_grid(
             algo,
             k,
             batch_size: if b == 0 { 1024 } else { b },
+            schedule: crate::kkmeans::ScheduleSpec::Fixed,
             tau: if tau == 0 { usize::MAX } else { tau },
             max_iters: opts.max_iters,
             epsilon: None,

@@ -9,6 +9,9 @@
 //!   sweeps, and drivers that aggregate repeats into CSV + markdown under
 //!   `results/`.
 //! * [`report`] — aggregation (mean/std over seeds) and writers.
+//! * [`repro`] — the `repro-speedup` preset: full-batch vs mini-batch
+//!   (fixed and nested schedules) under a shared ε, emitting the
+//!   deterministic reproduction table plus machine-local timings.
 //!
 //! The CLI (`mbkk figures …`, `mbkk run …`, `mbkk gamma-table`) is a thin
 //! wrapper over this module; `examples/paper_figures.rs` is the end-to-end
@@ -17,6 +20,8 @@
 pub mod experiment;
 pub mod figures;
 pub mod report;
+pub mod repro;
 
 pub use experiment::{AlgoSpec, KernelSpec, RunOutcome, RunSpec};
 pub use figures::{figure_ids, run_figure, run_gamma_table, FigureSpec};
+pub use repro::{run_repro, ReproOptions, ReproRow};

@@ -161,6 +161,7 @@ mod tests {
             cluster_secs: secs,
             kernel_secs: 2.0,
             gamma: 1.0,
+            decisions: Vec::new(),
             profiler: Default::default(),
         }
     }

@@ -92,8 +92,15 @@ impl FullBatchKernelKMeans {
         let mut iterations = 0;
         let mut converged = false;
         let mut prev_obj = f64::INFINITY;
+        // Full-batch improvements are exact (no sampling noise), so ε is
+        // always the legacy single-observation rule here; the stopper only
+        // adds the recorded decision sequence.
+        let mut stopper = self
+            .cfg
+            .epsilon
+            .map(|eps| super::termination::EpsilonStopper::new(eps, super::TerminationMode::SingleBatch));
 
-        for _iter in 0..self.cfg.max_iters {
+        for iter in 0..self.cfg.max_iters {
             iterations += 1;
             let sw = Stopwatch::start();
             // Cluster membership lists + weight mass.
@@ -213,8 +220,8 @@ impl FullBatchKernelKMeans {
                 converged = true;
                 break;
             }
-            if let Some(eps) = self.cfg.epsilon {
-                if prev_obj - obj < eps {
+            if let Some(stopper) = stopper.as_mut() {
+                if stopper.observe(iter, prev_obj - obj) {
                     converged = true;
                     break;
                 }
@@ -223,7 +230,17 @@ impl FullBatchKernelKMeans {
         }
 
         let objective = *history.last().unwrap_or(&f64::NAN);
-        FitResult { assignments, objective, history, iterations, converged, profiler: prof }
+        FitResult {
+            assignments,
+            objective,
+            history,
+            iterations,
+            converged,
+            decisions: stopper
+                .map(super::termination::EpsilonStopper::into_decisions)
+                .unwrap_or_default(),
+            profiler: prof,
+        }
     }
 }
 

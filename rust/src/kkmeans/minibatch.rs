@@ -27,7 +27,9 @@
 use super::backend::argmin_rows_into;
 use super::init::choose_centers;
 use super::learning_rate::{LearningRate, RateState};
+use super::schedule::ScheduleSpec;
 use super::state::LazyAssignState;
+use super::termination::{EpsilonStopper, TerminationMode};
 use super::{FitResult, Init};
 use crate::kernels::KernelProvider;
 use crate::util::rng::Rng;
@@ -38,14 +40,21 @@ use crate::util::timing::{Profiler, Stopwatch};
 pub struct MiniBatchConfig {
     /// Number of clusters.
     pub k: usize,
-    /// Batch size `b` (sampled uniformly with repetitions).
+    /// Batch size `b` (sampled uniformly with repetitions). Under a
+    /// nested schedule this is the starting size `b₀`.
     pub batch_size: usize,
+    /// Batch schedule: fixed-b (the paper's protocol) or nested geometric
+    /// growth with deterministic sample reuse.
+    pub schedule: ScheduleSpec,
     /// Iteration budget.
     pub max_iters: usize,
     /// Early-stopping threshold ε on batch improvement
     /// `f_{B_i}(C_i) − f_{B_i}(C_{i+1})`; `None` runs `max_iters` fixed
     /// iterations (the paper's experimental protocol).
     pub epsilon: Option<f64>,
+    /// How ε is interpreted (windowed confidence estimator by default;
+    /// [`TerminationMode::SingleBatch`] for the legacy one-batch rule).
+    pub termination: TerminationMode,
     /// Learning-rate schedule for the center updates.
     pub learning_rate: LearningRate,
     /// Center initialization method.
@@ -59,8 +68,10 @@ impl Default for MiniBatchConfig {
         MiniBatchConfig {
             k: 2,
             batch_size: 1024,
+            schedule: ScheduleSpec::Fixed,
             max_iters: 200,
             epsilon: None,
+            termination: TerminationMode::default(),
             learning_rate: LearningRate::Beta,
             init: Init::default(),
             weights: None,
@@ -83,10 +94,15 @@ impl MiniBatchKernelKMeans {
     pub fn fit(&self, gram: &dyn KernelProvider, rng: &mut Rng) -> FitResult {
         let n = gram.n();
         let k = self.cfg.k;
-        let b = self.cfg.batch_size.min(n.max(1));
         assert!(k >= 1 && k <= n);
         let mut prof = Profiler::new();
         let weights = self.cfg.weights.as_deref();
+        let mut schedule = self.cfg.schedule.build(self.cfg.batch_size);
+        let b_max = schedule.max_batch(n);
+        let mut stopper = self
+            .cfg
+            .epsilon
+            .map(|eps| EpsilonStopper::new(eps, self.cfg.termination));
 
         // ---- init: seeds only — the old O(n·k) px table build is gone; a
         // point's initial row K(x, seed_j) materializes on first refresh.
@@ -104,26 +120,30 @@ impl MiniBatchKernelKMeans {
         // Buffers hoisted out of the iteration loop (§Perf): beyond the
         // update log's append-only growth, the loop performs no
         // per-iteration allocations.
-        let mut batch: Vec<usize> = Vec::with_capacity(b);
-        let mut batch_dist = vec![0.0f64; b * k];
-        let mut assign: Vec<usize> = Vec::with_capacity(b);
-        let mut mins: Vec<f64> = Vec::with_capacity(b);
+        let mut batch: Vec<usize> = Vec::with_capacity(b_max);
+        let mut batch_dist: Vec<f64> = Vec::with_capacity(b_max * k);
+        let mut assign: Vec<usize> = Vec::with_capacity(b_max);
+        let mut mins: Vec<f64> = Vec::with_capacity(b_max);
         let mut members: Vec<Vec<usize>> = vec![Vec::new(); k];
         let mut alphas = vec![0.0f64; k];
         let mut mass = vec![0.0f64; k];
         let mut c_dot_cm = vec![0.0f64; k];
         let mut cm_dot_cm = vec![0.0f64; k];
 
-        for _iter in 0..self.cfg.max_iters {
+        for iter in 0..self.cfg.max_iters {
             iterations += 1;
             // ---- sample + refresh: touch ONLY the b sampled points ----------
             // The refresh replays each sampled point's pending log suffix —
             // the work the eager sweep used to do for all n points, deferred
             // to the moment (and the points) the iteration actually needs.
+            // Under a nested schedule, carried points were refreshed last
+            // iteration, so their suffix is a single iteration of entries.
             let sw = Stopwatch::start();
-            rng.sample_with_replacement_into(n, b, &mut batch);
+            schedule.next_batch(iter, n, rng, &mut batch);
+            let b = batch.len();
             state.refresh(gram, &batch, weights);
             prof.add("refresh", sw.secs());
+            batch_dist.resize(b * k, 0.0);
 
             // ---- assign the batch under the current centers -----------------
             let sw = Stopwatch::start();
@@ -208,7 +228,7 @@ impl MiniBatchKernelKMeans {
             prof.add("update", sw.secs());
 
             // ---- early stopping on the same batch ---------------------------
-            if let Some(eps) = self.cfg.epsilon {
+            if let Some(stopper) = stopper.as_mut() {
                 let sw = Stopwatch::start();
                 // Replay just this iteration's entries onto the batch and
                 // re-score it under the updated centers — O(b·Σb_j), still
@@ -228,7 +248,7 @@ impl MiniBatchKernelKMeans {
                 }
                 let f_after = super::objective::weighted_mean(&batch, &mins, weights);
                 prof.add("stopping", sw.secs());
-                if f_before - f_after < eps {
+                if stopper.observe(iter, f_before - f_after) {
                     converged = true;
                     break;
                 }
@@ -244,7 +264,15 @@ impl MiniBatchKernelKMeans {
         let objective = super::objective::weighted_mean_all(&mins_all, weights);
         prof.add("finalize", sw.secs());
 
-        FitResult { assignments, objective, history, iterations, converged, profiler: prof }
+        FitResult {
+            assignments,
+            objective,
+            history,
+            iterations,
+            converged,
+            decisions: stopper.map(EpsilonStopper::into_decisions).unwrap_or_default(),
+            profiler: prof,
+        }
     }
 }
 
@@ -306,6 +334,52 @@ mod tests {
         let res = MiniBatchKernelKMeans::new(cfg).fit(&gram, &mut rng);
         assert!(res.converged, "should stop early; ran {}", res.iterations);
         assert!(res.iterations < 200);
+    }
+
+    #[test]
+    fn nested_schedule_recovers_blobs() {
+        let ds = fixture(600);
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 20.0 });
+        let cfg = MiniBatchConfig {
+            k: 3,
+            batch_size: 32,
+            schedule: crate::kkmeans::ScheduleSpec::Nested { growth: 2.0 },
+            max_iters: 40,
+            ..Default::default()
+        };
+        let mut rng = Rng::seeded(8);
+        let res = MiniBatchKernelKMeans::new(cfg).fit(&gram, &mut rng);
+        let score = ari(ds.labels.as_ref().unwrap(), &res.assignments);
+        assert!(score > 0.9, "ARI={score}");
+    }
+
+    #[test]
+    fn epsilon_run_records_one_decision_per_iteration() {
+        let ds = fixture(400);
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 20.0 });
+        let cfg = MiniBatchConfig {
+            k: 3,
+            batch_size: 200,
+            max_iters: 200,
+            epsilon: Some(1e-3),
+            ..Default::default()
+        };
+        let mut rng = Rng::seeded(3);
+        let res = MiniBatchKernelKMeans::new(cfg).fit(&gram, &mut rng);
+        assert_eq!(res.decisions.len(), res.iterations);
+        assert_eq!(res.decisions.last().unwrap().stop, res.converged);
+        assert!(res.decisions.iter().take(res.iterations - 1).all(|d| !d.stop));
+        assert!(!res.decisions[0].stop, "the rule must never fire on iteration 0");
+    }
+
+    #[test]
+    fn no_epsilon_means_no_decisions() {
+        let ds = fixture(200);
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 10.0 });
+        let cfg = MiniBatchConfig { k: 3, batch_size: 64, max_iters: 5, ..Default::default() };
+        let mut rng = Rng::seeded(4);
+        let res = MiniBatchKernelKMeans::new(cfg).fit(&gram, &mut rng);
+        assert!(res.decisions.is_empty());
     }
 
     #[test]

@@ -33,7 +33,9 @@ pub mod learning_rate;
 pub mod minibatch;
 pub mod objective;
 pub mod predict;
+pub mod schedule;
 pub mod state;
+pub mod termination;
 pub mod truncated;
 
 pub use backend::{AssignBackend, NativeBackend};
@@ -41,7 +43,11 @@ pub use full_batch::{FullBatchConfig, FullBatchKernelKMeans};
 pub use learning_rate::LearningRate;
 pub use minibatch::{MiniBatchConfig, MiniBatchKernelKMeans};
 pub use predict::{KernelKMeansModel, StreamingKernelKMeans};
+pub use schedule::{BatchSchedule, FixedSchedule, NestedSchedule, ScheduleSpec};
 pub use state::{CenterWindow, LazyAssignState};
+pub use termination::{
+    EpsilonStopper, TerminationDecision, TerminationMode, VarianceTracker,
+};
 pub use truncated::{TruncatedConfig, TruncatedFit, TruncatedMiniBatchKernelKMeans};
 
 use crate::util::timing::Profiler;
@@ -61,6 +67,11 @@ pub struct FitResult {
     pub iterations: usize,
     /// True if the ε early-stopping condition fired (vs. hitting max_iters).
     pub converged: bool,
+    /// The ε stop rule's decision sequence, one entry per evaluated
+    /// iteration (empty when `epsilon` is `None` or the algorithm has no
+    /// stop rule). Replayable: feeding the recorded improvements back
+    /// through a fresh [`EpsilonStopper`] reproduces the decisions.
+    pub decisions: Vec<TerminationDecision>,
     /// Per-phase timing breakdown.
     pub profiler: Profiler,
 }

@@ -1,0 +1,290 @@
+//! Batch schedules: how many points each iteration samples, and which.
+//!
+//! The paper's experimental protocol uses a fixed batch size `b`. Nested
+//! (geometric-growth) schedules, in the spirit of Newling & Fleuret's
+//! nested mini-batch k-means (arXiv:1602.02934), instead start from a
+//! small `b₀` and grow the batch by a factor `g ≥ 1` each iteration,
+//! *reusing* the previous batch as a deterministic prefix of the next:
+//! early iterations are cheap and noisy, late iterations approach the
+//! full-batch gradient. Reuse is nearly free under the lazy
+//! generation-stamped assignment state ([`super::state::LazyAssignState`]):
+//! a carried point was refreshed last iteration, so its replay suffix is a
+//! single iteration's update-log entries.
+//!
+//! The contract pinned by `rust/tests/prop_schedule.rs`: a
+//! [`NestedSchedule`] with growth factor exactly 1 draws the identical
+//! index sequence from the identical RNG stream as [`FixedSchedule`], so a
+//! growth-1 nested fit is **bit-identical** to a fixed-b fit — same
+//! assignments, same objective bits, same RNG position afterwards.
+
+use crate::util::rng::Rng;
+
+/// A policy deciding each iteration's batch.
+///
+/// Implementations fill `batch` with indices in `[0, n)`; the fit loops in
+/// [`super::minibatch`] / [`super::truncated`] treat `batch.len()` as the
+/// iteration's effective `b` (learning rates, objective means, and the
+/// O(b²) moments all use it).
+pub trait BatchSchedule {
+    /// Fill `batch` for `iteration` (0-based). Must be deterministic in
+    /// `(self state, iteration, n, rng stream)`.
+    fn next_batch(&mut self, iteration: usize, n: usize, rng: &mut Rng, batch: &mut Vec<usize>);
+
+    /// Largest batch this schedule can ever produce for a dataset of `n`
+    /// points — used to pre-reserve iteration buffers.
+    fn max_batch(&self, n: usize) -> usize;
+
+    /// Short name for labels and reports.
+    fn name(&self) -> &'static str;
+}
+
+/// The paper's protocol: every iteration samples exactly `b` indices
+/// uniformly with repetitions.
+#[derive(Clone, Debug)]
+pub struct FixedSchedule {
+    b: usize,
+}
+
+impl FixedSchedule {
+    /// Fixed batch size `b` (clamped to `n` at sampling time).
+    pub fn new(b: usize) -> Self {
+        FixedSchedule { b }
+    }
+}
+
+impl BatchSchedule for FixedSchedule {
+    fn next_batch(&mut self, _iteration: usize, n: usize, rng: &mut Rng, batch: &mut Vec<usize>) {
+        let b = self.b.min(n.max(1)).max(1);
+        rng.sample_with_replacement_into(n, b, batch);
+    }
+
+    fn max_batch(&self, n: usize) -> usize {
+        self.b.min(n.max(1)).max(1)
+    }
+
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+}
+
+/// Geometric growth with deterministic sample reuse.
+///
+/// Iteration `i` targets `⌈b₀·gⁱ⌉` points (clamped to `[b₀, n]`). The
+/// batch is assembled as `fresh ++ carried`: `carried` is a prefix of the
+/// *previous* batch (up to `target − b₀` points), and `fresh = target −
+/// carried` new draws from the RNG. Two consequences:
+///
+/// * `g = 1` ⇒ `target = b₀`, `carried = 0`: the schedule makes exactly
+///   the same `sample_with_replacement_into(n, b₀, ·)` call as
+///   [`FixedSchedule`] — bit-identical fits, pinned by property test.
+/// * `g = 2` ⇒ the whole previous batch is carried and an equal number of
+///   fresh points joins it — true nesting `B₀ ⊂ B₁ ⊂ …` (as multisets).
+#[derive(Clone, Debug)]
+pub struct NestedSchedule {
+    b0: usize,
+    growth: f64,
+    prev: Vec<usize>,
+}
+
+impl NestedSchedule {
+    /// Start from `b0` and grow by `growth ≥ 1` per iteration.
+    pub fn new(b0: usize, growth: f64) -> Self {
+        assert!(
+            growth >= 1.0 && growth.is_finite(),
+            "nested growth factor must be a finite value ≥ 1, got {growth}"
+        );
+        NestedSchedule { b0, growth, prev: Vec::new() }
+    }
+
+    fn target(&self, iteration: usize, n: usize) -> usize {
+        let cap = n.max(1);
+        let b0 = self.b0.min(cap).max(1);
+        let t = b0 as f64 * self.growth.powi(iteration.min(i32::MAX as usize) as i32);
+        if !t.is_finite() || t >= cap as f64 {
+            cap
+        } else {
+            (t.ceil() as usize).clamp(b0, cap)
+        }
+    }
+}
+
+impl BatchSchedule for NestedSchedule {
+    fn next_batch(&mut self, iteration: usize, n: usize, rng: &mut Rng, batch: &mut Vec<usize>) {
+        let cap = n.max(1);
+        let b0 = self.b0.min(cap).max(1);
+        let target = self.target(iteration, n);
+        // Carry at most target − b₀ points so at least b₀ fresh draws
+        // happen every iteration (and none of the RNG stream is skipped
+        // relative to the fixed schedule when growth = 1).
+        let carry = (target - b0).min(self.prev.len());
+        let fresh = target - carry;
+        rng.sample_with_replacement_into(n, fresh, batch);
+        batch.extend_from_slice(&self.prev[..carry]);
+        self.prev.clear();
+        self.prev.extend_from_slice(batch);
+    }
+
+    fn max_batch(&self, n: usize) -> usize {
+        if self.growth > 1.0 {
+            n.max(1)
+        } else {
+            self.b0.min(n.max(1)).max(1)
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "nested"
+    }
+}
+
+/// Declarative schedule choice — what configs, CLI flags, and experiment
+/// specs carry; [`ScheduleSpec::build`] instantiates the stateful policy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ScheduleSpec {
+    /// Fixed batch size (the paper's protocol).
+    Fixed,
+    /// Geometric growth from the configured batch size with the given
+    /// per-iteration factor (≥ 1).
+    Nested {
+        /// Per-iteration growth factor `g ≥ 1`.
+        growth: f64,
+    },
+}
+
+impl Default for ScheduleSpec {
+    fn default() -> Self {
+        ScheduleSpec::Fixed
+    }
+}
+
+impl ScheduleSpec {
+    /// Parse a `--schedule` CLI value (`fixed` | `nested`), with `growth`
+    /// supplying the nested factor.
+    pub fn from_name(name: &str, growth: f64) -> ScheduleSpec {
+        match name {
+            "fixed" => ScheduleSpec::Fixed,
+            "nested" => ScheduleSpec::Nested { growth },
+            other => panic!("unknown schedule {other:?} (known: fixed, nested)"),
+        }
+    }
+
+    /// Instantiate the stateful policy for a base batch size.
+    pub fn build(&self, batch_size: usize) -> Box<dyn BatchSchedule> {
+        match *self {
+            ScheduleSpec::Fixed => Box::new(FixedSchedule::new(batch_size)),
+            ScheduleSpec::Nested { growth } => Box::new(NestedSchedule::new(batch_size, growth)),
+        }
+    }
+
+    /// Short label for run names and report rows, e.g. `fixed` or
+    /// `nested(g=2)`.
+    pub fn label(&self) -> String {
+        match *self {
+            ScheduleSpec::Fixed => "fixed".into(),
+            ScheduleSpec::Nested { growth } => format!("nested(g={growth})"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn draws(sched: &mut dyn BatchSchedule, n: usize, iters: usize, seed: u64) -> Vec<Vec<usize>> {
+        let mut rng = Rng::seeded(seed);
+        let mut out = Vec::new();
+        let mut batch = Vec::new();
+        for i in 0..iters {
+            sched.next_batch(i, n, &mut rng, &mut batch);
+            out.push(batch.clone());
+        }
+        out
+    }
+
+    #[test]
+    fn growth_one_matches_fixed_and_rng_position() {
+        let (n, b, iters, seed) = (500usize, 32usize, 12usize, 9u64);
+        let mut fixed = FixedSchedule::new(b);
+        let mut nested = NestedSchedule::new(b, 1.0);
+        let mut rf = Rng::seeded(seed);
+        let mut rn = Rng::seeded(seed);
+        let mut bf = Vec::new();
+        let mut bn = Vec::new();
+        for i in 0..iters {
+            fixed.next_batch(i, n, &mut rf, &mut bf);
+            nested.next_batch(i, n, &mut rn, &mut bn);
+            assert_eq!(bf, bn, "iteration {i} diverged");
+        }
+        // Identical RNG stream position afterwards.
+        assert_eq!(rf.next_u64(), rn.next_u64());
+    }
+
+    #[test]
+    fn growth_two_doubles_and_nests() {
+        let n = 10_000;
+        let batches = draws(&mut NestedSchedule::new(16, 2.0), n, 6, 3);
+        for (i, b) in batches.iter().enumerate() {
+            assert_eq!(b.len(), (16usize << i).min(n), "iteration {i}");
+        }
+        // The previous batch is carried verbatim as the suffix.
+        for w in batches.windows(2) {
+            let (prev, next) = (&w[0], &w[1]);
+            assert_eq!(&next[next.len() - prev.len()..], prev.as_slice());
+        }
+    }
+
+    #[test]
+    fn nested_clamps_at_n() {
+        let n = 100;
+        let batches = draws(&mut NestedSchedule::new(64, 2.0), n, 5, 1);
+        assert_eq!(batches[0].len(), 64);
+        for b in &batches[1..] {
+            assert_eq!(b.len(), n);
+        }
+        assert!(batches.iter().flatten().all(|&x| x < n));
+    }
+
+    #[test]
+    fn fractional_growth_is_monotone_and_bounded() {
+        let n = 5_000;
+        let batches = draws(&mut NestedSchedule::new(100, 1.3), n, 10, 7);
+        let mut last = 0;
+        for b in &batches {
+            assert!(b.len() >= last);
+            assert!(b.len() <= n);
+            last = b.len();
+        }
+        assert_eq!(batches[0].len(), 100);
+        assert_eq!(batches[1].len(), 130);
+    }
+
+    #[test]
+    fn huge_iteration_count_saturates_to_n() {
+        let mut s = NestedSchedule::new(8, 2.0);
+        assert_eq!(s.target(500, 1000), 1000);
+        let mut rng = Rng::seeded(2);
+        let mut batch = Vec::new();
+        s.next_batch(500, 1000, &mut rng, &mut batch);
+        assert_eq!(batch.len(), 1000);
+    }
+
+    #[test]
+    fn spec_roundtrip_and_labels() {
+        assert_eq!(ScheduleSpec::from_name("fixed", 2.0), ScheduleSpec::Fixed);
+        assert_eq!(
+            ScheduleSpec::from_name("nested", 1.5),
+            ScheduleSpec::Nested { growth: 1.5 }
+        );
+        assert_eq!(ScheduleSpec::default(), ScheduleSpec::Fixed);
+        assert_eq!(ScheduleSpec::Fixed.label(), "fixed");
+        assert_eq!(ScheduleSpec::Nested { growth: 2.0 }.label(), "nested(g=2)");
+        assert_eq!(ScheduleSpec::Fixed.build(64).name(), "fixed");
+        assert_eq!(ScheduleSpec::Nested { growth: 2.0 }.build(64).name(), "nested");
+    }
+
+    #[test]
+    #[should_panic(expected = "growth factor")]
+    fn growth_below_one_rejected() {
+        NestedSchedule::new(32, 0.5);
+    }
+}

@@ -1,0 +1,341 @@
+//! ε-termination: when has the mini-batch descent provably flattened?
+//!
+//! The paper terminates when the per-batch improvement
+//! `f_B(C_i) − f_B(C_{i+1})` drops below ε, and Theorem 1 bounds the
+//! number of such iterations by `O(γ²/ε)` (γ = sup‖φ(x)‖²; γ = 1 for
+//! normalized kernels such as the Gaussian). A single batch's improvement
+//! is however a *noisy estimate* of the population improvement — one
+//! lucky batch can fire the stop long before the descent has actually
+//! flattened. Following the windowed-estimator viewpoint of Schwartzman's
+//! O(d/ε) analysis (arXiv:2304.00419), [`TerminationMode::Confidence`]
+//! tracks the last `w` improvements in a [`VarianceTracker`] and stops
+//! only when the *upper confidence bound* `mean + z·sem` falls below ε —
+//! the estimator says, with the prescribed confidence, that the expected
+//! per-iteration improvement is now below ε.
+//!
+//! Every call to [`EpsilonStopper::observe`] records a
+//! [`TerminationDecision`], so the full decision sequence rides along in
+//! [`super::FitResult::decisions`] (and from there into
+//! `coordinator::experiment::RunOutcome`) — replayable and testable:
+//! feeding the recorded improvements back through a fresh stopper must
+//! reproduce the recorded decisions bit-for-bit.
+
+use std::collections::VecDeque;
+
+/// Default window width `w` for [`TerminationMode::Confidence`].
+pub const DEFAULT_WINDOW: usize = 8;
+
+/// Default confidence multiplier `z` (≈ 97.7% one-sided normal).
+pub const DEFAULT_CONFIDENCE_Z: f64 = 2.0;
+
+/// How `--epsilon` is interpreted.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TerminationMode {
+    /// Legacy rule: stop the first time a single batch's improvement is
+    /// below ε. Exact transcription of the pre-schedule-era loop (and of
+    /// the full-batch `prev_obj − obj < ε` rule), kept for bit-pinned
+    /// equivalence tests and full-batch runs where the improvement is not
+    /// a noisy estimate.
+    SingleBatch,
+    /// Windowed estimator with a confidence bound: stop when
+    /// `mean(last w improvements) + z·sem < ε`. Never fires on iteration
+    /// 0. The default for mini-batch `--epsilon` runs.
+    Confidence {
+        /// Window width `w ≥ 1` (number of recent improvements kept).
+        window: usize,
+        /// Confidence multiplier `z ≥ 0` on the standard error.
+        z: f64,
+    },
+}
+
+impl Default for TerminationMode {
+    fn default() -> Self {
+        TerminationMode::Confidence { window: DEFAULT_WINDOW, z: DEFAULT_CONFIDENCE_Z }
+    }
+}
+
+/// One recorded stop-rule evaluation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TerminationDecision {
+    /// 0-based iteration the decision was made at.
+    pub iteration: usize,
+    /// The raw batch improvement `f_B(C_i) − f_B(C_{i+1})` observed.
+    pub improvement: f64,
+    /// The estimator's point estimate of the expected improvement.
+    pub estimate: f64,
+    /// The upper confidence bound compared against ε.
+    pub upper: f64,
+    /// Whether the rule fired (the fit stopped after this iteration).
+    pub stop: bool,
+}
+
+/// Sliding-window mean/variance over the most recent improvements.
+///
+/// Values are kept explicitly (the window is small) so mean and sample
+/// variance are computed exactly, with no accumulated drift — important
+/// because the decision sequence is bit-pinned by tests.
+#[derive(Clone, Debug)]
+pub struct VarianceTracker {
+    window: usize,
+    values: VecDeque<f64>,
+}
+
+impl VarianceTracker {
+    /// Track the last `window` values (clamped to ≥ 1).
+    pub fn new(window: usize) -> Self {
+        let window = window.max(1);
+        VarianceTracker { window, values: VecDeque::with_capacity(window) }
+    }
+
+    /// Window width.
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    /// Push a value, evicting the oldest when full.
+    pub fn push(&mut self, v: f64) {
+        if self.values.len() == self.window {
+            self.values.pop_front();
+        }
+        self.values.push_back(v);
+    }
+
+    /// Number of values currently held.
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    /// True when no values have been observed yet.
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Window mean; NaN on an empty window.
+    pub fn mean(&self) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        self.values.iter().sum::<f64>() / self.values.len() as f64
+    }
+
+    /// Sample variance (n−1 denominator); 0 with fewer than two values.
+    pub fn variance(&self) -> f64 {
+        let n = self.values.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        self.values.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / (n - 1) as f64
+    }
+
+    /// Sample standard deviation; 0 with fewer than two values.
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Standard error of the mean `std/√n`; 0 with fewer than two values.
+    pub fn sem(&self) -> f64 {
+        if self.values.is_empty() {
+            return 0.0;
+        }
+        self.std() / (self.values.len() as f64).sqrt()
+    }
+}
+
+/// The stop rule driven by the fit loops: feed each iteration's batch
+/// improvement to [`EpsilonStopper::observe`]; it answers "stop now?" and
+/// records the decision.
+#[derive(Clone, Debug)]
+pub struct EpsilonStopper {
+    epsilon: f64,
+    mode: TerminationMode,
+    tracker: VarianceTracker,
+    decisions: Vec<TerminationDecision>,
+}
+
+impl EpsilonStopper {
+    /// Build a stopper for threshold ε under the given mode.
+    pub fn new(epsilon: f64, mode: TerminationMode) -> Self {
+        let window = match mode {
+            TerminationMode::SingleBatch => 1,
+            TerminationMode::Confidence { window, .. } => window,
+        };
+        EpsilonStopper {
+            epsilon,
+            mode,
+            tracker: VarianceTracker::new(window),
+            decisions: Vec::new(),
+        }
+    }
+
+    /// Observe iteration `iteration`'s improvement; returns true when the
+    /// fit should stop. Deterministic in the observation sequence alone —
+    /// no RNG, no thread-count dependence.
+    pub fn observe(&mut self, iteration: usize, improvement: f64) -> bool {
+        let (estimate, upper, stop) = match self.mode {
+            TerminationMode::SingleBatch => {
+                (improvement, improvement, improvement < self.epsilon)
+            }
+            TerminationMode::Confidence { z, .. } => {
+                self.tracker.push(improvement);
+                let estimate = self.tracker.mean();
+                let upper = estimate + z * self.tracker.sem();
+                // Needs at least two observations (or a full width-1
+                // window) before it may fire — so never on iteration 0.
+                let enough = self.tracker.len() >= self.tracker.window().min(2);
+                (estimate, upper, iteration >= 1 && enough && upper < self.epsilon)
+            }
+        };
+        self.decisions.push(TerminationDecision { iteration, improvement, estimate, upper, stop });
+        stop
+    }
+
+    /// Decisions recorded so far, one per observed iteration.
+    pub fn decisions(&self) -> &[TerminationDecision] {
+        &self.decisions
+    }
+
+    /// Consume the stopper, yielding the recorded decision sequence.
+    pub fn into_decisions(self) -> Vec<TerminationDecision> {
+        self.decisions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracker_empty_window() {
+        let t = VarianceTracker::new(4);
+        assert!(t.is_empty());
+        assert_eq!(t.len(), 0);
+        assert!(t.mean().is_nan());
+        assert_eq!(t.variance(), 0.0);
+        assert_eq!(t.sem(), 0.0);
+    }
+
+    #[test]
+    fn tracker_single_sample() {
+        // k = 1: one observation — mean is the value, spread is zero.
+        let mut t = VarianceTracker::new(4);
+        t.push(3.5);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.mean(), 3.5);
+        assert_eq!(t.variance(), 0.0);
+        assert_eq!(t.std(), 0.0);
+        assert_eq!(t.sem(), 0.0);
+    }
+
+    #[test]
+    fn tracker_zero_variance() {
+        let mut t = VarianceTracker::new(4);
+        for _ in 0..10 {
+            t.push(2.0);
+        }
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.mean(), 2.0);
+        assert_eq!(t.variance(), 0.0);
+        assert_eq!(t.sem(), 0.0);
+    }
+
+    #[test]
+    fn tracker_evicts_oldest_and_matches_exact_moments() {
+        let mut t = VarianceTracker::new(3);
+        for v in [10.0, 1.0, 2.0, 3.0] {
+            t.push(v);
+        }
+        // Window is now [1, 2, 3].
+        assert_eq!(t.len(), 3);
+        assert!((t.mean() - 2.0).abs() < 1e-15);
+        assert!((t.variance() - 1.0).abs() < 1e-15);
+        assert!((t.sem() - (1.0f64 / 3.0).sqrt()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn tracker_width_clamped_to_one() {
+        let mut t = VarianceTracker::new(0);
+        t.push(1.0);
+        t.push(5.0);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.mean(), 5.0);
+    }
+
+    #[test]
+    fn single_batch_matches_legacy_rule() {
+        let mut s = EpsilonStopper::new(1e-3, TerminationMode::SingleBatch);
+        assert!(!s.observe(0, 0.5));
+        assert!(!s.observe(1, 1e-3)); // not strictly below
+        assert!(s.observe(2, 0.5e-3));
+        let d = s.decisions();
+        assert_eq!(d.len(), 3);
+        assert!(d[2].stop && !d[1].stop && !d[0].stop);
+        assert_eq!(d[2].estimate, d[2].improvement);
+        assert_eq!(d[2].upper, d[2].improvement);
+    }
+
+    #[test]
+    fn confidence_never_fires_on_iteration_zero() {
+        let mut s = EpsilonStopper::new(f64::INFINITY, TerminationMode::default());
+        assert!(!s.observe(0, 0.0), "must not stop on iteration 0 even with ε = ∞");
+        assert!(!s.decisions()[0].stop);
+        assert!(s.observe(1, 0.0));
+    }
+
+    #[test]
+    fn confidence_waits_for_upper_bound() {
+        // Noisy positive improvements keep the upper bound above ε; only
+        // once the window flattens near zero does the rule fire.
+        let mode = TerminationMode::Confidence { window: 4, z: 2.0 };
+        let mut s = EpsilonStopper::new(1e-2, mode);
+        let mut stopped_at = None;
+        let seq = [1.0, 0.8, 0.5, 0.3, 0.2, 0.1, 1e-3, 1e-3, 1e-3, 1e-3, 1e-3];
+        for (i, &imp) in seq.iter().enumerate() {
+            if s.observe(i, imp) {
+                stopped_at = Some(i);
+                break;
+            }
+        }
+        let at = stopped_at.expect("should eventually stop");
+        // Needs the window to flush the large early improvements first.
+        assert!(at >= 8, "stopped too early at {at}");
+        let d = *s.decisions().last().unwrap();
+        assert!(d.stop && d.upper < 1e-2);
+    }
+
+    #[test]
+    fn confidence_single_value_window_behaves_like_single_batch_after_warmup() {
+        let mode = TerminationMode::Confidence { window: 1, z: 2.0 };
+        let mut s = EpsilonStopper::new(1e-3, mode);
+        assert!(!s.observe(0, 1e-9), "iteration 0 is always a continue");
+        assert!(s.observe(1, 1e-9));
+    }
+
+    #[test]
+    fn zero_variance_window_fires_exactly_at_threshold_crossing() {
+        let mode = TerminationMode::Confidence { window: 3, z: 2.0 };
+        let mut s = EpsilonStopper::new(1e-3, mode);
+        assert!(!s.observe(0, 5e-4));
+        // Second identical observation: mean 5e-4, sem 0 ⇒ upper 5e-4 < ε.
+        assert!(s.observe(1, 5e-4));
+    }
+
+    #[test]
+    fn replaying_recorded_improvements_reproduces_decisions() {
+        let mode = TerminationMode::Confidence { window: 5, z: 1.5 };
+        let mut s = EpsilonStopper::new(2e-2, mode);
+        let seq = [0.9, 0.4, 0.2, 0.05, 0.01, 0.012, 0.009, 0.011, 0.01, 0.01, 0.01];
+        for (i, &imp) in seq.iter().enumerate() {
+            if s.observe(i, imp) {
+                break;
+            }
+        }
+        let recorded = s.into_decisions();
+        let mut replay = EpsilonStopper::new(2e-2, mode);
+        for d in &recorded {
+            let stop = replay.observe(d.iteration, d.improvement);
+            assert_eq!(stop, d.stop);
+        }
+        assert_eq!(replay.decisions(), recorded.as_slice());
+    }
+}

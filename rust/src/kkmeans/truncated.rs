@@ -16,7 +16,9 @@
 use super::backend::{argmin_rows_into, AssignBackend, NativeBackend};
 use super::init::choose_centers;
 use super::learning_rate::{LearningRate, RateState};
+use super::schedule::ScheduleSpec;
 use super::state::CenterWindow;
+use super::termination::{EpsilonStopper, TerminationMode};
 use super::{FitResult, Init};
 use crate::kernels::KernelProvider;
 use crate::util::rng::Rng;
@@ -27,8 +29,12 @@ use crate::util::timing::{Profiler, Stopwatch};
 pub struct TruncatedConfig {
     /// Number of clusters.
     pub k: usize,
-    /// Batch size `b` (uniform with repetitions).
+    /// Batch size `b` (uniform with repetitions). Under a nested schedule
+    /// this is the starting size `b₀`.
     pub batch_size: usize,
+    /// Batch schedule: fixed-b (the paper's protocol) or nested geometric
+    /// growth with deterministic sample reuse.
+    pub schedule: ScheduleSpec,
     /// Truncation parameter τ: target number of support points per center.
     /// The paper sweeps τ ∈ {50, 100, 200, 300}; `usize::MAX` disables
     /// truncation (Algorithm 1 semantics, explicit representation).
@@ -37,6 +43,9 @@ pub struct TruncatedConfig {
     pub max_iters: usize,
     /// Early-stopping ε on batch improvement; `None` = fixed iterations.
     pub epsilon: Option<f64>,
+    /// How ε is interpreted (windowed confidence estimator by default;
+    /// [`TerminationMode::SingleBatch`] for the legacy one-batch rule).
+    pub termination: TerminationMode,
     /// Learning-rate schedule for the center updates.
     pub learning_rate: LearningRate,
     /// Center initialization method.
@@ -50,9 +59,11 @@ impl Default for TruncatedConfig {
         TruncatedConfig {
             k: 2,
             batch_size: 1024,
+            schedule: ScheduleSpec::Fixed,
             tau: 200,
             max_iters: 200,
             epsilon: None,
+            termination: TerminationMode::default(),
             learning_rate: LearningRate::Beta,
             init: Init::default(),
             weights: None,
@@ -102,10 +113,15 @@ impl TruncatedMiniBatchKernelKMeans {
     ) -> TruncatedFit {
         let n = gram.n();
         let k = self.cfg.k;
-        let b = self.cfg.batch_size.min(n.max(1));
         assert!(k >= 1 && k <= n);
         let weights = self.cfg.weights.as_deref();
         let mut prof = Profiler::new();
+        let mut schedule = self.cfg.schedule.build(self.cfg.batch_size);
+        let b_max = schedule.max_batch(n);
+        let mut stopper = self
+            .cfg
+            .epsilon
+            .map(|eps| EpsilonStopper::new(eps, self.cfg.termination));
 
         // ---- init ----------------------------------------------------------
         let sw = Stopwatch::start();
@@ -124,18 +140,19 @@ impl TruncatedMiniBatchKernelKMeans {
         // Buffers hoisted out of the iteration loop (§Perf): the distance
         // matrix, argmin outputs, member lists, and per-center weight
         // staging are reused across iterations.
-        let mut batch: Vec<usize> = Vec::with_capacity(b);
+        let mut batch: Vec<usize> = Vec::with_capacity(b_max);
         let mut dist: Vec<f64> = Vec::new();
-        let mut assign: Vec<usize> = Vec::with_capacity(b);
-        let mut mins: Vec<f64> = Vec::with_capacity(b);
+        let mut assign: Vec<usize> = Vec::with_capacity(b_max);
+        let mut mins: Vec<f64> = Vec::with_capacity(b_max);
         let mut members: Vec<Vec<usize>> = vec![Vec::new(); k];
         let mut pw: Vec<f64> = Vec::new();
 
-        for _iter in 0..self.cfg.max_iters {
+        for iter in 0..self.cfg.max_iters {
             iterations += 1;
             // ---- sample + assign (the Õ(kb²) hot path) ----------------------
             let sw = Stopwatch::start();
-            rng.sample_with_replacement_into(n, b, &mut batch);
+            schedule.next_batch(iter, n, rng, &mut batch);
+            let b = batch.len();
             backend.distances_into(gram, &batch, &mut centers, &mut dist);
             argmin_rows_into(&dist, k, &mut assign, &mut mins);
             let f_before = super::objective::weighted_mean(&batch, &mins, weights);
@@ -170,13 +187,13 @@ impl TruncatedMiniBatchKernelKMeans {
             prof.add("update", sw.secs());
 
             // ---- early stopping: f_B(Ĉ_i) − f_B(Ĉ_{i+1}) < ε ----------------
-            if let Some(eps) = self.cfg.epsilon {
+            if let Some(stopper) = stopper.as_mut() {
                 let sw = Stopwatch::start();
                 backend.distances_into(gram, &batch, &mut centers, &mut dist);
                 argmin_rows_into(&dist, k, &mut assign, &mut mins);
                 let f_after = super::objective::weighted_mean(&batch, &mins, weights);
                 prof.add("stopping", sw.secs());
-                if f_before - f_after < eps {
+                if stopper.observe(iter, f_before - f_after) {
                     converged = true;
                     break;
                 }
@@ -196,6 +213,7 @@ impl TruncatedMiniBatchKernelKMeans {
                 history,
                 iterations,
                 converged,
+                decisions: stopper.map(EpsilonStopper::into_decisions).unwrap_or_default(),
                 profiler: prof,
             },
             centers,
@@ -310,6 +328,24 @@ mod tests {
         for (a, b) in res1.history.iter().zip(res2.history.iter()) {
             assert!((a - b).abs() < 1e-8, "history diverged: {a} vs {b}");
         }
+    }
+
+    #[test]
+    fn nested_schedule_recovers_blobs() {
+        let ds = fixture(800);
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 20.0 });
+        let cfg = TruncatedConfig {
+            k: 3,
+            batch_size: 32,
+            schedule: crate::kkmeans::ScheduleSpec::Nested { growth: 2.0 },
+            tau: 200,
+            max_iters: 40,
+            ..Default::default()
+        };
+        let mut rng = Rng::seeded(9);
+        let res = TruncatedMiniBatchKernelKMeans::new(cfg).fit(&gram, &mut rng);
+        let score = ari(ds.labels.as_ref().unwrap(), &res.assignments);
+        assert!(score > 0.9, "ARI={score}");
     }
 
     #[test]

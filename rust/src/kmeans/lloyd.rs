@@ -107,7 +107,15 @@ impl KMeans {
         let sw = Stopwatch::start();
         let (assignments, objective) = assign_to_centers(ds, &centers, k);
         prof.add("finalize", sw.secs());
-        FitResult { assignments, objective, history, iterations, converged, profiler: prof }
+        FitResult {
+            assignments,
+            objective,
+            history,
+            iterations,
+            converged,
+            decisions: Vec::new(),
+            profiler: prof,
+        }
     }
 }
 

@@ -139,7 +139,15 @@ impl MiniBatchKMeans {
         let sw = Stopwatch::start();
         let (assignments, objective) = assign_to_centers(ds, &centers, k);
         prof.add("finalize", sw.secs());
-        FitResult { assignments, objective, history, iterations, converged, profiler: prof }
+        FitResult {
+            assignments,
+            objective,
+            history,
+            iterations,
+            converged,
+            decisions: Vec::new(),
+            profiler: prof,
+        }
     }
 }
 

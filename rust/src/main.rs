@@ -8,11 +8,12 @@
 //! mbkk serve-bench --model model.mbkk --secs 3   # sustained queries/sec
 //! mbkk figures --fig 1 --out results/    # regenerate a paper figure
 //! mbkk figures --all --quick             # the whole evaluation, reduced grid
+//! mbkk repro-speedup                     # reproduce the 10-100x claim (Table 1)
 //! mbkk gamma-table                       # paper Table 1
 //! mbkk info                              # datasets, artifacts, backends
 //! ```
 
-use mbkk::coordinator::{experiment, figures};
+use mbkk::coordinator::{experiment, figures, repro};
 use mbkk::data::registry;
 use mbkk::kkmeans::{AssignBackend, KernelKMeansModel};
 use mbkk::runtime;
@@ -32,6 +33,7 @@ fn main() -> Result<()> {
         Some("predict") => predict(&args),
         Some("serve-bench") => serve_bench(&args),
         Some("figures") => run_figures(&args),
+        Some("repro-speedup") => repro_speedup(&args),
         Some("gamma-table") => gamma_table(&args),
         Some("info") => info(&args),
         _ => {
@@ -48,6 +50,9 @@ fn main() -> Result<()> {
                  \x20     --algo NAME          full-kkm | [b]mb-kkm | [b]trunc-kkm | [b]mb-km | kmeans\n\
                  \x20     --kernel NAME        gaussian | knn | heat\n\
                  \x20     --k N --batch N --tau N --iters N --epsilon F --seed N\n\
+                 \x20     --schedule NAME      fixed | nested (geometric batch growth\n\
+                 \x20                          with deterministic sample reuse)\n\
+                 \x20     --growth F           nested growth factor >= 1 (default 2)\n\
                  \x20     --scale F            dataset size multiplier (default 0.25)\n\
                  \x20     --backend NAME       native | xla (needs `make artifacts`)\n\
                  \x20     --stream             never materialize the n×n gram: stream kernel\n\
@@ -74,6 +79,13 @@ fn main() -> Result<()> {
                  \x20 figures                  regenerate paper figures (CSV+md under --out)\n\
                  \x20     --fig N | --all      figure id 1..13\n\
                  \x20     --scale F --repeats N --iters N --quick --out DIR\n\
+                 \x20 repro-speedup            reproduce the paper's 10-100x speedup claim:\n\
+                 \x20                          full-batch vs mini-batch (fixed + nested\n\
+                 \x20                          schedules) under a shared epsilon; writes the\n\
+                 \x20                          deterministic table + timings under --out\n\
+                 \x20     --datasets LIST      registry names (default: paper proxies)\n\
+                 \x20     --scale F --seed N --batch N --tau N --iters N\n\
+                 \x20     --epsilon F --growth F --out DIR (default results/repro)\n\
                  \x20 gamma-table              paper Table 1 (γ per dataset × kernel)\n\
                  \x20 info                     environment, datasets, artifacts\n",
                 mbkk::VERSION,
@@ -95,6 +107,7 @@ fn quickstart(args: &Args) -> Result<()> {
         algo: experiment::AlgoSpec::TruncKkm(mbkk::kkmeans::LearningRate::Beta),
         k: 5,
         batch_size: 256,
+        schedule: mbkk::kkmeans::ScheduleSpec::Fixed,
         tau: 100,
         max_iters: 100,
         epsilon: Some(1e-3),
@@ -148,6 +161,13 @@ fn resolve_dataset(
     }
 }
 
+/// Parse the shared `--schedule` / `--growth` flags (used by `run` and
+/// `fit`).
+fn schedule_from_args(args: &Args) -> mbkk::kkmeans::ScheduleSpec {
+    let growth = args.get_parse_or("growth", 2.0f64);
+    mbkk::kkmeans::ScheduleSpec::from_name(&args.get_or("schedule", "fixed"), growth)
+}
+
 fn run(args: &Args) -> Result<()> {
     let algo = experiment::AlgoSpec::from_name(&args.get_or("algo", "btrunc-kkm"));
     let kernel = experiment::KernelSpec::from_name(&args.get_or("kernel", "gaussian"));
@@ -166,6 +186,7 @@ fn run(args: &Args) -> Result<()> {
         algo,
         k: k_opt.unwrap_or(0), // filled below
         batch_size: args.get_parse_or("batch", 1024usize),
+        schedule: schedule_from_args(args),
         tau: args.get_parse_or("tau", 200usize),
         max_iters: args.get_parse_or("iters", 200usize),
         epsilon: args.get("epsilon").map(|e| e.parse().expect("--epsilon")),
@@ -258,9 +279,11 @@ fn run_with_xla_backend(
     let cfg = TruncatedConfig {
         k: spec.k,
         batch_size: spec.batch_size,
+        schedule: spec.schedule,
         tau: spec.tau,
         max_iters: spec.max_iters,
         epsilon: spec.epsilon,
+        termination: mbkk::kkmeans::TerminationMode::default(),
         learning_rate: lr,
         init: mbkk::kkmeans::Init::KMeansPlusPlus,
         weights: None,
@@ -290,6 +313,7 @@ fn run_with_xla_backend(
         cluster_secs,
         kernel_secs: 0.0,
         gamma: gram.gamma(),
+        decisions: fit.result.decisions,
         profiler: fit.result.profiler,
     })
 }
@@ -314,6 +338,7 @@ fn fit(args: &Args) -> Result<()> {
         algo,
         k: 0, // filled below
         batch_size: args.get_parse_or("batch", 1024usize),
+        schedule: schedule_from_args(args),
         tau: args.get_parse_or("tau", 200usize),
         max_iters: args.get_parse_or("iters", 200usize),
         epsilon: args.get("epsilon").map(|e| e.parse().expect("--epsilon")),
@@ -462,6 +487,7 @@ fn serve_bench(args: &Args) -> Result<()> {
                 algo: experiment::AlgoSpec::TruncKkm(mbkk::kkmeans::LearningRate::Beta),
                 k: ds.num_classes().max(2),
                 batch_size: 256,
+                schedule: mbkk::kkmeans::ScheduleSpec::Fixed,
                 tau: 100,
                 max_iters: 60,
                 epsilon: None,
@@ -544,6 +570,32 @@ fn gamma_table(args: &Args) -> Result<()> {
     args.finish();
     let md = figures::run_gamma_table(scale, seed, Some(Path::new(&out_dir)))?;
     println!("{md}");
+    Ok(())
+}
+
+/// `repro-speedup`: the paper-reproduction preset. Runs full-batch vs
+/// mini-batch (fixed and nested schedules) across the registry proxies
+/// under a shared ε and writes the Table-1-style artifacts.
+fn repro_speedup(args: &Args) -> Result<()> {
+    let mut opts = repro::ReproOptions::default();
+    opts.datasets = args.get_list("datasets", &opts.datasets);
+    opts.scale = args.get_parse_or("scale", opts.scale);
+    opts.seed = args.get_parse_or("seed", opts.seed);
+    opts.batch_size = args.get_parse_or("batch", opts.batch_size);
+    opts.tau = args.get_parse_or("tau", opts.tau);
+    opts.max_iters = args.get_parse_or("iters", opts.max_iters);
+    opts.epsilon = args.get_parse_or("epsilon", opts.epsilon);
+    opts.growth = args.get_parse_or("growth", opts.growth);
+    let out_dir = args.get_or("out", "results/repro");
+    args.finish();
+
+    let rows = repro::run_repro(&opts);
+    repro::write_artifacts(Path::new(&out_dir), &rows)?;
+    println!("{}", repro::to_markdown(&rows));
+    println!(
+        "wrote {out_dir}/repro_speedup.csv (deterministic), \
+         repro_speedup_timings.csv, repro_speedup.md"
+    );
     Ok(())
 }
 

@@ -47,6 +47,7 @@ fn registry_datasets_cluster_above_chance() {
             algo: AlgoSpec::TruncKkm(LearningRate::Beta),
             k: registry::default_k(name),
             batch_size: 128,
+            schedule: mbkk::kkmeans::ScheduleSpec::Fixed,
             tau: 100,
             max_iters: 60,
             epsilon: None,

@@ -24,7 +24,10 @@ use mbkk::kkmeans::backend::argmin_rows;
 use mbkk::kkmeans::init::choose_centers;
 use mbkk::kkmeans::learning_rate::RateState;
 use mbkk::kkmeans::objective::weighted_mean;
-use mbkk::kkmeans::{Init, LearningRate, MiniBatchConfig, MiniBatchKernelKMeans};
+use mbkk::kkmeans::{
+    EpsilonStopper, Init, LearningRate, MiniBatchConfig, MiniBatchKernelKMeans, ScheduleSpec,
+    TerminationMode,
+};
 use mbkk::testutil::prop::{check_with_seed, from_fn};
 use mbkk::util::rng::Rng;
 
@@ -68,8 +71,11 @@ fn eager_fit(
     let mut have_assignment = false;
     let mut iterations = 0;
     let mut converged = false;
+    // The eager reference drives the same windowed stopping rule as the
+    // crate default, so the ε path stays bit-comparable.
+    let mut stopper = epsilon.map(|eps| EpsilonStopper::new(eps, TerminationMode::default()));
 
-    for _iter in 0..max_iters {
+    for iter in 0..max_iters {
         iterations += 1;
         let batch = rng.sample_with_replacement(n, b);
         let mut batch_dist = vec![0.0f64; b * k];
@@ -173,10 +179,10 @@ fn eager_fit(
         }
         have_assignment = true;
 
-        if let Some(eps) = epsilon {
+        if let Some(stopper) = stopper.as_mut() {
             let mins_after: Vec<f64> = batch.iter().map(|&x| mins_all[x]).collect();
             let f_after = weighted_mean(&batch, &mins_after, weights);
-            if f_before - f_after < eps {
+            if stopper.observe(iter, f_before - f_after) {
                 converged = true;
                 break;
             }
@@ -222,8 +228,10 @@ fn assert_lazy_equals_eager(
     let cfg = MiniBatchConfig {
         k,
         batch_size: b,
+        schedule: ScheduleSpec::Fixed,
         max_iters,
         epsilon,
+        termination: TerminationMode::default(),
         learning_rate: lr,
         init,
         weights: weights.map(|w| w.to_vec()),
@@ -314,7 +322,8 @@ fn lazy_equals_eager_across_rates_weights_and_providers() {
 fn lazy_equals_eager_with_early_stopping() {
     // The ε path re-scores the batch after the update: the lazy state
     // replays that iteration's log entries; the eager sweep read its
-    // maintained post-update mins. Same bits, same stopping iteration.
+    // maintained post-update mins. Both sides feed the same windowed
+    // stopper, so: same bits, same stopping iteration.
     let ds = dataset(5, 160);
     let mat = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 8.0 }).materialize();
     for (seed, eps) in [(3u64, 1e-3), (9, 1e-2), (11, 1e-6)] {

@@ -53,6 +53,7 @@ fn fit_roster(gram: &dyn KernelProvider, seed: u64, b: usize, tau: usize) -> Vec
             learning_rate: lr,
             init: Init::KMeansPlusPlus,
             weights: None,
+            ..Default::default()
         };
         let mut rng = Rng::seeded(seed);
         let fit = MiniBatchKernelKMeans::new(cfg).fit(gram, &mut rng);
@@ -68,6 +69,7 @@ fn fit_roster(gram: &dyn KernelProvider, seed: u64, b: usize, tau: usize) -> Vec
             learning_rate: LearningRate::Beta,
             init: Init::KMeansPlusPlus,
             weights: None,
+            ..Default::default()
         };
         let mut rng = Rng::seeded(seed ^ 0x7A0);
         let fit = TruncatedMiniBatchKernelKMeans::new(cfg).fit(gram, &mut rng);
@@ -171,6 +173,7 @@ fn streaming_memory_stays_bounded_during_a_fit() {
         learning_rate: LearningRate::Beta,
         init: Init::KMeansPlusPlus,
         weights: None,
+        ..Default::default()
     };
     let mut rng = Rng::seeded(1);
     let fit = TruncatedMiniBatchKernelKMeans::new(cfg).fit(&cached, &mut rng);

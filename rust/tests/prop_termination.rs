@@ -1,0 +1,160 @@
+//! ε-termination properties (ISSUE 6 satellite 2).
+//!
+//! The windowed confidence stopper must be a *deterministic function of
+//! the seed*: the stop iteration may not depend on the kernel provider or
+//! on the worker-pool size. `num_threads()` latches `MBKK_THREADS` once
+//! per process, so the thread-count property re-executes this test binary
+//! as a subprocess per thread count (`MBKK_TERM_CHILD` gate) and compares
+//! the printed stop iteration + objective bits.
+//!
+//! Also pinned here: for ε > 0 the fit terminates within the ceiling on a
+//! well-separated dataset; the rule never fires on iteration 0 even with
+//! ε = ∞; and the recorded decision sequence replays exactly through a
+//! fresh [`EpsilonStopper`].
+
+use mbkk::data::synthetic::{blobs, SyntheticSpec};
+use mbkk::data::Dataset;
+use mbkk::kernels::{CachedGram, Gram, KernelFunction, KernelProvider};
+use mbkk::kkmeans::{
+    EpsilonStopper, FitResult, MiniBatchConfig, MiniBatchKernelKMeans, TerminationMode,
+};
+use mbkk::util::rng::Rng;
+
+fn dataset(seed: u64, n: usize) -> Dataset {
+    let mut rng = Rng::seeded(seed ^ 0x7E);
+    blobs(
+        &SyntheticSpec::new(n, 4, 3).with_std(0.5).with_separation(5.0),
+        &mut rng,
+    )
+}
+
+fn eps_fit(gram: &dyn KernelProvider, seed: u64, epsilon: f64, max_iters: usize) -> FitResult {
+    let cfg = MiniBatchConfig {
+        k: 3,
+        batch_size: 64,
+        max_iters,
+        epsilon: Some(epsilon),
+        ..Default::default()
+    };
+    let mut rng = Rng::seeded(seed);
+    MiniBatchKernelKMeans::new(cfg).fit(gram, &mut rng)
+}
+
+#[test]
+fn stop_iteration_is_invariant_to_provider() {
+    // Same seed ⇒ same stop iteration and identical decision sequences on
+    // the on-the-fly, materialized, and streaming providers.
+    let ds = dataset(3, 300);
+    let fly = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 8.0 });
+    let mat = fly.materialize();
+    let cached = CachedGram::new(
+        Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 8.0 }),
+        256 * 1024,
+    );
+    for seed in [1u64, 7, 19] {
+        let a = eps_fit(&fly, seed, 1e-2, 400);
+        let b = eps_fit(&mat, seed, 1e-2, 400);
+        let c = eps_fit(&cached, seed, 1e-2, 400);
+        assert_eq!(a.iterations, b.iterations, "seed {seed}: fly vs materialized");
+        assert_eq!(a.iterations, c.iterations, "seed {seed}: fly vs streaming");
+        assert_eq!(a.converged, b.converged);
+        assert_eq!(a.converged, c.converged);
+        assert_eq!(a.decisions, b.decisions, "seed {seed}: decision sequences diverged");
+        assert_eq!(a.decisions, c.decisions, "seed {seed}: decision sequences diverged");
+    }
+}
+
+#[test]
+fn terminates_within_ceiling_for_positive_epsilon() {
+    // On a well-separated dataset the improvement stream dries up, so the
+    // windowed rule must fire well before a generous ceiling.
+    let ds = dataset(11, 300);
+    let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 8.0 });
+    let fit = eps_fit(&gram, 5, 1e-2, 400);
+    assert!(fit.converged, "ε rule never fired in 400 iterations");
+    assert!(fit.iterations < 400);
+    // Decision bookkeeping: one decision per executed iteration, only the
+    // last one stops.
+    assert_eq!(fit.decisions.len(), fit.iterations);
+    assert!(fit.decisions.last().unwrap().stop);
+    assert!(fit.decisions[..fit.iterations - 1].iter().all(|d| !d.stop));
+}
+
+#[test]
+fn never_fires_on_iteration_zero_even_with_infinite_epsilon() {
+    // ε = ∞ makes the threshold trivially satisfiable; the rule still may
+    // not stop before it has a second sample, so the earliest stop is
+    // iteration 1 (two iterations executed).
+    let ds = dataset(13, 200);
+    let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 8.0 });
+    let fit = eps_fit(&gram, 9, f64::INFINITY, 50);
+    assert!(!fit.decisions[0].stop, "stopped on iteration 0");
+    assert!(fit.converged);
+    assert_eq!(fit.iterations, 2);
+}
+
+#[test]
+fn decision_sequence_replays_through_a_fresh_stopper() {
+    // The recorded (iteration, improvement) stream fed into a fresh
+    // stopper with the same mode must reproduce every decision bitwise —
+    // the RunOutcome decision log is a complete replay transcript.
+    let ds = dataset(17, 250);
+    let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 8.0 });
+    let fit = eps_fit(&gram, 23, 1e-2, 400);
+    assert!(!fit.decisions.is_empty());
+    let mut replay = EpsilonStopper::new(1e-2, TerminationMode::default());
+    for d in &fit.decisions {
+        replay.observe(d.iteration, d.improvement);
+    }
+    assert_eq!(replay.decisions(), fit.decisions.as_slice());
+}
+
+/// Child half of the thread-invariance property: only runs when re-exec'd
+/// by `stop_iteration_is_invariant_to_thread_count` with the gate set
+/// (`MBKK_THREADS` is latched once per process, so each thread count needs
+/// its own process).
+#[test]
+fn child_fit_for_thread_invariance() {
+    if std::env::var("MBKK_TERM_CHILD").is_err() {
+        return;
+    }
+    let ds = dataset(29, 300);
+    let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 8.0 });
+    let fit = eps_fit(&gram, 31, 1e-2, 400);
+    println!(
+        "MBKK_TERM_RESULT iters={} converged={} obj={:016x} threads={}",
+        fit.iterations,
+        fit.converged,
+        fit.objective.to_bits(),
+        mbkk::util::parallel::num_threads(),
+    );
+}
+
+#[test]
+fn stop_iteration_is_invariant_to_thread_count() {
+    let exe = std::env::current_exe().expect("current_exe");
+    let mut results = Vec::new();
+    for threads in ["1", "2", "4"] {
+        let out = std::process::Command::new(&exe)
+            .args(["child_fit_for_thread_invariance", "--exact", "--nocapture"])
+            .env("MBKK_TERM_CHILD", "1")
+            .env("MBKK_THREADS", threads)
+            .output()
+            .expect("spawn child test");
+        assert!(out.status.success(), "child (threads={threads}) failed");
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        let line = stdout
+            .lines()
+            .find(|l| l.starts_with("MBKK_TERM_RESULT"))
+            .unwrap_or_else(|| panic!("no result line (threads={threads}):\n{stdout}"))
+            .to_string();
+        // Strip the reported thread count before comparing: everything
+        // else (stop iteration, convergence flag, objective bits) must be
+        // identical across pool sizes.
+        let (head, tail) = line.rsplit_once(" threads=").expect("threads field");
+        assert_eq!(tail, threads, "MBKK_THREADS not honored: {line}");
+        results.push(head.to_string());
+    }
+    assert_eq!(results[0], results[1], "1 vs 2 threads diverged");
+    assert_eq!(results[0], results[2], "1 vs 4 threads diverged");
+}
