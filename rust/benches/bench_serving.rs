@@ -1,0 +1,223 @@
+//! Serving SLO benchmarks (ISSUE 7): end-to-end latency of the zero-dep
+//! HTTP prediction service under concurrent clients, plus the lazy-scan
+//! vs full-tree JSON parsing cost on the request hot path.
+//!
+//! Starts an in-process [`Server`] on a loopback ephemeral port, drives it
+//! with 4 keep-alive client threads at three request mixes (1 / 8 / 64
+//! rows), and records p50 / p99 latency and mean seconds-per-request for
+//! each mix. The coalescing counters printed at the end show batches <
+//! requests — the admission queue's whole point.
+//!
+//! Merges its samples into the repo-root `BENCH_baseline.json` perf
+//! trajectory (suite "serving SLO").
+//!
+//! ```bash
+//! RUSTFLAGS="-C target-cpu=native" cargo bench --bench bench_serving
+//! ```
+//!
+//! `MBKK_BENCH_SCALE` shrinks the request count for smoke runs (CI uses
+//! 0.1); `MBKK_BENCH_SECS` bounds the two parse micro-benches.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Barrier, Mutex};
+use std::time::Instant;
+
+use mbkk::bench::BenchRunner;
+use mbkk::data::synthetic::{blobs, SyntheticSpec};
+use mbkk::data::Dataset;
+use mbkk::kernels::{Gram, KernelFunction};
+use mbkk::kkmeans::{
+    KernelKMeansModel, NativeBackend, TruncatedConfig, TruncatedMiniBatchKernelKMeans,
+};
+use mbkk::serve::http::{ServeConfig, Server};
+use mbkk::util::json::{lazy, Json};
+use mbkk::util::rng::Rng;
+
+/// Concurrent keep-alive clients driving each mix (matches the CI e2e job).
+const CLIENT_THREADS: usize = 4;
+
+/// Minimal blocking HTTP/1.1 client: one keep-alive connection, enough
+/// response parsing to frame bodies by Content-Length. Deliberately tiny —
+/// the server under test is the thing being measured.
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: &str) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect to bench server");
+        stream.set_nodelay(true).ok();
+        let writer = stream.try_clone().expect("clone stream");
+        Client { reader: BufReader::new(stream), writer }
+    }
+
+    /// POST `body` to /v1/predict and return the response's `rows` count.
+    fn predict(&mut self, body: &str) -> usize {
+        let head = format!(
+            "POST /v1/predict HTTP/1.1\r\nHost: bench\r\n\
+             Content-Type: application/json\r\nContent-Length: {}\r\n\r\n",
+            body.len()
+        );
+        self.writer.write_all(head.as_bytes()).expect("write head");
+        self.writer.write_all(body.as_bytes()).expect("write body");
+        let mut status = String::new();
+        self.reader.read_line(&mut status).expect("status line");
+        assert!(status.starts_with("HTTP/1.1 200"), "unexpected response: {status}");
+        let mut content_length = 0usize;
+        loop {
+            let mut line = String::new();
+            self.reader.read_line(&mut line).expect("header line");
+            let lower = line.trim().to_ascii_lowercase();
+            if lower.is_empty() {
+                break;
+            }
+            if let Some(v) = lower.strip_prefix("content-length:") {
+                content_length = v.trim().parse().expect("content-length");
+            }
+        }
+        let mut resp = vec![0u8; content_length];
+        self.reader.read_exact(&mut resp).expect("response body");
+        let json = Json::parse(std::str::from_utf8(&resp).expect("utf-8")).expect("json");
+        json.get("rows").as_usize().unwrap_or(0)
+    }
+}
+
+/// Serialize rows `0..rows` of `ds` as a `/v1/predict` request body, using
+/// `{}` formatting (shortest round-trip) so the wire text re-parses to the
+/// exact same f32 bits.
+fn points_body(ds: &Dataset, rows: usize) -> String {
+    let mut s = String::from("{\"points\": [");
+    for i in 0..rows {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push('[');
+        for (j, v) in ds.row(i % ds.n).iter().enumerate() {
+            if j > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!("{v}"));
+        }
+        s.push(']');
+    }
+    s.push_str("]}");
+    s
+}
+
+/// Drive one request mix with [`CLIENT_THREADS`] concurrent keep-alive
+/// clients and record p50 / p99 / mean latency samples.
+fn drive_mix(runner: &mut BenchRunner, addr: &str, rows: usize, body: &str, per_thread: usize) {
+    let latencies = Arc::new(Mutex::new(Vec::new()));
+    let barrier = Arc::new(Barrier::new(CLIENT_THREADS));
+    let started = Instant::now();
+    std::thread::scope(|scope| {
+        for _ in 0..CLIENT_THREADS {
+            let latencies = Arc::clone(&latencies);
+            let barrier = Arc::clone(&barrier);
+            scope.spawn(move || {
+                let mut client = Client::connect(addr);
+                let mut local = Vec::with_capacity(per_thread);
+                barrier.wait();
+                for _ in 0..per_thread {
+                    let t = Instant::now();
+                    let got = client.predict(body);
+                    local.push(t.elapsed().as_secs_f64());
+                    assert_eq!(got, rows, "response rows mismatch");
+                }
+                latencies.lock().expect("latencies").extend(local);
+            });
+        }
+    });
+    let wall = started.elapsed().as_secs_f64();
+    let mut lat = latencies.lock().expect("latencies").clone();
+    lat.sort_by(|a, b| a.total_cmp(b));
+    let total = lat.len();
+    let p50 = lat[total / 2];
+    let p99 = lat[(total * 99 / 100).min(total - 1)];
+    let mean = lat.iter().sum::<f64>() / total as f64;
+    let unit = if rows == 1 { "row" } else { "rows" };
+    runner.record(&format!("p50 latency mix={rows} {unit}"), p50);
+    runner.record(&format!("p99 latency mix={rows} {unit}"), p99);
+    runner.record(&format!("seconds/request mix={rows} {unit}"), mean);
+    println!(
+        "  -> mix={rows} {unit}: {total} requests from {CLIENT_THREADS} clients, {:.0} req/s",
+        total as f64 / wall
+    );
+}
+
+fn main() {
+    let mut runner = BenchRunner::new("serving SLO");
+    let scale: f64 = std::env::var("MBKK_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+    let n = ((3000.0 * scale) as usize).max(512);
+    let d = 16;
+    let mut rng = Rng::seeded(23);
+    let ds = blobs(&SyntheticSpec::new(n, d, 8), &mut rng);
+    let kernel = KernelFunction::Gaussian { kappa: d as f64 };
+    let gram = Gram::on_the_fly(&ds, kernel);
+    let mut fit_rng = Rng::seeded(7);
+    let mut fit = TruncatedMiniBatchKernelKMeans::new(TruncatedConfig {
+        k: 8,
+        batch_size: 256,
+        tau: 100,
+        max_iters: 20,
+        ..Default::default()
+    })
+    .fit_with_backend(&gram, &mut NativeBackend, &mut fit_rng);
+    let model = KernelKMeansModel::freeze(&ds, kernel, &mut fit.centers);
+    println!(
+        "  [setup] d={d}: {} support points x {} centers",
+        model.support_points(),
+        model.k()
+    );
+
+    let cfg = ServeConfig { addr: "127.0.0.1:0".to_string(), ..Default::default() };
+    let server = Server::bind(&model, "bench", &cfg).expect("bind bench server");
+    let addr = server.local_addr().expect("local addr").to_string();
+    let shutdown = server.shutdown_flag();
+    let handle = std::thread::spawn(move || server.run().expect("serve"));
+
+    let per_thread = ((400.0 * scale) as usize).max(25);
+    for &rows in &[1usize, 8, 64] {
+        let body = points_body(&ds, rows);
+        drive_mix(&mut runner, &addr, rows, &body, per_thread);
+    }
+    shutdown.store(true, Ordering::SeqCst);
+    let stats = handle.join().expect("server thread");
+    println!(
+        "  [coalescing] {} requests in {} batches ({} coalesced batches, {} rows total)",
+        stats.requests, stats.batches, stats.coalesced_batches, stats.rows
+    );
+    assert!(stats.batches <= stats.requests, "batches can never exceed requests");
+
+    // Request-parsing micro-benches: the lazy offset scanner the service
+    // uses vs the full-tree parse it rejected (ADR-003).
+    let parse_body = points_body(&ds, 64);
+    runner.bench("parse 64x16 points lazy scan", || {
+        let fields = lazy::fields(parse_body.as_bytes(), &["points"]).expect("scan");
+        fields[0].as_ref().expect("points present").parse_points().expect("points")
+    });
+    runner.bench("parse 64x16 points full tree", || {
+        let tree = Json::parse(&parse_body).expect("parse");
+        let rows = tree.get("points").as_arr().expect("points array");
+        let mut features = Vec::with_capacity(rows.len() * 16);
+        for row in rows {
+            for v in row.as_arr().expect("row array") {
+                features.push(v.as_f64().expect("number") as f32);
+            }
+        }
+        features
+    });
+    let ratio = runner.ratio("parse 64x16 points full tree", "parse 64x16 points lazy scan");
+    if let Some(r) = ratio {
+        println!("  -> lazy scan {r:.2}x faster than full-tree parse");
+    }
+
+    runner.write_csv();
+    runner.write_baseline(&BenchRunner::baseline_path());
+}

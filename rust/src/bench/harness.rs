@@ -209,6 +209,12 @@ impl BenchRunner {
         if let Some(note) = root.get("note").as_str() {
             fields.push(("note", Json::Str(note.to_string())));
         }
+        // Keep the per-suite notes: each states what its suite models and
+        // the shared estimated-vs-measured provenance convention. They are
+        // authored in the committed file, never machine-written.
+        if let Json::Obj(notes) = root.get("suite_notes") {
+            fields.push(("suite_notes", Json::Obj(notes.clone())));
+        }
         fields.push((
             "provenance",
             Json::Str(
@@ -308,6 +314,7 @@ mod tests {
         std::fs::write(
             &path,
             r#"{"schema": 1, "note": "seed origin", "provenance": "estimated-seed",
+                "suite_notes": {"other": "what the suite models"},
                 "suites": {"other": {"guess": {"provenance": "estimated-seed",
                 "iters": 0, "mean_s": 0.5}}}}"#,
         )
@@ -320,6 +327,10 @@ mod tests {
         // top level reports the mix honestly.
         assert_eq!(root.get("provenance").as_str(), Some("partially-measured"));
         assert_eq!(root.get("note").as_str(), Some("seed origin"));
+        assert_eq!(
+            root.get("suite_notes").get("other").as_str(),
+            Some("what the suite models")
+        );
         let guess = root.get("suites").get("other").get("guess");
         assert_eq!(guess.get("provenance").as_str(), Some("estimated-seed"));
         assert_eq!(

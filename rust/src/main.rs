@@ -6,6 +6,7 @@
 //! mbkk fit --dataset blobs --out model.mbkk      # train + persist a model
 //! mbkk predict --model model.mbkk --dataset blobs # load + batch-score
 //! mbkk serve-bench --model model.mbkk --secs 3   # sustained queries/sec
+//! mbkk serve --model model.mbkk --port 8605      # HTTP prediction service
 //! mbkk figures --fig 1 --out results/    # regenerate a paper figure
 //! mbkk figures --all --quick             # the whole evaluation, reduced grid
 //! mbkk repro-speedup                     # reproduce the 10-100x claim (Table 1)
@@ -32,6 +33,7 @@ fn main() -> Result<()> {
         Some("fit") => fit(&args),
         Some("predict") => predict(&args),
         Some("serve-bench") => serve_bench(&args),
+        Some("serve") => serve(&args),
         Some("figures") => run_figures(&args),
         Some("repro-speedup") => repro_speedup(&args),
         Some("gamma-table") => gamma_table(&args),
@@ -76,6 +78,13 @@ fn main() -> Result<()> {
                  \x20 serve-bench              sustained queries/sec loop over a model\n\
                  \x20     --model PATH         artifact (fits one on the fly if omitted)\n\
                  \x20     --secs F --batch-queries N --no-baseline\n\
+                 \x20 serve                    HTTP prediction service (docs/API.md):\n\
+                 \x20                          POST /v1/predict, GET /v1/models, GET /healthz\n\
+                 \x20     --model PATH         artifact (fits one on the fly if omitted)\n\
+                 \x20     --addr HOST --port N bind address (127.0.0.1:8605; port 0 = any free)\n\
+                 \x20     --max-wait-us N      request-coalescing deadline in us (2000)\n\
+                 \x20     --max-batch N        coalescing flush threshold in rows (512)\n\
+                 \x20     --max-body-mb N      request body cap in MiB (8)\n\
                  \x20 figures                  regenerate paper figures (CSV+md under --out)\n\
                  \x20     --fig N | --all      figure id 1..13\n\
                  \x20     --scale F --repeats N --iters N --quick --out DIR\n\
@@ -538,6 +547,106 @@ fn serve_bench(args: &Args) -> Result<()> {
     }
     Ok(())
 }
+
+/// `serve`: the zero-dependency HTTP prediction service over a fitted
+/// model (docs/API.md; DESIGN.md §11). SIGINT/SIGTERM set the shutdown
+/// flag; the accept loop drains in-flight connections and exits 0.
+fn serve(args: &Args) -> Result<()> {
+    let model_path = args.get("model").map(|s| s.to_string());
+    let dataset = args.get_or("dataset", "blobs");
+    let scale = args.get_parse_or("scale", 0.25f64);
+    let seed = args.get_parse_or("seed", 7u64);
+    let addr = args.get_or("addr", "127.0.0.1");
+    let port = args.get_parse_or("port", 8605u16);
+    let max_wait_us = args.get_parse_or("max-wait-us", 2000u64);
+    let max_batch = args.get_parse_or("max-batch", 512usize);
+    let max_body_mb = args.get_parse_or("max-body-mb", 8usize);
+    args.finish();
+
+    let (model, label) = match &model_path {
+        Some(p) => (KernelKMeansModel::load(Path::new(p))?, p.clone()),
+        None => {
+            let ds = registry::load(&dataset, scale, seed);
+            println!("no --model given: fitting a fresh model on {} first", ds.name);
+            let spec = experiment::RunSpec {
+                dataset: dataset.clone(),
+                scale,
+                kernel: experiment::KernelSpec::Gaussian { multiplier: 1.0 },
+                algo: experiment::AlgoSpec::TruncKkm(mbkk::kkmeans::LearningRate::Beta),
+                k: ds.num_classes().max(2),
+                batch_size: 256,
+                schedule: mbkk::kkmeans::ScheduleSpec::Fixed,
+                tau: 100,
+                max_iters: 60,
+                epsilon: None,
+                seed,
+            };
+            let fitted =
+                experiment::fit_servable_model(&spec, &ds, experiment::GramStrategy::default())?;
+            (fitted.model, format!("fit:{}", ds.name))
+        }
+    };
+
+    let cfg = mbkk::serve::http::ServeConfig {
+        addr: format!("{addr}:{port}"),
+        max_wait: std::time::Duration::from_micros(max_wait_us),
+        max_batch_rows: max_batch.max(1),
+        max_body_bytes: max_body_mb.max(1) * 1024 * 1024,
+        ..Default::default()
+    };
+    let server = mbkk::serve::http::Server::bind(&model, &label, &cfg)?;
+    let bound = server.local_addr()?;
+    println!(
+        "model:      {label} (k={}, d={}, {} support points)",
+        model.k(),
+        model.d,
+        model.support_points()
+    );
+    println!("listening:  http://{bound} (POST /v1/predict, GET /v1/models, GET /healthz)");
+    println!("coalesce:   max-wait {max_wait_us}us, max-batch {} rows", cfg.max_batch_rows);
+    install_shutdown_handlers(server.shutdown_flag());
+    let stats = server.run()?;
+    println!(
+        "shutdown:   served {} requests in {} batches ({} rows, {} coalesced batches)",
+        stats.requests, stats.batches, stats.rows, stats.coalesced_batches
+    );
+    Ok(())
+}
+
+/// Route SIGINT/SIGTERM to the server's shutdown flag so `mbkk serve`
+/// drains and exits cleanly (CI's `e2e-http` job sends SIGTERM and
+/// asserts exit status 0). Calls the C `signal` entry point directly —
+/// there is no libc crate in a zero-dependency build — and the handler
+/// body only stores to an atomic, which is async-signal-safe.
+#[cfg(unix)]
+fn install_shutdown_handlers(flag: std::sync::Arc<std::sync::atomic::AtomicBool>) {
+    use std::os::raw::c_int;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::{Arc, OnceLock};
+
+    static FLAG: OnceLock<Arc<AtomicBool>> = OnceLock::new();
+
+    extern "C" fn on_signal(_sig: c_int) {
+        if let Some(f) = FLAG.get() {
+            f.store(true, Ordering::SeqCst);
+        }
+    }
+
+    extern "C" {
+        fn signal(signum: c_int, handler: extern "C" fn(c_int)) -> usize;
+    }
+
+    const SIGINT: c_int = 2;
+    const SIGTERM: c_int = 15;
+    let _ = FLAG.set(flag);
+    unsafe {
+        signal(SIGINT, on_signal);
+        signal(SIGTERM, on_signal);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_shutdown_handlers(_flag: std::sync::Arc<std::sync::atomic::AtomicBool>) {}
 
 fn run_figures(args: &Args) -> Result<()> {
     let opts = figures::FigureOptions {

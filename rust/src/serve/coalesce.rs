@@ -1,0 +1,355 @@
+//! Request-coalescing admission queue for the HTTP service (ADR-003).
+//!
+//! Under many concurrent 1-row requests, dispatching each straight into
+//! [`PredictEngine`] wastes the engine's batch shape: the panel kernels
+//! and the worker pool amortize over rows, so k single-row batches cost
+//! nearly k times one k-row batch. The coalescer turns that load pattern
+//! back into batches: concurrent submissions accumulate behind a small
+//! deadline (`max_wait`, sized from the bench model's per-batch cost) and
+//! flush as ONE engine batch; each caller gets back exactly its slice.
+//!
+//! The scheme is leader/follower. The first thread to enqueue into an
+//! empty queue becomes the *leader*: it waits out the deadline (or an
+//! early wake when `max_batch_rows` accumulates), takes the whole queue,
+//! runs the engine once, and distributes results to the followers'
+//! tickets. Followers just park on their ticket. A request arriving while
+//! a flush is in progress starts a fresh accumulation — batches overlap
+//! with waiting, so throughput does not gate on the slowest client.
+//!
+//! **Bit-identity:** the engine guarantees batched output equal to the
+//! scalar path for *any* batch size and thread count, so concatenating
+//! requests and slicing the result per ticket cannot change any caller's
+//! answer. `conformance_http.rs` pins this end to end.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use super::engine::PredictEngine;
+
+/// Tuning knobs for the admission queue.
+#[derive(Debug, Clone)]
+pub struct CoalesceConfig {
+    /// How long the batch leader waits for co-travellers before flushing.
+    pub max_wait: Duration,
+    /// Flush early once this many rows are queued. Also the bypass
+    /// threshold: a single request at or above it skips the queue and is
+    /// dispatched directly (it is already a full batch).
+    pub max_batch_rows: usize,
+}
+
+impl Default for CoalesceConfig {
+    /// Defaults sized from the committed "prediction service" bench
+    /// entries: a d=16 engine batch costs ~6 ms at bench scale, so a 2 ms
+    /// wait adds less than one batch-time of latency while letting tens
+    /// of 1-row requests share a flush; 512 rows is comfortably past the
+    /// point where the panel kernels saturate.
+    fn default() -> Self {
+        CoalesceConfig { max_wait: Duration::from_micros(2000), max_batch_rows: 512 }
+    }
+}
+
+/// A consistent snapshot of the service counters (`/healthz` exposes it;
+/// the CI e2e job asserts `batches < requests` under concurrent load).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StatsSnapshot {
+    /// Predict requests admitted (including bypassed large requests).
+    pub requests: u64,
+    /// Engine batches actually dispatched.
+    pub batches: u64,
+    /// Total rows scored.
+    pub rows: u64,
+    /// Batches that carried more than one request.
+    pub coalesced_batches: u64,
+    /// Largest single batch dispatched, in rows.
+    pub max_batch_rows: u64,
+}
+
+#[derive(Default)]
+struct Queue {
+    rows: Vec<f32>,
+    tickets: Vec<std::sync::Arc<Ticket>>,
+}
+
+/// One waiting request: where its rows sit in the accumulating batch and
+/// a slot for its slice of the results.
+struct Ticket {
+    first_row: usize,
+    n_rows: usize,
+    result: Mutex<Option<Vec<usize>>>,
+    ready: Condvar,
+}
+
+/// The admission queue in front of a [`PredictEngine`].
+pub struct Coalescer {
+    engine: PredictEngine,
+    cfg: CoalesceConfig,
+    queue: Mutex<Queue>,
+    arrivals: Condvar,
+    requests: AtomicU64,
+    batches: AtomicU64,
+    rows: AtomicU64,
+    coalesced_batches: AtomicU64,
+    max_batch_rows: AtomicU64,
+}
+
+/// Lock, shrugging off poisoning: the engine cannot leave shared state
+/// half-written (tickets are write-once), so a panicking peer thread must
+/// not wedge every connection behind a poisoned mutex.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+impl Coalescer {
+    /// Wrap an engine with an admission queue.
+    pub fn new(engine: PredictEngine, cfg: CoalesceConfig) -> Coalescer {
+        Coalescer {
+            engine,
+            cfg: CoalesceConfig { max_batch_rows: cfg.max_batch_rows.max(1), ..cfg },
+            queue: Mutex::new(Queue::default()),
+            arrivals: Condvar::new(),
+            requests: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            rows: AtomicU64::new(0),
+            coalesced_batches: AtomicU64::new(0),
+            max_batch_rows: AtomicU64::new(0),
+        }
+    }
+
+    /// The wrapped engine (dimension checks happen against this).
+    pub fn engine(&self) -> &PredictEngine {
+        &self.engine
+    }
+
+    /// Current counter values.
+    pub fn stats(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            rows: self.rows.load(Ordering::Relaxed),
+            coalesced_batches: self.coalesced_batches.load(Ordering::Relaxed),
+            max_batch_rows: self.max_batch_rows.load(Ordering::Relaxed),
+        }
+    }
+
+    fn note_batch(&self, batch_rows: usize, batch_requests: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.rows.fetch_add(batch_rows as u64, Ordering::Relaxed);
+        if batch_requests > 1 {
+            self.coalesced_batches.fetch_add(1, Ordering::Relaxed);
+        }
+        self.max_batch_rows.fetch_max(batch_rows as u64, Ordering::Relaxed);
+    }
+
+    /// Score `rows` (length must be a multiple of the engine dimension —
+    /// the HTTP layer validates shape *before* admission) and return one
+    /// assignment per row. Blocks the calling thread until its batch is
+    /// flushed; the result is bit-identical to calling the engine (or the
+    /// scalar path) on these rows alone.
+    pub fn submit(&self, rows: Vec<f32>) -> Vec<usize> {
+        let d = self.engine.d();
+        assert_eq!(rows.len() % d.max(1), 0, "submit() requires validated row shapes");
+        let n = rows.len() / d.max(1);
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        if n == 0 {
+            return Vec::new();
+        }
+        // A full-batch-sized request gains nothing from waiting: dispatch
+        // directly so it neither queues behind the deadline nor makes
+        // smaller co-travellers wait behind its compute.
+        if n >= self.cfg.max_batch_rows {
+            let preds = self.engine.predict_batch(&rows);
+            self.note_batch(n, 1);
+            return preds;
+        }
+
+        let mut q = lock(&self.queue);
+        let first_row = q.rows.len() / d.max(1);
+        q.rows.extend_from_slice(&rows);
+        let ticket = std::sync::Arc::new(Ticket {
+            first_row,
+            n_rows: n,
+            result: Mutex::new(None),
+            ready: Condvar::new(),
+        });
+        q.tickets.push(ticket.clone());
+        let leader = q.tickets.len() == 1;
+
+        if !leader {
+            if q.rows.len() / d.max(1) >= self.cfg.max_batch_rows {
+                // Batch is full: wake the leader early.
+                self.arrivals.notify_all();
+            }
+            drop(q);
+            let mut slot = lock(&ticket.result);
+            while slot.is_none() {
+                slot = ticket.ready.wait(slot).unwrap_or_else(|p| p.into_inner());
+            }
+            return slot.take().expect("ticket filled");
+        }
+
+        // Leader: wait out the deadline (or an early full-batch wake),
+        // then take the whole queue and flush it as one engine call.
+        let deadline = Instant::now() + self.cfg.max_wait;
+        loop {
+            if q.rows.len() / d.max(1) >= self.cfg.max_batch_rows {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            q = self
+                .arrivals
+                .wait_timeout(q, deadline - now)
+                .unwrap_or_else(|p| p.into_inner())
+                .0;
+        }
+        let batch = std::mem::take(&mut q.rows);
+        let tickets = std::mem::take(&mut q.tickets);
+        drop(q);
+
+        let preds = self.engine.predict_batch(&batch);
+        self.note_batch(batch.len() / d.max(1), tickets.len());
+
+        let mut own = None;
+        for t in tickets {
+            let slice = preds[t.first_row..t.first_row + t.n_rows].to_vec();
+            if std::sync::Arc::ptr_eq(&t, &ticket) {
+                own = Some(slice);
+                continue;
+            }
+            *lock(&t.result) = Some(slice);
+            t.ready.notify_one();
+        }
+        own.expect("leader ticket present in its own batch")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{blobs, SyntheticSpec};
+    use crate::data::Dataset;
+    use crate::kernels::KernelFunction;
+    use crate::kkmeans::{CenterWindow, KernelKMeansModel};
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    /// A small servable model + dataset (mirrors conformance_serve's
+    /// helper: irregular support sizes, no full fit).
+    fn model_for(d: usize, seed: u64) -> (Dataset, KernelKMeansModel) {
+        let mut rng = Rng::seeded(seed);
+        let ds = blobs(&SyntheticSpec::new(120, d, 3), &mut rng);
+        let mut windows: Vec<CenterWindow> =
+            (0..3).map(|j| CenterWindow::new(j * 7, 23)).collect();
+        for step in 0..12 {
+            for (j, w) in windows.iter_mut().enumerate() {
+                let pts: Vec<usize> =
+                    (0..1 + (step + j) % 5).map(|_| rng.below(ds.n)).collect();
+                w.apply_update(0.4, &pts, None);
+            }
+        }
+        let kernel = KernelFunction::Gaussian { kappa: 2.0 };
+        let model = KernelKMeansModel::freeze(&ds, kernel, &mut windows);
+        (ds, model)
+    }
+
+    fn rows_from(ds: &Dataset, idx: &[usize]) -> Vec<f32> {
+        idx.iter().flat_map(|&i| ds.row(i).to_vec()).collect()
+    }
+
+    #[test]
+    fn single_submit_matches_engine() {
+        let (ds, model) = model_for(6, 11);
+        let rows = rows_from(&ds, &(0..32).collect::<Vec<_>>());
+        let engine = PredictEngine::new(&model);
+        let want = engine.predict_batch(&rows);
+        let co = Coalescer::new(
+            PredictEngine::new(&model),
+            CoalesceConfig { max_wait: Duration::from_micros(200), max_batch_rows: 512 },
+        );
+        assert_eq!(co.submit(rows), want);
+        let s = co.stats();
+        assert_eq!((s.requests, s.batches, s.rows), (1, 1, 32));
+        assert_eq!(s.coalesced_batches, 0);
+    }
+
+    #[test]
+    fn empty_submit_returns_empty() {
+        let (_ds, model) = model_for(4, 3);
+        let co = Coalescer::new(PredictEngine::new(&model), CoalesceConfig::default());
+        assert!(co.submit(Vec::new()).is_empty());
+        assert_eq!(co.stats().batches, 0);
+    }
+
+    #[test]
+    fn oversized_request_bypasses_queue() {
+        let (ds, model) = model_for(4, 5);
+        let rows = rows_from(&ds, &(0..100).collect::<Vec<_>>());
+        let co = Coalescer::new(
+            PredictEngine::new(&model),
+            CoalesceConfig { max_wait: Duration::from_millis(250), max_batch_rows: 8 },
+        );
+        let t0 = Instant::now();
+        let preds = co.submit(rows.clone());
+        // Bypass must not wait out the 250 ms deadline.
+        assert!(t0.elapsed() < Duration::from_millis(200), "bypass waited on the deadline");
+        assert_eq!(preds, PredictEngine::new(&model).predict_batch(&rows));
+        assert_eq!(co.stats().max_batch_rows, 100);
+    }
+
+    #[test]
+    fn concurrent_submits_coalesce_and_stay_bit_identical() {
+        let (ds, model) = model_for(8, 21);
+        let engine = PredictEngine::new(&model);
+        let co = Arc::new(Coalescer::new(
+            PredictEngine::new(&model),
+            CoalesceConfig { max_wait: Duration::from_millis(30), max_batch_rows: 4096 },
+        ));
+        let mixes: Vec<Vec<usize>> = (0..12)
+            .map(|t| (0..(1 + t % 5)).map(|j| (t * 19 + j * 3) % ds.n).collect())
+            .collect();
+        let mut handles = Vec::new();
+        for idx in mixes.clone() {
+            let co = co.clone();
+            let rows = rows_from(&ds, &idx);
+            handles.push(std::thread::spawn(move || co.submit(rows)));
+        }
+        let got: Vec<Vec<usize>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for (idx, preds) in mixes.iter().zip(&got) {
+            let want = engine.predict_batch(&rows_from(&ds, idx));
+            assert_eq!(preds, &want, "coalesced result diverged for mix {idx:?}");
+        }
+        let s = co.stats();
+        assert_eq!(s.requests, 12);
+        assert!(s.batches < s.requests, "no coalescing happened: {s:?}");
+        assert!(s.coalesced_batches >= 1);
+        assert_eq!(s.rows as usize, mixes.iter().map(Vec::len).sum::<usize>());
+    }
+
+    #[test]
+    fn full_batch_trigger_flushes_before_deadline() {
+        let (ds, model) = model_for(4, 9);
+        let co = Arc::new(Coalescer::new(
+            PredictEngine::new(&model),
+            // Long deadline: only the max_batch_rows trigger can flush fast.
+            CoalesceConfig { max_wait: Duration::from_secs(5), max_batch_rows: 4 },
+        ));
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let co = co.clone();
+                let rows = rows_from(&ds, &[t * 5, t * 5 + 1]);
+                std::thread::spawn(move || co.submit(rows))
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(4),
+            "flush waited for the deadline instead of the full-batch trigger"
+        );
+    }
+}

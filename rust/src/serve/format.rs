@@ -208,7 +208,8 @@ impl<'a> Reader<'a> {
 
 // ---- kernel parameters ----------------------------------------------------
 
-fn kernel_to_json(f: KernelFunction) -> Json {
+/// Kernel parameters as the artifact header (and `/v1/models`) spell them.
+pub(crate) fn kernel_to_json(f: KernelFunction) -> Json {
     match f {
         KernelFunction::Gaussian { kappa } => Json::obj(vec![
             ("name", Json::Str("gaussian".into())),
@@ -358,12 +359,22 @@ pub fn save_model(model: &KernelKMeansModel, path: &Path) -> Result<()> {
         .with_context(|| format!("writing model artifact {}", path.display()))
 }
 
+/// Read + decode an artifact through one path, so *every* loader error —
+/// I/O or decode — names the offending file. HTTP 500s and CLI failures
+/// both surface these messages; `conformance_http.rs` pins the guarantee.
+fn load_with_path<T>(
+    path: &Path,
+    what: &str,
+    decode: impl FnOnce(&[u8]) -> Result<T>,
+) -> Result<T> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading {what} artifact {}", path.display()))?;
+    decode(&bytes).with_context(|| format!("loading {what} artifact {}", path.display()))
+}
+
 /// Load a model artifact from `path`.
 pub fn load_model(path: &Path) -> Result<KernelKMeansModel> {
-    let bytes = std::fs::read(path)
-        .with_context(|| format!("reading model artifact {}", path.display()))?;
-    model_from_bytes(&bytes)
-        .with_context(|| format!("loading model artifact {}", path.display()))
+    load_with_path(path, "model", model_from_bytes)
 }
 
 // ---- kind "stream" --------------------------------------------------------
@@ -622,10 +633,7 @@ pub fn save_stream(s: &StreamingKernelKMeans, path: &Path) -> Result<()> {
 
 /// Load a checkpoint artifact from `path`.
 pub fn load_stream(path: &Path) -> Result<StreamingKernelKMeans> {
-    let bytes = std::fs::read(path)
-        .with_context(|| format!("reading checkpoint artifact {}", path.display()))?;
-    stream_from_bytes(&bytes)
-        .with_context(|| format!("loading checkpoint artifact {}", path.display()))
+    load_with_path(path, "checkpoint", stream_from_bytes)
 }
 
 #[cfg(test)]

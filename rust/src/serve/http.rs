@@ -1,0 +1,404 @@
+//! The zero-dependency HTTP/1.1 prediction service (DESIGN.md §11,
+//! docs/API.md).
+//!
+//! ```text
+//! TcpListener (nonblocking accept loop, polls the shutdown flag)
+//!    └─ per-connection thread (keep-alive loop)
+//!         ├─ wire::read_head / read_body   bounded framing, 100-continue
+//!         ├─ json::lazy                    offset-based "points" extraction
+//!         ├─ Coalescer                     deadline-batched admission queue
+//!         │     └─ PredictEngine           persistent worker pool
+//!         └─ wire::Response                single-write JSON response
+//! ```
+//!
+//! Endpoints: `POST /v1/predict`, `GET /v1/models`, `GET /healthz` — the
+//! request/response schemas, error envelope, and coalescing semantics are
+//! documented in docs/API.md and pinned by `rust/tests/conformance_http.rs`.
+//!
+//! Guarantees:
+//!
+//! * **Never panics on client bytes.** Framing and JSON errors map to 4xx
+//!   envelopes; routing runs under `catch_unwind` so even an internal bug
+//!   answers 500 and closes that one connection.
+//! * **Bit-identity.** A row scored over HTTP gets exactly the assignment
+//!   the CLI's `predict --scalar` computes for the same text: the lazy
+//!   parser converts number tokens with the CSV loader's single-rounding
+//!   `parse::<f32>` and the coalescer inherits the engine's batch-shape
+//!   invariance.
+//! * **Bounded resources.** Head and body caps, a connection ceiling
+//!   (503 above it), and read timeouts on every accepted socket.
+//!
+//! Connection handling is thread-per-connection on `std::thread` — *not*
+//! the compute worker pool, which stays dedicated to `PredictEngine`
+//! batches and must never block on client sockets (ADR-003).
+
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::coalesce::{CoalesceConfig, Coalescer, StatsSnapshot};
+use super::engine::PredictEngine;
+use super::format;
+use super::wire::{self, RequestHead, Response, WireError};
+use crate::kkmeans::KernelKMeansModel;
+use crate::util::error::{Context, Result};
+use crate::util::json::{lazy, Json};
+
+/// How often the accept loop re-checks the shutdown flag when idle.
+const ACCEPT_POLL: Duration = Duration::from_millis(2);
+/// How long shutdown waits for in-flight connections to finish.
+const DRAIN_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Server configuration (`mbkk serve` flags map onto these fields).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bind address, e.g. `127.0.0.1:8605` (port 0 picks a free port).
+    pub addr: String,
+    /// Coalescing deadline: how long a batch leader waits for company.
+    pub max_wait: Duration,
+    /// Flush threshold / bypass size, in rows.
+    pub max_batch_rows: usize,
+    /// Request body cap in bytes (413 above it).
+    pub max_body_bytes: usize,
+    /// Per-socket read/write timeout.
+    pub read_timeout: Duration,
+    /// Concurrent-connection ceiling (503 above it).
+    pub max_connections: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:8605".to_string(),
+            max_wait: CoalesceConfig::default().max_wait,
+            max_batch_rows: CoalesceConfig::default().max_batch_rows,
+            max_body_bytes: 8 * 1024 * 1024,
+            read_timeout: Duration::from_secs(10),
+            max_connections: 128,
+        }
+    }
+}
+
+struct ServerState {
+    coalescer: Coalescer,
+    /// Prebuilt `GET /v1/models` response value.
+    models_json: Json,
+    /// Prebuilt model summary embedded in `/healthz`.
+    model_summary: Json,
+    shutdown: Arc<AtomicBool>,
+    active: AtomicUsize,
+    max_body_bytes: usize,
+    max_connections: usize,
+}
+
+/// A bound, not-yet-running prediction server.
+pub struct Server {
+    listener: TcpListener,
+    read_timeout: Duration,
+    state: Arc<ServerState>,
+}
+
+/// Decrements the active-connection counter even if a handler unwinds.
+struct ActiveGuard(Arc<ServerState>);
+
+impl Drop for ActiveGuard {
+    fn drop(&mut self) {
+        self.0.active.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+impl Server {
+    /// Build the engine + admission queue and bind the listen socket.
+    /// `source` labels the model in `/v1/models` and `/healthz` (the
+    /// artifact path, or a synthetic label for fit-on-the-fly models).
+    pub fn bind(model: &KernelKMeansModel, source: &str, cfg: &ServeConfig) -> Result<Server> {
+        let engine = PredictEngine::new(model);
+        let coalescer = Coalescer::new(
+            engine,
+            CoalesceConfig { max_wait: cfg.max_wait, max_batch_rows: cfg.max_batch_rows },
+        );
+        let meta = Json::obj(vec![
+            ("name", Json::Str(source.to_string())),
+            ("kind", Json::Str("model".to_string())),
+            ("format_version", Json::Num(format::FORMAT_VERSION as f64)),
+            ("kernel", format::kernel_to_json(model.kernel)),
+            ("k", Json::Num(model.k() as f64)),
+            ("d", Json::Num(model.d as f64)),
+            ("support_points", Json::Num(model.support_points() as f64)),
+        ]);
+        let model_summary = Json::obj(vec![
+            ("name", Json::Str(source.to_string())),
+            ("k", Json::Num(model.k() as f64)),
+            ("d", Json::Num(model.d as f64)),
+        ]);
+        let listener = TcpListener::bind(cfg.addr.as_str())
+            .with_context(|| format!("binding http listener on {}", cfg.addr))?;
+        Ok(Server {
+            listener,
+            read_timeout: cfg.read_timeout,
+            state: Arc::new(ServerState {
+                coalescer,
+                models_json: Json::obj(vec![("models", Json::Arr(vec![meta]))]),
+                model_summary,
+                shutdown: Arc::new(AtomicBool::new(false)),
+                active: AtomicUsize::new(0),
+                max_body_bytes: cfg.max_body_bytes,
+                max_connections: cfg.max_connections,
+            }),
+        })
+    }
+
+    /// The bound address (resolves port 0 to the actual port).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener.local_addr().context("reading the bound address")
+    }
+
+    /// Handle to the shutdown flag: store `true` (e.g. from a SIGTERM
+    /// handler or a test) and `run` drains connections and returns.
+    pub fn shutdown_flag(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.state.shutdown)
+    }
+
+    /// Accept loop. Returns the final service counters once the shutdown
+    /// flag is set and in-flight connections have drained (or the drain
+    /// timeout passes).
+    pub fn run(self) -> Result<StatsSnapshot> {
+        let state = self.state;
+        self.listener
+            .set_nonblocking(true)
+            .context("setting the listener nonblocking")?;
+        while !state.shutdown.load(Ordering::SeqCst) {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    if state.active.load(Ordering::SeqCst) >= state.max_connections {
+                        let mut s = stream;
+                        let _ = s.set_nonblocking(false);
+                        let _ = Response::error(
+                            503,
+                            "server_overloaded",
+                            "connection limit reached; retry shortly",
+                        )
+                        .closing()
+                        .write_to(&mut s);
+                        continue;
+                    }
+                    if stream.set_nonblocking(false).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    let _ = stream.set_read_timeout(Some(self.read_timeout));
+                    let _ = stream.set_write_timeout(Some(self.read_timeout));
+                    state.active.fetch_add(1, Ordering::SeqCst);
+                    let guard = ActiveGuard(Arc::clone(&state));
+                    let st = Arc::clone(&state);
+                    let spawned = std::thread::Builder::new()
+                        .name("mbkk-http".to_string())
+                        .spawn(move || {
+                            let _guard = guard;
+                            handle_connection(&st, stream);
+                        });
+                    if spawned.is_err() {
+                        // ActiveGuard moved into the dead closure was
+                        // dropped by the failed spawn, decrementing for us.
+                        continue;
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(ACCEPT_POLL);
+                }
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::ConnectionAborted | std::io::ErrorKind::Interrupted
+                    ) => {}
+                Err(e) => return Err(e).context("accepting a connection"),
+            }
+        }
+        let deadline = Instant::now() + DRAIN_TIMEOUT;
+        while state.active.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
+            std::thread::sleep(ACCEPT_POLL);
+        }
+        Ok(state.coalescer.stats())
+    }
+}
+
+/// Keep-alive loop for one accepted connection.
+fn handle_connection(state: &ServerState, stream: TcpStream) {
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    loop {
+        let head = match wire::read_head(&mut reader) {
+            Ok(head) => head,
+            Err(WireError::Closed) | Err(WireError::Io(_)) => return,
+            Err(WireError::Idle) => {
+                if state.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+            Err(WireError::Malformed(m)) => {
+                let _ = Response::error(400, "bad_request", &m).closing().write_to(&mut writer);
+                return;
+            }
+            // read_head never produces these two; framing is unknown, close.
+            Err(WireError::LengthRequired) | Err(WireError::TooLarge(_)) => return,
+        };
+        let Ok(body) = read_framed_body(state, &head, &mut reader, &mut writer) else {
+            return;
+        };
+        let mut resp = dispatch(state, &head, &body);
+        if state.shutdown.load(Ordering::SeqCst) {
+            resp = resp.closing();
+        }
+        if resp.write_to(&mut writer).is_err() || resp.close || !head.keep_alive {
+            return;
+        }
+    }
+}
+
+/// Read the request body under the framing rules, emitting 411/413/400
+/// and `100 Continue` as needed. `Err(())` means the connection must
+/// close (the error response, if owed, was already written).
+fn read_framed_body(
+    state: &ServerState,
+    head: &RequestHead,
+    reader: &mut BufReader<TcpStream>,
+    writer: &mut TcpStream,
+) -> std::result::Result<Vec<u8>, ()> {
+    let len = match head.content_length {
+        Some(len) => len,
+        None if head.method == "POST" => {
+            let _ = Response::error(
+                411,
+                "length_required",
+                "POST requires a Content-Length header (chunked bodies are not supported)",
+            )
+            .closing()
+            .write_to(writer);
+            return Err(());
+        }
+        None => return Ok(Vec::new()),
+    };
+    if len > state.max_body_bytes {
+        let _ = Response::error(
+            413,
+            "payload_too_large",
+            &format!(
+                "request body of {len} bytes exceeds the {} byte limit",
+                state.max_body_bytes
+            ),
+        )
+        .closing()
+        .write_to(writer);
+        return Err(());
+    }
+    if head.expect_continue && len > 0 {
+        // curl sends Expect for bodies over ~1 KiB and stalls ~1 s if the
+        // interim response never comes — that stall would swamp p99.
+        if writer.write_all(wire::CONTINUE_LINE).is_err() {
+            return Err(());
+        }
+    }
+    match wire::read_body(reader, len, state.max_body_bytes) {
+        Ok(body) => Ok(body),
+        Err(WireError::Malformed(m)) => {
+            let _ = Response::error(400, "bad_request", &m).closing().write_to(writer);
+            Err(())
+        }
+        Err(_) => Err(()),
+    }
+}
+
+/// Route under `catch_unwind`: a bug in a handler answers 500 on this
+/// connection instead of tearing the whole service down.
+fn dispatch(state: &ServerState, head: &RequestHead, body: &[u8]) -> Response {
+    let routed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        route(state, head, body)
+    }));
+    match routed {
+        Ok(resp) => resp,
+        Err(_) => {
+            Response::error(500, "internal", "internal error; closing this connection").closing()
+        }
+    }
+}
+
+fn route(state: &ServerState, head: &RequestHead, body: &[u8]) -> Response {
+    match (head.method.as_str(), head.path()) {
+        ("GET", "/healthz") => Response::json(&healthz_json(state)),
+        ("GET", "/v1/models") => Response::json(&state.models_json),
+        ("POST", "/v1/predict") => predict(state, body),
+        (_, "/healthz") | (_, "/v1/models") => method_not_allowed("GET"),
+        (_, "/v1/predict") => method_not_allowed("POST"),
+        (method, path) => {
+            Response::error(404, "not_found", &format!("no route for {method} {path}"))
+        }
+    }
+}
+
+fn method_not_allowed(allow: &'static str) -> Response {
+    let mut resp =
+        Response::error(405, "method_not_allowed", &format!("this endpoint accepts {allow}"));
+    resp.allow = Some(allow);
+    resp
+}
+
+/// `POST /v1/predict`: lazy-extract `points`, validate shape against the
+/// served model, submit through the coalescer, answer the assignments.
+fn predict(state: &ServerState, body: &[u8]) -> Response {
+    let raw = match lazy::fields(body, &["points"]) {
+        Ok(fields) => fields.into_iter().next().flatten(),
+        Err(e) => return Response::error(400, "invalid_json", &e.to_string()),
+    };
+    let Some(raw) = raw else {
+        return Response::error(
+            400,
+            "missing_field",
+            "request body must contain a \"points\" field",
+        );
+    };
+    let points = match raw.parse_points() {
+        Ok(points) => points,
+        Err(e) => return Response::error(400, "invalid_points", &e.to_string()),
+    };
+    let d = state.coalescer.engine().d();
+    if points.rows > 0 && points.d != d {
+        return Response::error(
+            400,
+            "shape_mismatch",
+            &format!("points have {} features per row but the served model expects {d}", points.d),
+        );
+    }
+    let assignments = state.coalescer.submit(points.features);
+    Response::json(&Json::obj(vec![
+        ("assignments", Json::arr_num(assignments.iter().map(|&a| a as f64))),
+        ("rows", Json::Num(points.rows as f64)),
+    ]))
+}
+
+fn healthz_json(state: &ServerState) -> Json {
+    let s = state.coalescer.stats();
+    Json::obj(vec![
+        ("status", Json::Str("ok".to_string())),
+        ("model", state.model_summary.clone()),
+        (
+            "stats",
+            Json::obj(vec![
+                ("requests", Json::Num(s.requests as f64)),
+                ("batches", Json::Num(s.batches as f64)),
+                ("rows", Json::Num(s.rows as f64)),
+                ("coalesced_batches", Json::Num(s.coalesced_batches as f64)),
+                ("max_batch_rows", Json::Num(s.max_batch_rows as f64)),
+                (
+                    "active_connections",
+                    Json::Num(state.active.load(Ordering::SeqCst) as f64),
+                ),
+            ]),
+        ),
+    ])
+}

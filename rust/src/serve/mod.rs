@@ -12,12 +12,19 @@
 //! * [`PredictEngine`] — batched query answering through packed support
 //!   panels and the persistent worker pool, bit-identical to the scalar
 //!   `KernelKMeansModel::predict`.
+//! * [`http`] — the zero-dependency HTTP/1.1 service over the engine
+//!   (`POST /v1/predict`, `GET /v1/models`, `GET /healthz` — docs/API.md),
+//!   with [`coalesce`]'s request-coalescing admission queue and
+//!   [`wire`]'s bounded request framing (DESIGN.md §11, ADR-003).
 //!
-//! The CLI's `fit` / `predict` / `serve-bench` subcommands are thin
-//! drivers over these two pieces plus
+//! The CLI's `fit` / `predict` / `serve-bench` / `serve` subcommands are
+//! thin drivers over these pieces plus
 //! `coordinator::experiment::fit_servable_model`.
 
+pub mod coalesce;
 pub mod engine;
 pub mod format;
+pub mod http;
+pub mod wire;
 
 pub use engine::PredictEngine;

@@ -1,0 +1,407 @@
+//! HTTP/1.1 wire framing for the prediction service (DESIGN.md §11).
+//!
+//! A deliberately small subset of RFC 9112, enough to serve JSON over
+//! keep-alive connections with bounded resource use and without ever
+//! panicking on attacker-controlled bytes:
+//!
+//! * request head parsing with a hard size cap ([`MAX_HEAD_BYTES`]);
+//! * `Content-Length` body framing only (chunked transfer is rejected
+//!   with 400 — no client this service targets needs it);
+//! * `Expect: 100-continue` surfaced to the caller so the server can
+//!   acknowledge before the client sends the body (curl inserts the
+//!   header for bodies over ~1 KiB and stalls ~1 s if it is ignored —
+//!   that stall would dominate every latency percentile);
+//! * responses assembled into a single buffer and written with one
+//!   syscall, always carrying `Content-Length` and a JSON body.
+//!
+//! The head reader and the body reader are separate functions on purpose:
+//! the `100 Continue` interjection happens between them. Everything here
+//! is pure byte-in/byte-out over `BufRead`/`Write`, so the unit tests run
+//! against in-memory cursors with no sockets involved.
+
+use std::io::{BufRead, Write};
+
+use crate::util::json::Json;
+
+/// Hard cap on the request line + headers, in bytes.
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// Parsed request head: the request line plus the framing headers the
+/// service cares about. Unknown headers are skipped, not stored.
+#[derive(Debug, Clone)]
+pub struct RequestHead {
+    /// Request method, uppercased by the client (`GET`, `POST`, …).
+    pub method: String,
+    /// Request target as sent (path plus optional query string).
+    pub target: String,
+    /// `Content-Length`, if present and well-formed.
+    pub content_length: Option<usize>,
+    /// Whether the client asked for `Expect: 100-continue`.
+    pub expect_continue: bool,
+    /// Whether the connection should be kept open after the response
+    /// (HTTP/1.1 default true, HTTP/1.0 default false, `Connection`
+    /// header overrides either way).
+    pub keep_alive: bool,
+}
+
+impl RequestHead {
+    /// The target with any query string stripped — what the router matches.
+    pub fn path(&self) -> &str {
+        match self.target.split_once('?') {
+            Some((p, _)) => p,
+            None => &self.target,
+        }
+    }
+}
+
+/// Why a request could not be framed. Maps onto a response (or silence)
+/// in the connection handler.
+#[derive(Debug)]
+pub enum WireError {
+    /// Clean end of stream before any request byte: no response owed.
+    Closed,
+    /// Read timeout with no request bytes consumed: the connection is
+    /// idle, not broken. The caller may keep waiting or close politely.
+    Idle,
+    /// Unparseable or oversized head, truncated body, or unsupported
+    /// framing → 400; connection framing is lost, so the handler closes.
+    Malformed(String),
+    /// `POST` without `Content-Length` → 411.
+    LengthRequired,
+    /// Advertised body length exceeds the configured cap → 413. The body
+    /// was not read.
+    TooLarge(usize),
+    /// Transport error (reset, broken pipe): drop the connection silently.
+    Io(String),
+}
+
+fn classify(e: std::io::Error, started: bool) -> WireError {
+    use std::io::ErrorKind;
+    match e.kind() {
+        ErrorKind::WouldBlock | ErrorKind::TimedOut if !started => WireError::Idle,
+        ErrorKind::WouldBlock | ErrorKind::TimedOut => {
+            WireError::Malformed("timed out mid-request".to_string())
+        }
+        ErrorKind::UnexpectedEof if !started => WireError::Closed,
+        ErrorKind::UnexpectedEof => {
+            WireError::Malformed("connection closed mid-request".to_string())
+        }
+        _ => WireError::Io(e.to_string()),
+    }
+}
+
+/// Read one line terminated by `\n`, enforcing the running head budget.
+fn read_line<R: BufRead>(
+    r: &mut R,
+    budget: &mut usize,
+    started: bool,
+) -> Result<String, WireError> {
+    let mut buf = Vec::new();
+    loop {
+        let n = r
+            .read_until(b'\n', &mut buf)
+            .map_err(|e| classify(e, started || !buf.is_empty()))?;
+        if n == 0 {
+            return if buf.is_empty() && !started {
+                Err(WireError::Closed)
+            } else {
+                Err(WireError::Malformed("connection closed mid-head".to_string()))
+            };
+        }
+        if buf.len() > *budget {
+            return Err(WireError::Malformed(format!(
+                "request head exceeds {MAX_HEAD_BYTES} bytes"
+            )));
+        }
+        if buf.last() == Some(&b'\n') {
+            break;
+        }
+    }
+    *budget -= buf.len();
+    while matches!(buf.last(), Some(b'\n' | b'\r')) {
+        buf.pop();
+    }
+    String::from_utf8(buf).map_err(|_| WireError::Malformed("non-utf8 bytes in head".to_string()))
+}
+
+/// Read and parse a request head (request line + headers) off `r`.
+///
+/// Blocks until a full head arrives, the socket's read timeout fires
+/// ([`WireError::Idle`] when nothing was consumed yet), or the budget is
+/// exhausted.
+pub fn read_head<R: BufRead>(r: &mut R) -> Result<RequestHead, WireError> {
+    let mut budget = MAX_HEAD_BYTES;
+    let request_line = read_line(r, &mut budget, false)?;
+    let mut parts = request_line.split_ascii_whitespace();
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(t), Some(v), None) => (m.to_string(), t.to_string(), v),
+        _ => {
+            return Err(WireError::Malformed(format!(
+                "malformed request line {request_line:?}"
+            )))
+        }
+    };
+    let mut keep_alive = match version {
+        "HTTP/1.1" => true,
+        "HTTP/1.0" => false,
+        other => {
+            return Err(WireError::Malformed(format!(
+                "unsupported protocol version {other:?}"
+            )))
+        }
+    };
+    let mut content_length: Option<usize> = None;
+    let mut expect_continue = false;
+    loop {
+        let line = read_line(r, &mut budget, true)?;
+        if line.is_empty() {
+            break;
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(WireError::Malformed(format!("malformed header line {line:?}")));
+        };
+        let name = name.trim().to_ascii_lowercase();
+        let value = value.trim();
+        match name.as_str() {
+            "content-length" => {
+                let n: usize = value
+                    .parse()
+                    .map_err(|_| WireError::Malformed(format!("bad content-length {value:?}")))?;
+                if content_length.is_some_and(|prev| prev != n) {
+                    return Err(WireError::Malformed(
+                        "conflicting content-length headers".to_string(),
+                    ));
+                }
+                content_length = Some(n);
+            }
+            "transfer-encoding" => {
+                return Err(WireError::Malformed(
+                    "chunked transfer encoding is not supported; send content-length".to_string(),
+                ));
+            }
+            "connection" => {
+                let v = value.to_ascii_lowercase();
+                if v.contains("close") {
+                    keep_alive = false;
+                } else if v.contains("keep-alive") {
+                    keep_alive = true;
+                }
+            }
+            "expect" => {
+                if value.eq_ignore_ascii_case("100-continue") {
+                    expect_continue = true;
+                }
+            }
+            _ => {}
+        }
+    }
+    Ok(RequestHead { method, target, content_length, expect_continue, keep_alive })
+}
+
+/// Read exactly `len` body bytes, rejecting lengths above `max` without
+/// consuming anything.
+pub fn read_body<R: BufRead>(r: &mut R, len: usize, max: usize) -> Result<Vec<u8>, WireError> {
+    if len > max {
+        return Err(WireError::TooLarge(len));
+    }
+    let mut body = vec![0u8; len];
+    let mut filled = 0usize;
+    while filled < len {
+        match r.read(&mut body[filled..]) {
+            Ok(0) => {
+                return Err(WireError::Malformed(format!(
+                    "request body truncated: got {filled} of {len} bytes"
+                )))
+            }
+            Ok(n) => filled += n,
+            Err(e) => return Err(classify(e, true)),
+        }
+    }
+    Ok(body)
+}
+
+/// Canonical reason phrase for the status codes this service emits.
+pub fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// A response ready to serialize: status, JSON body, connection policy.
+#[derive(Debug)]
+pub struct Response {
+    /// HTTP status code.
+    pub status: u16,
+    /// Response body bytes (always JSON in this service).
+    pub body: Vec<u8>,
+    /// Close the connection after writing (framing lost or shutdown).
+    pub close: bool,
+    /// Value for an `Allow` header (405 responses).
+    pub allow: Option<&'static str>,
+}
+
+impl Response {
+    /// A 200 response with the given JSON body.
+    pub fn json(value: &Json) -> Response {
+        Response { status: 200, body: value.to_string().into_bytes(), close: false, allow: None }
+    }
+
+    /// An error response in the documented envelope
+    /// `{"error": {"code": …, "message": …}}`.
+    pub fn error(status: u16, code: &str, message: &str) -> Response {
+        let body = Json::obj(vec![(
+            "error",
+            Json::obj(vec![
+                ("code", Json::Str(code.to_string())),
+                ("message", Json::Str(message.to_string())),
+            ]),
+        )]);
+        Response { status, body: body.to_string().into_bytes(), close: false, allow: None }
+    }
+
+    /// Mark the connection for close after this response.
+    pub fn closing(mut self) -> Response {
+        self.close = true;
+        self
+    }
+
+    /// Serialize head + body into one buffer and write it with a single
+    /// `write_all` (one syscall on an unbuffered socket — latency matters
+    /// more than elegance on the 1-row hot path).
+    pub fn write_to<W: Write>(&self, w: &mut W) -> std::io::Result<()> {
+        let mut out = Vec::with_capacity(self.body.len() + 128);
+        out.extend_from_slice(
+            format!("HTTP/1.1 {} {}\r\n", self.status, status_text(self.status)).as_bytes(),
+        );
+        out.extend_from_slice(b"Content-Type: application/json\r\n");
+        out.extend_from_slice(format!("Content-Length: {}\r\n", self.body.len()).as_bytes());
+        if let Some(allow) = self.allow {
+            out.extend_from_slice(format!("Allow: {allow}\r\n").as_bytes());
+        }
+        if self.close {
+            out.extend_from_slice(b"Connection: close\r\n");
+        }
+        out.extend_from_slice(b"\r\n");
+        out.extend_from_slice(&self.body);
+        w.write_all(&out)?;
+        w.flush()
+    }
+}
+
+/// The interim `100 Continue` line sent before reading an expected body.
+pub const CONTINUE_LINE: &[u8] = b"HTTP/1.1 100 Continue\r\n\r\n";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn head_of(raw: &str) -> Result<RequestHead, WireError> {
+        read_head(&mut Cursor::new(raw.as_bytes().to_vec()))
+    }
+
+    #[test]
+    fn parses_a_post_head() {
+        let h = head_of(
+            "POST /v1/predict HTTP/1.1\r\nHost: x\r\nContent-Length: 12\r\n\
+             Expect: 100-continue\r\n\r\n",
+        )
+        .unwrap();
+        assert_eq!(h.method, "POST");
+        assert_eq!(h.path(), "/v1/predict");
+        assert_eq!(h.content_length, Some(12));
+        assert!(h.expect_continue);
+        assert!(h.keep_alive);
+    }
+
+    #[test]
+    fn connection_close_and_http10_defaults() {
+        let h = head_of("GET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap();
+        assert!(!h.keep_alive);
+        let h = head_of("GET /healthz HTTP/1.0\r\n\r\n").unwrap();
+        assert!(!h.keep_alive);
+        let h = head_of("GET /healthz HTTP/1.0\r\nConnection: keep-alive\r\n\r\n").unwrap();
+        assert!(h.keep_alive);
+    }
+
+    #[test]
+    fn query_strings_are_stripped_by_path() {
+        let h = head_of("GET /healthz?verbose=1 HTTP/1.1\r\n\r\n").unwrap();
+        assert_eq!(h.path(), "/healthz");
+        assert_eq!(h.target, "/healthz?verbose=1");
+    }
+
+    #[test]
+    fn malformed_heads_are_rejected() {
+        for raw in [
+            "GARBAGE\r\n\r\n",
+            "GET /x HTTP/2\r\n\r\n",
+            "GET /x HTTP/1.1 extra\r\n\r\n",
+            "POST /x HTTP/1.1\r\nContent-Length: nope\r\n\r\n",
+            "POST /x HTTP/1.1\r\nContent-Length: 5\r\nContent-Length: 9\r\n\r\n",
+            "POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n",
+            "GET /x HTTP/1.1\r\nno-colon-here\r\n\r\n",
+        ] {
+            assert!(matches!(head_of(raw), Err(WireError::Malformed(_))), "accepted {raw:?}");
+        }
+    }
+
+    #[test]
+    fn empty_stream_is_closed_partial_is_malformed() {
+        assert!(matches!(head_of(""), Err(WireError::Closed)));
+        assert!(matches!(head_of("GET /x HT"), Err(WireError::Malformed(_))));
+        assert!(matches!(
+            head_of("GET /x HTTP/1.1\r\nHost: y\r\n"),
+            Err(WireError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn oversized_head_is_bounded() {
+        let raw = format!("GET /x HTTP/1.1\r\nPad: {}\r\n\r\n", "y".repeat(MAX_HEAD_BYTES));
+        assert!(matches!(head_of(&raw), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn body_framing() {
+        let mut r = Cursor::new(b"hello world".to_vec());
+        assert_eq!(read_body(&mut r, 5, 1024).unwrap(), b"hello");
+
+        let mut r = Cursor::new(b"short".to_vec());
+        assert!(matches!(read_body(&mut r, 10, 1024), Err(WireError::Malformed(_))));
+
+        let mut r = Cursor::new(Vec::new());
+        assert!(matches!(read_body(&mut r, 10, 5), Err(WireError::TooLarge(10))));
+    }
+
+    #[test]
+    fn responses_carry_length_and_envelope() {
+        let mut out = Vec::new();
+        Response::error(400, "invalid_json", "bad body").closing().write_to(&mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 400 Bad Request\r\n"), "{text}");
+        assert!(text.contains("Connection: close\r\n"));
+        let body = text.split("\r\n\r\n").nth(1).unwrap();
+        assert!(text.contains(&format!("Content-Length: {}\r\n", body.len())));
+        let parsed = Json::parse(body).unwrap();
+        assert_eq!(parsed.get("error").get("code").as_str(), Some("invalid_json"));
+        assert_eq!(parsed.get("error").get("message").as_str(), Some("bad body"));
+    }
+
+    #[test]
+    fn allow_header_on_405() {
+        let mut out = Vec::new();
+        let mut resp = Response::error(405, "method_not_allowed", "use GET");
+        resp.allow = Some("GET");
+        resp.write_to(&mut out).unwrap();
+        assert!(String::from_utf8(out).unwrap().contains("Allow: GET\r\n"));
+    }
+}

@@ -6,6 +6,8 @@
 //! reports. Supports the full JSON value model; numbers are held as f64
 //! (adequate for every payload in this project).
 
+pub mod lazy;
+
 use std::collections::BTreeMap;
 use std::fmt;
 

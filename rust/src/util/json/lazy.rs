@@ -1,0 +1,504 @@
+//! Lazy, offset-based JSON field extraction (ADR-003).
+//!
+//! The HTTP request path must pull one large field — `points`, a
+//! `[[f32; d]; rows]` array that dominates the body — out of a small
+//! envelope object without paying for a full [`Json`](super::Json) tree
+//! (per-element `Json::Num` allocations plus a `BTreeMap` per row would
+//! multiply the body size several times over; mik-sdk's ADR-002 measured
+//! the same partial-extraction pattern at ~33× for sparse reads).
+//!
+//! This module scans the byte buffer once, records the *offsets* of the
+//! requested top-level fields, and hands each back as a [`RawValue`]
+//! borrowing the original buffer. Small fields can then be bridged into
+//! the eager parser ([`RawValue::parse_full`]); the hot `points` field has
+//! a dedicated flat decoder ([`RawValue::parse_points`]) that parses each
+//! number token **directly with `str::parse::<f32>`** — the same
+//! single-rounding conversion the CSV loader uses — so a feature value
+//! travels `text → f32` identically over HTTP and over `--csv`, keeping
+//! the served predictions bit-identical to the CLI path. (Parsing into
+//! `f64` first and casting would round twice and break that contract.)
+//!
+//! Skipped fields are validated *structurally* (balanced brackets, sound
+//! string framing) but not lexically; only fields a caller actually
+//! extracts get full validation. Errors carry byte offsets and never
+//! panic on any input.
+
+use super::{Json, JsonError};
+
+/// An unparsed JSON value: a slice of the original buffer plus its offset.
+///
+/// Produced by [`fields`]; decode with [`parse_full`](RawValue::parse_full)
+/// or [`parse_points`](RawValue::parse_points).
+#[derive(Clone, Copy, Debug)]
+pub struct RawValue<'a> {
+    /// The value's bytes, trimmed of surrounding whitespace.
+    pub bytes: &'a [u8],
+    /// Byte offset of `bytes[0]` within the scanned buffer (for diagnostics).
+    pub offset: usize,
+}
+
+/// A flat, rectangular batch of points decoded from a `[[num; d]; rows]`
+/// JSON array (row-major, matching [`crate::data::Dataset`] layout).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Points {
+    /// Number of rows (points).
+    pub rows: usize,
+    /// Dimensionality shared by every row. 0 when `rows == 0`.
+    pub d: usize,
+    /// `rows * d` features, row-major.
+    pub features: Vec<f32>,
+}
+
+/// Scan a top-level JSON object once and return the raw value of each
+/// requested field, aligned with `keys` (`None` where the field is absent).
+///
+/// Only the requested fields are decoded later; everything else is
+/// structurally skipped in place. Duplicate keys resolve to the last
+/// occurrence, matching the eager parser's `BTreeMap` insert semantics.
+pub fn fields<'a>(buf: &'a [u8], keys: &[&str]) -> Result<Vec<Option<RawValue<'a>>>, JsonError> {
+    let mut s = Scanner { bytes: buf, pos: 0 };
+    let mut out: Vec<Option<RawValue<'a>>> = vec![None; keys.len()];
+    s.skip_ws();
+    s.expect(b'{', "expected a JSON object")?;
+    s.skip_ws();
+    if s.peek() == Some(b'}') {
+        s.pos += 1;
+    } else {
+        loop {
+            s.skip_ws();
+            let key = s.key()?;
+            s.skip_ws();
+            s.expect(b':', "expected ':' after object key")?;
+            s.skip_ws();
+            let start = s.pos;
+            s.skip_value()?;
+            let end = s.pos;
+            if let Some(slot) = keys.iter().position(|k| key.matches(k.as_bytes())) {
+                out[slot] = Some(RawValue { bytes: &buf[start..end], offset: start });
+            }
+            s.skip_ws();
+            match s.bump() {
+                Some(b',') => continue,
+                Some(b'}') => break,
+                _ => {
+                    s.rewind();
+                    return Err(s.err("expected ',' or '}' in object"));
+                }
+            }
+        }
+    }
+    s.skip_ws();
+    if s.pos != s.bytes.len() {
+        return Err(s.err("trailing characters after JSON object"));
+    }
+    Ok(out)
+}
+
+impl RawValue<'_> {
+    /// Bridge into the eager parser for small fields (options, names, …).
+    ///
+    /// Error offsets are rebased onto the original buffer.
+    pub fn parse_full(&self) -> Result<Json, JsonError> {
+        let text = std::str::from_utf8(self.bytes).map_err(|_| JsonError {
+            msg: "invalid utf-8 in value".to_string(),
+            offset: self.offset,
+        })?;
+        Json::parse(text).map_err(|e| JsonError { msg: e.msg, offset: self.offset + e.offset })
+    }
+
+    /// Decode a `[[num; d]; rows]` array into a flat row-major `Vec<f32>`.
+    ///
+    /// Enforces rectangularity (every row must have the first row's
+    /// length) and rejects non-numeric elements. Each number token is
+    /// converted with `str::parse::<f32>` — single rounding, identical to
+    /// the CSV loader — so HTTP-submitted features match file-submitted
+    /// features bit for bit. An empty outer array decodes to
+    /// `rows == 0, d == 0`.
+    pub fn parse_points(&self) -> Result<Points, JsonError> {
+        let mut s = Scanner { bytes: self.bytes, pos: 0 };
+        let base = self.offset;
+        let rebase = |mut e: JsonError| {
+            e.offset += base;
+            e
+        };
+        s.skip_ws();
+        s.expect(b'[', "\"points\" must be an array of rows").map_err(rebase)?;
+        // ~6 bytes/number ("-0.25,") is a conservative pre-size guess.
+        let mut features: Vec<f32> = Vec::with_capacity(self.bytes.len() / 6);
+        let mut rows = 0usize;
+        let mut d = 0usize;
+        s.skip_ws();
+        if s.peek() == Some(b']') {
+            s.pos += 1;
+        } else {
+            loop {
+                s.skip_ws();
+                s.expect(b'[', "each row in \"points\" must be an array of numbers")
+                    .map_err(rebase)?;
+                let row_start = features.len();
+                s.skip_ws();
+                if s.peek() == Some(b']') {
+                    s.pos += 1;
+                } else {
+                    loop {
+                        s.skip_ws();
+                        features.push(s.number_f32().map_err(rebase)?);
+                        s.skip_ws();
+                        match s.bump() {
+                            Some(b',') => continue,
+                            Some(b']') => break,
+                            _ => {
+                                s.rewind();
+                                return Err(rebase(s.err("expected ',' or ']' in row")));
+                            }
+                        }
+                    }
+                }
+                let row_len = features.len() - row_start;
+                if rows == 0 {
+                    d = row_len;
+                } else if row_len != d {
+                    return Err(rebase(s.err(&format!(
+                        "ragged \"points\": row {rows} has {row_len} features, row 0 has {d}"
+                    ))));
+                }
+                rows += 1;
+                s.skip_ws();
+                match s.bump() {
+                    Some(b',') => continue,
+                    Some(b']') => break,
+                    _ => {
+                        s.rewind();
+                        return Err(rebase(s.err("expected ',' or ']' in \"points\"")));
+                    }
+                }
+            }
+        }
+        s.skip_ws();
+        if s.pos != s.bytes.len() {
+            return Err(rebase(s.err("trailing characters after \"points\" array")));
+        }
+        Ok(Points { rows, d, features })
+    }
+}
+
+/// An object key as it appears on the wire: raw bytes, possibly escaped.
+struct RawKey<'a> {
+    /// Key bytes *between* the quotes, escapes unresolved.
+    raw: &'a [u8],
+}
+
+impl RawKey<'_> {
+    /// Compare against a literal key. The fast path is a byte compare; keys
+    /// containing escapes take the slow path through the eager string
+    /// decoder so `"points"` still matches `points`.
+    fn matches(&self, want: &[u8]) -> bool {
+        if !self.raw.contains(&b'\\') {
+            return self.raw == want;
+        }
+        let mut quoted = Vec::with_capacity(self.raw.len() + 2);
+        quoted.push(b'"');
+        quoted.extend_from_slice(self.raw);
+        quoted.push(b'"');
+        match std::str::from_utf8(&quoted).ok().and_then(|t| Json::parse(t).ok()) {
+            Some(Json::Str(s)) => s.as_bytes() == want,
+            _ => false,
+        }
+    }
+}
+
+/// A structural scanner: positions and skips, no tree construction.
+/// Iterative throughout — arbitrarily nested input cannot overflow the
+/// stack, and no code path panics.
+struct Scanner<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Scanner<'a> {
+    fn err(&self, msg: &str) -> JsonError {
+        JsonError { msg: msg.to_string(), offset: self.pos }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let b = self.peek();
+        if b.is_some() {
+            self.pos += 1;
+        }
+        b
+    }
+
+    /// Undo the last `bump` so an error reports the offending byte.
+    fn rewind(&mut self) {
+        self.pos = self.pos.saturating_sub(1);
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8, msg: &str) -> Result<(), JsonError> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(msg))
+        }
+    }
+
+    /// Read an object key, returning its raw (still-escaped) bytes.
+    fn key(&mut self) -> Result<RawKey<'a>, JsonError> {
+        self.expect(b'"', "expected '\"' starting object key")?;
+        let start = self.pos;
+        self.skip_string_tail()?;
+        Ok(RawKey { raw: &self.bytes[start..self.pos - 1] })
+    }
+
+    /// Skip the remainder of a string whose opening quote was consumed.
+    fn skip_string_tail(&mut self) -> Result<(), JsonError> {
+        loop {
+            match self.bump() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => return Ok(()),
+                Some(b'\\') => {
+                    if self.bump().is_none() {
+                        return Err(self.err("unterminated escape"));
+                    }
+                }
+                Some(_) => {}
+            }
+        }
+    }
+
+    /// Structurally skip one JSON value of any kind without building it.
+    /// Containers are tracked with a depth counter, not recursion.
+    fn skip_value(&mut self) -> Result<(), JsonError> {
+        let mut depth = 0usize;
+        loop {
+            self.skip_ws();
+            match self.peek() {
+                None => return Err(self.err("unexpected end of input")),
+                Some(b'[' | b'{') => {
+                    depth += 1;
+                    self.pos += 1;
+                }
+                Some(b']' | b'}') => {
+                    if depth == 0 {
+                        return Err(self.err("unexpected closing bracket"));
+                    }
+                    depth -= 1;
+                    self.pos += 1;
+                    if depth == 0 {
+                        return Ok(());
+                    }
+                }
+                Some(b'"') => {
+                    self.pos += 1;
+                    self.skip_string_tail()?;
+                    if depth == 0 {
+                        return Ok(());
+                    }
+                }
+                Some(b',' | b':') => {
+                    if depth == 0 {
+                        return Err(self.err("unexpected separator"));
+                    }
+                    self.pos += 1;
+                }
+                Some(_) => {
+                    self.skip_scalar()?;
+                    if depth == 0 {
+                        return Ok(());
+                    }
+                }
+            }
+        }
+    }
+
+    /// Skip a scalar token (number / literal) up to the next delimiter.
+    fn skip_scalar(&mut self) -> Result<(), JsonError> {
+        let start = self.pos;
+        while let Some(b) = self.peek() {
+            match b {
+                b',' | b']' | b'}' | b':' | b' ' | b'\t' | b'\n' | b'\r' | b'"' | b'['
+                | b'{' => break,
+                _ => self.pos += 1,
+            }
+        }
+        if self.pos == start {
+            Err(self.err("expected a value"))
+        } else {
+            Ok(())
+        }
+    }
+
+    /// Parse one number token directly into f32 (single rounding; the
+    /// CSV-parity conversion). Rejects tokens that do not start like a
+    /// JSON number so `inf` / `nan` / `+1` never sneak in through Rust's
+    /// more liberal float grammar.
+    fn number_f32(&mut self) -> Result<f32, JsonError> {
+        let start = self.pos;
+        match self.peek() {
+            Some(b'-') => {
+                self.pos += 1;
+                if !matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                    self.pos = start;
+                    return Err(self.err("expected a number"));
+                }
+            }
+            Some(c) if c.is_ascii_digit() => {}
+            _ => return Err(self.err("expected a number")),
+        }
+        while let Some(b) = self.peek() {
+            match b {
+                b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-' => self.pos += 1,
+                _ => break,
+            }
+        }
+        // The token is ASCII by construction of the loop above.
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| self.err("invalid number encoding"))?;
+        text.parse::<f32>().map_err(|_| {
+            let mut e = self.err(&format!("bad number '{text}'"));
+            e.offset = start;
+            e
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extracts_requested_fields_only() {
+        let body = br#"{"model": "blobs", "points": [[1.0, 2.0]], "opts": {"x": [1, {"y": 2}]}}"#;
+        let got = fields(body, &["points", "model", "absent"]).unwrap();
+        assert_eq!(got[0].unwrap().bytes, b"[[1.0, 2.0]]");
+        assert_eq!(got[1].unwrap().bytes, b"\"blobs\"");
+        assert!(got[2].is_none());
+    }
+
+    #[test]
+    fn parse_points_matches_csv_parse() {
+        let body = br#"{"points": [[0.1, -2.5e-3, 3], [4.25, 1e9, -0]]}"#;
+        let raw = fields(body, &["points"]).unwrap()[0].unwrap();
+        let pts = raw.parse_points().unwrap();
+        assert_eq!((pts.rows, pts.d), (2, 3));
+        // Exact parity with the CSV loader's `token.parse::<f32>()`.
+        let want: Vec<f32> = ["0.1", "-2.5e-3", "3", "4.25", "1e9", "-0"]
+            .iter()
+            .map(|t| t.parse::<f32>().unwrap())
+            .collect();
+        assert_eq!(
+            pts.features.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|f| f.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn lazy_agrees_with_full_tree_on_values() {
+        let body = br#"{"points": [[1.5, 2], [3, 4.125]], "tag": "t"}"#;
+        let raw = fields(body, &["points"]).unwrap()[0].unwrap();
+        let pts = raw.parse_points().unwrap();
+        let tree = Json::parse(std::str::from_utf8(body).unwrap()).unwrap();
+        let rows = tree.get("points").as_arr().unwrap();
+        let flat: Vec<f32> = rows
+            .iter()
+            .flat_map(|r| r.as_arr().unwrap().iter().map(|v| v.as_f64().unwrap() as f32))
+            .collect();
+        // These literals are exactly representable, so the double-rounded
+        // tree path agrees; parse_points is the one that stays exact in
+        // general.
+        assert_eq!(pts.features, flat);
+    }
+
+    #[test]
+    fn empty_and_ragged_points() {
+        let empty = fields(br#"{"points": []}"#, &["points"]).unwrap()[0].unwrap();
+        let pts = empty.parse_points().unwrap();
+        assert_eq!((pts.rows, pts.d, pts.features.len()), (0, 0, 0));
+
+        let ragged = fields(br#"{"points": [[1, 2], [3]]}"#, &["points"]).unwrap()[0].unwrap();
+        let err = ragged.parse_points().unwrap_err();
+        assert!(err.msg.contains("ragged"), "{}", err.msg);
+    }
+
+    #[test]
+    fn rejects_non_numbers_in_points() {
+        for bad in [
+            r#"{"points": [["a"]]}"#,
+            r#"{"points": [[nan]]}"#,
+            r#"{"points": [[+1]]}"#,
+            r#"{"points": [[1, ]]}"#,
+            r#"{"points": 3}"#,
+            r#"{"points": [3]}"#,
+        ] {
+            let raw = fields(bad.as_bytes(), &["points"]).unwrap()[0].unwrap();
+            assert!(raw.parse_points().is_err(), "accepted {bad}");
+        }
+    }
+
+    #[test]
+    fn malformed_envelopes_error_never_panic() {
+        for bad in [
+            &b""[..],
+            b"[1, 2]",
+            b"{",
+            b"{\"a\"",
+            b"{\"a\": }",
+            b"{\"a\": 1,}",
+            b"{\"a\": \"unterminated",
+            b"{\"a\": 1} trailing",
+            b"{\"a\": [1, {2}",
+            b"not json at all",
+        ] {
+            assert!(fields(bad, &["a"]).is_err());
+        }
+    }
+
+    #[test]
+    fn deep_nesting_does_not_recurse() {
+        // 100k nested arrays in a skipped field: iterative skip handles it.
+        let mut body = Vec::from(&b"{\"deep\": "[..]);
+        body.extend_from_slice(&vec![b'['; 100_000]);
+        body.extend_from_slice(&vec![b']'; 100_000]);
+        body.extend_from_slice(b", \"x\": 1}");
+        let got = fields(&body, &["x"]).unwrap();
+        assert_eq!(got[0].unwrap().bytes, b"1");
+    }
+
+    #[test]
+    fn escaped_keys_still_match() {
+        // The wire key "points" unescapes to "points": slow-path compare.
+        let body = br#"{"\u0070oints": [[1]]}"#;
+        let got = fields(body, &["points"]).unwrap();
+        let pts = got[0].unwrap().parse_points().unwrap();
+        assert_eq!((pts.rows, pts.d), (1, 1));
+    }
+
+    #[test]
+    fn duplicate_keys_take_last() {
+        let body = br#"{"a": 1, "a": 2}"#;
+        let got = fields(body, &["a"]).unwrap();
+        assert_eq!(got[0].unwrap().bytes, b"2");
+        // Same answer as the eager parser's BTreeMap insert.
+        let tree = Json::parse(std::str::from_utf8(body).unwrap()).unwrap();
+        assert_eq!(tree.get("a").as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn parse_full_rebases_error_offsets() {
+        let body = br#"{"pad": 111111, "opts": {"x": nope}}"#;
+        let raw = fields(body, &["opts"]).unwrap()[0].unwrap();
+        let err = raw.parse_full().unwrap_err();
+        // The offset points into the original buffer, inside "opts".
+        assert!(err.offset > raw.offset, "offset {} not rebased", err.offset);
+    }
+}

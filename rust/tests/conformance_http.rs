@@ -1,0 +1,475 @@
+//! HTTP serving conformance suite (ISSUE 7): every endpoint documented in
+//! docs/API.md, exercised over real sockets.
+//!
+//! Contract under test (DESIGN.md §11, docs/API.md):
+//!
+//! 1. `POST /v1/predict` answers assignments **bit-identical** to the
+//!    scalar `KernelKMeansModel::predict` for the same feature text,
+//!    across request mixes (1/7/64 rows) and client thread counts — and
+//!    coalesced results equal sequential per-request results.
+//! 2. Under synchronized concurrent load the admission queue actually
+//!    coalesces: the served-batches counter stays below the request
+//!    counter (the CI `e2e-http` assertion, pinned here in-process).
+//! 3. Malformed JSON, truncated bodies, oversized payloads, and missing
+//!    `Content-Length` all answer documented error envelopes — the
+//!    connection never dies unannounced and the server never panics.
+//! 4. `/healthz` and `/v1/models` response shapes are pinned.
+//! 5. `serve::format` loader errors name the offending artifact path
+//!    (the ISSUE 7 bugfix regression).
+
+use mbkk::data::synthetic::{blobs, SyntheticSpec};
+use mbkk::data::Dataset;
+use mbkk::kernels::KernelFunction;
+use mbkk::kkmeans::{CenterWindow, KernelKMeansModel};
+use mbkk::serve::coalesce::StatsSnapshot;
+use mbkk::serve::http::{ServeConfig, Server};
+use mbkk::util::json::Json;
+use mbkk::util::rng::Rng;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+// ---- fixtures -------------------------------------------------------------
+
+/// A small servable model (the conformance_serve idiom: irregular support
+/// sizes without paying for a full fit).
+fn model_for(d: usize, seed: u64) -> (Dataset, KernelKMeansModel) {
+    let mut rng = Rng::seeded(seed);
+    let ds = blobs(&SyntheticSpec::new(160, d, 3), &mut rng);
+    let mut windows: Vec<CenterWindow> =
+        (0..3).map(|j| CenterWindow::new(j * 7, 23)).collect();
+    for step in 0..12 {
+        for (j, w) in windows.iter_mut().enumerate() {
+            let pts: Vec<usize> =
+                (0..1 + (step + j) % 5).map(|_| rng.below(ds.n)).collect();
+            w.apply_update(0.4, &pts, None);
+        }
+    }
+    let model =
+        KernelKMeansModel::freeze(&ds, KernelFunction::Gaussian { kappa: 2.0 }, &mut windows);
+    (ds, model)
+}
+
+struct TestServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    handle: std::thread::JoinHandle<mbkk::util::error::Result<StatsSnapshot>>,
+}
+
+fn start_server(model: &KernelKMeansModel, tweak: impl FnOnce(&mut ServeConfig)) -> TestServer {
+    let mut cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        max_wait: Duration::from_millis(5),
+        max_batch_rows: 512,
+        max_body_bytes: 256 * 1024,
+        read_timeout: Duration::from_millis(400),
+        max_connections: 64,
+    };
+    tweak(&mut cfg);
+    let server = Server::bind(model, "test-model.mbkk", &cfg).expect("bind");
+    let addr = server.local_addr().expect("local addr");
+    let shutdown = server.shutdown_flag();
+    let handle = std::thread::spawn(move || server.run());
+    TestServer { addr, shutdown, handle }
+}
+
+impl TestServer {
+    /// Flip the shutdown flag and collect the final counters — the same
+    /// clean-shutdown path SIGTERM takes in `mbkk serve`.
+    fn stop(self) -> StatsSnapshot {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.handle.join().expect("server thread").expect("server run")
+    }
+}
+
+// ---- a tiny blocking HTTP client ------------------------------------------
+
+struct Resp {
+    status: u16,
+    body: Json,
+    close: bool,
+    allow: Option<String>,
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let s = TcpStream::connect(addr).expect("connect");
+        s.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+        Client { reader: BufReader::new(s.try_clone().unwrap()), writer: s }
+    }
+
+    fn send_raw(&mut self, raw: &[u8]) {
+        self.writer.write_all(raw).expect("send");
+    }
+
+    fn request(&mut self, method: &str, path: &str, body: Option<&str>) -> Resp {
+        let mut req = format!("{method} {path} HTTP/1.1\r\nHost: test\r\n");
+        if let Some(b) = body {
+            req.push_str(&format!("Content-Length: {}\r\n", b.len()));
+        }
+        req.push_str("\r\n");
+        if let Some(b) = body {
+            req.push_str(b);
+        }
+        self.send_raw(req.as_bytes());
+        self.read_response()
+    }
+
+    fn read_response(&mut self) -> Resp {
+        let mut line = String::new();
+        self.reader.read_line(&mut line).expect("status line");
+        assert!(line.starts_with("HTTP/1.1 "), "bad status line {line:?}");
+        let status: u16 = line.split_whitespace().nth(1).expect("code").parse().expect("code");
+        let mut len = 0usize;
+        let mut close = false;
+        let mut allow = None;
+        loop {
+            let mut h = String::new();
+            self.reader.read_line(&mut h).expect("header line");
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            let (name, value) = h.split_once(':').expect("header colon");
+            match name.to_ascii_lowercase().as_str() {
+                "content-length" => len = value.trim().parse().expect("length"),
+                "connection" if value.trim().eq_ignore_ascii_case("close") => close = true,
+                "allow" => allow = Some(value.trim().to_string()),
+                _ => {}
+            }
+        }
+        let mut body = vec![0u8; len];
+        self.reader.read_exact(&mut body).expect("body");
+        let body = Json::parse(std::str::from_utf8(&body).expect("utf8")).expect("json body");
+        Resp { status, body, close, allow }
+    }
+}
+
+/// Serialize rows the way a client would: shortest-round-trip f32 text
+/// (`format!("{v}")`), which `parse::<f32>` recovers bit-exactly.
+fn points_json(ds: &Dataset, idx: &[usize]) -> String {
+    let rows: Vec<String> = idx
+        .iter()
+        .map(|&i| {
+            let cells: Vec<String> = ds.row(i).iter().map(|v| format!("{v}")).collect();
+            format!("[{}]", cells.join(","))
+        })
+        .collect();
+    format!("{{\"points\": [{}]}}", rows.join(","))
+}
+
+fn assignments_of(resp: &Resp) -> Vec<usize> {
+    resp.body
+        .get("assignments")
+        .as_arr()
+        .expect("assignments array")
+        .iter()
+        .map(|v| v.as_usize().expect("assignment index"))
+        .collect()
+}
+
+// ---- endpoint shape pins --------------------------------------------------
+
+#[test]
+fn healthz_and_models_shapes() {
+    let (_ds, model) = model_for(6, 41);
+    let srv = start_server(&model, |_| {});
+    let mut c = Client::connect(srv.addr);
+
+    let health = c.request("GET", "/healthz", None);
+    assert_eq!(health.status, 200);
+    assert_eq!(health.body.get("status").as_str(), Some("ok"));
+    assert_eq!(health.body.get("model").get("name").as_str(), Some("test-model.mbkk"));
+    assert_eq!(health.body.get("model").get("k").as_usize(), Some(model.k()));
+    assert_eq!(health.body.get("model").get("d").as_usize(), Some(model.d));
+    let stats = health.body.get("stats");
+    for key in ["requests", "batches", "rows", "coalesced_batches", "max_batch_rows"] {
+        assert!(stats.get(key).as_f64().is_some(), "stats missing {key}");
+    }
+    assert!(stats.get("active_connections").as_usize().is_some());
+
+    // Query strings are stripped before routing.
+    assert_eq!(c.request("GET", "/healthz?verbose=1", None).status, 200);
+
+    let models = c.request("GET", "/v1/models", None);
+    assert_eq!(models.status, 200);
+    let entries = models.body.get("models").as_arr().expect("models array");
+    assert_eq!(entries.len(), 1);
+    let m = &entries[0];
+    assert_eq!(m.get("name").as_str(), Some("test-model.mbkk"));
+    assert_eq!(m.get("kind").as_str(), Some("model"));
+    assert_eq!(m.get("format_version").as_usize(), Some(mbkk::serve::format::FORMAT_VERSION));
+    assert_eq!(m.get("kernel").get("name").as_str(), Some("gaussian"));
+    assert!(m.get("kernel").get("kappa").as_f64().is_some());
+    assert_eq!(m.get("k").as_usize(), Some(model.k()));
+    assert_eq!(m.get("d").as_usize(), Some(model.d));
+    assert_eq!(m.get("support_points").as_usize(), Some(model.support_points()));
+
+    srv.stop();
+}
+
+// ---- bit-identity ---------------------------------------------------------
+
+#[test]
+fn predict_matches_scalar_bitwise_across_mixes() {
+    let (ds, model) = model_for(8, 42);
+    let srv = start_server(&model, |_| {});
+    let mut c = Client::connect(srv.addr);
+
+    // Mixes cover 1-row, odd, and beyond-one-panel request sizes.
+    for (start, rows) in [(0usize, 1usize), (3, 7), (11, 64)] {
+        let idx: Vec<usize> = (0..rows).map(|j| (start + j * 3) % ds.n).collect();
+        let resp = c.request("POST", "/v1/predict", Some(&points_json(&ds, &idx)));
+        assert_eq!(resp.status, 200, "{:?}", resp.body.to_string());
+        assert_eq!(resp.body.get("rows").as_usize(), Some(rows));
+        let got = assignments_of(&resp);
+        let want: Vec<usize> = idx.iter().map(|&i| model.predict(ds.row(i))).collect();
+        assert_eq!(got, want, "served assignments diverged from scalar predict");
+    }
+
+    // Empty batch: well-formed, zero rows, zero assignments.
+    let resp = c.request("POST", "/v1/predict", Some("{\"points\": []}"));
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.body.get("rows").as_usize(), Some(0));
+    assert!(assignments_of(&resp).is_empty());
+
+    srv.stop();
+}
+
+#[test]
+fn coalesced_equals_sequential_across_thread_counts() {
+    let (ds, model) = model_for(5, 43);
+    let ds = Arc::new(ds);
+    let model = Arc::new(model);
+    for threads in [2usize, 8] {
+        let srv = start_server(model.as_ref(), |cfg| cfg.max_wait = Duration::from_millis(100));
+        let rounds = 3usize;
+        let barrier = Arc::new(Barrier::new(threads));
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let ds = Arc::clone(&ds);
+            let model = Arc::clone(&model);
+            let barrier = Arc::clone(&barrier);
+            let addr = srv.addr;
+            handles.push(std::thread::spawn(move || {
+                let mut c = Client::connect(addr);
+                for r in 0..rounds {
+                    let rows = 1 + (t + r) % 4;
+                    let idx: Vec<usize> =
+                        (0..rows).map(|j| (t * 31 + r * 7 + j) % ds.n).collect();
+                    let body = points_json(&ds, &idx);
+                    // Rendezvous so every thread's request hits the same
+                    // coalescing window.
+                    barrier.wait();
+                    let resp = c.request("POST", "/v1/predict", Some(&body));
+                    assert_eq!(resp.status, 200);
+                    let got = assignments_of(&resp);
+                    let want: Vec<usize> =
+                        idx.iter().map(|&i| model.predict(ds.row(i))).collect();
+                    assert_eq!(got, want, "thread {t} round {r} diverged under coalescing");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("client thread");
+        }
+        let stats = srv.stop();
+        let requests = (threads * rounds) as u64;
+        assert_eq!(stats.requests, requests);
+        assert!(
+            stats.batches < stats.requests,
+            "no coalescing at {threads} threads: {stats:?}"
+        );
+        assert!(stats.coalesced_batches >= 1, "{stats:?}");
+        assert_eq!(stats.rows, {
+            let mut total = 0u64;
+            for t in 0..threads {
+                for r in 0..rounds {
+                    total += (1 + (t + r) % 4) as u64;
+                }
+            }
+            total
+        });
+    }
+}
+
+// ---- robustness: the never-panic error envelope ---------------------------
+
+#[test]
+fn malformed_json_gets_400_and_connection_survives() {
+    let (ds, model) = model_for(4, 44);
+    let srv = start_server(&model, |_| {});
+    let mut c = Client::connect(srv.addr);
+
+    for (bad, code) in [
+        ("{not json", "invalid_json"),
+        ("[1, 2, 3]", "invalid_json"),
+        ("{\"rows\": []}", "missing_field"),
+        ("{\"points\": [[1, 2], [3]]}", "invalid_points"),
+        ("{\"points\": [[\"a\"]]}", "invalid_points"),
+        ("{\"points\": 7}", "invalid_points"),
+    ] {
+        let resp = c.request("POST", "/v1/predict", Some(bad));
+        assert_eq!(resp.status, 400, "{bad}");
+        assert_eq!(resp.body.get("error").get("code").as_str(), Some(code), "{bad}");
+        assert!(resp.body.get("error").get("message").as_str().is_some());
+        assert!(!resp.close, "body-level 400 must keep the connection open ({bad})");
+    }
+
+    // Shape mismatch against the served model's dimension.
+    let resp = c.request("POST", "/v1/predict", Some("{\"points\": [[1, 2]]}"));
+    assert_eq!(resp.status, 400);
+    assert_eq!(resp.body.get("error").get("code").as_str(), Some("shape_mismatch"));
+
+    // The same connection still serves a good request afterwards.
+    let idx = vec![0usize, 1];
+    let resp = c.request("POST", "/v1/predict", Some(&points_json(&ds, &idx)));
+    assert_eq!(resp.status, 200);
+
+    srv.stop();
+}
+
+#[test]
+fn truncated_body_gets_400_then_close() {
+    let (_ds, model) = model_for(4, 45);
+    let srv = start_server(&model, |_| {});
+    let mut c = Client::connect(srv.addr);
+    // Advertise 100 bytes, send 10, then half-close: the server sees EOF
+    // mid-body and must answer 400 instead of hanging or panicking.
+    c.send_raw(b"POST /v1/predict HTTP/1.1\r\nHost: t\r\nContent-Length: 100\r\n\r\n{\"points\"");
+    c.writer.shutdown(Shutdown::Write).unwrap();
+    let resp = c.read_response();
+    assert_eq!(resp.status, 400);
+    assert_eq!(resp.body.get("error").get("code").as_str(), Some("bad_request"));
+    assert!(resp.close, "framing is lost after a truncated body; must close");
+    srv.stop();
+}
+
+#[test]
+fn stalled_body_times_out_with_400() {
+    let (_ds, model) = model_for(4, 46);
+    let srv = start_server(&model, |cfg| cfg.read_timeout = Duration::from_millis(150));
+    let mut c = Client::connect(srv.addr);
+    // Advertise a body and never send it (connection stays open): the
+    // socket read timeout converts the stall into a 400.
+    c.send_raw(b"POST /v1/predict HTTP/1.1\r\nHost: t\r\nContent-Length: 50\r\n\r\n");
+    let resp = c.read_response();
+    assert_eq!(resp.status, 400);
+    assert!(resp.close);
+    srv.stop();
+}
+
+#[test]
+fn oversized_payload_gets_413_without_reading_it() {
+    let (_ds, model) = model_for(4, 47);
+    let srv = start_server(&model, |cfg| cfg.max_body_bytes = 1024);
+    let mut c = Client::connect(srv.addr);
+    // 10 MiB advertised, zero bytes sent: the 413 must come back
+    // immediately, proving the server rejected on the header alone.
+    c.send_raw(b"POST /v1/predict HTTP/1.1\r\nHost: t\r\nContent-Length: 10485760\r\n\r\n");
+    let resp = c.read_response();
+    assert_eq!(resp.status, 413);
+    assert_eq!(resp.body.get("error").get("code").as_str(), Some("payload_too_large"));
+    assert!(resp.close);
+    srv.stop();
+}
+
+#[test]
+fn missing_content_length_gets_411() {
+    let (_ds, model) = model_for(4, 48);
+    let srv = start_server(&model, |_| {});
+    let mut c = Client::connect(srv.addr);
+    let resp = c.request("POST", "/v1/predict", None);
+    assert_eq!(resp.status, 411);
+    assert_eq!(resp.body.get("error").get("code").as_str(), Some("length_required"));
+    assert!(resp.close);
+    srv.stop();
+}
+
+#[test]
+fn unknown_routes_and_methods() {
+    let (_ds, model) = model_for(4, 49);
+    let srv = start_server(&model, |_| {});
+    let mut c = Client::connect(srv.addr);
+
+    let resp = c.request("GET", "/nope", None);
+    assert_eq!(resp.status, 404);
+    assert_eq!(resp.body.get("error").get("code").as_str(), Some("not_found"));
+
+    let resp = c.request("DELETE", "/healthz", None);
+    assert_eq!(resp.status, 405);
+    assert_eq!(resp.allow.as_deref(), Some("GET"));
+
+    let resp = c.request("GET", "/v1/predict", None);
+    assert_eq!(resp.status, 405);
+    assert_eq!(resp.allow.as_deref(), Some("POST"));
+
+    srv.stop();
+}
+
+#[test]
+fn expect_continue_is_acknowledged() {
+    let (ds, model) = model_for(4, 50);
+    let srv = start_server(&model, |_| {});
+    let mut c = Client::connect(srv.addr);
+    let body = points_json(&ds, &[0, 1, 2]);
+    c.send_raw(
+        format!(
+            "POST /v1/predict HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\
+             Expect: 100-continue\r\n\r\n",
+            body.len()
+        )
+        .as_bytes(),
+    );
+    // The interim response arrives before we send a single body byte —
+    // without it curl would stall ~1 s per request and wreck p99.
+    let mut line = String::new();
+    c.reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("HTTP/1.1 100 Continue"), "{line:?}");
+    let mut blank = String::new();
+    c.reader.read_line(&mut blank).unwrap();
+    c.send_raw(body.as_bytes());
+    let resp = c.read_response();
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.body.get("rows").as_usize(), Some(3));
+    srv.stop();
+}
+
+#[test]
+fn clean_shutdown_returns_final_stats() {
+    let (ds, model) = model_for(4, 51);
+    let srv = start_server(&model, |_| {});
+    let mut c = Client::connect(srv.addr);
+    let resp = c.request("POST", "/v1/predict", Some(&points_json(&ds, &[0])));
+    assert_eq!(resp.status, 200);
+    let stats = srv.stop();
+    assert_eq!(stats.requests, 1);
+    assert_eq!(stats.batches, 1);
+    assert_eq!(stats.rows, 1);
+}
+
+// ---- the ISSUE 7 loader-path bugfix regression ----------------------------
+
+#[test]
+fn loader_errors_name_the_artifact_path() {
+    let dir = std::env::temp_dir();
+    let missing = dir.join(format!("mbkk_http_missing_{}.mbkk", std::process::id()));
+    let err = KernelKMeansModel::load(&missing).unwrap_err().to_string();
+    assert!(err.contains(&missing.display().to_string()), "missing-file error lost path: {err}");
+
+    let corrupt = dir.join(format!("mbkk_http_corrupt_{}.mbkk", std::process::id()));
+    std::fs::write(&corrupt, b"MBKKMDL\0 but then garbage").unwrap();
+    let err = KernelKMeansModel::load(&corrupt).unwrap_err().to_string();
+    std::fs::remove_file(&corrupt).ok();
+    assert!(err.contains(&corrupt.display().to_string()), "decode error lost path: {err}");
+
+    let err = mbkk::serve::format::load_stream(&missing).unwrap_err().to_string();
+    assert!(err.contains(&missing.display().to_string()), "stream error lost path: {err}");
+}
