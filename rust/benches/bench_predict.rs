@@ -64,6 +64,16 @@ fn main() {
             runner.bench("model save+load round-trip d=16", || {
                 KernelKMeansModel::from_bytes(&model.to_bytes()).expect("round-trip")
             });
+            // Format v2 checksums the header and payload on both ends of
+            // that round-trip (DESIGN.md §12). This case isolates one CRC
+            // pass over the serialized artifact so the round-trip's
+            // integrity overhead is attributable: roughly 2x this number
+            // per save and per load.
+            let bytes = model.to_bytes();
+            println!("  [setup] artifact size {} bytes", bytes.len());
+            runner.bench("artifact crc32 pass d=16", || {
+                mbkk::util::crc32::crc32(&bytes)
+            });
         }
     }
 

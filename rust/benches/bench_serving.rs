@@ -218,6 +218,23 @@ fn main() {
         println!("  -> lazy scan {r:.2}x faster than full-tree parse");
     }
 
+    // Failpoint overhead: every I/O boundary on the serving path calls
+    // `failpoint::armed()` (ADR-004). Unarmed it must cost one relaxed
+    // atomic load — this case measures 1M checks so the per-call cost is
+    // resolvable, and keeps the "unobservable in production" claim in
+    // the perf trajectory rather than in prose.
+    assert!(
+        !mbkk::util::failpoint::armed(),
+        "bench must run with MBKK_FAILPOINTS unset"
+    );
+    runner.bench("failpoint armed() x1M disabled", || {
+        let mut any = false;
+        for _ in 0..1_000_000u32 {
+            any |= std::hint::black_box(mbkk::util::failpoint::armed());
+        }
+        any
+    });
+
     runner.write_csv();
     runner.write_baseline(&BenchRunner::baseline_path());
 }

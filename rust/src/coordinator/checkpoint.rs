@@ -1,0 +1,330 @@
+//! Durable rotating training checkpoints (DESIGN.md §12, ADR-004).
+//!
+//! A checkpointed `run`/`fit` periodically snapshots the full truncated
+//! trainer state ([`crate::kkmeans::TrainSnapshot`]) into
+//! `ckpt-<iter>.mbkk` files under a checkpoint directory, each written
+//! with the crash-safe atomic protocol (same-dir temp + fsync + rename)
+//! and the v2 checksummed artifact format. Rotation keeps the newest
+//! `keep` snapshots plus an advisory `manifest.json`.
+//!
+//! Resume (`--resume auto`) selects the **newest checksum-valid** snapshot
+//! whose spec fingerprint matches, silently skipping torn or corrupt files
+//! (a crash mid-write leaves at most one of those, and the atomic protocol
+//! makes even that window tiny). Selection scans the directory rather than
+//! trusting the manifest: the manifest is itself a file that can be lost
+//! to a crash, and it must never be able to veto a valid snapshot.
+//!
+//! A resumed run replays only the remaining iterations from the restored
+//! RNG + window state and is **bit-identical** to the uninterrupted run —
+//! pinned by `kkmeans::truncated` tests at the algorithm layer and by
+//! `experiment` tests (and the CI chaos job) end to end.
+
+use std::path::{Path, PathBuf};
+
+use crate::kkmeans::TrainSnapshot;
+use crate::serve::format;
+use crate::util::error::{Context, Result};
+use crate::util::failpoint;
+use crate::util::json::Json;
+
+/// Default number of rotated snapshots to keep on disk.
+pub const DEFAULT_KEEP: usize = 3;
+
+/// Where and how often a training run snapshots itself.
+#[derive(Clone, Debug)]
+pub struct CheckpointConfig {
+    /// Directory for `ckpt-*.mbkk` + `manifest.json` (created on demand).
+    pub dir: PathBuf,
+    /// Snapshot cadence in iterations (0 disables checkpointing).
+    pub every: usize,
+    /// How many snapshots rotation retains (clamped to ≥ 1).
+    pub keep: usize,
+}
+
+impl CheckpointConfig {
+    /// A config with the default retention.
+    pub fn new(dir: PathBuf, every: usize) -> CheckpointConfig {
+        CheckpointConfig { dir, every, keep: DEFAULT_KEEP }
+    }
+}
+
+/// `ckpt-00000042.mbkk` — zero-padded so lexicographic = numeric order.
+fn snapshot_name(iter: usize) -> String {
+    format!("ckpt-{iter:08}.mbkk")
+}
+
+/// Parse `ckpt-NNNNNNNN.mbkk` back to its iteration, rejecting strays.
+fn parse_snapshot_name(name: &str) -> Option<usize> {
+    let digits = name.strip_prefix("ckpt-")?.strip_suffix(".mbkk")?;
+    if digits.is_empty() || !digits.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    digits.parse().ok()
+}
+
+/// Snapshot files in `dir`, sorted by iteration ascending. Non-snapshot
+/// files are ignored (the manifest, editor droppings, temp files).
+fn list_snapshots(dir: &Path) -> Result<Vec<(usize, PathBuf)>> {
+    let mut out = Vec::new();
+    let entries = std::fs::read_dir(dir)
+        .with_context(|| format!("listing checkpoint dir {}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.with_context(|| format!("listing checkpoint dir {}", dir.display()))?;
+        let name = entry.file_name();
+        if let Some(iter) = name.to_str().and_then(parse_snapshot_name) {
+            out.push((iter, entry.path()));
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Persist one snapshot durably and rotate old ones out.
+///
+/// `fingerprint` is the canonical spec string resume compares against;
+/// `n` is the training-set size (validates indices at load time).
+pub fn save_snapshot(
+    cfg: &CheckpointConfig,
+    snap: &TrainSnapshot,
+    fingerprint: &str,
+    n: usize,
+) -> Result<()> {
+    failpoint::fire("checkpoint.save")?;
+    std::fs::create_dir_all(&cfg.dir)
+        .with_context(|| format!("creating checkpoint dir {}", cfg.dir.display()))?;
+    let bytes = format::train_to_bytes(snap, fingerprint, n);
+    let path = cfg.dir.join(snapshot_name(snap.iterations()));
+    format::atomic_write(&path, &bytes)?;
+    rotate(cfg)
+}
+
+/// Prune to the newest `keep` snapshots and rewrite the advisory manifest.
+fn rotate(cfg: &CheckpointConfig) -> Result<()> {
+    let mut snaps = list_snapshots(&cfg.dir)?;
+    let keep = cfg.keep.max(1);
+    while snaps.len() > keep {
+        let (_, path) = snaps.remove(0);
+        std::fs::remove_file(&path)
+            .with_context(|| format!("pruning old checkpoint {}", path.display()))?;
+    }
+    let manifest = Json::obj(vec![
+        ("keep", Json::Num(keep as f64)),
+        (
+            "snapshots",
+            Json::Arr(
+                snaps
+                    .iter()
+                    .rev()
+                    .map(|(i, _)| Json::Str(snapshot_name(*i)))
+                    .collect(),
+            ),
+        ),
+    ]);
+    format::atomic_write(&cfg.dir.join("manifest.json"), manifest.to_string().as_bytes())
+}
+
+/// Select the newest checksum-valid snapshot for `--resume auto`.
+///
+/// Walks snapshots newest-first; a torn or corrupt file is *skipped* with
+/// a note on stderr (falling back to the previous valid one), while a
+/// valid snapshot written by a **different spec** is a hard error — that
+/// is a user pointing a run at the wrong directory, and silently starting
+/// fresh (or resuming the wrong run) would be worse than stopping.
+/// `Ok(None)` means no snapshot files exist (or the directory doesn't).
+pub fn load_latest(
+    dir: &Path,
+    fingerprint: &str,
+    n: usize,
+) -> Result<Option<(TrainSnapshot, PathBuf)>> {
+    failpoint::fire("checkpoint.resume")?;
+    if !dir.exists() {
+        return Ok(None);
+    }
+    let mut snaps = list_snapshots(dir)?;
+    snaps.reverse();
+    for (_, path) in snaps {
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("mbkk: skipping unreadable checkpoint {}: {e}", path.display());
+                continue;
+            }
+        };
+        match format::train_from_bytes(&bytes) {
+            Ok((snap, meta)) => {
+                if meta.fingerprint != fingerprint {
+                    crate::bail!(
+                        "checkpoint {} was written by a different run \
+                         configuration (found fingerprint {:?}, this run is {:?}); \
+                         refusing to resume — point --checkpoint-dir at this run's \
+                         directory or use --resume never",
+                        path.display(),
+                        meta.fingerprint,
+                        fingerprint
+                    );
+                }
+                if meta.n != n {
+                    crate::bail!(
+                        "checkpoint {} was trained on n={} points but this run has n={}",
+                        path.display(),
+                        meta.n,
+                        n
+                    );
+                }
+                return Ok(Some((snap, path)));
+            }
+            Err(e) => {
+                eprintln!(
+                    "mbkk: skipping corrupt checkpoint {} ({e}); trying the previous one",
+                    path.display()
+                );
+            }
+        }
+    }
+    Ok(None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{blobs, SyntheticSpec};
+    use crate::kernels::{Gram, KernelFunction};
+    use crate::kkmeans::{
+        Init, LearningRate, NativeBackend, ScheduleSpec, TerminationMode, TruncatedConfig,
+        TruncatedMiniBatchKernelKMeans,
+    };
+    use crate::util::rng::Rng;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("mbkk-ckpt-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    /// Collect real snapshots from a short truncated fit.
+    fn snapshots(n: usize, every: usize) -> (Vec<TrainSnapshot>, usize) {
+        let mut rng = Rng::seeded(77);
+        let ds = blobs(&SyntheticSpec::new(n, 4, 3), &mut rng);
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 2.0 });
+        let algo = TruncatedMiniBatchKernelKMeans::new(TruncatedConfig {
+            k: 3,
+            batch_size: 32,
+            schedule: ScheduleSpec::Fixed,
+            tau: 60,
+            max_iters: 10,
+            epsilon: None,
+            termination: TerminationMode::default(),
+            learning_rate: LearningRate::Beta,
+            init: Init::KMeansPlusPlus,
+            weights: None,
+        });
+        let mut fit_rng = Rng::seeded(5);
+        let mut snaps = Vec::new();
+        algo.fit_with_backend_resumable(&gram, &mut NativeBackend, &mut fit_rng, None, every, &mut |s| {
+            snaps.push(s.clone());
+            Ok(())
+        })
+        .unwrap();
+        (snaps, ds.n)
+    }
+
+    #[test]
+    fn snapshot_names_roundtrip_and_reject_strays() {
+        assert_eq!(snapshot_name(42), "ckpt-00000042.mbkk");
+        assert_eq!(parse_snapshot_name("ckpt-00000042.mbkk"), Some(42));
+        for stray in ["manifest.json", "ckpt-.mbkk", "ckpt-12.tmp", "ckpt-x2.mbkk", "note.txt"] {
+            assert_eq!(parse_snapshot_name(stray), None, "{stray}");
+        }
+    }
+
+    #[test]
+    fn save_rotate_and_load_latest() {
+        let dir = tmpdir("rotate");
+        let (snaps, n) = snapshots(200, 2);
+        assert!(snaps.len() >= 4, "need ≥4 snapshots, got {}", snaps.len());
+        let cfg = CheckpointConfig { dir: dir.clone(), every: 2, keep: 2 };
+        for s in &snaps {
+            save_snapshot(&cfg, s, "spec-a", n).unwrap();
+        }
+        // Rotation keeps exactly `keep`, the newest ones.
+        let on_disk = list_snapshots(&dir).unwrap();
+        assert_eq!(on_disk.len(), 2);
+        assert_eq!(on_disk.last().unwrap().0, snaps.last().unwrap().iterations());
+        // Manifest lists them newest-first.
+        let manifest =
+            Json::parse(&std::fs::read_to_string(dir.join("manifest.json")).unwrap()).unwrap();
+        let listed = manifest.get("snapshots").as_arr().unwrap();
+        assert_eq!(listed[0].as_str(), Some(snapshot_name(on_disk[1].0).as_str()));
+        // load_latest returns the newest snapshot, bit-identical.
+        let (loaded, path) = load_latest(&dir, "spec-a", n).unwrap().expect("a snapshot");
+        assert_eq!(path, on_disk.last().unwrap().1);
+        assert_eq!(loaded.iterations(), snaps.last().unwrap().iterations());
+        assert_eq!(
+            format::train_to_bytes(&loaded, "spec-a", n),
+            format::train_to_bytes(snaps.last().unwrap(), "spec-a", n)
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_newest_falls_back_to_previous_valid() {
+        let dir = tmpdir("fallback");
+        let (snaps, n) = snapshots(200, 2);
+        let cfg = CheckpointConfig { dir: dir.clone(), every: 2, keep: 3 };
+        for s in snaps.iter().take(3) {
+            save_snapshot(&cfg, s, "spec-a", n).unwrap();
+        }
+        let on_disk = list_snapshots(&dir).unwrap();
+        assert_eq!(on_disk.len(), 3);
+        // Tear the newest snapshot mid-payload (a simulated crash that
+        // somehow survived the atomic protocol) and bit-flip the second.
+        let newest = &on_disk[2].1;
+        let bytes = std::fs::read(newest).unwrap();
+        std::fs::write(newest, &bytes[..bytes.len() / 2]).unwrap();
+        let second = &on_disk[1].1;
+        let mut bytes = std::fs::read(second).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        std::fs::write(second, &bytes).unwrap();
+        // Selection must land on the oldest — the only checksum-valid one.
+        let (loaded, path) = load_latest(&dir, "spec-a", n).unwrap().expect("fallback");
+        assert_eq!(path, on_disk[0].1);
+        assert_eq!(loaded.iterations(), snaps[0].iterations());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mismatched_fingerprint_is_a_hard_error_and_empty_dir_is_none() {
+        let dir = tmpdir("fprint");
+        assert!(load_latest(&dir, "spec-a", 200).unwrap().is_none());
+        assert!(load_latest(&dir.join("never-created"), "spec-a", 200).unwrap().is_none());
+        let (snaps, n) = snapshots(200, 4);
+        let cfg = CheckpointConfig::new(dir.clone(), 4);
+        save_snapshot(&cfg, &snaps[0], "spec-a", n).unwrap();
+        let err = load_latest(&dir, "spec-B", n).unwrap_err().to_string();
+        assert!(err.contains("different run configuration"), "{err}");
+        let err = load_latest(&dir, "spec-a", n + 1).unwrap_err().to_string();
+        assert!(err.contains("n="), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn checkpoint_failpoints_surface_as_errors() {
+        let _x = failpoint::exclusive_test_lock();
+        let dir = tmpdir("failpoint");
+        let (snaps, n) = snapshots(200, 4);
+        let cfg = CheckpointConfig::new(dir.clone(), 4);
+        failpoint::configure("checkpoint.save=1*err(disk on fire)").unwrap();
+        let err = save_snapshot(&cfg, &snaps[0], "spec-a", n).unwrap_err().to_string();
+        assert!(err.contains("disk on fire"), "{err}");
+        failpoint::clear("checkpoint.save");
+        save_snapshot(&cfg, &snaps[0], "spec-a", n).unwrap();
+        failpoint::configure("checkpoint.resume=1*err(resume vetoed)").unwrap();
+        let err = load_latest(&dir, "spec-a", n).unwrap_err().to_string();
+        assert!(err.contains("resume vetoed"), "{err}");
+        failpoint::clear("checkpoint.resume");
+        assert!(load_latest(&dir, "spec-a", n).unwrap().is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -8,6 +8,7 @@
 //! unlocks million-point runs). Algorithms only ever see
 //! `&dyn KernelProvider`, so the choice is made once, here.
 
+use super::checkpoint::{self, CheckpointConfig};
 use crate::bail;
 use crate::data::{registry, Dataset};
 use crate::kernels::{graph, sigma, CachedGram, CacheStats, Gram, KernelFunction, KernelProvider};
@@ -376,6 +377,35 @@ impl RunSpec {
             self.seed
         )
     }
+
+    /// Canonical string naming everything that affects the fit's bit
+    /// stream. Stored in every checkpoint and compared at `--resume auto`
+    /// time, so state from a different run configuration can never be
+    /// replayed into this one (the `v1|` prefix versions the encoding
+    /// itself). Exhaustive over the spec's fields on purpose — a field
+    /// that *doesn't* change results (there is none today) would merely
+    /// force a fresh start, which is safe; the reverse is not.
+    pub fn fingerprint(&self) -> String {
+        let kernel = match self.kernel {
+            KernelSpec::Gaussian { multiplier } => format!("gaussian:{multiplier}"),
+            KernelSpec::Knn { neighbors } => format!("knn:{neighbors}"),
+            KernelSpec::Heat { neighbors, t } => format!("heat:{neighbors}:{t}"),
+        };
+        format!(
+            "v1|ds={}|scale={}|kernel={}|algo={}|k={}|b={}|sched={}|tau={}|iters={}|eps={:?}|seed={}",
+            self.dataset,
+            self.scale,
+            kernel,
+            self.algo.name(),
+            self.k,
+            self.batch_size,
+            self.schedule.label(),
+            self.tau,
+            self.max_iters,
+            self.epsilon,
+            self.seed
+        )
+    }
 }
 
 /// Metrics from one run.
@@ -562,6 +592,105 @@ pub fn run_on_dataset(
     }
 }
 
+/// How a checkpointed run treats snapshots already in the directory.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResumeMode {
+    /// Resume from the newest checksum-valid snapshot whose fingerprint
+    /// matches, falling back past torn/corrupt files; start fresh if none.
+    Auto,
+    /// Ignore existing snapshots and start from iteration 0 (new
+    /// snapshots still overwrite the directory as training progresses).
+    Never,
+}
+
+/// [`run_on_dataset`] with durable checkpointing (DESIGN.md §12): the
+/// trainer snapshots its full state every `ckpt.every` iterations through
+/// [`checkpoint::save_snapshot`], and `ResumeMode::Auto` restarts from the
+/// newest valid snapshot, replaying only the iteration suffix. The
+/// outcome is **bit-identical** to the plain run — checkpointing only
+/// reads trainer state, and a resume restores the RNG mid-stream — which
+/// the module tests and the CI chaos job both pin.
+///
+/// Truncated-algorithm only: it is the one trainer whose complete state
+/// (windows + RNG + stopper log) is snapshot-able in `O(k·τ)`.
+pub fn run_on_dataset_checkpointed(
+    spec: &RunSpec,
+    ds: &Dataset,
+    strategy: GramStrategy,
+    ckpt: &CheckpointConfig,
+    resume: ResumeMode,
+) -> crate::util::error::Result<(RunOutcome, Option<GramReport>)> {
+    let AlgoSpec::TruncKkm(lr) = spec.algo else {
+        bail!(
+            "--checkpoint-dir supports the truncated algorithm only \
+             ([b]trunc-kkm): it is the one trainer whose complete state is \
+             snapshot-able in O(k·tau) (got {})",
+            spec.algo.name()
+        );
+    };
+    let strategy = strategy.resolve(spec.algo, ds.n);
+    let mut krng = Rng::seeded(spec.seed ^ 0xC0DE);
+    let (built, kernel_secs) = spec.kernel.build_with(ds, &mut krng, strategy);
+    let fp = spec.fingerprint();
+    let resume_snap = match resume {
+        ResumeMode::Auto => checkpoint::load_latest(&ckpt.dir, &fp, ds.n)?.map(|(snap, path)| {
+            eprintln!(
+                "mbkk: resuming from checkpoint {} (iteration {})",
+                path.display(),
+                snap.iterations()
+            );
+            snap
+        }),
+        ResumeMode::Never => None,
+    };
+    let mut rng = Rng::seeded(spec.seed ^ 0x5EED);
+    let sw = Stopwatch::start();
+    let fit = TruncatedMiniBatchKernelKMeans::new(TruncatedConfig {
+        k: spec.k,
+        batch_size: spec.batch_size,
+        schedule: spec.schedule,
+        tau: spec.tau,
+        max_iters: spec.max_iters,
+        epsilon: spec.epsilon,
+        termination: TerminationMode::default(),
+        learning_rate: lr,
+        init: default_init(ds.n),
+        weights: None,
+    })
+    .fit_with_backend_resumable(
+        built.provider(),
+        &mut NativeBackend,
+        &mut rng,
+        resume_snap,
+        ckpt.every,
+        &mut |snap| checkpoint::save_snapshot(ckpt, snap, &fp, ds.n),
+    )?;
+    let cluster_secs = sw.secs();
+    let res = fit.result;
+    let (ari_v, nmi_v) = match &ds.labels {
+        Some(truth) => (ari(truth, &res.assignments), nmi(truth, &res.assignments)),
+        None => (f64::NAN, f64::NAN),
+    };
+    let outcome = RunOutcome {
+        ari: ari_v,
+        nmi: nmi_v,
+        objective: res.objective,
+        iterations: res.iterations,
+        converged: res.converged,
+        cluster_secs,
+        kernel_secs,
+        gamma: built.provider().gamma(),
+        decisions: res.decisions,
+        profiler: res.profiler,
+    };
+    let report = GramReport {
+        label: built.provider().label(),
+        mode: built.mode(),
+        cache: built.cache_stats(),
+    };
+    Ok((outcome, Some(report)))
+}
+
 /// A servable fit: the frozen model plus the run metrics and gram report
 /// the `run` subcommand would have printed for the same spec.
 pub struct ServableFit {
@@ -591,6 +720,29 @@ pub fn fit_servable_model(
     ds: &Dataset,
     strategy: GramStrategy,
 ) -> crate::util::error::Result<ServableFit> {
+    fit_servable_model_impl(spec, ds, strategy, None)
+}
+
+/// [`fit_servable_model`] with durable checkpointing — identical metrics
+/// and model (the sink only reads trainer state; resume restores the RNG
+/// mid-stream), but a killed `fit` restarts from its newest valid
+/// snapshot instead of iteration 0.
+pub fn fit_servable_model_checkpointed(
+    spec: &RunSpec,
+    ds: &Dataset,
+    strategy: GramStrategy,
+    ckpt: &CheckpointConfig,
+    resume: ResumeMode,
+) -> crate::util::error::Result<ServableFit> {
+    fit_servable_model_impl(spec, ds, strategy, Some((ckpt, resume)))
+}
+
+fn fit_servable_model_impl(
+    spec: &RunSpec,
+    ds: &Dataset,
+    strategy: GramStrategy,
+    ckpt: Option<(&CheckpointConfig, ResumeMode)>,
+) -> crate::util::error::Result<ServableFit> {
     let AlgoSpec::TruncKkm(lr) = spec.algo else {
         bail!(
             "fit serves the truncated algorithm only ([b]trunc-kkm): its \
@@ -617,7 +769,7 @@ pub fn fit_servable_model(
 
     let mut fit_rng = Rng::seeded(spec.seed ^ 0x5EED);
     let sw = Stopwatch::start();
-    let mut fit = TruncatedMiniBatchKernelKMeans::new(TruncatedConfig {
+    let algo = TruncatedMiniBatchKernelKMeans::new(TruncatedConfig {
         k: spec.k,
         batch_size: spec.batch_size,
         schedule: spec.schedule,
@@ -628,8 +780,34 @@ pub fn fit_servable_model(
         learning_rate: lr,
         init: default_init(ds.n),
         weights: None,
-    })
-    .fit_with_backend(built.provider(), &mut NativeBackend, &mut fit_rng);
+    });
+    let mut fit = match ckpt {
+        None => algo.fit_with_backend(built.provider(), &mut NativeBackend, &mut fit_rng),
+        Some((cfg, resume)) => {
+            let fp = spec.fingerprint();
+            let resume_snap = match resume {
+                ResumeMode::Auto => {
+                    checkpoint::load_latest(&cfg.dir, &fp, ds.n)?.map(|(snap, path)| {
+                        eprintln!(
+                            "mbkk: resuming from checkpoint {} (iteration {})",
+                            path.display(),
+                            snap.iterations()
+                        );
+                        snap
+                    })
+                }
+                ResumeMode::Never => None,
+            };
+            algo.fit_with_backend_resumable(
+                built.provider(),
+                &mut NativeBackend,
+                &mut fit_rng,
+                resume_snap,
+                cfg.every,
+                &mut |snap| checkpoint::save_snapshot(cfg, snap, &fp, ds.n),
+            )?
+        }
+    };
     let cluster_secs = sw.secs();
 
     let model = KernelKMeansModel::freeze(ds, func, &mut fit.centers);
@@ -851,6 +1029,95 @@ mod tests {
         let err =
             fit_servable_model(&full_spec, &ds, GramStrategy::default()).unwrap_err();
         assert!(format!("{err}").contains("truncated algorithm"), "{err}");
+    }
+
+    fn ckpt_dir(tag: &str) -> std::path::PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("mbkk-exp-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn fingerprints_separate_specs_and_are_stable() {
+        let a = base_spec(AlgoSpec::TruncKkm(LearningRate::Beta));
+        assert_eq!(a.fingerprint(), a.clone().fingerprint());
+        let mut b = a.clone();
+        b.seed += 1;
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        let mut c = a.clone();
+        c.kernel = KernelSpec::Gaussian { multiplier: 2.0 };
+        assert_ne!(a.fingerprint(), c.fingerprint());
+    }
+
+    #[test]
+    fn checkpointed_run_is_bit_identical_and_resumes() {
+        let mut spec = base_spec(AlgoSpec::TruncKkm(LearningRate::Beta));
+        spec.epsilon = Some(1e-9); // exercise the stopper-replay path too
+        let ds = registry::load(&spec.dataset, spec.scale, spec.seed);
+        let dir = ckpt_dir("run");
+        let ckpt = CheckpointConfig { dir: dir.clone(), every: 5, keep: 2 };
+        let (plain, _) = run_on_dataset(&spec, &ds, GramStrategy::default());
+        // Checkpointing changes nothing about the outcome.
+        let (checked, _) = run_on_dataset_checkpointed(
+            &spec, &ds, GramStrategy::default(), &ckpt, ResumeMode::Never,
+        )
+        .unwrap();
+        assert_eq!(plain.objective.to_bits(), checked.objective.to_bits());
+        assert_eq!(plain.ari.to_bits(), checked.ari.to_bits());
+        assert_eq!(plain.iterations, checked.iterations);
+        // Snapshots landed on disk; resuming from the newest one replays
+        // only the iteration suffix, bit-identically (this is exactly the
+        // crash-recovery path: kill after the last checkpoint, rerun).
+        let (resumed, _) = run_on_dataset_checkpointed(
+            &spec, &ds, GramStrategy::default(), &ckpt, ResumeMode::Auto,
+        )
+        .unwrap();
+        assert_eq!(plain.objective.to_bits(), resumed.objective.to_bits());
+        assert_eq!(plain.ari.to_bits(), resumed.ari.to_bits());
+        assert_eq!(plain.iterations, resumed.iterations);
+        // A different spec pointed at the same directory is a hard error,
+        // never a silent fresh start.
+        let mut other = spec.clone();
+        other.seed = 999;
+        let err = run_on_dataset_checkpointed(
+            &other, &ds, GramStrategy::default(), &ckpt, ResumeMode::Auto,
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("different run configuration"), "{err}");
+        // Non-truncated algorithms are rejected with a clear message.
+        let full = base_spec(AlgoSpec::FullKkm);
+        let err = run_on_dataset_checkpointed(
+            &full, &ds, GramStrategy::default(), &ckpt, ResumeMode::Never,
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("truncated algorithm"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn checkpointed_fit_matches_plain_fit() {
+        let spec = base_spec(AlgoSpec::TruncKkm(LearningRate::Beta));
+        let ds = registry::load(&spec.dataset, spec.scale, spec.seed);
+        let dir = ckpt_dir("fit");
+        let ckpt = CheckpointConfig::new(dir.clone(), 6);
+        let plain = fit_servable_model(&spec, &ds, GramStrategy::default()).unwrap();
+        let fresh = fit_servable_model_checkpointed(
+            &spec, &ds, GramStrategy::default(), &ckpt, ResumeMode::Never,
+        )
+        .unwrap();
+        let resumed = fit_servable_model_checkpointed(
+            &spec, &ds, GramStrategy::default(), &ckpt, ResumeMode::Auto,
+        )
+        .unwrap();
+        for fit in [&fresh, &resumed] {
+            assert_eq!(plain.outcome.objective.to_bits(), fit.outcome.objective.to_bits());
+            assert_eq!(plain.outcome.ari.to_bits(), fit.outcome.ari.to_bits());
+            assert_eq!(plain.outcome.iterations, fit.outcome.iterations);
+        }
+        // The frozen models serve identical assignments.
+        assert_eq!(plain.model.predict_all(&ds), resumed.model.predict_all(&ds));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -13,15 +13,21 @@
 //!   (fixed and nested schedules) under a shared ε, emitting the
 //!   deterministic reproduction table plus machine-local timings.
 //!
+//! * [`checkpoint`] — durable rotating training checkpoints + `--resume
+//!   auto` selection (crash-safe atomic writes, checksum-validated
+//!   snapshots, bit-identical replay — DESIGN.md §12).
+//!
 //! The CLI (`mbkk figures …`, `mbkk run …`, `mbkk gamma-table`) is a thin
 //! wrapper over this module; `examples/paper_figures.rs` is the end-to-end
 //! driver.
 
+pub mod checkpoint;
 pub mod experiment;
 pub mod figures;
 pub mod report;
 pub mod repro;
 
+pub use checkpoint::CheckpointConfig;
 pub use experiment::{AlgoSpec, KernelSpec, RunOutcome, RunSpec};
 pub use figures::{figure_ids, run_figure, run_gamma_table, FigureSpec};
 pub use repro::{run_repro, ReproOptions, ReproRow};

@@ -48,7 +48,7 @@ pub use state::{CenterWindow, LazyAssignState};
 pub use termination::{
     EpsilonStopper, TerminationDecision, TerminationMode, VarianceTracker,
 };
-pub use truncated::{TruncatedConfig, TruncatedFit, TruncatedMiniBatchKernelKMeans};
+pub use truncated::{TrainSnapshot, TruncatedConfig, TruncatedFit, TruncatedMiniBatchKernelKMeans};
 
 use crate::util::timing::Profiler;
 

@@ -36,6 +36,13 @@ pub trait BatchSchedule {
 
     /// Short name for labels and reports.
     fn name(&self) -> &'static str;
+
+    /// Restore internal carry state from a training checkpoint
+    /// (DESIGN.md §12). `prev` is the batch of the last completed
+    /// iteration; stateless schedules ignore it. A resumed
+    /// [`NestedSchedule`] carries the same prefix the uninterrupted run
+    /// would, keeping resumed fits bit-identical.
+    fn restore_prev(&mut self, _prev: &[usize]) {}
 }
 
 /// The paper's protocol: every iteration samples exactly `b` indices
@@ -134,6 +141,11 @@ impl BatchSchedule for NestedSchedule {
 
     fn name(&self) -> &'static str {
         "nested"
+    }
+
+    fn restore_prev(&mut self, prev: &[usize]) {
+        self.prev.clear();
+        self.prev.extend_from_slice(prev);
     }
 }
 
@@ -286,5 +298,33 @@ mod tests {
     #[should_panic(expected = "growth factor")]
     fn growth_below_one_rejected() {
         NestedSchedule::new(32, 0.5);
+    }
+
+    #[test]
+    fn restore_prev_resumes_bit_identically() {
+        // A schedule rebuilt mid-sequence from restore_prev + a restored
+        // RNG draws the exact batches the uninterrupted schedule would —
+        // the property training-checkpoint resume (DESIGN.md §12) rests on.
+        let (n, b, seed) = (500usize, 16usize, 21u64);
+        let mut full = NestedSchedule::new(b, 2.0);
+        let mut rf = Rng::seeded(seed);
+        let mut buf = Vec::new();
+        let mut batches = Vec::new();
+        let mut mid_state = None;
+        for i in 0..6 {
+            if i == 3 {
+                mid_state = Some(rf.state());
+            }
+            full.next_batch(i, n, &mut rf, &mut buf);
+            batches.push(buf.clone());
+        }
+        let (words, cache) = mid_state.unwrap();
+        let mut resumed = NestedSchedule::new(b, 2.0);
+        resumed.restore_prev(&batches[2]);
+        let mut rr = Rng::from_state(words, cache);
+        for (i, want) in batches.iter().enumerate().skip(3) {
+            resumed.next_batch(i, n, &mut rr, &mut buf);
+            assert_eq!(&buf, want, "iteration {i} diverged after resume");
+        }
     }
 }

@@ -441,6 +441,25 @@ impl CenterWindow {
         }
     }
 
+    /// Owned copy of the full window state. The borrowed
+    /// [`CenterWindow::state_view`] feeds the zero-copy streaming
+    /// checkpoint writer; the training-checkpoint path clones because the
+    /// snapshot must outlive the fit loop's borrows (DESIGN.md §12).
+    pub(crate) fn owned_state(&self) -> WindowState {
+        WindowState {
+            entries: self
+                .entries
+                .iter()
+                .map(|e| (e.points.clone(), e.raws.clone()))
+                .collect(),
+            scale: self.scale,
+            init_point: self.init_point,
+            tau: self.tau,
+            cc_cache: self.cc_cache,
+            updates_since_exact: self.updates_since_exact,
+        }
+    }
+
     /// Rebuild a window from an exported state — the exact inverse of
     /// [`CenterWindow::state_view`]. `total_points` is derived (it is
     /// always the sum of entry lengths); the caller (the artifact loader)

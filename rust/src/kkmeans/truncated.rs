@@ -17,10 +17,12 @@ use super::backend::{argmin_rows_into, AssignBackend, NativeBackend};
 use super::init::choose_centers;
 use super::learning_rate::{LearningRate, RateState};
 use super::schedule::ScheduleSpec;
-use super::state::CenterWindow;
+use super::state::{CenterWindow, WindowState};
 use super::termination::{EpsilonStopper, TerminationMode};
 use super::{FitResult, Init};
+use crate::bail;
 use crate::kernels::KernelProvider;
+use crate::util::error::Result;
 use crate::util::rng::Rng;
 use crate::util::timing::{Profiler, Stopwatch};
 
@@ -79,6 +81,41 @@ impl TruncatedConfig {
     }
 }
 
+/// Mid-fit state of Algorithm 2 captured at an iteration boundary —
+/// everything the loop needs to continue **bit-identically** to an
+/// uninterrupted run (DESIGN.md §12). Serialized as the kind-`train`
+/// artifact by [`crate::serve::format`]; rotated on disk by
+/// [`crate::coordinator::checkpoint`]. Opaque outside the crate.
+#[derive(Clone)]
+pub struct TrainSnapshot {
+    /// Iterations completed; the resumed loop starts here.
+    pub(crate) next_iter: usize,
+    /// Fit RNG at the boundary (Xoshiro words + Box–Muller cache).
+    pub(crate) rng: Rng,
+    /// Owned state of every center window.
+    pub(crate) windows: Vec<WindowState>,
+    /// Learning-rate schedule kind and per-center counters.
+    pub(crate) rate_kind: LearningRate,
+    pub(crate) rate_counts: Vec<f64>,
+    /// Pre-update batch objectives of every completed iteration.
+    pub(crate) history: Vec<f64>,
+    /// Stopper replay log: `(iteration, improvement)` per recorded
+    /// decision. Replaying these through a fresh [`EpsilonStopper`]
+    /// rebuilds its windowed variance tracker bit-identically (pinned by
+    /// `termination::tests::replaying_recorded_improvements_reproduces_decisions`).
+    pub(crate) improvements: Vec<(u32, f64)>,
+    /// The last completed iteration's batch — the carry prefix a resumed
+    /// [`super::schedule::NestedSchedule`] needs.
+    pub(crate) prev_batch: Vec<usize>,
+}
+
+impl TrainSnapshot {
+    /// Iterations completed when this snapshot was taken.
+    pub fn iterations(&self) -> usize {
+        self.next_iter
+    }
+}
+
 /// Detailed fit output: shared [`FitResult`] plus the final center windows
 /// (for inspection, warm restarts, or serving).
 pub struct TruncatedFit {
@@ -111,6 +148,29 @@ impl TruncatedMiniBatchKernelKMeans {
         backend: &mut dyn AssignBackend,
         rng: &mut Rng,
     ) -> TruncatedFit {
+        self.fit_with_backend_resumable(gram, backend, rng, None, 0, &mut |_| Ok(()))
+            .expect("fit without a checkpoint sink is infallible")
+    }
+
+    /// [`fit_with_backend`](Self::fit_with_backend) with crash-recovery
+    /// support (DESIGN.md §12): optionally start from a restored
+    /// [`TrainSnapshot`] instead of initializing, and hand a snapshot to
+    /// `sink` after every `checkpoint_every`-th completed iteration
+    /// (`0` = never). A resumed run replays the exact loop the
+    /// uninterrupted run would have executed — same RNG draws, same
+    /// batches (the schedule's carry prefix is restored), same stopper
+    /// decisions — so final assignments, objective, and artifact bytes
+    /// are identical. A `sink` error aborts the fit (durability failures
+    /// must surface, not silently stop checkpointing).
+    pub fn fit_with_backend_resumable(
+        &self,
+        gram: &dyn KernelProvider,
+        backend: &mut dyn AssignBackend,
+        rng: &mut Rng,
+        resume: Option<TrainSnapshot>,
+        checkpoint_every: usize,
+        sink: &mut dyn FnMut(&TrainSnapshot) -> Result<()>,
+    ) -> Result<TruncatedFit> {
         let n = gram.n();
         let k = self.cfg.k;
         assert!(k >= 1 && k <= n);
@@ -123,18 +183,76 @@ impl TruncatedMiniBatchKernelKMeans {
             .epsilon
             .map(|eps| EpsilonStopper::new(eps, self.cfg.termination));
 
-        // ---- init ----------------------------------------------------------
-        let sw = Stopwatch::start();
-        let seeds = choose_centers(gram, k, self.cfg.init, rng);
-        let mut centers: Vec<CenterWindow> = seeds
-            .iter()
-            .map(|&s| CenterWindow::new(s, self.cfg.tau))
-            .collect();
-        let mut rate = RateState::new(self.cfg.learning_rate, k);
-        prof.add("init", sw.secs());
+        let start_iter;
+        let mut centers: Vec<CenterWindow>;
+        let mut rate;
+        let mut history;
+        match resume {
+            None => {
+                // ---- init --------------------------------------------------
+                let sw = Stopwatch::start();
+                let seeds = choose_centers(gram, k, self.cfg.init, rng);
+                centers = seeds
+                    .iter()
+                    .map(|&s| CenterWindow::new(s, self.cfg.tau))
+                    .collect();
+                rate = RateState::new(self.cfg.learning_rate, k);
+                prof.add("init", sw.secs());
+                history = Vec::new();
+                start_iter = 0;
+            }
+            Some(snap) => {
+                // ---- resume: restore the checkpointed loop state -----------
+                let sw = Stopwatch::start();
+                if snap.windows.len() != k {
+                    bail!(
+                        "checkpoint has {} centers but the run is configured \
+                         for k={k}",
+                        snap.windows.len()
+                    );
+                }
+                if snap.rate_counts.len() != k {
+                    bail!(
+                        "checkpoint has {} learning-rate counters for k={k} \
+                         centers",
+                        snap.rate_counts.len()
+                    );
+                }
+                if snap.rate_kind.name() != self.cfg.learning_rate.name() {
+                    bail!(
+                        "checkpoint used the {:?} learning-rate schedule but \
+                         the run is configured for {:?}",
+                        snap.rate_kind.name(),
+                        self.cfg.learning_rate.name()
+                    );
+                }
+                if snap.next_iter > self.cfg.max_iters {
+                    bail!(
+                        "checkpoint is at iteration {} but the run is \
+                         configured for max_iters={}",
+                        snap.next_iter,
+                        self.cfg.max_iters
+                    );
+                }
+                *rng = snap.rng;
+                centers = snap.windows.into_iter().map(CenterWindow::from_state).collect();
+                rate = RateState::from_parts(snap.rate_kind, snap.rate_counts);
+                history = snap.history;
+                if let Some(st) = stopper.as_mut() {
+                    for &(it, imp) in &snap.improvements {
+                        // None of the replayed decisions stopped (a stopped
+                        // run is never checkpointed past its last iteration),
+                        // so the return value is vacuous here.
+                        let _ = st.observe(it as usize, imp);
+                    }
+                }
+                schedule.restore_prev(&snap.prev_batch);
+                start_iter = snap.next_iter;
+                prof.add("resume", sw.secs());
+            }
+        }
 
-        let mut history = Vec::new();
-        let mut iterations = 0;
+        let mut iterations = start_iter;
         let mut converged = false;
 
         // Buffers hoisted out of the iteration loop (§Perf): the distance
@@ -147,7 +265,7 @@ impl TruncatedMiniBatchKernelKMeans {
         let mut members: Vec<Vec<usize>> = vec![Vec::new(); k];
         let mut pw: Vec<f64> = Vec::new();
 
-        for iter in 0..self.cfg.max_iters {
+        for iter in start_iter..self.cfg.max_iters {
             iterations += 1;
             // ---- sample + assign (the Õ(kb²) hot path) ----------------------
             let sw = Stopwatch::start();
@@ -198,6 +316,37 @@ impl TruncatedMiniBatchKernelKMeans {
                     break;
                 }
             }
+
+            // ---- periodic durable checkpoint --------------------------------
+            // Captured after the stopper so a converged run never re-snapshots,
+            // and skipped on the final iteration (the finished artifact is the
+            // durable output there).
+            if checkpoint_every > 0
+                && (iter + 1) % checkpoint_every == 0
+                && iter + 1 < self.cfg.max_iters
+            {
+                let sw = Stopwatch::start();
+                let snap = TrainSnapshot {
+                    next_iter: iter + 1,
+                    rng: rng.clone(),
+                    windows: centers.iter().map(CenterWindow::owned_state).collect(),
+                    rate_kind: rate.kind(),
+                    rate_counts: rate.counts().to_vec(),
+                    history: history.clone(),
+                    improvements: stopper
+                        .as_ref()
+                        .map(|s| {
+                            s.decisions()
+                                .iter()
+                                .map(|d| (d.iteration as u32, d.improvement))
+                                .collect()
+                        })
+                        .unwrap_or_default(),
+                    prev_batch: batch.clone(),
+                };
+                sink(&snap)?;
+                prof.add("checkpoint", sw.secs());
+            }
         }
 
         // ---- finalize -------------------------------------------------------
@@ -206,7 +355,7 @@ impl TruncatedMiniBatchKernelKMeans {
             super::objective::evaluate_full(gram, &mut centers, backend, weights);
         prof.add("finalize", sw.secs());
 
-        TruncatedFit {
+        Ok(TruncatedFit {
             result: FitResult {
                 assignments,
                 objective,
@@ -217,7 +366,7 @@ impl TruncatedMiniBatchKernelKMeans {
                 profiler: prof,
             },
             centers,
-        }
+        })
     }
 }
 
@@ -408,6 +557,132 @@ mod tests {
         let res = TruncatedMiniBatchKernelKMeans::new(cfg).fit(&gram, &mut rng);
         assert_eq!(res.assignments.len(), ds.n);
         assert!(res.objective.is_finite());
+    }
+
+    #[test]
+    fn checkpoint_resume_is_bit_identical() {
+        // The crash-recovery property at the in-memory level: a fit resumed
+        // from ANY periodic snapshot finishes with bit-identical
+        // assignments, objective, history, and iteration count versus the
+        // uninterrupted run. Exercises the nested schedule (carry restore)
+        // and the ε-stopper (replay restore) on purpose.
+        let ds = fixture(500);
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 20.0 });
+        let cfg = TruncatedConfig {
+            k: 3,
+            batch_size: 48,
+            schedule: crate::kkmeans::ScheduleSpec::Nested { growth: 1.3 },
+            tau: 80,
+            max_iters: 24,
+            epsilon: Some(1e-9),
+            ..Default::default()
+        };
+        let mut r1 = Rng::seeded(12);
+        let full = TruncatedMiniBatchKernelKMeans::new(cfg.clone())
+            .fit_with_backend(&gram, &mut NativeBackend, &mut r1);
+        let mut snaps: Vec<TrainSnapshot> = Vec::new();
+        let mut r2 = Rng::seeded(12);
+        let replay = TruncatedMiniBatchKernelKMeans::new(cfg.clone())
+            .fit_with_backend_resumable(&gram, &mut NativeBackend, &mut r2, None, 5, &mut |s| {
+                snaps.push(s.clone());
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(replay.result.assignments, full.result.assignments);
+        assert!(!snaps.is_empty(), "the cadence must have produced snapshots");
+        for snap in snaps {
+            let at = snap.iterations();
+            let mut r3 = Rng::seeded(999); // overwritten by the snapshot's RNG
+            let resumed = TruncatedMiniBatchKernelKMeans::new(cfg.clone())
+                .fit_with_backend_resumable(
+                    &gram,
+                    &mut NativeBackend,
+                    &mut r3,
+                    Some(snap),
+                    0,
+                    &mut |_| Ok(()),
+                )
+                .unwrap();
+            assert_eq!(
+                resumed.result.assignments, full.result.assignments,
+                "assignments diverged resuming from iteration {at}"
+            );
+            assert_eq!(
+                resumed.result.objective.to_bits(),
+                full.result.objective.to_bits(),
+                "objective diverged resuming from iteration {at}"
+            );
+            assert_eq!(resumed.result.history, full.result.history);
+            assert_eq!(resumed.result.iterations, full.result.iterations);
+            assert_eq!(resumed.result.converged, full.result.converged);
+            assert_eq!(resumed.result.decisions.len(), full.result.decisions.len());
+        }
+    }
+
+    #[test]
+    fn resume_rejects_mismatched_config() {
+        let ds = fixture(300);
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 15.0 });
+        let cfg = TruncatedConfig {
+            k: 3,
+            batch_size: 32,
+            tau: 50,
+            max_iters: 10,
+            ..Default::default()
+        };
+        let mut snaps = Vec::new();
+        let mut rng = Rng::seeded(4);
+        TruncatedMiniBatchKernelKMeans::new(cfg.clone())
+            .fit_with_backend_resumable(&gram, &mut NativeBackend, &mut rng, None, 4, &mut |s| {
+                snaps.push(s.clone());
+                Ok(())
+            })
+            .unwrap();
+        let snap = snaps.pop().expect("snapshot");
+        let wrong_k = TruncatedConfig { k: 4, ..cfg.clone() };
+        let err = TruncatedMiniBatchKernelKMeans::new(wrong_k)
+            .fit_with_backend_resumable(
+                &gram,
+                &mut NativeBackend,
+                &mut Rng::seeded(4),
+                Some(snap.clone()),
+                0,
+                &mut |_| Ok(()),
+            )
+            .unwrap_err();
+        assert!(format!("{err}").contains("k="), "{err}");
+        let wrong_rate = TruncatedConfig { learning_rate: LearningRate::Sklearn, ..cfg };
+        let err = TruncatedMiniBatchKernelKMeans::new(wrong_rate)
+            .fit_with_backend_resumable(
+                &gram,
+                &mut NativeBackend,
+                &mut Rng::seeded(4),
+                Some(snap),
+                0,
+                &mut |_| Ok(()),
+            )
+            .unwrap_err();
+        assert!(format!("{err}").contains("learning-rate"), "{err}");
+    }
+
+    #[test]
+    fn sink_error_aborts_the_fit() {
+        let ds = fixture(300);
+        let gram = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa: 15.0 });
+        let cfg = TruncatedConfig {
+            k: 2,
+            batch_size: 32,
+            tau: 50,
+            max_iters: 20,
+            ..Default::default()
+        };
+        let mut rng = Rng::seeded(8);
+        let err = TruncatedMiniBatchKernelKMeans::new(cfg)
+            .fit_with_backend_resumable(&gram, &mut NativeBackend, &mut rng, None, 3, &mut |_| {
+                crate::bail!("disk full")
+            })
+            .unwrap_err();
+        assert!(format!("{err}").contains("disk full"), "{err}");
     }
 
     #[test]

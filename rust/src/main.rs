@@ -65,9 +65,15 @@ fn main() -> Result<()> {
                  \x20     --profile            print the fit's per-phase timing table\n\
                  \x20                          (init/refresh/assign/moments/update/stopping/\n\
                  \x20                          finalize splits, without a debugger)\n\
+                 \x20     --checkpoint-dir DIR durable rotating training checkpoints\n\
+                 \x20                          ([b]trunc-kkm only; atomic + checksummed)\n\
+                 \x20     --checkpoint-every N snapshot cadence in iterations (10)\n\
+                 \x20     --checkpoint-keep N  snapshots retained (3)\n\
+                 \x20     --resume MODE        auto (newest valid snapshot) | never\n\
                  \x20 fit                      train + save a servable model artifact\n\
                  \x20     --dataset/--csv/--scale/--k/--batch/--tau/--iters/--seed/\n\
-                 \x20     --profile as `run`\n\
+                 \x20     --profile/--checkpoint-dir/--checkpoint-every/\n\
+                 \x20     --checkpoint-keep/--resume as `run`\n\
                  \x20     --out PATH           artifact path (default model.mbkk)\n\
                  \x20 predict                  load a model + batch-score a dataset\n\
                  \x20     --model PATH         artifact from `fit` (default model.mbkk)\n\
@@ -85,6 +91,8 @@ fn main() -> Result<()> {
                  \x20     --max-wait-us N      request-coalescing deadline in us (2000)\n\
                  \x20     --max-batch N        coalescing flush threshold in rows (512)\n\
                  \x20     --max-body-mb N      request body cap in MiB (8)\n\
+                 \x20     --deadline-ms N      per-request budget; late requests are shed\n\
+                 \x20                          with 503 + Retry-After (5000)\n\
                  \x20 figures                  regenerate paper figures (CSV+md under --out)\n\
                  \x20     --fig N | --all      figure id 1..13\n\
                  \x20     --scale F --repeats N --iters N --quick --out DIR\n\
@@ -177,6 +185,46 @@ fn schedule_from_args(args: &Args) -> mbkk::kkmeans::ScheduleSpec {
     mbkk::kkmeans::ScheduleSpec::from_name(&args.get_or("schedule", "fixed"), growth)
 }
 
+/// Parse the shared `--checkpoint-dir` / `--checkpoint-every` /
+/// `--checkpoint-keep` / `--resume` flags (used by `run` and `fit`).
+/// Returns `None` when checkpointing is off (no `--checkpoint-dir`);
+/// the companion flags are rejected without it so a typo'd dir flag
+/// can't silently disable durability.
+fn checkpoint_from_args(
+    args: &Args,
+) -> Result<Option<(mbkk::coordinator::CheckpointConfig, experiment::ResumeMode)>> {
+    let dir = args.get("checkpoint-dir").map(|s| s.to_string());
+    let every = args.get_parse_or("checkpoint-every", 10usize);
+    let keep = args.get_parse_or("checkpoint-keep", mbkk::coordinator::checkpoint::DEFAULT_KEEP);
+    let resume = args.get_or("resume", "auto");
+    let Some(dir) = dir else {
+        if args.get("checkpoint-every").is_some()
+            || args.get("checkpoint-keep").is_some()
+            || args.get("resume").is_some()
+        {
+            mbkk::bail!(
+                "--checkpoint-every/--checkpoint-keep/--resume require \
+                 --checkpoint-dir DIR"
+            );
+        }
+        return Ok(None);
+    };
+    let resume = match resume.as_str() {
+        "auto" => experiment::ResumeMode::Auto,
+        "never" => experiment::ResumeMode::Never,
+        other => mbkk::bail!("unknown --resume mode {other:?} (auto|never)"),
+    };
+    if every == 0 {
+        mbkk::bail!("--checkpoint-every must be >= 1");
+    }
+    let cfg = mbkk::coordinator::CheckpointConfig {
+        dir: std::path::PathBuf::from(dir),
+        every,
+        keep: keep.max(1),
+    };
+    Ok(Some((cfg, resume)))
+}
+
 fn run(args: &Args) -> Result<()> {
     let algo = experiment::AlgoSpec::from_name(&args.get_or("algo", "btrunc-kkm"));
     let kernel = experiment::KernelSpec::from_name(&args.get_or("kernel", "gaussian"));
@@ -188,6 +236,7 @@ fn run(args: &Args) -> Result<()> {
     let k_opt = args.get("k").map(|s| s.parse::<usize>().expect("--k"));
     let show_profile = args.flag("profile");
     let (strategy, gram_flags_set) = gram_strategy(args)?;
+    let checkpointing = checkpoint_from_args(args)?;
     let spec = experiment::RunSpec {
         dataset: dataset.clone(),
         scale,
@@ -228,7 +277,22 @@ fn run(args: &Args) -> Result<()> {
     );
     let outcome = match backend.as_str() {
         "native" => {
-            let (out, report) = experiment::run_on_dataset(&spec, &ds, strategy);
+            let (out, report) = match &checkpointing {
+                None => experiment::run_on_dataset(&spec, &ds, strategy),
+                Some((ckpt, resume)) => {
+                    println!(
+                        "checkpoint: {} (every {} iters, keep {}, resume {})",
+                        ckpt.dir.display(),
+                        ckpt.every,
+                        ckpt.keep,
+                        match resume {
+                            experiment::ResumeMode::Auto => "auto",
+                            experiment::ResumeMode::Never => "never",
+                        }
+                    );
+                    experiment::run_on_dataset_checkpointed(&spec, &ds, strategy, ckpt, *resume)?
+                }
+            };
             if let Some(report) = report {
                 println!("gram:       {} ({})", report.label, report.mode);
                 if let Some(stats) = report.cache {
@@ -238,6 +302,11 @@ fn run(args: &Args) -> Result<()> {
             out
         }
         "xla" => {
+            if checkpointing.is_some() {
+                mbkk::bail!(
+                    "--checkpoint-dir applies to the native backend only"
+                );
+            }
             if gram_flags_set {
                 mbkk::bail!(
                     "--stream/--materialize/--cache-mb apply to the native backend \
@@ -340,6 +409,7 @@ fn fit(args: &Args) -> Result<()> {
     let k_opt = args.get("k").map(|s| s.parse::<usize>().expect("--k"));
     let show_profile = args.flag("profile");
     let (strategy, _) = gram_strategy(args)?;
+    let checkpointing = checkpoint_from_args(args)?;
     let mut spec = experiment::RunSpec {
         dataset: dataset.clone(),
         scale,
@@ -367,7 +437,22 @@ fn fit(args: &Args) -> Result<()> {
         ds.d,
         spec.k
     );
-    let fit = experiment::fit_servable_model(&spec, &ds, strategy)?;
+    let fit = match &checkpointing {
+        None => experiment::fit_servable_model(&spec, &ds, strategy)?,
+        Some((ckpt, resume)) => {
+            println!(
+                "checkpoint: {} (every {} iters, keep {}, resume {})",
+                ckpt.dir.display(),
+                ckpt.every,
+                ckpt.keep,
+                match resume {
+                    experiment::ResumeMode::Auto => "auto",
+                    experiment::ResumeMode::Never => "never",
+                }
+            );
+            experiment::fit_servable_model_checkpointed(&spec, &ds, strategy, ckpt, *resume)?
+        }
+    };
     println!("gram:       {} ({})", fit.report.label, fit.report.mode);
     if let Some(stats) = fit.report.cache {
         println!("cache:      {}", stats.summary());
@@ -384,8 +469,10 @@ fn fit(args: &Args) -> Result<()> {
     if show_profile {
         print!("\nphase timings:\n{}", fit.outcome.profiler.report());
     }
+    // Atomic (temp + fsync + rename) so a crash mid-write can never leave
+    // a torn artifact at the published path (DESIGN.md §12).
     let bytes = fit.model.to_bytes();
-    std::fs::write(Path::new(&out), &bytes)
+    mbkk::serve::format::atomic_write(Path::new(&out), &bytes)
         .with_context(|| format!("writing model artifact {out}"))?;
     println!(
         "model:      {out} ({} centers, {} support points, {} bytes)",
@@ -561,6 +648,7 @@ fn serve(args: &Args) -> Result<()> {
     let max_wait_us = args.get_parse_or("max-wait-us", 2000u64);
     let max_batch = args.get_parse_or("max-batch", 512usize);
     let max_body_mb = args.get_parse_or("max-body-mb", 8usize);
+    let deadline_ms = args.get_parse_or("deadline-ms", 5000u64);
     args.finish();
 
     let (model, label) = match &model_path {
@@ -592,6 +680,7 @@ fn serve(args: &Args) -> Result<()> {
         max_wait: std::time::Duration::from_micros(max_wait_us),
         max_batch_rows: max_batch.max(1),
         max_body_bytes: max_body_mb.max(1) * 1024 * 1024,
+        request_deadline: std::time::Duration::from_millis(deadline_ms.max(1)),
         ..Default::default()
     };
     let server = mbkk::serve::http::Server::bind(&model, &label, &cfg)?;
@@ -607,8 +696,9 @@ fn serve(args: &Args) -> Result<()> {
     install_shutdown_handlers(server.shutdown_flag());
     let stats = server.run()?;
     println!(
-        "shutdown:   served {} requests in {} batches ({} rows, {} coalesced batches)",
-        stats.requests, stats.batches, stats.rows, stats.coalesced_batches
+        "shutdown:   served {} requests in {} batches ({} rows, {} coalesced batches, {} aborted)",
+        stats.requests, stats.batches, stats.rows, stats.coalesced_batches,
+        stats.aborted_requests
     );
     Ok(())
 }

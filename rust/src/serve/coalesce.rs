@@ -20,12 +20,37 @@
 //! scalar path for *any* batch size and thread count, so concatenating
 //! requests and slicing the result per ticket cannot change any caller's
 //! answer. `conformance_http.rs` pins this end to end.
+//!
+//! **Fault containment** (ADR-003 leader-panic resolution, ADR-004): the
+//! leader's engine call runs under `catch_unwind`. If a batch panics, the
+//! batch is *poisoned* — some request in it takes the engine down — so the
+//! leader retries each request **alone**, each retry itself guarded.
+//! Exactly the poisoned request(s) get an `Err`; every co-traveller still
+//! gets its answer, and no connection thread ever dies inside the
+//! coalescer. As a backstop against a leader thread that disappears
+//! *before* claiming the batch, followers park with a timeout
+//! ([`PROMOTE_GRACE`] past the flush deadline): a follower that wakes
+//! unfilled with its ticket still queued promotes itself to leader and
+//! flushes the orphaned cohort. Shutdown uses [`Coalescer::begin_drain`]
+//! (flush the in-flight accumulation now rather than waiting out
+//! `max_wait`) and, after the drain deadline, [`Coalescer::abort_pending`]
+//! (fail any still-queued tickets with an error instead of leaving their
+//! threads parked forever); aborts are counted so the e2e drain test can
+//! assert a graceful shutdown aborted nothing.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Condvar, Mutex, MutexGuard};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use super::engine::PredictEngine;
+use crate::util::failpoint;
+
+/// How long past the leader's flush deadline a follower waits before
+/// concluding the leader is gone and promoting itself. Generous relative
+/// to `max_wait` so a merely-slow leader is never raced; promotion is
+/// idempotent anyway (whoever locks the queue first claims the cohort).
+const PROMOTE_GRACE: Duration = Duration::from_millis(100);
 
 /// Tuning knobs for the admission queue.
 #[derive(Debug, Clone)]
@@ -63,20 +88,23 @@ pub struct StatsSnapshot {
     pub coalesced_batches: u64,
     /// Largest single batch dispatched, in rows.
     pub max_batch_rows: u64,
+    /// Requests failed by [`Coalescer::abort_pending`] at shutdown — zero
+    /// under a graceful drain (pinned by the e2e drain test).
+    pub aborted_requests: u64,
 }
 
 #[derive(Default)]
 struct Queue {
     rows: Vec<f32>,
-    tickets: Vec<std::sync::Arc<Ticket>>,
+    tickets: Vec<Arc<Ticket>>,
 }
 
 /// One waiting request: where its rows sit in the accumulating batch and
-/// a slot for its slice of the results.
+/// a slot for its slice of the results (or the error that befell it).
 struct Ticket {
     first_row: usize,
     n_rows: usize,
-    result: Mutex<Option<Vec<usize>>>,
+    result: Mutex<Option<Result<Vec<usize>, String>>>,
     ready: Condvar,
 }
 
@@ -86,11 +114,13 @@ pub struct Coalescer {
     cfg: CoalesceConfig,
     queue: Mutex<Queue>,
     arrivals: Condvar,
+    draining: AtomicBool,
     requests: AtomicU64,
     batches: AtomicU64,
     rows: AtomicU64,
     coalesced_batches: AtomicU64,
     max_batch_rows: AtomicU64,
+    aborted: AtomicU64,
 }
 
 /// Lock, shrugging off poisoning: the engine cannot leave shared state
@@ -98,6 +128,14 @@ pub struct Coalescer {
 /// not wedge every connection behind a poisoned mutex.
 fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Best-effort text of a caught panic payload.
+fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
+    p.downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| p.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "opaque panic payload".to_string())
 }
 
 impl Coalescer {
@@ -108,11 +146,13 @@ impl Coalescer {
             cfg: CoalesceConfig { max_batch_rows: cfg.max_batch_rows.max(1), ..cfg },
             queue: Mutex::new(Queue::default()),
             arrivals: Condvar::new(),
+            draining: AtomicBool::new(false),
             requests: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             rows: AtomicU64::new(0),
             coalesced_batches: AtomicU64::new(0),
             max_batch_rows: AtomicU64::new(0),
+            aborted: AtomicU64::new(0),
         }
     }
 
@@ -129,6 +169,7 @@ impl Coalescer {
             rows: self.rows.load(Ordering::Relaxed),
             coalesced_batches: self.coalesced_batches.load(Ordering::Relaxed),
             max_batch_rows: self.max_batch_rows.load(Ordering::Relaxed),
+            aborted_requests: self.aborted.load(Ordering::Relaxed),
         }
     }
 
@@ -144,29 +185,31 @@ impl Coalescer {
     /// Score `rows` (length must be a multiple of the engine dimension —
     /// the HTTP layer validates shape *before* admission) and return one
     /// assignment per row. Blocks the calling thread until its batch is
-    /// flushed; the result is bit-identical to calling the engine (or the
-    /// scalar path) on these rows alone.
-    pub fn submit(&self, rows: Vec<f32>) -> Vec<usize> {
-        let d = self.engine.d();
-        assert_eq!(rows.len() % d.max(1), 0, "submit() requires validated row shapes");
-        let n = rows.len() / d.max(1);
+    /// flushed; a successful result is bit-identical to calling the engine
+    /// (or the scalar path) on these rows alone. `Err` means *this*
+    /// request failed — it panicked the engine even when retried alone, or
+    /// was aborted at shutdown; co-travellers are unaffected.
+    pub fn submit(&self, rows: Vec<f32>) -> Result<Vec<usize>, String> {
+        let d = self.engine.d().max(1);
+        assert_eq!(rows.len() % d, 0, "submit() requires validated row shapes");
+        let n = rows.len() / d;
         self.requests.fetch_add(1, Ordering::Relaxed);
         if n == 0 {
-            return Vec::new();
+            return Ok(Vec::new());
         }
         // A full-batch-sized request gains nothing from waiting: dispatch
         // directly so it neither queues behind the deadline nor makes
         // smaller co-travellers wait behind its compute.
         if n >= self.cfg.max_batch_rows {
-            let preds = self.engine.predict_batch(&rows);
+            let preds = self.predict_guarded(&rows)?;
             self.note_batch(n, 1);
-            return preds;
+            return Ok(preds);
         }
 
         let mut q = lock(&self.queue);
-        let first_row = q.rows.len() / d.max(1);
+        let first_row = q.rows.len() / d;
         q.rows.extend_from_slice(&rows);
-        let ticket = std::sync::Arc::new(Ticket {
+        let ticket = Arc::new(Ticket {
             first_row,
             n_rows: n,
             result: Mutex::new(None),
@@ -176,23 +219,23 @@ impl Coalescer {
         let leader = q.tickets.len() == 1;
 
         if !leader {
-            if q.rows.len() / d.max(1) >= self.cfg.max_batch_rows {
+            if q.rows.len() / d >= self.cfg.max_batch_rows {
                 // Batch is full: wake the leader early.
                 self.arrivals.notify_all();
             }
             drop(q);
-            let mut slot = lock(&ticket.result);
-            while slot.is_none() {
-                slot = ticket.ready.wait(slot).unwrap_or_else(|p| p.into_inner());
-            }
-            return slot.take().expect("ticket filled");
+            return self.await_ticket(&ticket);
         }
 
-        // Leader: wait out the deadline (or an early full-batch wake),
+        // Leader: wait out the deadline (or an early full-batch wake, or a
+        // drain — which flushes the in-flight accumulation immediately),
         // then take the whole queue and flush it as one engine call.
         let deadline = Instant::now() + self.cfg.max_wait;
         loop {
-            if q.rows.len() / d.max(1) >= self.cfg.max_batch_rows {
+            if q.rows.len() / d >= self.cfg.max_batch_rows {
+                break;
+            }
+            if self.draining.load(Ordering::Relaxed) {
                 break;
             }
             let now = Instant::now();
@@ -209,20 +252,155 @@ impl Coalescer {
         let tickets = std::mem::take(&mut q.tickets);
         drop(q);
 
-        let preds = self.engine.predict_batch(&batch);
-        self.note_batch(batch.len() / d.max(1), tickets.len());
+        if tickets.iter().any(|t| Arc::ptr_eq(t, &ticket)) {
+            return self
+                .flush(batch, tickets, Some(&ticket))
+                .expect("own ticket was in the flushed cohort");
+        }
+        // Our cohort (our ticket included) was claimed while we slept — by
+        // a promoted follower or a shutdown abort. Whatever we just took
+        // belongs to a *newer* accumulation: flush it for its owners, then
+        // collect our own result from whoever claimed our ticket.
+        if !tickets.is_empty() {
+            self.flush(batch, tickets, None);
+        }
+        self.await_ticket(&ticket)
+    }
 
-        let mut own = None;
-        for t in tickets {
-            let slice = preds[t.first_row..t.first_row + t.n_rows].to_vec();
-            if std::sync::Arc::ptr_eq(&t, &ticket) {
-                own = Some(slice);
-                continue;
+    /// Run the engine on `rows` under `catch_unwind`, converting a panic
+    /// (organic, or injected through the `coalesce.flush` failpoint) into
+    /// an `Err` instead of killing the calling connection thread.
+    fn predict_guarded(&self, rows: &[f32]) -> Result<Vec<usize>, String> {
+        catch_unwind(AssertUnwindSafe(|| {
+            if failpoint::armed() {
+                if let Some(fault) = failpoint::eval("coalesce.flush") {
+                    match fault {
+                        failpoint::Fault::Panic => {
+                            panic!("failpoint coalesce.flush: injected panic")
+                        }
+                        failpoint::Fault::Err(msg) => panic!("failpoint coalesce.flush: {msg}"),
+                    }
+                }
             }
-            *lock(&t.result) = Some(slice);
+            self.engine.predict_batch(rows)
+        }))
+        .map_err(panic_message)
+    }
+
+    /// Flush a claimed cohort: one guarded engine call; on a poisoned
+    /// batch, retry every request alone so exactly the poisoned one(s)
+    /// fail. Fills and wakes every ticket except `own`, whose result is
+    /// returned (`None` iff `own` is `None`).
+    fn flush(
+        &self,
+        batch: Vec<f32>,
+        tickets: Vec<Arc<Ticket>>,
+        own: Option<&Arc<Ticket>>,
+    ) -> Option<Result<Vec<usize>, String>> {
+        let d = self.engine.d().max(1);
+        let mut own_result = None;
+        let mut deliver = |t: &Arc<Ticket>, res: Result<Vec<usize>, String>| {
+            if own.is_some_and(|o| Arc::ptr_eq(t, o)) {
+                own_result = Some(res);
+            } else {
+                *lock(&t.result) = Some(res);
+                t.ready.notify_one();
+            }
+        };
+        match self.predict_guarded(&batch) {
+            Ok(preds) => {
+                self.note_batch(batch.len() / d, tickets.len());
+                for t in &tickets {
+                    deliver(t, Ok(preds[t.first_row..t.first_row + t.n_rows].to_vec()));
+                }
+            }
+            Err(batch_msg) => {
+                // The batch is poisoned: some request in it takes the
+                // engine down. Retry each alone so co-travellers of the
+                // poisoned request still get their (bit-identical) answer.
+                for t in &tickets {
+                    let lo = t.first_row * d;
+                    let hi = lo + t.n_rows * d;
+                    let res = match self.predict_guarded(&batch[lo..hi]) {
+                        Ok(preds) => {
+                            self.note_batch(t.n_rows, 1);
+                            Ok(preds)
+                        }
+                        Err(m) => Err(format!(
+                            "prediction batch failed ({batch_msg}); \
+                             this request also failed alone: {m}"
+                        )),
+                    };
+                    deliver(t, res);
+                }
+            }
+        }
+        own_result
+    }
+
+    /// Park on a ticket until a flusher fills it. If the wait times out
+    /// with the ticket *still queued*, the leader died before claiming the
+    /// batch — promote ourselves and flush the orphaned cohort. (Unqueued
+    /// but unfilled just means the claimer is still computing: keep
+    /// waiting.)
+    fn await_ticket(&self, ticket: &Arc<Ticket>) -> Result<Vec<usize>, String> {
+        let promote_after = self.cfg.max_wait + PROMOTE_GRACE;
+        loop {
+            let mut slot = lock(&ticket.result);
+            loop {
+                if let Some(res) = slot.take() {
+                    return res;
+                }
+                let (g, timeout) = ticket
+                    .ready
+                    .wait_timeout(slot, promote_after)
+                    .unwrap_or_else(|p| p.into_inner());
+                slot = g;
+                if timeout.timed_out() {
+                    break;
+                }
+            }
+            if let Some(res) = slot.take() {
+                return res;
+            }
+            drop(slot);
+            let mut q = lock(&self.queue);
+            if q.tickets.iter().any(|t| Arc::ptr_eq(t, ticket)) {
+                let batch = std::mem::take(&mut q.rows);
+                let tickets = std::mem::take(&mut q.tickets);
+                drop(q);
+                return self
+                    .flush(batch, tickets, Some(ticket))
+                    .expect("own ticket was in the promoted cohort");
+            }
+        }
+    }
+
+    /// Enter drain mode: the current accumulation flushes immediately
+    /// instead of waiting out `max_wait`, so a graceful shutdown completes
+    /// in-flight coalesced batches quickly rather than aborting them.
+    pub fn begin_drain(&self) {
+        self.draining.store(true, Ordering::Relaxed);
+        self.arrivals.notify_all();
+    }
+
+    /// Last-resort shutdown: fail every still-queued ticket with `reason`
+    /// so no connection thread stays parked past the drain deadline.
+    /// Returns the number of requests aborted (counted in
+    /// [`StatsSnapshot::aborted_requests`]).
+    pub fn abort_pending(&self, reason: &str) -> usize {
+        let tickets = {
+            let mut q = lock(&self.queue);
+            q.rows.clear();
+            std::mem::take(&mut q.tickets)
+        };
+        for t in &tickets {
+            *lock(&t.result) = Some(Err(reason.to_string()));
             t.ready.notify_one();
         }
-        own.expect("leader ticket present in its own batch")
+        self.aborted.fetch_add(tickets.len() as u64, Ordering::Relaxed);
+        self.arrivals.notify_all();
+        tickets.len()
     }
 }
 
@@ -269,7 +447,7 @@ mod tests {
             PredictEngine::new(&model),
             CoalesceConfig { max_wait: Duration::from_micros(200), max_batch_rows: 512 },
         );
-        assert_eq!(co.submit(rows), want);
+        assert_eq!(co.submit(rows).unwrap(), want);
         let s = co.stats();
         assert_eq!((s.requests, s.batches, s.rows), (1, 1, 32));
         assert_eq!(s.coalesced_batches, 0);
@@ -279,7 +457,7 @@ mod tests {
     fn empty_submit_returns_empty() {
         let (_ds, model) = model_for(4, 3);
         let co = Coalescer::new(PredictEngine::new(&model), CoalesceConfig::default());
-        assert!(co.submit(Vec::new()).is_empty());
+        assert!(co.submit(Vec::new()).unwrap().is_empty());
         assert_eq!(co.stats().batches, 0);
     }
 
@@ -292,7 +470,7 @@ mod tests {
             CoalesceConfig { max_wait: Duration::from_millis(250), max_batch_rows: 8 },
         );
         let t0 = Instant::now();
-        let preds = co.submit(rows.clone());
+        let preds = co.submit(rows.clone()).unwrap();
         // Bypass must not wait out the 250 ms deadline.
         assert!(t0.elapsed() < Duration::from_millis(200), "bypass waited on the deadline");
         assert_eq!(preds, PredictEngine::new(&model).predict_batch(&rows));
@@ -314,7 +492,7 @@ mod tests {
         for idx in mixes.clone() {
             let co = co.clone();
             let rows = rows_from(&ds, &idx);
-            handles.push(std::thread::spawn(move || co.submit(rows)));
+            handles.push(std::thread::spawn(move || co.submit(rows).unwrap()));
         }
         let got: Vec<Vec<usize>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
         for (idx, preds) in mixes.iter().zip(&got) {
@@ -350,6 +528,99 @@ mod tests {
         assert!(
             t0.elapsed() < Duration::from_secs(4),
             "flush waited for the deadline instead of the full-batch trigger"
+        );
+    }
+
+    #[test]
+    fn poisoned_batch_fails_alone_and_cohort_survives() {
+        // ADR-003 resolution: a panic during the leader's flush must fail
+        // only the poisoned request. `2*panic` makes the batch flush panic
+        // (hit 1) and the first individual retry panic (hit 2); every
+        // other retry succeeds — so exactly one submission errors no
+        // matter how the twelve requests happened to batch.
+        let _x = failpoint::exclusive_test_lock();
+        failpoint::configure("coalesce.flush=2*panic").unwrap();
+        let (ds, model) = model_for(6, 41);
+        let engine = PredictEngine::new(&model);
+        let co = Arc::new(Coalescer::new(
+            PredictEngine::new(&model),
+            CoalesceConfig { max_wait: Duration::from_millis(30), max_batch_rows: 4096 },
+        ));
+        let mixes: Vec<Vec<usize>> = (0..12)
+            .map(|t| (0..(1 + t % 4)).map(|j| (t * 13 + j * 5) % ds.n).collect())
+            .collect();
+        let mut handles = Vec::new();
+        for idx in mixes.clone() {
+            let co = co.clone();
+            let rows = rows_from(&ds, &idx);
+            handles.push(std::thread::spawn(move || co.submit(rows)));
+        }
+        let got: Vec<Result<Vec<usize>, String>> =
+            handles.into_iter().map(|h| h.join().expect("no thread may die")).collect();
+        failpoint::clear("coalesce.flush");
+        let errs = got.iter().filter(|r| r.is_err()).count();
+        assert_eq!(errs, 1, "exactly the poisoned request fails: {got:?}");
+        for (idx, res) in mixes.iter().zip(&got) {
+            if let Ok(preds) = res {
+                let want = engine.predict_batch(&rows_from(&ds, idx));
+                assert_eq!(preds, &want, "survivor diverged for mix {idx:?}");
+            }
+        }
+    }
+
+    /// Plant a ticket + rows in the queue as if its leader thread died
+    /// after enqueueing but before claiming the batch.
+    fn plant_orphan(co: &Coalescer, rows: &[f32], n_rows: usize) -> Arc<Ticket> {
+        let orphan = Arc::new(Ticket {
+            first_row: 0,
+            n_rows,
+            result: Mutex::new(None),
+            ready: Condvar::new(),
+        });
+        let mut q = lock(&co.queue);
+        q.rows.extend_from_slice(rows);
+        q.tickets.push(orphan.clone());
+        orphan
+    }
+
+    #[test]
+    fn dead_leader_cohort_is_rescued_by_promotion() {
+        let (ds, model) = model_for(6, 31);
+        let engine = PredictEngine::new(&model);
+        let co = Coalescer::new(
+            PredictEngine::new(&model),
+            CoalesceConfig { max_wait: Duration::from_millis(2), max_batch_rows: 512 },
+        );
+        let rows_a = rows_from(&ds, &[1, 2]);
+        let orphan = plant_orphan(&co, &rows_a, 2);
+        // This submission is a follower (queue non-empty). No leader will
+        // ever flush, so it must time out, promote itself, and flush the
+        // whole cohort — including the dead leader's ticket.
+        let rows_b = rows_from(&ds, &[5, 6, 7]);
+        let got = co.submit(rows_b.clone()).unwrap();
+        assert_eq!(got, engine.predict_batch(&rows_b));
+        let rescued = lock(&orphan.result)
+            .take()
+            .expect("promoted follower fills the orphaned ticket")
+            .unwrap();
+        assert_eq!(rescued, engine.predict_batch(&rows_a));
+    }
+
+    #[test]
+    fn abort_pending_fails_queued_tickets() {
+        let (ds, model) = model_for(4, 17);
+        let co = Coalescer::new(PredictEngine::new(&model), CoalesceConfig::default());
+        let rows = rows_from(&ds, &[3]);
+        let orphan = plant_orphan(&co, &rows, 1);
+        co.begin_drain();
+        assert_eq!(co.abort_pending("server shutting down"), 1);
+        let res = lock(&orphan.result).take().expect("abort fills the ticket");
+        assert!(res.is_err(), "aborted ticket must carry an error");
+        assert_eq!(co.stats().aborted_requests, 1);
+        // The queue is clean afterwards: a fresh submission works.
+        assert_eq!(
+            co.submit(rows.clone()).unwrap(),
+            PredictEngine::new(&model).predict_batch(&rows)
         );
     }
 }

@@ -1,7 +1,7 @@
 //! The versioned on-disk artifact format behind `fit` → `predict`
-//! (DESIGN.md §8).
+//! (DESIGN.md §8, fault model in §12).
 //!
-//! Two artifact kinds share one container:
+//! Three artifact kinds share one container:
 //!
 //! * **`model`** — a frozen [`KernelKMeansModel`]: per-center support
 //!   feature rows, coefficients, cached squared norms, and ⟨Ĉ,Ĉ⟩.
@@ -9,17 +9,24 @@
 //!   dataset, every window's raw entry structure, the learning-rate
 //!   counters, and the iteration count — everything a bit-for-bit
 //!   `resume` needs.
+//! * **`train`** — a mid-fit [`TrainSnapshot`] of Algorithm 2: the fit
+//!   RNG, every center window, the learning-rate counters, the objective
+//!   history, the ε-stopper replay log, and the schedule carry — what
+//!   `--resume auto` restores to continue a SIGKILLed training run
+//!   bit-identically (DESIGN.md §12).
 //!
-//! Layout (all integers little-endian):
+//! Version-2 layout (all integers little-endian):
 //!
 //! ```text
-//! offset 0   8 bytes   magic "MBKKMDL\0"
-//! offset 8   u32       header length H
-//! offset 12  H bytes   JSON header (util::json): format_version, kind,
-//!                      kernel parameters, dimensions, and every count
-//!                      needed to compute the exact payload size
-//! offset 12+H          binary payload: f32/f64/u32 arrays in the order
-//!                      the header describes
+//! offset 0     8 bytes   magic "MBKKMDL\0"
+//! offset 8     u32       header length H
+//! offset 12    H bytes   JSON header (util::json): format_version, kind,
+//!                        kernel parameters, dimensions, and every count
+//!                        needed to compute the exact payload size
+//! offset 12+H  u32       CRC-32 of bytes [0, 12+H) — magic, length, header
+//! offset 16+H  P bytes   binary payload: f32/f64/u32/u64 arrays in the
+//!                        order the header describes
+//! offset 16+H+P u32      CRC-32 of the payload section
 //! ```
 //!
 //! Float *scalars* that only parameterize the kernel live in the JSON
@@ -27,49 +34,65 @@
 //! every float *array* lives in the binary payload verbatim, so a
 //! save→load round trip is bit-identical by construction.
 //!
-//! **Version policy** (mirrors [`crate::runtime::manifest`]): loaders
-//! accept exactly [`FORMAT_VERSION`] and reject anything else with a
-//! clear error — never a silent best-effort parse. Additive evolution
-//! bumps the version; old binaries refuse new artifacts instead of
-//! misreading them. **Robustness contract**: malformed input of any kind
-//! (bad magic, truncated header or payload, corrupt JSON, unknown
-//! kernels, out-of-range indices) yields an [`Error`](crate::util::error)
-//! — the loaders never panic and never allocate more than the input's
-//! own length. The serving conformance suite
-//! (`rust/tests/conformance_serve.rs`) pins all of this.
+//! **Version policy**: writers always emit [`FORMAT_VERSION`]; loaders
+//! accept [`MIN_FORMAT_VERSION`]..=[`FORMAT_VERSION`] and reject anything
+//! else with a clear error — never a silent best-effort parse. Version 1
+//! (PR 4–7 artifacts) is the same layout without the two CRC sections;
+//! v1 artifacts still load, unchecksummed. **Robustness contract**:
+//! malformed input of any kind (bad magic, truncated header or payload,
+//! corrupt JSON, checksum mismatch, unknown kernels, out-of-range
+//! indices) yields an [`Error`](crate::util::error) — the loaders never
+//! panic, never return a silently wrong model, and never allocate more
+//! than the input's own length. On-disk writes go through
+//! [`atomic_write`] (same-dir temp file + fsync file and directory +
+//! rename), so a crash leaves the previous artifact intact, never a torn
+//! mix. The serving conformance suite (`rust/tests/conformance_serve.rs`)
+//! and this module's corruption-matrix test pin all of this.
 
 use crate::data::Dataset;
 use crate::kernels::KernelFunction;
 use crate::kkmeans::learning_rate::RateState;
 use crate::kkmeans::state::{WindowState, WindowView};
-use crate::kkmeans::{CenterWindow, KernelKMeansModel, LearningRate, StreamingKernelKMeans};
+use crate::kkmeans::{
+    CenterWindow, KernelKMeansModel, LearningRate, StreamingKernelKMeans, TrainSnapshot,
+};
+use crate::util::crc32::crc32;
 use crate::util::error::{Context, Result};
+use crate::util::failpoint;
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 use crate::{bail, format_err};
 use std::path::Path;
 
-/// Artifact magic: identifies both kinds; the header's `kind` field
+/// Artifact magic: identifies every kind; the header's `kind` field
 /// disambiguates.
 pub const MAGIC: [u8; 8] = *b"MBKKMDL\0";
 
-/// The one format version this build reads and writes.
-pub const FORMAT_VERSION: usize = 1;
+/// The format version this build writes.
+pub const FORMAT_VERSION: usize = 2;
+
+/// The oldest format version this build still reads (v1 = the same
+/// container without CRC sections).
+pub const MIN_FORMAT_VERSION: usize = 1;
 
 // ---- container ------------------------------------------------------------
 
 fn assemble(header: Json, payload: Vec<u8>) -> Vec<u8> {
     let htext = header.to_string();
-    let mut out = Vec::with_capacity(12 + htext.len() + payload.len());
+    let mut out = Vec::with_capacity(20 + htext.len() + payload.len());
     out.extend_from_slice(&MAGIC);
     out.extend_from_slice(&(htext.len() as u32).to_le_bytes());
     out.extend_from_slice(htext.as_bytes());
+    let header_crc = crc32(&out);
+    out.extend_from_slice(&header_crc.to_le_bytes());
     out.extend_from_slice(&payload);
+    out.extend_from_slice(&crc32(&payload).to_le_bytes());
     out
 }
 
-/// Validate magic + version, parse the header, and return it with the
-/// payload slice. `want_kind` cross-checks that a model artifact is not
-/// opened as a checkpoint or vice versa.
+/// Validate magic + version + checksums, parse the header, and return it
+/// with the payload slice. `want_kind` cross-checks that a model artifact
+/// is not opened as a checkpoint or vice versa.
 fn split_artifact<'a>(bytes: &'a [u8], want_kind: &str) -> Result<(Json, &'a [u8])> {
     if bytes.len() < 12 {
         bail!("artifact too short ({} bytes): not an mbkk artifact", bytes.len());
@@ -92,10 +115,10 @@ fn split_artifact<'a>(bytes: &'a [u8], want_kind: &str) -> Result<(Json, &'a [u8
         .get("format_version")
         .as_usize()
         .context("artifact header missing format_version")?;
-    if version != FORMAT_VERSION {
+    if !(MIN_FORMAT_VERSION..=FORMAT_VERSION).contains(&version) {
         bail!(
             "unsupported artifact format version {version} \
-             (this build reads version {FORMAT_VERSION})"
+             (this build reads versions {MIN_FORMAT_VERSION}..={FORMAT_VERSION})"
         );
     }
     let kind = header
@@ -108,7 +131,45 @@ fn split_artifact<'a>(bytes: &'a [u8], want_kind: &str) -> Result<(Json, &'a [u8
              (a {kind:?} artifact cannot be opened as a {want_kind:?})"
         );
     }
-    Ok((header, &rest[hlen..]))
+    if version == 1 {
+        // Legacy unchecksummed layout: payload is everything after the
+        // header. Torn v1 artifacts are still caught by the exact
+        // payload-size pre-checks, just without bit-flip detection.
+        return Ok((header, &rest[hlen..]));
+    }
+    // v2: 4-byte header CRC after the header, 4-byte payload CRC at the end.
+    let after_header = &rest[hlen..];
+    if after_header.len() < 8 {
+        bail!(
+            "artifact truncated: version {version} needs 8 checksum bytes \
+             after the header, found {}",
+            after_header.len()
+        );
+    }
+    let stored_hcrc = u32::from_le_bytes([
+        after_header[0],
+        after_header[1],
+        after_header[2],
+        after_header[3],
+    ]);
+    let computed_hcrc = crc32(&bytes[..12 + hlen]);
+    if stored_hcrc != computed_hcrc {
+        bail!(
+            "artifact header checksum mismatch (stored {stored_hcrc:#010x}, \
+             computed {computed_hcrc:#010x}): corrupt or torn artifact"
+        );
+    }
+    let payload = &after_header[4..after_header.len() - 4];
+    let tail = &after_header[after_header.len() - 4..];
+    let stored_pcrc = u32::from_le_bytes([tail[0], tail[1], tail[2], tail[3]]);
+    let computed_pcrc = crc32(payload);
+    if stored_pcrc != computed_pcrc {
+        bail!(
+            "artifact payload checksum mismatch (stored {stored_pcrc:#010x}, \
+             computed {computed_pcrc:#010x}): corrupt or torn artifact"
+        );
+    }
+    Ok((header, payload))
 }
 
 // ---- binary payload helpers -----------------------------------------------
@@ -126,6 +187,12 @@ fn push_f64s(buf: &mut Vec<u8>, xs: &[f64]) {
 }
 
 fn push_u32s(buf: &mut Vec<u8>, xs: &[u32]) {
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn push_u64s(buf: &mut Vec<u8>, xs: &[u64]) {
     for x in xs {
         buf.extend_from_slice(&x.to_le_bytes());
     }
@@ -188,6 +255,16 @@ impl<'a> Reader<'a> {
         Ok(raw
             .chunks_exact(4)
             .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn u64s(&mut self, n: usize) -> Result<Vec<u64>> {
+        let raw = self.take(n * 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| {
+                u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]])
+            })
             .collect())
     }
 
@@ -353,9 +430,59 @@ pub fn model_from_bytes(bytes: &[u8]) -> Result<KernelKMeansModel> {
     Ok(KernelKMeansModel { kernel, d, centers, cc })
 }
 
-/// Write a model artifact to `path`.
+/// Crash-safe durable file write (ADR-004): write a same-directory temp
+/// file, fsync it, rename it over the target, then fsync the directory so
+/// the rename itself survives power loss. A crash at any step leaves
+/// either the complete old file or the complete new file — never a torn
+/// mix — because rename(2) is atomic within a filesystem and the temp
+/// file shares the target's directory. Each step evaluates a failpoint
+/// (`artifact.write.tmp` / `.fsync` / `.rename`) so the chaos suite can
+/// kill or fail a writer inside every window; on any error the temp file
+/// is removed best-effort.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    use std::io::Write as _;
+    let dir = match path.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+        _ => std::path::PathBuf::from("."),
+    };
+    let name = path
+        .file_name()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "artifact".into());
+    // The PID suffix keeps concurrent writers (e.g. two fits sharing a
+    // checkpoint dir by mistake) from clobbering each other's temp files.
+    let tmp = dir.join(format!(".{name}.tmp.{}", std::process::id()));
+    let result = (|| -> Result<()> {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating temp file {}", tmp.display()))?;
+        f.write_all(bytes)
+            .with_context(|| format!("writing temp file {}", tmp.display()))?;
+        failpoint::fire("artifact.write.tmp")?;
+        f.sync_all()
+            .with_context(|| format!("fsyncing temp file {}", tmp.display()))?;
+        failpoint::fire("artifact.write.fsync")?;
+        drop(f);
+        std::fs::rename(&tmp, path).with_context(|| {
+            format!("renaming {} over {}", tmp.display(), path.display())
+        })?;
+        failpoint::fire("artifact.write.rename")?;
+        // Durability of the rename: fsync the containing directory.
+        // Best-effort — not every platform lets a directory fd sync, and
+        // the data itself is already safe in both the old and new inode.
+        if let Ok(d) = std::fs::File::open(&dir) {
+            let _ = d.sync_all();
+        }
+        Ok(())
+    })();
+    if result.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    result
+}
+
+/// Write a model artifact to `path` via [`atomic_write`].
 pub fn save_model(model: &KernelKMeansModel, path: &Path) -> Result<()> {
-    std::fs::write(path, model_to_bytes(model))
+    atomic_write(path, &model_to_bytes(model))
         .with_context(|| format!("writing model artifact {}", path.display()))
 }
 
@@ -367,6 +494,8 @@ fn load_with_path<T>(
     what: &str,
     decode: impl FnOnce(&[u8]) -> Result<T>,
 ) -> Result<T> {
+    failpoint::fire("artifact.read")
+        .with_context(|| format!("reading {what} artifact {}", path.display()))?;
     let bytes = std::fs::read(path)
         .with_context(|| format!("reading {what} artifact {}", path.display()))?;
     decode(&bytes).with_context(|| format!("loading {what} artifact {}", path.display()))
@@ -625,15 +754,310 @@ pub fn stream_from_bytes(bytes: &[u8]) -> Result<StreamingKernelKMeans> {
     })
 }
 
-/// Write a checkpoint artifact to `path`.
+/// Write a checkpoint artifact to `path` via [`atomic_write`].
 pub fn save_stream(s: &StreamingKernelKMeans, path: &Path) -> Result<()> {
-    std::fs::write(path, stream_to_bytes(s))
+    atomic_write(path, &stream_to_bytes(s))
         .with_context(|| format!("writing checkpoint artifact {}", path.display()))
 }
 
 /// Load a checkpoint artifact from `path`.
 pub fn load_stream(path: &Path) -> Result<StreamingKernelKMeans> {
     load_with_path(path, "checkpoint", stream_from_bytes)
+}
+
+// ---- kind "train" ---------------------------------------------------------
+
+/// Sidecar facts a training checkpoint carries beyond the loop state:
+/// the run-spec fingerprint (resume refuses a snapshot from a different
+/// configuration) and the dataset size (for index validation).
+pub(crate) struct TrainMeta {
+    /// Canonical description of the producing run's configuration.
+    pub fingerprint: String,
+    /// Dataset row count — every stored index must be below it.
+    pub n: usize,
+}
+
+/// Serialize a mid-fit training snapshot (kind `train`).
+pub(crate) fn train_to_bytes(snap: &TrainSnapshot, fingerprint: &str, n: usize) -> Vec<u8> {
+    let windows_json: Vec<Json> = snap
+        .windows
+        .iter()
+        .map(|w| {
+            Json::obj(vec![
+                (
+                    "entries",
+                    Json::arr_num(w.entries.iter().map(|(p, _)| p.len() as f64)),
+                ),
+                ("has_init", Json::Bool(w.init_point.is_some())),
+                (
+                    "init_idx",
+                    match w.init_point {
+                        Some((idx, _)) => Json::Num(idx as f64),
+                        None => Json::Null,
+                    },
+                ),
+                ("has_cc", Json::Bool(w.cc_cache.is_some())),
+                ("updates_since_exact", Json::Num(w.updates_since_exact as f64)),
+            ])
+        })
+        .collect();
+    let (rng_words, gauss_cache) = snap.rng.state();
+    let tau = snap.windows.first().map_or(1, |w| w.tau);
+    let header = Json::obj(vec![
+        ("format_version", Json::Num(FORMAT_VERSION as f64)),
+        ("kind", Json::Str("train".into())),
+        ("fingerprint", Json::Str(fingerprint.into())),
+        ("n", Json::Num(n as f64)),
+        ("k", Json::Num(snap.windows.len() as f64)),
+        ("tau", Json::Num(tau.min(u32::MAX as usize) as f64)),
+        ("untruncated", Json::Bool(tau == usize::MAX)),
+        ("next_iter", Json::Num(snap.next_iter as f64)),
+        ("rate", Json::Str(snap.rate_kind.name().into())),
+        ("rate_counts", Json::Num(snap.rate_counts.len() as f64)),
+        ("history", Json::Num(snap.history.len() as f64)),
+        ("improvements", Json::Num(snap.improvements.len() as f64)),
+        ("prev_batch", Json::Num(snap.prev_batch.len() as f64)),
+        ("has_gauss", Json::Bool(gauss_cache.is_some())),
+        ("windows", Json::Arr(windows_json)),
+    ]);
+    let mut payload = Vec::new();
+    push_u64s(&mut payload, &rng_words);
+    if let Some(g) = gauss_cache {
+        push_f64s(&mut payload, &[g]);
+    }
+    push_f64s(&mut payload, &snap.rate_counts);
+    push_f64s(&mut payload, &snap.history);
+    let improvement_iters: Vec<u32> = snap.improvements.iter().map(|&(i, _)| i).collect();
+    let improvement_vals: Vec<f64> = snap.improvements.iter().map(|&(_, v)| v).collect();
+    push_u32s(&mut payload, &improvement_iters);
+    push_f64s(&mut payload, &improvement_vals);
+    let prev: Vec<u32> = snap.prev_batch.iter().map(|&x| x as u32).collect();
+    push_u32s(&mut payload, &prev);
+    for w in &snap.windows {
+        for (points, raws) in &w.entries {
+            push_u32s(&mut payload, points);
+            push_f64s(&mut payload, raws);
+        }
+        push_f64s(&mut payload, &[w.scale]);
+        if let Some((_, raw)) = w.init_point {
+            push_f64s(&mut payload, &[raw]);
+        }
+        if let Some(cc) = w.cc_cache {
+            push_f64s(&mut payload, &[cc]);
+        }
+    }
+    assemble(header, payload)
+}
+
+/// Parse a kind-`train` checkpoint artifact. Same robustness contract as
+/// the other loaders: errors, never panics, never a silently wrong state.
+pub(crate) fn train_from_bytes(bytes: &[u8]) -> Result<(TrainSnapshot, TrainMeta)> {
+    let (header, payload) = split_artifact(bytes, "train")?;
+    let fingerprint = header
+        .get("fingerprint")
+        .as_str()
+        .context("train checkpoint header missing fingerprint")?
+        .to_string();
+    let want = |key: &str| -> Result<usize> {
+        header
+            .get(key)
+            .as_usize()
+            .with_context(|| format!("train checkpoint header missing {key}"))
+    };
+    let n = want("n")?;
+    let k = want("k")?;
+    let tau = if header.get("untruncated").as_bool().unwrap_or(false) {
+        usize::MAX
+    } else {
+        want("tau")?
+    };
+    let next_iter = want("next_iter")?;
+    let rate_counts_len = want("rate_counts")?;
+    let history_len = want("history")?;
+    let improvements_len = want("improvements")?;
+    let prev_batch_len = want("prev_batch")?;
+    if k == 0 {
+        bail!("train checkpoint has k=0 (a fit must have at least one center)");
+    }
+    if tau == 0 {
+        bail!("train checkpoint has tau=0 (truncation windows need tau >= 1)");
+    }
+    if n == 0 {
+        bail!("train checkpoint has n=0 (a fit needs a dataset)");
+    }
+    if rate_counts_len != k {
+        bail!(
+            "train checkpoint has {rate_counts_len} learning-rate counters \
+             for k={k} centers"
+        );
+    }
+    // history records one pre-update objective per completed iteration.
+    if history_len != next_iter {
+        bail!(
+            "train checkpoint claims {next_iter} completed iterations but \
+             records {history_len} history entries"
+        );
+    }
+    let rate_kind = match header
+        .get("rate")
+        .as_str()
+        .context("train checkpoint header missing rate")?
+    {
+        "beta" => LearningRate::Beta,
+        "sklearn" => LearningRate::Sklearn,
+        other => bail!("unknown learning-rate schedule {other:?} in train checkpoint"),
+    };
+    let has_gauss = header
+        .get("has_gauss")
+        .as_bool()
+        .context("train checkpoint header missing has_gauss")?;
+    let windows_json = header
+        .get("windows")
+        .as_arr()
+        .context("train checkpoint header missing windows")?;
+    if windows_json.len() != k {
+        bail!(
+            "train checkpoint header has {} windows for k={k} centers",
+            windows_json.len()
+        );
+    }
+    let mut metas = Vec::with_capacity(k);
+    for w in windows_json {
+        let entry_lens: Vec<usize> = w
+            .get("entries")
+            .as_arr()
+            .context("window header missing entries")?
+            .iter()
+            .map(|e| e.as_usize().context("window header has a non-integer entry length"))
+            .collect::<Result<_>>()?;
+        let has_init = w
+            .get("has_init")
+            .as_bool()
+            .context("window header missing has_init")?;
+        let init_idx = if has_init {
+            let idx = w
+                .get("init_idx")
+                .as_usize()
+                .context("window header missing init_idx")?;
+            u32::try_from(idx).ok().context("window init_idx exceeds u32")?
+        } else {
+            0
+        };
+        let updates = w
+            .get("updates_since_exact")
+            .as_usize()
+            .context("window header missing updates_since_exact")?;
+        metas.push(WinMeta {
+            entry_lens,
+            has_init,
+            init_idx,
+            has_cc: w
+                .get("has_cc")
+                .as_bool()
+                .context("window header missing has_cc")?,
+            updates_since_exact: u32::try_from(updates)
+                .ok()
+                .context("window updates_since_exact exceeds u32")?,
+        });
+    }
+    // Exact payload-size pre-check (u128; see model_from_bytes).
+    let mut expect: u128 = 32 // four RNG words
+        + 8 * u128::from(has_gauss)
+        + (rate_counts_len as u128) * 8
+        + (history_len as u128) * 8
+        + (improvements_len as u128) * 12 // u32 iteration + f64 value
+        + (prev_batch_len as u128) * 4;
+    for m in &metas {
+        for &len in &m.entry_lens {
+            expect += (len as u128) * 12; // u32 points + f64 raws
+        }
+        expect += 8; // scale
+        expect += 8 * u128::from(m.has_init) + 8 * u128::from(m.has_cc);
+    }
+    if expect != payload.len() as u128 {
+        bail!(
+            "train checkpoint payload truncated or corrupt: header describes \
+             {expect} bytes, found {}",
+            payload.len()
+        );
+    }
+    let mut r = Reader::new(payload);
+    let words = r.u64s(4)?;
+    let rng_words = [words[0], words[1], words[2], words[3]];
+    let gauss_cache = if has_gauss { Some(r.f64()?) } else { None };
+    let rate_counts = r.f64s(rate_counts_len)?;
+    let history = r.f64s(history_len)?;
+    let improvement_iters = r.u32s(improvements_len)?;
+    let improvement_vals = r.f64s(improvements_len)?;
+    for &it in &improvement_iters {
+        if it as usize >= next_iter {
+            bail!(
+                "train checkpoint records a stopper decision at iteration \
+                 {it} but only {next_iter} iterations completed"
+            );
+        }
+    }
+    let improvements: Vec<(u32, f64)> = improvement_iters
+        .into_iter()
+        .zip(improvement_vals)
+        .collect();
+    let prev_raw = r.u32s(prev_batch_len)?;
+    if let Some(&bad) = prev_raw.iter().find(|&&p| p as usize >= n) {
+        bail!(
+            "train checkpoint carry batch references dataset row {bad} but \
+             the dataset has only {n} rows"
+        );
+    }
+    let prev_batch: Vec<usize> = prev_raw.into_iter().map(|p| p as usize).collect();
+    let mut windows = Vec::with_capacity(metas.len());
+    for m in &metas {
+        let mut entries = Vec::with_capacity(m.entry_lens.len());
+        for &len in &m.entry_lens {
+            let points = r.u32s(len)?;
+            if let Some(&bad) = points.iter().find(|&&p| p as usize >= n) {
+                bail!(
+                    "train checkpoint window references dataset row {bad} \
+                     but the dataset has only {n} rows"
+                );
+            }
+            let raws = r.f64s(len)?;
+            entries.push((points, raws));
+        }
+        let scale = r.f64()?;
+        let init_point = if m.has_init {
+            if m.init_idx as usize >= n {
+                bail!(
+                    "train checkpoint window init point {} is outside the \
+                     {n}-row dataset",
+                    m.init_idx
+                );
+            }
+            Some((m.init_idx, r.f64()?))
+        } else {
+            None
+        };
+        let cc_cache = if m.has_cc { Some(r.f64()?) } else { None };
+        windows.push(WindowState {
+            entries,
+            scale,
+            init_point,
+            tau,
+            cc_cache,
+            updates_since_exact: m.updates_since_exact,
+        });
+    }
+    r.done()?;
+    let snap = TrainSnapshot {
+        next_iter,
+        rng: Rng::from_state(rng_words, gauss_cache),
+        windows,
+        rate_kind,
+        rate_counts,
+        history,
+        improvements,
+        prev_batch,
+    };
+    Ok((snap, TrainMeta { fingerprint, n }))
 }
 
 #[cfg(test)]
@@ -683,15 +1107,9 @@ mod tests {
         let err = model_from_bytes(&bad_magic).unwrap_err();
         assert!(format!("{err}").contains("magic"), "{err}");
 
-        // Patch the version inside the JSON header, rebuilding the length.
-        let hlen = u32::from_le_bytes([good[8], good[9], good[10], good[11]]) as usize;
-        let header = std::str::from_utf8(&good[12..12 + hlen]).unwrap();
-        let patched = header.replace("\"format_version\":1", "\"format_version\":99");
-        let mut v99 = Vec::new();
-        v99.extend_from_slice(&good[..8]);
-        v99.extend_from_slice(&(patched.len() as u32).to_le_bytes());
-        v99.extend_from_slice(patched.as_bytes());
-        v99.extend_from_slice(&good[12 + hlen..]);
+        // Patch the version inside the JSON header (CRCs recomputed, so
+        // the version check is what fires, not the checksum).
+        let v99 = patch_header(&good, "\"format_version\":2", "\"format_version\":99");
         let err = model_from_bytes(&v99).unwrap_err();
         assert!(format!("{err}").contains("version 99"), "{err}");
 
@@ -760,19 +1178,44 @@ mod tests {
         assert_eq!(stream_to_bytes(&back), bytes);
     }
 
-    /// Rebuild an artifact with one header substring replaced (adjusting
-    /// the length prefix), leaving the payload untouched.
+    /// Header length of a serialized artifact.
+    fn hlen_of(bytes: &[u8]) -> usize {
+        u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize
+    }
+
+    /// The JSON header text of a v2 artifact.
+    fn header_of(bytes: &[u8]) -> &str {
+        std::str::from_utf8(&bytes[12..12 + hlen_of(bytes)]).unwrap()
+    }
+
+    /// The payload section of a v2 artifact (between the two CRC words).
+    fn payload_of(bytes: &[u8]) -> &[u8] {
+        &bytes[12 + hlen_of(bytes) + 4..bytes.len() - 4]
+    }
+
+    /// Assemble a well-formed v2 artifact from raw header text + payload,
+    /// recomputing both CRCs — the header/payload may be deliberately
+    /// inconsistent, but the checksums are valid so the *structural*
+    /// validation under test is what fires.
+    fn rebuild_v2(header: &str, payload: &[u8]) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        let hcrc = crc32(&out);
+        out.extend_from_slice(&hcrc.to_le_bytes());
+        out.extend_from_slice(payload);
+        out.extend_from_slice(&crc32(payload).to_le_bytes());
+        out
+    }
+
+    /// Rebuild an artifact with one header substring replaced (length
+    /// prefix and checksums recomputed), leaving the payload untouched.
     fn patch_header(bytes: &[u8], from: &str, to: &str) -> Vec<u8> {
-        let hlen = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize;
-        let header = std::str::from_utf8(&bytes[12..12 + hlen]).unwrap();
+        let header = header_of(bytes);
         let patched = header.replace(from, to);
         assert_ne!(patched, header, "patch {from:?} must hit the header");
-        let mut out = Vec::new();
-        out.extend_from_slice(&bytes[..8]);
-        out.extend_from_slice(&(patched.len() as u32).to_le_bytes());
-        out.extend_from_slice(patched.as_bytes());
-        out.extend_from_slice(&bytes[12 + hlen..]);
-        out
+        rebuild_v2(&patched, payload_of(bytes))
     }
 
     #[test]
@@ -846,21 +1289,252 @@ mod tests {
         s.partial_fit(&rows, &mut rng);
         let good = stream_to_bytes(&s);
         // Shrink the advertised reservoir without touching the windows:
-        // every header is rebuilt with store_n=0 and an empty feature block.
-        let hlen = u32::from_le_bytes([good[8], good[9], good[10], good[11]]) as usize;
-        let header = std::str::from_utf8(&good[12..12 + hlen]).unwrap();
+        // the header is rebuilt with store_n=0 and an empty feature block
+        // (checksums recomputed so index validation is what fires).
+        let header = header_of(&good);
         let store_n = s.stored_rows();
         let patched = header.replace(&format!("\"store_n\":{store_n}"), "\"store_n\":0");
         assert_ne!(patched, header, "test patch must hit the header");
-        let mut tampered = Vec::new();
-        tampered.extend_from_slice(&good[..8]);
-        tampered.extend_from_slice(&(patched.len() as u32).to_le_bytes());
-        tampered.extend_from_slice(patched.as_bytes());
-        tampered.extend_from_slice(&good[12 + hlen + store_n * ds.d * 4..]);
+        let tampered = rebuild_v2(&patched, &payload_of(&good)[store_n * ds.d * 4..]);
         let err = stream_from_bytes(&tampered).unwrap_err();
         assert!(
             format!("{err}").contains("reservoir") || format!("{err}").contains("init point"),
             "{err}"
         );
+    }
+
+    /// The six sections of a v2 artifact as `(name, start, end)` byte
+    /// ranges.
+    fn section_bounds(bytes: &[u8]) -> Vec<(&'static str, usize, usize)> {
+        let h = hlen_of(bytes);
+        vec![
+            ("magic", 0, 8),
+            ("hlen", 8, 12),
+            ("header", 12, 12 + h),
+            ("header_crc", 12 + h, 16 + h),
+            ("payload", 16 + h, bytes.len() - 4),
+            ("payload_crc", bytes.len() - 4, bytes.len()),
+        ]
+    }
+
+    #[test]
+    fn corruption_matrix_detects_torn_and_flipped_artifacts() {
+        // Truncate at every section boundary and bit-flip bytes in every
+        // section, for both artifact kinds: the loader must return an
+        // error each time — never panic, never a silently wrong model.
+        let model = tiny_model(KernelFunction::Gaussian { kappa: 2.0 });
+        let model_bytes = model_to_bytes(&model);
+        let mut rng = Rng::seeded(23);
+        let ds = blobs(&SyntheticSpec::new(120, 3, 2), &mut rng);
+        let mut s = StreamingKernelKMeans::new(
+            KernelFunction::Gaussian { kappa: 4.0 },
+            ds.d,
+            2,
+            16,
+            12,
+            LearningRate::Beta,
+        );
+        let idx = rng.sample_with_replacement(ds.n, 16);
+        let mut rows = Vec::new();
+        for &i in &idx {
+            rows.extend_from_slice(ds.row(i));
+        }
+        s.partial_fit(&rows, &mut rng);
+        let stream_bytes = stream_to_bytes(&s);
+
+        let cases: Vec<(&str, &[u8], Box<dyn Fn(&[u8]) -> bool>)> = vec![
+            ("model", &model_bytes, Box::new(|b| model_from_bytes(b).is_err())),
+            ("stream", &stream_bytes, Box::new(|b| stream_from_bytes(b).is_err())),
+        ];
+        for (kind, good, fails) in cases {
+            for (name, start, end) in section_bounds(good) {
+                for cut in [start, end] {
+                    if cut < good.len() {
+                        assert!(
+                            fails(&good[..cut]),
+                            "{kind}: truncation at {name} boundary {cut} must fail"
+                        );
+                    }
+                }
+                // One byte per section, first and middle, every bit edge.
+                for byte in [start, (start + end) / 2] {
+                    for bit in [0u8, 7] {
+                        let mut bad = good.to_vec();
+                        bad[byte] ^= 1 << bit;
+                        assert!(
+                            fails(&bad),
+                            "{kind}: bit {bit} flip in {name} at byte {byte} \
+                             must be detected"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Build the v1 (unchecksummed) layout from a v2 artifact's parts.
+    fn downgrade_to_v1(bytes: &[u8]) -> Vec<u8> {
+        let header =
+            header_of(bytes).replace("\"format_version\":2", "\"format_version\":1");
+        let mut out = Vec::new();
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        out.extend_from_slice(payload_of(bytes));
+        out
+    }
+
+    #[test]
+    fn v1_artifacts_still_load() {
+        // Back-compat: artifacts written by the PR 4-7 builds (version 1,
+        // no CRC sections) load, and re-serializing upgrades them to v2
+        // bit-identically to a native v2 write.
+        let model = tiny_model(KernelFunction::Laplacian { sigma: 1.5 });
+        let v2 = model_to_bytes(&model);
+        let back = model_from_bytes(&downgrade_to_v1(&v2)).expect("v1 model must load");
+        assert_eq!(model_to_bytes(&back), v2);
+
+        let mut rng = Rng::seeded(31);
+        let ds = blobs(&SyntheticSpec::new(150, 3, 2), &mut rng);
+        let mut s = StreamingKernelKMeans::new(
+            KernelFunction::Gaussian { kappa: 3.0 },
+            ds.d,
+            2,
+            16,
+            10,
+            LearningRate::Sklearn,
+        );
+        let idx = rng.sample_with_replacement(ds.n, 16);
+        let mut rows = Vec::new();
+        for &i in &idx {
+            rows.extend_from_slice(ds.row(i));
+        }
+        s.partial_fit(&rows, &mut rng);
+        let v2 = stream_to_bytes(&s);
+        let back = stream_from_bytes(&downgrade_to_v1(&v2)).expect("v1 stream must load");
+        assert_eq!(stream_to_bytes(&back), v2);
+    }
+
+    /// A real mid-fit snapshot (nested schedule + ε-stopper engaged so
+    /// every optional field is populated), plus the dataset size.
+    fn training_snapshot() -> (TrainSnapshot, usize) {
+        use crate::kkmeans::{
+            NativeBackend, ScheduleSpec, TruncatedConfig, TruncatedMiniBatchKernelKMeans,
+        };
+        let mut rng = Rng::seeded(77);
+        let ds = blobs(&SyntheticSpec::new(200, 3, 2), &mut rng);
+        let gram = crate::kernels::Gram::on_the_fly(
+            &ds,
+            KernelFunction::Gaussian { kappa: 10.0 },
+        );
+        let cfg = TruncatedConfig {
+            k: 2,
+            batch_size: 24,
+            schedule: ScheduleSpec::Nested { growth: 1.5 },
+            tau: 40,
+            max_iters: 12,
+            epsilon: Some(1e-12),
+            ..Default::default()
+        };
+        let mut snaps = Vec::new();
+        let mut fit_rng = Rng::seeded(3);
+        TruncatedMiniBatchKernelKMeans::new(cfg)
+            .fit_with_backend_resumable(
+                &gram,
+                &mut NativeBackend,
+                &mut fit_rng,
+                None,
+                4,
+                &mut |s| {
+                    snaps.push(s.clone());
+                    Ok(())
+                },
+            )
+            .unwrap();
+        (snaps.pop().expect("cadence must snapshot"), ds.n)
+    }
+
+    #[test]
+    fn train_roundtrip_is_bit_identical() {
+        let (snap, n) = training_snapshot();
+        let bytes = train_to_bytes(&snap, "spec:test-fingerprint", n);
+        let (back, meta) = train_from_bytes(&bytes).expect("roundtrip");
+        assert_eq!(meta.fingerprint, "spec:test-fingerprint");
+        assert_eq!(meta.n, n);
+        assert_eq!(back.next_iter, snap.next_iter);
+        assert_eq!(train_to_bytes(&back, &meta.fingerprint, meta.n), bytes);
+        // Kind cross-check: a train checkpoint is not a model.
+        assert!(model_from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn train_loader_enforces_writer_invariants() {
+        let (snap, n) = training_snapshot();
+        let good = train_to_bytes(&snap, "fp", n);
+        let err =
+            train_from_bytes(&patch_header(&good, "\"k\":2", "\"k\":0")).unwrap_err();
+        assert!(format!("{err}").contains("k=0"), "{err}");
+        let err = train_from_bytes(&patch_header(
+            &good,
+            &format!("\"next_iter\":{}", snap.next_iter),
+            "\"next_iter\":1",
+        ))
+        .unwrap_err();
+        assert!(format!("{err}").contains("history"), "{err}");
+        let err = train_from_bytes(&patch_header(&good, "\"rate_counts\":2", "\"rate_counts\":3"))
+            .unwrap_err();
+        assert!(format!("{err}").contains("learning-rate"), "{err}");
+        // Every truncation of a train checkpoint fails too.
+        for len in 0..good.len() {
+            assert!(train_from_bytes(&good[..len]).is_err(), "prefix {len} must fail");
+        }
+    }
+
+    #[test]
+    fn atomic_write_replaces_and_leaves_no_litter() {
+        let dir = std::env::temp_dir().join(format!("mbkk-aw-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("artifact.mbkk");
+        atomic_write(&path, b"first").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"first");
+        atomic_write(&path, b"second, longer payload").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second, longer payload");
+        let litter: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|f| f.contains(".tmp."))
+            .collect();
+        assert!(litter.is_empty(), "temp files left behind: {litter:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn atomic_write_failure_preserves_previous_file() {
+        use crate::util::failpoint;
+        let _guard = failpoint::exclusive_test_lock();
+        let dir = std::env::temp_dir().join(format!("mbkk-awf-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("artifact.mbkk");
+        atomic_write(&path, b"durable").unwrap();
+        for point in ["artifact.write.tmp", "artifact.write.fsync"] {
+            failpoint::configure(&format!("{point}=1*err(injected write fault)")).unwrap();
+            let err = atomic_write(&path, b"torn").unwrap_err();
+            assert!(format!("{err}").contains("injected write fault"), "{err}");
+            failpoint::clear(point);
+            assert_eq!(
+                std::fs::read(&path).unwrap(),
+                b"durable",
+                "{point}: target must be untouched after a failed write"
+            );
+            let litter: Vec<String> = std::fs::read_dir(&dir)
+                .unwrap()
+                .filter_map(|e| e.ok())
+                .map(|e| e.file_name().to_string_lossy().into_owned())
+                .filter(|f| f.contains(".tmp."))
+                .collect();
+            assert!(litter.is_empty(), "{point}: temp litter {litter:?}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

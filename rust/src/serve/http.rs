@@ -31,10 +31,23 @@
 //! Connection handling is thread-per-connection on `std::thread` — *not*
 //! the compute worker pool, which stays dedicated to `PredictEngine`
 //! batches and must never block on client sockets (ADR-003).
+//!
+//! **Degrade, don't die** (ADR-004): the server carries an explicit health
+//! state machine — `starting → serving → draining`, with a time-windowed
+//! `degraded` overlay entered whenever an internal fault is contained
+//! (a routed panic, a failed coalescer flush). `/healthz` reports it
+//! truthfully: 503 while starting or draining (with `Retry-After`), 200
+//! with `"status": "degraded"` inside the fault window. Load is shed with
+//! 503 + `Retry-After` at the connection ceiling and when a request blows
+//! its deadline budget before admission. Fault-injection hooks
+//! (`http.accept`, `http.read`, `http.write` — see `util::failpoint`)
+//! prove the blast radius: an injected accept fault drops one connection,
+//! a read/write fault kills one connection thread, and the process keeps
+//! serving — pinned by the CI chaos sweep.
 
 use std::io::{BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -44,12 +57,23 @@ use super::format;
 use super::wire::{self, RequestHead, Response, WireError};
 use crate::kkmeans::KernelKMeansModel;
 use crate::util::error::{Context, Result};
+use crate::util::failpoint;
 use crate::util::json::{lazy, Json};
 
 /// How often the accept loop re-checks the shutdown flag when idle.
 const ACCEPT_POLL: Duration = Duration::from_millis(2);
 /// How long shutdown waits for in-flight connections to finish.
 const DRAIN_TIMEOUT: Duration = Duration::from_secs(5);
+/// How long `/healthz` reports `degraded` after a contained internal
+/// fault. Long enough for an external prober on a coarse interval to see
+/// it; the server keeps serving throughout.
+const DEGRADED_WINDOW: Duration = Duration::from_secs(30);
+
+/// Health phases (the `Degraded` overlay is a timestamp, not a phase —
+/// a fault must not mask a concurrent drain).
+const PHASE_STARTING: u8 = 0;
+const PHASE_SERVING: u8 = 1;
+const PHASE_DRAINING: u8 = 2;
 
 /// Server configuration (`mbkk serve` flags map onto these fields).
 #[derive(Debug, Clone)]
@@ -66,6 +90,10 @@ pub struct ServeConfig {
     pub read_timeout: Duration,
     /// Concurrent-connection ceiling (503 above it).
     pub max_connections: usize,
+    /// Per-request deadline budget: a predict request that spends longer
+    /// than this between arrival and admission (slow body upload, parse)
+    /// is shed with 503 + `Retry-After` instead of queueing stale work.
+    pub request_deadline: Duration,
 }
 
 impl Default for ServeConfig {
@@ -77,6 +105,7 @@ impl Default for ServeConfig {
             max_body_bytes: 8 * 1024 * 1024,
             read_timeout: Duration::from_secs(10),
             max_connections: 128,
+            request_deadline: Duration::from_secs(5),
         }
     }
 }
@@ -91,6 +120,39 @@ struct ServerState {
     active: AtomicUsize,
     max_body_bytes: usize,
     max_connections: usize,
+    request_deadline: Duration,
+    /// Health phase: starting / serving / draining.
+    phase: AtomicU8,
+    /// Instant the state was built — the zero point for `degraded_until`.
+    started: Instant,
+    /// Millis-since-`started` until which `/healthz` reports `degraded`
+    /// (0 = never degraded). Written by [`note_degraded`].
+    degraded_until: AtomicU64,
+    /// Requests shed before admission (deadline blown, draining).
+    shed: AtomicU64,
+}
+
+impl ServerState {
+    fn now_ms(&self) -> u64 {
+        self.started.elapsed().as_millis() as u64
+    }
+
+    /// `"starting" | "ok" | "degraded" | "draining"` — the serving phase
+    /// with the fault window overlaid (a drain outranks it).
+    fn health_status(&self) -> &'static str {
+        match self.phase.load(Ordering::SeqCst) {
+            PHASE_STARTING => "starting",
+            PHASE_DRAINING => "draining",
+            _ if self.now_ms() < self.degraded_until.load(Ordering::SeqCst) => "degraded",
+            _ => "ok",
+        }
+    }
+}
+
+/// Open (or extend) the degraded window after a contained internal fault.
+fn note_degraded(state: &ServerState) {
+    let until = state.now_ms() + DEGRADED_WINDOW.as_millis() as u64;
+    state.degraded_until.fetch_max(until, Ordering::SeqCst);
 }
 
 /// A bound, not-yet-running prediction server.
@@ -146,6 +208,11 @@ impl Server {
                 active: AtomicUsize::new(0),
                 max_body_bytes: cfg.max_body_bytes,
                 max_connections: cfg.max_connections,
+                request_deadline: cfg.request_deadline,
+                phase: AtomicU8::new(PHASE_STARTING),
+                started: Instant::now(),
+                degraded_until: AtomicU64::new(0),
+                shed: AtomicU64::new(0),
             }),
         })
     }
@@ -169,9 +236,25 @@ impl Server {
         self.listener
             .set_nonblocking(true)
             .context("setting the listener nonblocking")?;
+        state.phase.store(PHASE_SERVING, Ordering::SeqCst);
         while !state.shutdown.load(Ordering::SeqCst) {
             match self.listener.accept() {
                 Ok((stream, _peer)) => {
+                    // Accept-boundary fault injection: whatever the armed
+                    // action, the blast radius is THIS connection — the
+                    // accept loop itself must never exit on a fault
+                    // (chaos CI pins the process staying alive).
+                    if failpoint::armed() {
+                        if let Some(fault) = failpoint::eval("http.accept") {
+                            let msg = match fault {
+                                failpoint::Fault::Panic => "injected panic".to_string(),
+                                failpoint::Fault::Err(m) => m,
+                            };
+                            eprintln!("mbkk-serve: dropped a connection (failpoint http.accept: {msg})");
+                            note_degraded(&state);
+                            continue;
+                        }
+                    }
                     if state.active.load(Ordering::SeqCst) >= state.max_connections {
                         let mut s = stream;
                         let _ = s.set_nonblocking(false);
@@ -180,6 +263,7 @@ impl Server {
                             "server_overloaded",
                             "connection limit reached; retry shortly",
                         )
+                        .retry_after(1)
                         .closing()
                         .write_to(&mut s);
                         continue;
@@ -216,9 +300,21 @@ impl Server {
                 Err(e) => return Err(e).context("accepting a connection"),
             }
         }
+        // Drain: stop accepting (loop exited), flush the in-flight
+        // coalesced accumulation immediately instead of letting it wait
+        // out `max_wait`, and give connection threads the drain window to
+        // finish. Only if the window closes with tickets still queued do
+        // we abort them — counted, so the e2e drain test can assert a
+        // graceful shutdown aborts nothing.
+        state.phase.store(PHASE_DRAINING, Ordering::SeqCst);
+        state.coalescer.begin_drain();
         let deadline = Instant::now() + DRAIN_TIMEOUT;
         while state.active.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
             std::thread::sleep(ACCEPT_POLL);
+        }
+        let aborted = state.coalescer.abort_pending("server draining; request aborted");
+        if aborted > 0 {
+            eprintln!("mbkk-serve: aborted {aborted} queued requests at the drain deadline");
         }
         Ok(state.coalescer.stats())
     }
@@ -248,12 +344,34 @@ fn handle_connection(state: &ServerState, stream: TcpStream) {
             // read_head never produces these two; framing is unknown, close.
             Err(WireError::LengthRequired) | Err(WireError::TooLarge(_)) => return,
         };
+        // The deadline budget starts once a request head exists; body
+        // upload and parsing spend from it.
+        let arrived = Instant::now();
+        // Read-boundary fault injection: a panic here kills exactly this
+        // connection thread (the accept loop and every other connection
+        // keep going); an err closes the connection quietly.
+        if failpoint::armed() {
+            if let Some(fault) = failpoint::eval("http.read") {
+                match fault {
+                    failpoint::Fault::Panic => panic!("failpoint http.read: injected panic"),
+                    failpoint::Fault::Err(_) => return,
+                }
+            }
+        }
         let Ok(body) = read_framed_body(state, &head, &mut reader, &mut writer) else {
             return;
         };
-        let mut resp = dispatch(state, &head, &body);
+        let mut resp = dispatch(state, &head, &body, arrived);
         if state.shutdown.load(Ordering::SeqCst) {
             resp = resp.closing();
+        }
+        if failpoint::armed() {
+            if let Some(fault) = failpoint::eval("http.write") {
+                match fault {
+                    failpoint::Fault::Panic => panic!("failpoint http.write: injected panic"),
+                    failpoint::Fault::Err(_) => return,
+                }
+            }
         }
         if resp.write_to(&mut writer).is_err() || resp.close || !head.keep_alive {
             return;
@@ -315,24 +433,26 @@ fn read_framed_body(
 }
 
 /// Route under `catch_unwind`: a bug in a handler answers 500 on this
-/// connection instead of tearing the whole service down.
-fn dispatch(state: &ServerState, head: &RequestHead, body: &[u8]) -> Response {
+/// connection instead of tearing the whole service down — and opens the
+/// degraded health window, so `/healthz` tells the truth about it.
+fn dispatch(state: &ServerState, head: &RequestHead, body: &[u8], arrived: Instant) -> Response {
     let routed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        route(state, head, body)
+        route(state, head, body, arrived)
     }));
     match routed {
         Ok(resp) => resp,
         Err(_) => {
+            note_degraded(state);
             Response::error(500, "internal", "internal error; closing this connection").closing()
         }
     }
 }
 
-fn route(state: &ServerState, head: &RequestHead, body: &[u8]) -> Response {
+fn route(state: &ServerState, head: &RequestHead, body: &[u8], arrived: Instant) -> Response {
     match (head.method.as_str(), head.path()) {
-        ("GET", "/healthz") => Response::json(&healthz_json(state)),
+        ("GET", "/healthz") => healthz_response(state),
         ("GET", "/v1/models") => Response::json(&state.models_json),
-        ("POST", "/v1/predict") => predict(state, body),
+        ("POST", "/v1/predict") => predict(state, body, arrived),
         (_, "/healthz") | (_, "/v1/models") => method_not_allowed("GET"),
         (_, "/v1/predict") => method_not_allowed("POST"),
         (method, path) => {
@@ -350,7 +470,22 @@ fn method_not_allowed(allow: &'static str) -> Response {
 
 /// `POST /v1/predict`: lazy-extract `points`, validate shape against the
 /// served model, submit through the coalescer, answer the assignments.
-fn predict(state: &ServerState, body: &[u8]) -> Response {
+/// Sheds the request (503 + `Retry-After`) if the deadline budget was
+/// spent before admission; answers 500 if the request failed even when
+/// retried alone after poisoning a batch.
+fn predict(state: &ServerState, body: &[u8], arrived: Instant) -> Response {
+    if arrived.elapsed() >= state.request_deadline {
+        state.shed.fetch_add(1, Ordering::SeqCst);
+        return Response::error(
+            503,
+            "deadline_exceeded",
+            &format!(
+                "request spent its {} ms deadline budget before admission",
+                state.request_deadline.as_millis()
+            ),
+        )
+        .retry_after(1);
+    }
     let raw = match lazy::fields(body, &["points"]) {
         Ok(fields) => fields.into_iter().next().flatten(),
         Err(e) => return Response::error(400, "invalid_json", &e.to_string()),
@@ -374,17 +509,48 @@ fn predict(state: &ServerState, body: &[u8]) -> Response {
             &format!("points have {} features per row but the served model expects {d}", points.d),
         );
     }
-    let assignments = state.coalescer.submit(points.features);
+    let assignments = match state.coalescer.submit(points.features) {
+        Ok(assignments) => assignments,
+        Err(msg) => {
+            // The engine panicked on this request even retried alone (or
+            // it was aborted at shutdown). The fault is contained to this
+            // request, but it IS an internal fault — surface it in health.
+            note_degraded(state);
+            return Response::error(500, "prediction_failed", &msg);
+        }
+    };
     Response::json(&Json::obj(vec![
         ("assignments", Json::arr_num(assignments.iter().map(|&a| a as f64))),
         ("rows", Json::Num(points.rows as f64)),
     ]))
 }
 
-fn healthz_json(state: &ServerState) -> Json {
+/// `GET /healthz`: the health state machine, truthfully.
+///
+/// | state     | code | notes                                   |
+/// |-----------|------|-----------------------------------------|
+/// | starting  | 503  | bound but not yet accepting             |
+/// | ok        | 200  |                                         |
+/// | degraded  | 200  | still serving; fault window open        |
+/// | draining  | 503  | `Retry-After` set; shutting down        |
+fn healthz_response(state: &ServerState) -> Response {
+    let status = state.health_status();
+    let mut resp = Response::json(&healthz_json(state, status));
+    match status {
+        "starting" => resp.status = 503,
+        "draining" => {
+            resp.status = 503;
+            resp = resp.retry_after(1);
+        }
+        _ => {}
+    }
+    resp
+}
+
+fn healthz_json(state: &ServerState, status: &str) -> Json {
     let s = state.coalescer.stats();
     Json::obj(vec![
-        ("status", Json::Str("ok".to_string())),
+        ("status", Json::Str(status.to_string())),
         ("model", state.model_summary.clone()),
         (
             "stats",
@@ -394,6 +560,8 @@ fn healthz_json(state: &ServerState) -> Json {
                 ("rows", Json::Num(s.rows as f64)),
                 ("coalesced_batches", Json::Num(s.coalesced_batches as f64)),
                 ("max_batch_rows", Json::Num(s.max_batch_rows as f64)),
+                ("aborted_requests", Json::Num(s.aborted_requests as f64)),
+                ("shed_requests", Json::Num(state.shed.load(Ordering::SeqCst) as f64)),
                 (
                     "active_connections",
                     Json::Num(state.active.load(Ordering::SeqCst) as f64),

@@ -246,12 +246,21 @@ pub struct Response {
     pub close: bool,
     /// Value for an `Allow` header (405 responses).
     pub allow: Option<&'static str>,
+    /// Value for a `Retry-After` header in seconds (load-shedding 503s and
+    /// draining responses — tells well-behaved clients when to come back).
+    pub retry_after: Option<u64>,
 }
 
 impl Response {
     /// A 200 response with the given JSON body.
     pub fn json(value: &Json) -> Response {
-        Response { status: 200, body: value.to_string().into_bytes(), close: false, allow: None }
+        Response {
+            status: 200,
+            body: value.to_string().into_bytes(),
+            close: false,
+            allow: None,
+            retry_after: None,
+        }
     }
 
     /// An error response in the documented envelope
@@ -264,12 +273,24 @@ impl Response {
                 ("message", Json::Str(message.to_string())),
             ]),
         )]);
-        Response { status, body: body.to_string().into_bytes(), close: false, allow: None }
+        Response {
+            status,
+            body: body.to_string().into_bytes(),
+            close: false,
+            allow: None,
+            retry_after: None,
+        }
     }
 
     /// Mark the connection for close after this response.
     pub fn closing(mut self) -> Response {
         self.close = true;
+        self
+    }
+
+    /// Attach a `Retry-After: secs` header (shed/drain responses).
+    pub fn retry_after(mut self, secs: u64) -> Response {
+        self.retry_after = Some(secs);
         self
     }
 
@@ -285,6 +306,9 @@ impl Response {
         out.extend_from_slice(format!("Content-Length: {}\r\n", self.body.len()).as_bytes());
         if let Some(allow) = self.allow {
             out.extend_from_slice(format!("Allow: {allow}\r\n").as_bytes());
+        }
+        if let Some(secs) = self.retry_after {
+            out.extend_from_slice(format!("Retry-After: {secs}\r\n").as_bytes());
         }
         if self.close {
             out.extend_from_slice(b"Connection: close\r\n");
@@ -394,6 +418,22 @@ mod tests {
         let parsed = Json::parse(body).unwrap();
         assert_eq!(parsed.get("error").get("code").as_str(), Some("invalid_json"));
         assert_eq!(parsed.get("error").get("message").as_str(), Some("bad body"));
+    }
+
+    #[test]
+    fn retry_after_header_on_shed_responses() {
+        let mut out = Vec::new();
+        Response::error(503, "server_overloaded", "try later")
+            .retry_after(2)
+            .write_to(&mut out)
+            .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 503 Service Unavailable\r\n"), "{text}");
+        assert!(text.contains("Retry-After: 2\r\n"), "{text}");
+        // Plain responses never carry the header.
+        let mut out = Vec::new();
+        Response::json(&Json::obj(vec![])).write_to(&mut out).unwrap();
+        assert!(!String::from_utf8(out).unwrap().contains("Retry-After"));
     }
 
     #[test]

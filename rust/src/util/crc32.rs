@@ -1,0 +1,85 @@
+//! CRC-32 (IEEE 802.3 / zlib / PNG variant), table-driven, zero-dependency.
+//!
+//! Used by the artifact container (`serve::format`, DESIGN.md §12) to
+//! checksum the header and payload sections independently, so a torn or
+//! bit-flipped artifact is *detected* at load instead of deserializing into
+//! a silently wrong model. The reflected polynomial `0xEDB88320` with init
+//! and final-xor `0xFFFFFFFF` is the ubiquitous variant every external
+//! tool (`cksum -o 3`, `python -c 'import zlib'`, `crc32(1)`) can verify,
+//! which matters for operators inspecting artifacts out-of-band.
+//!
+//! The 1 KiB lookup table is built in a `const fn` at compile time — no
+//! lazy init, no locks, no first-call latency on the serving path.
+
+/// Reflected CRC-32 polynomial (IEEE 802.3).
+const POLY: u32 = 0xEDB8_8320;
+
+const TABLE: [u32; 256] = build_table();
+
+const fn build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            crc = if crc & 1 != 0 { (crc >> 1) ^ POLY } else { crc >> 1 };
+            bit += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+}
+
+/// CRC-32 of `bytes` (init `0xFFFFFFFF`, final xor `0xFFFFFFFF`).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    update(0xFFFF_FFFF, bytes) ^ 0xFFFF_FFFF
+}
+
+/// Fold `bytes` into a running (pre-final-xor) CRC state. Exposed so large
+/// artifacts could checksum incrementally; `state` starts at `0xFFFFFFFF`
+/// and the caller applies the final xor.
+pub fn update(mut state: u32, bytes: &[u8]) -> u32 {
+    for &b in bytes {
+        state = (state >> 8) ^ TABLE[((state ^ b as u32) & 0xFF) as usize];
+    }
+    state
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_answer_vectors() {
+        // The standard check value for this CRC variant.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn incremental_matches_one_shot() {
+        let data = b"mini-batch kernel k-means artifact checksum";
+        for split in 0..data.len() {
+            let s = update(0xFFFF_FFFF, &data[..split]);
+            let s = update(s, &data[split..]);
+            assert_eq!(s ^ 0xFFFF_FFFF, crc32(data), "split at {split}");
+        }
+    }
+
+    #[test]
+    fn single_bit_flips_are_detected() {
+        let data: Vec<u8> = (0u16..512).map(|i| (i * 7 + 3) as u8).collect();
+        let good = crc32(&data);
+        let mut bad = data.clone();
+        for byte in (0..data.len()).step_by(37) {
+            for bit in 0..8 {
+                bad[byte] ^= 1 << bit;
+                assert_ne!(crc32(&bad), good, "flip at byte {byte} bit {bit}");
+                bad[byte] ^= 1 << bit;
+            }
+        }
+    }
+}

@@ -1,0 +1,360 @@
+//! Zero-dependency fault injection (failpoints) — ADR-004, DESIGN.md §12.
+//!
+//! Every I/O and concurrency boundary in the crate evaluates a *named
+//! failpoint* (artifact writes, checkpoint saves, HTTP accept/read/write,
+//! the coalescer leader flush, worker-pool jobs). In production nothing is
+//! configured and the check is a single relaxed atomic load — measured as
+//! unobservable in `bench_serving`'s overhead case. Under test, the
+//! `MBKK_FAILPOINTS` environment variable (or [`configure`] from test
+//! code) arms specific points to panic, return an injected error, or stall
+//! — which is how the chaos CI job kills a training run mid-write and how
+//! the leader-panic recovery test poisons exactly one coalesced request.
+//!
+//! ## Spec grammar
+//!
+//! ```text
+//! MBKK_FAILPOINTS = point [; point]*
+//! point           = name "=" [ "after(" N "):" ] [ K "*" ] action
+//! action          = "panic" | "err" | "err(" message ")" | "delay(" ms ")"
+//! ```
+//!
+//! * `after(N):` — let the first N evaluations pass before acting.
+//! * `K*` — act at most K times, then the point goes quiet.
+//! * `panic` — panic at the evaluation site (crash simulation; the site's
+//!   normal unwind path — catch, poison recovery, process death — is the
+//!   thing under test).
+//! * `err` / `err(message)` — the site fails with an injected
+//!   [`Error`](crate::util::error::Error) through its ordinary error path.
+//! * `delay(ms)` — sleep inline, then proceed normally (widens race and
+//!   kill windows; the chaos job SIGKILLs a run stalled inside an
+//!   artifact write to manufacture a torn file).
+//!
+//! Example: `MBKK_FAILPOINTS='checkpoint.save=after(2):1*panic'` crashes
+//! the third checkpoint save, once.
+//!
+//! ## Hot-path contract
+//!
+//! [`armed`] is the only thing instrumented code calls when no failpoint
+//! was ever configured: one `Once` completion check plus one relaxed
+//! `AtomicBool` load, no locks, no allocation, no branch on string data.
+//! The registry mutex is touched only when the process was explicitly
+//! armed, where overhead is irrelevant by definition.
+
+use crate::util::error::Result;
+use crate::{bail, format_err};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, Once};
+
+/// Environment variable holding the failpoint spec (parsed once, on the
+/// first [`armed`] call anywhere in the process).
+pub const ENV_VAR: &str = "MBKK_FAILPOINTS";
+
+/// What an armed failpoint does when it acts. `delay` is handled inside
+/// [`eval`] (it sleeps, then the site proceeds), so callers only ever see
+/// the two fallible variants.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Fault {
+    /// The site must panic (the caller's unwind path is under test).
+    Panic,
+    /// The site must fail with this message through its error path.
+    Err(String),
+}
+
+#[derive(Clone, Debug, PartialEq)]
+enum Action {
+    Panic,
+    Err(String),
+    Delay(u64),
+}
+
+struct Entry {
+    name: String,
+    action: Action,
+    /// Evaluations to let pass before acting (`after(N):`).
+    skip: u64,
+    /// Maximum number of times to act (`K*`; `u64::MAX` = unlimited).
+    limit: u64,
+    /// Total evaluations so far.
+    hits: u64,
+    /// Times the action actually ran.
+    fired: u64,
+}
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static ENV_INIT: Once = Once::new();
+static REGISTRY: Mutex<Vec<Entry>> = Mutex::new(Vec::new());
+
+fn registry() -> std::sync::MutexGuard<'static, Vec<Entry>> {
+    // A panicking failpoint can poison the registry mutex by design;
+    // the registry itself is never left mid-mutation, so recover.
+    REGISTRY.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Fast check: is any failpoint configured in this process? Instrumented
+/// sites gate every [`eval`]/[`fire`] behind this so the disabled hot path
+/// costs one relaxed atomic load.
+#[inline]
+pub fn armed() -> bool {
+    ENV_INIT.call_once(|| {
+        if let Ok(spec) = std::env::var(ENV_VAR) {
+            if !spec.trim().is_empty() {
+                if let Err(e) = configure(&spec) {
+                    // A typo'd spec must not silently disable chaos tests.
+                    eprintln!("mbkk: invalid {ENV_VAR} spec: {e}");
+                }
+            }
+        }
+    });
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Evaluate the named failpoint. Returns `None` when the point is not
+/// configured, still skipping, exhausted, or was a `delay` (the sleep
+/// happens inline here). Callers match on the returned [`Fault`]; most use
+/// [`fire`] instead.
+pub fn eval(name: &str) -> Option<Fault> {
+    if !armed() {
+        return None;
+    }
+    let action = {
+        let mut reg = registry();
+        let e = reg.iter_mut().find(|e| e.name == name)?;
+        let hit = e.hits;
+        e.hits += 1;
+        if hit < e.skip || e.fired >= e.limit {
+            return None;
+        }
+        e.fired += 1;
+        e.action.clone()
+    };
+    match action {
+        Action::Delay(ms) => {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+            None
+        }
+        Action::Panic => Some(Fault::Panic),
+        Action::Err(msg) => Some(Fault::Err(msg)),
+    }
+}
+
+/// Evaluate the named failpoint in a `Result` context: `panic` panics
+/// here, `err` returns the injected error, anything else is `Ok(())`.
+pub fn fire(name: &str) -> Result<()> {
+    match eval(name) {
+        None => Ok(()),
+        Some(Fault::Err(msg)) => Err(format_err!("failpoint {name}: {msg}")),
+        Some(Fault::Panic) => panic!("failpoint {name}: injected panic"),
+    }
+}
+
+/// Parse and install a failpoint spec (see the module docs for the
+/// grammar), arming the process. Points already configured under the same
+/// name are replaced with fresh counters. Test code calls this directly;
+/// the `MBKK_FAILPOINTS` environment variable routes here on first use.
+pub fn configure(spec: &str) -> Result<()> {
+    let mut parsed = Vec::new();
+    for part in spec.split([';', ',']) {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (name, action_spec) = part
+            .split_once('=')
+            .ok_or_else(|| format_err!("failpoint spec {part:?} is not name=action"))?;
+        let name = name.trim();
+        if name.is_empty() {
+            bail!("failpoint spec {part:?} has an empty name");
+        }
+        let (skip, limit, action) = parse_action(action_spec.trim())?;
+        parsed.push(Entry { name: name.to_string(), action, skip, limit, hits: 0, fired: 0 });
+    }
+    let mut reg = registry();
+    for entry in parsed {
+        reg.retain(|e| e.name != entry.name);
+        reg.push(entry);
+    }
+    drop(reg);
+    ARMED.store(true, Ordering::Relaxed);
+    Ok(())
+}
+
+/// `[after(N):][K*]action` → (skip, limit, action).
+fn parse_action(mut s: &str) -> Result<(u64, u64, Action)> {
+    let mut skip = 0u64;
+    if let Some(rest) = s.strip_prefix("after(") {
+        let (n, rest) = rest
+            .split_once("):")
+            .ok_or_else(|| format_err!("failpoint action {s:?}: after(N) needs \"):\""))?;
+        skip = n
+            .trim()
+            .parse()
+            .map_err(|_| format_err!("failpoint action {s:?}: bad after() count {n:?}"))?;
+        s = rest;
+    }
+    let mut limit = u64::MAX;
+    if let Some((count, rest)) = s.split_once('*') {
+        limit = count
+            .trim()
+            .parse()
+            .map_err(|_| format_err!("failpoint action {s:?}: bad count {count:?}"))?;
+        s = rest;
+    }
+    let action = match s {
+        "panic" => Action::Panic,
+        "err" => Action::Err("injected error".to_string()),
+        _ => {
+            if let Some(msg) = s.strip_prefix("err(").and_then(|r| r.strip_suffix(')')) {
+                Action::Err(msg.to_string())
+            } else if let Some(ms) = s.strip_prefix("delay(").and_then(|r| r.strip_suffix(')')) {
+                Action::Delay(ms.trim().parse().map_err(|_| {
+                    format_err!("failpoint action {s:?}: bad delay milliseconds {ms:?}")
+                })?)
+            } else {
+                bail!(
+                    "unknown failpoint action {s:?} \
+                     (known: panic, err, err(msg), delay(ms), with optional \
+                     after(N): and K* prefixes)"
+                );
+            }
+        }
+    };
+    Ok((skip, limit, action))
+}
+
+/// Remove one configured failpoint (tests pair [`configure`] with this so
+/// parallel tests never see each other's points — names are per-test).
+pub fn clear(name: &str) {
+    registry().retain(|e| e.name != name);
+}
+
+/// Remove every configured failpoint and disarm the fast check. Intended
+/// for process-level harnesses, not parallel unit tests (it would yank
+/// points out from under a concurrently running test).
+pub fn reset() {
+    registry().clear();
+    ARMED.store(false, Ordering::Relaxed);
+}
+
+/// How many times the named failpoint's action has run — lets tests assert
+/// an injection actually happened rather than silently not firing.
+pub fn fired_count(name: &str) -> u64 {
+    registry().iter().find(|e| e.name == name).map_or(0, |e| e.fired)
+}
+
+/// Tests that arm *shared* failpoint names (the `artifact.write.*` /
+/// `checkpoint.*` points evaluated by library code) serialize through
+/// this mutex so cargo's parallel test threads don't consume each
+/// other's injections. Tests arming names unique to themselves don't
+/// need it.
+#[doc(hidden)]
+pub fn exclusive_test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Every test uses unique failpoint names and clears them on exit:
+    // the registry is process-global and cargo runs tests in parallel.
+
+    #[test]
+    fn unconfigured_points_are_inert() {
+        assert_eq!(eval("fp.test.never-configured"), None);
+        assert!(fire("fp.test.never-configured").is_ok());
+    }
+
+    #[test]
+    fn err_action_fires_through_the_error_path() {
+        configure("fp.test.err=err(disk on fire)").unwrap();
+        let e = fire("fp.test.err").unwrap_err();
+        assert!(format!("{e}").contains("disk on fire"), "{e}");
+        assert_eq!(fired_count("fp.test.err"), 1);
+        clear("fp.test.err");
+    }
+
+    #[test]
+    fn count_limit_exhausts() {
+        configure("fp.test.limit=2*err").unwrap();
+        assert!(fire("fp.test.limit").is_err());
+        assert!(fire("fp.test.limit").is_err());
+        assert!(fire("fp.test.limit").is_ok(), "third evaluation must pass");
+        assert_eq!(fired_count("fp.test.limit"), 2);
+        clear("fp.test.limit");
+    }
+
+    #[test]
+    fn after_skips_then_fires() {
+        configure("fp.test.after=after(3):err").unwrap();
+        for i in 0..3 {
+            assert!(fire("fp.test.after").is_ok(), "evaluation {i} must pass");
+        }
+        assert!(fire("fp.test.after").is_err());
+        clear("fp.test.after");
+    }
+
+    #[test]
+    fn after_and_limit_compose() {
+        configure("fp.test.compose=after(1):1*err").unwrap();
+        assert!(fire("fp.test.compose").is_ok());
+        assert!(fire("fp.test.compose").is_err());
+        assert!(fire("fp.test.compose").is_ok());
+        clear("fp.test.compose");
+    }
+
+    #[test]
+    fn panic_action_panics_at_the_site() {
+        configure("fp.test.panic=1*panic").unwrap();
+        let caught = std::panic::catch_unwind(|| fire("fp.test.panic"));
+        assert!(caught.is_err(), "panic action must unwind");
+        assert!(fire("fp.test.panic").is_ok(), "one-shot panic must exhaust");
+        clear("fp.test.panic");
+    }
+
+    #[test]
+    fn delay_sleeps_then_passes() {
+        configure("fp.test.delay=delay(30)").unwrap();
+        let t = std::time::Instant::now();
+        assert!(fire("fp.test.delay").is_ok());
+        assert!(t.elapsed() >= std::time::Duration::from_millis(25));
+        clear("fp.test.delay");
+    }
+
+    #[test]
+    fn reconfigure_replaces_counters() {
+        configure("fp.test.replace=1*err").unwrap();
+        assert!(fire("fp.test.replace").is_err());
+        configure("fp.test.replace=1*err").unwrap();
+        assert!(fire("fp.test.replace").is_err(), "fresh counters after reconfigure");
+        clear("fp.test.replace");
+    }
+
+    #[test]
+    fn multi_point_specs_and_separators() {
+        configure("fp.test.m1=err; fp.test.m2=delay(0),fp.test.m3=err(x)").unwrap();
+        assert!(fire("fp.test.m1").is_err());
+        assert!(fire("fp.test.m2").is_ok());
+        assert!(fire("fp.test.m3").is_err());
+        for n in ["fp.test.m1", "fp.test.m2", "fp.test.m3"] {
+            clear(n);
+        }
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        for bad in [
+            "noequals",
+            "=err",
+            "x=explode",
+            "x=delay(soon)",
+            "x=after(2)panic",
+            "x=many*err",
+        ] {
+            assert!(configure(bad).is_err(), "{bad:?} must be rejected");
+        }
+        // Rejected specs must not leave partial state behind.
+        assert_eq!(eval("x"), None);
+        assert_eq!(eval("noequals"), None);
+    }
+}

@@ -6,7 +6,9 @@
 //! tests.
 
 pub mod cli;
+pub mod crc32;
 pub mod error;
+pub mod failpoint;
 pub mod fmath;
 pub mod json;
 pub mod parallel;

@@ -140,7 +140,27 @@ fn run_tasks(job: &Job) {
         // SAFETY: `i < count`, so `run` has not returned yet and the
         // closure reference is alive (see the `Job::f` field contract).
         let f = unsafe { &*job.f };
-        if let Err(p) = catch_unwind(AssertUnwindSafe(|| f(i))) {
+        if let Err(p) = catch_unwind(AssertUnwindSafe(|| {
+            // Fault injection rides the panic-transparency path: an armed
+            // `pool.job` failpoint (panic or err) surfaces to the submitter
+            // exactly like a task panic, and the pool must survive it. The
+            // name is process-global, so it is exercised by the chaos CI
+            // sweep (one process, one pool user) rather than in-process
+            // unit tests, which share the pool across concurrent tests.
+            if crate::util::failpoint::armed() {
+                if let Some(fault) = crate::util::failpoint::eval("pool.job") {
+                    match fault {
+                        crate::util::failpoint::Fault::Panic => {
+                            panic!("failpoint pool.job: injected panic")
+                        }
+                        crate::util::failpoint::Fault::Err(msg) => {
+                            panic!("failpoint pool.job: {msg}")
+                        }
+                    }
+                }
+            }
+            f(i)
+        })) {
             let mut slot = job.payload.lock().expect("panic slot poisoned");
             if slot.is_none() {
                 *slot = Some(p);

@@ -41,6 +41,19 @@ impl Rng {
         Rng { s, gauss_cache: None }
     }
 
+    /// Export the complete generator state — the four Xoshiro words plus
+    /// the cached second Box–Muller variate — for training checkpoints.
+    /// [`Rng::from_state`] restores it; the restored stream continues
+    /// bit-identically to the original (DESIGN.md §12).
+    pub fn state(&self) -> ([u64; 4], Option<f64>) {
+        (self.s, self.gauss_cache)
+    }
+
+    /// Rebuild a generator from [`Rng::state`] output.
+    pub fn from_state(s: [u64; 4], gauss_cache: Option<f64>) -> Rng {
+        Rng { s, gauss_cache }
+    }
+
     /// Derive an independent child stream; deterministic in (self state, tag).
     pub fn split(&mut self, tag: u64) -> Rng {
         let mut sm = self.next_u64() ^ tag.wrapping_mul(0xA24B_AED4_963E_E407);

@@ -66,6 +66,7 @@ fn start_server(model: &KernelKMeansModel, tweak: impl FnOnce(&mut ServeConfig))
         max_body_bytes: 256 * 1024,
         read_timeout: Duration::from_millis(400),
         max_connections: 64,
+        request_deadline: Duration::from_secs(5),
     };
     tweak(&mut cfg);
     let server = Server::bind(model, "test-model.mbkk", &cfg).expect("bind");
@@ -190,7 +191,10 @@ fn healthz_and_models_shapes() {
     assert_eq!(health.body.get("model").get("k").as_usize(), Some(model.k()));
     assert_eq!(health.body.get("model").get("d").as_usize(), Some(model.d));
     let stats = health.body.get("stats");
-    for key in ["requests", "batches", "rows", "coalesced_batches", "max_batch_rows"] {
+    for key in [
+        "requests", "batches", "rows", "coalesced_batches", "max_batch_rows",
+        "aborted_requests", "shed_requests",
+    ] {
         assert!(stats.get(key).as_f64().is_some(), "stats missing {key}");
     }
     assert!(stats.get("active_connections").as_usize().is_some());
@@ -453,6 +457,10 @@ fn clean_shutdown_returns_final_stats() {
     assert_eq!(stats.requests, 1);
     assert_eq!(stats.batches, 1);
     assert_eq!(stats.rows, 1);
+    // A graceful drain finishes in-flight work instead of aborting it:
+    // every admitted request above was answered, so nothing was dropped
+    // at the drain deadline (the SIGTERM contract in docs/API.md).
+    assert_eq!(stats.aborted_requests, 0, "graceful shutdown aborted work: {stats:?}");
 }
 
 // ---- the ISSUE 7 loader-path bugfix regression ----------------------------

@@ -139,8 +139,15 @@ fn corrupted_artifacts_error_and_never_panic() {
     let err = KernelKMeansModel::from_bytes(&garbage).unwrap_err();
     assert!(format!("{err}").contains("JSON"), "{err}");
 
-    // Flipped payload byte still parses (values are opaque floats) but a
-    // *removed* payload byte must be caught by the size check.
+    // A flipped payload byte is a checksum mismatch under format v2
+    // (v1 had to accept it — floats are opaque bytes).
+    let mut flipped = good.clone();
+    let last = flipped.len() - 5; // inside the payload, before the CRC tail
+    flipped[last] ^= 0x01;
+    let err = KernelKMeansModel::from_bytes(&flipped).unwrap_err();
+    assert!(format!("{err}").contains("checksum"), "{err}");
+
+    // A removed payload byte must be caught too.
     let mut short = good.clone();
     short.pop();
     let err = KernelKMeansModel::from_bytes(&short).unwrap_err();
@@ -174,7 +181,7 @@ fn wrong_version_is_rejected_with_a_clear_error() {
     let good = model.to_bytes();
     let hlen = u32::from_le_bytes([good[8], good[9], good[10], good[11]]) as usize;
     let header = std::str::from_utf8(&good[12..12 + hlen]).unwrap();
-    let patched = header.replace("\"format_version\":1", "\"format_version\":7");
+    let patched = header.replace("\"format_version\":2", "\"format_version\":7");
     assert_ne!(patched, header, "patch must hit the version field");
     let mut v7 = Vec::new();
     v7.extend_from_slice(&good[..8]);
@@ -182,8 +189,10 @@ fn wrong_version_is_rejected_with_a_clear_error() {
     v7.extend_from_slice(patched.as_bytes());
     v7.extend_from_slice(&good[12 + hlen..]);
     let err = KernelKMeansModel::from_bytes(&v7).unwrap_err();
+    // The version check fires before the checksum check on purpose, so a
+    // future-format artifact says "upgrade" instead of "corrupt".
     let text = format!("{err}");
-    assert!(text.contains("version 7") && text.contains("version 1"), "{text}");
+    assert!(text.contains("version 7") && text.contains("1..=2"), "{text}");
 }
 
 #[test]
