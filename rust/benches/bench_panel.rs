@@ -1,25 +1,34 @@
-//! Panel micro-kernel + worker-pool benchmarks (ISSUE 3).
+//! Panel micro-kernel + worker-pool benchmarks (ISSUE 3, extended by
+//! ISSUE 9 with the Fast numerics mode).
 //!
 //! * Panel block fill vs the pre-panel scalar engine (difference-form
 //!   per-pair evaluation, reimplemented here as the baseline) at d = 16
 //!   and d = 128 — the acceptance criterion asks ≥ 2x at d = 128.
+//! * The same block fill under `NumericsMode::Fast` (runtime-dispatched
+//!   SIMD dot micro-kernels + batched exp), so both numerics modes land
+//!   in the perf trajectory side by side.
+//! * The batched exponential alone: `f64::exp` per value (Deterministic)
+//!   vs the dispatched `exp_slice` arm (Fast) over a Gaussian-range
+//!   argument buffer.
 //! * Dispatch latency of the persistent pool vs scoped per-call spawning
 //!   (the old `util::parallel` implementation, reimplemented here) — the
 //!   overhead that used to sit on every 1-2 ms Algorithm-2 iteration.
 //!
 //! Merges its samples into the repo-root `BENCH_baseline.json` perf
-//! trajectory (suite "panel micro-kernels").
+//! trajectory (suite "panel micro-kernels"); `write_baseline` stamps the
+//! worker-thread count into every case's metadata.
 //!
 //! ```bash
+//! cargo bench --bench bench_panel                     # runtime dispatch
 //! RUSTFLAGS="-C target-cpu=native" cargo bench --bench bench_panel
 //! ```
 
 use mbkk::bench::BenchRunner;
 use mbkk::data::synthetic::{blobs, SyntheticSpec};
 use mbkk::data::Dataset;
-use mbkk::kernels::{Gram, KernelFunction};
-use mbkk::util::parallel;
+use mbkk::kernels::{Gram, KernelFunction, NumericsMode};
 use mbkk::util::rng::Rng;
+use mbkk::util::{parallel, simd};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// The pre-panel scalar engine: difference-form Gaussian per pair,
@@ -44,9 +53,9 @@ fn scalar_block(ds: &Dataset, kappa: f64, rows: &[usize], cols: &[usize], out: &
 
 /// The pre-pool dispatcher: spawn scoped threads for one parallel region,
 /// atomic-counter claimed — what `par_dynamic` compiled to before the
-/// persistent pool.
-fn scoped_spawn_dispatch(count: usize, f: &(dyn Fn(usize) + Sync)) {
-    let workers = parallel::num_threads().min(count);
+/// persistent pool. `workers` is hoisted to the caller so the timed
+/// region measures dispatch alone, not the thread-count probe.
+fn scoped_spawn_dispatch(workers: usize, count: usize, f: &(dyn Fn(usize) + Sync)) {
     if workers <= 1 {
         for i in 0..count {
             f(i);
@@ -71,28 +80,58 @@ fn scoped_spawn_dispatch(count: usize, f: &(dyn Fn(usize) + Sync)) {
 fn main() {
     let mut runner = BenchRunner::new("panel micro-kernels");
     let mut rng = Rng::seeded(17);
+    println!(
+        "numerics: fast arm = {:?}, threads = {}",
+        simd::detected_arch(),
+        parallel::num_threads()
+    );
 
     for &d in &[16usize, 128] {
         let ds = blobs(&SyntheticSpec::new(8000, d, 5), &mut rng);
         let kappa = d as f64;
-        let fly = Gram::on_the_fly(&ds, KernelFunction::Gaussian { kappa });
+        let func = KernelFunction::Gaussian { kappa };
+        let fly = Gram::on_the_fly(&ds, func);
+        let fast = Gram::on_the_fly_with(&ds, func, NumericsMode::Fast);
         let rows: Vec<usize> = (0..256).map(|_| rng.below(ds.n)).collect();
         let cols: Vec<usize> = (0..512).map(|_| rng.below(ds.n)).collect();
         let mut out = vec![0.0f64; rows.len() * cols.len()];
+        let det_case = format!("panel block 256x512 d={d}");
+        let fast_case = format!("panel block 256x512 d={d} [fast]");
+        let scalar_case = format!("scalar block 256x512 d={d}");
         // Warm the norm cache outside the timed region (one-time cost,
         // amortized over a whole run).
         let _ = ds.sq_norms();
-        runner.bench(&format!("panel block 256x512 d={d}"), || {
+        runner.bench(&det_case, || {
             fly.block_into(&rows, &cols, &mut out);
         });
-        runner.bench(&format!("scalar block 256x512 d={d}"), || {
+        runner.bench(&fast_case, || {
+            fast.block_into(&rows, &cols, &mut out);
+        });
+        runner.bench(&scalar_case, || {
             scalar_block(&ds, kappa, &rows, &cols, &mut out);
         });
-        if let Some(r) =
-            runner.ratio(&format!("scalar block 256x512 d={d}"), &format!("panel block 256x512 d={d}"))
-        {
+        if let Some(r) = runner.ratio(&scalar_case, &det_case) {
             println!("  -> panel speedup over scalar at d={d}: {r:.2}x");
         }
+        if let Some(r) = runner.ratio(&det_case, &fast_case) {
+            println!("  -> fast-mode speedup over deterministic at d={d}: {r:.2}x");
+        }
+    }
+
+    // The batched exponential alone, over the argument range the Gaussian
+    // finish actually produces (exp of a non-positive scaled distance).
+    let args: Vec<f64> = (0..4096).map(|_| -rng.f64() * 40.0).collect();
+    let mut buf = args.clone();
+    runner.bench("batched exp 4096", || {
+        buf.copy_from_slice(&args);
+        simd::exp_slice(NumericsMode::Deterministic, &mut buf);
+    });
+    runner.bench("batched exp 4096 [fast]", || {
+        buf.copy_from_slice(&args);
+        simd::exp_slice(NumericsMode::Fast, &mut buf);
+    });
+    if let Some(r) = runner.ratio("batched exp 4096", "batched exp 4096 [fast]") {
+        println!("  -> fast exp speedup over f64::exp: {r:.2}x");
     }
 
     // Dispatch latency: tiny tasks, so the measurement is dominated by
@@ -100,11 +139,12 @@ fn main() {
     let payload = |i: usize| {
         std::hint::black_box((0..64u64).fold(i as u64, |a, b| a ^ (a + b)));
     };
+    let workers = parallel::num_threads().min(64);
     runner.bench("pool dispatch 64 tasks", || {
         parallel::par_dynamic(64, payload);
     });
     runner.bench("scoped-spawn dispatch 64 tasks", || {
-        scoped_spawn_dispatch(64, &payload);
+        scoped_spawn_dispatch(workers, 64, &payload);
     });
     if let Some(r) = runner.ratio("scoped-spawn dispatch 64 tasks", "pool dispatch 64 tasks") {
         println!("  -> pool dispatch speedup over scoped spawn: {r:.2}x");

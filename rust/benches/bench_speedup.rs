@@ -55,6 +55,7 @@ fn main() {
                 max_iters: iters,
                 epsilon,
                 seed: 3,
+                numerics: mbkk::kernels::NumericsMode::Deterministic,
             };
             run_with_gram(&spec, &ds, Some(&gram), kernel_secs)
         };

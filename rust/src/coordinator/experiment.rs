@@ -11,7 +11,9 @@
 use super::checkpoint::{self, CheckpointConfig};
 use crate::bail;
 use crate::data::{registry, Dataset};
-use crate::kernels::{graph, sigma, CachedGram, CacheStats, Gram, KernelFunction, KernelProvider};
+use crate::kernels::{
+    graph, sigma, CachedGram, CacheStats, Gram, KernelFunction, KernelProvider, NumericsMode,
+};
 use crate::kkmeans::{
     FullBatchConfig, FullBatchKernelKMeans, Init, KernelKMeansModel, LearningRate,
     MiniBatchConfig, MiniBatchKernelKMeans, NativeBackend, ScheduleSpec, TerminationDecision,
@@ -61,7 +63,10 @@ impl KernelSpec {
     /// paths go through [`KernelSpec::build_with`] instead.
     pub fn build(&self, ds: &Dataset, rng: &mut Rng) -> (Gram<'static>, f64) {
         let sw = Stopwatch::start();
-        let gram = match self.build_with(ds, rng, GramStrategy::Materialize).0 {
+        let built = self
+            .build_with(ds, rng, GramStrategy::Materialize, NumericsMode::Deterministic)
+            .0;
+        let gram = match built {
             BuiltGram::Materialized(g) => g,
             BuiltGram::Streaming(_) => unreachable!("Materialize never streams"),
         };
@@ -70,19 +75,23 @@ impl KernelSpec {
 
     /// Build the gram provider under a [`GramStrategy`]; returns the built
     /// provider and the build seconds. Feature kernels honour the strategy
-    /// (materialize vs stream); graph kernels are dense n×n by construction
-    /// and always materialize (forcing `Stream` for them panics with a
-    /// clear message — their O(n²) build cost dwarfs any table saving).
+    /// (materialize vs stream) and the numerics mode (DESIGN.md §13: Fast
+    /// batches the exp finish through the SIMD lanes; dot kernels are
+    /// bit-identical either way); graph kernels are dense n×n by
+    /// construction and always materialize (forcing `Stream` for them
+    /// panics with a clear message — their O(n²) build cost dwarfs any
+    /// table saving) and are unaffected by the numerics mode.
     pub fn build_with<'a>(
         &self,
         ds: &'a Dataset,
         rng: &mut Rng,
         strategy: GramStrategy,
+        numerics: NumericsMode,
     ) -> (BuiltGram<'a>, f64) {
         let sw = Stopwatch::start();
         let built = match *self {
             KernelSpec::Gaussian { multiplier } => {
-                build_gaussian(ds, rng, multiplier, strategy).0
+                build_gaussian(ds, rng, multiplier, strategy, numerics).0
             }
             KernelSpec::Knn { neighbors } => {
                 check_graph_kernel_feasible("knn", ds.n, strategy);
@@ -121,11 +130,12 @@ fn build_gaussian<'a>(
     rng: &mut Rng,
     multiplier: f64,
     strategy: GramStrategy,
+    numerics: NumericsMode,
 ) -> (BuiltGram<'a>, KernelFunction) {
     let kappa =
         sigma::kappa_heuristic_with(ds, rng, sigma::DEFAULT_PAIR_SAMPLES, multiplier);
     let func = KernelFunction::Gaussian { kappa };
-    let fly = Gram::on_the_fly(ds, func);
+    let fly = Gram::on_the_fly_with(ds, func, numerics);
     let built = if strategy.materializes(ds.n) {
         BuiltGram::Materialized(fly.materialize())
     } else {
@@ -361,6 +371,10 @@ pub struct RunSpec {
     pub epsilon: Option<f64>,
     /// RNG seed (dataset + run streams derive from it).
     pub seed: u64,
+    /// Numerics mode for the gram fills (DESIGN.md §13). Deterministic is
+    /// the default and the only mode conformance/repro artifacts use; Fast
+    /// batches the exp finish through the SIMD lanes (≤ 4 ulp per value).
+    pub numerics: NumericsMode,
 }
 
 impl RunSpec {
@@ -381,8 +395,10 @@ impl RunSpec {
     /// Canonical string naming everything that affects the fit's bit
     /// stream. Stored in every checkpoint and compared at `--resume auto`
     /// time, so state from a different run configuration can never be
-    /// replayed into this one (the `v1|` prefix versions the encoding
-    /// itself). Exhaustive over the spec's fields on purpose — a field
+    /// replayed into this one (the `v2|` prefix versions the encoding
+    /// itself — v2 added the numerics field, which changes gram bits in
+    /// Fast mode and so must invalidate Deterministic checkpoints and vice
+    /// versa). Exhaustive over the spec's fields on purpose — a field
     /// that *doesn't* change results (there is none today) would merely
     /// force a fresh start, which is safe; the reverse is not.
     pub fn fingerprint(&self) -> String {
@@ -392,7 +408,7 @@ impl RunSpec {
             KernelSpec::Heat { neighbors, t } => format!("heat:{neighbors}:{t}"),
         };
         format!(
-            "v1|ds={}|scale={}|kernel={}|algo={}|k={}|b={}|sched={}|tau={}|iters={}|eps={:?}|seed={}",
+            "v2|ds={}|scale={}|kernel={}|algo={}|k={}|b={}|sched={}|tau={}|iters={}|eps={:?}|seed={}|num={}",
             self.dataset,
             self.scale,
             kernel,
@@ -403,7 +419,8 @@ impl RunSpec {
             self.tau,
             self.max_iters,
             self.epsilon,
-            self.seed
+            self.seed,
+            self.numerics.name()
         )
     }
 }
@@ -578,7 +595,8 @@ pub fn run_on_dataset(
     if spec.algo.is_kernelized() {
         let strategy = strategy.resolve(spec.algo, ds.n);
         let mut rng = Rng::seeded(spec.seed ^ 0xC0DE);
-        let (built, kernel_secs) = spec.kernel.build_with(ds, &mut rng, strategy);
+        let (built, kernel_secs) =
+            spec.kernel.build_with(ds, &mut rng, strategy, spec.numerics);
         let outcome = run_with_gram(spec, ds, Some(built.provider()), kernel_secs);
         let report = GramReport {
             label: built.provider().label(),
@@ -630,7 +648,8 @@ pub fn run_on_dataset_checkpointed(
     };
     let strategy = strategy.resolve(spec.algo, ds.n);
     let mut krng = Rng::seeded(spec.seed ^ 0xC0DE);
-    let (built, kernel_secs) = spec.kernel.build_with(ds, &mut krng, strategy);
+    let (built, kernel_secs) =
+        spec.kernel.build_with(ds, &mut krng, strategy, spec.numerics);
     let fp = spec.fingerprint();
     let resume_snap = match resume {
         ResumeMode::Auto => checkpoint::load_latest(&ckpt.dir, &fp, ds.n)?.map(|(snap, path)| {
@@ -764,7 +783,7 @@ fn fit_servable_model_impl(
     let sw = Stopwatch::start();
     // The same build path `run_on_dataset` reaches through build_with, fed
     // by the same seed derivation — fit and run cannot drift.
-    let (built, func) = build_gaussian(ds, &mut krng, multiplier, strategy);
+    let (built, func) = build_gaussian(ds, &mut krng, multiplier, strategy, spec.numerics);
     let kernel_secs = sw.secs();
 
     let mut fit_rng = Rng::seeded(spec.seed ^ 0x5EED);
@@ -854,6 +873,7 @@ mod tests {
             max_iters: 20,
             epsilon: None,
             seed: 3,
+            numerics: NumericsMode::Deterministic,
         }
     }
 
@@ -1048,6 +1068,32 @@ mod tests {
         let mut c = a.clone();
         c.kernel = KernelSpec::Gaussian { multiplier: 2.0 };
         assert_ne!(a.fingerprint(), c.fingerprint());
+        // Fast mode changes gram bits, so it must invalidate checkpoints.
+        let mut d = a.clone();
+        d.numerics = NumericsMode::Fast;
+        assert_ne!(a.fingerprint(), d.fingerprint());
+    }
+
+    #[test]
+    fn fast_numerics_runs_match_deterministic_closely() {
+        // End-to-end at the coordinator layer: a Fast-mode fit must land on
+        // the same clustering as the Deterministic one. The materialized
+        // table is f32-quantized after the fill, so the ≤4-ulp f64 exp
+        // difference almost always rounds away entirely; bound loosely
+        // anyway in case a value sits on an f32 rounding boundary.
+        let det = base_spec(AlgoSpec::TruncKkm(LearningRate::Beta));
+        let mut fast = det.clone();
+        fast.numerics = NumericsMode::Fast;
+        let a = run_one(&det);
+        let b = run_one(&fast);
+        assert!(
+            (a.objective - b.objective).abs() <= 1e-3 * a.objective.abs(),
+            "det={} fast={}",
+            a.objective,
+            b.objective
+        );
+        assert!((a.ari - b.ari).abs() < 0.05, "det={} fast={}", a.ari, b.ari);
+        assert!(b.ari > 0.3, "fast ARI={}", b.ari);
     }
 
     #[test]

@@ -190,6 +190,8 @@ fn run_grid(
             max_iters: opts.max_iters,
             epsilon: None,
             seed: 0,
+            // Figure grids are paper-protocol artifacts: always deterministic.
+            numerics: crate::kernels::NumericsMode::Deterministic,
         };
         // Repeats run in parallel; each clones the spec with its own seed.
         let jobs: Vec<_> = (0..opts.repeats)

@@ -115,6 +115,8 @@ fn spec_for(opts: &ReproOptions, dataset: &str, algo: AlgoSpec, schedule: Schedu
         max_iters: opts.max_iters,
         epsilon: Some(opts.epsilon),
         seed: opts.seed,
+        // Repro artifacts are conformance evidence: always deterministic.
+        numerics: crate::kernels::NumericsMode::Deterministic,
     }
 }
 

@@ -17,6 +17,7 @@ use super::tile;
 use super::KernelFunction;
 use crate::data::Dataset;
 use crate::util::parallel::{par_dynamic, par_rows_mut, SharedSlice};
+use crate::util::simd::NumericsMode;
 
 /// Access to the (implicit) kernel matrix of a dataset.
 pub enum Gram<'a> {
@@ -28,6 +29,9 @@ pub enum Gram<'a> {
         func: KernelFunction,
         /// Cached diagonal `K(x_i, x_i)`.
         diag: Vec<f64>,
+        /// Numerics mode for the block fills (DESIGN.md §13).
+        /// [`Gram::eval`] stays the deterministic scalar reference.
+        mode: NumericsMode,
     },
     /// Dense precomputed matrix (row-major, f32 storage to halve memory;
     /// kernel values are O(1)-scaled so f32 is ample).
@@ -44,14 +48,36 @@ pub enum Gram<'a> {
 }
 
 impl<'a> Gram<'a> {
-    /// Wrap a dataset + kernel function.
+    /// Wrap a dataset + kernel function in
+    /// [`NumericsMode::Deterministic`].
     pub fn on_the_fly(ds: &'a Dataset, func: KernelFunction) -> Gram<'a> {
+        Self::on_the_fly_with(ds, func, NumericsMode::Deterministic)
+    }
+
+    /// [`Gram::on_the_fly`] with an explicit numerics mode for the block
+    /// engines ([`Gram::block_into`], [`Gram::weighted_cross_into`],
+    /// [`Gram::materialize`], row gathers). The diagonal is always
+    /// computed by the deterministic scalar chain.
+    pub fn on_the_fly_with(
+        ds: &'a Dataset,
+        func: KernelFunction,
+        mode: NumericsMode,
+    ) -> Gram<'a> {
         let diag = if func.is_normalized() {
             vec![1.0; ds.n]
         } else {
             (0..ds.n).map(|i| func.eval_self(ds.row(i))).collect()
         };
-        Gram::OnTheFly { ds, func, diag }
+        Gram::OnTheFly { ds, func, diag, mode }
+    }
+
+    /// The numerics mode of the block engines. Precomputed tables store
+    /// frozen values, so reads are deterministic by construction.
+    pub fn mode(&self) -> NumericsMode {
+        match self {
+            Gram::OnTheFly { mode, .. } => *mode,
+            Gram::Precomputed { .. } => NumericsMode::Deterministic,
+        }
     }
 
     /// Wrap an explicit kernel matrix (row-major, length n²).
@@ -90,7 +116,7 @@ impl<'a> Gram<'a> {
             Gram::Precomputed { name, data, .. } => {
                 Gram::precomputed(name, n, data.clone())
             }
-            Gram::OnTheFly { ds, func, .. } => {
+            Gram::OnTheFly { ds, func, mode, .. } => {
                 let t = tile_len.clamp(1, n.max(1));
                 let mut data = vec![0.0f32; n * n];
                 let nblocks = n.div_ceil(t.max(1)).max(1);
@@ -103,7 +129,7 @@ impl<'a> Gram<'a> {
                         tiles.push((bi * t, bj * t));
                     }
                 }
-                let panel = KernelPanel::new(ds, *func);
+                let panel = KernelPanel::new_with(ds, *func, *mode);
                 {
                     let shared = SharedSlice::new(&mut data);
                     let shared = &shared;
@@ -179,8 +205,8 @@ impl<'a> Gram<'a> {
                     *o = row[j as usize];
                 }
             }
-            Gram::OnTheFly { ds, func, .. } => {
-                KernelPanel::new(ds, *func).fill_row_f32_u32(i, cols, out);
+            Gram::OnTheFly { ds, func, mode, .. } => {
+                KernelPanel::new_with(ds, *func, *mode).fill_row_f32_u32(i, cols, out);
             }
         }
     }
@@ -200,8 +226,8 @@ impl<'a> Gram<'a> {
                     *o = row[j as usize] as f64;
                 }
             }
-            Gram::OnTheFly { ds, func, .. } => {
-                KernelPanel::new(ds, *func).fill_row_f64_u32(i, cols, out);
+            Gram::OnTheFly { ds, func, mode, .. } => {
+                KernelPanel::new_with(ds, *func, *mode).fill_row_f64_u32(i, cols, out);
             }
         }
     }
@@ -264,8 +290,8 @@ impl<'a> Gram<'a> {
                     }
                 });
             }
-            Gram::OnTheFly { ds, func, .. } => {
-                let panel = KernelPanel::new(ds, *func);
+            Gram::OnTheFly { ds, func, mode, .. } => {
+                let panel = KernelPanel::new_with(ds, *func, *mode);
                 let panel = &panel;
                 par_rows_mut(out, nc, |r0, chunk| {
                     let nrows = chunk.len() / nc;
@@ -332,9 +358,9 @@ impl<'a> Gram<'a> {
                     }
                 });
             }
-            Gram::OnTheFly { ds, func, .. } => {
+            Gram::OnTheFly { ds, func, mode, .. } => {
                 let t = tile::tile_cols(ds.d);
-                let panel = KernelPanel::new(ds, *func);
+                let panel = KernelPanel::new_with(ds, *func, *mode);
                 let panel = &panel;
                 par_rows_mut(out, k, |r0, chunk| {
                     for v in chunk.iter_mut() {
@@ -571,5 +597,33 @@ mod tests {
         let g = Gram::on_the_fly(&ds, f);
         assert!(g.block(&[], &[1, 2]).is_empty());
         assert!(g.block(&[1, 2], &[]).is_empty());
+    }
+
+    #[test]
+    fn fast_mode_blocks_stay_within_ulp_contract() {
+        use crate::util::simd::{ulp_distance, EXP_ULP_BUDGET};
+        let (ds, f) = fixture();
+        let det = Gram::on_the_fly(&ds, f);
+        let fast = Gram::on_the_fly_with(&ds, f, NumericsMode::Fast);
+        assert_eq!(det.mode(), NumericsMode::Deterministic);
+        assert_eq!(fast.mode(), NumericsMode::Fast);
+        let rows: Vec<usize> = (0..ds.n).step_by(3).collect();
+        let cols: Vec<usize> = (0..ds.n).rev().collect();
+        let (a, b) = (det.block(&rows, &cols), fast.block(&rows, &cols));
+        for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+            // Gaussian: dots/args bitwise across arms, exp within budget.
+            let ud = ulp_distance(x, y).unwrap();
+            assert!(ud <= EXP_ULP_BUDGET, "i={i}: {x} vs {y} ({ud} ulp)");
+        }
+        // Linear kernel: no exp in the chain → Fast is bitwise identical
+        // on every dispatch arm.
+        let lin_det = Gram::on_the_fly(&ds, KernelFunction::Linear);
+        let lin_fast = Gram::on_the_fly_with(&ds, KernelFunction::Linear, NumericsMode::Fast);
+        let (a, b) = (lin_det.block(&rows, &cols), lin_fast.block(&rows, &cols));
+        for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "linear i={i}");
+        }
+        // eval stays the scalar reference regardless of mode.
+        assert_eq!(det.eval(3, 7).to_bits(), fast.eval(3, 7).to_bits());
     }
 }

@@ -20,3 +20,7 @@ pub use function::KernelFunction;
 pub use gram::Gram;
 pub use panel::KernelPanel;
 pub use provider::{GatherPlan, KernelProvider};
+// The numerics switch lives in util::simd (the layer that implements the
+// arms); re-exported here because the kernel substrate is where callers
+// choose it.
+pub use crate::util::simd::NumericsMode;

@@ -24,10 +24,20 @@
 //! one `as f32` quantization at the storage boundary yields the identical
 //! table no matter which engine filled it. The streaming-vs-materialized
 //! equivalence suite (`tests/prop_stream_equivalence.rs`) pins this.
+//!
+//! **Numerics modes.** The contract above describes
+//! [`NumericsMode::Deterministic`], the default. A panel bound with
+//! [`NumericsMode::Fast`] dispatches the dot micro-kernel and the batched
+//! exp finish to the runtime-detected SIMD arm in [`crate::util::simd`]:
+//! dots stay bit-identical (f32-widened products are exact under FMA),
+//! while Gaussian/Laplacian values move within the documented exp ulp
+//! budget. [`KernelPanel::eval_idx`] is always the deterministic scalar
+//! reference regardless of mode. See DESIGN.md §13.
 
 use super::KernelFunction;
 use crate::data::Dataset;
 use crate::util::fmath;
+use crate::util::simd::{self, NumericsMode};
 use std::cell::RefCell;
 
 thread_local! {
@@ -39,61 +49,16 @@ thread_local! {
     static PACK_BUF: RefCell<Vec<[f64; PANEL_COLS]>> = const { RefCell::new(Vec::new()) };
 }
 
-/// Rows per micro-kernel invocation (register-tile height).
-pub const PANEL_ROWS: usize = 4;
+/// Rows per micro-kernel invocation (register-tile height) — alias of
+/// [`simd::MR`], where the micro-kernel arms now live.
+pub const PANEL_ROWS: usize = simd::MR;
 
-/// Columns per micro-kernel invocation (register-tile width). Together
-/// with [`PANEL_ROWS`] this yields 32 independent f64 accumulator chains —
-/// 8 × 4-lane vector registers on AVX2-class hardware, which both hides
-/// the FP-add latency and saturates the FMA ports.
-pub const PANEL_COLS: usize = 8;
-
-/// The register-tiled dot micro-kernel: up to [`PANEL_ROWS`] feature rows
-/// against one dimension-major packed [`PANEL_COLS`]-wide column panel
-/// (`pack[t][c]` = column c's value in dimension t, zero-padded). Each of
-/// the `MR × NR` accumulators is a sequential f64 chain over `d` —
-/// bit-identical to [`fmath::dot_f64`] — and the chains are mutually
-/// independent, which is what the autovectorizer needs.
-///
-/// This is the **single definition** of the panel dot arithmetic: the
-/// training-side block fills ([`KernelPanel`]) and the serving-side batch
-/// engine (`serve::PredictEngine`) both call it, so the crate-wide
-/// bit-identity contract cannot drift between the two.
-#[inline]
-pub(crate) fn dot_rows_micro_kernel(
-    rows: &[&[f32]],
-    pack: &[[f64; PANEL_COLS]],
-) -> [[f64; PANEL_COLS]; PANEL_ROWS] {
-    let mut acc = [[0.0f64; PANEL_COLS]; PANEL_ROWS];
-    match rows {
-        [a0, a1, a2, a3] => {
-            // Zipped iteration (all streams have length d) keeps the
-            // inner loop free of bounds checks.
-            let streams = pack.iter().zip(*a0).zip(*a1).zip(*a2).zip(*a3);
-            for ((((slab, &x0), &x1), &x2), &x3) in streams {
-                let (v0, v1) = (x0 as f64, x1 as f64);
-                let (v2, v3) = (x2 as f64, x3 as f64);
-                for c in 0..PANEL_COLS {
-                    acc[0][c] += v0 * slab[c];
-                    acc[1][c] += v1 * slab[c];
-                    acc[2][c] += v2 * slab[c];
-                    acc[3][c] += v3 * slab[c];
-                }
-            }
-        }
-        _ => {
-            for (accr, a) in acc.iter_mut().zip(rows.iter()) {
-                for (slab, &x) in pack.iter().zip(a.iter()) {
-                    let v = x as f64;
-                    for c in 0..PANEL_COLS {
-                        accr[c] += v * slab[c];
-                    }
-                }
-            }
-        }
-    }
-    acc
-}
+/// Columns per micro-kernel invocation (register-tile width) — alias of
+/// [`simd::NR`]. Together with [`PANEL_ROWS`] this yields 32 independent
+/// f64 accumulator chains — 8 × 4-lane vector registers on AVX2-class
+/// hardware, which both hides the FP-add latency and saturates the FMA
+/// ports.
+pub const PANEL_COLS: usize = simd::NR;
 
 /// A kernel function bound to a dataset and its cached squared norms,
 /// exposing blocked fill entry points. Construction is cheap (the norms
@@ -102,22 +67,40 @@ pub struct KernelPanel<'a> {
     ds: &'a Dataset,
     func: KernelFunction,
     norms: &'a [f64],
+    mode: NumericsMode,
 }
 
 impl<'a> KernelPanel<'a> {
-    /// Bind `func` to `ds`, computing the row-norm cache on first use.
+    /// Bind `func` to `ds` in [`NumericsMode::Deterministic`], computing
+    /// the row-norm cache on first use.
     pub fn new(ds: &'a Dataset, func: KernelFunction) -> KernelPanel<'a> {
+        Self::new_with(ds, func, NumericsMode::Deterministic)
+    }
+
+    /// [`KernelPanel::new`] with an explicit numerics mode for the block
+    /// fills. [`KernelPanel::eval_idx`] stays the deterministic scalar
+    /// reference either way.
+    pub fn new_with(
+        ds: &'a Dataset,
+        func: KernelFunction,
+        mode: NumericsMode,
+    ) -> KernelPanel<'a> {
         let norms = match func {
             // Dot-product kernels never touch the norms.
             KernelFunction::Polynomial { .. } | KernelFunction::Linear => &[],
             _ => ds.sq_norms(),
         };
-        KernelPanel { ds, func, norms }
+        KernelPanel { ds, func, norms, mode }
     }
 
     /// The bound kernel function.
     pub fn func(&self) -> KernelFunction {
         self.func
+    }
+
+    /// The numerics mode the block fills run under.
+    pub fn mode(&self) -> NumericsMode {
+        self.mode
     }
 
     /// Finish one kernel value from cached norms and an inner product —
@@ -136,6 +119,25 @@ impl<'a> KernelPanel<'a> {
                 (gamma * dot + coef0).powi(degree as i32)
             }
             KernelFunction::Linear => dot,
+        }
+    }
+
+    /// The exp argument of an exp-family kernel value — `Some(a)` such
+    /// that [`KernelPanel::finish`] `== a.exp()` bitwise for Gaussian and
+    /// Laplacian, `None` for the dot-product kernels. The Fast-mode
+    /// batched finish computes these arguments with the identical
+    /// association, then substitutes the SIMD exp for `f64::exp`, so the
+    /// entire Fast-vs-Deterministic divergence is the exp ulp budget.
+    #[inline]
+    pub fn exp_arg(func: KernelFunction, ni: f64, nj: f64, dot: f64) -> Option<f64> {
+        match func {
+            KernelFunction::Gaussian { kappa } => {
+                Some(-fmath::sqdist_from_norms(ni, nj, dot) / kappa)
+            }
+            KernelFunction::Laplacian { sigma } => {
+                Some(-fmath::sqdist_from_norms(ni, nj, dot).sqrt() / sigma)
+            }
+            KernelFunction::Polynomial { .. } | KernelFunction::Linear => None,
         }
     }
 
@@ -237,25 +239,44 @@ impl<'a> KernelPanel<'a> {
     }
 
     /// Batched finish pass (the `exp` loop for Gaussian/Laplacian) over an
-    /// already-filled dot block.
+    /// already-filled dot block. In Fast mode the exp-family kernels
+    /// compute their exp arguments in place (identical association to the
+    /// deterministic path) and run the SIMD batched exp over each row;
+    /// everything else — and Deterministic mode always — replays the
+    /// per-value [`KernelPanel::finish`].
     fn finish_rows(&self, rows: &[usize], cols: &[usize], ostride: usize, out: &mut [f64]) {
         if matches!(self.func, KernelFunction::Linear) {
             return;
         }
         let nc = cols.len();
+        let batched_exp = self.mode == NumericsMode::Fast
+            && matches!(
+                self.func,
+                KernelFunction::Gaussian { .. } | KernelFunction::Laplacian { .. }
+            );
         for (r, &row) in rows.iter().enumerate() {
             let (ni, _) = self.norm_pair(row, row);
             let orow = &mut out[r * ostride..r * ostride + nc];
-            for (o, &col) in orow.iter_mut().zip(cols.iter()) {
-                let (_, nj) = self.norm_pair(row, col);
-                *o = Self::finish(self.func, ni, nj, *o);
+            if batched_exp {
+                for (o, &col) in orow.iter_mut().zip(cols.iter()) {
+                    let (_, nj) = self.norm_pair(row, col);
+                    // Unwrap is safe: batched_exp implies an exp kernel.
+                    *o = Self::exp_arg(self.func, ni, nj, *o).unwrap();
+                }
+                simd::exp_slice(NumericsMode::Fast, orow);
+            } else {
+                for (o, &col) in orow.iter_mut().zip(cols.iter()) {
+                    let (_, nj) = self.norm_pair(row, col);
+                    *o = Self::finish(self.func, ni, nj, *o);
+                }
             }
         }
     }
 
     /// The register-tiled dot micro-kernel over dataset row indices —
-    /// resolves the feature slices and delegates to the shared
-    /// [`dot_rows_micro_kernel`].
+    /// resolves the feature slices and delegates to the mode-dispatched
+    /// [`simd::dot_rows`] (bit-identical across arms for the crate's
+    /// f32-widened inputs).
     #[inline]
     fn dot_micro_kernel(
         &self,
@@ -266,7 +287,7 @@ impl<'a> KernelPanel<'a> {
         for (s, &r) in slices.iter_mut().zip(rows.iter()) {
             *s = self.ds.row(r);
         }
-        dot_rows_micro_kernel(&slices[..rows.len().min(PANEL_ROWS)], pack)
+        simd::dot_rows(self.mode, &slices[..rows.len().min(PANEL_ROWS)], pack)
     }
 
     /// Fill `out` (row-major, `rows.len() × cols.len()`) with `K(rows,
@@ -544,5 +565,72 @@ mod tests {
         p.fill_f64(&[], &[], &mut out);
         p.fill_f64(&[1, 2], &[], &mut out);
         p.fill_f64(&[], &[1, 2], &mut out);
+    }
+
+    #[test]
+    fn exp_arg_composes_to_finish_bitwise() {
+        // The Fast finish substitutes batched exp for f64::exp over these
+        // arguments, so exp_arg ∘ exp must reproduce finish exactly.
+        let mut rng = Rng::seeded(9);
+        let ds = blobs(&SyntheticSpec::new(30, 8, 2), &mut rng);
+        for func in kernels() {
+            let p = KernelPanel::new(&ds, func);
+            for _ in 0..40 {
+                let (i, j) = (rng.below(ds.n), rng.below(ds.n));
+                let dot = fmath::dot_f64(ds.row(i), ds.row(j));
+                let (ni, nj) = if matches!(
+                    func,
+                    KernelFunction::Polynomial { .. } | KernelFunction::Linear
+                ) {
+                    (0.0, 0.0)
+                } else {
+                    (ds.sq_norms()[i], ds.sq_norms()[j])
+                };
+                let fin = KernelPanel::finish(func, ni, nj, dot);
+                match KernelPanel::exp_arg(func, ni, nj, dot) {
+                    Some(a) => assert_eq!(a.exp().to_bits(), fin.to_bits(), "{func:?}"),
+                    None => assert!(matches!(
+                        func,
+                        KernelFunction::Polynomial { .. } | KernelFunction::Linear
+                    )),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fast_mode_fills_respect_ulp_contract() {
+        use crate::util::simd::{ulp_distance, EXP_ULP_BUDGET};
+        let mut rng = Rng::seeded(57);
+        for d in [1usize, 3, 7, 16] {
+            let ds = blobs(&SyntheticSpec::new(50, d, 3), &mut rng);
+            for func in kernels() {
+                let det = KernelPanel::new(&ds, func);
+                let fast = KernelPanel::new_with(&ds, func, NumericsMode::Fast);
+                assert_eq!(fast.mode(), NumericsMode::Fast);
+                let rows: Vec<usize> = (0..6).map(|_| rng.below(ds.n)).collect();
+                let cols: Vec<usize> = (0..11).map(|_| rng.below(ds.n)).collect();
+                let mut a = vec![f64::NAN; rows.len() * cols.len()];
+                let mut b = vec![f64::NAN; rows.len() * cols.len()];
+                det.fill_f64(&rows, &cols, &mut a);
+                fast.fill_f64(&rows, &cols, &mut b);
+                let exp_family = matches!(
+                    func,
+                    KernelFunction::Gaussian { .. } | KernelFunction::Laplacian { .. }
+                );
+                for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+                    if exp_family {
+                        // Dots and exp arguments are bitwise equal across
+                        // arms; only the exp itself may move.
+                        let ud = ulp_distance(x, y).unwrap();
+                        assert!(ud <= EXP_ULP_BUDGET, "{func:?} d={d} i={i}: {x} vs {y}");
+                    } else {
+                        // Dot-product kernels have no exp: Fast must be
+                        // bit-identical on every arm.
+                        assert_eq!(x.to_bits(), y.to_bits(), "{func:?} d={d} i={i}");
+                    }
+                }
+            }
+        }
     }
 }

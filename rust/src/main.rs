@@ -16,6 +16,7 @@
 
 use mbkk::coordinator::{experiment, figures, repro};
 use mbkk::data::registry;
+use mbkk::kernels::NumericsMode;
 use mbkk::kkmeans::{AssignBackend, KernelKMeansModel};
 use mbkk::runtime;
 use mbkk::serve::PredictEngine;
@@ -62,6 +63,9 @@ fn main() -> Result<()> {
                  \x20                          kernels; default policy auto-streams above n≈23k)\n\
                  \x20     --cache-mb N         tile-LRU budget in MiB for streaming runs (64)\n\
                  \x20     --materialize        force the dense n×n table at any n\n\
+                 \x20     --numerics MODE      det (default; bit-reproducible) | fast\n\
+                 \x20                          (runtime-dispatched SIMD exp lanes for the\n\
+                 \x20                          gram fills, ≤4 ulp per kernel value)\n\
                  \x20     --profile            print the fit's per-phase timing table\n\
                  \x20                          (init/refresh/assign/moments/update/stopping/\n\
                  \x20                          finalize splits, without a debugger)\n\
@@ -73,17 +77,17 @@ fn main() -> Result<()> {
                  \x20 fit                      train + save a servable model artifact\n\
                  \x20     --dataset/--csv/--scale/--k/--batch/--tau/--iters/--seed/\n\
                  \x20     --profile/--checkpoint-dir/--checkpoint-every/\n\
-                 \x20     --checkpoint-keep/--resume as `run`\n\
+                 \x20     --checkpoint-keep/--resume/--numerics as `run`\n\
                  \x20     --out PATH           artifact path (default model.mbkk)\n\
                  \x20 predict                  load a model + batch-score a dataset\n\
                  \x20     --model PATH         artifact from `fit` (default model.mbkk)\n\
-                 \x20     --dataset/--csv/--scale/--seed as `run`\n\
+                 \x20     --dataset/--csv/--scale/--seed/--numerics as `run`\n\
                  \x20     --chunk N            query rows per engine batch (8192)\n\
                  \x20     --scalar             per-query scalar path (baseline)\n\
                  \x20     --out PATH           write index,assignment CSV\n\
                  \x20 serve-bench              sustained queries/sec loop over a model\n\
                  \x20     --model PATH         artifact (fits one on the fly if omitted)\n\
-                 \x20     --secs F --batch-queries N --no-baseline\n\
+                 \x20     --secs F --batch-queries N --no-baseline --numerics MODE\n\
                  \x20 serve                    HTTP prediction service (docs/API.md):\n\
                  \x20                          POST /v1/predict, GET /v1/models, GET /healthz\n\
                  \x20     --model PATH         artifact (fits one on the fly if omitted)\n\
@@ -93,6 +97,7 @@ fn main() -> Result<()> {
                  \x20     --max-body-mb N      request body cap in MiB (8)\n\
                  \x20     --deadline-ms N      per-request budget; late requests are shed\n\
                  \x20                          with 503 + Retry-After (5000)\n\
+                 \x20     --numerics MODE      det | fast serving numerics as `run`\n\
                  \x20 figures                  regenerate paper figures (CSV+md under --out)\n\
                  \x20     --fig N | --all      figure id 1..13\n\
                  \x20     --scale F --repeats N --iters N --quick --out DIR\n\
@@ -129,6 +134,7 @@ fn quickstart(args: &Args) -> Result<()> {
         max_iters: 100,
         epsilon: Some(1e-3),
         seed,
+        numerics: NumericsMode::Deterministic,
     };
     let out = experiment::run_one(&spec);
     println!("dataset:   blobs (n≈2500, d=8, k=5)");
@@ -163,6 +169,16 @@ fn gram_strategy(args: &Args) -> Result<(experiment::GramStrategy, bool)> {
         },
     };
     Ok((strategy, set))
+}
+
+/// Parse the shared `--numerics det|fast` flag (used by `run`, `fit`,
+/// `predict`, `serve-bench`, and `serve`). Deterministic is the default;
+/// Fast routes kernel fills through the runtime-dispatched SIMD exp lanes
+/// (DESIGN.md §13 — dot kernels stay bit-identical, exp within 4 ulp).
+fn numerics_from_args(args: &Args) -> Result<NumericsMode> {
+    let name = args.get_or("numerics", "deterministic");
+    NumericsMode::from_name(&name)
+        .ok_or_else(|| mbkk::format_err!("unknown --numerics mode {name:?} (det|fast)"))
 }
 
 /// Resolve `--csv PATH` or a registry dataset name.
@@ -249,6 +265,7 @@ fn run(args: &Args) -> Result<()> {
         max_iters: args.get_parse_or("iters", 200usize),
         epsilon: args.get("epsilon").map(|e| e.parse().expect("--epsilon")),
         seed,
+        numerics: numerics_from_args(args)?,
     };
     args.finish();
 
@@ -352,7 +369,7 @@ fn run_with_xla_backend(
         .kernel
         .gaussian_kappa(ds, &mut rng)
         .ok_or_else(|| mbkk::format_err!("--backend xla requires --kernel gaussian"))?;
-    let gram = Gram::on_the_fly(ds, KernelFunction::Gaussian { kappa });
+    let gram = Gram::on_the_fly_with(ds, KernelFunction::Gaussian { kappa }, spec.numerics);
     let mut backend = runtime::XlaBackend::load_default()?;
     let cfg = TruncatedConfig {
         k: spec.k,
@@ -422,6 +439,7 @@ fn fit(args: &Args) -> Result<()> {
         max_iters: args.get_parse_or("iters", 200usize),
         epsilon: args.get("epsilon").map(|e| e.parse().expect("--epsilon")),
         seed,
+        numerics: numerics_from_args(args)?,
     };
     args.finish();
 
@@ -493,6 +511,7 @@ fn predict(args: &Args) -> Result<()> {
     let csv = args.get("csv").map(|s| s.to_string());
     let chunk = args.get_parse_or("chunk", 8192usize).max(1);
     let scalar = args.flag("scalar");
+    let numerics = numerics_from_args(args)?;
     let out_csv = args.get("out").map(|s| s.to_string());
     args.finish();
 
@@ -513,7 +532,7 @@ fn predict(args: &Args) -> Result<()> {
         model.support_points(),
         model.kernel.name()
     );
-    let engine = PredictEngine::new(&model);
+    let engine = PredictEngine::with_mode(&model, numerics);
     let sw = Stopwatch::start();
     let assignments = if scalar {
         model.predict_all(&ds)
@@ -569,6 +588,7 @@ fn serve_bench(args: &Args) -> Result<()> {
     let secs_budget = args.get_parse_or("secs", 3.0f64);
     let qbatch = args.get_parse_or("batch-queries", 512usize).max(1);
     let no_baseline = args.flag("no-baseline");
+    let numerics = numerics_from_args(args)?;
     args.finish();
 
     let ds = registry::load(&dataset, scale, seed);
@@ -588,6 +608,9 @@ fn serve_bench(args: &Args) -> Result<()> {
                 max_iters: 60,
                 epsilon: None,
                 seed,
+                // The throwaway model trains deterministically; only the
+                // serving engine below honours --numerics.
+                numerics: NumericsMode::Deterministic,
             };
             experiment::fit_servable_model(&spec, &ds, experiment::GramStrategy::default())?
                 .model
@@ -601,7 +624,7 @@ fn serve_bench(args: &Args) -> Result<()> {
             model.d
         );
     }
-    let engine = PredictEngine::new(&model);
+    let engine = PredictEngine::with_mode(&model, numerics);
     let qbatch = qbatch.min(ds.n.max(1));
     let mut out = vec![0usize; qbatch];
     // Warm the pool and the engine before the measured window.
@@ -629,7 +652,13 @@ fn serve_bench(args: &Args) -> Result<()> {
     );
     if !no_baseline {
         let mut runner = mbkk::bench::BenchRunner::new("prediction service");
-        runner.record("serve-bench seconds/query", 1.0 / qps.max(1e-12));
+        // Fast-mode runs land under their own case name so they never
+        // overwrite the deterministic baseline entry.
+        let case = match numerics {
+            NumericsMode::Deterministic => "serve-bench seconds/query",
+            NumericsMode::Fast => "serve-bench seconds/query [fast]",
+        };
+        runner.record(case, 1.0 / qps.max(1e-12));
         runner.write_baseline(&mbkk::bench::BenchRunner::baseline_path());
     }
     Ok(())
@@ -649,6 +678,7 @@ fn serve(args: &Args) -> Result<()> {
     let max_batch = args.get_parse_or("max-batch", 512usize);
     let max_body_mb = args.get_parse_or("max-body-mb", 8usize);
     let deadline_ms = args.get_parse_or("deadline-ms", 5000u64);
+    let numerics = numerics_from_args(args)?;
     args.finish();
 
     let (model, label) = match &model_path {
@@ -668,6 +698,9 @@ fn serve(args: &Args) -> Result<()> {
                 max_iters: 60,
                 epsilon: None,
                 seed,
+                // The throwaway model trains deterministically; only the
+                // serving engine honours --numerics.
+                numerics: NumericsMode::Deterministic,
             };
             let fitted =
                 experiment::fit_servable_model(&spec, &ds, experiment::GramStrategy::default())?;
@@ -681,6 +714,7 @@ fn serve(args: &Args) -> Result<()> {
         max_batch_rows: max_batch.max(1),
         max_body_bytes: max_body_mb.max(1) * 1024 * 1024,
         request_deadline: std::time::Duration::from_millis(deadline_ms.max(1)),
+        numerics,
         ..Default::default()
     };
     let server = mbkk::serve::http::Server::bind(&model, &label, &cfg)?;

@@ -27,13 +27,22 @@
 //! remainder, and any thread count. The serving conformance suite
 //! (`rust/tests/conformance_serve.rs`) pins this across
 //! d ∈ {1, 3, 16, 128} and odd batch remainders.
+//!
+//! The contract above describes [`NumericsMode::Deterministic`], the
+//! default. An engine built with [`PredictEngine::with_mode`] and
+//! [`NumericsMode::Fast`] dispatches the dots and the exp finish to the
+//! runtime-detected SIMD arm ([`crate::util::simd`]): dots and distances
+//! of dot-product kernels stay bit-identical, Gaussian/Laplacian
+//! distances move within the documented exp ulp budget — acceptable for
+//! serving (DESIGN.md §13), never used by conformance or repro paths.
 
 use crate::data::Dataset;
-use crate::kernels::panel::{self, PANEL_COLS, PANEL_ROWS};
+use crate::kernels::panel::{PANEL_COLS, PANEL_ROWS};
 use crate::kernels::{KernelFunction, KernelPanel};
 use crate::kkmeans::KernelKMeansModel;
 use crate::util::fmath;
 use crate::util::parallel::{par_chunks_mut, par_rows_mut};
+use crate::util::simd::{self, NumericsMode};
 
 /// A frozen model compiled for batched serving: support rows packed into
 /// register-tile panels, norms and coefficients flattened center-major.
@@ -57,13 +66,21 @@ pub struct PredictEngine {
     /// Dimension-major packed support panels: panel `p` holds support
     /// rows `[p·8, p·8+8)` as `pack[p·d + t][c] = sup[p·8+c][t]`
     /// (f64-widened, zero-padded past `n_sup`) — the slab layout
-    /// [`panel::dot_rows_micro_kernel`] consumes.
+    /// [`simd::dot_rows`] consumes.
     pack: Vec<[f64; PANEL_COLS]>,
+    /// Numerics mode the block sweeps run under (DESIGN.md §13).
+    mode: NumericsMode,
 }
 
 impl PredictEngine {
-    /// Compile `model` for batched serving.
+    /// Compile `model` for batched serving in
+    /// [`NumericsMode::Deterministic`].
     pub fn new(model: &KernelKMeansModel) -> PredictEngine {
+        Self::with_mode(model, NumericsMode::Deterministic)
+    }
+
+    /// [`PredictEngine::new`] with an explicit numerics mode.
+    pub fn with_mode(model: &KernelKMeansModel, mode: NumericsMode) -> PredictEngine {
         assert!(model.d >= 1, "cannot serve a zero-dimensional model");
         assert!(model.k() >= 1, "cannot serve an empty model");
         let d = model.d;
@@ -100,12 +117,18 @@ impl PredictEngine {
             center_of,
             n_sup,
             pack,
+            mode,
         }
     }
 
     /// Number of centers.
     pub fn k(&self) -> usize {
         self.k
+    }
+
+    /// The numerics mode this engine serves under.
+    pub fn mode(&self) -> NumericsMode {
+        self.mode
     }
 
     /// Feature dimension the engine serves.
@@ -237,23 +260,52 @@ impl PredictEngine {
             nq[r] = fmath::sq_norm_f64(q);
             kxx[r] = self.kernel.eval_self(q);
         }
+        let batched_exp = self.mode == NumericsMode::Fast
+            && matches!(
+                self.kernel,
+                KernelFunction::Gaussian { .. } | KernelFunction::Laplacian { .. }
+            );
         for p in 0..self.n_sup.div_ceil(PANEL_COLS) {
             // The shared training/serving micro-kernel (single definition
-            // of the panel dot arithmetic — see kernels::panel).
-            let acc = panel::dot_rows_micro_kernel(
-                qs,
-                &self.pack[p * self.d..(p + 1) * self.d],
-            );
+            // of the panel dot arithmetic — see kernels::panel and
+            // util::simd; bit-identical across arms for f32-widened rows).
+            let acc = simd::dot_rows(self.mode, qs, &self.pack[p * self.d..(p + 1) * self.d]);
             let m0 = p * PANEL_COLS;
             let cw = PANEL_COLS.min(self.n_sup - m0);
-            for c in 0..cw {
-                let m = m0 + c;
-                let j = self.center_of[m] as usize;
-                let w = self.coefs[m];
-                let ns = self.norms[m];
+            if batched_exp {
+                // Fast path for the exp-family kernels: stage this panel's
+                // exp arguments (identical association to the
+                // deterministic finish), batch-exp them through the SIMD
+                // arm, then contract in the same (c outer, r inner)
+                // support order as the deterministic loop below.
+                let mut vals = [0.0f64; PANEL_ROWS * PANEL_COLS];
                 for (r, accr) in acc.iter().enumerate().take(qr) {
-                    let kval = KernelPanel::finish(self.kernel, nq[r], ns, accr[c]);
-                    cross[r * k + j] += w * kval;
+                    for c in 0..cw {
+                        // Unwrap is safe: batched_exp implies exp kernel.
+                        vals[r * cw + c] =
+                            KernelPanel::exp_arg(self.kernel, nq[r], self.norms[m0 + c], accr[c])
+                                .unwrap();
+                    }
+                }
+                simd::exp_slice(NumericsMode::Fast, &mut vals[..qr * cw]);
+                for c in 0..cw {
+                    let m = m0 + c;
+                    let j = self.center_of[m] as usize;
+                    let w = self.coefs[m];
+                    for r in 0..qr {
+                        cross[r * k + j] += w * vals[r * cw + c];
+                    }
+                }
+            } else {
+                for c in 0..cw {
+                    let m = m0 + c;
+                    let j = self.center_of[m] as usize;
+                    let w = self.coefs[m];
+                    let ns = self.norms[m];
+                    for (r, accr) in acc.iter().enumerate().take(qr) {
+                        let kval = KernelPanel::finish(self.kernel, nq[r], ns, accr[c]);
+                        cross[r * k + j] += w * kval;
+                    }
                 }
             }
         }
@@ -331,6 +383,50 @@ mod tests {
                 let want = model.distances(&rows[q * 5..(q + 1) * 5]);
                 for (j, w) in want.iter().enumerate() {
                     assert_eq!(got[q * 3 + j].to_bits(), w.to_bits(), "{kernel:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fast_mode_dot_kernels_bitwise_exp_kernels_within_tolerance() {
+        // Dot-product kernels have no exp in the chain, so a Fast engine
+        // must be bit-identical to scalar predict on every dispatch arm.
+        for kernel in [
+            KernelFunction::Linear,
+            KernelFunction::Polynomial { gamma: 0.5, coef0: 1.0, degree: 2 },
+        ] {
+            let (ds, model) = model_for(5, kernel);
+            let fast = PredictEngine::with_mode(&model, NumericsMode::Fast);
+            assert_eq!(fast.mode(), NumericsMode::Fast);
+            let rows = &ds.features[..9 * 5];
+            let got = fast.distances_batch(rows);
+            for q in 0..9 {
+                let want = model.distances(&rows[q * 5..(q + 1) * 5]);
+                for (j, w) in want.iter().enumerate() {
+                    assert_eq!(got[q * 3 + j].to_bits(), w.to_bits(), "{kernel:?}");
+                }
+            }
+        }
+        // Gaussian: the only divergence is the exp ulp budget flowing
+        // through the Σ w·K contraction — bound it by the coefficient
+        // mass (kernel values are ≤ 1 for the normalized Gaussian).
+        for d in [1usize, 3, 16, 128] {
+            let (ds, model) = model_for(d, KernelFunction::Gaussian { kappa: d as f64 + 1.0 });
+            let det = PredictEngine::new(&model);
+            let fast = PredictEngine::with_mode(&model, NumericsMode::Fast);
+            let coef_mass: f64 = model
+                .centers
+                .iter()
+                .map(|(_, cfs, _)| cfs.iter().map(|c| c.abs()).sum::<f64>())
+                .sum();
+            let tol = 1e-12 * (1.0 + coef_mass);
+            for nq in [1usize, 3, 4, 5, 13] {
+                let rows = &ds.features[..nq * d];
+                let a = det.distances_batch(rows);
+                let b = fast.distances_batch(rows);
+                for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+                    assert!((x - y).abs() <= tol, "d={d} nq={nq} i={i}: {x} vs {y}");
                 }
             }
         }

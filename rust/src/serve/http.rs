@@ -59,6 +59,7 @@ use crate::kkmeans::KernelKMeansModel;
 use crate::util::error::{Context, Result};
 use crate::util::failpoint;
 use crate::util::json::{lazy, Json};
+use crate::util::simd::NumericsMode;
 
 /// How often the accept loop re-checks the shutdown flag when idle.
 const ACCEPT_POLL: Duration = Duration::from_millis(2);
@@ -94,6 +95,10 @@ pub struct ServeConfig {
     /// than this between arrival and admission (slow body upload, parse)
     /// is shed with 503 + `Retry-After` instead of queueing stale work.
     pub request_deadline: Duration,
+    /// Numerics mode the prediction engine serves under (`--numerics`).
+    /// Fast is safe for serving: distances move within the exp ulp
+    /// budget, assignments effectively never (DESIGN.md §13).
+    pub numerics: NumericsMode,
 }
 
 impl Default for ServeConfig {
@@ -106,6 +111,7 @@ impl Default for ServeConfig {
             read_timeout: Duration::from_secs(10),
             max_connections: 128,
             request_deadline: Duration::from_secs(5),
+            numerics: NumericsMode::Deterministic,
         }
     }
 }
@@ -176,7 +182,7 @@ impl Server {
     /// `source` labels the model in `/v1/models` and `/healthz` (the
     /// artifact path, or a synthetic label for fit-on-the-fly models).
     pub fn bind(model: &KernelKMeansModel, source: &str, cfg: &ServeConfig) -> Result<Server> {
-        let engine = PredictEngine::new(model);
+        let engine = PredictEngine::with_mode(model, cfg.numerics);
         let coalescer = Coalescer::new(
             engine,
             CoalesceConfig { max_wait: cfg.max_wait, max_batch_rows: cfg.max_batch_rows },

@@ -34,6 +34,21 @@ pub fn sq_norm_f64(a: &[f32]) -> f64 {
 /// (the norms expansion can go a few ulp negative where the difference
 /// form cannot). The association `(na + nb) − 2·dot` is part of the
 /// bit-identity contract — do not re-order.
+///
+/// Edge-case semantics (pinned by the unit tests, relied on by the SIMD
+/// arms in [`crate::util::simd`] which must reproduce them):
+///
+/// * Any NaN input yields **0.0**, not NaN: `f64::max` returns the
+///   non-NaN operand, so the clamp swallows the NaN. Poisoned inputs
+///   therefore degrade to "coincident points" rather than panicking or
+///   propagating.
+/// * `+inf` norms likewise collapse: `inf − inf = NaN`, which the clamp
+///   maps to 0.0.
+/// * Negative-zero norms behave as zero; the result compares `== 0.0` but
+///   its zero **sign is unspecified** (LLVM's `maxnum` leaves the sign of
+///   `max(-0.0, 0.0)` open) — assert `== 0.0`, never the sign bit.
+/// * `d = 0` feature vectors give `dot = 0`, norms `0`, distance `0` —
+///   never a panic.
 #[inline]
 pub fn sqdist_from_norms(na: f64, nb: f64, dot: f64) -> f64 {
     ((na + nb) - 2.0 * dot).max(0.0)
@@ -66,6 +81,55 @@ mod tests {
         // Force a tiny negative: na + nb slightly below 2·dot.
         let v = sqdist_from_norms(1.0, 1.0, 1.0 + 1e-15);
         assert_eq!(v, 0.0);
+    }
+
+    #[test]
+    fn sqdist_nan_inputs_clamp_to_zero_not_panic() {
+        // Document-and-pin: NaN anywhere yields 0.0 (the clamp's max
+        // returns its non-NaN operand), never NaN and never a panic.
+        assert_eq!(sqdist_from_norms(f64::NAN, 1.0, 0.5), 0.0);
+        assert_eq!(sqdist_from_norms(1.0, f64::NAN, 0.5), 0.0);
+        assert_eq!(sqdist_from_norms(1.0, 2.0, f64::NAN), 0.0);
+        assert_eq!(sqdist_from_norms(f64::NAN, f64::NAN, f64::NAN), 0.0);
+    }
+
+    #[test]
+    fn sqdist_infinite_inputs_never_yield_nan() {
+        // inf − inf cancels to NaN inside the expression; the clamp pins
+        // the result to 0.0. A one-sided inf survives as +inf.
+        assert_eq!(sqdist_from_norms(f64::INFINITY, 1.0, f64::INFINITY), 0.0);
+        assert_eq!(sqdist_from_norms(f64::INFINITY, f64::INFINITY, f64::INFINITY), 0.0);
+        assert_eq!(sqdist_from_norms(f64::INFINITY, 1.0, 0.0), f64::INFINITY);
+        assert_eq!(sqdist_from_norms(1.0, 1.0, f64::NEG_INFINITY), f64::INFINITY);
+    }
+
+    #[test]
+    fn sqdist_negative_zero_norms_behave_as_zero() {
+        // Compare with ==, not to_bits: the sign of a zero result from
+        // max(-0.0, 0.0) is implementation-defined (LLVM maxnum), and we
+        // deliberately pin only the value.
+        assert_eq!(sqdist_from_norms(-0.0, -0.0, -0.0), 0.0);
+        assert_eq!(sqdist_from_norms(-0.0, 0.0, 0.0), 0.0);
+        assert_eq!(sqdist_from_norms(-0.0, 25.0, 0.0), 25.0);
+    }
+
+    #[test]
+    fn zero_dimension_inputs_are_zero_not_panic() {
+        // d = 0 rows: the whole chain degrades to zeros.
+        let empty: [f32; 0] = [];
+        assert_eq!(dot_f64(&empty, &empty), 0.0);
+        assert_eq!(sq_norm_f64(&empty), 0.0);
+        assert_eq!(sqdist_from_norms(0.0, 0.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn dot_propagates_nonfinite_f32_inputs() {
+        // dot_f64 itself has no clamp: NaN/inf features propagate into
+        // the accumulator (and are then swallowed by sqdist's clamp
+        // downstream). Pin that division of responsibility.
+        assert!(dot_f64(&[f32::NAN], &[1.0]).is_nan());
+        assert_eq!(dot_f64(&[f32::INFINITY], &[1.0]), f64::INFINITY);
+        assert!(dot_f64(&[f32::INFINITY], &[0.0]).is_nan());
     }
 
     #[test]

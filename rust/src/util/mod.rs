@@ -14,4 +14,5 @@ pub mod json;
 pub mod parallel;
 pub mod pool;
 pub mod rng;
+pub mod simd;
 pub mod timing;

@@ -1,0 +1,834 @@
+//! Runtime-dispatched SIMD micro-kernels for the panel engine (DESIGN.md §13).
+//!
+//! The panel engine (`kernels::panel`) pins every kernel value to one
+//! sequential scalar f64 chain for bit-identity, which leaves the explicit
+//! vector units idle unless the autovectorizer happens to find the pattern.
+//! This module adds hand-written AVX2 (x86_64) and Neon (aarch64) arms for
+//! the two hot loops — the `MR × NR` dot-product micro-kernel and the
+//! batched `exp` finish pass — selected once per process by runtime CPU
+//! feature detection, with the portable scalar chain as the fallback arm on
+//! every other target.
+//!
+//! ## Numerics modes
+//!
+//! The arms are reached only through [`NumericsMode`]:
+//!
+//! * [`NumericsMode::Deterministic`] (the default) always takes the
+//!   portable scalar chain and stays bit-identical to every release since
+//!   the panel engine landed. All conformance, checkpoint-replay, and
+//!   paper-reproduction paths use it.
+//! * [`NumericsMode::Fast`] dispatches to the best available SIMD arm and
+//!   trades bit-identity for throughput under the tolerance bounds below.
+//!
+//! ## Accuracy contract (the numbers the diff harness pins)
+//!
+//! * **Dot products: 0 ulp.** Every feature in this crate is an `f32`
+//!   widened to f64, so each product has ≤ 48 mantissa bits and is *exact*
+//!   in f64; a fused multiply-add of an exact product rounds identically to
+//!   a separate multiply-then-add. The SIMD arms accumulate each output
+//!   lane over dimensions in the same sequential order as
+//!   [`fmath::dot_f64`](crate::util::fmath::dot_f64), so for f32-widened
+//!   inputs (the only inputs this crate produces) the fast dot is
+//!   **bit-identical** to the scalar chain. `tests/diff_simd_scalar.rs`
+//!   asserts bitwise equality, not a tolerance.
+//! * **Batched exp: ≤ [`EXP_ULP_BUDGET`] ulp** against `f64::exp`
+//!   (typically ≤ 2 in practice). The vector arms and their scalar
+//!   remainder tail ([`exp_fast_scalar`]) execute the identical operation
+//!   sequence, so a value's result does not depend on which lane — or the
+//!   tail — it landed in.
+//! * **Portable arm: 0 ulp.** On targets with neither AVX2 nor Neon (and
+//!   under `MBKK_NUMERICS_PORTABLE=1` or Miri), Fast mode degrades to the
+//!   deterministic scalar chain, so Fast ≡ Deterministic bitwise there.
+//!
+//! `MBKK_NUMERICS_PORTABLE=1` pins dispatch to the portable arm for the
+//! whole process (read once, before the first kernel call) — used by the
+//! Miri CI job, the aarch64 cross-check, and for A/B debugging.
+
+use std::sync::OnceLock;
+
+/// Rows per micro-kernel invocation (register-tile height). The panel
+/// engine's `PANEL_ROWS` is an alias of this.
+pub const MR: usize = 4;
+
+/// Columns per micro-kernel invocation (register-tile width). Together
+/// with [`MR`] this yields 32 independent f64 accumulator chains. The
+/// panel engine's `PANEL_COLS` is an alias of this.
+pub const NR: usize = 8;
+
+/// Asserted upper bound, in units in the last place, on the error of the
+/// Fast-mode batched exp ([`exp_slice`]) against `f64::exp`. The Taylor
+/// degree-13 Horner chain contributes ≲ 1.5 ulp and libm itself ≤ 1; the
+/// budget leaves headroom for both. The diff harness asserts it on every
+/// available dispatch arm.
+pub const EXP_ULP_BUDGET: u64 = 4;
+
+/// How kernel values are computed: the crate-wide numerics switch.
+///
+/// Threaded through `KernelPanel`, `Gram`, `PredictEngine`, `RunSpec`,
+/// and the CLI (`--numerics`). See DESIGN.md §13 for when Fast is safe
+/// (serving: yes; conformance/repro/checkpoint replay: no).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum NumericsMode {
+    /// One sequential scalar f64 chain per value — bit-identical across
+    /// every engine, tile shape, and platform. The default.
+    #[default]
+    Deterministic,
+    /// Runtime-dispatched SIMD arms ([`Arch`]) for the dot micro-kernel
+    /// and the batched exp finish. Dots stay bit-identical (f32-widened
+    /// products are exact); exp is within [`EXP_ULP_BUDGET`] ulp.
+    Fast,
+}
+
+impl NumericsMode {
+    /// Parse a CLI flag value (`deterministic`/`det` or `fast`).
+    pub fn from_name(name: &str) -> Option<NumericsMode> {
+        match name {
+            "deterministic" | "det" => Some(NumericsMode::Deterministic),
+            "fast" => Some(NumericsMode::Fast),
+            _ => None,
+        }
+    }
+
+    /// Canonical flag spelling (inverse of [`NumericsMode::from_name`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            NumericsMode::Deterministic => "deterministic",
+            NumericsMode::Fast => "fast",
+        }
+    }
+}
+
+/// A dispatch arm. All variants exist on all targets so tests and
+/// diagnostics can name them; [`Arch::available`] says which can run here.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Arch {
+    /// x86_64 with AVX2 **and** FMA (Haswell 2013+). 4-lane f64 vectors.
+    Avx2,
+    /// aarch64 ASIMD (baseline on every ARMv8-A core). 2-lane f64 vectors.
+    Neon,
+    /// The scalar chain — identical arithmetic to Deterministic mode.
+    Portable,
+}
+
+impl Arch {
+    /// Whether this arm can execute on the current host.
+    pub fn available(self) -> bool {
+        match self {
+            Arch::Portable => true,
+            Arch::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    std::arch::is_x86_feature_detected!("avx2")
+                        && std::arch::is_x86_feature_detected!("fma")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+            // ASIMD is mandatory in ARMv8-A, so presence == target arch.
+            Arch::Neon => cfg!(target_arch = "aarch64"),
+        }
+    }
+}
+
+/// The arm Fast mode dispatches to, detected once per process. Honors
+/// `MBKK_NUMERICS_PORTABLE=1` (any value but `0`) and always reports
+/// [`Arch::Portable`] under Miri, which cannot execute vendor intrinsics.
+pub fn detected_arch() -> Arch {
+    static ARCH: OnceLock<Arch> = OnceLock::new();
+    *ARCH.get_or_init(|| {
+        if cfg!(miri) {
+            return Arch::Portable;
+        }
+        if matches!(std::env::var("MBKK_NUMERICS_PORTABLE"), Ok(v) if !v.is_empty() && v != "0") {
+            return Arch::Portable;
+        }
+        if Arch::Avx2.available() {
+            Arch::Avx2
+        } else if Arch::Neon.available() {
+            Arch::Neon
+        } else {
+            Arch::Portable
+        }
+    })
+}
+
+/// Every arm the current host can execute — the diff harness iterates
+/// this so the SIMD arms are exercised wherever they exist and the
+/// portable arm is exercised everywhere.
+pub fn test_arches() -> Vec<Arch> {
+    [Arch::Avx2, Arch::Neon, Arch::Portable]
+        .into_iter()
+        .filter(|a| a.available())
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Dot micro-kernel
+// ---------------------------------------------------------------------------
+
+/// The portable register-tiled dot micro-kernel: up to [`MR`] feature rows
+/// against one dimension-major packed [`NR`]-wide column panel
+/// (`pack[t][c]` = column c's value in dimension t, zero-padded). Each of
+/// the `MR × NR` accumulators is a sequential f64 chain over `d` —
+/// bit-identical to [`fmath::dot_f64`](crate::util::fmath::dot_f64) — and
+/// the chains are mutually independent, which is what the autovectorizer
+/// needs. This is the single definition of the Deterministic panel dot
+/// arithmetic; the SIMD arms below replay the same per-lane chains with
+/// explicit vectors.
+#[inline]
+pub fn dot_rows_portable(rows: &[&[f32]], pack: &[[f64; NR]]) -> [[f64; NR]; MR] {
+    let mut acc = [[0.0f64; NR]; MR];
+    match rows {
+        [a0, a1, a2, a3] => {
+            // Zipped iteration (all streams have length d) keeps the
+            // inner loop free of bounds checks.
+            let streams = pack.iter().zip(*a0).zip(*a1).zip(*a2).zip(*a3);
+            for ((((slab, &x0), &x1), &x2), &x3) in streams {
+                let (v0, v1) = (x0 as f64, x1 as f64);
+                let (v2, v3) = (x2 as f64, x3 as f64);
+                for c in 0..NR {
+                    acc[0][c] += v0 * slab[c];
+                    acc[1][c] += v1 * slab[c];
+                    acc[2][c] += v2 * slab[c];
+                    acc[3][c] += v3 * slab[c];
+                }
+            }
+        }
+        _ => {
+            for (accr, a) in acc.iter_mut().zip(rows.iter()) {
+                for (slab, &x) in pack.iter().zip(a.iter()) {
+                    let v = x as f64;
+                    for c in 0..NR {
+                        accr[c] += v * slab[c];
+                    }
+                }
+            }
+        }
+    }
+    acc
+}
+
+/// Mode-dispatched dot micro-kernel: Deterministic always takes
+/// [`dot_rows_portable`]; Fast takes the [`detected_arch`] arm. For
+/// f32-widened inputs all arms agree bitwise (see the module accuracy
+/// contract), so Fast here changes throughput, never values.
+#[inline]
+pub fn dot_rows(mode: NumericsMode, rows: &[&[f32]], pack: &[[f64; NR]]) -> [[f64; NR]; MR] {
+    match mode {
+        NumericsMode::Deterministic => dot_rows_portable(rows, pack),
+        NumericsMode::Fast => dot_rows_with_arch(detected_arch(), rows, pack),
+    }
+}
+
+/// [`dot_rows`] pinned to an explicit arm — the diff harness's entry
+/// point. Panics if `arch` is not [available](Arch::available) on this
+/// host, or if any row's length differs from the packed dimension.
+pub fn dot_rows_with_arch(arch: Arch, rows: &[&[f32]], pack: &[[f64; NR]]) -> [[f64; NR]; MR] {
+    assert!(arch.available(), "numerics arm {arch:?} is not available on this host");
+    assert!(rows.len() <= MR, "dot_rows: more than MR rows");
+    for r in rows {
+        assert_eq!(r.len(), pack.len(), "dot_rows: row length != packed dimension");
+    }
+    match arch {
+        Arch::Portable => dot_rows_portable(rows, pack),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: availability was asserted above, so AVX2+FMA exist.
+        Arch::Avx2 => unsafe { x86::dot_rows_avx2(rows, pack) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: ASIMD is baseline on every aarch64 target.
+        Arch::Neon => unsafe { arm::dot_rows_neon(rows, pack) },
+        #[allow(unreachable_patterns)] // arms cfg'd out on other targets
+        _ => unreachable!("unavailable arm passed the availability assert"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batched exp
+// ---------------------------------------------------------------------------
+
+/// Upper clamp: `ln(f64::MAX)`. Above it the result is `+inf` exactly as
+/// `f64::exp` returns.
+const EXP_HI: f64 = 709.782712893384;
+/// Lower clamp: below it even the smallest subnormal rounds to `+0.0`
+/// (`exp(-746) ≈ 0.21 · 2^-1074`, under half the subnormal step).
+const EXP_LO: f64 = -746.0;
+/// `log2(e)`, for the `x = n·ln2 + r` range reduction.
+const LOG2E: f64 = std::f64::consts::LOG2_E;
+/// High half of the Cody–Waite `ln 2` split (fdlibm's 33-bit head):
+/// `n · LN2_HI` is exact for every `|n| ≤ 2^20` we can produce.
+const LN2_HI: f64 = 6.931_471_803_691_238e-1;
+/// Low half of the Cody–Waite `ln 2` split.
+const LN2_LO: f64 = 1.908_214_929_270_587_7e-10;
+/// `1.5 · 2^52`: adding-then-subtracting it rounds to the nearest integer
+/// under the default round-to-nearest-even mode — the same rule the SIMD
+/// lanes use, unlike `f64::round` (which rounds halves away from zero).
+const SHIFTER: f64 = 6_755_399_441_055_744.0;
+/// Taylor coefficients `1/13! … 1/2!, 1, 1` for the Horner evaluation of
+/// `exp(r)` on `|r| ≤ ln2/2`; truncation error ≲ 0.02 ulp at that radius.
+const EXP_POLY: [f64; 14] = [
+    1.0 / 6_227_020_800.0,
+    1.0 / 479_001_600.0,
+    1.0 / 39_916_800.0,
+    1.0 / 3_628_800.0,
+    1.0 / 362_880.0,
+    1.0 / 40_320.0,
+    1.0 / 5_040.0,
+    1.0 / 720.0,
+    1.0 / 120.0,
+    1.0 / 24.0,
+    1.0 / 6.0,
+    1.0 / 2.0,
+    1.0,
+    1.0,
+];
+
+/// The scalar twin of the SIMD exp lanes: identical operation sequence
+/// (shifter rounding, Cody–Waite reduction, degree-13 Horner with fused
+/// multiply-adds, two-step power-of-two scaling), so the vector arms'
+/// remainder tails produce bit-identical results to full lanes. Within
+/// [`EXP_ULP_BUDGET`] ulp of `f64::exp`; propagates NaN, `+inf → +inf`,
+/// underflows gradually through the subnormals to `+0.0`.
+#[inline]
+pub fn exp_fast_scalar(x: f64) -> f64 {
+    if x.is_nan() {
+        return x;
+    }
+    if x > EXP_HI {
+        return f64::INFINITY;
+    }
+    if x < EXP_LO {
+        return 0.0;
+    }
+    let t = x * LOG2E;
+    let n = (t + SHIFTER) - SHIFTER;
+    let r = (-n).mul_add(LN2_HI, x);
+    let r = (-n).mul_add(LN2_LO, r);
+    let mut p = EXP_POLY[0];
+    for &c in &EXP_POLY[1..] {
+        p = p.mul_add(r, c);
+    }
+    // 2^n in two half-exponent factors: each factor stays a normal f64 for
+    // every reachable n (|n| ≤ 1077), and the final multiply performs the
+    // single correctly-rounded step into the subnormal range (or to inf).
+    let ni = n as i64;
+    let h = ni >> 1;
+    let s1 = f64::from_bits(((1023 + h) as u64) << 52);
+    let s2 = f64::from_bits(((1023 + (ni - h)) as u64) << 52);
+    p * s1 * s2
+}
+
+/// Mode-dispatched batched exponential: `xs[i] ← exp(xs[i])`.
+/// Deterministic applies `f64::exp` per element (the panel engine's
+/// pinned finish arithmetic); Fast dispatches to the [`detected_arch`]
+/// arm, where [`Arch::Portable`] is again `f64::exp` — so Fast without
+/// SIMD hardware stays bit-identical to Deterministic.
+#[inline]
+pub fn exp_slice(mode: NumericsMode, xs: &mut [f64]) {
+    match mode {
+        NumericsMode::Deterministic => {
+            for x in xs {
+                *x = x.exp();
+            }
+        }
+        NumericsMode::Fast => exp_slice_with_arch(detected_arch(), xs),
+    }
+}
+
+/// [`exp_slice`] pinned to an explicit arm — the diff harness's entry
+/// point. Panics if `arch` is not [available](Arch::available) here.
+pub fn exp_slice_with_arch(arch: Arch, xs: &mut [f64]) {
+    assert!(arch.available(), "numerics arm {arch:?} is not available on this host");
+    match arch {
+        Arch::Portable => {
+            for x in xs {
+                *x = x.exp();
+            }
+        }
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: availability was asserted above, so AVX2+FMA exist.
+        Arch::Avx2 => unsafe { x86::exp_slice_avx2(xs) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: ASIMD is baseline on every aarch64 target.
+        Arch::Neon => unsafe { arm::exp_slice_neon(xs) },
+        #[allow(unreachable_patterns)] // arms cfg'd out on other targets
+        _ => unreachable!("unavailable arm passed the availability assert"),
+    }
+}
+
+/// Distance in representable steps between two f64s — the unit the diff
+/// harness budgets in. `Some(0)` for bitwise-equal values, equal zeros of
+/// either sign, or two NaNs; `None` when exactly one side is NaN or the
+/// signs of nonzero values differ (no meaningful ulp distance exists).
+pub fn ulp_distance(a: f64, b: f64) -> Option<u64> {
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => return Some(0),
+        (true, false) | (false, true) => return None,
+        (false, false) => {}
+    }
+    if a == b {
+        return Some(0); // covers +0 vs -0
+    }
+    if a.is_sign_positive() != b.is_sign_positive() {
+        // One side may be a signed zero adjacent to a tiny value of the
+        // other sign; measure through zero in that case.
+        if a == 0.0 || b == 0.0 {
+            let (za, zb) = (a.abs().to_bits(), b.abs().to_bits());
+            return Some(za + zb);
+        }
+        return None;
+    }
+    Some(a.abs().to_bits().abs_diff(b.abs().to_bits()))
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 arm (x86_64)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{EXP_HI, EXP_LO, EXP_POLY, LN2_HI, LN2_LO, LOG2E, MR, NR, SHIFTER};
+    use std::arch::x86_64::*;
+
+    /// AVX2+FMA dot micro-kernel. Each output lane accumulates over
+    /// dimensions in the same sequential order as the portable chain; the
+    /// fused multiply-add rounds identically to multiply-then-add because
+    /// f32-widened products are exact in f64, so this arm is bit-identical
+    /// to [`super::dot_rows_portable`] for the crate's inputs.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 and FMA are available and every row's
+    /// length equals `pack.len()` (the dispatcher asserts both).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn dot_rows_avx2(rows: &[&[f32]], pack: &[[f64; NR]]) -> [[f64; NR]; MR] {
+        let mut out = [[0.0f64; NR]; MR];
+        let d = pack.len();
+        match rows {
+            [a0, a1, a2, a3] => {
+                // 8 live accumulator registers (2 × 4-lane per row) plus
+                // the two slab loads: 10 of the 16 ymm registers.
+                let mut acc = [[_mm256_setzero_pd(); 2]; MR];
+                for t in 0..d {
+                    let slab = pack.get_unchecked(t).as_ptr();
+                    let lo = _mm256_loadu_pd(slab);
+                    let hi = _mm256_loadu_pd(slab.add(4));
+                    let v0 = _mm256_set1_pd(*a0.get_unchecked(t) as f64);
+                    let v1 = _mm256_set1_pd(*a1.get_unchecked(t) as f64);
+                    let v2 = _mm256_set1_pd(*a2.get_unchecked(t) as f64);
+                    let v3 = _mm256_set1_pd(*a3.get_unchecked(t) as f64);
+                    acc[0][0] = _mm256_fmadd_pd(v0, lo, acc[0][0]);
+                    acc[0][1] = _mm256_fmadd_pd(v0, hi, acc[0][1]);
+                    acc[1][0] = _mm256_fmadd_pd(v1, lo, acc[1][0]);
+                    acc[1][1] = _mm256_fmadd_pd(v1, hi, acc[1][1]);
+                    acc[2][0] = _mm256_fmadd_pd(v2, lo, acc[2][0]);
+                    acc[2][1] = _mm256_fmadd_pd(v2, hi, acc[2][1]);
+                    acc[3][0] = _mm256_fmadd_pd(v3, lo, acc[3][0]);
+                    acc[3][1] = _mm256_fmadd_pd(v3, hi, acc[3][1]);
+                }
+                for (o, a) in out.iter_mut().zip(acc.iter()) {
+                    _mm256_storeu_pd(o.as_mut_ptr(), a[0]);
+                    _mm256_storeu_pd(o.as_mut_ptr().add(4), a[1]);
+                }
+            }
+            _ => {
+                for (o, a) in out.iter_mut().zip(rows.iter()) {
+                    let mut lo_acc = _mm256_setzero_pd();
+                    let mut hi_acc = _mm256_setzero_pd();
+                    for t in 0..d {
+                        let slab = pack.get_unchecked(t).as_ptr();
+                        let v = _mm256_set1_pd(*a.get_unchecked(t) as f64);
+                        lo_acc = _mm256_fmadd_pd(v, _mm256_loadu_pd(slab), lo_acc);
+                        hi_acc = _mm256_fmadd_pd(v, _mm256_loadu_pd(slab.add(4)), hi_acc);
+                    }
+                    _mm256_storeu_pd(o.as_mut_ptr(), lo_acc);
+                    _mm256_storeu_pd(o.as_mut_ptr().add(4), hi_acc);
+                }
+            }
+        }
+        out
+    }
+
+    /// One 4-lane step of the batched exp. Same operation sequence as
+    /// [`super::exp_fast_scalar`]; specials (overflow, underflow, NaN)
+    /// handled by computing on a clamped copy and blending at the end.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 and FMA are available.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn exp4(x: __m256d) -> __m256d {
+        let hi = _mm256_set1_pd(EXP_HI);
+        let lo = _mm256_set1_pd(EXP_LO);
+        // min/max return the second operand on NaN, so a NaN lane computes
+        // on EXP_HI here and is blended back to the input NaN below.
+        let xc = _mm256_max_pd(_mm256_min_pd(x, hi), lo);
+        let shifter = _mm256_set1_pd(SHIFTER);
+        let t = _mm256_mul_pd(xc, _mm256_set1_pd(LOG2E));
+        let n = _mm256_sub_pd(_mm256_add_pd(t, shifter), shifter);
+        let r = _mm256_fnmadd_pd(n, _mm256_set1_pd(LN2_HI), xc);
+        let r = _mm256_fnmadd_pd(n, _mm256_set1_pd(LN2_LO), r);
+        let mut p = _mm256_set1_pd(EXP_POLY[0]);
+        for &c in &EXP_POLY[1..] {
+            p = _mm256_fmadd_pd(p, r, _mm256_set1_pd(c));
+        }
+        // 2^n in two half-exponent factors (AVX2 has no 64-bit arithmetic
+        // shift, so halve as i32 before widening). srai floors like the
+        // scalar `>> 1`.
+        let n32 = _mm256_cvtpd_epi32(n);
+        let h32 = _mm_srai_epi32::<1>(n32);
+        let rest32 = _mm_sub_epi32(n32, h32);
+        let bias = _mm256_set1_epi64x(1023);
+        let s1 = _mm256_castsi256_pd(_mm256_slli_epi64::<52>(_mm256_add_epi64(
+            _mm256_cvtepi32_epi64(h32),
+            bias,
+        )));
+        let s2 = _mm256_castsi256_pd(_mm256_slli_epi64::<52>(_mm256_add_epi64(
+            _mm256_cvtepi32_epi64(rest32),
+            bias,
+        )));
+        let res = _mm256_mul_pd(_mm256_mul_pd(p, s1), s2);
+        let big = _mm256_cmp_pd::<_CMP_GT_OQ>(x, hi);
+        let small = _mm256_cmp_pd::<_CMP_LT_OQ>(x, lo);
+        let nan = _mm256_cmp_pd::<_CMP_UNORD_Q>(x, x);
+        let res = _mm256_blendv_pd(res, _mm256_set1_pd(f64::INFINITY), big);
+        let res = _mm256_blendv_pd(res, _mm256_setzero_pd(), small);
+        _mm256_blendv_pd(res, x, nan)
+    }
+
+    /// Batched exp over a slice: 4-lane body, scalar-twin tail.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 and FMA are available.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn exp_slice_avx2(xs: &mut [f64]) {
+        let mut chunks = xs.chunks_exact_mut(4);
+        for chunk in &mut chunks {
+            let v = _mm256_loadu_pd(chunk.as_ptr());
+            _mm256_storeu_pd(chunk.as_mut_ptr(), exp4(v));
+        }
+        for x in chunks.into_remainder() {
+            *x = super::exp_fast_scalar(*x);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Neon arm (aarch64)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use super::{EXP_HI, EXP_LO, EXP_POLY, LN2_HI, LN2_LO, LOG2E, MR, NR, SHIFTER};
+    use std::arch::aarch64::*;
+
+    /// Neon dot micro-kernel: 16 live 2-lane accumulators in the 4-row
+    /// case. Same per-lane sequential chains as the portable arm; fused
+    /// multiply-adds of exact (f32-widened) products round identically,
+    /// so this arm is bit-identical for the crate's inputs.
+    ///
+    /// # Safety
+    /// Caller must ensure every row's length equals `pack.len()` (the
+    /// dispatcher asserts this; ASIMD itself is baseline on aarch64).
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dot_rows_neon(rows: &[&[f32]], pack: &[[f64; NR]]) -> [[f64; NR]; MR] {
+        let mut out = [[0.0f64; NR]; MR];
+        let d = pack.len();
+        match rows {
+            [a0, a1, a2, a3] => {
+                let mut acc = [[vdupq_n_f64(0.0); 4]; MR];
+                for t in 0..d {
+                    let slab = pack.get_unchecked(t).as_ptr();
+                    let s0 = vld1q_f64(slab);
+                    let s1 = vld1q_f64(slab.add(2));
+                    let s2 = vld1q_f64(slab.add(4));
+                    let s3 = vld1q_f64(slab.add(6));
+                    let vs = [
+                        *a0.get_unchecked(t) as f64,
+                        *a1.get_unchecked(t) as f64,
+                        *a2.get_unchecked(t) as f64,
+                        *a3.get_unchecked(t) as f64,
+                    ];
+                    for (accr, &v) in acc.iter_mut().zip(vs.iter()) {
+                        accr[0] = vfmaq_n_f64(accr[0], s0, v);
+                        accr[1] = vfmaq_n_f64(accr[1], s1, v);
+                        accr[2] = vfmaq_n_f64(accr[2], s2, v);
+                        accr[3] = vfmaq_n_f64(accr[3], s3, v);
+                    }
+                }
+                for (o, accr) in out.iter_mut().zip(acc.iter()) {
+                    for (q, a) in accr.iter().enumerate() {
+                        vst1q_f64(o.as_mut_ptr().add(2 * q), *a);
+                    }
+                }
+            }
+            _ => {
+                for (o, a) in out.iter_mut().zip(rows.iter()) {
+                    let mut accr = [vdupq_n_f64(0.0); 4];
+                    for t in 0..d {
+                        let slab = pack.get_unchecked(t).as_ptr();
+                        let v = *a.get_unchecked(t) as f64;
+                        accr[0] = vfmaq_n_f64(accr[0], vld1q_f64(slab), v);
+                        accr[1] = vfmaq_n_f64(accr[1], vld1q_f64(slab.add(2)), v);
+                        accr[2] = vfmaq_n_f64(accr[2], vld1q_f64(slab.add(4)), v);
+                        accr[3] = vfmaq_n_f64(accr[3], vld1q_f64(slab.add(6)), v);
+                    }
+                    for (q, acc) in accr.iter().enumerate() {
+                        vst1q_f64(o.as_mut_ptr().add(2 * q), *acc);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// One 2-lane step of the batched exp; same operation sequence as
+    /// [`super::exp_fast_scalar`]. Neon `fmin`/`fmax` propagate NaN, so a
+    /// NaN lane flows NaN through the whole pipeline and the final select
+    /// restores the input payload.
+    ///
+    /// # Safety
+    /// ASIMD must be available (baseline on aarch64).
+    #[target_feature(enable = "neon")]
+    unsafe fn exp2_lanes(x: float64x2_t) -> float64x2_t {
+        let hi = vdupq_n_f64(EXP_HI);
+        let lo = vdupq_n_f64(EXP_LO);
+        let xc = vmaxq_f64(vminq_f64(x, hi), lo);
+        let shifter = vdupq_n_f64(SHIFTER);
+        let t = vmulq_f64(xc, vdupq_n_f64(LOG2E));
+        let n = vsubq_f64(vaddq_f64(t, shifter), shifter);
+        let r = vfmsq_f64(xc, n, vdupq_n_f64(LN2_HI));
+        let r = vfmsq_f64(r, n, vdupq_n_f64(LN2_LO));
+        let mut p = vdupq_n_f64(EXP_POLY[0]);
+        for &c in &EXP_POLY[1..] {
+            p = vfmaq_f64(vdupq_n_f64(c), p, r);
+        }
+        // 2^n in two half-exponent factors; vshrq_n floors like `>> 1`.
+        let ni = vcvtq_s64_f64(n);
+        let h = vshrq_n_s64::<1>(ni);
+        let rest = vsubq_s64(ni, h);
+        let bias = vdupq_n_s64(1023);
+        let s1 = vreinterpretq_f64_s64(vshlq_n_s64::<52>(vaddq_s64(h, bias)));
+        let s2 = vreinterpretq_f64_s64(vshlq_n_s64::<52>(vaddq_s64(rest, bias)));
+        let res = vmulq_f64(vmulq_f64(p, s1), s2);
+        let big = vcgtq_f64(x, hi);
+        let small = vcltq_f64(x, lo);
+        let not_nan = vceqq_f64(x, x);
+        let res = vbslq_f64(big, vdupq_n_f64(f64::INFINITY), res);
+        let res = vbslq_f64(small, vdupq_n_f64(0.0), res);
+        vbslq_f64(not_nan, res, x)
+    }
+
+    /// Batched exp over a slice: 2-lane body, scalar-twin tail.
+    ///
+    /// # Safety
+    /// ASIMD must be available (baseline on aarch64).
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn exp_slice_neon(xs: &mut [f64]) {
+        let mut chunks = xs.chunks_exact_mut(2);
+        for chunk in &mut chunks {
+            let v = vld1q_f64(chunk.as_ptr());
+            vst1q_f64(chunk.as_mut_ptr(), exp2_lanes(v));
+        }
+        for x in chunks.into_remainder() {
+            *x = super::exp_fast_scalar(*x);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::fmath;
+    use crate::util::rng::Rng;
+
+    fn pack_cols(cols: &[Vec<f32>], d: usize) -> Vec<[f64; NR]> {
+        let mut pack = vec![[0.0f64; NR]; d];
+        for (c, col) in cols.iter().enumerate() {
+            for (slab, &v) in pack.iter_mut().zip(col.iter()) {
+                slab[c] = v as f64;
+            }
+        }
+        pack
+    }
+
+    fn random_rows(rng: &mut Rng, n: usize, d: usize) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|_| (0..d).map(|_| (rng.f64() * 4.0 - 2.0) as f32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn mode_names_round_trip() {
+        for mode in [NumericsMode::Deterministic, NumericsMode::Fast] {
+            assert_eq!(NumericsMode::from_name(mode.name()), Some(mode));
+        }
+        assert_eq!(NumericsMode::from_name("det"), Some(NumericsMode::Deterministic));
+        assert_eq!(NumericsMode::from_name("turbo"), None);
+        assert_eq!(NumericsMode::default(), NumericsMode::Deterministic);
+    }
+
+    #[test]
+    fn detected_arch_is_available_and_stable() {
+        let a = detected_arch();
+        assert!(a.available());
+        assert_eq!(a, detected_arch(), "detection must latch");
+        assert!(test_arches().contains(&Arch::Portable));
+    }
+
+    #[test]
+    fn portable_dot_matches_fmath_per_value() {
+        // Miri-friendly: pure safe scalar code. Each (row, col) lane of the
+        // micro-kernel must equal the sequential fmath chain to the bit.
+        let mut rng = Rng::seeded(41);
+        for d in [1usize, 2, 3, 7, 8, 15, 16, 128] {
+            let rows = random_rows(&mut rng, 4, d);
+            let cols = random_rows(&mut rng, NR, d);
+            let pack = pack_cols(&cols, d);
+            for take in 1..=4usize {
+                let views: Vec<&[f32]> = rows[..take].iter().map(|r| r.as_slice()).collect();
+                let acc = dot_rows_portable(&views, &pack);
+                for (r, row) in rows[..take].iter().enumerate() {
+                    for (c, col) in cols.iter().enumerate() {
+                        let want = fmath::dot_f64(row, col);
+                        assert_eq!(
+                            acc[r][c].to_bits(),
+                            want.to_bits(),
+                            "d={d} take={take} r={r} c={c}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn exp_fast_scalar_within_budget() {
+        // Miri-friendly sweep (small but covering every regime): the
+        // scalar twin is the reference for the SIMD lanes, so its own
+        // error against libm bounds every arm's error.
+        let mut worst = 0u64;
+        let mut check = |x: f64| {
+            let got = exp_fast_scalar(x);
+            let want = x.exp();
+            let d = ulp_distance(got, want)
+                .unwrap_or_else(|| panic!("exp({x}): {got} vs {want} not comparable"));
+            worst = worst.max(d);
+            assert!(d <= EXP_ULP_BUDGET, "exp({x}) off by {d} ulp: {got} vs {want}");
+        };
+        let mut x = -745.5;
+        while x <= 60.0 {
+            check(x);
+            x += 2.43;
+        }
+        for s in [
+            0.0,
+            -0.0,
+            1.0,
+            -1.0,
+            1e-300,
+            -1e-300,
+            f64::MIN_POSITIVE / 8.0, // subnormal argument
+            -708.0,
+            -708.5,
+            -744.0,
+            -745.1,
+            709.7,
+            EXP_HI,
+            EXP_LO,
+        ] {
+            check(s);
+        }
+        assert!(worst <= EXP_ULP_BUDGET);
+    }
+
+    #[test]
+    fn exp_fast_scalar_specials() {
+        assert_eq!(exp_fast_scalar(0.0), 1.0);
+        assert_eq!(exp_fast_scalar(-0.0), 1.0);
+        assert_eq!(exp_fast_scalar(f64::INFINITY), f64::INFINITY);
+        assert_eq!(exp_fast_scalar(f64::NEG_INFINITY), 0.0);
+        assert!(exp_fast_scalar(f64::NAN).is_nan());
+        assert_eq!(exp_fast_scalar(-1000.0), 0.0);
+        assert_eq!(exp_fast_scalar(1000.0), f64::INFINITY);
+        // Gradual underflow: a deep-negative argument lands in the
+        // subnormals, not a hard zero.
+        let sub = exp_fast_scalar(-744.0);
+        assert!(sub > 0.0 && sub < f64::MIN_POSITIVE, "expected subnormal, got {sub}");
+    }
+
+    #[test]
+    fn ulp_distance_semantics() {
+        assert_eq!(ulp_distance(1.0, 1.0), Some(0));
+        assert_eq!(ulp_distance(0.0, -0.0), Some(0));
+        assert_eq!(ulp_distance(f64::NAN, f64::NAN), Some(0));
+        assert_eq!(ulp_distance(f64::NAN, 1.0), None);
+        assert_eq!(ulp_distance(1.0, -1.0), None);
+        assert_eq!(ulp_distance(1.0, 1.0 + f64::EPSILON), Some(1));
+        assert_eq!(ulp_distance(f64::MAX, f64::INFINITY), Some(1));
+        // Signed zero adjacent to the smallest subnormal: distance 1.
+        assert_eq!(ulp_distance(0.0, f64::from_bits(1)), Some(1));
+        assert_eq!(ulp_distance(-0.0, f64::from_bits(1)), Some(1));
+    }
+
+    // The SIMD arms execute vendor intrinsics, which Miri cannot
+    // interpret; everything above runs under Miri, everything below is
+    // additionally exercised by the dedicated diff harness
+    // (tests/diff_simd_scalar.rs).
+    #[cfg(not(miri))]
+    #[test]
+    fn simd_dot_arms_match_portable_bitwise() {
+        let mut rng = Rng::seeded(97);
+        for arch in test_arches() {
+            for d in [1usize, 2, 3, 7, 8, 15, 16, 128] {
+                let rows = random_rows(&mut rng, 4, d);
+                let cols = random_rows(&mut rng, NR, d);
+                let pack = pack_cols(&cols, d);
+                for take in 1..=4usize {
+                    let views: Vec<&[f32]> = rows[..take].iter().map(|r| r.as_slice()).collect();
+                    let want = dot_rows_portable(&views, &pack);
+                    let got = dot_rows_with_arch(arch, &views, &pack);
+                    for r in 0..take {
+                        for c in 0..NR {
+                            assert_eq!(
+                                got[r][c].to_bits(),
+                                want[r][c].to_bits(),
+                                "{arch:?} d={d} take={take} r={r} c={c}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[cfg(not(miri))]
+    #[test]
+    fn simd_exp_arms_match_scalar_twin_and_budget() {
+        for arch in test_arches() {
+            // Lengths straddling every remainder of both lane widths.
+            for len in [1usize, 2, 3, 4, 5, 7, 8, 9, 31] {
+                let xs: Vec<f64> =
+                    (0..len).map(|i| -0.37 * (i as f64) - 0.001).collect();
+                let mut got = xs.clone();
+                exp_slice_with_arch(arch, &mut got);
+                for (i, (&g, &x)) in got.iter().zip(xs.iter()).enumerate() {
+                    let d = ulp_distance(g, x.exp()).unwrap();
+                    assert!(
+                        d <= EXP_ULP_BUDGET,
+                        "{arch:?} len={len} i={i}: {g} vs {} ({d} ulp)",
+                        x.exp()
+                    );
+                    if arch != Arch::Portable {
+                        // Lane-position independence: any position must
+                        // reproduce the scalar twin exactly.
+                        assert_eq!(
+                            g.to_bits(),
+                            exp_fast_scalar(x).to_bits(),
+                            "{arch:?} len={len} i={i} diverged from scalar twin"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

@@ -67,6 +67,7 @@ fn start_server(model: &KernelKMeansModel, tweak: impl FnOnce(&mut ServeConfig))
         read_timeout: Duration::from_millis(400),
         max_connections: 64,
         request_deadline: Duration::from_secs(5),
+        numerics: mbkk::kernels::NumericsMode::Deterministic,
     };
     tweak(&mut cfg);
     let server = Server::bind(model, "test-model.mbkk", &cfg).expect("bind");

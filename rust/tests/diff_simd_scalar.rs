@@ -1,0 +1,462 @@
+//! Differential harness for the runtime-dispatched SIMD micro-kernels
+//! (`util::simd`, DESIGN.md §13): every arm the host can execute is driven
+//! against the portable scalar chain over adversarial shapes and values,
+//! with the module's accuracy contract asserted exactly —
+//!
+//! * **dot micro-kernels: bitwise.** f32-widened products are exact in
+//!   f64, so fused multiply-adds round identically to the scalar
+//!   multiply-then-add chain; the harness asserts `to_bits()` equality,
+//!   not a tolerance, across dimensions with odd remainders, unaligned
+//!   row offsets, denormals, signed zeros, and huge magnitudes.
+//! * **batched exp: ≤ [`EXP_ULP_BUDGET`] ulp** against `f64::exp` on
+//!   every arm and every lane position (including the scalar remainder
+//!   tail), through the denormal output range and the overflow/underflow
+//!   clamps, with NaN/±inf propagated.
+//! * **integrated fills**: Fast-mode `Gram` blocks stay within the exp
+//!   budget for the exp-family kernels and bitwise for the dot-family
+//!   kernels; end-to-end Fast fits land on the Deterministic clustering.
+//! * **portable arm**: dispatch latches once per process, so the
+//!   `MBKK_NUMERICS_PORTABLE=1` leg re-executes this binary as a child
+//!   process and asserts Fast ≡ Deterministic *bitwise* there.
+
+use mbkk::data::synthetic::{blobs, SyntheticSpec};
+use mbkk::data::Dataset;
+use mbkk::kernels::{Gram, KernelFunction, KernelPanel, NumericsMode};
+use mbkk::kkmeans::{
+    Init, LearningRate, ScheduleSpec, TerminationMode, TruncatedConfig,
+    TruncatedMiniBatchKernelKMeans,
+};
+use mbkk::testutil::prop::{check, from_fn};
+use mbkk::util::rng::Rng;
+use mbkk::util::simd::{self, Arch, EXP_ULP_BUDGET, MR, NR};
+
+/// Dimensions that straddle every interesting micro-kernel boundary:
+/// sub-lane, exact lane widths, odd remainders, and a full panel depth.
+const ADVERSARIAL_DIMS: [usize; 8] = [1, 2, 3, 7, 8, 15, 16, 128];
+
+/// One adversarial f32 feature: denormals, signed zeros, huge and tiny
+/// magnitudes, and ordinary values, so exactness claims are tested where
+/// widening and accumulation are least forgiving.
+fn adversarial_f32(rng: &mut Rng) -> f32 {
+    match rng.below(10) {
+        0 => 0.0,
+        1 => -0.0,
+        2 => f32::from_bits(1), // smallest subnormal
+        3 => -f32::from_bits(rng.below(8) as u32 + 1), // negative subnormals
+        4 => f32::MIN_POSITIVE,
+        5 => 1.0e30,
+        6 => -1.0e30,
+        7 => 1.0e-30,
+        _ => (rng.f64() * 8.0 - 4.0) as f32,
+    }
+}
+
+/// Pack `NR` columns dimension-major with zero padding, exactly as the
+/// panel engine does before calling the micro-kernel.
+fn pack_cols(cols: &[Vec<f32>], d: usize) -> Vec<[f64; NR]> {
+    let mut pack = vec![[0.0f64; NR]; d];
+    for (c, col) in cols.iter().enumerate() {
+        for (slab, &v) in pack.iter_mut().zip(col.iter()) {
+            slab[c] = v as f64;
+        }
+    }
+    pack
+}
+
+// ---------------------------------------------------------------------------
+// Dot micro-kernel: bitwise across arms
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dot_arms_bitwise_on_adversarial_shapes_and_offsets() {
+    // Structure-aware fuzz: rows are views into one shared buffer at
+    // random (frequently odd, so unaligned) offsets, with adversarial
+    // values; every available arm must reproduce the portable chain to
+    // the bit for every row count 1..=MR.
+    let gen = from_fn(|rng| {
+        let d = ADVERSARIAL_DIMS[rng.below(ADVERSARIAL_DIMS.len())];
+        let take = 1 + rng.below(MR);
+        let offsets: Vec<usize> = (0..take).map(|_| rng.below(9)).collect();
+        let buf_len = offsets.iter().max().unwrap() + take * d;
+        let buf: Vec<f32> = (0..buf_len).map(|_| adversarial_f32(rng)).collect();
+        let cols: Vec<Vec<f32>> =
+            (0..NR).map(|_| (0..d).map(|_| adversarial_f32(rng)).collect()).collect();
+        (d, offsets, buf, cols)
+    });
+    check("SIMD dot arms ≡ portable bitwise", gen, |(d, offsets, buf, cols)| {
+        let views: Vec<&[f32]> = offsets
+            .iter()
+            .enumerate()
+            .map(|(r, &off)| &buf[off + r * d..off + (r + 1) * d])
+            .collect();
+        let pack = pack_cols(cols, *d);
+        let want = simd::dot_rows_portable(&views, &pack);
+        for arch in simd::test_arches() {
+            let got = simd::dot_rows_with_arch(arch, &views, &pack);
+            for r in 0..views.len() {
+                for c in 0..NR {
+                    if got[r][c].to_bits() != want[r][c].to_bits() {
+                        eprintln!(
+                            "{arch:?} d={d} r={r} c={c}: {:e} vs {:e}",
+                            got[r][c], want[r][c]
+                        );
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn dot_arms_bitwise_with_zero_padded_panel_tail() {
+    // The panel engine zero-pads the last column panel; padded lanes must
+    // come out exactly 0.0 on every arm (0 · x with finite x), and live
+    // lanes must be unaffected by their padded neighbours.
+    let mut rng = Rng::seeded(113);
+    for arch in simd::test_arches() {
+        for d in ADVERSARIAL_DIMS {
+            for live in 1..NR {
+                let rows: Vec<Vec<f32>> = (0..MR)
+                    .map(|_| (0..d).map(|_| adversarial_f32(&mut rng)).collect())
+                    .collect();
+                let cols: Vec<Vec<f32>> = (0..live)
+                    .map(|_| (0..d).map(|_| adversarial_f32(&mut rng)).collect())
+                    .collect();
+                let pack = pack_cols(&cols, d);
+                let views: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+                let want = simd::dot_rows_portable(&views, &pack);
+                let got = simd::dot_rows_with_arch(arch, &views, &pack);
+                for r in 0..MR {
+                    for c in 0..NR {
+                        assert_eq!(
+                            got[r][c].to_bits(),
+                            want[r][c].to_bits(),
+                            "{arch:?} d={d} live={live} r={r} c={c}"
+                        );
+                        if c >= live {
+                            assert_eq!(got[r][c], 0.0, "padded lane not exactly zero");
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batched exp: ulp budget on every arm, every lane position
+// ---------------------------------------------------------------------------
+
+/// Assert one arm's batched exp against `f64::exp` within the budget.
+fn assert_exp_within_budget(arch: Arch, xs: &[f64]) {
+    let mut got = xs.to_vec();
+    simd::exp_slice_with_arch(arch, &mut got);
+    for (i, (&g, &x)) in got.iter().zip(xs.iter()).enumerate() {
+        let want = x.exp();
+        match simd::ulp_distance(g, want) {
+            Some(d) => assert!(
+                d <= EXP_ULP_BUDGET,
+                "{arch:?} exp({x:e}) at lane {i}: {g:e} vs {want:e} ({d} ulp)"
+            ),
+            None => panic!("{arch:?} exp({x:e}) at lane {i}: {g:e} vs {want:e} incomparable"),
+        }
+    }
+}
+
+#[test]
+fn exp_arms_within_budget_across_full_range() {
+    // Dense sweep across every output regime: overflow clamp, normals,
+    // the deep-negative range the Gaussian kernel actually produces,
+    // gradual underflow through the subnormals, and the hard-zero clamp.
+    let mut xs = Vec::new();
+    let mut x = -760.0;
+    while x <= 715.0 {
+        xs.push(x);
+        x += 0.773; // odd step: never lands exactly on the clamps
+    }
+    xs.extend_from_slice(&[
+        0.0,
+        -0.0,
+        1.0,
+        -1.0,
+        1e-300,
+        -1e-300,
+        f64::MIN_POSITIVE / 4.0, // subnormal argument
+        709.782712893384,        // EXP_HI exactly
+        -746.0,                  // EXP_LO exactly
+        -744.8,                  // deepest subnormal outputs
+        -745.13,
+        709.7827,
+        f64::INFINITY,
+        f64::NEG_INFINITY,
+    ]);
+    for arch in simd::test_arches() {
+        assert_exp_within_budget(arch, &xs);
+    }
+}
+
+#[test]
+fn exp_arms_handle_nan_and_lane_mixtures() {
+    // NaN lanes must stay NaN without contaminating neighbours, even when
+    // packed next to clamped and subnormal-producing lanes.
+    let xs = [
+        f64::NAN,
+        -1000.0,
+        f64::NAN,
+        1000.0,
+        -744.5,
+        0.5,
+        f64::NAN,
+        -0.25,
+        3.75,
+    ];
+    for arch in simd::test_arches() {
+        let mut got = xs.to_vec();
+        simd::exp_slice_with_arch(arch, &mut got);
+        for (i, (&g, &x)) in got.iter().zip(xs.iter()).enumerate() {
+            if x.is_nan() {
+                assert!(g.is_nan(), "{arch:?} lane {i}: NaN in, {g} out");
+            } else {
+                let d = simd::ulp_distance(g, x.exp()).unwrap();
+                assert!(d <= EXP_ULP_BUDGET, "{arch:?} lane {i} off by {d} ulp");
+            }
+        }
+    }
+}
+
+#[test]
+fn exp_arms_are_lane_position_independent() {
+    // A value's result may not depend on where it lands: full lane,
+    // remainder tail, or unaligned slice start. Fuzz values through every
+    // (length, offset) layout and pin each result to the scalar twin.
+    let gen = from_fn(|rng| {
+        let len = 1 + rng.below(33);
+        let off = rng.below(5);
+        let vals: Vec<f64> = (0..off + len)
+            .map(|_| match rng.below(8) {
+                0 => -746.2 + rng.f64(), // around the zero clamp
+                1 => -744.0 - rng.f64(), // subnormal outputs
+                2 => 709.5 + rng.f64(),  // around the inf clamp
+                3 => rng.f64() * 1e-7,   // near zero
+                _ => -rng.f64() * 60.0,  // the Gaussian argument range
+            })
+            .collect();
+        (off, vals)
+    });
+    check("exp lane-position independence", gen, |(off, vals)| {
+        for arch in simd::test_arches() {
+            let mut got = vals.clone();
+            simd::exp_slice_with_arch(arch, &mut got[*off..]);
+            for (i, (&g, &x)) in got[*off..].iter().zip(vals[*off..].iter()).enumerate() {
+                let twin = if arch == Arch::Portable { x.exp() } else { simd::exp_fast_scalar(x) };
+                if g.to_bits() != twin.to_bits() {
+                    eprintln!("{arch:?} off={off} i={i}: {g:e} vs twin {twin:e}");
+                    return false;
+                }
+                match simd::ulp_distance(g, x.exp()) {
+                    Some(d) if d <= EXP_ULP_BUDGET => {}
+                    _ => {
+                        eprintln!("{arch:?} off={off} i={i}: {g:e} vs {:e} over budget", x.exp());
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Integrated fills: panel and gram under Fast mode
+// ---------------------------------------------------------------------------
+
+/// An adversarial dataset: blob structure with a sprinkle of extreme
+/// feature values so the fills see denormals and huge magnitudes too.
+fn adversarial_dataset(rng: &mut Rng, n: usize, d: usize) -> Dataset {
+    let mut ds = blobs(&SyntheticSpec::new(n, d, 3), rng);
+    for v in ds.features.iter_mut() {
+        if rng.below(50) == 0 {
+            *v = adversarial_f32(rng);
+        }
+    }
+    ds.invalidate_caches();
+    ds
+}
+
+#[test]
+fn gram_fast_blocks_hold_the_per_kernel_contract() {
+    // Exp-family kernels: every Fast block value within the exp ulp
+    // budget of the Deterministic value. Dot-family kernels: bitwise.
+    let gen = from_fn(|rng| {
+        let d = ADVERSARIAL_DIMS[rng.below(ADVERSARIAL_DIMS.len())];
+        let n = 10 + rng.below(40);
+        let ds = adversarial_dataset(rng, n, d);
+        let func = match rng.below(4) {
+            0 => KernelFunction::Gaussian { kappa: 0.5 + rng.f64() * 8.0 },
+            1 => KernelFunction::Laplacian { sigma: 0.5 + rng.f64() * 4.0 },
+            2 => KernelFunction::Polynomial {
+                gamma: 0.1 + rng.f64(),
+                coef0: rng.f64(),
+                degree: 1 + rng.below(3) as u32,
+            },
+            _ => KernelFunction::Linear,
+        };
+        let rows: Vec<usize> = (0..1 + rng.below(17)).map(|_| rng.below(n)).collect();
+        let cols: Vec<usize> = (0..1 + rng.below(23)).map(|_| rng.below(n)).collect();
+        let tile = 1 + rng.below(cols.len() + 4);
+        (ds, func, rows, cols, tile)
+    });
+    check("Fast gram blocks vs Deterministic", gen, |(ds, func, rows, cols, tile)| {
+        let det = Gram::on_the_fly(ds, *func);
+        let fast = Gram::on_the_fly_with(ds, *func, NumericsMode::Fast);
+        let mut dvals = vec![f64::NAN; rows.len() * cols.len()];
+        let mut fvals = vec![f64::NAN; rows.len() * cols.len()];
+        det.block_into_tiled(rows, cols, *tile, &mut dvals);
+        fast.block_into_tiled(rows, cols, *tile, &mut fvals);
+        let exp_family =
+            matches!(func, KernelFunction::Gaussian { .. } | KernelFunction::Laplacian { .. });
+        for (i, (&dv, &fv)) in dvals.iter().zip(fvals.iter()).enumerate() {
+            let ok = if exp_family {
+                simd::ulp_distance(dv, fv).is_some_and(|u| u <= EXP_ULP_BUDGET)
+            } else {
+                dv.to_bits() == fv.to_bits()
+            };
+            if !ok {
+                eprintln!("{func:?} entry {i}: det={dv:e} fast={fv:e}");
+                return false;
+            }
+        }
+        // eval() is the deterministic scalar reference on both providers,
+        // regardless of mode.
+        let (i, j) = (rows[0], cols[0]);
+        det.eval(i, j).to_bits() == fast.eval(i, j).to_bits()
+    });
+}
+
+#[test]
+fn panel_single_row_and_block_paths_agree_on_mode_contract() {
+    // fill_f64 routes rows.len()==1 through a different fast path than
+    // the micro-kernel block path; both must honour the mode contract.
+    let mut rng = Rng::seeded(311);
+    for d in [3usize, 16] {
+        let ds = adversarial_dataset(&mut rng, 30, d);
+        let func = KernelFunction::Gaussian { kappa: 3.0 };
+        let det = KernelPanel::new(&ds, func);
+        let fast = KernelPanel::new_with(&ds, func, NumericsMode::Fast);
+        let cols: Vec<usize> = (0..11).map(|_| rng.below(ds.n)).collect();
+        for rows in [vec![4usize], vec![1usize, 9, 17, 22, 5, 28]] {
+            let mut dvals = vec![f64::NAN; rows.len() * cols.len()];
+            let mut fvals = vec![f64::NAN; rows.len() * cols.len()];
+            det.fill_f64(&rows, &cols, &mut dvals);
+            fast.fill_f64(&rows, &cols, &mut fvals);
+            for (i, (&dv, &fv)) in dvals.iter().zip(fvals.iter()).enumerate() {
+                let u = simd::ulp_distance(dv, fv)
+                    .unwrap_or_else(|| panic!("d={d} entry {i}: {dv:e} vs {fv:e}"));
+                assert!(u <= EXP_ULP_BUDGET, "d={d} entry {i}: {u} ulp");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end tolerance: Fast fits land on the Deterministic clustering
+// ---------------------------------------------------------------------------
+
+fn trunc_fit(gram: &Gram<'_>, k: usize, seed: u64) -> mbkk::kkmeans::FitResult {
+    let mut rng = Rng::seeded(seed);
+    TruncatedMiniBatchKernelKMeans::new(TruncatedConfig {
+        k,
+        batch_size: 64,
+        schedule: ScheduleSpec::Fixed,
+        tau: 60,
+        max_iters: 40,
+        epsilon: None,
+        termination: TerminationMode::default(),
+        learning_rate: LearningRate::Beta,
+        init: Init::KMeansPlusPlus,
+        weights: None,
+    })
+    .fit(gram, &mut rng)
+}
+
+#[test]
+fn fast_fit_matches_deterministic_fit_within_tolerance() {
+    // Unquantized on-the-fly grams (no f32 table to mask differences):
+    // the ≤4-ulp exp perturbation may flip ties but must not change the
+    // clustering structure on well-separated data.
+    let mut rng = Rng::seeded(65);
+    let ds = blobs(&SyntheticSpec::new(600, 8, 5), &mut rng);
+    let func = KernelFunction::Gaussian { kappa: 8.0 };
+    let det_gram = Gram::on_the_fly(&ds, func);
+    let fast_gram = Gram::on_the_fly_with(&ds, func, NumericsMode::Fast);
+    let det = trunc_fit(&det_gram, 5, 12);
+    let fast = trunc_fit(&fast_gram, 5, 12);
+    let agreement = mbkk::metrics::ari(&det.assignments, &fast.assignments);
+    assert!(agreement > 0.8, "fast fit diverged from det fit: ARI={agreement}");
+    let rel = (det.objective - fast.objective).abs() / det.objective.abs().max(1e-12);
+    assert!(rel < 5e-2, "objectives diverged: det={} fast={}", det.objective, fast.objective);
+    if simd::detected_arch() == Arch::Portable {
+        // Fast degrades to the scalar chain without SIMD hardware, so the
+        // fits must then be bit-identical, not merely close.
+        assert_eq!(det.objective.to_bits(), fast.objective.to_bits());
+        assert_eq!(det.assignments, fast.assignments);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Portable-arm leg: dispatch latches per process, so re-exec with the
+// override and assert Fast ≡ Deterministic bitwise there.
+// ---------------------------------------------------------------------------
+
+/// Child half: only runs when re-exec'd by the parent below with
+/// `MBKK_SIMD_CHILD` set (dispatch latched to the portable arm via
+/// `MBKK_NUMERICS_PORTABLE` before the first kernel call).
+#[test]
+fn child_portable_fast_is_bit_identical() {
+    if std::env::var("MBKK_SIMD_CHILD").is_err() {
+        return;
+    }
+    assert_eq!(simd::detected_arch(), Arch::Portable, "override must pin dispatch");
+    let mut rng = Rng::seeded(201);
+    let ds = adversarial_dataset(&mut rng, 48, 7);
+    for func in [
+        KernelFunction::Gaussian { kappa: 4.0 },
+        KernelFunction::Laplacian { sigma: 2.0 },
+        KernelFunction::Linear,
+    ] {
+        let det = Gram::on_the_fly(&ds, func);
+        let fast = Gram::on_the_fly_with(&ds, func, NumericsMode::Fast);
+        let rows: Vec<usize> = (0..ds.n).collect();
+        let mut dvals = vec![f64::NAN; ds.n * ds.n];
+        let mut fvals = vec![f64::NAN; ds.n * ds.n];
+        det.block_into_tiled(&rows, &rows, 13, &mut dvals);
+        fast.block_into_tiled(&rows, &rows, 13, &mut fvals);
+        for (i, (&dv, &fv)) in dvals.iter().zip(fvals.iter()).enumerate() {
+            assert_eq!(dv.to_bits(), fv.to_bits(), "{func:?} entry {i}: {dv:e} vs {fv:e}");
+        }
+    }
+    println!("MBKK_SIMD_RESULT portable-bitwise ok");
+}
+
+#[test]
+fn portable_override_makes_fast_bit_identical_in_child_process() {
+    let exe = std::env::current_exe().expect("current_exe");
+    let out = std::process::Command::new(&exe)
+        .args(["child_portable_fast_is_bit_identical", "--exact", "--nocapture"])
+        .env("MBKK_SIMD_CHILD", "1")
+        .env("MBKK_NUMERICS_PORTABLE", "1")
+        .output()
+        .expect("spawn child test");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        out.status.success(),
+        "portable child failed:\n{stdout}\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(
+        stdout.contains("MBKK_SIMD_RESULT portable-bitwise ok"),
+        "child never reached its assertion:\n{stdout}"
+    );
+}

@@ -52,6 +52,7 @@ fn registry_datasets_cluster_above_chance() {
             max_iters: 60,
             epsilon: None,
             seed: 5,
+            numerics: mbkk::kernels::NumericsMode::Deterministic,
         };
         let out = run_one(&spec);
         assert!(out.ari > 0.15, "{name}: ARI={} too close to chance", out.ari);
