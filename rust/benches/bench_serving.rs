@@ -235,6 +235,44 @@ fn main() {
         any
     });
 
+    // Shard-scaling: the same 64-row batch scored through 1 / 2 / 4
+    // in-process shards at a fixed support size (DESIGN.md §14). S=1
+    // isolates the dispatch/merge plumbing cost over the plain engine;
+    // S>1 shows what parallel per-shard panels buy (or cost) at this
+    // support size.
+    let shard_rows: Vec<f32> = (0..64).flat_map(|i| ds.row(i % ds.n).to_vec()).collect();
+    for s in [1usize, 2, 4] {
+        let set = mbkk::serve::shard::ShardSet::local(
+            &model,
+            mbkk::serve::shard::ShardPlan::contiguous(model.k(), s),
+            1,
+            mbkk::kernels::NumericsMode::Deterministic,
+            mbkk::serve::shard::ShardSetConfig::default(),
+        )
+        .expect("shard set");
+        runner.bench(&format!("shard score 64x16 rows S={s}"), || {
+            set.score_batch(std::hint::black_box(&shard_rows)).expect("score").assignments
+        });
+    }
+
+    // Retry-path overhead: a delay(2) fault on every dispatch attempt
+    // bounds what one slow replica hop costs a fully-covered answer —
+    // the backoff/failover machinery itself, not the outage. Runs after
+    // the unarmed case above so that case's assertion stays meaningful.
+    let set = mbkk::serve::shard::ShardSet::local(
+        &model,
+        mbkk::serve::shard::ShardPlan::contiguous(model.k(), 2),
+        1,
+        mbkk::kernels::NumericsMode::Deterministic,
+        mbkk::serve::shard::ShardSetConfig::default(),
+    )
+    .expect("shard set");
+    mbkk::util::failpoint::configure("shard.dispatch=delay(2)").expect("arm delay");
+    runner.bench("shard score 64x16 rows S=2 delay(2ms)", || {
+        set.score_batch(std::hint::black_box(&shard_rows)).expect("score").assignments
+    });
+    mbkk::util::failpoint::reset();
+
     runner.write_csv();
     runner.write_baseline(&BenchRunner::baseline_path());
 }

@@ -35,6 +35,7 @@ fn main() -> Result<()> {
         Some("predict") => predict(&args),
         Some("serve-bench") => serve_bench(&args),
         Some("serve") => serve(&args),
+        Some("shard-worker") => shard_worker(&args),
         Some("figures") => run_figures(&args),
         Some("repro-speedup") => repro_speedup(&args),
         Some("gamma-table") => gamma_table(&args),
@@ -79,6 +80,8 @@ fn main() -> Result<()> {
                  \x20     --profile/--checkpoint-dir/--checkpoint-every/\n\
                  \x20     --checkpoint-keep/--resume/--numerics as `run`\n\
                  \x20     --out PATH           artifact path (default model.mbkk)\n\
+                 \x20     --shards N           record an N-shard contiguous plan in the\n\
+                 \x20                          artifact header for sharded serving\n\
                  \x20 predict                  load a model + batch-score a dataset\n\
                  \x20     --model PATH         artifact from `fit` (default model.mbkk)\n\
                  \x20     --dataset/--csv/--scale/--seed/--numerics as `run`\n\
@@ -90,14 +93,32 @@ fn main() -> Result<()> {
                  \x20     --secs F --batch-queries N --no-baseline --numerics MODE\n\
                  \x20 serve                    HTTP prediction service (docs/API.md):\n\
                  \x20                          POST /v1/predict, GET /v1/models, GET /healthz\n\
-                 \x20     --model PATH         artifact (fits one on the fly if omitted)\n\
+                 \x20     --model PATHS        artifact, or comma list (first = default,\n\
+                 \x20                          ?model=PATH routes the rest; fits one on\n\
+                 \x20                          the fly if omitted)\n\
+                 \x20     --watch              hot-swap a model when its artifact changes\n\
                  \x20     --addr HOST --port N bind address (127.0.0.1:8605; port 0 = any free)\n\
                  \x20     --max-wait-us N      request-coalescing deadline in us (2000)\n\
                  \x20     --max-batch N        coalescing flush threshold in rows (512)\n\
                  \x20     --max-body-mb N      request body cap in MiB (8)\n\
                  \x20     --deadline-ms N      per-request budget; late requests are shed\n\
                  \x20                          with 503 + Retry-After (5000)\n\
+                 \x20     --degraded-window-s N how long /healthz keeps reporting a\n\
+                 \x20                          contained fault's cause code (30)\n\
+                 \x20     --shards N           split scoring into N contiguous center\n\
+                 \x20                          shards (a plan recorded by fit --shards\n\
+                 \x20                          activates this automatically)\n\
+                 \x20     --shard-replicas N   in-process replicas per shard (1)\n\
+                 \x20     --shard-workers LIST remote shard-worker addresses, one per\n\
+                 \x20                          shard in shard order (locals fail over)\n\
+                 \x20     --partial-results    answer from covered shards (marked\n\
+                 \x20                          \"partial\") instead of 503 shard_unavailable\n\
+                 \x20     --shard-attempts N --shard-backoff-ms N --shard-deadline-ms N\n\
+                 \x20     --probe-interval-ms N dispatch retry + replica re-probe knobs\n\
                  \x20     --numerics MODE      det | fast serving numerics as `run`\n\
+                 \x20 shard-worker             serve one shard of a model for a sharded\n\
+                 \x20                          coordinator (POST /v1/shard-distances)\n\
+                 \x20     --model PATH --shard I --shards N --addr HOST --port N (8620)\n\
                  \x20 figures                  regenerate paper figures (CSV+md under --out)\n\
                  \x20     --fig N | --all      figure id 1..13\n\
                  \x20     --scale F --repeats N --iters N --quick --out DIR\n\
@@ -424,6 +445,7 @@ fn fit(args: &Args) -> Result<()> {
     let out = args.get_or("out", "model.mbkk");
     let csv = args.get("csv").map(|s| s.to_string());
     let k_opt = args.get("k").map(|s| s.parse::<usize>().expect("--k"));
+    let shards = args.get_parse_or("shards", 0usize);
     let show_profile = args.flag("profile");
     let (strategy, _) = gram_strategy(args)?;
     let checkpointing = checkpoint_from_args(args)?;
@@ -489,7 +511,16 @@ fn fit(args: &Args) -> Result<()> {
     }
     // Atomic (temp + fsync + rename) so a crash mid-write can never leave
     // a torn artifact at the published path (DESIGN.md §12).
-    let bytes = fit.model.to_bytes();
+    // --shards N records a deterministic contiguous shard plan in the
+    // header: `mbkk serve`/`mbkk shard-worker` pick it up, and loaders
+    // that don't shard ignore the key (DESIGN.md §14).
+    let bytes = if shards > 0 {
+        let plan = mbkk::serve::shard::ShardPlan::contiguous(fit.model.k(), shards);
+        println!("shard plan: {:?} ({} shards, recorded in the artifact)", plan.bounds(), plan.shards());
+        mbkk::serve::format::model_to_bytes_with_plan(&fit.model, Some(plan.bounds()))
+    } else {
+        fit.model.to_bytes()
+    };
     mbkk::serve::format::atomic_write(Path::new(&out), &bytes)
         .with_context(|| format!("writing model artifact {out}"))?;
     println!(
@@ -664,11 +695,18 @@ fn serve_bench(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `serve`: the zero-dependency HTTP prediction service over a fitted
-/// model (docs/API.md; DESIGN.md §11). SIGINT/SIGTERM set the shutdown
-/// flag; the accept loop drains in-flight connections and exits 0.
+/// `serve`: the zero-dependency HTTP prediction service over one or more
+/// fitted models (docs/API.md; DESIGN.md §11/§14). `--model` takes a
+/// comma-separated list (first = default, `?model=` routes the rest);
+/// `--watch` hot-swaps a model when its artifact changes on disk;
+/// `--shards`/`--shard-workers` turn on fault-tolerant sharded scoring.
+/// SIGINT/SIGTERM set the shutdown flag; the accept loop drains in-flight
+/// connections and exits 0.
 fn serve(args: &Args) -> Result<()> {
-    let model_path = args.get("model").map(|s| s.to_string());
+    let model_paths: Vec<String> = args
+        .get("model")
+        .map(|s| s.split(',').map(|p| p.trim().to_string()).filter(|p| !p.is_empty()).collect())
+        .unwrap_or_default();
     let dataset = args.get_or("dataset", "blobs");
     let scale = args.get_parse_or("scale", 0.25f64);
     let seed = args.get_parse_or("seed", 7u64);
@@ -678,35 +716,81 @@ fn serve(args: &Args) -> Result<()> {
     let max_batch = args.get_parse_or("max-batch", 512usize);
     let max_body_mb = args.get_parse_or("max-body-mb", 8usize);
     let deadline_ms = args.get_parse_or("deadline-ms", 5000u64);
+    let watch = args.flag("watch");
+    let shards_given = args.get("shards").is_some();
+    let shards = args.get_parse_or("shards", 0usize);
+    let shard_replicas = args.get_parse_or("shard-replicas", 1usize);
+    let shard_workers: Vec<String> = args
+        .get("shard-workers")
+        .map(|s| s.split(',').map(|w| w.trim().to_string()).filter(|w| !w.is_empty()).collect())
+        .unwrap_or_default();
+    let partial_results = args.flag("partial-results");
+    let degraded_window_s = args.get_parse_or("degraded-window-s", 30u64);
+    let shard_attempts = args.get_parse_or("shard-attempts", 2u32);
+    let shard_backoff_ms = args.get_parse_or("shard-backoff-ms", 5u64);
+    let shard_deadline_ms = args.get_parse_or("shard-deadline-ms", 2000u64);
+    let probe_interval_ms = args.get_parse_or("probe-interval-ms", 250u64);
     let numerics = numerics_from_args(args)?;
     args.finish();
 
-    let (model, label) = match &model_path {
-        Some(p) => (KernelKMeansModel::load(Path::new(p))?, p.clone()),
-        None => {
-            let ds = registry::load(&dataset, scale, seed);
-            println!("no --model given: fitting a fresh model on {} first", ds.name);
-            let spec = experiment::RunSpec {
-                dataset: dataset.clone(),
-                scale,
-                kernel: experiment::KernelSpec::Gaussian { multiplier: 1.0 },
-                algo: experiment::AlgoSpec::TruncKkm(mbkk::kkmeans::LearningRate::Beta),
-                k: ds.num_classes().max(2),
-                batch_size: 256,
-                schedule: mbkk::kkmeans::ScheduleSpec::Fixed,
-                tau: 100,
-                max_iters: 60,
-                epsilon: None,
-                seed,
-                // The throwaway model trains deterministically; only the
-                // serving engine honours --numerics.
-                numerics: NumericsMode::Deterministic,
-            };
-            let fitted =
-                experiment::fit_servable_model(&spec, &ds, experiment::GramStrategy::default())?;
-            (fitted.model, format!("fit:{}", ds.name))
+    let mut specs: Vec<mbkk::serve::http::ModelSpec> = Vec::new();
+    let mut recorded_plan: Option<Vec<usize>> = None;
+    if model_paths.is_empty() {
+        let ds = registry::load(&dataset, scale, seed);
+        println!("no --model given: fitting a fresh model on {} first", ds.name);
+        let spec = experiment::RunSpec {
+            dataset: dataset.clone(),
+            scale,
+            kernel: experiment::KernelSpec::Gaussian { multiplier: 1.0 },
+            algo: experiment::AlgoSpec::TruncKkm(mbkk::kkmeans::LearningRate::Beta),
+            k: ds.num_classes().max(2),
+            batch_size: 256,
+            schedule: mbkk::kkmeans::ScheduleSpec::Fixed,
+            tau: 100,
+            max_iters: 60,
+            epsilon: None,
+            seed,
+            // The throwaway model trains deterministically; only the
+            // serving engine honours --numerics.
+            numerics: NumericsMode::Deterministic,
+        };
+        let fitted =
+            experiment::fit_servable_model(&spec, &ds, experiment::GramStrategy::default())?;
+        specs.push(mbkk::serve::http::ModelSpec {
+            name: format!("fit:{}", ds.name),
+            model: fitted.model,
+            watch: None,
+        });
+    } else {
+        for p in &model_paths {
+            // ArtifactWatch::new both reads the bytes and fingerprints
+            // them, so --watch and plain loading share one read.
+            let (w, bytes) = mbkk::serve::replicate::ArtifactWatch::new(Path::new(p))?;
+            let model = mbkk::serve::format::model_from_bytes(&bytes)
+                .with_context(|| format!("loading model artifact {p}"))?;
+            // A shard plan recorded at fit time activates sharded serving
+            // automatically — but only for single-model serving (the plan
+            // is center-count specific), and an explicit --shards wins.
+            if model_paths.len() == 1 && !shards_given && recorded_plan.is_none() {
+                recorded_plan = mbkk::serve::format::model_shard_plan(&bytes)?;
+            }
+            specs.push(mbkk::serve::http::ModelSpec {
+                name: p.clone(),
+                model,
+                watch: watch.then_some(w),
+            });
         }
-    };
+    }
+    for spec in &specs {
+        println!(
+            "model:      {} (k={}, d={}, {} support points{})",
+            spec.name,
+            spec.model.k(),
+            spec.model.d,
+            spec.model.support_points(),
+            if spec.watch.is_some() { ", watched" } else { "" }
+        );
+    }
 
     let cfg = mbkk::serve::http::ServeConfig {
         addr: format!("{addr}:{port}"),
@@ -715,18 +799,36 @@ fn serve(args: &Args) -> Result<()> {
         max_body_bytes: max_body_mb.max(1) * 1024 * 1024,
         request_deadline: std::time::Duration::from_millis(deadline_ms.max(1)),
         numerics,
+        degraded_window: std::time::Duration::from_secs(degraded_window_s.max(1)),
+        shards,
+        shard_plan: recorded_plan,
+        shard_replicas,
+        shard_workers,
+        partial_results,
+        shard_attempts: shard_attempts.max(1),
+        shard_backoff: std::time::Duration::from_millis(shard_backoff_ms),
+        shard_deadline: std::time::Duration::from_millis(shard_deadline_ms.max(1)),
+        probe_interval: std::time::Duration::from_millis(probe_interval_ms.max(1)),
         ..Default::default()
     };
-    let server = mbkk::serve::http::Server::bind(&model, &label, &cfg)?;
+    let sharded = cfg.shards > 0 || cfg.shard_plan.is_some() || !cfg.shard_workers.is_empty();
+    let server = mbkk::serve::http::Server::bind_registry(specs, &cfg)?;
     let bound = server.local_addr()?;
-    println!(
-        "model:      {label} (k={}, d={}, {} support points)",
-        model.k(),
-        model.d,
-        model.support_points()
-    );
     println!("listening:  http://{bound} (POST /v1/predict, GET /v1/models, GET /healthz)");
     println!("coalesce:   max-wait {max_wait_us}us, max-batch {} rows", cfg.max_batch_rows);
+    if sharded {
+        println!(
+            "sharding:   {} merge, {} attempt(s), {}ms base backoff{}",
+            if cfg.partial_results { "partial-results" } else { "strict" },
+            cfg.shard_attempts,
+            cfg.shard_backoff.as_millis(),
+            if cfg.shard_workers.is_empty() {
+                format!(", {} in-process replica(s)/shard", cfg.shard_replicas.max(1))
+            } else {
+                format!(", workers {:?}", cfg.shard_workers)
+            }
+        );
+    }
     install_shutdown_handlers(server.shutdown_flag());
     let stats = server.run()?;
     println!(
@@ -734,6 +836,56 @@ fn serve(args: &Args) -> Result<()> {
         stats.requests, stats.batches, stats.rows, stats.coalesced_batches,
         stats.aborted_requests
     );
+    Ok(())
+}
+
+/// `shard-worker`: serve one shard of a model's support set over the
+/// binary shard protocol (`POST /v1/shard-distances`) for a sharded
+/// `mbkk serve` coordinator to dispatch to (DESIGN.md §14). The shard
+/// plan comes from the artifact header (recorded by `fit --shards`)
+/// unless `--shards` overrides it with an even split.
+fn shard_worker(args: &Args) -> Result<()> {
+    let model_path = args.get_or("model", "model.mbkk");
+    let shard = args.get_parse_or("shard", 0usize);
+    let shards = args.get_parse_or("shards", 0usize);
+    let addr = args.get_or("addr", "127.0.0.1");
+    let port = args.get_parse_or("port", 8620u16);
+    let numerics = numerics_from_args(args)?;
+    args.finish();
+
+    let bytes = std::fs::read(Path::new(&model_path))
+        .with_context(|| format!("reading model artifact {model_path}"))?;
+    let model = mbkk::serve::format::model_from_bytes(&bytes)
+        .with_context(|| format!("loading model artifact {model_path}"))?;
+    let plan = match mbkk::serve::format::model_shard_plan(&bytes)? {
+        Some(bounds) if shards == 0 => {
+            mbkk::serve::shard::ShardPlan::from_bounds(bounds, model.k())?
+        }
+        None if shards == 0 => mbkk::bail!(
+            "{model_path} records no shard plan; pass --shards N (and give the \
+             coordinator the same split)"
+        ),
+        _ => mbkk::serve::shard::ShardPlan::contiguous(model.k(), shards),
+    };
+    let server = mbkk::serve::shard::ShardWorkerServer::bind(
+        &model,
+        &plan,
+        shard,
+        &format!("{addr}:{port}"),
+        numerics,
+    )?;
+    let bound = server.local_addr()?;
+    let (lo, hi) = plan.range(shard);
+    println!(
+        "shard:      {shard}/{} (centers {lo}..{hi} of k={}, plan {:?})",
+        plan.shards(),
+        model.k(),
+        plan.bounds()
+    );
+    println!("listening:  http://{bound} (POST /v1/shard-distances, GET /healthz)");
+    install_shutdown_handlers(server.shutdown_flag());
+    let requests = server.run()?;
+    println!("shutdown:   served {requests} shard requests");
     Ok(())
 }
 

@@ -16,6 +16,14 @@
 //! a flush is in progress starts a fresh accumulation — batches overlap
 //! with waiting, so throughput does not gate on the slowest client.
 //!
+//! The compute side is abstracted behind the [`Scorer`] trait: the
+//! single-node [`PredictEngine`] and the sharded `serve::shard::ShardSet`
+//! both implement it, so coalescing and fault containment are identical
+//! whether a batch is scored in-process or fanned out to shard replicas.
+//! Scorer failures are two-sided ([`ScoreError`]): `Failed` poisons the
+//! batch and triggers per-request retries; `Unavailable` (a down shard)
+//! fails the cohort uniformly without retries.
+//!
 //! **Bit-identity:** the engine guarantees batched output equal to the
 //! scalar path for *any* batch size and thread count, so concatenating
 //! requests and slicing the result per ticket cannot change any caller's
@@ -45,6 +53,84 @@ use std::time::{Duration, Instant};
 
 use super::engine::PredictEngine;
 use crate::util::failpoint;
+
+/// A scored batch: one assignment per row, plus the coverage fraction
+/// when the backing scorer answered from less than the full center set
+/// (`None` = complete — the common case, and the only case for a
+/// single-node engine).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scored {
+    /// One center index per query row.
+    pub assignments: Vec<usize>,
+    /// `Some(fraction < 1.0)` iff the answer is partial (sharded scoring
+    /// under `--partial-results` with shards missing; docs/API.md).
+    pub coverage: Option<f64>,
+}
+
+/// Why a batch (or one request) failed to score.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScoreError {
+    /// A scoring dependency is down (e.g. a required shard did not
+    /// answer). Affects every request in the batch identically, so the
+    /// coalescer fails the cohort without retrying — retrying each
+    /// request alone would multiply load on the failing dependency for
+    /// the same outcome. Maps to 503 `shard_unavailable`.
+    Unavailable(String),
+    /// The scorer failed on this input (a contained panic, or an abort
+    /// at shutdown). Batch-poisoning semantics apply: the coalescer
+    /// retries each request alone so only the poisoned one(s) fail.
+    /// Maps to 500 `prediction_failed`.
+    Failed(String),
+}
+
+impl std::fmt::Display for ScoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ScoreError::Unavailable(m) => write!(f, "{m}"),
+            ScoreError::Failed(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl ScoreError {
+    /// The failure message, without the variant.
+    pub fn message(&self) -> &str {
+        match self {
+            ScoreError::Unavailable(m) | ScoreError::Failed(m) => m,
+        }
+    }
+}
+
+/// Anything the coalescer can score a batch against: the single-node
+/// [`PredictEngine`], or a `serve::shard::ShardSet` fanning the batch
+/// out to shard replicas. Implementations must keep the engine's
+/// batch-shape invariance (a row's assignment is independent of its
+/// co-travellers) — the coalescer concatenates requests and slices
+/// results on that guarantee.
+pub trait Scorer: Send + Sync {
+    /// Feature dimension (the HTTP layer validates shape against this).
+    fn d(&self) -> usize;
+    /// Number of centers.
+    fn k(&self) -> usize;
+    /// Score a validated batch. Panics are allowed — the coalescer runs
+    /// this under `catch_unwind` and converts them to
+    /// [`ScoreError::Failed`].
+    fn score(&self, rows: &[f32]) -> Result<Scored, ScoreError>;
+}
+
+impl Scorer for PredictEngine {
+    fn d(&self) -> usize {
+        PredictEngine::d(self)
+    }
+
+    fn k(&self) -> usize {
+        PredictEngine::k(self)
+    }
+
+    fn score(&self, rows: &[f32]) -> Result<Scored, ScoreError> {
+        Ok(Scored { assignments: self.predict_batch(rows), coverage: None })
+    }
+}
 
 /// How long past the leader's flush deadline a follower waits before
 /// concluding the leader is gone and promoting itself. Generous relative
@@ -104,13 +190,14 @@ struct Queue {
 struct Ticket {
     first_row: usize,
     n_rows: usize,
-    result: Mutex<Option<Result<Vec<usize>, String>>>,
+    result: Mutex<Option<Result<Scored, ScoreError>>>,
     ready: Condvar,
 }
 
-/// The admission queue in front of a [`PredictEngine`].
+/// The admission queue in front of a [`Scorer`] (single-node engine or
+/// sharded fleet).
 pub struct Coalescer {
-    engine: PredictEngine,
+    scorer: Box<dyn Scorer>,
     cfg: CoalesceConfig,
     queue: Mutex<Queue>,
     arrivals: Condvar,
@@ -139,10 +226,10 @@ fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
 }
 
 impl Coalescer {
-    /// Wrap an engine with an admission queue.
-    pub fn new(engine: PredictEngine, cfg: CoalesceConfig) -> Coalescer {
+    /// Wrap a scorer (engine or shard set) with an admission queue.
+    pub fn new(scorer: impl Scorer + 'static, cfg: CoalesceConfig) -> Coalescer {
         Coalescer {
-            engine,
+            scorer: Box::new(scorer),
             cfg: CoalesceConfig { max_batch_rows: cfg.max_batch_rows.max(1), ..cfg },
             queue: Mutex::new(Queue::default()),
             arrivals: Condvar::new(),
@@ -156,9 +243,15 @@ impl Coalescer {
         }
     }
 
-    /// The wrapped engine (dimension checks happen against this).
-    pub fn engine(&self) -> &PredictEngine {
-        &self.engine
+    /// Feature dimension of the wrapped scorer (the HTTP layer's shape
+    /// checks happen against this).
+    pub fn d(&self) -> usize {
+        self.scorer.d()
+    }
+
+    /// Number of centers served.
+    pub fn k(&self) -> usize {
+        self.scorer.k()
     }
 
     /// Current counter values.
@@ -182,28 +275,30 @@ impl Coalescer {
         self.max_batch_rows.fetch_max(batch_rows as u64, Ordering::Relaxed);
     }
 
-    /// Score `rows` (length must be a multiple of the engine dimension —
+    /// Score `rows` (length must be a multiple of the scorer dimension —
     /// the HTTP layer validates shape *before* admission) and return one
     /// assignment per row. Blocks the calling thread until its batch is
-    /// flushed; a successful result is bit-identical to calling the engine
-    /// (or the scalar path) on these rows alone. `Err` means *this*
-    /// request failed — it panicked the engine even when retried alone, or
-    /// was aborted at shutdown; co-travellers are unaffected.
-    pub fn submit(&self, rows: Vec<f32>) -> Result<Vec<usize>, String> {
-        let d = self.engine.d().max(1);
+    /// flushed; a successful complete result is bit-identical to calling
+    /// the engine (or the scalar path) on these rows alone.
+    /// `Err(Failed)` means *this* request failed — it panicked the scorer
+    /// even when retried alone, or was aborted at shutdown;
+    /// co-travellers are unaffected. `Err(Unavailable)` means a scoring
+    /// dependency was down for the whole batch.
+    pub fn submit(&self, rows: Vec<f32>) -> Result<Scored, ScoreError> {
+        let d = self.scorer.d().max(1);
         assert_eq!(rows.len() % d, 0, "submit() requires validated row shapes");
         let n = rows.len() / d;
         self.requests.fetch_add(1, Ordering::Relaxed);
         if n == 0 {
-            return Ok(Vec::new());
+            return Ok(Scored { assignments: Vec::new(), coverage: None });
         }
         // A full-batch-sized request gains nothing from waiting: dispatch
         // directly so it neither queues behind the deadline nor makes
         // smaller co-travellers wait behind its compute.
         if n >= self.cfg.max_batch_rows {
-            let preds = self.predict_guarded(&rows)?;
+            let scored = self.score_guarded(&rows)?;
             self.note_batch(n, 1);
-            return Ok(preds);
+            return Ok(scored);
         }
 
         let mut q = lock(&self.queue);
@@ -267,10 +362,11 @@ impl Coalescer {
         self.await_ticket(&ticket)
     }
 
-    /// Run the engine on `rows` under `catch_unwind`, converting a panic
+    /// Run the scorer on `rows` under `catch_unwind`, converting a panic
     /// (organic, or injected through the `coalesce.flush` failpoint) into
-    /// an `Err` instead of killing the calling connection thread.
-    fn predict_guarded(&self, rows: &[f32]) -> Result<Vec<usize>, String> {
+    /// a [`ScoreError::Failed`] instead of killing the calling connection
+    /// thread. A scorer-level `Err` passes through with its variant.
+    fn score_guarded(&self, rows: &[f32]) -> Result<Scored, ScoreError> {
         catch_unwind(AssertUnwindSafe(|| {
             if failpoint::armed() {
                 if let Some(fault) = failpoint::eval("coalesce.flush") {
@@ -282,24 +378,27 @@ impl Coalescer {
                     }
                 }
             }
-            self.engine.predict_batch(rows)
+            self.scorer.score(rows)
         }))
-        .map_err(panic_message)
+        .unwrap_or_else(|p| Err(ScoreError::Failed(panic_message(p))))
     }
 
-    /// Flush a claimed cohort: one guarded engine call; on a poisoned
+    /// Flush a claimed cohort: one guarded scorer call; on a poisoned
     /// batch, retry every request alone so exactly the poisoned one(s)
-    /// fail. Fills and wakes every ticket except `own`, whose result is
+    /// fail. An `Unavailable` batch fails the whole cohort *without*
+    /// per-request retries — a down dependency answers every retry the
+    /// same way, so retrying alone would only multiply load on it.
+    /// Fills and wakes every ticket except `own`, whose result is
     /// returned (`None` iff `own` is `None`).
     fn flush(
         &self,
         batch: Vec<f32>,
         tickets: Vec<Arc<Ticket>>,
         own: Option<&Arc<Ticket>>,
-    ) -> Option<Result<Vec<usize>, String>> {
-        let d = self.engine.d().max(1);
+    ) -> Option<Result<Scored, ScoreError>> {
+        let d = self.scorer.d().max(1);
         let mut own_result = None;
-        let mut deliver = |t: &Arc<Ticket>, res: Result<Vec<usize>, String>| {
+        let mut deliver = |t: &Arc<Ticket>, res: Result<Scored, ScoreError>| {
             if own.is_some_and(|o| Arc::ptr_eq(t, o)) {
                 own_result = Some(res);
             } else {
@@ -307,29 +406,43 @@ impl Coalescer {
                 t.ready.notify_one();
             }
         };
-        match self.predict_guarded(&batch) {
-            Ok(preds) => {
+        match self.score_guarded(&batch) {
+            Ok(scored) => {
                 self.note_batch(batch.len() / d, tickets.len());
                 for t in &tickets {
-                    deliver(t, Ok(preds[t.first_row..t.first_row + t.n_rows].to_vec()));
+                    deliver(
+                        t,
+                        Ok(Scored {
+                            assignments: scored.assignments
+                                [t.first_row..t.first_row + t.n_rows]
+                                .to_vec(),
+                            coverage: scored.coverage,
+                        }),
+                    );
                 }
             }
-            Err(batch_msg) => {
+            Err(ScoreError::Unavailable(msg)) => {
+                for t in &tickets {
+                    deliver(t, Err(ScoreError::Unavailable(msg.clone())));
+                }
+            }
+            Err(ScoreError::Failed(batch_msg)) => {
                 // The batch is poisoned: some request in it takes the
-                // engine down. Retry each alone so co-travellers of the
+                // scorer down. Retry each alone so co-travellers of the
                 // poisoned request still get their (bit-identical) answer.
                 for t in &tickets {
                     let lo = t.first_row * d;
                     let hi = lo + t.n_rows * d;
-                    let res = match self.predict_guarded(&batch[lo..hi]) {
-                        Ok(preds) => {
+                    let res = match self.score_guarded(&batch[lo..hi]) {
+                        Ok(scored) => {
                             self.note_batch(t.n_rows, 1);
-                            Ok(preds)
+                            Ok(scored)
                         }
-                        Err(m) => Err(format!(
+                        Err(ScoreError::Unavailable(m)) => Err(ScoreError::Unavailable(m)),
+                        Err(ScoreError::Failed(m)) => Err(ScoreError::Failed(format!(
                             "prediction batch failed ({batch_msg}); \
                              this request also failed alone: {m}"
-                        )),
+                        ))),
                     };
                     deliver(t, res);
                 }
@@ -343,7 +456,7 @@ impl Coalescer {
     /// batch — promote ourselves and flush the orphaned cohort. (Unqueued
     /// but unfilled just means the claimer is still computing: keep
     /// waiting.)
-    fn await_ticket(&self, ticket: &Arc<Ticket>) -> Result<Vec<usize>, String> {
+    fn await_ticket(&self, ticket: &Arc<Ticket>) -> Result<Scored, ScoreError> {
         let promote_after = self.cfg.max_wait + PROMOTE_GRACE;
         loop {
             let mut slot = lock(&ticket.result);
@@ -395,7 +508,7 @@ impl Coalescer {
             std::mem::take(&mut q.tickets)
         };
         for t in &tickets {
-            *lock(&t.result) = Some(Err(reason.to_string()));
+            *lock(&t.result) = Some(Err(ScoreError::Failed(reason.to_string())));
             t.ready.notify_one();
         }
         self.aborted.fetch_add(tickets.len() as u64, Ordering::Relaxed);
@@ -447,7 +560,9 @@ mod tests {
             PredictEngine::new(&model),
             CoalesceConfig { max_wait: Duration::from_micros(200), max_batch_rows: 512 },
         );
-        assert_eq!(co.submit(rows).unwrap(), want);
+        let scored = co.submit(rows).unwrap();
+        assert_eq!(scored.assignments, want);
+        assert_eq!(scored.coverage, None, "a single-node engine is always complete");
         let s = co.stats();
         assert_eq!((s.requests, s.batches, s.rows), (1, 1, 32));
         assert_eq!(s.coalesced_batches, 0);
@@ -457,7 +572,7 @@ mod tests {
     fn empty_submit_returns_empty() {
         let (_ds, model) = model_for(4, 3);
         let co = Coalescer::new(PredictEngine::new(&model), CoalesceConfig::default());
-        assert!(co.submit(Vec::new()).unwrap().is_empty());
+        assert!(co.submit(Vec::new()).unwrap().assignments.is_empty());
         assert_eq!(co.stats().batches, 0);
     }
 
@@ -473,7 +588,7 @@ mod tests {
         let preds = co.submit(rows.clone()).unwrap();
         // Bypass must not wait out the 250 ms deadline.
         assert!(t0.elapsed() < Duration::from_millis(200), "bypass waited on the deadline");
-        assert_eq!(preds, PredictEngine::new(&model).predict_batch(&rows));
+        assert_eq!(preds.assignments, PredictEngine::new(&model).predict_batch(&rows));
         assert_eq!(co.stats().max_batch_rows, 100);
     }
 
@@ -494,10 +609,10 @@ mod tests {
             let rows = rows_from(&ds, &idx);
             handles.push(std::thread::spawn(move || co.submit(rows).unwrap()));
         }
-        let got: Vec<Vec<usize>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let got: Vec<Scored> = handles.into_iter().map(|h| h.join().unwrap()).collect();
         for (idx, preds) in mixes.iter().zip(&got) {
             let want = engine.predict_batch(&rows_from(&ds, idx));
-            assert_eq!(preds, &want, "coalesced result diverged for mix {idx:?}");
+            assert_eq!(preds.assignments, want, "coalesced result diverged for mix {idx:?}");
         }
         let s = co.stats();
         assert_eq!(s.requests, 12);
@@ -555,15 +670,19 @@ mod tests {
             let rows = rows_from(&ds, &idx);
             handles.push(std::thread::spawn(move || co.submit(rows)));
         }
-        let got: Vec<Result<Vec<usize>, String>> =
+        let got: Vec<Result<Scored, ScoreError>> =
             handles.into_iter().map(|h| h.join().expect("no thread may die")).collect();
         failpoint::clear("coalesce.flush");
         let errs = got.iter().filter(|r| r.is_err()).count();
         assert_eq!(errs, 1, "exactly the poisoned request fails: {got:?}");
+        assert!(
+            got.iter().all(|r| !matches!(r, Err(ScoreError::Unavailable(_)))),
+            "a poisoned batch is Failed, never Unavailable: {got:?}"
+        );
         for (idx, res) in mixes.iter().zip(&got) {
             if let Ok(preds) = res {
                 let want = engine.predict_batch(&rows_from(&ds, idx));
-                assert_eq!(preds, &want, "survivor diverged for mix {idx:?}");
+                assert_eq!(preds.assignments, want, "survivor diverged for mix {idx:?}");
             }
         }
     }
@@ -598,12 +717,12 @@ mod tests {
         // whole cohort — including the dead leader's ticket.
         let rows_b = rows_from(&ds, &[5, 6, 7]);
         let got = co.submit(rows_b.clone()).unwrap();
-        assert_eq!(got, engine.predict_batch(&rows_b));
+        assert_eq!(got.assignments, engine.predict_batch(&rows_b));
         let rescued = lock(&orphan.result)
             .take()
             .expect("promoted follower fills the orphaned ticket")
             .unwrap();
-        assert_eq!(rescued, engine.predict_batch(&rows_a));
+        assert_eq!(rescued.assignments, engine.predict_batch(&rows_a));
     }
 
     #[test]
@@ -619,8 +738,92 @@ mod tests {
         assert_eq!(co.stats().aborted_requests, 1);
         // The queue is clean afterwards: a fresh submission works.
         assert_eq!(
-            co.submit(rows.clone()).unwrap(),
+            co.submit(rows.clone()).unwrap().assignments,
             PredictEngine::new(&model).predict_batch(&rows)
         );
+    }
+
+    /// A scorer whose dependency is down for the first `down_for` calls
+    /// (then delegates to a real engine), and which reports coverage.
+    struct FlakyScorer {
+        engine: PredictEngine,
+        down_for: AtomicU64,
+        coverage: Option<f64>,
+    }
+
+    impl Scorer for FlakyScorer {
+        fn d(&self) -> usize {
+            self.engine.d()
+        }
+        fn k(&self) -> usize {
+            self.engine.k()
+        }
+        fn score(&self, rows: &[f32]) -> Result<Scored, ScoreError> {
+            if self
+                .down_for
+                .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1))
+                .is_ok()
+            {
+                return Err(ScoreError::Unavailable("shard 1 did not answer".to_string()));
+            }
+            Ok(Scored { assignments: self.engine.predict_batch(rows), coverage: self.coverage })
+        }
+    }
+
+    #[test]
+    fn unavailable_scorer_fails_the_cohort_without_retries() {
+        let (ds, model) = model_for(5, 57);
+        let co = Arc::new(Coalescer::new(
+            FlakyScorer {
+                engine: PredictEngine::new(&model),
+                // Down for exactly one batch: if the coalescer retried the
+                // cohort per-request, later requests would succeed and the
+                // failure count would drop below the cohort size.
+                down_for: AtomicU64::new(1),
+                coverage: None,
+            },
+            CoalesceConfig { max_wait: Duration::from_millis(30), max_batch_rows: 4096 },
+        ));
+        let mut handles = Vec::new();
+        for t in 0..6 {
+            let co = co.clone();
+            let rows = rows_from(&ds, &[t * 7, t * 7 + 2]);
+            handles.push(std::thread::spawn(move || co.submit(rows)));
+        }
+        let got: Vec<Result<Scored, ScoreError>> =
+            handles.into_iter().map(|h| h.join().expect("no thread may die")).collect();
+        let unavailable =
+            got.iter().filter(|r| matches!(r, Err(ScoreError::Unavailable(_)))).count();
+        let ok = got.iter().filter(|r| r.is_ok()).count();
+        // Whatever the batching pattern, every member of the batch that
+        // hit the outage fails Unavailable (≥1), nobody fails Failed, and
+        // requests in later batches succeed.
+        assert_eq!(unavailable + ok, 6, "no request may fail as Failed: {got:?}");
+        assert!(unavailable >= 1, "the outage batch must surface: {got:?}");
+    }
+
+    #[test]
+    fn coverage_propagates_to_every_cohort_member() {
+        let (ds, model) = model_for(4, 71);
+        let engine = PredictEngine::new(&model);
+        let co = Arc::new(Coalescer::new(
+            FlakyScorer {
+                engine: PredictEngine::new(&model),
+                down_for: AtomicU64::new(0),
+                coverage: Some(2.0 / 3.0),
+            },
+            CoalesceConfig { max_wait: Duration::from_millis(30), max_batch_rows: 4096 },
+        ));
+        let mixes: Vec<Vec<usize>> = (0..5).map(|t| vec![t * 11, t * 11 + 3]).collect();
+        let mut handles = Vec::new();
+        for idx in mixes.clone() {
+            let co = co.clone();
+            let rows = rows_from(&ds, &idx);
+            handles.push(std::thread::spawn(move || co.submit(rows).unwrap()));
+        }
+        for (idx, scored) in mixes.iter().zip(handles.into_iter().map(|h| h.join().unwrap())) {
+            assert_eq!(scored.coverage, Some(2.0 / 3.0));
+            assert_eq!(scored.assignments, engine.predict_batch(&rows_from(&ds, idx)));
+        }
     }
 }

@@ -1,19 +1,22 @@
-//! The zero-dependency HTTP/1.1 prediction service (DESIGN.md §11,
+//! The zero-dependency HTTP/1.1 prediction service (DESIGN.md §11/§14,
 //! docs/API.md).
 //!
 //! ```text
-//! TcpListener (nonblocking accept loop, polls the shutdown flag)
+//! TcpListener (nonblocking accept loop, polls shutdown + artifact watches)
 //!    └─ per-connection thread (keep-alive loop)
 //!         ├─ wire::read_head / read_body   bounded framing, 100-continue
 //!         ├─ json::lazy                    offset-based "points" extraction
+//!         ├─ ModelRegistry                 `?model=` routing + hot-swap
 //!         ├─ Coalescer                     deadline-batched admission queue
-//!         │     └─ PredictEngine           persistent worker pool
+//!         │     └─ Scorer                  PredictEngine, or a ShardSet
+//!         │                                fanning out to shard replicas
 //!         └─ wire::Response                single-write JSON response
 //! ```
 //!
 //! Endpoints: `POST /v1/predict`, `GET /v1/models`, `GET /healthz` — the
 //! request/response schemas, error envelope, and coalescing semantics are
-//! documented in docs/API.md and pinned by `rust/tests/conformance_http.rs`.
+//! documented in docs/API.md and pinned by `rust/tests/conformance_http.rs`
+//! and `rust/tests/conformance_shard.rs`.
 //!
 //! Guarantees:
 //!
@@ -24,7 +27,10 @@
 //!   the CLI's `predict --scalar` computes for the same text: the lazy
 //!   parser converts number tokens with the CSV loader's single-rounding
 //!   `parse::<f32>` and the coalescer inherits the engine's batch-shape
-//!   invariance.
+//!   invariance. Sharded serving preserves this: the fixed-shard-order
+//!   merge reproduces the single-node distance matrix bitwise
+//!   (`serve::shard` docs), so a fully-covered sharded answer is
+//!   byte-equal to an unsharded one.
 //! * **Bounded resources.** Head and body caps, a connection ceiling
 //!   (503 above it), and read timeouts on every accepted socket.
 //!
@@ -32,28 +38,35 @@
 //! the compute worker pool, which stays dedicated to `PredictEngine`
 //! batches and must never block on client sockets (ADR-003).
 //!
-//! **Degrade, don't die** (ADR-004): the server carries an explicit health
-//! state machine — `starting → serving → draining`, with a time-windowed
-//! `degraded` overlay entered whenever an internal fault is contained
-//! (a routed panic, a failed coalescer flush). `/healthz` reports it
-//! truthfully: 503 while starting or draining (with `Retry-After`), 200
-//! with `"status": "degraded"` inside the fault window. Load is shed with
-//! 503 + `Retry-After` at the connection ceiling and when a request blows
-//! its deadline budget before admission. Fault-injection hooks
-//! (`http.accept`, `http.read`, `http.write` — see `util::failpoint`)
-//! prove the blast radius: an injected accept fault drops one connection,
-//! a read/write fault kills one connection thread, and the process keeps
-//! serving — pinned by the CI chaos sweep.
+//! **Degrade, don't die** (ADR-004, ADR-006): the server carries an
+//! explicit health state machine — `starting → serving → draining`, with
+//! a time-windowed `degraded` overlay entered whenever an internal fault
+//! is contained. Each fault records a **structured cause code**
+//! (`internal_panic`, `connection_fault`, `prediction_failed`,
+//! `shard_unavailable`, `partial_results`) held for a configurable window
+//! (`--degraded-window-s`); a currently-ejected shard replica contributes
+//! the live cause `replica_ejected` for as long as it stays ejected.
+//! `/healthz` reports status truthfully with the cause list and per-shard
+//! replica detail; 503 while starting or draining (with `Retry-After`).
+//! Load is shed with 503 + `Retry-After` at the connection ceiling and
+//! when a request blows its deadline budget before admission.
+//! Fault-injection hooks (`http.accept`, `http.read`, `http.write`,
+//! `shard.dispatch`, `shard.merge`, `replica.probe` — see
+//! `util::failpoint`) prove the blast radius — pinned by the CI chaos
+//! sweep.
 
+use std::collections::BTreeMap;
 use std::io::{BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use super::coalesce::{CoalesceConfig, Coalescer, StatsSnapshot};
+use super::coalesce::{CoalesceConfig, Coalescer, ScoreError, StatsSnapshot};
 use super::engine::PredictEngine;
 use super::format;
+use super::replicate::{ArtifactWatch, ModelRegistry};
+use super::shard::{HttpShardWorker, LocalShardWorker, ShardPlan, ShardSet, ShardSetConfig, ShardWorker};
 use super::wire::{self, RequestHead, Response, WireError};
 use crate::kkmeans::KernelKMeansModel;
 use crate::util::error::{Context, Result};
@@ -65,12 +78,10 @@ use crate::util::simd::NumericsMode;
 const ACCEPT_POLL: Duration = Duration::from_millis(2);
 /// How long shutdown waits for in-flight connections to finish.
 const DRAIN_TIMEOUT: Duration = Duration::from_secs(5);
-/// How long `/healthz` reports `degraded` after a contained internal
-/// fault. Long enough for an external prober on a coarse interval to see
-/// it; the server keeps serving throughout.
-const DEGRADED_WINDOW: Duration = Duration::from_secs(30);
+/// How often the accept loop polls artifact watches for hot-swaps.
+const REFRESH_INTERVAL: Duration = Duration::from_secs(1);
 
-/// Health phases (the `Degraded` overlay is a timestamp, not a phase —
+/// Health phases (the `degraded` overlay is a cause map, not a phase —
 /// a fault must not mask a concurrent drain).
 const PHASE_STARTING: u8 = 0;
 const PHASE_SERVING: u8 = 1;
@@ -99,6 +110,35 @@ pub struct ServeConfig {
     /// Fast is safe for serving: distances move within the exp ulp
     /// budget, assignments effectively never (DESIGN.md §13).
     pub numerics: NumericsMode,
+    /// How long `/healthz` keeps reporting a contained fault's cause
+    /// code (`--degraded-window-s`).
+    pub degraded_window: Duration,
+    /// Shard the support set into this many contiguous center ranges
+    /// (0 = unsharded single-engine serving). `shard_plan` overrides the
+    /// even split; `shard_workers` implies one shard per worker address.
+    pub shards: usize,
+    /// Explicit shard bounds (`0, …, k`), e.g. recorded in the model
+    /// artifact header — overrides the even `shards` split.
+    pub shard_plan: Option<Vec<usize>>,
+    /// In-process replicas per shard. With remote `shard_workers` these
+    /// are appended after the remote replica as local failover targets;
+    /// 0 then means remote-only (no local fallback).
+    pub shard_replicas: usize,
+    /// Remote `mbkk shard-worker` addresses, one per shard in shard
+    /// order. Empty = all-in-process shards.
+    pub shard_workers: Vec<String>,
+    /// Merge policy when a shard stays unavailable through every retry:
+    /// `false` answers 503 `shard_unavailable`; `true` answers from the
+    /// covered centers with `"partial": true` and a coverage fraction.
+    pub partial_results: bool,
+    /// Dispatch rounds per shard per batch (retry with backoff between).
+    pub shard_attempts: u32,
+    /// Base backoff between dispatch rounds (exponential, jittered).
+    pub shard_backoff: Duration,
+    /// Connect/read/write deadline for one remote shard dispatch.
+    pub shard_deadline: Duration,
+    /// How often the background prober re-checks ejected replicas.
+    pub probe_interval: Duration,
 }
 
 impl Default for ServeConfig {
@@ -112,28 +152,143 @@ impl Default for ServeConfig {
             max_connections: 128,
             request_deadline: Duration::from_secs(5),
             numerics: NumericsMode::Deterministic,
+            degraded_window: Duration::from_secs(30),
+            shards: 0,
+            shard_plan: None,
+            shard_replicas: 1,
+            shard_workers: Vec::new(),
+            partial_results: false,
+            shard_attempts: ShardSetConfig::default().attempts,
+            shard_backoff: ShardSetConfig::default().backoff,
+            shard_deadline: Duration::from_secs(2),
+            probe_interval: Duration::from_millis(250),
         }
     }
 }
 
-struct ServerState {
+/// One model the server will serve: registry name, the model itself, and
+/// optionally the artifact watch that hot-swaps it on version bumps.
+pub struct ModelSpec {
+    /// Registry name — the `?model=` routing key and `/v1/models` label.
+    pub name: String,
+    /// The frozen model.
+    pub model: KernelKMeansModel,
+    /// Watch this artifact; on a content change the serving unit is
+    /// rebuilt from the new bytes and swapped in without dropping
+    /// in-flight requests.
+    pub watch: Option<ArtifactWatch>,
+}
+
+/// Everything one served model needs to answer queries: the admission
+/// queue over its scorer, the shard fleet behind it (if sharded), and
+/// prebuilt JSON fragments. Hot-swap replaces the whole unit atomically;
+/// in-flight requests finish on the old one (they hold its `Arc`).
+struct ServingUnit {
     coalescer: Coalescer,
-    /// Prebuilt `GET /v1/models` response value.
-    models_json: Json,
+    shard_set: Option<Arc<ShardSet>>,
+    /// Static `/v1/models` entry fields (dynamic fields are merged in per
+    /// request).
+    meta: Json,
     /// Prebuilt model summary embedded in `/healthz`.
-    model_summary: Json,
+    summary: Json,
+}
+
+/// Build a serving unit: a plain engine, or a shard fleet when the config
+/// asks for one.
+fn build_unit(model: &KernelKMeansModel, name: &str, cfg: &ServeConfig) -> Result<ServingUnit> {
+    let ccfg = CoalesceConfig { max_wait: cfg.max_wait, max_batch_rows: cfg.max_batch_rows };
+    let sharded = cfg.shards > 0 || cfg.shard_plan.is_some() || !cfg.shard_workers.is_empty();
+    let (coalescer, shard_set) = if sharded {
+        let plan = match &cfg.shard_plan {
+            Some(bounds) => ShardPlan::from_bounds(bounds.clone(), model.k())?,
+            None => ShardPlan::contiguous(
+                model.k(),
+                cfg.shards.max(cfg.shard_workers.len()).max(1),
+            ),
+        };
+        if !cfg.shard_workers.is_empty() && cfg.shard_workers.len() != plan.shards() {
+            crate::bail!(
+                "{} shard-worker addresses for {} shards (need exactly one per shard)",
+                cfg.shard_workers.len(),
+                plan.shards()
+            );
+        }
+        let scfg = ShardSetConfig {
+            partial_results: cfg.partial_results,
+            attempts: cfg.shard_attempts,
+            backoff: cfg.shard_backoff,
+            ..ShardSetConfig::default()
+        };
+        let set = if cfg.shard_workers.is_empty() {
+            ShardSet::local(model, plan, cfg.shard_replicas.max(1), cfg.numerics, scfg)?
+        } else {
+            // Remote replica first (it owns the shard), locals after it as
+            // failover targets: a dead worker ejects, dispatch falls over
+            // to the local copy, and answers stay bit-identical.
+            let mut workers: Vec<Vec<Box<dyn ShardWorker>>> = Vec::new();
+            for i in 0..plan.shards() {
+                let mut reps: Vec<Box<dyn ShardWorker>> = vec![Box::new(HttpShardWorker::new(
+                    &cfg.shard_workers[i],
+                    &plan,
+                    i,
+                    cfg.shard_deadline,
+                ))];
+                for j in 0..cfg.shard_replicas {
+                    reps.push(Box::new(LocalShardWorker::new(
+                        model,
+                        &plan,
+                        i,
+                        cfg.numerics,
+                        &format!("local:{i}.{j}"),
+                    )));
+                }
+                workers.push(reps);
+            }
+            ShardSet::from_workers(model.d, plan, workers, scfg)?
+        };
+        let set = Arc::new(set);
+        (Coalescer::new(Arc::clone(&set), ccfg), Some(set))
+    } else {
+        let engine = PredictEngine::with_mode(model, cfg.numerics);
+        (Coalescer::new(engine, ccfg), None)
+    };
+    let mut meta_fields = vec![
+        ("name", Json::Str(name.to_string())),
+        ("kind", Json::Str("model".to_string())),
+        ("format_version", Json::Num(format::FORMAT_VERSION as f64)),
+        ("kernel", format::kernel_to_json(model.kernel)),
+        ("k", Json::Num(model.k() as f64)),
+        ("d", Json::Num(model.d as f64)),
+        ("support_points", Json::Num(model.support_points() as f64)),
+    ];
+    if let Some(set) = &shard_set {
+        meta_fields.push((
+            "shards",
+            Json::arr_num(set.plan().bounds().iter().map(|&b| b as f64)),
+        ));
+    }
+    let meta = Json::obj(meta_fields);
+    let summary = Json::obj(vec![
+        ("name", Json::Str(name.to_string())),
+        ("k", Json::Num(model.k() as f64)),
+        ("d", Json::Num(model.d as f64)),
+    ]);
+    Ok(ServingUnit { coalescer, shard_set, meta, summary })
+}
+
+struct ServerState {
+    registry: ModelRegistry<ServingUnit>,
+    /// The serving configuration, kept for hot-swap rebuilds.
+    cfg: ServeConfig,
     shutdown: Arc<AtomicBool>,
     active: AtomicUsize,
-    max_body_bytes: usize,
-    max_connections: usize,
-    request_deadline: Duration,
     /// Health phase: starting / serving / draining.
     phase: AtomicU8,
-    /// Instant the state was built — the zero point for `degraded_until`.
+    /// Instant the state was built — the zero point for the cause map.
     started: Instant,
-    /// Millis-since-`started` until which `/healthz` reports `degraded`
-    /// (0 = never degraded). Written by [`note_degraded`].
-    degraded_until: AtomicU64,
+    /// Contained-fault cause codes → millis-since-`started` until which
+    /// each keeps `/healthz` degraded. Written by [`note_degraded`].
+    degraded: Mutex<BTreeMap<&'static str, u64>>,
     /// Requests shed before admission (deadline blown, draining).
     shed: AtomicU64,
 }
@@ -143,22 +298,46 @@ impl ServerState {
         self.started.elapsed().as_millis() as u64
     }
 
+    /// Cause codes currently holding the server degraded: every windowed
+    /// fault cause still fresh, plus the live `replica_ejected` condition
+    /// while any shard replica is out of dispatch.
+    fn live_causes(&self) -> Vec<&'static str> {
+        let now = self.now_ms();
+        let mut causes: Vec<&'static str> = self
+            .degraded
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .iter()
+            .filter(|&(_, &until)| now < until)
+            .map(|(&cause, _)| cause)
+            .collect();
+        let ejected = self.registry.entries().iter().any(|e| {
+            e.unit().shard_set.as_ref().is_some_and(|s| s.any_ejected())
+        });
+        if ejected && !causes.contains(&"replica_ejected") {
+            causes.push("replica_ejected");
+        }
+        causes
+    }
+
     /// `"starting" | "ok" | "degraded" | "draining"` — the serving phase
-    /// with the fault window overlaid (a drain outranks it).
+    /// with the fault causes overlaid (a drain outranks them).
     fn health_status(&self) -> &'static str {
         match self.phase.load(Ordering::SeqCst) {
             PHASE_STARTING => "starting",
             PHASE_DRAINING => "draining",
-            _ if self.now_ms() < self.degraded_until.load(Ordering::SeqCst) => "degraded",
+            _ if !self.live_causes().is_empty() => "degraded",
             _ => "ok",
         }
     }
 }
 
-/// Open (or extend) the degraded window after a contained internal fault.
-fn note_degraded(state: &ServerState) {
-    let until = state.now_ms() + DEGRADED_WINDOW.as_millis() as u64;
-    state.degraded_until.fetch_max(until, Ordering::SeqCst);
+/// Open (or extend) the degraded window for one structured cause code.
+fn note_degraded(state: &ServerState, cause: &'static str) {
+    let until = state.now_ms() + state.cfg.degraded_window.as_millis() as u64;
+    let mut map = state.degraded.lock().unwrap_or_else(|p| p.into_inner());
+    let entry = map.entry(cause).or_insert(0);
+    *entry = (*entry).max(until);
 }
 
 /// A bound, not-yet-running prediction server.
@@ -178,46 +357,43 @@ impl Drop for ActiveGuard {
 }
 
 impl Server {
-    /// Build the engine + admission queue and bind the listen socket.
-    /// `source` labels the model in `/v1/models` and `/healthz` (the
-    /// artifact path, or a synthetic label for fit-on-the-fly models).
+    /// Build the engine + admission queue for one model and bind the
+    /// listen socket. `source` labels the model in `/v1/models` and
+    /// `/healthz` (the artifact path, or a synthetic label for
+    /// fit-on-the-fly models).
     pub fn bind(model: &KernelKMeansModel, source: &str, cfg: &ServeConfig) -> Result<Server> {
-        let engine = PredictEngine::with_mode(model, cfg.numerics);
-        let coalescer = Coalescer::new(
-            engine,
-            CoalesceConfig { max_wait: cfg.max_wait, max_batch_rows: cfg.max_batch_rows },
-        );
-        let meta = Json::obj(vec![
-            ("name", Json::Str(source.to_string())),
-            ("kind", Json::Str("model".to_string())),
-            ("format_version", Json::Num(format::FORMAT_VERSION as f64)),
-            ("kernel", format::kernel_to_json(model.kernel)),
-            ("k", Json::Num(model.k() as f64)),
-            ("d", Json::Num(model.d as f64)),
-            ("support_points", Json::Num(model.support_points() as f64)),
-        ]);
-        let model_summary = Json::obj(vec![
-            ("name", Json::Str(source.to_string())),
-            ("k", Json::Num(model.k() as f64)),
-            ("d", Json::Num(model.d as f64)),
-        ]);
+        Server::bind_registry(
+            vec![ModelSpec { name: source.to_string(), model: model.clone(), watch: None }],
+            cfg,
+        )
+    }
+
+    /// Bind a multi-model server. The first spec is the default model
+    /// (requests without `?model=` route to it); watched specs hot-swap
+    /// when their artifact changes on disk.
+    pub fn bind_registry(specs: Vec<ModelSpec>, cfg: &ServeConfig) -> Result<Server> {
+        if specs.is_empty() {
+            crate::bail!("the server needs at least one model to serve");
+        }
+        let mut registry = ModelRegistry::new();
+        for spec in specs {
+            let unit = build_unit(&spec.model, &spec.name, cfg)?;
+            let version = spec.watch.as_ref().map(|w| w.version() as u64).unwrap_or(0);
+            registry.register(&spec.name, unit, version, spec.watch)?;
+        }
         let listener = TcpListener::bind(cfg.addr.as_str())
             .with_context(|| format!("binding http listener on {}", cfg.addr))?;
         Ok(Server {
             listener,
             read_timeout: cfg.read_timeout,
             state: Arc::new(ServerState {
-                coalescer,
-                models_json: Json::obj(vec![("models", Json::Arr(vec![meta]))]),
-                model_summary,
+                registry,
+                cfg: cfg.clone(),
                 shutdown: Arc::new(AtomicBool::new(false)),
                 active: AtomicUsize::new(0),
-                max_body_bytes: cfg.max_body_bytes,
-                max_connections: cfg.max_connections,
-                request_deadline: cfg.request_deadline,
                 phase: AtomicU8::new(PHASE_STARTING),
                 started: Instant::now(),
-                degraded_until: AtomicU64::new(0),
+                degraded: Mutex::new(BTreeMap::new()),
                 shed: AtomicU64::new(0),
             }),
         })
@@ -234,16 +410,51 @@ impl Server {
         Arc::clone(&self.state.shutdown)
     }
 
-    /// Accept loop. Returns the final service counters once the shutdown
-    /// flag is set and in-flight connections have drained (or the drain
-    /// timeout passes).
+    /// Accept loop. Returns the default model's final service counters
+    /// once the shutdown flag is set and in-flight connections have
+    /// drained (or the drain timeout passes).
     pub fn run(self) -> Result<StatsSnapshot> {
         let state = self.state;
         self.listener
             .set_nonblocking(true)
             .context("setting the listener nonblocking")?;
+        // Background prober: re-checks ejected shard replicas so a
+        // recovered worker re-enters dispatch without waiting for live
+        // traffic to find it.
+        let prober = if state.registry.entries().iter().any(|e| e.unit().shard_set.is_some()) {
+            let st = Arc::clone(&state);
+            Some(
+                std::thread::Builder::new()
+                    .name("mbkk-probe".to_string())
+                    .spawn(move || {
+                        let step = Duration::from_millis(50);
+                        while !st.shutdown.load(Ordering::SeqCst) {
+                            let mut waited = Duration::ZERO;
+                            while waited < st.cfg.probe_interval
+                                && !st.shutdown.load(Ordering::SeqCst)
+                            {
+                                std::thread::sleep(step);
+                                waited += step;
+                            }
+                            for entry in st.registry.entries() {
+                                if let Some(set) = &entry.unit().shard_set {
+                                    set.probe_ejected();
+                                }
+                            }
+                        }
+                    })
+                    .context("spawning the shard probe thread")?,
+            )
+        } else {
+            None
+        };
         state.phase.store(PHASE_SERVING, Ordering::SeqCst);
+        let mut last_refresh = Instant::now();
         while !state.shutdown.load(Ordering::SeqCst) {
+            if last_refresh.elapsed() >= REFRESH_INTERVAL {
+                last_refresh = Instant::now();
+                refresh_models(&state);
+            }
             match self.listener.accept() {
                 Ok((stream, _peer)) => {
                     // Accept-boundary fault injection: whatever the armed
@@ -257,11 +468,11 @@ impl Server {
                                 failpoint::Fault::Err(m) => m,
                             };
                             eprintln!("mbkk-serve: dropped a connection (failpoint http.accept: {msg})");
-                            note_degraded(&state);
+                            note_degraded(&state, "connection_fault");
                             continue;
                         }
                     }
-                    if state.active.load(Ordering::SeqCst) >= state.max_connections {
+                    if state.active.load(Ordering::SeqCst) >= state.cfg.max_connections {
                         let mut s = stream;
                         let _ = s.set_nonblocking(false);
                         let _ = Response::error(
@@ -313,16 +524,46 @@ impl Server {
         // we abort them — counted, so the e2e drain test can assert a
         // graceful shutdown aborts nothing.
         state.phase.store(PHASE_DRAINING, Ordering::SeqCst);
-        state.coalescer.begin_drain();
+        for entry in state.registry.entries() {
+            entry.unit().coalescer.begin_drain();
+        }
         let deadline = Instant::now() + DRAIN_TIMEOUT;
         while state.active.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
             std::thread::sleep(ACCEPT_POLL);
         }
-        let aborted = state.coalescer.abort_pending("server draining; request aborted");
+        let mut aborted = 0;
+        for entry in state.registry.entries() {
+            aborted += entry.unit().coalescer.abort_pending("server draining; request aborted");
+        }
         if aborted > 0 {
             eprintln!("mbkk-serve: aborted {aborted} queued requests at the drain deadline");
         }
-        Ok(state.coalescer.stats())
+        if let Some(handle) = prober {
+            let _ = handle.join();
+        }
+        Ok(state.registry.default_model().unit().coalescer.stats())
+    }
+}
+
+/// Poll artifact watches; hot-swap any model whose artifact changed. A
+/// corrupt or mid-rewrite artifact keeps the previous version serving —
+/// logged, never fatal.
+fn refresh_models(state: &ServerState) {
+    let cfg = &state.cfg;
+    let (swapped, errors) = state.registry.refresh(|name, bytes| {
+        let model = format::model_from_bytes(bytes).map_err(|e| e.to_string())?;
+        let mut ucfg = cfg.clone();
+        // A shard plan recorded in the new artifact wins over the CLI's.
+        if let Ok(Some(bounds)) = format::model_shard_plan(bytes) {
+            ucfg.shard_plan = Some(bounds);
+        }
+        build_unit(&model, name, &ucfg).map_err(|e| e.to_string())
+    });
+    for e in errors {
+        eprintln!("mbkk-serve: artifact refresh: {e}");
+    }
+    if swapped > 0 {
+        eprintln!("mbkk-serve: hot-swapped {swapped} model(s) on artifact version bump");
     }
 }
 
@@ -408,13 +649,13 @@ fn read_framed_body(
         }
         None => return Ok(Vec::new()),
     };
-    if len > state.max_body_bytes {
+    if len > state.cfg.max_body_bytes {
         let _ = Response::error(
             413,
             "payload_too_large",
             &format!(
                 "request body of {len} bytes exceeds the {} byte limit",
-                state.max_body_bytes
+                state.cfg.max_body_bytes
             ),
         )
         .closing()
@@ -428,7 +669,7 @@ fn read_framed_body(
             return Err(());
         }
     }
-    match wire::read_body(reader, len, state.max_body_bytes) {
+    match wire::read_body(reader, len, state.cfg.max_body_bytes) {
         Ok(body) => Ok(body),
         Err(WireError::Malformed(m)) => {
             let _ = Response::error(400, "bad_request", &m).closing().write_to(writer);
@@ -440,7 +681,8 @@ fn read_framed_body(
 
 /// Route under `catch_unwind`: a bug in a handler answers 500 on this
 /// connection instead of tearing the whole service down — and opens the
-/// degraded health window, so `/healthz` tells the truth about it.
+/// degraded health window with the `internal_panic` cause, so `/healthz`
+/// tells the truth about it.
 fn dispatch(state: &ServerState, head: &RequestHead, body: &[u8], arrived: Instant) -> Response {
     let routed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         route(state, head, body, arrived)
@@ -448,17 +690,28 @@ fn dispatch(state: &ServerState, head: &RequestHead, body: &[u8], arrived: Insta
     match routed {
         Ok(resp) => resp,
         Err(_) => {
-            note_degraded(state);
+            note_degraded(state, "internal_panic");
             Response::error(500, "internal", "internal error; closing this connection").closing()
         }
     }
 }
 
+/// The value of one query-string parameter in the request target, if
+/// present. No percent-decoding — model names are registry labels, not
+/// arbitrary URLs.
+fn query_param<'a>(target: &'a str, key: &str) -> Option<&'a str> {
+    let (_, query) = target.split_once('?')?;
+    query.split('&').find_map(|pair| {
+        let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+        (k == key).then_some(v)
+    })
+}
+
 fn route(state: &ServerState, head: &RequestHead, body: &[u8], arrived: Instant) -> Response {
     match (head.method.as_str(), head.path()) {
         ("GET", "/healthz") => healthz_response(state),
-        ("GET", "/v1/models") => Response::json(&state.models_json),
-        ("POST", "/v1/predict") => predict(state, body, arrived),
+        ("GET", "/v1/models") => Response::json(&models_json(state)),
+        ("POST", "/v1/predict") => predict(state, head, body, arrived),
         (_, "/healthz") | (_, "/v1/models") => method_not_allowed("GET"),
         (_, "/v1/predict") => method_not_allowed("POST"),
         (method, path) => {
@@ -474,24 +727,59 @@ fn method_not_allowed(allow: &'static str) -> Response {
     resp
 }
 
-/// `POST /v1/predict`: lazy-extract `points`, validate shape against the
-/// served model, submit through the coalescer, answer the assignments.
+/// `GET /v1/models`: every registered model's static metadata merged with
+/// its live registry stats (artifact version, routed requests, hot-swaps).
+fn models_json(state: &ServerState) -> Json {
+    let models: Vec<Json> = state
+        .registry
+        .entries()
+        .iter()
+        .map(|entry| {
+            let unit = entry.unit();
+            let mut fields = unit.meta.as_obj().cloned().unwrap_or_default();
+            fields.insert("version".to_string(), Json::Num(entry.version() as f64));
+            fields.insert("requests".to_string(), Json::Num(entry.requests() as f64));
+            fields.insert("swaps".to_string(), Json::Num(entry.swaps() as f64));
+            Json::Obj(fields)
+        })
+        .collect();
+    Json::obj(vec![("models", Json::Arr(models))])
+}
+
+/// `POST /v1/predict`: resolve the model (`?model=`, default first),
+/// lazy-extract `points`, validate shape, submit through the model's
+/// coalescer, answer the assignments.
+///
 /// Sheds the request (503 + `Retry-After`) if the deadline budget was
-/// spent before admission; answers 500 if the request failed even when
-/// retried alone after poisoning a batch.
-fn predict(state: &ServerState, body: &[u8], arrived: Instant) -> Response {
-    if arrived.elapsed() >= state.request_deadline {
+/// spent before admission. Failure mapping: a scorer dependency outage
+/// (required shard down through every retry) answers 503
+/// `shard_unavailable`; a request that failed even retried alone answers
+/// 500 `prediction_failed`; a partial sharded answer (opt-in) carries
+/// `"partial": true` and the coverage fraction. Each failure records its
+/// structured cause in the health state.
+fn predict(state: &ServerState, head: &RequestHead, body: &[u8], arrived: Instant) -> Response {
+    if arrived.elapsed() >= state.cfg.request_deadline {
         state.shed.fetch_add(1, Ordering::SeqCst);
         return Response::error(
             503,
             "deadline_exceeded",
             &format!(
                 "request spent its {} ms deadline budget before admission",
-                state.request_deadline.as_millis()
+                state.cfg.request_deadline.as_millis()
             ),
         )
         .retry_after(1);
     }
+    let wanted = query_param(&head.target, "model");
+    let Some(entry) = state.registry.lookup(wanted) else {
+        return Response::error(
+            404,
+            "model_not_found",
+            &format!("no model named {:?} is registered (see /v1/models)", wanted.unwrap_or("")),
+        );
+    };
+    entry.note_request();
+    let unit = entry.unit();
     let raw = match lazy::fields(body, &["points"]) {
         Ok(fields) => fields.into_iter().next().flatten(),
         Err(e) => return Response::error(400, "invalid_json", &e.to_string()),
@@ -507,7 +795,7 @@ fn predict(state: &ServerState, body: &[u8], arrived: Instant) -> Response {
         Ok(points) => points,
         Err(e) => return Response::error(400, "invalid_points", &e.to_string()),
     };
-    let d = state.coalescer.engine().d();
+    let d = unit.coalescer.d();
     if points.rows > 0 && points.d != d {
         return Response::error(
             400,
@@ -515,20 +803,35 @@ fn predict(state: &ServerState, body: &[u8], arrived: Instant) -> Response {
             &format!("points have {} features per row but the served model expects {d}", points.d),
         );
     }
-    let assignments = match state.coalescer.submit(points.features) {
-        Ok(assignments) => assignments,
-        Err(msg) => {
-            // The engine panicked on this request even retried alone (or
+    let scored = match unit.coalescer.submit(points.features) {
+        Ok(scored) => scored,
+        Err(ScoreError::Unavailable(msg)) => {
+            // A required shard stayed down through every retry. The
+            // request is answerable again the moment the shard recovers —
+            // 503 + Retry-After, not 500.
+            note_degraded(state, "shard_unavailable");
+            return Response::error(503, "shard_unavailable", &msg).retry_after(1);
+        }
+        Err(ScoreError::Failed(msg)) => {
+            // The scorer panicked on this request even retried alone (or
             // it was aborted at shutdown). The fault is contained to this
             // request, but it IS an internal fault — surface it in health.
-            note_degraded(state);
+            note_degraded(state, "prediction_failed");
             return Response::error(500, "prediction_failed", &msg);
         }
     };
-    Response::json(&Json::obj(vec![
-        ("assignments", Json::arr_num(assignments.iter().map(|&a| a as f64))),
+    let mut fields = vec![
+        ("assignments", Json::arr_num(scored.assignments.iter().map(|&a| a as f64))),
         ("rows", Json::Num(points.rows as f64)),
-    ]))
+    ];
+    if let Some(coverage) = scored.coverage {
+        // Partial-policy answer: correct argmin over the covered centers,
+        // marked so the client can decide whether that is good enough.
+        note_degraded(state, "partial_results");
+        fields.push(("partial", Json::Bool(true)));
+        fields.push(("coverage", Json::Num(coverage)));
+    }
+    Response::json(&Json::obj(fields))
 }
 
 /// `GET /healthz`: the health state machine, truthfully.
@@ -537,7 +840,7 @@ fn predict(state: &ServerState, body: &[u8], arrived: Instant) -> Response {
 /// |-----------|------|-----------------------------------------|
 /// | starting  | 503  | bound but not yet accepting             |
 /// | ok        | 200  |                                         |
-/// | degraded  | 200  | still serving; fault window open        |
+/// | degraded  | 200  | still serving; `degraded_causes` says why |
 /// | draining  | 503  | `Retry-After` set; shutting down        |
 fn healthz_response(state: &ServerState) -> Response {
     let status = state.health_status();
@@ -553,11 +856,62 @@ fn healthz_response(state: &ServerState) -> Response {
     resp
 }
 
+/// Per-shard replica detail for `/healthz` (sharded units only).
+fn shards_json(unit: &ServingUnit) -> Option<Json> {
+    let set = unit.shard_set.as_ref()?;
+    let shards: Vec<Json> = set
+        .status()
+        .into_iter()
+        .map(|s| {
+            Json::obj(vec![
+                ("shard", Json::Num(s.shard as f64)),
+                (
+                    "centers",
+                    Json::arr_num([s.centers.0 as f64, s.centers.1 as f64]),
+                ),
+                (
+                    "replicas",
+                    Json::Arr(
+                        s.replicas
+                            .into_iter()
+                            .map(|r| {
+                                Json::obj(vec![
+                                    ("label", Json::Str(r.label)),
+                                    ("ejected", Json::Bool(r.ejected)),
+                                    (
+                                        "consecutive_failures",
+                                        Json::Num(r.consecutive_failures as f64),
+                                    ),
+                                    ("dispatches", Json::Num(r.dispatches as f64)),
+                                    ("failures", Json::Num(r.failures as f64)),
+                                    ("probes", Json::Num(r.probes as f64)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ])
+        })
+        .collect();
+    Some(Json::obj(vec![
+        ("plan", Json::arr_num(set.plan().bounds().iter().map(|&b| b as f64))),
+        ("ejection_events", Json::Num(set.ejection_events() as f64)),
+        ("readmissions", Json::Num(set.readmissions() as f64)),
+        ("detail", Json::Arr(shards)),
+    ]))
+}
+
 fn healthz_json(state: &ServerState, status: &str) -> Json {
-    let s = state.coalescer.stats();
-    Json::obj(vec![
+    let unit = state.registry.default_model().unit();
+    let s = unit.coalescer.stats();
+    let causes = state.live_causes();
+    let mut fields = vec![
         ("status", Json::Str(status.to_string())),
-        ("model", state.model_summary.clone()),
+        ("model", unit.summary.clone()),
+        (
+            "degraded_causes",
+            Json::Arr(causes.into_iter().map(|c| Json::Str(c.to_string())).collect()),
+        ),
         (
             "stats",
             Json::obj(vec![
@@ -574,5 +928,9 @@ fn healthz_json(state: &ServerState, status: &str) -> Json {
                 ),
             ]),
         ),
-    ])
+    ];
+    if let Some(shards) = shards_json(&unit) {
+        fields.push(("shards", shards));
+    }
+    Json::obj(fields)
 }

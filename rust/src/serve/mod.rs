@@ -16,15 +16,25 @@
 //!   (`POST /v1/predict`, `GET /v1/models`, `GET /healthz` — docs/API.md),
 //!   with [`coalesce`]'s request-coalescing admission queue and
 //!   [`wire`]'s bounded request framing (DESIGN.md §11, ADR-003).
+//! * [`shard`] — fault-tolerant sharded scoring (DESIGN.md §14): the
+//!   support set split into contiguous center ranges, each served by a
+//!   replica set (in-process or remote `mbkk shard-worker`) with
+//!   retry/backoff, ejection, probe re-admission, and a strict-vs-partial
+//!   merge that is bit-identical to the single-node engine.
+//! * [`replicate`] — log-suffix delta replication over the coefficient
+//!   log (kind-`delta` artifacts) and the hot-swap multi-model registry
+//!   behind `?model=` routing (DESIGN.md §14, ADR-006).
 //!
-//! The CLI's `fit` / `predict` / `serve-bench` / `serve` subcommands are
-//! thin drivers over these pieces plus
+//! The CLI's `fit` / `predict` / `serve-bench` / `serve` / `shard-worker`
+//! subcommands are thin drivers over these pieces plus
 //! `coordinator::experiment::fit_servable_model`.
 
 pub mod coalesce;
 pub mod engine;
 pub mod format;
 pub mod http;
+pub mod replicate;
+pub mod shard;
 pub mod wire;
 
 pub use engine::PredictEngine;

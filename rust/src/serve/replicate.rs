@@ -1,0 +1,793 @@
+//! Log-suffix delta replication and the hot-swap model registry
+//! (DESIGN.md §14, ADR-006).
+//!
+//! PR 5's generation-stamped coefficient log makes every center window a
+//! replayable sequence: `apply_update` only multiplies the global decay
+//! `scale`, pushes one entry at the back, and trims whole entries off
+//! the front. A replica that holds the stream state as of generation
+//! (iteration) `g` can therefore catch up to generation `g'` from a
+//! **delta**: the per-window dropped-front count plus appended entries,
+//! the store rows appended since `g`, and a handful of absolute scalars
+//! (`scale`, the learning-rate counters, the init point, the ⟨Ĉ,Ĉ⟩
+//! cache) — instead of re-shipping the whole O(k·(τ+b)) snapshot.
+//!
+//! The append/trim model has two deliberate escape hatches, both
+//! detected by content hashes captured in [`DeltaBase`]:
+//!
+//! * `CenterWindow` **renormalization** (scale underflow near 1e-150)
+//!   rewrites the raw coefficients in place;
+//! * the reservoir **compaction** rewrites store indices wholesale.
+//!
+//! Either rewrites history, so [`delta_from`] refuses with an error and
+//! the caller falls back to a full snapshot — a delta is an
+//! optimization, never a correctness risk. [`apply_delta`] validates the
+//! replica is exactly at the delta's base generation (and validates
+//! every index bound) before mutating anything, and the result is pinned
+//! byte-equal to the primary's `snapshot_bytes()` by
+//! `conformance_shard.rs`. On-disk, a delta travels as a kind-`delta`
+//! artifact in the CRC'd v2 container (`serve::format::delta_to_bytes`).
+//!
+//! The serving side rides the same machinery: [`ArtifactWatch`] detects
+//! artifact version bumps (cheap stat pre-check, then a payload CRC),
+//! and [`ModelRegistry`] holds one or more named served models with
+//! per-model request/swap counters, hot-swapping a rebuilt serving unit
+//! when its artifact changes — the coordinator keeps answering from the
+//! old unit until the new one is fully built.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::SystemTime;
+
+use crate::kkmeans::learning_rate::RateState;
+use crate::kkmeans::{CenterWindow, LearningRate, StreamingKernelKMeans};
+use crate::kernels::KernelFunction;
+use crate::util::crc32::crc32;
+use crate::util::error::{Context, Result};
+use crate::{bail, format_err};
+
+// ---------------------------------------------------------------------------
+// Delta replication over the coefficient log.
+
+/// Content hash of one window entry (points + raw coefficient bits).
+/// Any in-place rewrite — renormalization, compaction's index remap —
+/// changes it, which is exactly what invalidates a log-suffix delta.
+fn entry_hash(points: &[u32], raws: &[f64]) -> u64 {
+    let mut buf = Vec::with_capacity(points.len() * 4 + raws.len() * 8);
+    for p in points {
+        buf.extend_from_slice(&p.to_le_bytes());
+    }
+    for r in raws {
+        buf.extend_from_slice(&r.to_bits().to_le_bytes());
+    }
+    ((crc32(&buf) as u64) << 32) | (buf.len() as u64 & 0xFFFF_FFFF)
+}
+
+/// CRC of the first `n` store rows (the prefix a delta assumes frozen).
+fn store_prefix_crc(s: &StreamingKernelKMeans, n: usize) -> u32 {
+    let d = s.store.d;
+    let mut buf = Vec::with_capacity(n * d * 4);
+    for v in &s.store.features[..n * d] {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    crc32(&buf)
+}
+
+/// A primary's fingerprint of its own state at generation `g`: enough to
+/// later cut a delta against (entry hashes per window, store prefix CRC)
+/// without cloning any support array.
+#[derive(Debug, Clone)]
+pub struct DeltaBase {
+    kernel: KernelFunction,
+    d: usize,
+    k: usize,
+    tau: usize,
+    batch_size: usize,
+    rate_kind: LearningRate,
+    iterations: usize,
+    store_n: usize,
+    store_crc: u32,
+    /// Per-window entry hashes (`None` before initialization).
+    windows: Option<Vec<Vec<u64>>>,
+}
+
+impl DeltaBase {
+    /// The generation (batches consumed) this base was captured at.
+    pub fn generation(&self) -> usize {
+        self.iterations
+    }
+}
+
+/// Fingerprint the current state of `s` (cheap: hashes, no data copies
+/// beyond per-entry scratch).
+pub fn capture_base(s: &StreamingKernelKMeans) -> DeltaBase {
+    DeltaBase {
+        kernel: s.kernel,
+        d: s.store.d,
+        k: s.k,
+        tau: s.tau,
+        batch_size: s.batch_size,
+        rate_kind: s.rate.kind(),
+        iterations: s.iterations,
+        store_n: s.store.n,
+        store_crc: store_prefix_crc(s, s.store.n),
+        windows: s.windows.as_ref().map(|ws| {
+            ws.iter()
+                .map(|w| {
+                    w.state_view()
+                        .entries
+                        .iter()
+                        .map(|(pts, raws)| entry_hash(pts, raws))
+                        .collect()
+                })
+                .collect()
+        }),
+    }
+}
+
+/// One window's change since the base: trim the front, append at the
+/// back, then overwrite the absolute scalars.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WinDelta {
+    /// Entry count the base window had (apply-time identity check).
+    pub(crate) base_entries: usize,
+    /// Entries trimmed off the front since the base.
+    pub(crate) dropped: usize,
+    /// Entries appended at the back, with raw (pre-scale) coefficients.
+    pub(crate) appended: Vec<(Vec<u32>, Vec<f64>)>,
+    /// Absolute decay scale at the delta's generation.
+    pub(crate) scale: f64,
+    /// Absolute init point (index, raw weight), if still present.
+    pub(crate) init_point: Option<(u32, f64)>,
+    /// Absolute ⟨Ĉ,Ĉ⟩ cache, if maintained.
+    pub(crate) cc_cache: Option<f64>,
+    /// Absolute drift counter toward the next exact recomputation.
+    pub(crate) updates_since_exact: u32,
+}
+
+/// The log suffix between two generations of one streaming fit —
+/// everything a replica at the base generation needs to reach the
+/// primary's current state bit-for-bit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LogDelta {
+    pub(crate) kernel: KernelFunction,
+    pub(crate) d: usize,
+    pub(crate) k: usize,
+    pub(crate) tau: usize,
+    pub(crate) batch_size: usize,
+    pub(crate) rate_kind: LearningRate,
+    pub(crate) base_iterations: usize,
+    pub(crate) base_store_n: usize,
+    pub(crate) base_store_crc: u32,
+    pub(crate) iterations: usize,
+    pub(crate) store_n: usize,
+    /// Store rows appended since the base (`(store_n − base_store_n)·d`
+    /// values).
+    pub(crate) store_rows: Vec<f32>,
+    /// Absolute learning-rate counters (small: k values).
+    pub(crate) rate_counts: Vec<f64>,
+    /// Window count the base had (0 = uninitialized base).
+    pub(crate) base_windows: usize,
+    pub(crate) windows: Vec<WinDelta>,
+}
+
+impl LogDelta {
+    /// Generation the delta starts from.
+    pub fn base_generation(&self) -> usize {
+        self.base_iterations
+    }
+
+    /// Generation the delta brings a replica to.
+    pub fn generation(&self) -> usize {
+        self.iterations
+    }
+
+    /// Store rows this delta appends.
+    pub fn appended_rows(&self) -> usize {
+        self.store_n - self.base_store_n
+    }
+}
+
+/// Cut the delta from `base` (a fingerprint captured earlier from this
+/// same fit) to the current state of `s`.
+///
+/// Fails — telling the caller to fall back to a full snapshot — when
+/// history was rewritten since the base: a compaction remapped the
+/// store, or a renormalization rewrote raw coefficients. Both are
+/// detected by hash mismatch, never silently replicated.
+pub fn delta_from(s: &StreamingKernelKMeans, base: &DeltaBase) -> Result<LogDelta> {
+    if s.kernel != base.kernel
+        || s.store.d != base.d
+        || s.k != base.k
+        || s.tau != base.tau
+        || s.batch_size != base.batch_size
+        || s.rate.kind() != base.rate_kind
+    {
+        bail!("delta base belongs to a different fit configuration");
+    }
+    if s.iterations < base.iterations {
+        bail!(
+            "stream is at generation {} but the base was captured at {}",
+            s.iterations,
+            base.iterations
+        );
+    }
+    if s.store.n < base.store_n || store_prefix_crc(s, base.store_n) != base.store_crc {
+        bail!(
+            "store history rewritten since generation {} (compaction); \
+             full snapshot required",
+            base.iterations
+        );
+    }
+    let windows = match (&base.windows, &s.windows) {
+        (None, None) => Vec::new(),
+        (Some(_), None) => bail!("stream lost its windows since the base was captured"),
+        (base_hashes, Some(ws)) => {
+            let empty: Vec<Vec<u64>> = Vec::new();
+            let base_hashes = base_hashes.as_ref().unwrap_or(&empty);
+            if !base_hashes.is_empty() && base_hashes.len() != ws.len() {
+                bail!(
+                    "base has {} windows but the stream has {}",
+                    base_hashes.len(),
+                    ws.len()
+                );
+            }
+            let mut deltas = Vec::with_capacity(ws.len());
+            for (j, w) in ws.iter().enumerate() {
+                let view = w.state_view();
+                let cur_hashes: Vec<u64> =
+                    view.entries.iter().map(|(pts, raws)| entry_hash(pts, raws)).collect();
+                let bh: &[u64] = base_hashes.get(j).map(Vec::as_slice).unwrap_or(&[]);
+                let n = bh.len();
+                let m = cur_hashes.len();
+                // The window only trims the front and appends at the back,
+                // so the surviving base entries must be a suffix of the
+                // base matching a prefix of the current entries.
+                let dropped = (n.saturating_sub(m)..=n)
+                    .find(|&dr| bh[dr..] == cur_hashes[..n - dr])
+                    .ok_or_else(|| {
+                        format_err!(
+                            "window {j} history rewritten since generation {} \
+                             (renormalization); full snapshot required",
+                            base.iterations
+                        )
+                    })?;
+                let appended = view.entries[n - dropped..]
+                    .iter()
+                    .map(|(pts, raws)| (pts.to_vec(), raws.to_vec()))
+                    .collect();
+                deltas.push(WinDelta {
+                    base_entries: n,
+                    dropped,
+                    appended,
+                    scale: view.scale,
+                    init_point: view.init_point,
+                    cc_cache: view.cc_cache,
+                    updates_since_exact: view.updates_since_exact,
+                });
+            }
+            deltas
+        }
+    };
+    Ok(LogDelta {
+        kernel: s.kernel,
+        d: s.store.d,
+        k: s.k,
+        tau: s.tau,
+        batch_size: s.batch_size,
+        rate_kind: s.rate.kind(),
+        base_iterations: base.iterations,
+        base_store_n: base.store_n,
+        base_store_crc: base.store_crc,
+        iterations: s.iterations,
+        store_n: s.store.n,
+        store_rows: s.store.features[base.store_n * s.store.d..s.store.n * s.store.d].to_vec(),
+        rate_counts: s.rate.counts().to_vec(),
+        base_windows: base.windows.as_ref().map(Vec::len).unwrap_or(0),
+        windows,
+    })
+}
+
+/// Replay `delta` onto a replica that sits exactly at its base
+/// generation. All validation happens before any mutation, so a
+/// rejected delta leaves the replica untouched; an accepted one makes
+/// `replica.snapshot_bytes()` byte-equal to the primary's.
+pub fn apply_delta(replica: &mut StreamingKernelKMeans, delta: &LogDelta) -> Result<()> {
+    if replica.kernel != delta.kernel
+        || replica.store.d != delta.d
+        || replica.k != delta.k
+        || replica.tau != delta.tau
+        || replica.batch_size != delta.batch_size
+        || replica.rate.kind() != delta.rate_kind
+    {
+        bail!("delta belongs to a different fit configuration");
+    }
+    if replica.iterations != delta.base_iterations {
+        bail!(
+            "replica is at generation {} but the delta starts at {}",
+            replica.iterations,
+            delta.base_iterations
+        );
+    }
+    if replica.store.n != delta.base_store_n
+        || store_prefix_crc(replica, delta.base_store_n) != delta.base_store_crc
+    {
+        bail!("replica store diverges from the delta's base; full snapshot required");
+    }
+    if delta.rate_counts.len() != replica.k {
+        bail!(
+            "delta carries {} learning-rate counters for k={}",
+            delta.rate_counts.len(),
+            replica.k
+        );
+    }
+    if delta.store_rows.len() != (delta.store_n - delta.base_store_n) * delta.d {
+        bail!("delta's appended store rows do not match its claimed row count");
+    }
+    let base_windows = replica.windows.as_ref().map(Vec::len).unwrap_or(0);
+    if base_windows != delta.base_windows {
+        bail!(
+            "replica has {base_windows} windows but the delta's base had {}",
+            delta.base_windows
+        );
+    }
+    if base_windows > 0 && delta.windows.len() != base_windows {
+        bail!(
+            "delta carries {} window updates for {base_windows} windows",
+            delta.windows.len()
+        );
+    }
+    for (j, dw) in delta.windows.iter().enumerate() {
+        if let Some(ws) = &replica.windows {
+            let have = ws[j].state_view().entries.len();
+            if have != dw.base_entries {
+                bail!(
+                    "window {j} has {have} entries but the delta's base had {}",
+                    dw.base_entries
+                );
+            }
+        } else if dw.base_entries != 0 || dw.dropped != 0 {
+            bail!("delta window {j} trims entries from an uninitialized replica");
+        }
+        if dw.dropped > dw.base_entries {
+            bail!(
+                "delta window {j} drops {} of {} base entries",
+                dw.dropped,
+                dw.base_entries
+            );
+        }
+        for (pts, raws) in &dw.appended {
+            if pts.len() != raws.len() {
+                bail!("delta window {j} carries a ragged appended entry");
+            }
+            if let Some(&bad) = pts.iter().find(|&&p| (p as usize) >= delta.store_n) {
+                bail!(
+                    "delta window {j} references store row {bad} beyond {} rows",
+                    delta.store_n
+                );
+            }
+        }
+    }
+
+    // Validated — mutate. Store first (windows index into it).
+    replica.store.features.extend_from_slice(&delta.store_rows);
+    replica.store.n = delta.store_n;
+    replica.store.invalidate_caches();
+    if !delta.windows.is_empty() {
+        let old: Vec<CenterWindow> =
+            replica.windows.take().map(|ws| ws.into_iter().collect()).unwrap_or_default();
+        let mut rebuilt = Vec::with_capacity(delta.windows.len());
+        for (j, dw) in delta.windows.iter().enumerate() {
+            let mut st = match old.get(j) {
+                Some(w) => w.owned_state(),
+                // Uninitialized base: synthesize an empty state (validated
+                // above: nothing is trimmed from it).
+                None => CenterWindow::new(0, replica.tau).owned_state(),
+            };
+            if old.get(j).is_none() {
+                st.entries.clear();
+            }
+            st.entries.drain(..dw.dropped);
+            st.entries.extend(dw.appended.iter().cloned());
+            st.scale = dw.scale;
+            st.init_point = dw.init_point;
+            st.cc_cache = dw.cc_cache;
+            st.updates_since_exact = dw.updates_since_exact;
+            rebuilt.push(CenterWindow::from_state(st));
+        }
+        replica.windows = Some(rebuilt);
+    }
+    replica.rate = RateState::from_parts(delta.rate_kind, delta.rate_counts.clone());
+    replica.iterations = delta.iterations;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Artifact watching + the hot-swap model registry.
+
+/// Change detector for a model artifact on disk: a cheap `stat`
+/// (len + mtime) pre-check, then a full-content CRC to confirm — so a
+/// `touch` without a content change never triggers a swap, and a content
+/// change with an unchanged mtime (clock granularity) still does once
+/// the length moves.
+#[derive(Debug)]
+pub struct ArtifactWatch {
+    path: PathBuf,
+    len: u64,
+    mtime: Option<SystemTime>,
+    crc: u32,
+}
+
+impl ArtifactWatch {
+    /// Read `path` and fingerprint it; returns the watch plus the bytes
+    /// just read (so the caller builds its first serving unit from the
+    /// same content the fingerprint describes).
+    pub fn new(path: &Path) -> Result<(ArtifactWatch, Vec<u8>)> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading model artifact {}", path.display()))?;
+        let meta = std::fs::metadata(path)
+            .with_context(|| format!("stat-ing model artifact {}", path.display()))?;
+        Ok((
+            ArtifactWatch {
+                path: path.to_path_buf(),
+                len: meta.len(),
+                mtime: meta.modified().ok(),
+                crc: crc32(&bytes),
+            },
+            bytes,
+        ))
+    }
+
+    /// The watched path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Content CRC of the last accepted version (the artifact version
+    /// number reported in `/v1/models`).
+    pub fn version(&self) -> u32 {
+        self.crc
+    }
+
+    /// Check for a content change. `Ok(None)` = unchanged; `Ok(Some)` =
+    /// changed, with the new bytes (the fingerprint now describes them).
+    /// Errors (artifact mid-rewrite, deleted) are returned for logging —
+    /// the caller keeps serving the old version.
+    pub fn poll(&mut self) -> std::result::Result<Option<Vec<u8>>, String> {
+        let meta = std::fs::metadata(&self.path)
+            .map_err(|e| format!("stat-ing {}: {e}", self.path.display()))?;
+        if meta.len() == self.len && meta.modified().ok() == self.mtime {
+            return Ok(None);
+        }
+        let bytes = std::fs::read(&self.path)
+            .map_err(|e| format!("reading {}: {e}", self.path.display()))?;
+        let crc = crc32(&bytes);
+        self.len = meta.len();
+        self.mtime = meta.modified().ok();
+        if crc == self.crc {
+            return Ok(None);
+        }
+        self.crc = crc;
+        Ok(Some(bytes))
+    }
+}
+
+/// One served model: its current serving unit (engine/shard set +
+/// coalescer, opaque to this module), version, optional artifact watch,
+/// and per-model counters.
+pub struct RegisteredModel<T> {
+    name: String,
+    unit: RwLock<Arc<T>>,
+    version: AtomicU64,
+    watch: Mutex<Option<ArtifactWatch>>,
+    requests: AtomicU64,
+    swaps: AtomicU64,
+}
+
+impl<T> RegisteredModel<T> {
+    /// The model's registry name (`?model=` routing key).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The current serving unit (an `Arc` clone — in-flight requests on
+    /// the old unit finish on it even across a swap).
+    pub fn unit(&self) -> Arc<T> {
+        Arc::clone(&self.unit.read().unwrap_or_else(|p| p.into_inner()))
+    }
+
+    /// Current artifact version (content CRC; 0 for fit-on-the-fly
+    /// models with no artifact).
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Relaxed)
+    }
+
+    /// Count one predict request routed to this model.
+    pub fn note_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Requests routed to this model so far.
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    /// Hot-swaps performed so far.
+    pub fn swaps(&self) -> u64 {
+        self.swaps.load(Ordering::Relaxed)
+    }
+
+    fn swap(&self, unit: T, version: u64) {
+        *self.unit.write().unwrap_or_else(|p| p.into_inner()) = Arc::new(unit);
+        self.version.store(version, Ordering::Relaxed);
+        self.swaps.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// The set of models a coordinator serves: name-addressable, first entry
+/// is the default, each entry hot-swappable from its artifact.
+pub struct ModelRegistry<T> {
+    entries: Vec<Arc<RegisteredModel<T>>>,
+}
+
+impl<T> ModelRegistry<T> {
+    /// An empty registry (the server registers at least one model before
+    /// binding).
+    pub fn new() -> ModelRegistry<T> {
+        ModelRegistry { entries: Vec::new() }
+    }
+
+    /// Register a model. The first registration becomes the default for
+    /// requests that don't name one.
+    pub fn register(
+        &mut self,
+        name: &str,
+        unit: T,
+        version: u64,
+        watch: Option<ArtifactWatch>,
+    ) -> Result<()> {
+        if self.entries.iter().any(|e| e.name == name) {
+            bail!("a model named {name:?} is already registered");
+        }
+        self.entries.push(Arc::new(RegisteredModel {
+            name: name.to_string(),
+            unit: RwLock::new(Arc::new(unit)),
+            version: AtomicU64::new(version),
+            watch: Mutex::new(watch),
+            requests: AtomicU64::new(0),
+            swaps: AtomicU64::new(0),
+        }));
+        Ok(())
+    }
+
+    /// Look a model up by name; `None` asks for the default (first).
+    pub fn lookup(&self, name: Option<&str>) -> Option<&Arc<RegisteredModel<T>>> {
+        match name {
+            None => self.entries.first(),
+            Some(n) => self.entries.iter().find(|e| e.name == n),
+        }
+    }
+
+    /// The default (first-registered) model.
+    pub fn default_model(&self) -> &Arc<RegisteredModel<T>> {
+        self.entries.first().expect("registry holds at least one model")
+    }
+
+    /// All registered models, registration order.
+    pub fn entries(&self) -> &[Arc<RegisteredModel<T>>] {
+        &self.entries
+    }
+
+    /// Poll every watched artifact; on a version bump, `rebuild` the
+    /// serving unit from the new bytes and hot-swap it. A poll or
+    /// rebuild failure (artifact mid-rewrite, corrupt) keeps the old
+    /// unit serving and is reported via the returned list. Returns
+    /// `(swapped, errors)`.
+    pub fn refresh<F>(&self, rebuild: F) -> (usize, Vec<String>)
+    where
+        F: Fn(&str, &[u8]) -> std::result::Result<T, String>,
+    {
+        let mut swapped = 0;
+        let mut errors = Vec::new();
+        for entry in &self.entries {
+            let mut watch = entry.watch.lock().unwrap_or_else(|p| p.into_inner());
+            let Some(w) = watch.as_mut() else { continue };
+            match w.poll() {
+                Ok(None) => {}
+                Ok(Some(bytes)) => match rebuild(&entry.name, &bytes) {
+                    Ok(unit) => {
+                        entry.swap(unit, w.version() as u64);
+                        swapped += 1;
+                    }
+                    Err(e) => errors.push(format!(
+                        "model {:?}: rebuilding from {} failed ({e}); keeping the \
+                         previous version",
+                        entry.name,
+                        w.path().display()
+                    )),
+                },
+                Err(e) => errors.push(format!("model {:?}: {e}", entry.name)),
+            }
+        }
+        (swapped, errors)
+    }
+}
+
+impl<T> Default for ModelRegistry<T> {
+    fn default() -> Self {
+        ModelRegistry::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn stream_for(seed: u64) -> (StreamingKernelKMeans, Rng) {
+        let s = StreamingKernelKMeans::new(
+            KernelFunction::Gaussian { kappa: 2.0 },
+            4,
+            3,
+            8,
+            9,
+            LearningRate::Sklearn,
+        );
+        (s, Rng::seeded(seed))
+    }
+
+    fn batch(rng: &mut Rng, rows: usize, d: usize) -> Vec<f32> {
+        (0..rows * d).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn delta_replay_matches_full_snapshot() {
+        let (mut primary, mut rng) = stream_for(5);
+        for _ in 0..6 {
+            let b = batch(&mut rng, 8, 4);
+            primary.partial_fit(&b, &mut rng);
+        }
+        // Replica = full snapshot at generation g.
+        let mut replica = StreamingKernelKMeans::resume_bytes(&primary.snapshot_bytes()).unwrap();
+        let base = capture_base(&primary);
+        assert_eq!(base.generation(), primary.iterations);
+        // Primary advances; RNG is only drawn before the first batch, so
+        // the replica needs no RNG coordination.
+        for _ in 0..5 {
+            let b = batch(&mut rng, 8, 4);
+            primary.partial_fit(&b, &mut rng);
+        }
+        let delta = delta_from(&primary, &base).unwrap();
+        assert_eq!(delta.base_generation(), base.generation());
+        assert_eq!(delta.generation(), primary.iterations);
+        assert!(delta.appended_rows() > 0);
+        apply_delta(&mut replica, &delta).unwrap();
+        assert_eq!(
+            replica.snapshot_bytes(),
+            primary.snapshot_bytes(),
+            "delta replay must reproduce the primary snapshot byte-for-byte"
+        );
+    }
+
+    #[test]
+    fn delta_from_uninitialized_base() {
+        let (mut primary, mut rng) = stream_for(11);
+        let mut replica = StreamingKernelKMeans::resume_bytes(&primary.snapshot_bytes()).unwrap();
+        let base = capture_base(&primary);
+        for _ in 0..4 {
+            let b = batch(&mut rng, 6, 4);
+            primary.partial_fit(&b, &mut rng);
+        }
+        let delta = delta_from(&primary, &base).unwrap();
+        apply_delta(&mut replica, &delta).unwrap();
+        assert_eq!(replica.snapshot_bytes(), primary.snapshot_bytes());
+    }
+
+    #[test]
+    fn stale_or_mismatched_replica_is_rejected_untouched() {
+        let (mut primary, mut rng) = stream_for(23);
+        for _ in 0..4 {
+            let b = batch(&mut rng, 8, 4);
+            primary.partial_fit(&b, &mut rng);
+        }
+        let base = capture_base(&primary);
+        let b = batch(&mut rng, 8, 4);
+        primary.partial_fit(&b, &mut rng);
+        let delta = delta_from(&primary, &base).unwrap();
+        // A replica one generation behind the base must refuse the delta…
+        let (mut wrong, mut rng2) = stream_for(23);
+        for _ in 0..3 {
+            let b = batch(&mut rng2, 8, 4);
+            wrong.partial_fit(&b, &mut rng2);
+        }
+        let before = wrong.snapshot_bytes();
+        assert!(apply_delta(&mut wrong, &delta).is_err());
+        // …and be left byte-identical (validation precedes mutation).
+        assert_eq!(wrong.snapshot_bytes(), before);
+    }
+
+    #[test]
+    fn compaction_invalidates_the_base() {
+        let (mut primary, mut rng) = stream_for(31);
+        for _ in 0..3 {
+            let b = batch(&mut rng, 8, 4);
+            primary.partial_fit(&b, &mut rng);
+        }
+        let base = capture_base(&primary);
+        // Drive far enough that the reservoir compacts (store shrink or
+        // remap) — the prefix CRC then refuses the delta.
+        for _ in 0..120 {
+            let b = batch(&mut rng, 16, 4);
+            primary.partial_fit(&b, &mut rng);
+        }
+        if primary.stored_rows() >= base.store_n
+            && store_prefix_crc(&primary, base.store_n) == base.store_crc
+        {
+            // Compaction did not trigger at this scale — the delta must
+            // then simply work.
+            let delta = delta_from(&primary, &base).unwrap();
+            assert_eq!(delta.generation(), primary.iterations);
+        } else {
+            assert!(delta_from(&primary, &base).is_err());
+        }
+    }
+
+    #[test]
+    fn artifact_watch_detects_content_changes_only() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("mbkk_watch_test_{}.bin", std::process::id()));
+        std::fs::write(&path, b"version-one").unwrap();
+        let (mut watch, bytes) = ArtifactWatch::new(&path).unwrap();
+        assert_eq!(bytes, b"version-one");
+        assert_eq!(watch.poll().unwrap(), None, "unchanged file must not trigger");
+        std::fs::write(&path, b"version-TWO!").unwrap();
+        assert_eq!(watch.poll().unwrap().as_deref(), Some(b"version-TWO!".as_slice()));
+        assert_eq!(watch.poll().unwrap(), None);
+        std::fs::remove_file(&path).unwrap();
+        assert!(watch.poll().is_err(), "a deleted artifact reports an error");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn registry_routes_counts_and_hot_swaps() {
+        let mut reg: ModelRegistry<String> = ModelRegistry::new();
+        reg.register("a", "unit-a".to_string(), 1, None).unwrap();
+        reg.register("b", "unit-b".to_string(), 2, None).unwrap();
+        assert!(reg.register("a", "dup".to_string(), 3, None).is_err());
+        assert_eq!(*reg.lookup(None).unwrap().unit(), "unit-a");
+        assert_eq!(*reg.lookup(Some("b")).unwrap().unit(), "unit-b");
+        assert!(reg.lookup(Some("nope")).is_none());
+        let a = reg.lookup(Some("a")).unwrap();
+        a.note_request();
+        a.note_request();
+        assert_eq!(a.requests(), 2);
+        assert_eq!(reg.lookup(Some("b")).unwrap().requests(), 0);
+        // No watches → refresh is a no-op.
+        let (swapped, errors) = reg.refresh(|_, _| Err("unused".to_string()));
+        assert_eq!((swapped, errors.len()), (0, 0));
+        // Watched entry hot-swaps on a version bump.
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("mbkk_registry_test_{}.bin", std::process::id()));
+        std::fs::write(&path, b"v1").unwrap();
+        let (watch, _bytes) = ArtifactWatch::new(&path).unwrap();
+        let mut reg: ModelRegistry<String> = ModelRegistry::new();
+        reg.register("m", "built-from-v1".to_string(), watch.version() as u64, Some(watch))
+            .unwrap();
+        std::fs::write(&path, b"v2-longer").unwrap();
+        let (swapped, errors) = reg.refresh(|name, bytes| {
+            assert_eq!(name, "m");
+            Ok(format!("built-from-{}", String::from_utf8_lossy(bytes)))
+        });
+        assert_eq!((swapped, errors.len()), (1, 0));
+        let m = reg.lookup(Some("m")).unwrap();
+        assert_eq!(*m.unit(), "built-from-v2-longer");
+        assert_eq!(m.swaps(), 1);
+        // A rebuild failure keeps the old unit and reports the error.
+        std::fs::write(&path, b"v3-corrupt!").unwrap();
+        let (swapped, errors) = reg.refresh(|_, _| Err("bad magic".to_string()));
+        assert_eq!(swapped, 0);
+        assert_eq!(errors.len(), 1);
+        assert_eq!(*reg.lookup(Some("m")).unwrap().unit(), "built-from-v2-longer");
+        let _ = std::fs::remove_file(&path);
+    }
+}

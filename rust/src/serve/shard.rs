@@ -1,0 +1,1577 @@
+//! Sharded scoring: support-set partitions, replica failover, and the
+//! coordinator-side merge (DESIGN.md §14, ADR-006).
+//!
+//! The frozen model's per-center support sets bound single-node serving:
+//! every query pays O(k·(τ+b)) kernel evaluations against memory one
+//! machine must hold. This module splits the centers into S contiguous
+//! shards ([`ShardPlan`]), runs each shard behind one or more replicas
+//! ([`ShardWorker`]: in-process [`LocalShardWorker`] over a sub-model
+//! engine, or [`HttpShardWorker`] speaking a CRC-framed binary protocol
+//! to an `mbkk shard-worker` process), and merges the per-shard distance
+//! panels back into full k-wide rows in **fixed shard order**.
+//!
+//! **Bit-identity.** The split is by whole centers, so a shard's
+//! sub-engine runs exactly the same per-center contraction chains the
+//! full engine would (each support row's dot product is an independent
+//! sequential chain; panel packing never changes a value). The merge is
+//! pure column placement — no floating-point arithmetic crosses shards —
+//! and the final argmin replays the engine's first-minimum `total_cmp`
+//! scan. Merged assignments are therefore byte-equal to single-node
+//! [`PredictEngine::predict_batch`] for any S; `conformance_shard.rs`
+//! pins it for S ∈ {1, 2, 3, 8}.
+//!
+//! **Robustness.** Dispatch fans out one thread per shard; each shard
+//! tries its replicas in order with per-round exponential backoff and
+//! deterministic jitter. A replica that fails [`ShardSetConfig::eject_after`]
+//! consecutive attempts is ejected (skipped by dispatch) until a
+//! background probe re-admits it; a fully-ejected shard still gets a
+//! hail-mary pass, because answering beats bookkeeping purity. Missing
+//! shards follow the strict-vs-partial policy: by default the batch
+//! fails `Unavailable` (the HTTP layer answers 503 `shard_unavailable`);
+//! with `partial_results` the merge fills missing columns with `+∞`,
+//! answers from the surviving centers, and reports the coverage
+//! fraction so clients see exactly how degraded the answer is.
+//! Failpoints `shard.dispatch`, `shard.merge`, and `replica.probe`
+//! inject faults at each boundary (`util::failpoint`).
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::coalesce::{ScoreError, Scored, Scorer};
+use super::engine::PredictEngine;
+use super::wire::{self, Response, WireError};
+use crate::kkmeans::KernelKMeansModel;
+use crate::util::crc32::crc32;
+use crate::util::error::{Context, Result};
+use crate::util::failpoint;
+use crate::util::simd::NumericsMode;
+
+/// Magic prefixes of the binary shard protocol bodies.
+const QUERY_MAGIC: &[u8; 4] = b"MBKQ";
+const PARTIAL_MAGIC: &[u8; 4] = b"MBKR";
+/// Body cap for the shard-worker server (a query batch of
+/// `max_batch_rows`·d f32s sits far below this).
+const WORKER_MAX_BODY: usize = 64 * 1024 * 1024;
+
+/// Deterministic contiguous partition of `k` centers into `S` shards.
+///
+/// Shard `i` owns centers `[i·k/S, (i+1)·k/S)` — the same split for the
+/// same `(k, S)` on every node, so a plan recorded in a model artifact's
+/// header reproduces bit-identically at load time. Shards may be empty
+/// when S > k; empty shards own no centers and never affect coverage.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// `S + 1` boundaries: `bounds[i]..bounds[i+1]` is shard i's range.
+    bounds: Vec<usize>,
+}
+
+impl ShardPlan {
+    /// The canonical plan: `S` near-equal contiguous ranges over `k`
+    /// centers (`bounds[i] = ⌊i·k/S⌋`).
+    pub fn contiguous(k: usize, shards: usize) -> ShardPlan {
+        let s = shards.max(1);
+        ShardPlan { bounds: (0..=s).map(|i| i * k / s).collect() }
+    }
+
+    /// Rebuild a plan from recorded boundaries, validating shape.
+    pub fn from_bounds(bounds: Vec<usize>, k: usize) -> Result<ShardPlan> {
+        if bounds.len() < 2 || bounds[0] != 0 || *bounds.last().unwrap() != k {
+            bail!("shard plan bounds must run from 0 to k={k}: {bounds:?}");
+        }
+        if bounds.windows(2).any(|w| w[0] > w[1]) {
+            bail!("shard plan bounds must be non-decreasing: {bounds:?}");
+        }
+        Ok(ShardPlan { bounds })
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    /// Total number of centers the plan covers.
+    pub fn k(&self) -> usize {
+        *self.bounds.last().unwrap()
+    }
+
+    /// Shard `i`'s center range `[lo, hi)`.
+    pub fn range(&self, i: usize) -> (usize, usize) {
+        (self.bounds[i], self.bounds[i + 1])
+    }
+
+    /// The raw boundaries (recorded into artifact headers by
+    /// `serve::format`).
+    pub fn bounds(&self) -> &[usize] {
+        &self.bounds
+    }
+}
+
+/// One shard's answer for a query batch: the distance panel of its
+/// centers, `nq` rows by `k_local` columns.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardPartial {
+    /// First center index this shard owns.
+    pub center_lo: usize,
+    /// Number of centers in the panel.
+    pub k_local: usize,
+    /// Row-major `nq × k_local` squared distances.
+    pub dist: Vec<f64>,
+}
+
+/// One replica of one shard: anything that can turn a query batch into
+/// its shard's distance panel. Implementations must be safe to call from
+/// concurrent dispatch threads.
+pub trait ShardWorker: Send + Sync {
+    /// Human-readable replica label (`/healthz` per-shard detail).
+    fn label(&self) -> String;
+    /// The center range `[lo, hi)` this worker serves.
+    fn center_range(&self) -> (usize, usize);
+    /// Compute the shard's distance panel for `nq` rows of `d` features.
+    /// An `Err` is a *replica* failure (timeout, transport, shape) — the
+    /// coordinator retries, fails over, and tracks replica health on it.
+    fn distances(&self, rows: &[f32], nq: usize) -> std::result::Result<ShardPartial, String>;
+    /// Cheap liveness check used by the background prober to re-admit an
+    /// ejected replica.
+    fn probe(&self) -> std::result::Result<(), String>;
+}
+
+/// In-process replica: a [`PredictEngine`] over the sub-model holding
+/// only this shard's centers (`None` for an empty shard).
+pub struct LocalShardWorker {
+    engine: Option<PredictEngine>,
+    lo: usize,
+    hi: usize,
+    label: String,
+}
+
+impl LocalShardWorker {
+    /// Slice `model` down to shard `i` of `plan` and build its engine.
+    pub fn new(
+        model: &KernelKMeansModel,
+        plan: &ShardPlan,
+        shard: usize,
+        mode: NumericsMode,
+        label: &str,
+    ) -> LocalShardWorker {
+        let (lo, hi) = plan.range(shard);
+        // Whole-center slicing: the sub-engine runs the exact per-center
+        // contraction chains of the full engine (bit-identity argument in
+        // the module docs).
+        let engine = (hi > lo).then(|| {
+            let sub = KernelKMeansModel {
+                kernel: model.kernel,
+                d: model.d,
+                centers: model.centers[lo..hi].to_vec(),
+                cc: model.cc[lo..hi].to_vec(),
+            };
+            PredictEngine::with_mode(&sub, mode)
+        });
+        LocalShardWorker { engine, lo, hi, label: label.to_string() }
+    }
+}
+
+impl ShardWorker for LocalShardWorker {
+    fn label(&self) -> String {
+        self.label.clone()
+    }
+
+    fn center_range(&self) -> (usize, usize) {
+        (self.lo, self.hi)
+    }
+
+    fn distances(&self, rows: &[f32], nq: usize) -> std::result::Result<ShardPartial, String> {
+        let k_local = self.hi - self.lo;
+        let dist = match &self.engine {
+            Some(engine) => engine.distances_batch(rows),
+            None => Vec::new(),
+        };
+        debug_assert_eq!(dist.len(), nq * k_local);
+        Ok(ShardPartial { center_lo: self.lo, k_local, dist })
+    }
+
+    fn probe(&self) -> std::result::Result<(), String> {
+        Ok(())
+    }
+}
+
+/// Knobs for dispatch robustness and the merge policy.
+#[derive(Debug, Clone)]
+pub struct ShardSetConfig {
+    /// Merge policy for missing shards: `false` fails the batch
+    /// (`Unavailable` → 503 `shard_unavailable`); `true` answers from the
+    /// covered centers with a coverage fraction.
+    pub partial_results: bool,
+    /// Dispatch rounds per shard (each round tries every live replica).
+    pub attempts: u32,
+    /// Base backoff between rounds; round r waits `backoff · 2^(r−1)`
+    /// plus deterministic jitter, capped at `max_backoff`.
+    pub backoff: Duration,
+    /// Backoff ceiling.
+    pub max_backoff: Duration,
+    /// Consecutive failures after which a replica is ejected from
+    /// dispatch until a probe re-admits it.
+    pub eject_after: u32,
+}
+
+impl Default for ShardSetConfig {
+    fn default() -> Self {
+        ShardSetConfig {
+            partial_results: false,
+            attempts: 2,
+            backoff: Duration::from_millis(5),
+            max_backoff: Duration::from_millis(200),
+            eject_after: 3,
+        }
+    }
+}
+
+/// One replica plus its health bookkeeping.
+struct Replica {
+    worker: Box<dyn ShardWorker>,
+    ejected: AtomicBool,
+    consecutive: AtomicU32,
+    dispatches: AtomicU64,
+    failures: AtomicU64,
+    probes: AtomicU64,
+}
+
+impl Replica {
+    fn new(worker: Box<dyn ShardWorker>) -> Replica {
+        Replica {
+            worker,
+            ejected: AtomicBool::new(false),
+            consecutive: AtomicU32::new(0),
+            dispatches: AtomicU64::new(0),
+            failures: AtomicU64::new(0),
+            probes: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Health snapshot of one replica (`/healthz` per-shard detail).
+#[derive(Debug, Clone)]
+pub struct ReplicaStatus {
+    /// Replica label.
+    pub label: String,
+    /// Currently ejected from dispatch.
+    pub ejected: bool,
+    /// Consecutive failures so far (resets on success).
+    pub consecutive_failures: u32,
+    /// Total dispatch attempts routed to this replica.
+    pub dispatches: u64,
+    /// Total failed attempts.
+    pub failures: u64,
+    /// Total probe attempts while ejected.
+    pub probes: u64,
+}
+
+/// Health snapshot of one shard.
+#[derive(Debug, Clone)]
+pub struct ShardStatus {
+    /// Shard index.
+    pub shard: usize,
+    /// Center range `[lo, hi)`.
+    pub centers: (usize, usize),
+    /// Every replica's state, in dispatch order.
+    pub replicas: Vec<ReplicaStatus>,
+}
+
+/// A merged, possibly partial, batch answer.
+#[derive(Debug, Clone)]
+pub struct ShardScore {
+    /// One assignment per query row.
+    pub assignments: Vec<usize>,
+    /// Fraction of centers that answered (1.0 = complete, bit-identical
+    /// to single-node).
+    pub coverage: f64,
+    /// Indices of shards that failed this batch (empty when complete).
+    pub missing: Vec<usize>,
+}
+
+/// Batch-level failure of the shard set.
+#[derive(Debug, Clone)]
+pub enum ShardError {
+    /// One or more required shards did not answer (strict mode), or no
+    /// shard answered at all (any mode).
+    Unavailable(String),
+}
+
+/// Best-effort text of a caught panic payload.
+fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
+    p.downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| p.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "opaque panic payload".to_string())
+}
+
+/// The coordinator-side replica fleet: S shards, each with one or more
+/// replicas, dispatched in parallel and merged in fixed shard order.
+pub struct ShardSet {
+    d: usize,
+    k: usize,
+    plan: ShardPlan,
+    shards: Vec<Vec<Replica>>,
+    cfg: ShardSetConfig,
+    /// Monotone dispatch sequence feeding the deterministic jitter hash.
+    jitter_seq: AtomicU64,
+    ejection_events: AtomicU64,
+    readmissions: AtomicU64,
+}
+
+impl ShardSet {
+    /// Build from explicit per-shard replica lists (`workers[i]` serves
+    /// shard i). Every non-empty shard needs at least one replica.
+    pub fn from_workers(
+        d: usize,
+        plan: ShardPlan,
+        workers: Vec<Vec<Box<dyn ShardWorker>>>,
+        cfg: ShardSetConfig,
+    ) -> Result<ShardSet> {
+        if workers.len() != plan.shards() {
+            bail!(
+                "shard set needs one replica list per shard: got {} lists for {} shards",
+                workers.len(),
+                plan.shards()
+            );
+        }
+        for (i, reps) in workers.iter().enumerate() {
+            let (lo, hi) = plan.range(i);
+            if hi > lo && reps.is_empty() {
+                bail!("shard {i} owns centers {lo}..{hi} but has no replicas");
+            }
+            for rep in reps {
+                if rep.center_range() != (lo, hi) {
+                    bail!(
+                        "replica {} serves centers {:?} but shard {i} owns {lo}..{hi}",
+                        rep.label(),
+                        rep.center_range()
+                    );
+                }
+            }
+        }
+        let k = plan.k();
+        let shards = workers.into_iter().map(|reps| reps.into_iter().map(Replica::new).collect()).collect();
+        Ok(ShardSet {
+            d,
+            k,
+            plan,
+            shards,
+            cfg: ShardSetConfig { attempts: cfg.attempts.max(1), eject_after: cfg.eject_after.max(1), ..cfg },
+            jitter_seq: AtomicU64::new(0),
+            ejection_events: AtomicU64::new(0),
+            readmissions: AtomicU64::new(0),
+        })
+    }
+
+    /// All-in-process fleet: `replicas` [`LocalShardWorker`]s per shard.
+    pub fn local(
+        model: &KernelKMeansModel,
+        plan: ShardPlan,
+        replicas: usize,
+        mode: NumericsMode,
+        cfg: ShardSetConfig,
+    ) -> Result<ShardSet> {
+        let r = replicas.max(1);
+        let workers = (0..plan.shards())
+            .map(|i| {
+                (0..r)
+                    .map(|j| {
+                        Box::new(LocalShardWorker::new(
+                            model,
+                            &plan,
+                            i,
+                            mode,
+                            &format!("local:{i}.{j}"),
+                        )) as Box<dyn ShardWorker>
+                    })
+                    .collect()
+            })
+            .collect();
+        ShardSet::from_workers(model.d, plan, workers, cfg)
+    }
+
+    /// Feature dimension of the served model.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Number of centers across all shards.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// The partition.
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    /// Total replica-ejection events so far.
+    pub fn ejection_events(&self) -> u64 {
+        self.ejection_events.load(Ordering::Relaxed)
+    }
+
+    /// Total re-admissions (probe- or dispatch-recovered).
+    pub fn readmissions(&self) -> u64 {
+        self.readmissions.load(Ordering::Relaxed)
+    }
+
+    /// Whether any replica is currently ejected (feeds the degraded
+    /// health overlay).
+    pub fn any_ejected(&self) -> bool {
+        self.shards.iter().flatten().any(|r| r.ejected.load(Ordering::Relaxed))
+    }
+
+    /// Per-shard, per-replica health snapshot.
+    pub fn status(&self) -> Vec<ShardStatus> {
+        self.shards
+            .iter()
+            .enumerate()
+            .map(|(i, reps)| ShardStatus {
+                shard: i,
+                centers: self.plan.range(i),
+                replicas: reps
+                    .iter()
+                    .map(|r| ReplicaStatus {
+                        label: r.worker.label(),
+                        ejected: r.ejected.load(Ordering::Relaxed),
+                        consecutive_failures: r.consecutive.load(Ordering::Relaxed),
+                        dispatches: r.dispatches.load(Ordering::Relaxed),
+                        failures: r.failures.load(Ordering::Relaxed),
+                        probes: r.probes.load(Ordering::Relaxed),
+                    })
+                    .collect(),
+            })
+            .collect()
+    }
+
+    /// Probe every ejected replica once (the `replica.probe` failpoint
+    /// can fail or panic the probe; a panic is contained here). Returns
+    /// how many replicas were re-admitted.
+    pub fn probe_ejected(&self) -> usize {
+        let mut readmitted = 0;
+        for (si, reps) in self.shards.iter().enumerate() {
+            for rep in reps {
+                if !rep.ejected.load(Ordering::Relaxed) {
+                    continue;
+                }
+                rep.probes.fetch_add(1, Ordering::Relaxed);
+                let outcome = catch_unwind(AssertUnwindSafe(|| -> std::result::Result<(), String> {
+                    if failpoint::armed() {
+                        if let Some(fault) = failpoint::eval("replica.probe") {
+                            match fault {
+                                failpoint::Fault::Panic => {
+                                    panic!("failpoint replica.probe: injected panic")
+                                }
+                                failpoint::Fault::Err(m) => {
+                                    return Err(format!("failpoint replica.probe: {m}"))
+                                }
+                            }
+                        }
+                    }
+                    rep.worker.probe()
+                }));
+                if matches!(outcome, Ok(Ok(()))) {
+                    rep.ejected.store(false, Ordering::Relaxed);
+                    rep.consecutive.store(0, Ordering::Relaxed);
+                    self.readmissions.fetch_add(1, Ordering::Relaxed);
+                    readmitted += 1;
+                    eprintln!(
+                        "mbkk-serve: shard {si} replica {} re-admitted by probe",
+                        rep.worker.label()
+                    );
+                }
+            }
+        }
+        readmitted
+    }
+
+    /// Deterministic backoff + jitter before dispatch round `round` (≥1).
+    /// Jitter hashes a monotone sequence number — reproducible across
+    /// runs, uncorrelated across shards, no wall-clock entropy.
+    fn backoff_delay(&self, round: u32) -> Duration {
+        let base = self.cfg.backoff.saturating_mul(1u32 << (round - 1).min(16));
+        let base = base.min(self.cfg.max_backoff);
+        let seq = self.jitter_seq.fetch_add(1, Ordering::Relaxed);
+        let hash = seq.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 33;
+        let span_us = (base.as_micros() as u64 / 2).max(1);
+        base + Duration::from_micros(hash % span_us)
+    }
+
+    /// One guarded attempt against one replica, with health bookkeeping.
+    /// The `shard.dispatch` failpoint fires per attempt; a panic (organic
+    /// or injected) is contained and counts as a replica failure.
+    fn attempt(
+        &self,
+        si: usize,
+        rep: &Replica,
+        rows: &[f32],
+        nq: usize,
+    ) -> std::result::Result<ShardPartial, String> {
+        rep.dispatches.fetch_add(1, Ordering::Relaxed);
+        let caught = catch_unwind(AssertUnwindSafe(|| -> std::result::Result<ShardPartial, String> {
+            if failpoint::armed() {
+                if let Some(fault) = failpoint::eval("shard.dispatch") {
+                    match fault {
+                        failpoint::Fault::Panic => {
+                            panic!("failpoint shard.dispatch: injected panic")
+                        }
+                        failpoint::Fault::Err(m) => {
+                            return Err(format!("failpoint shard.dispatch: {m}"))
+                        }
+                    }
+                }
+            }
+            rep.worker.distances(rows, nq)
+        }));
+        let res = match caught {
+            Ok(res) => res,
+            Err(p) => Err(format!("replica panicked: {}", panic_message(p))),
+        };
+        let (lo, hi) = self.plan.range(si);
+        let res = res.and_then(|p| {
+            if p.center_lo != lo || p.k_local != hi - lo || p.dist.len() != nq * p.k_local {
+                Err(format!(
+                    "replica answered the wrong shape: centers {}+{} ({} values) for shard {si} \
+                     owning {lo}..{hi} over {nq} rows",
+                    p.center_lo,
+                    p.k_local,
+                    p.dist.len()
+                ))
+            } else {
+                Ok(p)
+            }
+        });
+        match res {
+            Ok(p) => {
+                rep.consecutive.store(0, Ordering::Relaxed);
+                if rep.ejected.swap(false, Ordering::Relaxed) {
+                    self.readmissions.fetch_add(1, Ordering::Relaxed);
+                }
+                Ok(p)
+            }
+            Err(msg) => {
+                rep.failures.fetch_add(1, Ordering::Relaxed);
+                let streak = rep.consecutive.fetch_add(1, Ordering::Relaxed) + 1;
+                if streak >= self.cfg.eject_after && !rep.ejected.swap(true, Ordering::Relaxed) {
+                    self.ejection_events.fetch_add(1, Ordering::Relaxed);
+                    eprintln!(
+                        "mbkk-serve: shard {si} replica {} ejected after {streak} consecutive \
+                         failures ({msg})",
+                        rep.worker.label()
+                    );
+                }
+                Err(msg)
+            }
+        }
+    }
+
+    /// Fetch one shard's panel: try live replicas in order, back off and
+    /// retry across rounds, and fall back to ejected replicas only when
+    /// nothing else is left.
+    fn shard_distances(
+        &self,
+        si: usize,
+        rows: &[f32],
+        nq: usize,
+    ) -> std::result::Result<ShardPartial, String> {
+        let (lo, hi) = self.plan.range(si);
+        if hi == lo {
+            return Ok(ShardPartial { center_lo: lo, k_local: 0, dist: Vec::new() });
+        }
+        let reps = &self.shards[si];
+        let mut last_err = format!("shard {si} has no replicas");
+        for round in 1..=self.cfg.attempts {
+            if round > 1 {
+                std::thread::sleep(self.backoff_delay(round - 1));
+            }
+            let mut tried = 0usize;
+            for rep in reps {
+                if rep.ejected.load(Ordering::Relaxed) {
+                    continue;
+                }
+                tried += 1;
+                match self.attempt(si, rep, rows, nq) {
+                    Ok(p) => return Ok(p),
+                    Err(e) => last_err = e,
+                }
+            }
+            if tried == 0 {
+                // Every replica is ejected: hail-mary the full list once
+                // this round — a probe may simply not have run yet, and a
+                // success re-admits the replica on the spot.
+                for rep in reps {
+                    match self.attempt(si, rep, rows, nq) {
+                        Ok(p) => return Ok(p),
+                        Err(e) => last_err = e,
+                    }
+                }
+            }
+        }
+        Err(format!("shard {si} (centers {lo}..{hi}): {last_err}"))
+    }
+
+    /// Score a batch: fan out to every shard in parallel, merge the
+    /// panels in fixed shard order, and argmin exactly as the single-node
+    /// engine does.
+    pub fn score_batch(&self, rows: &[f32]) -> std::result::Result<ShardScore, ShardError> {
+        let d = self.d.max(1);
+        assert_eq!(rows.len() % d, 0, "score_batch() requires validated row shapes");
+        let nq = rows.len() / d;
+        if nq == 0 {
+            return Ok(ShardScore { assignments: Vec::new(), coverage: 1.0, missing: Vec::new() });
+        }
+        let results: Vec<std::result::Result<ShardPartial, String>> =
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..self.plan.shards())
+                    .map(|si| scope.spawn(move || self.shard_distances(si, rows, nq)))
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| {
+                        h.join()
+                            .unwrap_or_else(|p| Err(format!("dispatch thread died: {}", panic_message(p))))
+                    })
+                    .collect()
+            });
+        self.merge(nq, &results)
+    }
+
+    /// Merge per-shard panels into k-wide rows (fixed shard order, pure
+    /// column placement) and apply the strict-vs-partial policy. The
+    /// `shard.merge` failpoint can fail (→ `Unavailable`) or panic (the
+    /// coalescer's guard contains it) the merge itself.
+    fn merge(
+        &self,
+        nq: usize,
+        results: &[std::result::Result<ShardPartial, String>],
+    ) -> std::result::Result<ShardScore, ShardError> {
+        if failpoint::armed() {
+            if let Some(fault) = failpoint::eval("shard.merge") {
+                match fault {
+                    failpoint::Fault::Panic => panic!("failpoint shard.merge: injected panic"),
+                    failpoint::Fault::Err(m) => {
+                        return Err(ShardError::Unavailable(format!("failpoint shard.merge: {m}")))
+                    }
+                }
+            }
+        }
+        let k = self.k.max(1);
+        let mut dist = vec![f64::INFINITY; nq * k];
+        let mut covered = 0usize;
+        let mut missing = Vec::new();
+        let mut first_err = String::new();
+        for (si, res) in results.iter().enumerate() {
+            let (lo, hi) = self.plan.range(si);
+            match res {
+                Ok(p) => {
+                    for q in 0..nq {
+                        dist[q * k + lo..q * k + hi]
+                            .copy_from_slice(&p.dist[q * p.k_local..(q + 1) * p.k_local]);
+                    }
+                    covered += hi - lo;
+                }
+                Err(e) if hi > lo => {
+                    missing.push(si);
+                    if first_err.is_empty() {
+                        first_err = e.clone();
+                    }
+                }
+                // An empty shard owns no centers; its failure costs nothing.
+                Err(_) => {}
+            }
+        }
+        if !missing.is_empty() && !self.cfg.partial_results {
+            return Err(ShardError::Unavailable(format!(
+                "shards {missing:?} did not answer ({first_err})"
+            )));
+        }
+        if covered == 0 {
+            return Err(ShardError::Unavailable(format!(
+                "no shard answered ({first_err})"
+            )));
+        }
+        // The engine's argmin, verbatim: first minimum under total_cmp.
+        // Missing columns hold +∞ and can never win against a real value.
+        let mut assignments = vec![0usize; nq];
+        for q in 0..nq {
+            let drow = &dist[q * k..(q + 1) * k];
+            let mut best = 0usize;
+            for (j, v) in drow.iter().enumerate().skip(1) {
+                if v.total_cmp(&drow[best]) == std::cmp::Ordering::Less {
+                    best = j;
+                }
+            }
+            assignments[q] = best;
+        }
+        Ok(ShardScore {
+            assignments,
+            coverage: covered as f64 / self.k.max(1) as f64,
+            missing,
+        })
+    }
+}
+
+impl Scorer for Arc<ShardSet> {
+    fn d(&self) -> usize {
+        ShardSet::d(self)
+    }
+
+    fn k(&self) -> usize {
+        ShardSet::k(self)
+    }
+
+    fn score(&self, rows: &[f32]) -> std::result::Result<Scored, ScoreError> {
+        match self.score_batch(rows) {
+            Ok(s) => Ok(Scored {
+                assignments: s.assignments,
+                coverage: (s.coverage < 1.0).then_some(s.coverage),
+            }),
+            Err(ShardError::Unavailable(m)) => Err(ScoreError::Unavailable(m)),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Binary wire codec (CRC-framed, little-endian — the artifact format's
+// conventions at request scale).
+
+fn push_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn read_u32(bytes: &[u8], at: usize) -> std::result::Result<u32, String> {
+    bytes
+        .get(at..at + 4)
+        .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .ok_or_else(|| "truncated shard protocol body".to_string())
+}
+
+/// Frame a query batch: magic, d, nq, f32 rows, trailing CRC.
+pub fn encode_query(d: usize, rows: &[f32]) -> Vec<u8> {
+    let nq = if d == 0 { 0 } else { rows.len() / d };
+    let mut out = Vec::with_capacity(16 + rows.len() * 4);
+    out.extend_from_slice(QUERY_MAGIC);
+    push_u32(&mut out, d as u32);
+    push_u32(&mut out, nq as u32);
+    for v in rows {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    let crc = crc32(&out);
+    push_u32(&mut out, crc);
+    out
+}
+
+/// Decode + validate a query frame into `(d, nq, rows)`.
+pub fn decode_query(body: &[u8]) -> std::result::Result<(usize, usize, Vec<f32>), String> {
+    if body.len() < 16 || &body[..4] != QUERY_MAGIC {
+        return Err("not a shard query frame".to_string());
+    }
+    let crc_at = body.len() - 4;
+    if crc32(&body[..crc_at]) != read_u32(body, crc_at)? {
+        return Err("shard query frame failed its CRC check".to_string());
+    }
+    let d = read_u32(body, 4)? as usize;
+    let nq = read_u32(body, 8)? as usize;
+    let want = (nq as u128) * (d as u128) * 4;
+    if want != (crc_at - 12) as u128 {
+        return Err(format!("shard query frame claims {nq}×{d} rows but carries {} payload bytes", crc_at - 12));
+    }
+    let mut rows = Vec::with_capacity(nq * d);
+    for c in body[12..crc_at].chunks_exact(4) {
+        rows.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+    }
+    Ok((d, nq, rows))
+}
+
+/// Frame a shard's distance panel.
+pub fn encode_partial(p: &ShardPartial, nq: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(20 + p.dist.len() * 8);
+    out.extend_from_slice(PARTIAL_MAGIC);
+    push_u32(&mut out, p.center_lo as u32);
+    push_u32(&mut out, p.k_local as u32);
+    push_u32(&mut out, nq as u32);
+    for v in &p.dist {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    let crc = crc32(&out);
+    push_u32(&mut out, crc);
+    out
+}
+
+/// Decode + validate a distance-panel frame for an expected `nq`.
+pub fn decode_partial(body: &[u8], nq: usize) -> std::result::Result<ShardPartial, String> {
+    if body.len() < 20 || &body[..4] != PARTIAL_MAGIC {
+        return Err("not a shard distance frame".to_string());
+    }
+    let crc_at = body.len() - 4;
+    if crc32(&body[..crc_at]) != read_u32(body, crc_at)? {
+        return Err("shard distance frame failed its CRC check".to_string());
+    }
+    let center_lo = read_u32(body, 4)? as usize;
+    let k_local = read_u32(body, 8)? as usize;
+    let got_nq = read_u32(body, 12)? as usize;
+    if got_nq != nq {
+        return Err(format!("shard answered {got_nq} rows for a {nq}-row query"));
+    }
+    let want = (nq as u128) * (k_local as u128) * 8;
+    if want != (crc_at - 16) as u128 {
+        return Err(format!("shard distance frame claims {nq}×{k_local} values but carries {} payload bytes", crc_at - 16));
+    }
+    let mut dist = Vec::with_capacity(nq * k_local);
+    for c in body[16..crc_at].chunks_exact(8) {
+        dist.push(f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]));
+    }
+    Ok(ShardPartial { center_lo, k_local, dist })
+}
+
+// ---------------------------------------------------------------------------
+// HTTP replica client + the `mbkk shard-worker` server.
+
+/// Remote replica: speaks the binary protocol to an `mbkk shard-worker`
+/// process. One fresh connection per call keeps failure containment
+/// trivial (a dead worker costs exactly one connect timeout).
+pub struct HttpShardWorker {
+    addr: String,
+    lo: usize,
+    hi: usize,
+    /// Per-call deadline, enforced as connect + read + write timeouts —
+    /// a replica that misses it surfaces as an `Err` and dispatch fails
+    /// over to the next replica.
+    deadline: Duration,
+}
+
+impl HttpShardWorker {
+    /// A client for shard `i` of `plan` served at `addr` (`host:port`).
+    pub fn new(addr: &str, plan: &ShardPlan, shard: usize, deadline: Duration) -> HttpShardWorker {
+        let (lo, hi) = plan.range(shard);
+        HttpShardWorker { addr: addr.to_string(), lo, hi, deadline }
+    }
+
+    fn connect(&self) -> std::result::Result<TcpStream, String> {
+        let addr = self
+            .addr
+            .to_socket_addrs()
+            .map_err(|e| format!("resolving {}: {e}", self.addr))?
+            .next()
+            .ok_or_else(|| format!("{} resolves to no address", self.addr))?;
+        let stream = TcpStream::connect_timeout(&addr, self.deadline)
+            .map_err(|e| format!("connecting {}: {e}", self.addr))?;
+        let _ = stream.set_nodelay(true);
+        stream
+            .set_read_timeout(Some(self.deadline))
+            .and_then(|_| stream.set_write_timeout(Some(self.deadline)))
+            .map_err(|e| format!("setting timeouts on {}: {e}", self.addr))?;
+        Ok(stream)
+    }
+
+    fn roundtrip(
+        &self,
+        method: &str,
+        path: &str,
+        content_type: &str,
+        body: &[u8],
+    ) -> std::result::Result<(u16, Vec<u8>), String> {
+        let mut stream = self.connect()?;
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: {}\r\nContent-Type: {content_type}\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n",
+            self.addr,
+            body.len()
+        );
+        let mut req = head.into_bytes();
+        req.extend_from_slice(body);
+        stream.write_all(&req).map_err(|e| format!("writing to {}: {e}", self.addr))?;
+        read_response(&mut stream, WORKER_MAX_BODY)
+            .map_err(|e| format!("reading from {}: {e}", self.addr))
+    }
+}
+
+impl ShardWorker for HttpShardWorker {
+    fn label(&self) -> String {
+        format!("http:{}", self.addr)
+    }
+
+    fn center_range(&self) -> (usize, usize) {
+        (self.lo, self.hi)
+    }
+
+    fn distances(&self, rows: &[f32], nq: usize) -> std::result::Result<ShardPartial, String> {
+        let d = if nq == 0 { 0 } else { rows.len() / nq };
+        let body = encode_query(d, rows);
+        let (status, resp) =
+            self.roundtrip("POST", "/v1/shard-distances", "application/octet-stream", &body)?;
+        if status != 200 {
+            return Err(format!(
+                "{} answered HTTP {status}: {}",
+                self.addr,
+                String::from_utf8_lossy(&resp[..resp.len().min(200)])
+            ));
+        }
+        decode_partial(&resp, nq)
+    }
+
+    fn probe(&self) -> std::result::Result<(), String> {
+        let (status, _) = self.roundtrip("GET", "/healthz", "application/json", &[])?;
+        if status == 200 {
+            Ok(())
+        } else {
+            Err(format!("{} probe answered HTTP {status}", self.addr))
+        }
+    }
+}
+
+/// Minimal HTTP-response reader for the replica client: status line,
+/// headers (only `Content-Length` matters), then an exact-length body.
+fn read_response(
+    stream: &mut TcpStream,
+    max_body: usize,
+) -> std::result::Result<(u16, Vec<u8>), String> {
+    let mut head = Vec::with_capacity(256);
+    let mut byte = [0u8; 1];
+    while !head.ends_with(b"\r\n\r\n") {
+        if head.len() > 16 * 1024 {
+            return Err("response head too large".to_string());
+        }
+        match stream.read(&mut byte) {
+            Ok(1) => head.push(byte[0]),
+            Ok(_) => return Err("connection closed mid-head".to_string()),
+            Err(e) => return Err(format!("reading response head: {e}")),
+        }
+    }
+    let text = String::from_utf8_lossy(&head);
+    let mut lines = text.split("\r\n");
+    let status_line = lines.next().unwrap_or_default();
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| format!("malformed status line {status_line:?}"))?;
+    let mut len = 0usize;
+    for line in lines {
+        if let Some((name, value)) = line.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                len = value
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("bad Content-Length {value:?}"))?;
+            }
+        }
+    }
+    if len > max_body {
+        return Err(format!("response body of {len} bytes exceeds the {max_body} byte cap"));
+    }
+    let mut body = vec![0u8; len];
+    stream.read_exact(&mut body).map_err(|e| format!("reading response body: {e}"))?;
+    Ok((status, body))
+}
+
+/// A bound, not-yet-running shard worker (`mbkk shard-worker`): serves
+/// `POST /v1/shard-distances` (binary protocol) and `GET /healthz` for
+/// one shard of one model.
+pub struct ShardWorkerServer {
+    listener: TcpListener,
+    state: Arc<WorkerState>,
+}
+
+struct WorkerState {
+    engine: Option<PredictEngine>,
+    shard: usize,
+    lo: usize,
+    hi: usize,
+    d: usize,
+    shutdown: Arc<AtomicBool>,
+    requests: AtomicU64,
+}
+
+impl ShardWorkerServer {
+    /// Slice the model to shard `shard` of `plan` and bind `addr`.
+    pub fn bind(
+        model: &KernelKMeansModel,
+        plan: &ShardPlan,
+        shard: usize,
+        addr: &str,
+        mode: NumericsMode,
+    ) -> Result<ShardWorkerServer> {
+        if shard >= plan.shards() {
+            bail!("shard index {shard} out of range for a {}-shard plan", plan.shards());
+        }
+        let worker = LocalShardWorker::new(model, plan, shard, mode, "worker");
+        let (lo, hi) = (worker.lo, worker.hi);
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding shard-worker listener on {addr}"))?;
+        Ok(ShardWorkerServer {
+            listener,
+            state: Arc::new(WorkerState {
+                engine: worker.engine,
+                shard,
+                lo,
+                hi,
+                d: model.d,
+                shutdown: Arc::new(AtomicBool::new(false)),
+                requests: AtomicU64::new(0),
+            }),
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        self.listener.local_addr().context("reading the bound address")
+    }
+
+    /// Shutdown flag: store `true` and `run` returns after the current
+    /// accept poll.
+    pub fn shutdown_flag(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.state.shutdown)
+    }
+
+    /// Accept loop; returns the request count once the shutdown flag is
+    /// set.
+    pub fn run(self) -> Result<u64> {
+        self.listener
+            .set_nonblocking(true)
+            .context("setting the shard-worker listener nonblocking")?;
+        let state = self.state;
+        while !state.shutdown.load(Ordering::SeqCst) {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    if stream.set_nonblocking(false).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+                    let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
+                    let st = Arc::clone(&state);
+                    let _ = std::thread::Builder::new()
+                        .name("mbkk-shard".to_string())
+                        .spawn(move || worker_connection(&st, stream));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::ConnectionAborted | std::io::ErrorKind::Interrupted
+                    ) => {}
+                Err(e) => return Err(e).context("accepting a shard-worker connection"),
+            }
+        }
+        Ok(state.requests.load(Ordering::Relaxed))
+    }
+}
+
+/// Keep-alive loop for one shard-worker connection. Routing runs under
+/// `catch_unwind`: a bug answers 500 on this connection and the worker
+/// keeps serving.
+fn worker_connection(state: &WorkerState, stream: TcpStream) {
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = std::io::BufReader::new(read_half);
+    let mut writer = stream;
+    loop {
+        let head = match wire::read_head(&mut reader) {
+            Ok(head) => head,
+            Err(WireError::Idle) => {
+                if state.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+            Err(WireError::Malformed(m)) => {
+                let _ = Response::error(400, "bad_request", &m).closing().write_to(&mut writer);
+                return;
+            }
+            Err(_) => return,
+        };
+        let body = match head.content_length {
+            Some(len) if len > WORKER_MAX_BODY => {
+                let _ = Response::error(413, "payload_too_large", "query batch too large")
+                    .closing()
+                    .write_to(&mut writer);
+                return;
+            }
+            Some(len) => {
+                if head.expect_continue && len > 0 && writer.write_all(wire::CONTINUE_LINE).is_err()
+                {
+                    return;
+                }
+                match wire::read_body(&mut reader, len, WORKER_MAX_BODY) {
+                    Ok(body) => body,
+                    Err(_) => return,
+                }
+            }
+            None if head.method == "POST" => {
+                let _ = Response::error(411, "length_required", "POST requires Content-Length")
+                    .closing()
+                    .write_to(&mut writer);
+                return;
+            }
+            None => Vec::new(),
+        };
+        let resp = catch_unwind(AssertUnwindSafe(|| worker_route(state, &head, &body)))
+            .unwrap_or_else(|_| {
+                Response::error(500, "internal", "internal error; closing this connection")
+                    .closing()
+            });
+        let close = resp.close || !head.keep_alive;
+        if resp.write_to(&mut writer).is_err() || close {
+            return;
+        }
+    }
+}
+
+fn worker_route(state: &WorkerState, head: &wire::RequestHead, body: &[u8]) -> Response {
+    use crate::util::json::Json;
+    match (head.method.as_str(), head.path()) {
+        ("GET", "/healthz") => Response::json(&Json::obj(vec![
+            ("status", Json::Str("ok".to_string())),
+            ("shard", Json::Num(state.shard as f64)),
+            (
+                "centers",
+                Json::Arr(vec![Json::Num(state.lo as f64), Json::Num(state.hi as f64)]),
+            ),
+            ("d", Json::Num(state.d as f64)),
+            ("requests", Json::Num(state.requests.load(Ordering::Relaxed) as f64)),
+        ])),
+        ("POST", "/v1/shard-distances") => {
+            let (d, nq, rows) = match decode_query(body) {
+                Ok(q) => q,
+                Err(m) => return Response::error(400, "bad_frame", &m),
+            };
+            if nq > 0 && d != state.d {
+                return Response::error(
+                    400,
+                    "shape_mismatch",
+                    &format!("query rows have {d} features but this shard serves d={}", state.d),
+                );
+            }
+            state.requests.fetch_add(1, Ordering::Relaxed);
+            let k_local = state.hi - state.lo;
+            let dist = match &state.engine {
+                Some(engine) => engine.distances_batch(&rows),
+                None => Vec::new(),
+            };
+            let partial = ShardPartial { center_lo: state.lo, k_local, dist };
+            Response::binary(encode_partial(&partial, nq))
+        }
+        (_, "/healthz") => {
+            let mut resp = Response::error(405, "method_not_allowed", "this endpoint accepts GET");
+            resp.allow = Some("GET");
+            resp
+        }
+        (_, "/v1/shard-distances") => {
+            let mut resp = Response::error(405, "method_not_allowed", "this endpoint accepts POST");
+            resp.allow = Some("POST");
+            resp
+        }
+        (method, path) => {
+            Response::error(404, "not_found", &format!("no route for {method} {path}"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{blobs, SyntheticSpec};
+    use crate::data::Dataset;
+    use crate::kernels::KernelFunction;
+    use crate::kkmeans::CenterWindow;
+    use crate::util::rng::Rng;
+
+    /// Servable model with irregular per-center support sizes (mirrors
+    /// the coalescer fixture).
+    fn model_for(d: usize, seed: u64) -> (Dataset, KernelKMeansModel) {
+        let mut rng = Rng::seeded(seed);
+        let ds = blobs(&SyntheticSpec::new(120, d, 3), &mut rng);
+        let mut windows: Vec<CenterWindow> =
+            (0..3).map(|j| CenterWindow::new(j * 7, 23)).collect();
+        for step in 0..12 {
+            for (j, w) in windows.iter_mut().enumerate() {
+                let pts: Vec<usize> =
+                    (0..1 + (step + j) % 5).map(|_| rng.below(ds.n)).collect();
+                w.apply_update(0.4, &pts, None);
+            }
+        }
+        let kernel = KernelFunction::Gaussian { kappa: 2.0 };
+        let model = KernelKMeansModel::freeze(&ds, kernel, &mut windows);
+        (ds, model)
+    }
+
+    fn rows_from(ds: &Dataset, idx: &[usize]) -> Vec<f32> {
+        idx.iter().flat_map(|&i| ds.row(i).to_vec()).collect()
+    }
+
+    #[test]
+    fn contiguous_plan_properties() {
+        for (k, s) in [(1, 1), (3, 2), (8, 3), (3, 8), (16, 4), (5, 5)] {
+            let plan = ShardPlan::contiguous(k, s);
+            assert_eq!(plan.shards(), s);
+            assert_eq!(plan.k(), k);
+            assert_eq!(plan.range(0).0, 0);
+            assert_eq!(plan.range(s - 1).1, k);
+            let total: usize = (0..s).map(|i| plan.range(i).1 - plan.range(i).0).sum();
+            assert_eq!(total, k, "ranges must tile 0..k for k={k} s={s}");
+            // Round-trip through the recorded-bounds path.
+            let again = ShardPlan::from_bounds(plan.bounds().to_vec(), k).unwrap();
+            assert_eq!(again, plan);
+        }
+        assert!(ShardPlan::from_bounds(vec![0, 2, 1, 3], 3).is_err());
+        assert!(ShardPlan::from_bounds(vec![0, 2], 3).is_err());
+        assert!(ShardPlan::from_bounds(vec![1, 3], 3).is_err());
+    }
+
+    #[test]
+    fn sharded_scoring_is_bit_identical_to_single_node() {
+        let (ds, model) = model_for(6, 77);
+        let engine = PredictEngine::new(&model);
+        let rows = rows_from(&ds, &(0..48).collect::<Vec<_>>());
+        let want = engine.predict_batch(&rows);
+        for s in [1, 2, 3, 8] {
+            let set = ShardSet::local(
+                &model,
+                ShardPlan::contiguous(model.k(), s),
+                1,
+                NumericsMode::Deterministic,
+                ShardSetConfig::default(),
+            )
+            .unwrap();
+            let got = set.score_batch(&rows).unwrap();
+            assert_eq!(got.assignments, want, "S={s} diverged from single-node");
+            assert_eq!(got.coverage, 1.0);
+            assert!(got.missing.is_empty());
+        }
+    }
+
+    /// A replica that fails its first `fail_first` calls, then serves via
+    /// a local worker.
+    struct FlakyWorker {
+        inner: LocalShardWorker,
+        remaining_failures: AtomicU32,
+        healthy: AtomicBool,
+    }
+
+    impl ShardWorker for FlakyWorker {
+        fn label(&self) -> String {
+            format!("flaky:{}", self.inner.label())
+        }
+        fn center_range(&self) -> (usize, usize) {
+            self.inner.center_range()
+        }
+        fn distances(&self, rows: &[f32], nq: usize) -> std::result::Result<ShardPartial, String> {
+            if self
+                .remaining_failures
+                .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1))
+                .is_ok()
+            {
+                return Err("injected replica failure".to_string());
+            }
+            self.inner.distances(rows, nq)
+        }
+        fn probe(&self) -> std::result::Result<(), String> {
+            if self.healthy.load(Ordering::Relaxed) {
+                Ok(())
+            } else {
+                Err("still down".to_string())
+            }
+        }
+    }
+
+    #[test]
+    fn failover_to_second_replica_is_bit_identical() {
+        let (ds, model) = model_for(5, 31);
+        let engine = PredictEngine::new(&model);
+        let rows = rows_from(&ds, &(0..20).collect::<Vec<_>>());
+        let plan = ShardPlan::contiguous(model.k(), 2);
+        let workers: Vec<Vec<Box<dyn ShardWorker>>> = (0..2)
+            .map(|i| {
+                vec![
+                    Box::new(FlakyWorker {
+                        inner: LocalShardWorker::new(
+                            &model,
+                            &plan,
+                            i,
+                            NumericsMode::Deterministic,
+                            "a",
+                        ),
+                        remaining_failures: AtomicU32::new(u32::MAX / 2),
+                        healthy: AtomicBool::new(false),
+                    }) as Box<dyn ShardWorker>,
+                    Box::new(LocalShardWorker::new(
+                        &model,
+                        &plan,
+                        i,
+                        NumericsMode::Deterministic,
+                        "b",
+                    )),
+                ]
+            })
+            .collect();
+        let set = ShardSet::from_workers(
+            model.d,
+            plan,
+            workers,
+            ShardSetConfig { backoff: Duration::from_micros(100), ..Default::default() },
+        )
+        .unwrap();
+        for _ in 0..4 {
+            let got = set.score_batch(&rows).unwrap();
+            assert_eq!(got.assignments, engine.predict_batch(&rows));
+            assert_eq!(got.coverage, 1.0);
+        }
+        // The dead first replicas crossed the ejection threshold.
+        let status = set.status();
+        assert!(status.iter().all(|s| s.replicas[0].ejected), "{status:?}");
+        assert!(status.iter().all(|s| !s.replicas[1].ejected));
+        assert!(set.any_ejected());
+        assert!(set.ejection_events() >= 2);
+        // Probing while the replicas are still down re-admits nothing.
+        assert_eq!(set.probe_ejected(), 0);
+    }
+
+    #[test]
+    fn probe_readmits_recovered_replica() {
+        let (ds, model) = model_for(4, 13);
+        let rows = rows_from(&ds, &[0, 1, 2]);
+        let plan = ShardPlan::contiguous(model.k(), 1);
+        let flaky = Arc::new(FlakyWorker {
+            inner: LocalShardWorker::new(&model, &plan, 0, NumericsMode::Deterministic, "only"),
+            remaining_failures: AtomicU32::new(6),
+            healthy: AtomicBool::new(false),
+        });
+
+        /// Shares one flaky replica between the set and the test.
+        struct Shared(Arc<FlakyWorker>);
+        impl ShardWorker for Shared {
+            fn label(&self) -> String {
+                self.0.label()
+            }
+            fn center_range(&self) -> (usize, usize) {
+                self.0.center_range()
+            }
+            fn distances(
+                &self,
+                rows: &[f32],
+                nq: usize,
+            ) -> std::result::Result<ShardPartial, String> {
+                self.0.distances(rows, nq)
+            }
+            fn probe(&self) -> std::result::Result<(), String> {
+                self.0.probe()
+            }
+        }
+
+        let set = ShardSet::from_workers(
+            model.d,
+            plan,
+            vec![vec![Box::new(Shared(flaky.clone())) as Box<dyn ShardWorker>]],
+            ShardSetConfig {
+                attempts: 1,
+                backoff: Duration::from_micros(100),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        // Three failing batches cross the default threshold of 3 and eject
+        // the only replica; strict mode surfaces Unavailable, never panics.
+        for _ in 0..3 {
+            assert!(matches!(set.score_batch(&rows), Err(ShardError::Unavailable(_))));
+        }
+        assert!(set.any_ejected());
+        assert_eq!(set.probe_ejected(), 0, "an unhealthy replica must not be re-admitted");
+        flaky.healthy.store(true, Ordering::Relaxed);
+        flaky.remaining_failures.store(0, Ordering::Relaxed);
+        assert_eq!(set.probe_ejected(), 1);
+        assert!(!set.any_ejected());
+        let engine = PredictEngine::new(&model);
+        assert_eq!(set.score_batch(&rows).unwrap().assignments, engine.predict_batch(&rows));
+        assert!(set.readmissions() >= 1);
+    }
+
+    #[test]
+    fn strict_mode_fails_partial_mode_answers_with_coverage() {
+        let (ds, model) = model_for(6, 19);
+        let engine = PredictEngine::new(&model);
+        let rows = rows_from(&ds, &(0..10).collect::<Vec<_>>());
+        let plan = ShardPlan::contiguous(model.k(), 3);
+        let make_workers = |dead_shard: usize| -> Vec<Vec<Box<dyn ShardWorker>>> {
+            (0..3)
+                .map(|i| {
+                    if i == dead_shard {
+                        vec![Box::new(FlakyWorker {
+                            inner: LocalShardWorker::new(
+                                &model,
+                                &plan,
+                                i,
+                                NumericsMode::Deterministic,
+                                "dead",
+                            ),
+                            remaining_failures: AtomicU32::new(u32::MAX / 2),
+                            healthy: AtomicBool::new(false),
+                        }) as Box<dyn ShardWorker>]
+                    } else {
+                        vec![Box::new(LocalShardWorker::new(
+                            &model,
+                            &plan,
+                            i,
+                            NumericsMode::Deterministic,
+                            "ok",
+                        )) as Box<dyn ShardWorker>]
+                    }
+                })
+                .collect()
+        };
+        // Strict (default): the batch fails with Unavailable.
+        let strict = ShardSet::from_workers(
+            model.d,
+            plan.clone(),
+            make_workers(1),
+            ShardSetConfig { backoff: Duration::from_micros(100), ..Default::default() },
+        )
+        .unwrap();
+        match strict.score_batch(&rows) {
+            Err(ShardError::Unavailable(m)) => assert!(m.contains("shard"), "{m}"),
+            other => panic!("strict mode must fail: {other:?}"),
+        }
+        // Partial: answers from covered centers with honest coverage.
+        let partial = ShardSet::from_workers(
+            model.d,
+            plan.clone(),
+            make_workers(1),
+            ShardSetConfig {
+                partial_results: true,
+                backoff: Duration::from_micros(100),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let got = partial.score_batch(&rows).unwrap();
+        let (lo, hi) = plan.range(1);
+        assert_eq!(got.missing, vec![1]);
+        let want_cov = (model.k() - (hi - lo)) as f64 / model.k() as f64;
+        assert_eq!(got.coverage, want_cov);
+        // Expected assignments: argmin over the full distance matrix with
+        // the dead shard's columns forced to +∞.
+        let k = model.k();
+        let mut dist = engine.distances_batch(&rows);
+        for q in 0..rows.len() / model.d {
+            for j in lo..hi {
+                dist[q * k + j] = f64::INFINITY;
+            }
+        }
+        let want: Vec<usize> = dist
+            .chunks_exact(k)
+            .map(|drow| {
+                let mut best = 0usize;
+                for (j, v) in drow.iter().enumerate().skip(1) {
+                    if v.total_cmp(&drow[best]) == std::cmp::Ordering::Less {
+                        best = j;
+                    }
+                }
+                best
+            })
+            .collect();
+        assert_eq!(got.assignments, want);
+        // All shards dead → Unavailable even in partial mode.
+        let all_dead: Vec<Vec<Box<dyn ShardWorker>>> = (0..3)
+            .map(|i| {
+                vec![Box::new(FlakyWorker {
+                    inner: LocalShardWorker::new(
+                        &model,
+                        &plan,
+                        i,
+                        NumericsMode::Deterministic,
+                        "dead",
+                    ),
+                    remaining_failures: AtomicU32::new(u32::MAX / 2),
+                    healthy: AtomicBool::new(false),
+                }) as Box<dyn ShardWorker>]
+            })
+            .collect();
+        let none = ShardSet::from_workers(
+            model.d,
+            plan,
+            all_dead,
+            ShardSetConfig {
+                partial_results: true,
+                backoff: Duration::from_micros(100),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(matches!(none.score_batch(&rows), Err(ShardError::Unavailable(_))));
+    }
+
+    #[test]
+    fn dispatch_failpoint_is_contained_and_retried() {
+        let _x = failpoint::exclusive_test_lock();
+        let (ds, model) = model_for(4, 23);
+        let engine = PredictEngine::new(&model);
+        let rows = rows_from(&ds, &(0..8).collect::<Vec<_>>());
+        let set = ShardSet::local(
+            &model,
+            ShardPlan::contiguous(model.k(), 1),
+            1,
+            NumericsMode::Deterministic,
+            ShardSetConfig { backoff: Duration::from_micros(100), ..Default::default() },
+        )
+        .unwrap();
+        // First attempt panics; the retry round answers bit-identically.
+        failpoint::configure("shard.dispatch=1*panic").unwrap();
+        let got = set.score_batch(&rows).unwrap();
+        failpoint::clear("shard.dispatch");
+        assert_eq!(got.assignments, engine.predict_batch(&rows));
+        assert!(failpoint::fired_count("shard.dispatch") >= 1);
+        // A merge fault surfaces as Unavailable, not a panic.
+        failpoint::configure("shard.merge=err(injected merge fault)").unwrap();
+        assert!(matches!(set.score_batch(&rows), Err(ShardError::Unavailable(_))));
+        failpoint::clear("shard.merge");
+    }
+
+    #[test]
+    fn wire_codec_round_trips_and_rejects_corruption() {
+        let rows: Vec<f32> = (0..12).map(|i| i as f32 * 0.5 - 2.0).collect();
+        let q = encode_query(3, &rows);
+        let (d, nq, back) = decode_query(&q).unwrap();
+        assert_eq!((d, nq), (3, 4));
+        assert_eq!(back, rows);
+        let mut bad = q.clone();
+        bad[8] ^= 0x40;
+        assert!(decode_query(&bad).is_err(), "corrupt frame must fail its CRC");
+        assert!(decode_query(b"nope").is_err());
+
+        let p = ShardPartial {
+            center_lo: 2,
+            k_local: 3,
+            dist: (0..12).map(|i| i as f64 * 1.25).collect(),
+        };
+        let f = encode_partial(&p, 4);
+        assert_eq!(decode_partial(&f, 4).unwrap(), p);
+        assert!(decode_partial(&f, 5).is_err(), "row-count mismatch must fail");
+        let mut bad = f.clone();
+        let at = bad.len() - 5;
+        bad[at] ^= 1;
+        assert!(decode_partial(&bad, 4).is_err());
+    }
+
+    #[test]
+    fn empty_batch_short_circuits() {
+        let (_ds, model) = model_for(4, 3);
+        let set = ShardSet::local(
+            &model,
+            ShardPlan::contiguous(model.k(), 2),
+            1,
+            NumericsMode::Deterministic,
+            ShardSetConfig::default(),
+        )
+        .unwrap();
+        let got = set.score_batch(&[]).unwrap();
+        assert!(got.assignments.is_empty());
+        assert_eq!(got.coverage, 1.0);
+    }
+}

@@ -249,6 +249,10 @@ pub struct Response {
     /// Value for a `Retry-After` header in seconds (load-shedding 503s and
     /// draining responses — tells well-behaved clients when to come back).
     pub retry_after: Option<u64>,
+    /// `Content-Type` header value. JSON for every user-facing endpoint;
+    /// the shard-worker distance protocol answers `application/octet-stream`
+    /// (a CRC-framed binary body, see `serve::shard`).
+    pub content_type: &'static str,
 }
 
 impl Response {
@@ -260,6 +264,20 @@ impl Response {
             close: false,
             allow: None,
             retry_after: None,
+            content_type: "application/json",
+        }
+    }
+
+    /// A 200 response carrying a binary body (the shard-worker wire
+    /// protocol; everything user-facing stays JSON).
+    pub fn binary(body: Vec<u8>) -> Response {
+        Response {
+            status: 200,
+            body,
+            close: false,
+            allow: None,
+            retry_after: None,
+            content_type: "application/octet-stream",
         }
     }
 
@@ -279,6 +297,7 @@ impl Response {
             close: false,
             allow: None,
             retry_after: None,
+            content_type: "application/json",
         }
     }
 
@@ -302,7 +321,7 @@ impl Response {
         out.extend_from_slice(
             format!("HTTP/1.1 {} {}\r\n", self.status, status_text(self.status)).as_bytes(),
         );
-        out.extend_from_slice(b"Content-Type: application/json\r\n");
+        out.extend_from_slice(format!("Content-Type: {}\r\n", self.content_type).as_bytes());
         out.extend_from_slice(format!("Content-Length: {}\r\n", self.body.len()).as_bytes());
         if let Some(allow) = self.allow {
             out.extend_from_slice(format!("Allow: {allow}\r\n").as_bytes());

@@ -68,6 +68,7 @@ fn start_server(model: &KernelKMeansModel, tweak: impl FnOnce(&mut ServeConfig))
         max_connections: 64,
         request_deadline: Duration::from_secs(5),
         numerics: mbkk::kernels::NumericsMode::Deterministic,
+        ..ServeConfig::default()
     };
     tweak(&mut cfg);
     let server = Server::bind(model, "test-model.mbkk", &cfg).expect("bind");

@@ -1,0 +1,608 @@
+//! Sharded-serving conformance suite (ISSUE 10): shard-merge
+//! bit-identity, delta replication, and failover — over the public API
+//! and real sockets.
+//!
+//! Contract under test (DESIGN.md §14, ADR-006, docs/API.md):
+//!
+//! 1. A sharded `ShardSet` answers **bit-identical** assignments to the
+//!    single-node scalar path for S ∈ {1, 2, 3, 8}, for odd explicit
+//!    bounds, and through the coalescer under concurrent submitters —
+//!    the fixed-shard-order merge reproduces the full distance matrix.
+//! 2. A kind-`delta` artifact replayed onto a replica resumed from the
+//!    base snapshot reproduces the primary's snapshot **byte-equal**;
+//!    stale bases are rejected with the replica untouched.
+//! 3. Failover: a replica killed mid-batch is retried/failed-over and the
+//!    answer is still bit-identical; an unavailable shard answers 503
+//!    `shard_unavailable` (strict) or a degraded `"partial": true` answer
+//!    (opt-in) — the process never panics and `/healthz` tells the truth
+//!    with structured cause codes.
+
+use mbkk::data::synthetic::{blobs, SyntheticSpec};
+use mbkk::data::Dataset;
+use mbkk::kernels::{KernelFunction, NumericsMode};
+use mbkk::kkmeans::{CenterWindow, KernelKMeansModel, LearningRate, StreamingKernelKMeans};
+use mbkk::serve::coalesce::{CoalesceConfig, Coalescer};
+use mbkk::serve::format;
+use mbkk::serve::http::{ModelSpec, ServeConfig, Server};
+use mbkk::serve::replicate::{apply_delta, capture_base, delta_from, ArtifactWatch};
+use mbkk::serve::shard::{ShardPlan, ShardSet, ShardSetConfig, ShardWorkerServer};
+use mbkk::util::failpoint;
+use mbkk::util::json::Json;
+use mbkk::util::rng::Rng;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+// ---- fixtures -------------------------------------------------------------
+
+/// A small servable model with irregular support sizes (the
+/// conformance_http idiom).
+fn model_for(d: usize, seed: u64) -> (Dataset, KernelKMeansModel) {
+    let mut rng = Rng::seeded(seed);
+    let ds = blobs(&SyntheticSpec::new(160, d, 3), &mut rng);
+    let mut windows: Vec<CenterWindow> =
+        (0..3).map(|j| CenterWindow::new(j * 7, 23)).collect();
+    for step in 0..12 {
+        for (j, w) in windows.iter_mut().enumerate() {
+            let pts: Vec<usize> =
+                (0..1 + (step + j) % 5).map(|_| rng.below(ds.n)).collect();
+            w.apply_update(0.4, &pts, None);
+        }
+    }
+    let model =
+        KernelKMeansModel::freeze(&ds, KernelFunction::Gaussian { kappa: 2.0 }, &mut windows);
+    (ds, model)
+}
+
+fn rows_from(ds: &Dataset, idx: &[usize]) -> Vec<f32> {
+    idx.iter().flat_map(|&i| ds.row(i).to_vec()).collect()
+}
+
+/// Single-node ground truth: the scalar per-query path.
+fn scalar_assignments(model: &KernelKMeansModel, ds: &Dataset, idx: &[usize]) -> Vec<usize> {
+    let all = model.predict_all(ds);
+    idx.iter().map(|&i| all[i]).collect()
+}
+
+fn tiny_backoff() -> ShardSetConfig {
+    ShardSetConfig { backoff: Duration::from_micros(100), ..ShardSetConfig::default() }
+}
+
+// ---- 1. shard-merge bit-identity ------------------------------------------
+
+#[test]
+fn shard_counts_are_bit_identical_to_single_node() {
+    let (ds, model) = model_for(6, 101);
+    let idx: Vec<usize> = (0..40).map(|i| (i * 3) % ds.n).collect();
+    let rows = rows_from(&ds, &idx);
+    let want = scalar_assignments(&model, &ds, &idx);
+    // S=8 > k=3 exercises empty shards; they must merge as no-ops.
+    for s in [1usize, 2, 3, 8] {
+        let set = ShardSet::local(
+            &model,
+            ShardPlan::contiguous(model.k(), s),
+            1,
+            NumericsMode::Deterministic,
+            tiny_backoff(),
+        )
+        .expect("shard set");
+        let got = set.score_batch(&rows).expect("score");
+        assert_eq!(got.assignments, want, "S={s} diverged from single-node");
+        assert_eq!(got.coverage, 1.0);
+        assert!(got.missing.is_empty());
+    }
+}
+
+#[test]
+fn odd_explicit_bounds_are_bit_identical_and_validated() {
+    let (ds, model) = model_for(5, 102);
+    let idx: Vec<usize> = (0..25).collect();
+    let rows = rows_from(&ds, &idx);
+    let want = scalar_assignments(&model, &ds, &idx);
+    // A maximally lopsided split: one center alone, the rest together.
+    let plan = ShardPlan::from_bounds(vec![0, 1, model.k()], model.k()).expect("bounds");
+    let set =
+        ShardSet::local(&model, plan, 1, NumericsMode::Deterministic, tiny_backoff()).unwrap();
+    assert_eq!(set.score_batch(&rows).unwrap().assignments, want);
+    // Structural validation: every malformed bounds vector is rejected.
+    for bad in [vec![], vec![1, model.k()], vec![0, 2], vec![0, 2, 1, model.k()]] {
+        assert!(
+            ShardPlan::from_bounds(bad.clone(), model.k()).is_err(),
+            "bounds {bad:?} must be rejected"
+        );
+    }
+}
+
+#[test]
+fn coalesced_sharded_scoring_matches_under_concurrency() {
+    let (ds, model) = model_for(4, 103);
+    let set = Arc::new(
+        ShardSet::local(
+            &model,
+            ShardPlan::contiguous(model.k(), 3),
+            1,
+            NumericsMode::Deterministic,
+            tiny_backoff(),
+        )
+        .unwrap(),
+    );
+    let coalescer = Arc::new(Coalescer::new(
+        Arc::clone(&set),
+        CoalesceConfig { max_wait: Duration::from_millis(2), ..CoalesceConfig::default() },
+    ));
+    let all = model.predict_all(&ds);
+    let handles: Vec<_> = (0..4)
+        .map(|t| {
+            let c = Arc::clone(&coalescer);
+            let ds_rows: Vec<(usize, Vec<f32>)> = (0..10)
+                .map(|i| {
+                    let row = (t * 13 + i * 7) % ds.n;
+                    (row, ds.row(row).to_vec())
+                })
+                .collect();
+            let want: Vec<usize> = ds_rows.iter().map(|(r, _)| all[*r]).collect();
+            std::thread::spawn(move || {
+                for ((_, feats), want_a) in ds_rows.iter().zip(&want) {
+                    let scored = c.submit(feats.clone()).expect("coalesced score");
+                    assert_eq!(scored.assignments, vec![*want_a]);
+                    assert!(scored.coverage.is_none(), "full coverage must not be marked");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("submitter thread");
+    }
+}
+
+// ---- 2. the shard plan rides the artifact ---------------------------------
+
+#[test]
+fn recorded_shard_plan_roundtrips_and_loads_everywhere() {
+    let (_ds, model) = model_for(4, 104);
+    let plan = ShardPlan::contiguous(model.k(), 2);
+    let bytes = format::model_to_bytes_with_plan(&model, Some(plan.bounds()));
+    assert_eq!(
+        format::model_shard_plan(&bytes).expect("plan parse"),
+        Some(plan.bounds().to_vec())
+    );
+    // A loader that doesn't shard ignores the key entirely.
+    let loaded = format::model_from_bytes(&bytes).expect("planned artifact loads");
+    assert_eq!(loaded.k(), model.k());
+    assert_eq!(loaded.d, model.d);
+    // Plain artifacts carry no plan.
+    assert_eq!(format::model_shard_plan(&model.to_bytes()).expect("no plan"), None);
+}
+
+// ---- 3. delta replication -------------------------------------------------
+
+fn stream_rows(rng: &mut Rng, n: usize, d: usize) -> Vec<f32> {
+    (0..n * d).map(|_| rng.normal() as f32).collect()
+}
+
+#[test]
+fn delta_replay_reproduces_the_primary_byte_for_byte() {
+    let mut rng = Rng::seeded(105);
+    let mut primary = StreamingKernelKMeans::new(
+        KernelFunction::Gaussian { kappa: 3.0 },
+        4,
+        3,
+        16,
+        12,
+        LearningRate::Sklearn,
+    );
+    for _ in 0..4 {
+        let rows = stream_rows(&mut rng, 16, 4);
+        primary.partial_fit(&rows, &mut rng);
+    }
+    // Generation g: the replica's starting point.
+    let base_snapshot = format::stream_to_bytes(&primary);
+    let base = capture_base(&primary);
+    for _ in 0..3 {
+        let rows = stream_rows(&mut rng, 16, 4);
+        primary.partial_fit(&rows, &mut rng);
+    }
+    // The log suffix since g, shipped through the CRC'd v2 container.
+    let delta = delta_from(&primary, &base).expect("delta");
+    let delta_bytes = format::delta_to_bytes(&delta);
+    let decoded = format::delta_from_bytes(&delta_bytes).expect("delta decodes");
+    assert_eq!(decoded, delta);
+
+    let mut replica = format::stream_from_bytes(&base_snapshot).expect("resume base");
+    apply_delta(&mut replica, &decoded).expect("replay");
+    assert_eq!(
+        format::stream_to_bytes(&replica),
+        format::stream_to_bytes(&primary),
+        "replayed replica must snapshot byte-equal to the primary"
+    );
+
+    // Catch-up also works through the on-disk artifact path.
+    let dir = std::env::temp_dir().join(format!("mbkk-conf-shard-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let path = dir.join("suffix.mbkd");
+    format::save_delta(&delta, &path).expect("save delta");
+    let loaded = format::load_delta(&path).expect("load delta");
+    assert_eq!(loaded, delta);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn stale_base_is_rejected_and_the_replica_is_untouched() {
+    let mut rng = Rng::seeded(106);
+    let mk = || {
+        StreamingKernelKMeans::new(
+            KernelFunction::Gaussian { kappa: 3.0 },
+            4,
+            3,
+            16,
+            12,
+            LearningRate::Sklearn,
+        )
+    };
+    let mut primary = mk();
+    for _ in 0..3 {
+        let rows = stream_rows(&mut rng, 16, 4);
+        primary.partial_fit(&rows, &mut rng);
+    }
+    let base = capture_base(&primary);
+    let rows = stream_rows(&mut rng, 16, 4);
+    primary.partial_fit(&rows, &mut rng);
+    let delta = delta_from(&primary, &base).expect("delta");
+    // A replica at a *different* generation must reject the suffix and
+    // stay bit-identical to its pre-apply state.
+    let mut stranger = mk();
+    let rows = stream_rows(&mut rng, 16, 4);
+    stranger.partial_fit(&rows, &mut rng);
+    let before = format::stream_to_bytes(&stranger);
+    assert!(apply_delta(&mut stranger, &delta).is_err());
+    assert_eq!(format::stream_to_bytes(&stranger), before);
+}
+
+// ---- 4. failover under fault injection ------------------------------------
+
+#[test]
+fn killed_replica_mid_batch_is_retried_and_answers_correctly() {
+    let _x = failpoint::exclusive_test_lock();
+    failpoint::reset();
+    let (ds, model) = model_for(4, 107);
+    let idx: Vec<usize> = (0..16).collect();
+    let rows = rows_from(&ds, &idx);
+    let want = scalar_assignments(&model, &ds, &idx);
+    let set = ShardSet::local(
+        &model,
+        ShardPlan::contiguous(model.k(), 2),
+        2,
+        NumericsMode::Deterministic,
+        tiny_backoff(),
+    )
+    .unwrap();
+    // First dispatch dies mid-batch; the retry/failover must answer the
+    // *same* assignments — and the process must not panic.
+    failpoint::configure("shard.dispatch=1*panic").expect("arm");
+    let got = set.score_batch(&rows).expect("failover answers");
+    failpoint::clear("shard.dispatch");
+    assert_eq!(got.assignments, want);
+    assert_eq!(got.coverage, 1.0);
+    assert!(failpoint::fired_count("shard.dispatch") >= 1, "the fault must actually fire");
+    failpoint::reset();
+}
+
+// ---- HTTP-level plumbing --------------------------------------------------
+
+struct TestServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    handle: std::thread::JoinHandle<mbkk::util::error::Result<mbkk::serve::coalesce::StatsSnapshot>>,
+}
+
+fn start_server(model: &KernelKMeansModel, tweak: impl FnOnce(&mut ServeConfig)) -> TestServer {
+    let mut cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        max_wait: Duration::from_millis(2),
+        read_timeout: Duration::from_millis(400),
+        shard_backoff: Duration::from_micros(200),
+        probe_interval: Duration::from_millis(30),
+        ..ServeConfig::default()
+    };
+    tweak(&mut cfg);
+    let server = Server::bind(model, "shard-test.mbkk", &cfg).expect("bind");
+    let addr = server.local_addr().expect("local addr");
+    let shutdown = server.shutdown_flag();
+    let handle = std::thread::spawn(move || server.run());
+    TestServer { addr, shutdown, handle }
+}
+
+impl TestServer {
+    fn stop(self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.handle.join().expect("server thread").expect("server run");
+    }
+}
+
+struct Resp {
+    status: u16,
+    body: Json,
+}
+
+fn request(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> Resp {
+    let s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    let mut reader = BufReader::new(s.try_clone().unwrap());
+    let mut writer = s;
+    let mut req = format!("{method} {path} HTTP/1.1\r\nHost: test\r\nConnection: close\r\n");
+    if let Some(b) = body {
+        req.push_str(&format!("Content-Length: {}\r\n", b.len()));
+    }
+    req.push_str("\r\n");
+    if let Some(b) = body {
+        req.push_str(b);
+    }
+    writer.write_all(req.as_bytes()).expect("send");
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("status line");
+    let status: u16 = line.split_whitespace().nth(1).expect("code").parse().expect("code");
+    let mut len = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h).expect("header");
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = h.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                len = value.trim().parse().expect("length");
+            }
+        }
+    }
+    let mut raw = vec![0u8; len];
+    reader.read_exact(&mut raw).expect("body");
+    let body = Json::parse(std::str::from_utf8(&raw).expect("utf8")).expect("json");
+    Resp { status, body }
+}
+
+fn points_json(ds: &Dataset, idx: &[usize]) -> String {
+    let rows: Vec<String> = idx
+        .iter()
+        .map(|&i| {
+            let cells: Vec<String> = ds.row(i).iter().map(|v| format!("{v}")).collect();
+            format!("[{}]", cells.join(","))
+        })
+        .collect();
+    format!("{{\"points\": [{}]}}", rows.join(","))
+}
+
+/// An address nothing listens on: bind, read the port, drop the listener.
+fn dead_addr() -> String {
+    let l = TcpListener::bind("127.0.0.1:0").expect("probe bind");
+    let addr = l.local_addr().unwrap().to_string();
+    drop(l);
+    addr
+}
+
+/// Spawn a live `shard-worker` process-equivalent in a thread.
+fn spawn_worker(
+    model: &KernelKMeansModel,
+    plan: &ShardPlan,
+    shard: usize,
+) -> (String, Arc<AtomicBool>, std::thread::JoinHandle<()>) {
+    let server = ShardWorkerServer::bind(model, plan, shard, "127.0.0.1:0", NumericsMode::Deterministic)
+        .expect("worker bind");
+    let addr = server.local_addr().expect("worker addr").to_string();
+    let flag = server.shutdown_flag();
+    let handle = std::thread::spawn(move || {
+        server.run().expect("worker run");
+    });
+    (addr, flag, handle)
+}
+
+#[test]
+fn sharded_http_serving_is_bit_identical_and_fails_over() {
+    let (ds, model) = model_for(4, 108);
+    let plan = ShardPlan::contiguous(model.k(), 2);
+    let (addr0, flag0, h0) = spawn_worker(&model, &plan, 0);
+    let (addr1, flag1, h1) = spawn_worker(&model, &plan, 1);
+    let srv = start_server(&model, |cfg| {
+        cfg.shard_workers = vec![addr0.clone(), addr1.clone()];
+        cfg.shard_replicas = 1; // local failover behind each remote
+        cfg.shard_deadline = Duration::from_millis(500);
+    });
+    let idx: Vec<usize> = (0..12).collect();
+    let want = scalar_assignments(&model, &ds, &idx);
+    let got = |resp: &Resp| -> Vec<usize> {
+        resp.body
+            .get("assignments")
+            .as_arr()
+            .expect("assignments")
+            .iter()
+            .map(|v| v.as_usize().unwrap())
+            .collect()
+    };
+
+    let baseline = request(srv.addr, "POST", "/v1/predict", Some(&points_json(&ds, &idx)));
+    assert_eq!(baseline.status, 200);
+    assert_eq!(got(&baseline), want, "remote-sharded answer diverged");
+    assert!(matches!(baseline.body.get("partial"), Json::Null));
+
+    // Kill worker 0: dispatch falls over to the local replica; the
+    // answer stays 200 and bit-identical, the process does not panic.
+    flag0.store(true, Ordering::SeqCst);
+    h0.join().expect("worker 0");
+    for _ in 0..4 {
+        let resp = request(srv.addr, "POST", "/v1/predict", Some(&points_json(&ds, &idx)));
+        assert_eq!(resp.status, 200, "failover must keep answering");
+        assert_eq!(got(&resp), want, "failover answer diverged");
+    }
+    // /healthz reports per-shard detail truthfully: the dead remote
+    // replica has recorded failures; full answers kept status honest.
+    let health = request(srv.addr, "GET", "/healthz", None);
+    let shards = health.body.get("shards");
+    assert!(shards.get("detail").as_arr().is_some(), "healthz must carry shard detail");
+    let detail = shards.get("detail").as_arr().unwrap();
+    assert_eq!(detail.len(), 2);
+    let shard0_replicas = detail[0].get("replicas").as_arr().unwrap();
+    assert!(
+        shard0_replicas
+            .iter()
+            .any(|r| r.get("failures").as_f64().unwrap_or(0.0) > 0.0),
+        "the dead remote must show failures in /healthz"
+    );
+
+    srv.stop();
+    flag1.store(true, Ordering::SeqCst);
+    h1.join().expect("worker 1");
+}
+
+#[test]
+fn strict_unavailable_shard_answers_503_and_partial_answers_degraded() {
+    let (ds, model) = model_for(4, 109);
+    let plan = ShardPlan::contiguous(model.k(), 2);
+    let idx: Vec<usize> = (0..8).collect();
+    let body = points_json(&ds, &idx);
+
+    // Strict (default): shard 0 has only a dead remote replica → 503
+    // shard_unavailable, and /healthz degrades with structured causes.
+    let (addr1, flag1, h1) = spawn_worker(&model, &plan, 1);
+    let srv = start_server(&model, |cfg| {
+        cfg.shard_workers = vec![dead_addr(), addr1.clone()];
+        cfg.shard_replicas = 0; // remote-only: no local fallback
+        cfg.shard_attempts = 1;
+        cfg.shard_deadline = Duration::from_millis(300);
+    });
+    for _ in 0..3 {
+        let resp = request(srv.addr, "POST", "/v1/predict", Some(&body));
+        assert_eq!(resp.status, 503, "strict merge must refuse partial answers");
+        assert_eq!(resp.body.get("error").get("code").as_str(), Some("shard_unavailable"));
+    }
+    let health = request(srv.addr, "GET", "/healthz", None);
+    assert_eq!(health.status, 200, "degraded still serves health");
+    assert_eq!(health.body.get("status").as_str(), Some("degraded"));
+    let causes: Vec<String> = health
+        .body
+        .get("degraded_causes")
+        .as_arr()
+        .expect("causes array")
+        .iter()
+        .map(|c| c.as_str().unwrap().to_string())
+        .collect();
+    assert!(causes.iter().any(|c| c == "shard_unavailable"), "causes: {causes:?}");
+    assert!(
+        causes.iter().any(|c| c == "replica_ejected"),
+        "3 consecutive failures must eject the dead replica: {causes:?}"
+    );
+    srv.stop();
+
+    // Partial (opt-in): the same outage answers from covered centers,
+    // marked "partial" with an honest coverage fraction.
+    let srv = start_server(&model, |cfg| {
+        cfg.shard_workers = vec![dead_addr(), addr1.clone()];
+        cfg.shard_replicas = 0;
+        cfg.shard_attempts = 1;
+        cfg.shard_deadline = Duration::from_millis(300);
+        cfg.partial_results = true;
+    });
+    let resp = request(srv.addr, "POST", "/v1/predict", Some(&body));
+    assert_eq!(resp.status, 200, "partial policy must answer");
+    assert_eq!(resp.body.get("partial").as_bool(), Some(true));
+    let coverage = resp.body.get("coverage").as_f64().expect("coverage fraction");
+    assert!(coverage > 0.0 && coverage < 1.0, "coverage {coverage} must be a true fraction");
+    let (lo, hi) = plan.range(0);
+    assert_eq!(coverage, (model.k() - (hi - lo)) as f64 / model.k() as f64);
+    // Partial answers are argmin over covered centers — never indices
+    // from the missing shard.
+    for a in resp.body.get("assignments").as_arr().expect("assignments") {
+        let a = a.as_usize().unwrap();
+        assert!(a >= hi || a < lo, "assignment {a} points into the dead shard");
+    }
+    let health = request(srv.addr, "GET", "/healthz", None);
+    assert_eq!(health.body.get("status").as_str(), Some("degraded"));
+    let causes: Vec<String> = health
+        .body
+        .get("degraded_causes")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|c| c.as_str().unwrap().to_string())
+        .collect();
+    assert!(causes.iter().any(|c| c == "partial_results"), "causes: {causes:?}");
+    srv.stop();
+
+    flag1.store(true, Ordering::SeqCst);
+    h1.join().expect("worker 1");
+}
+
+// ---- 5. registry routing and hot-swap -------------------------------------
+
+#[test]
+fn model_routing_and_artifact_hot_swap() {
+    let (ds_a, model_a) = model_for(4, 110);
+    let (_ds_b, model_b) = model_for(4, 111);
+    let dir = std::env::temp_dir().join(format!("mbkk-conf-swap-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let path = dir.join("swap.mbkk");
+    format::atomic_write(&path, &model_a.to_bytes()).expect("write a");
+    let (watch, bytes) = ArtifactWatch::new(&path).expect("watch");
+    let watched = format::model_from_bytes(&bytes).expect("load a");
+
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        max_wait: Duration::from_millis(2),
+        read_timeout: Duration::from_millis(400),
+        ..ServeConfig::default()
+    };
+    let server = Server::bind_registry(
+        vec![
+            ModelSpec { name: "primary".to_string(), model: watched, watch: Some(watch) },
+            ModelSpec { name: "secondary".to_string(), model: model_b.clone(), watch: None },
+        ],
+        &cfg,
+    )
+    .expect("bind registry");
+    let addr = server.local_addr().expect("addr");
+    let shutdown = server.shutdown_flag();
+    let handle = std::thread::spawn(move || server.run());
+
+    let body = points_json(&ds_a, &[0, 1, 2]);
+    // Default routing, explicit routing, and the 404 for unknown names.
+    assert_eq!(request(addr, "POST", "/v1/predict", Some(&body)).status, 200);
+    assert_eq!(
+        request(addr, "POST", "/v1/predict?model=secondary", Some(&body)).status,
+        200
+    );
+    let missing = request(addr, "POST", "/v1/predict?model=nope", Some(&body));
+    assert_eq!(missing.status, 404);
+    assert_eq!(missing.body.get("error").get("code").as_str(), Some("model_not_found"));
+
+    let models = request(addr, "GET", "/v1/models", None);
+    let entries = models.body.get("models").as_arr().expect("models");
+    assert_eq!(entries.len(), 2);
+    let primary = &entries[0];
+    let version_before = primary.get("version").as_f64().expect("version");
+    assert!(primary.get("requests").as_f64().expect("requests") >= 1.0);
+    assert_eq!(primary.get("swaps").as_f64(), Some(0.0));
+
+    // Rewrite the artifact: within the refresh interval the unit is
+    // rebuilt and the version/swaps counters move.
+    format::atomic_write(&path, &model_b.to_bytes()).expect("write b");
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    let swapped = loop {
+        let models = request(addr, "GET", "/v1/models", None);
+        let primary = &models.body.get("models").as_arr().unwrap()[0];
+        if primary.get("swaps").as_f64() == Some(1.0) {
+            break primary.clone();
+        }
+        if std::time::Instant::now() > deadline {
+            panic!("hot-swap never happened");
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    assert_ne!(swapped.get("version").as_f64().unwrap(), version_before);
+    // The swapped-in model still serves.
+    assert_eq!(request(addr, "POST", "/v1/predict", Some(&body)).status, 200);
+
+    shutdown.store(true, Ordering::SeqCst);
+    handle.join().expect("server thread").expect("server run");
+    std::fs::remove_dir_all(&dir).ok();
+}
